@@ -1,0 +1,85 @@
+//! Quickstart: learn a predictive ROM from synthetic data in seconds.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole public API once: generate a low-rank traveling-wave
+//! dataset, run the distributed dOpInf pipeline (p = 4 ranks), inspect
+//! the spectrum, and check the ROM's *prediction* beyond the training
+//! horizon against the analytic truth.
+
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. a dataset: 2 state variables × 4096 spatial DoF, 100
+    //        training snapshots of quasi-periodic dynamics -------------
+    let spec = SynthSpec { nx: 4096, ns: 2, nt: 100, modes: 4, ..Default::default() };
+    let nt_p = 200; // predict twice the training horizon
+    let train = generate(&spec, 0);
+    println!("dataset: {} rows x {} snapshots", train.rows(), train.cols());
+
+    // --- 2. configure dOpInf (paper defaults, coarse reg grid) --------
+    let opinf = OpInfConfig {
+        // the paper's NS example uses 0.9996; this synthetic field has
+        // slowly-decaying mode amplitudes, so keep (almost) all of them
+        energy_target: 0.999_999,
+        ns: 2,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        // the paper's NS case uses 1.2; periodic synthetic dynamics can
+        // legitimately exceed the training max by ~30% when the training
+        // window misses a peak, so allow a little more headroom
+        max_growth: 1.5,
+        nt_p,
+    };
+    let mut cfg = DOpInfConfig::new(4, opinf);
+    cfg.cost_model = CostModel::shared_memory();
+    cfg.probes = vec![(0, 100), (1, 2048)]; // two probe rows to lift
+
+    // --- 3. run the distributed pipeline -------------------------------
+    let source = DataSource::InMemory(Arc::new(train));
+    let result = run_distributed(&cfg, &source)?;
+
+    println!("reduced dimension r = {} (energy target 99.9999%)", result.r);
+    println!(
+        "top singular-value decay: {:?}",
+        result
+            .eigs
+            .iter()
+            .take(6)
+            .map(|l| format!("{:.2e}", l.max(0.0).sqrt()))
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "optimal regularization (beta1, beta2) = ({:.3e}, {:.3e}), training error {:.3e}",
+        result.opt_pair.0, result.opt_pair.1, result.train_err
+    );
+    let b = result.timing.breakdown();
+    println!(
+        "virtual time {:.4}s = load {:.4} + compute {:.4} + comm {:.4} + learn {:.4} + post {:.4}",
+        b.total, b.load, b.compute, b.comm, b.learn, b.post
+    );
+
+    // --- 4. validate the prediction beyond training --------------------
+    let full = generate(&SynthSpec { nt: nt_p, ..spec }, 0);
+    let mut worst = 0.0f64;
+    for probe in &result.probes {
+        let row = probe.var * 4096 + probe.row;
+        for t in 100..nt_p {
+            worst = worst.max((probe.values[t] - full[(row, t)]).abs());
+        }
+    }
+    println!("max probe prediction error beyond training: {worst:.3e}");
+    anyhow::ensure!(worst < 0.05, "prediction degraded: {worst}");
+    println!("quickstart OK — the ROM extrapolates.");
+    Ok(())
+}

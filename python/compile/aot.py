@@ -1,0 +1,118 @@
+"""AOT compile path: lower every L2 entry point to HLO text artifacts.
+
+Runs exactly once (``make artifacts``); the Rust binary is self-contained
+afterwards.  The interchange format is **HLO text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, per profile:
+    artifacts/<profile>/<entry>.hlo.txt
+    artifacts/manifest.json     — shapes/dtypes the Rust registry reads
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .shapes import PROFILES  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, even for single outputs).
+
+    Printed with ``print_large_constants=True``: the default printer
+    elides big constants as ``constant({...})``, which the XLA 0.5.1
+    text parser on the Rust side silently misparses (the ROM quadratic
+    selection matrices vanished — caught by integration_runtime tests).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # Match the `as_hlo_text()` style the 0.5.1 parser accepts:
+    # no %-prefixed names, no per-computation program shapes, and no
+    # metadata (modern `source_end_line` fields are parse errors there).
+    opts.print_percent = False
+    opts.print_program_shape = False
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_profile(profile, out_dir):
+    """Lower all entry points of one profile; return manifest entries."""
+    prof_dir = os.path.join(out_dir, profile.name)
+    os.makedirs(prof_dir, exist_ok=True)
+    entries = []
+    for name, fn, example_args in model.entry_points(profile):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        rel = os.path.join(profile.name, f"{name}.hlo.txt")
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        if not isinstance(out_shapes, tuple):
+            out_shapes = (out_shapes,)
+        entries.append(
+            {
+                "name": name,
+                "profile": profile.name,
+                "file": rel,
+                "inputs": [_shape_entry(a) for a in example_args],
+                "outputs": [_shape_entry(o) for o in out_shapes],
+                "meta": {
+                    "block_rows": profile.block_rows,
+                    "gram_tile": profile.gram_tile,
+                    "nt": profile.nt,
+                    "r_max": profile.r_max,
+                    "s_max": profile.s_max,
+                    "rollout_steps": profile.rollout_steps,
+                    "recon_cols": profile.recon_cols,
+                },
+            }
+        )
+        print(f"  [{profile.name}] {name}: {len(text)} chars -> {rel}")
+    return entries
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifacts directory")
+    parser.add_argument(
+        "--profiles",
+        default="tiny,cyl",
+        help="comma-separated shape profiles to lower (see shapes.py)",
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "dtype": "float64", "entries": []}
+    for pname in args.profiles.split(","):
+        pname = pname.strip()
+        if pname not in PROFILES:
+            raise SystemExit(f"unknown profile {pname!r}; have {sorted(PROFILES)}")
+        manifest["entries"].extend(lower_profile(PROFILES[pname], args.out))
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

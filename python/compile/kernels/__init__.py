@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for dOpInf's compute hot-spots.
+
+- ``gram``     — tall-skinny Gram product Q_iᵀQ_i (Step III hot-spot)
+- ``matmul``   — tiled GEMM (Step V lift, Eq. 12 normal equations)
+- ``rom_step`` — quadratic discrete ROM step with non-redundant Kronecker
+- ``ref``      — pure-jnp oracles the pytest suite checks against
+"""
+
+from . import gram, matmul, ref, rom_step  # noqa: F401

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: tall-skinny Gram product D_i = Q_iᵀ Q_i.
+
+This is dOpInf's compute hot-spot (paper Step III): every rank reduces its
+(n_i × nt) snapshot block to an (nt × nt) Gram matrix.  n_i is millions in
+the paper's RDRE runs while nt is a few hundred, so the product is an
+extremely tall-and-skinny AᵀA.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid streams row-tiles
+(tile × nt) of the block HBM→VMEM via the BlockSpec index map, contracts
+each on the MXU as a (nt × tile)·(tile × nt) matmul, and accumulates into
+the (nt, nt) output block which stays VMEM-resident across the whole grid
+(its index map is constant).  This is exactly the role BLAS dgemm +
+MPI_Allreduce play in the paper's CPU formulation; the cross-rank
+Allreduce happens upstream in the Rust coordinator.
+
+Kernels are lowered with ``interpret=True``: CPU PJRT cannot execute
+Mosaic custom-calls, so the interpret path is both the correctness oracle
+target and the artifact we ship.  Real-TPU VMEM/MXU estimates live in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(q_ref, out_ref):
+    """Accumulate one row-tile's contribution to the Gram matrix."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = q_ref[...]  # (tile_rows, nt) resident in VMEM
+    # MXU contraction: (nt, tile_rows) @ (tile_rows, nt).  Accumulate in the
+    # output's own dtype (f64 artifacts -> exact match with the BLAS path).
+    out_ref[...] += jnp.dot(tile.T, tile, preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def gram_block(q_block, *, tile_rows=None):
+    """Compute ``q_block.T @ q_block`` with the Pallas streaming kernel.
+
+    Args:
+      q_block: (rows, nt) snapshot block. ``rows`` must be divisible by
+        ``tile_rows`` (the Rust side zero-pads the final block; zero rows
+        contribute nothing to a Gram matrix, so padding is exact).
+      tile_rows: row-tile height streamed per grid step.
+
+    Returns:
+      (nt, nt) local Gram matrix.
+    """
+    rows, nt = q_block.shape
+    if tile_rows is None:
+        tile_rows = min(rows, 256)
+    if rows % tile_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by tile_rows={tile_rows}")
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_rows, nt), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((nt, nt), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, nt), q_block.dtype),
+        interpret=True,
+    )(q_block)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: tiled dense GEMM.
+
+Used by the L2 graph for the two remaining dense products on the hot
+path: the postprocessing lift ``V_{r,i} @ Qtilde`` (paper Step V) and the
+OpInf normal-equation assembly (paper Eq. 12).  Classic three-level
+tiling: grid = (M/bm, N/bn, K/bk), accumulator block (bm, bn) stays
+VMEM-resident across the contraction (k) dimension, which is the
+innermost grid axis so revisits are consecutive.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+def _pick_tile(dim, cap):
+    """Largest divisor of ``dim`` that is <= cap (tiles must divide evenly)."""
+    t = min(dim, cap)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=None, bn=None, bk=None):
+    """Tiled ``a @ b`` via Pallas (interpret mode).
+
+    Tile sizes default to the largest divisors of each dimension <= 128,
+    so any shape works without padding.
+    """
+    m, ka = a.shape
+    kb, n = b.shape
+    if ka != kb:
+        raise ValueError(f"inner dims differ: {ka} vs {kb}")
+    bm = bm or _pick_tile(m, 128)
+    bn = bn or _pick_tile(n, 128)
+    bk = bk or _pick_tile(ka, 128)
+    grid = (m // bm, n // bn, ka // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

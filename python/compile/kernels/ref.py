@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These implementations mirror the paper's numpy tutorial code exactly
+(Sec. III of AIAA 2025-1170) and are what the pytest suite compares the
+Pallas kernels and the lowered L2 graphs against.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gram_ref(q_block):
+    """Local Gram matrix D_i = Q_iᵀ Q_i (paper Eq. 5, line 75 of the tutorial)."""
+    return q_block.T @ q_block
+
+
+def matmul_ref(a, b):
+    """Plain dense GEMM oracle."""
+    return a @ b
+
+
+def qhat_sq_ref(q):
+    """Non-redundant quadratic terms, paper's ``compute_Qhat_sq``.
+
+    Ordering convention (must match rust/src/rom/quadratic.rs): pairs
+    (i, j) with j >= i, grouped by i:
+        (0,0), (0,1), ..., (0,r-1), (1,1), ..., (1,r-1), (2,2), ...
+    Accepts a 1-D vector (r,) -> (s,) or a 2-D batch (K, r) -> (K, s).
+    """
+    if q.ndim == 1:
+        r = q.shape[0]
+        return jnp.concatenate([q[i] * q[i:] for i in range(r)])
+    elif q.ndim == 2:
+        _, r = q.shape
+        return jnp.concatenate([q[:, i:i + 1] * q[:, i:] for i in range(r)], axis=1)
+    raise ValueError("qhat_sq_ref expects 1-D or 2-D input")
+
+
+def rom_step_ref(q, a_hat, f_hat, c_hat):
+    """One step of the discrete quadratic ROM, paper Eq. (11)."""
+    return a_hat @ q + f_hat @ qhat_sq_ref(q) + c_hat
+
+
+def rom_rollout_ref(q0, a_hat, f_hat, c_hat, n_steps):
+    """Rollout oracle: returns (n_steps, r) with q0 as row 0 (paper's
+    ``solve_discrete_dOpInf_model``)."""
+
+    def step(q, _):
+        q_next = rom_step_ref(q, a_hat, f_hat, c_hat)
+        return q_next, q
+
+    _, traj = lax.scan(step, q0, None, length=n_steps)
+    return traj
+
+
+def opinf_normal_ref(d_hat, qhat_2):
+    """Normal-equation blocks for the OpInf least squares (paper Eq. 12).
+
+    Returns (DhatᵀDhat, Dhatᵀ Qhat_2) — the regularizer diagonal is added
+    per (β₁, β₂) candidate on the Rust side.
+    """
+    return d_hat.T @ d_hat, d_hat.T @ qhat_2
+
+
+def reconstruct_ref(vr_block, qtilde):
+    """Postprocessing lift V_{r,i} Q̃ (paper Step V)."""
+    return vr_block @ qtilde

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: one step of the discrete quadratic dOpInf ROM.
+
+Computes (paper Eq. 11):
+
+    q_next = Â q + Ĥ (q ⊗' q) + ĉ
+
+where ⊗' is the *non-redundant* quadratic product (s = r(r+1)/2 entries,
+paper's ``compute_Qhat_sq`` ordering: (i,j), j >= i, grouped by i).  The
+whole state fits trivially in VMEM (r ~ 10–16), so the kernel is a single
+grid step.
+
+The non-redundant product is built with two static 0/1 *selection
+matrices* rather than gathers: ``qsq = (S_i q) * (S_j q)`` where
+``S_i[k, ii_k] = 1`` and ``S_j[k, jj_k] = 1``.  Two reasons: (a) on TPU
+the MXU handles tiny dense matmuls far better than scatter/gather, and
+(b) the gather lowering is miscompiled by the xla_extension 0.5.1
+runtime the Rust side executes on (verified empirically — the quadratic
+term silently evaluated wrong through the HLO-text round trip), while
+the dot-product formulation round-trips exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def nonredundant_indices(r):
+    """Static (i, j) gather indices of the non-redundant quadratic terms.
+
+    Must match ``qhat_sq_ref`` in kernels/ref.py and
+    rust/src/rom/quadratic.rs.
+    """
+    ii, jj = [], []
+    for i in range(r):
+        for j in range(i, r):
+            ii.append(i)
+            jj.append(j)
+    return np.asarray(ii, dtype=np.int32), np.asarray(jj, dtype=np.int32)
+
+
+def selection_matrices(r, dtype=np.float64):
+    """(s, r) 0/1 matrices picking the i- and j-sides of each pair."""
+    ii, jj = nonredundant_indices(r)
+    s = len(ii)
+    sel_i = np.zeros((s, r), dtype=dtype)
+    sel_j = np.zeros((s, r), dtype=dtype)
+    sel_i[np.arange(s), ii] = 1.0
+    sel_j[np.arange(s), jj] = 1.0
+    return sel_i, sel_j
+
+
+def _rom_step_kernel(si_ref, sj_ref, q_ref, a_ref, f_ref, c_ref, out_ref):
+    q = q_ref[...]
+    dt = out_ref.dtype
+    # qsq[k] = q[ii_k] * q[jj_k] via two selection matmuls (MXU path)
+    qsq = jnp.dot(si_ref[...], q, preferred_element_type=dt) * jnp.dot(
+        sj_ref[...], q, preferred_element_type=dt
+    )
+    out_ref[...] = (
+        jnp.dot(a_ref[...], q, preferred_element_type=dt)
+        + jnp.dot(f_ref[...], qsq, preferred_element_type=dt)
+        + c_ref[...]
+    )
+
+
+@jax.jit
+def rom_step(q, a_hat, f_hat, c_hat):
+    """One discrete ROM step via the Pallas kernel.
+
+    Args:
+      q: (r,) reduced state.
+      a_hat: (r, r) linear operator.
+      f_hat: (r, s) non-redundant quadratic operator, s = r(r+1)/2.
+      c_hat: (r,) constant operator (from mean-centering).
+
+    Returns:
+      (r,) next reduced state.
+    """
+    r = q.shape[0]
+    s = r * (r + 1) // 2
+    if f_hat.shape != (r, s):
+        raise ValueError(f"f_hat must be ({r}, {s}), got {f_hat.shape}")
+    sel_i, sel_j = selection_matrices(r)
+    return pl.pallas_call(
+        _rom_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((r,), q.dtype),
+        interpret=True,
+    )(
+        jnp.asarray(sel_i, dtype=q.dtype),
+        jnp.asarray(sel_j, dtype=q.dtype),
+        q,
+        a_hat,
+        f_hat,
+        c_hat,
+    )

@@ -1,0 +1,135 @@
+"""L2: the dOpInf compute graph in JAX, calling the L1 Pallas kernels.
+
+Each public function here is one AOT entry point lowered by ``aot.py`` to
+an ``artifacts/*.hlo.txt`` module that the Rust runtime loads via PJRT.
+Python never runs on the request path: these functions execute exactly
+once per profile at ``make artifacts`` time.
+
+Everything is f64 ("double precision", paper Sec. II.B) — enabled in
+``aot.py`` / test conftest via ``jax.config.update("jax_enable_x64", True)``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gram as gram_kernel
+from .kernels import matmul as matmul_kernel
+from .kernels import rom_step as rom_step_kernel
+
+
+def gram_block(q_block, *, tile_rows=None):
+    """Entry point ``gram``: local Gram matrix D_i = Q_iᵀQ_i (paper Eq. 5).
+
+    The Rust coordinator calls this once per (zero-padded) row block of a
+    rank's snapshot partition and Allreduce-sums the results into the
+    global D (paper line 79).
+    """
+    return gram_kernel.gram_block(q_block, tile_rows=tile_rows)
+
+
+def centered_gram_block(q_block, temporal_mean, *, tile_rows=None):
+    """Entry point ``centered_gram``: fused Step II + Step III.
+
+    Centers the block by its per-row temporal mean (paper Step II) and
+    immediately reduces it to the local Gram matrix, so the centered
+    snapshots never round-trip to HBM twice.  ``temporal_mean`` is the
+    (rows,) mean of the *unpadded* rows; padded rows carry mean 0.
+    """
+    centered = q_block - temporal_mean[:, None]
+    return gram_kernel.gram_block(centered, tile_rows=tile_rows)
+
+
+def rom_rollout(q0, a_hat, f_hat, c_hat, *, n_steps):
+    """Entry point ``rollout``: n_steps of the discrete ROM (paper Eq. 11).
+
+    ``lax.scan`` (not an unrolled loop) keeps the lowered module small and
+    lets XLA keep operators resident.  Returns the (n_steps, r) trajectory
+    whose row 0 is q0, matching the paper's
+    ``solve_discrete_dOpInf_model``.
+    """
+
+    def step(q, _):
+        q_next = rom_step_kernel.rom_step(q, a_hat, f_hat, c_hat)
+        return q_next, q
+
+    _, traj = lax.scan(step, q0, None, length=n_steps)
+    return traj
+
+
+def opinf_normal(d_hat, qhat_2):
+    """Entry point ``opinf_normal``: Gram blocks of the OpInf LS (Eq. 12).
+
+    Returns (DhatᵀDhat, DhatᵀQhat_2).  Each (β₁, β₂) candidate then only
+    adds its diagonal regularizer and re-solves the small system — the
+    expensive assembly happens once (paper line 233).
+    """
+    dtd = matmul_kernel.matmul(d_hat.T, d_hat)
+    dtq = matmul_kernel.matmul(d_hat.T, qhat_2)
+    return dtd, dtq
+
+
+def reconstruct_block(vr_block, qtilde):
+    """Entry point ``reconstruct``: postprocessing lift V_{r,i} Q̃ (Step V)."""
+    return matmul_kernel.matmul(vr_block, qtilde)
+
+
+def project(tr, d_global):
+    """Entry point ``project``: Q̂ = T_rᵀ D (paper Eq. 8).
+
+    Tiny compared to the Gram stage but kept as an artifact so the entire
+    Step III compute chain can run through PJRT.
+    """
+    return matmul_kernel.matmul(tr.T, d_global)
+
+
+# ---------------------------------------------------------------------------
+# Shape-specialized builders used by aot.py
+# ---------------------------------------------------------------------------
+
+
+def entry_points(profile):
+    """Yield (name, fn, example_args) for every AOT entry point of a profile.
+
+    Shapes come from ``shapes.Profile``; the reduced dimension is the
+    padded ``r_max`` (zero-padding is exact for all these ops, see
+    shapes.py).
+    """
+    f64 = jnp.float64
+    bm, nt = profile.block_rows, profile.nt
+    r, s = profile.r_max, profile.s_max
+    d = profile.d_max
+    k = nt - 1  # rows of the OpInf data matrix (paper Eq. 13)
+
+    spec = jax.ShapeDtypeStruct
+
+    yield (
+        "gram",
+        lambda q: gram_block(q, tile_rows=profile.gram_tile),
+        (spec((bm, nt), f64),),
+    )
+    yield (
+        "centered_gram",
+        lambda q, mu: centered_gram_block(q, mu, tile_rows=profile.gram_tile),
+        (spec((bm, nt), f64), spec((bm,), f64)),
+    )
+    yield (
+        "rollout",
+        lambda q0, a, f, c: rom_rollout(q0, a, f, c, n_steps=profile.rollout_steps),
+        (spec((r,), f64), spec((r, r), f64), spec((r, s), f64), spec((r,), f64)),
+    )
+    yield (
+        "opinf_normal",
+        opinf_normal,
+        (spec((k, d), f64), spec((k, r), f64)),
+    )
+    yield (
+        "reconstruct",
+        reconstruct_block,
+        (spec((bm, r), f64), spec((r, profile.recon_cols), f64)),
+    )
+    yield (
+        "project",
+        project,
+        (spec((nt, r), f64), spec((nt, nt), f64)),
+    )

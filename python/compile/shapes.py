@@ -1,0 +1,70 @@
+"""Shape profiles for AOT-compiled artifacts.
+
+Every HLO artifact is shape-specialized, so the Rust runtime picks the
+executable whose profile matches the request (and falls back to native
+linalg otherwise).  Two profiles ship by default:
+
+* ``tiny`` — small shapes used by the Rust runtime integration tests and
+  the quickstart example; compiles in seconds.
+* ``cyl``  — the 2D Navier-Stokes cylinder workload of the paper
+  (Sec. II.B): nt=600 training snapshots, r capped at R_MAX=16 (the paper
+  selects r=10 at the 99.96% energy threshold), nt_p=1200 rollout steps.
+
+The reduced dimension in the artifacts is the *padded* R_MAX; the Rust
+side zero-pads operators/initial conditions from the runtime-selected r
+to R_MAX (zero rows/cols are exact no-ops for the quadratic ROM, see
+rust/src/runtime/exec.rs).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Profile:
+    """One shape-specialization of all artifact entry points."""
+
+    name: str
+    # Gram kernel: row-block height fed per call and its in-kernel tile.
+    block_rows: int
+    gram_tile: int
+    # number of training snapshots (columns of the snapshot block)
+    nt: int
+    # padded reduced dimension (>= any runtime-selected r)
+    r_max: int
+    # rollout steps compiled into the scan artifact
+    rollout_steps: int
+    # reconstruction: time instants of the lifted trajectory
+    recon_cols: int
+
+    @property
+    def s_max(self) -> int:
+        """Non-redundant quadratic dimension r_max*(r_max+1)/2."""
+        return self.r_max * (self.r_max + 1) // 2
+
+    @property
+    def d_max(self) -> int:
+        """OpInf data-matrix column count r + s + 1 at r_max."""
+        return self.r_max + self.s_max + 1
+
+
+TINY = Profile(
+    name="tiny",
+    block_rows=64,
+    gram_tile=16,
+    nt=24,
+    r_max=6,
+    rollout_steps=32,
+    recon_cols=32,
+)
+
+CYL = Profile(
+    name="cyl",
+    block_rows=2048,
+    gram_tile=256,
+    nt=600,
+    r_max=16,
+    rollout_steps=1200,
+    recon_cols=1200,
+)
+
+PROFILES = {p.name: p for p in (TINY, CYL)}

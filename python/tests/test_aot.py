@@ -1,0 +1,73 @@
+"""AOT path: lowering produces parseable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.shapes import PROFILES, Profile, TINY
+
+
+def test_profiles_consistency():
+    for p in PROFILES.values():
+        assert p.s_max == p.r_max * (p.r_max + 1) // 2
+        assert p.d_max == p.r_max + p.s_max + 1
+        assert p.block_rows % p.gram_tile == 0
+
+
+def test_lower_tiny_profile(tmp_path):
+    entries = aot.lower_profile(TINY, str(tmp_path))
+    names = {e["name"] for e in entries}
+    assert names == {
+        "gram",
+        "centered_gram",
+        "rollout",
+        "opinf_normal",
+        "reconstruct",
+        "project",
+    }
+    for e in entries:
+        path = tmp_path / e["file"]
+        text = path.read_text()
+        # HLO text module with an ENTRY computation — what
+        # HloModuleProto::from_text_file expects on the Rust side.
+        assert text.startswith("HloModule"), e["name"]
+        assert "ENTRY" in text, e["name"]
+        assert all("shape" in s and "dtype" in s for s in e["inputs"])
+        assert all(s["dtype"] == "float64" for s in e["inputs"]), e["name"]
+
+
+def test_lower_shapes_match_profile(tmp_path):
+    entries = aot.lower_profile(TINY, str(tmp_path))
+    by_name = {e["name"]: e for e in entries}
+    g = by_name["gram"]
+    assert g["inputs"][0]["shape"] == [TINY.block_rows, TINY.nt]
+    assert g["outputs"][0]["shape"] == [TINY.nt, TINY.nt]
+    ro = by_name["rollout"]
+    assert ro["inputs"][0]["shape"] == [TINY.r_max]
+    assert ro["inputs"][2]["shape"] == [TINY.r_max, TINY.s_max]
+    assert ro["outputs"][0]["shape"] == [TINY.rollout_steps, TINY.r_max]
+    on = by_name["opinf_normal"]
+    assert on["inputs"][0]["shape"] == [TINY.nt - 1, TINY.d_max]
+
+
+def test_manifest_roundtrip(tmp_path, monkeypatch):
+    micro = Profile(
+        name="tiny",  # reuse tiny dir name to keep PROFILES untouched
+        block_rows=16,
+        gram_tile=8,
+        nt=6,
+        r_max=3,
+        rollout_steps=4,
+        recon_cols=4,
+    )
+    entries = aot.lower_profile(micro, str(tmp_path))
+    manifest = {"version": 1, "dtype": "float64", "entries": entries}
+    mp = tmp_path / "manifest.json"
+    mp.write_text(json.dumps(manifest))
+    loaded = json.loads(mp.read_text())
+    assert loaded["entries"][0]["meta"]["nt"] == 6
+    assert len(loaded["entries"]) == 6
+    for e in loaded["entries"]:
+        assert os.path.exists(tmp_path / e["file"])

@@ -1,0 +1,94 @@
+"""L1 quadratic ROM-step kernel vs oracle + structural invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rom_step
+
+
+def _ops(r, seed, scale=0.1):
+    g = np.random.default_rng(seed)
+    s = r * (r + 1) // 2
+    a = jnp.asarray(g.standard_normal((r, r)) * scale)
+    f = jnp.asarray(g.standard_normal((r, s)) * scale)
+    c = jnp.asarray(g.standard_normal(r) * scale)
+    q = jnp.asarray(g.standard_normal(r))
+    return q, a, f, c
+
+
+def test_nonredundant_indices_convention():
+    """Index ordering must match the paper's compute_Qhat_sq: (i,j), j>=i,
+    grouped by i."""
+    ii, jj = rom_step.nonredundant_indices(3)
+    assert list(ii) == [0, 0, 0, 1, 1, 2]
+    assert list(jj) == [0, 1, 2, 1, 2, 2]
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(min_value=1, max_value=20))
+def test_nonredundant_indices_properties(r):
+    ii, jj = rom_step.nonredundant_indices(r)
+    s = r * (r + 1) // 2
+    assert len(ii) == len(jj) == s
+    assert all(j >= i for i, j in zip(ii, jj))
+    # every unordered pair appears exactly once
+    assert len({(i, j) for i, j in zip(ii, jj)}) == s
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rom_step_matches_ref(r, seed):
+    q, a, f, c = _ops(r, seed)
+    got = rom_step.rom_step(q, a, f, c)
+    want = ref.rom_step_ref(q, a, f, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_rom_step_zero_state_returns_constant(rng):
+    r = 8
+    _, a, f, c = _ops(r, 7)
+    got = rom_step.rom_step(jnp.zeros(r), a, f, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(c), rtol=0, atol=1e-15)
+
+
+def test_rom_step_linear_only(rng):
+    """With H = 0, c = 0 the step is exactly A @ q."""
+    r = 10
+    q, a, f, c = _ops(r, 3)
+    got = rom_step.rom_step(q, a, jnp.zeros_like(f), jnp.zeros_like(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ q), rtol=1e-13, atol=1e-13)
+
+
+def test_rom_step_padding_equivalence():
+    """Zero-padding r -> R must leave the first r coordinates unchanged —
+    the invariant the fixed-shape PJRT rollout artifact depends on
+    (see rust/src/runtime/exec.rs pad_operators)."""
+    r, rp = 5, 9
+    q, a, f, c = _ops(r, 11)
+    sp = rp * (rp + 1) // 2
+    ap = np.zeros((rp, rp)); ap[:r, :r] = np.asarray(a)
+    cp = np.zeros(rp); cp[:r] = np.asarray(c)
+    fp = np.zeros((rp, sp))
+    ii_r, jj_r = rom_step.nonredundant_indices(r)
+    ii_p, jj_p = rom_step.nonredundant_indices(rp)
+    col_of = {(i, j): k for k, (i, j) in enumerate(zip(ii_p, jj_p))}
+    for k, (i, j) in enumerate(zip(ii_r, jj_r)):
+        fp[:r, col_of[(i, j)]] = np.asarray(f)[:, k]
+    qp = np.zeros(rp); qp[:r] = np.asarray(q)
+
+    got_p = rom_step.rom_step(jnp.asarray(qp), jnp.asarray(ap), jnp.asarray(fp), jnp.asarray(cp))
+    want = ref.rom_step_ref(q, a, f, c)
+    np.testing.assert_allclose(np.asarray(got_p)[:r], np.asarray(want), rtol=1e-13, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(got_p)[r:], 0.0, atol=1e-15)
+
+
+def test_rom_step_bad_fhat_shape():
+    r = 4
+    q, a, f, c = _ops(r, 0)
+    with pytest.raises(ValueError):
+        rom_step.rom_step(q, a, f[:, :-1], c)

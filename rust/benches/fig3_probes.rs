@@ -1,0 +1,174 @@
+//! Fig. 3 regeneration: ROM velocity predictions at the paper's three
+//! probe locations over the full target horizon (training + prediction),
+//! compared against the reference solution.
+//!
+//! `cargo bench --bench fig3_probes`
+//!
+//! Acceptance is shape: the ROM tracks the reference at all probes,
+//! including beyond the training horizon (the right-hand, unhashed part
+//! of the paper's panels). Series → results/fig3_probe_*.csv.
+
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::io::snapd::SnapReader;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+use dopinf::util::benchkit::Bench;
+use dopinf::util::csvout::CsvWriter;
+
+fn main() {
+    // Prefer the real cylinder dataset; otherwise use the synthetic
+    // stand-in whose ground truth is analytic.
+    let dataset = ["data/cylinder_192x36.snapd", "data/flow.snapd"]
+        .iter()
+        .find(|p| std::path::Path::new(p).exists())
+        .copied();
+
+    println!("== Fig. 3: probe predictions over the target horizon ==");
+    let mut bench = Bench::with_samples(1, 0);
+
+    match dataset {
+        Some(path) => run_on_dataset(path, &mut bench),
+        None => run_on_synthetic(&mut bench),
+    }
+}
+
+fn run_on_dataset(path: &str, bench: &mut Bench) {
+    println!("data: {path}");
+    let reader = SnapReader::open(path).unwrap();
+    let nt_total = reader.var_info("u_x").unwrap().cols;
+    let nt_train = nt_total / 2;
+    let probe_rows: Vec<usize> = reader
+        .meta()
+        .get("probe_rows")
+        .and_then(dopinf::util::json::Json::as_arr)
+        .map(|a| a.iter().filter_map(dopinf::util::json::Json::as_usize).collect())
+        .unwrap_or_default();
+
+    let mut train = reader.read_all("u_x").unwrap().slice_cols(0, nt_train);
+    train = train.vstack(&reader.read_all("u_y").unwrap().slice_cols(0, nt_train));
+
+    let opinf = OpInfConfig {
+        ns: 2,
+        energy_target: 0.9996,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::paper_default(),
+        max_growth: 1.2,
+        nt_p: nt_total,
+    };
+    let mut cfg = DOpInfConfig::new(8, opinf);
+    cfg.cost_model = CostModel::shared_memory();
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        cfg.artifacts_dir = Some("artifacts".into());
+    }
+    for &row in &probe_rows {
+        cfg.probes.push((0, row));
+        cfg.probes.push((1, row));
+    }
+    let source = DataSource::InMemory(Arc::new(train));
+
+    let mut result = None;
+    bench.run("full pipeline + probe lifting (p=8)", || {
+        result = Some(run_distributed(&cfg, &source).unwrap());
+    });
+    let result = result.unwrap();
+    println!("r = {}, optimal pair = {:?}", result.r, result.opt_pair);
+
+    for pred in &result.probes {
+        let var_name = if pred.var == 0 { "u_x" } else { "u_y" };
+        let truth = reader.read_row(var_name, pred.row).unwrap();
+        let mut csv = CsvWriter::create(
+            format!("results/fig3_probe_row{}_{}.csv", pred.row, var_name),
+            &["t_index", "reference", "rom", "in_training"],
+        )
+        .unwrap();
+        let mut train_err = 0.0f64;
+        let mut pred_err = 0.0f64;
+        let scale = truth.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        for t in 0..nt_total {
+            csv.row(&[
+                t as f64,
+                truth[t],
+                pred.values[t],
+                if t < nt_train { 1.0 } else { 0.0 },
+            ])
+            .unwrap();
+            let e = (pred.values[t] - truth[t]).abs() / scale;
+            if t < nt_train {
+                train_err = train_err.max(e);
+            } else {
+                pred_err = pred_err.max(e);
+            }
+        }
+        csv.finish().unwrap();
+        println!(
+            "probe row {:>6} {}: max rel err train {:.3e} | prediction {:.3e}",
+            pred.row, var_name, train_err, pred_err
+        );
+    }
+    println!("wrote results/fig3_probe_*.csv");
+}
+
+fn run_on_synthetic(bench: &mut Bench) {
+    println!("data: synthetic stand-in (run examples/cylinder_rom for the flow dataset)");
+    let nx = 20_000;
+    let spec = SynthSpec { nx, ns: 2, nt: 1200, modes: 5, ..Default::default() };
+    let full = generate(&spec, 0);
+    let train = full.slice_cols(0, 600);
+
+    let opinf = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::paper_default(),
+        max_growth: 1.5,
+        nt_p: 1200,
+    };
+    let mut cfg = DOpInfConfig::new(8, opinf);
+    cfg.cost_model = CostModel::shared_memory();
+    let probes = [(0usize, nx / 4), (0, nx / 2), (1, 3 * nx / 4)];
+    cfg.probes = probes.to_vec();
+    let source = DataSource::InMemory(Arc::new(train));
+
+    let mut result = None;
+    bench.run("full pipeline + probe lifting (p=8)", || {
+        result = Some(run_distributed(&cfg, &source).unwrap());
+    });
+    let result = result.unwrap();
+    println!("r = {}, optimal pair = {:?}", result.r, result.opt_pair);
+
+    for pred in &result.probes {
+        let row = pred.var * nx + pred.row;
+        let mut csv = CsvWriter::create(
+            format!("results/fig3_probe_row{}_var{}.csv", pred.row, pred.var),
+            &["t_index", "reference", "rom", "in_training"],
+        )
+        .unwrap();
+        let mut pred_err = 0.0f64;
+        for t in 0..1200 {
+            csv.row(&[
+                t as f64,
+                full[(row, t)],
+                pred.values[t],
+                if t < 600 { 1.0 } else { 0.0 },
+            ])
+            .unwrap();
+            if t >= 600 {
+                pred_err = pred_err.max((pred.values[t] - full[(row, t)]).abs());
+            }
+        }
+        csv.finish().unwrap();
+        println!(
+            "probe (var {}, row {:>6}): max abs prediction error {:.3e}",
+            pred.var, pred.row, pred_err
+        );
+        assert!(pred_err < 0.1, "prediction beyond training degraded");
+    }
+    println!("wrote results/fig3_probe_*.csv");
+}

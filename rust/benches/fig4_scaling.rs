@@ -1,0 +1,130 @@
+//! Fig. 4 regeneration: strong-scaling speedup (left) and CPU-time
+//! breakdown (right) for p ∈ {1, 2, 4, 8}, each measurement repeated
+//! (the paper repeats 100×; set DOPINF_BENCH_SAMPLES to match).
+//!
+//! `cargo bench --bench fig4_scaling`
+//!
+//! Paper reference CPU times: 8.35/4.35/2.23/1.72 s for p = 1/2/4/8 —
+//! near-ideal speedup to p = 4, deteriorating at p = 8 as the serial
+//! fraction (replicated eigh + OpInf assembly) and the collectives grow.
+//! Acceptance is that *shape*; absolute seconds differ (our substrate,
+//! DESIGN.md §3). Timing uses per-rank virtual clocks (thread CPU time
+//! + α–β collective model) because this container has one core.
+//!
+//! Series → results/fig4_speedup.csv, results/fig4_breakdown.csv.
+
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::scaling::{strong_scaling, AmdahlFit};
+use dopinf::io::snapd::SnapReader;
+use dopinf::linalg::Matrix;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+use dopinf::util::csvout::CsvWriter;
+
+fn load_training() -> (Matrix, String) {
+    // DOPINF_FIG4_DATA=path switches to a real dataset; the default is a
+    // synthetic workload with the PAPER'S exact state dimension
+    // (nx = 146,339 per velocity variable, n = 292,678, nt = 600) so the
+    // serial-vs-parallel fractions match the paper's regime.
+    if let Ok(candidate) = std::env::var("DOPINF_FIG4_DATA") {
+        let reader = SnapReader::open(&candidate).expect("DOPINF_FIG4_DATA unreadable");
+        let nt = reader.var_info("u_x").unwrap().cols;
+        let nt_train = nt / 2;
+        let mut q = reader.read_all("u_x").unwrap().slice_cols(0, nt_train);
+        q = q.vstack(&reader.read_all("u_y").unwrap().slice_cols(0, nt_train));
+        return (q, candidate);
+    }
+    let spec = SynthSpec { nx: 146_339, ns: 2, nt: 600, modes: 5, ..Default::default() };
+    (generate(&spec, 0), "synthetic at the paper's state dimension (n = 292,678)".to_string())
+}
+
+fn main() {
+    let repeats: usize = std::env::var("DOPINF_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3); // paper repeats 100x; one-core wall time says no
+    let (q, desc) = load_training();
+    let nt = q.cols();
+    println!("== Fig. 4: strong scaling, p in {{1,2,4,8}}, {repeats} repeats ==");
+    println!("data: {desc} ({} x {nt})", q.rows());
+
+    let opinf = OpInfConfig {
+        ns: 2,
+        energy_target: 0.9996,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::paper_default(), // 64 pairs like the paper
+        max_growth: 1.2,
+        nt_p: 2 * nt,
+    };
+    let mut base = DOpInfConfig::new(1, opinf);
+    base.cost_model = CostModel::shared_memory();
+    let source = DataSource::InMemory(Arc::new(q));
+
+    let rows = strong_scaling(&base, &source, &[1, 2, 4, 8], repeats).unwrap();
+
+    println!(
+        "\n{:>4} {:>12} {:>10} {:>9}   load/compute/comm/learn/post [s]",
+        "p", "mean [s]", "std [s]", "speedup"
+    );
+    let mut speed_csv =
+        CsvWriter::create("results/fig4_speedup.csv", &["p", "mean_s", "std_s", "speedup"])
+            .unwrap();
+    let mut brk_csv = CsvWriter::create(
+        "results/fig4_breakdown.csv",
+        &["p", "load", "compute", "comm", "learn", "post"],
+    )
+    .unwrap();
+    for row in &rows {
+        let b = &row.breakdown;
+        println!(
+            "{:>4} {:>12.5} {:>10.5} {:>9.3}   {:.4}/{:.4}/{:.4}/{:.4}/{:.4}",
+            row.p, row.mean_s, row.std_s, row.speedup, b.load, b.compute, b.comm, b.learn, b.post
+        );
+        speed_csv.row(&[row.p as f64, row.mean_s, row.std_s, row.speedup]).unwrap();
+        brk_csv
+            .row(&[row.p as f64, b.load, b.compute, b.comm, b.learn, b.post])
+            .unwrap();
+    }
+    speed_csv.finish().unwrap();
+    brk_csv.finish().unwrap();
+
+    // ---- shape assertions (who wins / where the crossover falls) ------
+    assert!(rows[1].speedup > 1.3, "p=2 should show real speedup, got {}", rows[1].speedup);
+    assert!(
+        rows[2].speedup > rows[1].speedup,
+        "p=4 should beat p=2 ({} vs {})",
+        rows[2].speedup,
+        rows[1].speedup
+    );
+    let eff4 = rows[2].speedup / 4.0;
+    let eff8 = rows[3].speedup / 8.0;
+    assert!(
+        eff8 < eff4,
+        "efficiency must deteriorate at p=8 (paper Fig. 4): {eff8:.3} vs {eff4:.3}"
+    );
+    // comm share grows with p (Fig. 4 right)
+    let comm_share =
+        |r: &dopinf::coordinator::scaling::ScalingRow| r.breakdown.comm / r.breakdown.total;
+    assert!(
+        comm_share(&rows[3]) > comm_share(&rows[1]),
+        "communication share must grow with p"
+    );
+
+    let fit = AmdahlFit::through([
+        (rows[0].p, rows[0].mean_s),
+        (rows[1].p, rows[1].mean_s),
+        (rows[3].p, rows[3].mean_s),
+    ]);
+    println!(
+        "\nAmdahl fit: serial {:.4}s, parallel {:.4}s, comm {:.5}s/log2(p)",
+        fit.a, fit.b, fit.c
+    );
+    println!("projected speedup at p=2048: {:.2} (large-scale regime needs the RDRE-size problem of Ref. [1])", fit.speedup(2048));
+    println!("\nwrote results/fig4_speedup.csv, results/fig4_breakdown.csv");
+    println!("fig4 shape checks PASSED (near-ideal to p=4, deterioration at p=8, comm share grows)");
+}

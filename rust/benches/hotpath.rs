@@ -1,0 +1,93 @@
+//! Hot-path microbenches for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench hotpath`
+//!
+//! Covers every compute kernel on the pipeline's critical path, native
+//! vs PJRT where both exist:
+//!   * Gram product QᵀQ (Step III's dominant cost — L1 kernel territory)
+//!   * symmetric eigendecomposition (replicated serial fraction)
+//!   * OpInf assembly + one regularized solve (Step IV inner loop)
+//!   * ROM rollout (Step IV trial + online phase)
+//!   * postprocessing lift (Step V)
+//!   * collectives (comm substrate overhead)
+
+use dopinf::comm::{self, CostModel, Op};
+use dopinf::linalg::{cholesky_solve, eigh, matmul, matmul_tn, syrk, Matrix};
+use dopinf::opinf::learn;
+use dopinf::rom::quadratic::{qhat_sq_rows, s_dim};
+use dopinf::rom::{solve_discrete, RomOperators};
+use dopinf::runtime::Engine;
+use dopinf::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== hot-path microbenches ==\n");
+
+    // ---- Gram product: tall-skinny AtA ---------------------------------
+    let nt = 600;
+    for rows in [2048usize, 8192] {
+        let q = Matrix::randn(rows, nt, rows as u64);
+        bench.run_elems(&format!("gram native syrk {rows}x{nt}"), rows * nt, || syrk(&q));
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Engine::from_artifacts(std::path::Path::new("artifacts")).unwrap();
+        for rows in [2048usize, 8192] {
+            let q = Matrix::randn(rows, nt, rows as u64);
+            bench.run_elems(&format!("gram pjrt kernel {rows}x{nt}"), rows * nt, || {
+                engine.gram(&q)
+            });
+        }
+    }
+
+    // ---- eigendecomposition (the replicated serial fraction) ----------
+    for n in [100usize, 300, 600] {
+        let q = Matrix::randn(n + 50, n, n as u64);
+        let d = syrk(&q);
+        bench.run(&format!("eigh {n}x{n}"), || eigh(&d));
+    }
+
+    // ---- OpInf learning ------------------------------------------------
+    let r = 10;
+    let qhat = Matrix::randn(r, 600, 9);
+    bench.run("opinf assemble (r=10, nt=600)", || learn::assemble(&qhat));
+    let problem = learn::assemble(&qhat);
+    bench.run("opinf regularized solve (one pair)", || {
+        problem.solve(1e-6, 1e-2).unwrap()
+    });
+    let d = problem.dtd.clone();
+    let rhs = problem.dtq2.clone();
+    bench.run("cholesky solve 66x66, 10 rhs", || cholesky_solve(&d, &rhs).unwrap());
+
+    // ---- quadratic products --------------------------------------------
+    let q1 = Matrix::randn(599, r, 4);
+    bench.run_elems("qhat_sq rows (599x10 -> 599x55)", 599 * s_dim(r), || qhat_sq_rows(&q1));
+
+    // ---- rollout ---------------------------------------------------------
+    let mut ops = RomOperators::zeros(r);
+    for i in 0..r {
+        ops.ahat[(i, i)] = 0.9;
+    }
+    let q0 = vec![0.1; r];
+    bench.run_elems("rollout r=10 x 1200 steps", 1200, || solve_discrete(&ops, &q0, 1200));
+
+    // ---- postprocessing lift -------------------------------------------
+    let centered = Matrix::randn(8192, nt, 6);
+    let tr = Matrix::randn(nt, r, 7);
+    let qtilde = Matrix::randn(r, 1200, 8);
+    bench.run("lift: V_r = Q T_r (8192x600 @ 600x10)", || matmul(&centered, &tr));
+    let vr = matmul(&centered, &tr);
+    bench.run("lift: V_r Qtilde (8192x10 @ 10x1200)", || matmul(&vr, &qtilde));
+    bench.run("project: T_rT D (600x10_T @ 600x600)", || matmul_tn(&tr, &syrk(&Matrix::randn(700, nt, 3))));
+
+    // ---- collectives -----------------------------------------------------
+    for p in [2usize, 4, 8] {
+        bench.run(&format!("allreduce 600x600 over p={p} ranks"), || {
+            comm::run(p, CostModel::free(), |ctx| {
+                let data = vec![ctx.rank() as f64; 600 * 600];
+                ctx.allreduce(&data, Op::Sum).len()
+            })
+        });
+    }
+
+    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,129 @@
+//! Per-rank virtual clocks with per-category accounting.
+//!
+//! Categories match the paper's Fig. 4 (right) breakdown: data loading,
+//! data-processing computations, communication, and OpInf learning (plus
+//! postprocessing, which the paper discusses but does not plot).
+
+/// Cost category for the Fig. 4 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Step I: reading the rank's snapshot partition.
+    Load,
+    /// Steps II–III compute: transforms, Gram products, eigh, projection.
+    Compute,
+    /// Collective communication (Allreduce/Bcast/Barrier sync).
+    Comm,
+    /// Step IV: regularization search + operator solves + ROM trials.
+    Learn,
+    /// Step V: postprocessing / lifting.
+    Post,
+}
+
+pub const ALL_CATEGORIES: [Category; 5] =
+    [Category::Load, Category::Compute, Category::Comm, Category::Learn, Category::Post];
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Load => "load",
+            Category::Compute => "compute",
+            Category::Comm => "comm",
+            Category::Learn => "learn",
+            Category::Post => "post",
+        }
+    }
+}
+
+/// A rank's virtual clock: total virtual time plus per-category split.
+#[derive(Clone, Debug, Default)]
+pub struct Clock {
+    total: f64,
+    split: [f64; 5],
+}
+
+fn idx(c: Category) -> usize {
+    match c {
+        Category::Load => 0,
+        Category::Compute => 1,
+        Category::Comm => 2,
+        Category::Learn => 3,
+        Category::Post => 4,
+    }
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock::default()
+    }
+
+    /// Advance the clock by `seconds` of `category` work.
+    pub fn add(&mut self, category: Category, seconds: f64) {
+        debug_assert!(seconds >= 0.0, "negative time {seconds}");
+        self.total += seconds;
+        self.split[idx(category)] += seconds;
+    }
+
+    /// Synchronize to a collective's completion time: the clock jumps to
+    /// `sync_point` (max entry time over ranks + modeled cost); the wait
+    /// (idle + transfer) is charged to Comm.
+    pub fn sync_to(&mut self, sync_point: f64) {
+        if sync_point > self.total {
+            let wait = sync_point - self.total;
+            self.total = sync_point;
+            self.split[idx(Category::Comm)] += wait;
+        }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.total
+    }
+
+    /// Time accumulated in one category.
+    pub fn in_category(&self, category: Category) -> f64 {
+        self.split[idx(category)]
+    }
+
+    /// (category, seconds) pairs for reporting.
+    pub fn breakdown(&self) -> Vec<(Category, f64)> {
+        ALL_CATEGORIES.iter().map(|&c| (c, self.in_category(c))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_category() {
+        let mut c = Clock::new();
+        c.add(Category::Load, 1.0);
+        c.add(Category::Compute, 2.0);
+        c.add(Category::Compute, 0.5);
+        assert!((c.now() - 3.5).abs() < 1e-15);
+        assert!((c.in_category(Category::Compute) - 2.5).abs() < 1e-15);
+        assert_eq!(c.in_category(Category::Learn), 0.0);
+    }
+
+    #[test]
+    fn sync_charges_comm_wait() {
+        let mut c = Clock::new();
+        c.add(Category::Compute, 1.0);
+        c.sync_to(1.4);
+        assert!((c.now() - 1.4).abs() < 1e-15);
+        assert!((c.in_category(Category::Comm) - 0.4).abs() < 1e-15);
+        // syncing backwards is a no-op
+        c.sync_to(1.0);
+        assert!((c.now() - 1.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn breakdown_covers_total() {
+        let mut c = Clock::new();
+        c.add(Category::Load, 0.1);
+        c.add(Category::Learn, 0.2);
+        c.sync_to(0.5);
+        let sum: f64 = c.breakdown().iter().map(|(_, s)| s).sum();
+        assert!((sum - c.now()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,340 @@
+//! SPMD thread-rank communicator with exact collectives.
+//!
+//! [`run`] spawns `p` rank threads executing the same closure (the MPI
+//! model of the paper, Sec. III.A). Ranks synchronize through
+//! [`RankCtx`] collectives backed by a shared contribution board: each
+//! rank posts its payload, waits at a barrier, reduces all contributions
+//! *in rank order* (bitwise-deterministic results), then passes a second
+//! barrier before slots are reused.
+
+use std::sync::{Barrier, Mutex};
+
+use super::clock::{Category, Clock};
+use super::costmodel::CostModel;
+use crate::util::timer::ThreadCpuTimer;
+
+/// Reduction operator for Allreduce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Sum,
+    Max,
+    Min,
+}
+
+struct Shared {
+    /// per-rank contribution slots for the active collective
+    slots: Vec<Mutex<Vec<f64>>>,
+    /// per-rank virtual-time postings for clock synchronization
+    times: Vec<Mutex<f64>>,
+    barrier: Barrier,
+    model: CostModel,
+}
+
+/// Per-rank handle: rank id, collectives, and the virtual clock.
+pub struct RankCtx<'a> {
+    rank: usize,
+    size: usize,
+    shared: &'a Shared,
+    clock: Clock,
+}
+
+impl<'a> RankCtx<'a> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Charge `seconds` of `category` work to this rank's virtual clock.
+    pub fn charge(&mut self, category: Category, seconds: f64) {
+        self.clock.add(category, seconds);
+    }
+
+    /// Run `f`, measuring its *thread CPU time* and charging it to
+    /// `category`. Returns `f`'s result.
+    pub fn timed<R>(&mut self, category: Category, f: impl FnOnce() -> R) -> R {
+        let t = ThreadCpuTimer::start();
+        let out = f();
+        self.clock.add(category, t.elapsed());
+        out
+    }
+
+    /// Post this rank's payload + clock, wait for all, then fold every
+    /// rank's payload in rank order with `fold`. Advances clocks to
+    /// max-entry + modeled cost.
+    fn collective<T>(
+        &mut self,
+        payload: Vec<f64>,
+        modeled_cost: f64,
+        fold: impl FnOnce(&[Vec<f64>]) -> T,
+    ) -> T {
+        *self.shared.slots[self.rank].lock().unwrap() = payload;
+        *self.shared.times[self.rank].lock().unwrap() = self.clock.now();
+        self.shared.barrier.wait();
+
+        // every rank reads all contributions; rank-ordered fold
+        let contributions: Vec<Vec<f64>> = (0..self.size)
+            .map(|i| self.shared.slots[i].lock().unwrap().clone())
+            .collect();
+        let max_entry = (0..self.size)
+            .map(|i| *self.shared.times[i].lock().unwrap())
+            .fold(0.0, f64::max);
+        let out = fold(&contributions);
+
+        // second barrier: nobody reuses slots until everyone has read
+        self.shared.barrier.wait();
+        self.clock.sync_to(max_entry + modeled_cost);
+        out
+    }
+
+    /// MPI_Allreduce over an f64 vector. All ranks receive the result.
+    pub fn allreduce(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+        let bytes = data.len() * 8;
+        let cost = self.shared.model.allreduce(self.size, bytes);
+        let n = data.len();
+        self.collective(data.to_vec(), cost, |parts| {
+            let mut acc = vec![
+                match op {
+                    Op::Sum => 0.0,
+                    Op::Max => f64::NEG_INFINITY,
+                    Op::Min => f64::INFINITY,
+                };
+                n
+            ];
+            for part in parts {
+                assert_eq!(part.len(), n, "allreduce length mismatch across ranks");
+                for (a, &v) in acc.iter_mut().zip(part) {
+                    match op {
+                        Op::Sum => *a += v,
+                        Op::Max => *a = a.max(v),
+                        Op::Min => *a = a.min(v),
+                    }
+                }
+            }
+            acc
+        })
+    }
+
+    /// Scalar Allreduce convenience.
+    pub fn allreduce_scalar(&mut self, x: f64, op: Op) -> f64 {
+        self.allreduce(&[x], op)[0]
+    }
+
+    /// MPI_Bcast: `root` provides `data`; everyone receives a copy.
+    pub fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
+        assert!(root < self.size);
+        if self.rank == root {
+            assert!(data.is_some(), "root must provide broadcast payload");
+        }
+        let payload = if self.rank == root { data.unwrap() } else { Vec::new() };
+        let bytes = payload.len() * 8;
+        // non-roots do not know the size yet; cost is computed from the
+        // root's payload length after exchange — approximate with own
+        // knowledge (root's bytes dominate; non-root cost equalized by
+        // the max-entry sync).
+        let cost = self.shared.model.broadcast(self.size, bytes);
+        self.collective(payload, cost, |parts| parts[root].clone())
+    }
+
+    /// MPI_Gather to every rank (Allgather of variable-length parts).
+    pub fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        let bytes = data.len() * 8 * self.size;
+        let cost = self.shared.model.allreduce(self.size, bytes);
+        self.collective(data.to_vec(), cost, |parts| parts.to_vec())
+    }
+
+    /// MPI_Barrier.
+    pub fn barrier(&mut self) {
+        let cost = self.shared.model.barrier(self.size);
+        self.collective(Vec::new(), cost, |_| ());
+    }
+}
+
+/// Spawn `p` rank threads running `f` and return the per-rank results in
+/// rank order. Panics in any rank propagate.
+pub fn run<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+) -> Vec<R> {
+    assert!(p >= 1, "need at least one rank");
+    let shared = Shared {
+        slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        times: (0..p).map(|_| Mutex::new(0.0)).collect(),
+        barrier: Barrier::new(p),
+        model,
+    };
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let shared = &shared;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
+                    let out = f(&mut ctx);
+                    (out, ctx.clock)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked").0).collect()
+    })
+}
+
+/// Like [`run`], but also returns each rank's final [`Clock`].
+pub fn run_with_clocks<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+) -> Vec<(R, Clock)> {
+    assert!(p >= 1, "need at least one rank");
+    let shared = Shared {
+        slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        times: (0..p).map(|_| Mutex::new(0.0)).collect(),
+        barrier: Barrier::new(p),
+        model,
+    };
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let shared = &shared;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
+                    let out = f(&mut ctx);
+                    (out, ctx.clock)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sum_exact() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mine = vec![ctx.rank() as f64, 1.0];
+            ctx.allreduce(&mine, Op::Sum)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn allreduce_max_min() {
+        let results = run(3, CostModel::free(), |ctx| {
+            let x = (ctx.rank() as f64 - 1.0) * 2.5;
+            (ctx.allreduce_scalar(x, Op::Max), ctx.allreduce_scalar(x, Op::Min))
+        });
+        for (mx, mn) in &results {
+            assert_eq!(*mx, 2.5);
+            assert_eq!(*mn, -2.5);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
+            ctx.broadcast(2, payload)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![7.0, 8.0, 9.0]);
+        }
+    }
+
+    #[test]
+    fn allgather_preserves_rank_order() {
+        let results = run(3, CostModel::free(), |ctx| ctx.allgather(&[ctx.rank() as f64]));
+        for r in &results {
+            assert_eq!(r, &vec![vec![0.0], vec![1.0], vec![2.0]]);
+        }
+    }
+
+    #[test]
+    fn sequence_of_collectives() {
+        // exercise slot reuse across many rounds
+        let results = run(4, CostModel::free(), |ctx| {
+            let mut acc = 0.0;
+            for round in 0..20 {
+                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
+                ctx.barrier();
+            }
+            acc
+        });
+        let expect: f64 = (0..20).map(|r| (0..4).map(|k| (k + r) as f64).sum::<f64>()).sum();
+        for r in &results {
+            assert_eq!(*r, expect);
+        }
+    }
+
+    #[test]
+    fn deterministic_sum_order() {
+        // results must be identical across repeated runs (rank-ordered fold)
+        let vals = [1e16, 1.0, -1e16, 3.0];
+        let run_once = || {
+            run(4, CostModel::free(), |ctx| {
+                ctx.allreduce_scalar(vals[ctx.rank()], Op::Sum)
+            })[0]
+        };
+        let first = run_once();
+        for _ in 0..5 {
+            assert_eq!(run_once(), first);
+        }
+    }
+
+    #[test]
+    fn clocks_sync_at_collectives() {
+        let results = super::run_with_clocks(2, CostModel::shared_memory(), |ctx| {
+            if ctx.rank() == 0 {
+                ctx.charge(Category::Compute, 1.0);
+            } else {
+                ctx.charge(Category::Compute, 3.0);
+            }
+            ctx.allreduce_scalar(1.0, Op::Sum);
+            ctx.clock().now()
+        });
+        // both ranks end at >= 3.0 (max entry) and equal virtual time
+        let t0 = results[0].0;
+        let t1 = results[1].0;
+        assert!(t0 >= 3.0 && (t0 - t1).abs() < 1e-12, "{t0} vs {t1}");
+        // rank 0 waited ~2s in comm
+        assert!(results[0].1.in_category(Category::Comm) >= 2.0);
+    }
+
+    #[test]
+    fn single_rank_works() {
+        let results = run(1, CostModel::shared_memory(), |ctx| {
+            ctx.barrier();
+            ctx.allreduce_scalar(5.0, Op::Sum)
+        });
+        assert_eq!(results, vec![5.0]);
+    }
+
+    #[test]
+    fn timed_charges_cpu() {
+        let results = super::run_with_clocks(2, CostModel::free(), |ctx| {
+            ctx.timed(Category::Learn, || {
+                let mut acc = 0u64;
+                for i in 0..500_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                std::hint::black_box(acc)
+            });
+            ctx.clock().in_category(Category::Learn)
+        });
+        for (learn, _) in &results {
+            assert!(*learn > 0.0);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! α–β (Hockney) communication cost model for the virtual clocks.
+//!
+//! Collective costs use the standard binomial-tree / recursive-doubling
+//! estimates (Thakur, Rabenseifner & Gropp, IJHPCA 2005):
+//!
+//! * Allreduce (recursive doubling): `log2(p) · (α + n·β + n·γ)`
+//! * Broadcast (binomial tree):      `log2(p) · (α + n·β)`
+//! * Barrier (dissemination):        `log2(p) · α`
+//!
+//! Defaults model a shared-memory node like the paper's 256-core EPYC
+//! box (α ≈ 1 µs thread sync, β ≈ 1/12 GB/s effective per-pair memory
+//! bandwidth); `CostModel::cluster()` models an HPC interconnect for the
+//! p→2048 projection ablation (Ref. [1] of the paper).
+
+/// Latency/bandwidth/reduction-op cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// per-message latency (seconds)
+    pub alpha: f64,
+    /// per-byte transfer time (seconds/byte)
+    pub beta: f64,
+    /// per-byte reduction compute time (seconds/byte)
+    pub gamma: f64,
+}
+
+impl CostModel {
+    /// Shared-memory node (the paper's Fig. 4 testbed).
+    pub fn shared_memory() -> CostModel {
+        CostModel { alpha: 1.0e-6, beta: 1.0 / 12.0e9, gamma: 1.0 / 8.0e9 }
+    }
+
+    /// HPC cluster interconnect (for the Ref. [1] scale projection).
+    pub fn cluster() -> CostModel {
+        CostModel { alpha: 2.0e-6, beta: 1.0 / 25.0e9, gamma: 1.0 / 8.0e9 }
+    }
+
+    /// Zero-cost model (pure-correctness runs / tests).
+    pub fn free() -> CostModel {
+        CostModel { alpha: 0.0, beta: 0.0, gamma: 0.0 }
+    }
+
+    fn log2p(p: usize) -> f64 {
+        if p <= 1 {
+            0.0
+        } else {
+            (p as f64).log2().ceil()
+        }
+    }
+
+    /// Modeled Allreduce time for `bytes` payload over `p` ranks.
+    pub fn allreduce(&self, p: usize, bytes: usize) -> f64 {
+        Self::log2p(p) * (self.alpha + bytes as f64 * (self.beta + self.gamma))
+    }
+
+    /// Modeled broadcast time.
+    pub fn broadcast(&self, p: usize, bytes: usize) -> f64 {
+        Self::log2p(p) * (self.alpha + bytes as f64 * self.beta)
+    }
+
+    /// Modeled barrier time.
+    pub fn barrier(&self, p: usize) -> f64 {
+        Self::log2p(p) * self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CostModel::shared_memory();
+        assert_eq!(m.allreduce(1, 1 << 20), 0.0);
+        assert_eq!(m.broadcast(1, 1 << 20), 0.0);
+        assert_eq!(m.barrier(1), 0.0);
+    }
+
+    #[test]
+    fn cost_grows_with_p_and_bytes() {
+        let m = CostModel::shared_memory();
+        assert!(m.allreduce(8, 1024) > m.allreduce(2, 1024));
+        assert!(m.allreduce(4, 1 << 20) > m.allreduce(4, 1024));
+        assert!(m.broadcast(16, 0) > 0.0); // latency-only floor
+    }
+
+    #[test]
+    fn log_scaling() {
+        let m = CostModel { alpha: 1.0, beta: 0.0, gamma: 0.0 };
+        assert_eq!(m.barrier(2), 1.0);
+        assert_eq!(m.barrier(4), 2.0);
+        assert_eq!(m.barrier(8), 3.0);
+        assert_eq!(m.barrier(1024), 10.0);
+        // non-power-of-two rounds up
+        assert_eq!(m.barrier(5), 3.0);
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        let m = CostModel::free();
+        assert_eq!(m.allreduce(1024, 1 << 30), 0.0);
+    }
+}

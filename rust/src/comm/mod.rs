@@ -1,0 +1,26 @@
+//! In-process MPI-like communicator substrate.
+//!
+//! The paper runs dOpInf as one MPI group with p ranks (Sec. III.A). We
+//! reproduce the same SPMD programming model with p *threads*: each rank
+//! executes the same pipeline function against its own data partition
+//! and synchronizes through exact shared-memory collectives
+//! ([`communicator::RankCtx`]): `Allreduce(SUM|MAX|MIN)`, `Bcast`,
+//! `Barrier`, `Gather` — reductions applied in rank order, so results
+//! are bitwise deterministic regardless of thread scheduling.
+//!
+//! **Timing model** (DESIGN.md §3): this testbed has one physical core,
+//! so wall-clock cannot exhibit strong scaling. Each rank instead carries
+//! a virtual clock ([`clock::Clock`]) fed by per-thread CPU time
+//! (`CLOCK_THREAD_CPUTIME_ID`) for compute segments and by an α–β
+//! binomial-tree model ([`costmodel::CostModel`]) for collectives;
+//! collective entry synchronizes clocks to the max over ranks, exactly
+//! like a real bulk-synchronous MPI program. Numerics are unaffected —
+//! the collectives are exact.
+
+pub mod clock;
+pub mod communicator;
+pub mod costmodel;
+
+pub use clock::{Category, Clock};
+pub use communicator::{run, run_with_clocks, Op, RankCtx};
+pub use costmodel::CostModel;

@@ -1,0 +1,167 @@
+//! Run configuration for the distributed pipeline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::comm::CostModel;
+use crate::io::snapd::SnapReader;
+use crate::io::RowRange;
+use crate::linalg::Matrix;
+use crate::opinf::serial::OpInfConfig;
+
+/// Where the training snapshots come from.
+#[derive(Clone)]
+pub enum DataSource {
+    /// SNAPD file with one dataset per state variable (paper Step I:
+    /// each rank reads its own row slice).
+    File { path: PathBuf, variables: Vec<String> },
+    /// In-memory snapshot matrix, variables stacked var-major
+    /// (`ns·nx` rows). Used by tests/benches; ranks copy their slices.
+    InMemory(Arc<Matrix>),
+}
+
+impl DataSource {
+    /// (spatial rows per variable, number of variables, snapshots).
+    pub fn dims(&self, ns_expected: usize) -> Result<(usize, usize, usize)> {
+        match self {
+            DataSource::File { path, variables } => {
+                let reader = SnapReader::open(path)?;
+                let first = reader.var_info(&variables[0])?;
+                Ok((first.rows, variables.len(), first.cols))
+            }
+            DataSource::InMemory(q) => {
+                anyhow::ensure!(
+                    q.rows() % ns_expected == 0,
+                    "in-memory rows {} not divisible by ns {}",
+                    q.rows(),
+                    ns_expected
+                );
+                Ok((q.rows() / ns_expected, ns_expected, q.cols()))
+            }
+        }
+    }
+
+    /// Load one rank's block: the spatial `range` of every variable,
+    /// stacked var-major — the tutorial's `Q_rank` layout. Returns the
+    /// block and the bytes notionally read from storage.
+    pub fn load_block(&self, range: RowRange, nx: usize, ns: usize) -> Result<(Matrix, usize)> {
+        match self {
+            DataSource::File { path, variables } => {
+                let reader = SnapReader::open(path)?;
+                let mut block: Option<Matrix> = None;
+                for name in variables {
+                    let part = reader.read_rows(name, range)?;
+                    block = Some(match block {
+                        None => part,
+                        Some(b) => b.vstack(&part),
+                    });
+                }
+                let block = block.context("no variables configured")?;
+                let bytes = block.rows() * block.cols() * 8;
+                Ok((block, bytes))
+            }
+            DataSource::InMemory(q) => {
+                let nt = q.cols();
+                let mut block = Matrix::zeros(ns * range.len(), nt);
+                for v in 0..ns {
+                    let src_start = v * nx + range.start;
+                    let dst_start = v * range.len();
+                    for i in 0..range.len() {
+                        block
+                            .row_mut(dst_start + i)
+                            .copy_from_slice(q.row(src_start + i));
+                    }
+                }
+                let bytes = block.rows() * nt * 8;
+                Ok((block, bytes))
+            }
+        }
+    }
+}
+
+/// Full configuration of one distributed run.
+#[derive(Clone)]
+pub struct DOpInfConfig {
+    /// number of ranks (the paper's p)
+    pub p: usize,
+    /// algorithm hyperparameters (shared with the serial path)
+    pub opinf: OpInfConfig,
+    /// communication cost model for the virtual clocks
+    pub cost_model: CostModel,
+    /// modeled storage read bandwidth per rank (bytes/s) for Step I
+    pub disk_bandwidth: f64,
+    /// artifacts directory (None = pure-native engine)
+    pub artifacts_dir: Option<PathBuf>,
+    /// probes to postprocess: (variable index, global spatial row)
+    pub probes: Vec<(usize, usize)>,
+}
+
+impl DOpInfConfig {
+    pub fn new(p: usize, opinf: OpInfConfig) -> DOpInfConfig {
+        DOpInfConfig {
+            p,
+            opinf,
+            cost_model: CostModel::shared_memory(),
+            disk_bandwidth: 1.5e9,
+            artifacts_dir: None,
+            probes: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::partition::distribute_tutorial;
+    use crate::rom::RegGrid;
+
+    fn mem_source(nx: usize, ns: usize, nt: usize) -> DataSource {
+        DataSource::InMemory(Arc::new(Matrix::randn(ns * nx, nt, 9)))
+    }
+
+    #[test]
+    fn inmemory_dims() {
+        let src = mem_source(10, 2, 7);
+        assert_eq!(src.dims(2).unwrap(), (10, 2, 7));
+    }
+
+    #[test]
+    fn inmemory_blocks_cover_everything() {
+        let nx = 13;
+        let src = mem_source(nx, 2, 5);
+        let full = match &src {
+            DataSource::InMemory(q) => q.clone(),
+            _ => unreachable!(),
+        };
+        // blocks over 3 ranks, reassembled per variable, must equal full
+        let ranges = distribute_tutorial(nx, 3);
+        let mut var0 = Matrix::zeros(0, 5);
+        let mut var1 = Matrix::zeros(0, 5);
+        for range in ranges {
+            let (block, bytes) = src.load_block(range, nx, 2).unwrap();
+            assert_eq!(bytes, block.rows() * 5 * 8);
+            var0 = var0.vstack(&block.slice_rows(0, range.len()));
+            var1 = var1.vstack(&block.slice_rows(range.len(), 2 * range.len()));
+        }
+        assert_eq!(var0, full.slice_rows(0, nx));
+        assert_eq!(var1, full.slice_rows(nx, 2 * nx));
+    }
+
+    #[test]
+    fn config_defaults() {
+        let cfg = DOpInfConfig::new(4, OpInfConfig {
+            ns: 2,
+            energy_target: 0.9996,
+            r_override: None,
+            scaling: false,
+            grid: RegGrid::coarse(),
+            max_growth: 1.2,
+            nt_p: 100,
+        });
+        assert_eq!(cfg.p, 4);
+        assert!(cfg.artifacts_dir.is_none());
+        assert!(cfg.probes.is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the distributed dOpInf pipeline.
+//!
+//! Wires the algorithm library ([`crate::opinf`]) to the SPMD
+//! communicator ([`crate::comm`]) and the PJRT engine
+//! ([`crate::runtime`]): p rank threads each run Steps I–V on their row
+//! partition, synchronizing through exact collectives, with per-rank
+//! virtual clocks recording the Fig. 4 breakdown.
+//!
+//! * [`config`]   — run configuration + data sources
+//! * [`pipeline`] — the five-step distributed pipeline
+//! * [`timing`]   — per-rank timing reports and speedup tables
+//! * [`scaling`]  — the strong-scaling study harness (Fig. 4)
+
+pub mod config;
+pub mod pipeline;
+pub mod scaling;
+pub mod timing;
+
+pub use config::{DOpInfConfig, DataSource};
+pub use pipeline::{run_distributed, DOpInfResult};

@@ -1,0 +1,334 @@
+//! The five-step distributed dOpInf pipeline (paper Sec. III).
+//!
+//! Every rank thread executes this function over its row partition —
+//! the SPMD structure of the paper's MPI tutorial, collective for
+//! collective:
+//!
+//! | Step | local work                    | collective                |
+//! |------|-------------------------------|---------------------------|
+//! | I    | read row block                | —                         |
+//! | II   | center rows (+ local maxabs)  | Allreduce(MAX) if scaling |
+//! | III  | Gram `QᵢᵀQᵢ`, eigh, T_r, Q̂  | Allreduce(SUM) of D       |
+//! | IV   | grid-search slice of B₁×B₂    | Allreduce(MIN) + Bcast    |
+//! | V    | lift probe rows               | Allreduce(SUM) gather     |
+//!
+//! Per-rank virtual clocks charge each segment to the Fig. 4 categories
+//! (Load / Compute / Comm / Learn / Post).
+
+use anyhow::{Context, Result};
+
+use super::config::{DOpInfConfig, DataSource};
+use super::timing::{RankTiming, RunTiming};
+use crate::comm::{self, Category, Op, RankCtx};
+use crate::io::partition::distribute_tutorial;
+use crate::linalg::Matrix;
+use crate::opinf::learn;
+use crate::opinf::podgram::GramSpectrum;
+use crate::opinf::postprocess::lift_row;
+use crate::opinf::serial::search_pairs;
+use crate::opinf::transform::{apply_scaling, center_rows, local_maxabs, variable_ranges};
+use crate::rom::regsearch::distribute_pairs;
+use crate::runtime::Engine;
+use crate::util::timer::ThreadCpuTimer;
+
+/// A lifted prediction at one probe row of one variable, over the full
+/// target horizon (nt_p values).
+#[derive(Clone, Debug)]
+pub struct ProbePrediction {
+    pub var: usize,
+    pub row: usize,
+    pub values: Vec<f64>,
+}
+
+/// Everything a distributed run produces (replicated on all ranks;
+/// rank 0's copy is returned).
+#[derive(Clone, Debug)]
+pub struct DOpInfResult {
+    /// selected reduced dimension
+    pub r: usize,
+    /// Gram eigenvalues, descending (= σ², Fig. 2)
+    pub eigs: Vec<f64>,
+    /// cumulative retained energy curve (Fig. 2 right)
+    pub retained_energy: Vec<f64>,
+    /// optimal (β₁, β₂)
+    pub opt_pair: (f64, f64),
+    /// training error of the optimal pair
+    pub train_err: f64,
+    /// reduced solution over the target horizon, (r, nt_p)
+    pub qtilde: Matrix,
+    /// wall seconds of the winning ROM rollout
+    pub rom_time: f64,
+    /// rank that held the optimal pair
+    pub winner_rank: usize,
+    /// probe predictions in config order
+    pub probes: Vec<ProbePrediction>,
+    /// virtual-clock timing per rank
+    pub timing: RunTiming,
+}
+
+struct RankOut {
+    result: DOpInfResult,
+}
+
+/// Run the distributed pipeline with `cfg.p` rank threads.
+pub fn run_distributed(cfg: &DOpInfConfig, source: &DataSource) -> Result<DOpInfResult> {
+    let ns = cfg.opinf.ns;
+    let (nx, ns_src, nt) = source.dims(ns)?;
+    anyhow::ensure!(ns_src == ns, "source has {ns_src} variables, config says {ns}");
+    anyhow::ensure!(nt >= 2, "need at least 2 snapshots");
+    let ranges = distribute_tutorial(nx, cfg.p);
+    let engine = match &cfg.artifacts_dir {
+        Some(dir) => Engine::from_artifacts(dir)?,
+        None => Engine::native(),
+    };
+    let pairs = cfg.opinf.grid.pairs();
+
+    let outputs = comm::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
+        rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+    });
+
+    // surface rank errors + collect clocks
+    let mut timings = Vec::with_capacity(cfg.p);
+    let mut first: Option<RankOut> = None;
+    for (i, (out, clock)) in outputs.into_iter().enumerate() {
+        timings.push(RankTiming::from_clock(i, &clock));
+        let out = out.map_err(|e| e.context(format!("rank {i}")))?;
+        if i == 0 {
+            first = Some(out);
+        }
+    }
+    let mut result = first.context("no ranks ran")?.result;
+    result.timing = RunTiming::new(timings);
+    Ok(result)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_pipeline(
+    ctx: &mut RankCtx,
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+    ranges: &[crate::io::RowRange],
+    engine: &Engine,
+    pairs: &[(f64, f64)],
+    _nx: usize,
+    nt: usize,
+) -> Result<RankOut> {
+    let rank = ctx.rank();
+    let p = ctx.size();
+    let range = ranges[rank];
+    let ns = cfg.opinf.ns;
+    let nt_p = cfg.opinf.nt_p;
+
+    // ---- Step I: load this rank's block -------------------------------
+    let cpu = ThreadCpuTimer::start();
+    let (mut q, bytes) = source.load_block(range, _nx, ns)?;
+    ctx.charge(Category::Load, cpu.elapsed() + bytes as f64 / cfg.disk_bandwidth);
+
+    // ---- Step II: transforms ------------------------------------------
+    let var_ranges = variable_ranges(q.rows(), ns);
+    let means = ctx.timed(Category::Compute, || center_rows(&mut q));
+    let mut row_scales = vec![1.0; q.rows()];
+    if cfg.opinf.scaling {
+        let local = ctx.timed(Category::Compute, || local_maxabs(&q, &var_ranges));
+        let global = ctx.allreduce(&local, Op::Max);
+        ctx.timed(Category::Compute, || apply_scaling(&mut q, &var_ranges, &global));
+        for (v, &(s0, s1)) in var_ranges.iter().enumerate() {
+            let s = if global[v] > 0.0 { global[v] } else { 1.0 };
+            for item in row_scales.iter_mut().take(s1).skip(s0) {
+                *item = s;
+            }
+        }
+    }
+
+    // ---- Step III: Gram-based dimensionality reduction ----------------
+    let d_rank = ctx.timed(Category::Compute, || engine.gram(&q));
+    let d_vec = ctx.allreduce(d_rank.data(), Op::Sum);
+    let d_global = Matrix::from_vec(nt, nt, d_vec);
+    let spectrum = ctx.timed(Category::Compute, || GramSpectrum::from_gram(&d_global));
+    let r = cfg
+        .opinf
+        .r_override
+        .unwrap_or_else(|| spectrum.choose_r(cfg.opinf.energy_target));
+    let (tr, qhat) = ctx.timed(Category::Compute, || {
+        let tr = spectrum.tr(r);
+        let qhat = engine.project(&tr, &d_global);
+        (tr, qhat)
+    });
+
+    // ---- Step IV: distributed operator learning -----------------------
+    let problem = ctx.timed(Category::Learn, || learn::assemble(&qhat));
+    let (pair_start, pair_end) = distribute_pairs(rank, pairs.len(), p);
+    let outcome = ctx.timed(Category::Learn, || {
+        search_pairs(engine, &problem, &pairs[pair_start..pair_end], cfg.opinf.max_growth, nt_p)
+    });
+
+    let global_best = ctx.allreduce_scalar(outcome.best_err, Op::Min);
+    anyhow::ensure!(
+        global_best < 1e20,
+        "no regularization pair satisfied the growth constraint on any rank"
+    );
+    let claim = if outcome.best_err == global_best { rank as f64 } else { f64::INFINITY };
+    let winner = ctx.allreduce_scalar(claim, Op::Min) as usize;
+
+    // winner broadcasts [β₁, β₂, rom_time, Q̃ flat]
+    let payload = (rank == winner).then(|| {
+        let (b1, b2) = outcome.best_pair.expect("winner has a pair");
+        let qt = outcome.best_trajectory.as_ref().expect("winner has a trajectory");
+        let mut data = vec![b1, b2, outcome.best_rom_time];
+        data.extend_from_slice(qt.data());
+        data
+    });
+    let data = ctx.broadcast(winner, payload);
+    anyhow::ensure!(data.len() == 3 + r * nt_p, "winner payload size mismatch");
+    let opt_pair = (data[0], data[1]);
+    let rom_time = data[2];
+    let qtilde = Matrix::from_vec(r, nt_p, data[3..].to_vec());
+
+    // ---- Step V: probe postprocessing ---------------------------------
+    let mut probes = Vec::with_capacity(cfg.probes.len());
+    for &(var, row) in &cfg.probes {
+        anyhow::ensure!(var < ns, "probe variable {var} out of range");
+        let mut contribution = vec![0.0; nt_p];
+        if row >= range.start && row < range.end {
+            let local_row = var * range.len() + (row - range.start);
+            contribution = ctx.timed(Category::Post, || {
+                lift_row(q.row(local_row), &tr, &qtilde, means[local_row], row_scales[local_row])
+            });
+        }
+        // owner's contribution + zeros elsewhere = gather-to-all
+        let values = ctx.allreduce(&contribution, Op::Sum);
+        probes.push(ProbePrediction { var, row, values });
+    }
+
+    Ok(RankOut {
+        result: DOpInfResult {
+            r,
+            retained_energy: spectrum.retained_energy(),
+            eigs: spectrum.eigs.clone(),
+            opt_pair,
+            train_err: global_best,
+            qtilde,
+            rom_time,
+            winner_rank: winner,
+            probes,
+            timing: RunTiming::new(Vec::new()), // filled by the caller
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CostModel;
+    use crate::opinf::serial::{self, OpInfConfig};
+    use crate::rom::RegGrid;
+    use crate::sim::synth::{generate, SynthSpec};
+    use std::sync::Arc;
+
+    fn test_setup(nx: usize) -> (DataSource, OpInfConfig, Matrix) {
+        let spec = SynthSpec { nx, ns: 2, nt: 60, modes: 3, ..Default::default() };
+        let q = generate(&spec, 0);
+        let cfg = OpInfConfig {
+            ns: 2,
+            energy_target: 0.999_999,
+            r_override: None,
+            scaling: false,
+            grid: RegGrid::coarse(),
+            max_growth: 1.5,
+            nt_p: 120,
+        };
+        (DataSource::InMemory(Arc::new(q.clone())), cfg, q)
+    }
+
+    #[test]
+    fn distributed_matches_serial() {
+        let (source, ocfg, q) = test_setup(150);
+        let serial_res = serial::run(q, &ocfg).unwrap();
+
+        for p in [1, 2, 3, 4] {
+            let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+            cfg.cost_model = CostModel::free();
+            let dist = run_distributed(&cfg, &source).unwrap();
+            assert_eq!(dist.r, serial_res.r, "p={p}");
+            assert_eq!(dist.opt_pair, serial_res.opt_pair, "p={p}");
+            assert!(
+                (dist.train_err - serial_res.train_err).abs()
+                    < 1e-9 * serial_res.train_err.max(1e-30),
+                "p={p}: {} vs {}",
+                dist.train_err,
+                serial_res.train_err
+            );
+            assert!(
+                dist.qtilde.max_abs_diff(&serial_res.qtilde) < 1e-7,
+                "p={p} trajectory diff {}",
+                dist.qtilde.max_abs_diff(&serial_res.qtilde)
+            );
+            // spectra agree
+            for (a, b) in dist.eigs.iter().zip(&serial_res.spectrum.eigs) {
+                assert!((a - b).abs() < 1e-7 * b.abs().max(1.0), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn probes_lift_correctly() {
+        let (source, ocfg, q) = test_setup(120);
+        let mut cfg = DOpInfConfig::new(3, ocfg.clone());
+        cfg.cost_model = CostModel::free();
+        cfg.probes = vec![(0, 5), (1, 119), (0, 60)];
+        let dist = run_distributed(&cfg, &source).unwrap();
+        assert_eq!(dist.probes.len(), 3);
+
+        // cross-check one probe against serial postprocessing
+        let serial_res = serial::run(q, &ocfg).unwrap();
+        let lifted = crate::opinf::postprocess::lift_block(
+            &serial_res.centered,
+            &serial_res.tr,
+            &serial_res.qtilde,
+            &serial_res.means,
+            &serial_res.scales,
+        );
+        // probe (var=1, row=119) lives at global matrix row 120 + 119
+        let probe = &dist.probes[1];
+        assert_eq!(probe.values.len(), 120);
+        for (t, &v) in probe.values.iter().enumerate() {
+            assert!((v - lifted[(120 + 119, t)]).abs() < 1e-7, "t={t}");
+        }
+    }
+
+    #[test]
+    fn timing_breakdown_populated() {
+        let (source, ocfg, _) = test_setup(100);
+        let cfg = DOpInfConfig::new(4, ocfg);
+        let dist = run_distributed(&cfg, &source).unwrap();
+        assert_eq!(dist.timing.per_rank.len(), 4);
+        let b = dist.timing.breakdown();
+        assert!(b.total > 0.0);
+        assert!(b.compute > 0.0);
+        assert!(b.learn > 0.0);
+        // comm must be visible with the shared-memory model at p=4
+        assert!(b.comm > 0.0);
+    }
+
+    #[test]
+    fn scaling_transform_roundtrips_through_pipeline() {
+        let (source, mut ocfg, _) = test_setup(90);
+        ocfg.scaling = true;
+        let mut cfg = DOpInfConfig::new(2, ocfg);
+        cfg.cost_model = CostModel::free();
+        cfg.probes = vec![(0, 10)];
+        let dist = run_distributed(&cfg, &source).unwrap();
+        // probe prediction must be in original (unscaled) coordinates:
+        // the synthetic field has offset ~1.0, so values O(1)
+        let v0 = dist.probes[0].values[0];
+        assert!(v0.abs() < 10.0 && v0.abs() > 1e-3, "{v0}");
+    }
+
+    #[test]
+    fn rejects_wrong_variable_count() {
+        let (source, mut ocfg, _) = test_setup(50);
+        ocfg.ns = 3; // source has 2
+        let cfg = DOpInfConfig::new(2, ocfg);
+        assert!(run_distributed(&cfg, &source).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-rank timing reports and speedup tables (paper Fig. 4).
+
+use crate::comm::{Category, Clock};
+
+/// One rank's virtual-clock breakdown.
+#[derive(Clone, Debug)]
+pub struct RankTiming {
+    pub rank: usize,
+    pub total: f64,
+    pub load: f64,
+    pub compute: f64,
+    pub comm: f64,
+    pub learn: f64,
+    pub post: f64,
+}
+
+impl RankTiming {
+    pub fn from_clock(rank: usize, clock: &Clock) -> RankTiming {
+        RankTiming {
+            rank,
+            total: clock.now(),
+            load: clock.in_category(Category::Load),
+            compute: clock.in_category(Category::Compute),
+            comm: clock.in_category(Category::Comm),
+            learn: clock.in_category(Category::Learn),
+            post: clock.in_category(Category::Post),
+        }
+    }
+}
+
+/// Aggregate over ranks: the run's virtual time is the slowest rank
+/// (bulk-synchronous semantics), with its breakdown.
+#[derive(Clone, Debug)]
+pub struct RunTiming {
+    pub per_rank: Vec<RankTiming>,
+}
+
+impl RunTiming {
+    pub fn new(per_rank: Vec<RankTiming>) -> RunTiming {
+        RunTiming { per_rank }
+    }
+
+    /// Virtual completion time = max over ranks.
+    pub fn total(&self) -> f64 {
+        self.per_rank.iter().map(|t| t.total).fold(0.0, f64::max)
+    }
+
+    /// The slowest rank's breakdown (what the paper reports: "the CPU
+    /// time of the MPI rank that contains the optimal pair" — ranks are
+    /// synchronized at the final collective so maxima coincide).
+    pub fn breakdown(&self) -> RankTiming {
+        self.per_rank
+            .iter()
+            .max_by(|a, b| a.total.partial_cmp(&b.total).unwrap())
+            .cloned()
+            .expect("no ranks")
+    }
+
+    /// Mean across ranks of one extractor (diagnostics).
+    pub fn mean(&self, f: impl Fn(&RankTiming) -> f64) -> f64 {
+        self.per_rank.iter().map(&f).sum::<f64>() / self.per_rank.len() as f64
+    }
+}
+
+/// Speedup table rows for a strong-scaling study.
+pub fn speedups(times: &[(usize, f64)]) -> Vec<(usize, f64, f64)> {
+    let t1 = times
+        .iter()
+        .find(|(p, _)| *p == 1)
+        .map(|(_, t)| *t)
+        .unwrap_or_else(|| times.first().expect("empty").1);
+    times.iter().map(|&(p, t)| (p, t, t1 / t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clock_with(load: f64, compute: f64) -> Clock {
+        let mut c = Clock::new();
+        c.add(Category::Load, load);
+        c.add(Category::Compute, compute);
+        c
+    }
+
+    #[test]
+    fn from_clock_splits() {
+        let t = RankTiming::from_clock(2, &clock_with(1.0, 2.0));
+        assert_eq!(t.rank, 2);
+        assert!((t.total - 3.0).abs() < 1e-15);
+        assert_eq!(t.load, 1.0);
+        assert_eq!(t.compute, 2.0);
+        assert_eq!(t.comm, 0.0);
+    }
+
+    #[test]
+    fn run_total_is_max() {
+        let run = RunTiming::new(vec![
+            RankTiming::from_clock(0, &clock_with(1.0, 1.0)),
+            RankTiming::from_clock(1, &clock_with(1.0, 2.5)),
+        ]);
+        assert!((run.total() - 3.5).abs() < 1e-15);
+        assert_eq!(run.breakdown().rank, 1);
+        assert!((run.mean(|t| t.load) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn speedup_table() {
+        let rows = speedups(&[(1, 8.0), (2, 4.0), (4, 2.5), (8, 2.0)]);
+        assert_eq!(rows[0], (1, 8.0, 1.0));
+        assert_eq!(rows[1], (2, 4.0, 2.0));
+        assert!((rows[2].2 - 3.2).abs() < 1e-12);
+        assert_eq!(rows[3].2, 4.0);
+    }
+}

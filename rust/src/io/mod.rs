@@ -1,0 +1,20 @@
+//! Snapshot dataset I/O substrate.
+//!
+//! The paper stores training snapshots in HDF5 and leans on independent
+//! per-rank row-slice reads (Step I, Remark 1). HDF5 is an external C
+//! library we do not link, so [`snapd`] defines an equivalent chunked
+//! binary container: named per-variable datasets of shape
+//! `(spatial_dof, n_snapshots)` stored row-major, which makes a rank's
+//! contiguous row range `[start, end)` a single contiguous pread — the
+//! same access pattern h5py hyperslab selection gives the tutorial.
+//!
+//! [`partition`] implements the tutorial's `distribute_nx` splitting
+//! (equal blocks, remainder to the last rank) plus a balanced variant;
+//! [`probes`] maps physical probe locations to dataset row indices.
+
+pub mod partition;
+pub mod probes;
+pub mod snapd;
+
+pub use partition::{distribute_balanced, distribute_tutorial, RowRange};
+pub use snapd::{SnapReader, SnapWriter};

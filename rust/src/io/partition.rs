@@ -1,0 +1,136 @@
+//! Row-partitioning strategies for distributing the snapshot matrix.
+//!
+//! The splitting scheme decomposes the spatial domain into p
+//! non-overlapping subdomains (paper Sec. III.B): each rank holds *all*
+//! state variables over its row range, which is what lets Step II center
+//! variables without communication (Remark 3).
+
+/// A rank's row range `[start, end)` with `len = end - start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl RowRange {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// The tutorial's `distribute_nx` (paper lines 29–51): equal blocks of
+/// `floor(n/p)` with the entire remainder appended to the last rank.
+pub fn distribute_tutorial(n: usize, p: usize) -> Vec<RowRange> {
+    assert!(p >= 1);
+    let equal = n / p;
+    (0..p)
+        .map(|rank| {
+            let start = rank * equal;
+            let mut end = (rank + 1) * equal;
+            if rank == p - 1 {
+                end = n;
+            }
+            RowRange { start, end }
+        })
+        .collect()
+}
+
+/// Balanced variant: sizes differ by at most one row (the "further
+/// distribute the remaining rows" strategy the paper describes in
+/// Sec. III.B.1). Preferred default — the tutorial split can leave the
+/// last rank with up to p-1 extra rows.
+pub fn distribute_balanced(n: usize, p: usize) -> Vec<RowRange> {
+    assert!(p >= 1);
+    let base = n / p;
+    let extra = n % p;
+    let mut start = 0;
+    (0..p)
+        .map(|rank| {
+            let len = base + usize::from(rank < extra);
+            let r = RowRange { start, end: start + len };
+            start += len;
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::rng::Rng;
+
+    fn covers_exactly(ranges: &[RowRange], n: usize) -> Result<(), String> {
+        let mut pos = 0;
+        for r in ranges {
+            if r.start != pos {
+                return Err(format!("gap/overlap at {pos}: {r:?}"));
+            }
+            pos = r.end;
+        }
+        if pos == n {
+            Ok(())
+        } else {
+            Err(format!("covers {pos}, want {n}"))
+        }
+    }
+
+    #[test]
+    fn tutorial_matches_paper_example() {
+        // nx=146339 over p=4 — last rank absorbs the remainder
+        let ranges = distribute_tutorial(146_339, 4);
+        assert_eq!(ranges[0], RowRange { start: 0, end: 36_584 });
+        assert_eq!(ranges[3], RowRange { start: 109_752, end: 146_339 });
+        covers_exactly(&ranges, 146_339).unwrap();
+    }
+
+    #[test]
+    fn tutorial_partition_property() {
+        quick(
+            |rng: &mut Rng| {
+                let n = rng.below(10_000) as usize;
+                let p = 1 + rng.below(64) as usize;
+                (n, p)
+            },
+            |&(n, p)| covers_exactly(&distribute_tutorial(n, p), n),
+        );
+    }
+
+    #[test]
+    fn balanced_partition_property() {
+        quick(
+            |rng: &mut Rng| {
+                let n = rng.below(10_000) as usize;
+                let p = 1 + rng.below(64) as usize;
+                (n, p)
+            },
+            |&(n, p)| {
+                let ranges = distribute_balanced(n, p);
+                covers_exactly(&ranges, n)?;
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                if mx - mn <= 1 {
+                    Ok(())
+                } else {
+                    Err(format!("imbalance {} vs {}", mn, mx))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn single_rank_gets_everything() {
+        assert_eq!(distribute_tutorial(100, 1), vec![RowRange { start: 0, end: 100 }]);
+        assert_eq!(distribute_balanced(100, 1), vec![RowRange { start: 0, end: 100 }]);
+    }
+
+    #[test]
+    fn more_ranks_than_rows() {
+        let ranges = distribute_balanced(3, 5);
+        covers_exactly(&ranges, 3).unwrap();
+        assert_eq!(ranges.iter().filter(|r| !r.is_empty()).count(), 3);
+    }
+}

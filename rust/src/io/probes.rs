@@ -1,0 +1,82 @@
+//! Probe bookkeeping: named physical locations -> dataset row indices.
+//!
+//! The paper's Step V postprocesses the ROM solution at three probe
+//! locations near the mid-channel (Sec. III.F); the repository ships a
+//! script mapping probe coordinates to grid indices. Here the mapping is
+//! provided by the solver grid (`sim::grid::Grid::probe_index`) and this
+//! module carries the resulting `(name, position, row)` set through the
+//! pipeline and postprocessing outputs.
+
+/// One probe: a label, its physical position, and the spatial row index
+/// within a single state variable (0 <= row < nx).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Probe {
+    pub name: String,
+    pub x: f64,
+    pub y: f64,
+    /// row index within one variable's (nx, nt) dataset
+    pub row: usize,
+}
+
+/// An ordered probe collection.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeSet {
+    pub probes: Vec<Probe>,
+}
+
+impl ProbeSet {
+    pub fn new() -> ProbeSet {
+        ProbeSet::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, x: f64, y: f64, row: usize) {
+        self.probes.push(Probe { name: name.into(), x, y, row });
+    }
+
+    pub fn len(&self) -> usize {
+        self.probes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.probes.is_empty()
+    }
+
+    /// Row indices in probe order.
+    pub fn rows(&self) -> Vec<usize> {
+        self.probes.iter().map(|p| p.row).collect()
+    }
+
+    /// The paper's three probe locations (Sec. III.F), scaled to an
+    /// arbitrary channel: fractions of (length, height) =
+    /// (0.40, 0.20)/(2.2, 0.41) etc. of the DFG geometry.
+    pub fn paper_fractions() -> [(f64, f64); 3] {
+        [
+            (0.40 / 2.2, 0.20 / 0.41),
+            (0.60 / 2.2, 0.20 / 0.41),
+            (1.00 / 2.2, 0.20 / 0.41),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_rows() {
+        let mut ps = ProbeSet::new();
+        ps.push("p1", 0.4, 0.2, 100);
+        ps.push("p2", 0.6, 0.2, 200);
+        assert_eq!(ps.rows(), vec![100, 200]);
+        assert_eq!(ps.len(), 2);
+        assert!(!ps.is_empty());
+    }
+
+    #[test]
+    fn paper_fractions_in_unit_square() {
+        for (fx, fy) in ProbeSet::paper_fractions() {
+            assert!((0.0..=1.0).contains(&fx));
+            assert!((0.0..=1.0).contains(&fy));
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! SNAPD: the snapshot dataset container (HDF5 stand-in, DESIGN.md §3).
+//!
+//! Layout:
+//! ```text
+//! [0..8)    magic  b"SNAPD\x01\0\0"
+//! [8..16)   header length H (u64 LE)
+//! [16..16+H) JSON header:
+//!     {"variables": [{"name": "u_x", "rows": R, "cols": C, "offset": O}, ...],
+//!      "meta": {...}}
+//! [..]      per-variable payload: rows*cols f64 LE, row-major
+//! ```
+//! Row-major `(spatial_dof, n_snapshots)` payout means a rank's row range
+//! `[start, end)` is one contiguous byte range — the independent
+//! per-rank reads of paper Step I with no shared state between readers.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::partition::RowRange;
+use crate::linalg::Matrix;
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 8] = b"SNAPD\x01\0\0";
+
+/// Dataset writer. Declares variables up-front, then streams each
+/// variable's full row-major payload.
+pub struct SnapWriter {
+    out: BufWriter<File>,
+    vars: Vec<(String, usize, usize)>,
+    written: usize,
+}
+
+impl SnapWriter {
+    /// Create the file and write the header. `vars` are
+    /// `(name, rows, cols)` in payload order; `meta` is free-form JSON.
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        vars: &[(&str, usize, usize)],
+        meta: Json,
+    ) -> Result<SnapWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut offset = 0usize;
+        let entries: Vec<Json> = vars
+            .iter()
+            .map(|(name, rows, cols)| {
+                let e = Json::obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("rows", Json::Num(*rows as f64)),
+                    ("cols", Json::Num(*cols as f64)),
+                    ("offset", Json::Num(offset as f64)),
+                ]);
+                offset += rows * cols * 8;
+                e
+            })
+            .collect();
+        let header = json::emit(&Json::obj(vec![
+            ("variables", Json::Arr(entries)),
+            ("meta", meta),
+        ]));
+        let mut out = BufWriter::new(File::create(&path)?);
+        out.write_all(MAGIC)?;
+        out.write_all(&(header.len() as u64).to_le_bytes())?;
+        out.write_all(header.as_bytes())?;
+        Ok(SnapWriter {
+            out,
+            vars: vars.iter().map(|(n, r, c)| (n.to_string(), *r, *c)).collect(),
+            written: 0,
+        })
+    }
+
+    /// Write the next variable's payload (must match declared order/shape).
+    pub fn write_variable(&mut self, name: &str, data: &Matrix) -> Result<()> {
+        let (want_name, rows, cols) = self
+            .vars
+            .get(self.written)
+            .context("more variables written than declared")?
+            .clone();
+        if want_name != name {
+            bail!("expected variable {want_name:?} next, got {name:?}");
+        }
+        if data.rows() != rows || data.cols() != cols {
+            bail!(
+                "variable {name}: declared {}x{}, got {}x{}",
+                rows,
+                cols,
+                data.rows(),
+                data.cols()
+            );
+        }
+        for v in data.data() {
+            self.out.write_all(&v.to_le_bytes())?;
+        }
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush and close; errors if any declared variable was not written.
+    pub fn finish(mut self) -> Result<()> {
+        if self.written != self.vars.len() {
+            bail!("{} of {} variables written", self.written, self.vars.len());
+        }
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Shape info for one stored variable.
+#[derive(Clone, Debug)]
+pub struct VarInfo {
+    pub rows: usize,
+    pub cols: usize,
+    offset: u64,
+}
+
+/// Dataset reader with row-range (hyperslab) access.
+pub struct SnapReader {
+    path: PathBuf,
+    payload_start: u64,
+    vars: BTreeMap<String, VarInfo>,
+    meta: Json,
+}
+
+impl SnapReader {
+    /// Open a SNAPD file and parse the header.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<SnapReader> {
+        let mut f = File::open(&path)
+            .with_context(|| format!("open {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{:?} is not a SNAPD file", path.as_ref());
+        }
+        let mut len = [0u8; 8];
+        f.read_exact(&mut len)?;
+        let header_len = u64::from_le_bytes(len) as usize;
+        let mut header = vec![0u8; header_len];
+        f.read_exact(&mut header)?;
+        let header: Json = json::parse(std::str::from_utf8(&header)?)
+            .map_err(|e| anyhow::anyhow!("bad SNAPD header: {e}"))?;
+
+        let mut vars = BTreeMap::new();
+        for v in header.get("variables").context("no variables")?.as_arr().context("bad vars")? {
+            let name = v.get("name").and_then(Json::as_str).context("var name")?;
+            vars.insert(
+                name.to_string(),
+                VarInfo {
+                    rows: v.get("rows").and_then(Json::as_usize).context("rows")?,
+                    cols: v.get("cols").and_then(Json::as_usize).context("cols")?,
+                    offset: v.get("offset").and_then(Json::as_f64).context("offset")? as u64,
+                },
+            );
+        }
+        Ok(SnapReader {
+            path: path.as_ref().to_path_buf(),
+            payload_start: 16 + header_len as u64,
+            vars,
+            meta: header.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn variables(&self) -> Vec<&str> {
+        self.vars.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn var_info(&self, name: &str) -> Result<&VarInfo> {
+        self.vars.get(name).with_context(|| format!("no variable {name:?}"))
+    }
+
+    /// Read rows `[range.start, range.end)` of `name` — one contiguous
+    /// pread per call; safe to call concurrently from many ranks (each
+    /// opens its own handle, mirroring MPI-IO independent reads).
+    pub fn read_rows(&self, name: &str, range: RowRange) -> Result<Matrix> {
+        let info = self.var_info(name)?.clone();
+        if range.end > info.rows || range.start > range.end {
+            bail!(
+                "row range {}..{} out of bounds for {name} ({} rows)",
+                range.start,
+                range.end,
+                info.rows
+            );
+        }
+        let mut f = File::open(&self.path)?;
+        let byte_start =
+            self.payload_start + info.offset + (range.start * info.cols * 8) as u64;
+        f.seek(SeekFrom::Start(byte_start))?;
+        let count = range.len() * info.cols;
+        let mut bytes = vec![0u8; count * 8];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f64> = bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Matrix::from_vec(range.len(), info.cols, data))
+    }
+
+    /// Read a whole variable.
+    pub fn read_all(&self, name: &str) -> Result<Matrix> {
+        let rows = self.var_info(name)?.rows;
+        self.read_rows(name, RowRange { start: 0, end: rows })
+    }
+
+    /// Read a single row (probe extraction).
+    pub fn read_row(&self, name: &str, row: usize) -> Result<Vec<f64>> {
+        Ok(self
+            .read_rows(name, RowRange { start: row, end: row + 1 })?
+            .into_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::partition::distribute_balanced;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dopinf_snapd_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_sample(path: &Path, rows: usize, cols: usize) -> (Matrix, Matrix) {
+        let ux = Matrix::randn(rows, cols, 1);
+        let uy = Matrix::randn(rows, cols, 2);
+        let mut w = SnapWriter::create(
+            path,
+            &[("u_x", rows, cols), ("u_y", rows, cols)],
+            Json::obj(vec![("dt", Json::Num(0.5))]),
+        )
+        .unwrap();
+        w.write_variable("u_x", &ux).unwrap();
+        w.write_variable("u_y", &uy).unwrap();
+        w.finish().unwrap();
+        (ux, uy)
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let path = tmp("roundtrip.snapd");
+        let (ux, uy) = write_sample(&path, 37, 9);
+        let r = SnapReader::open(&path).unwrap();
+        assert_eq!(r.variables(), vec!["u_x", "u_y"]);
+        assert_eq!(r.read_all("u_x").unwrap(), ux);
+        assert_eq!(r.read_all("u_y").unwrap(), uy);
+        assert_eq!(r.meta().get("dt").unwrap().as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn row_slices_reassemble() {
+        let path = tmp("slices.snapd");
+        let (ux, _) = write_sample(&path, 101, 7);
+        let r = SnapReader::open(&path).unwrap();
+        let mut rebuilt = Matrix::zeros(0, 7);
+        for range in distribute_balanced(101, 5) {
+            rebuilt = rebuilt.vstack(&r.read_rows("u_x", range).unwrap());
+        }
+        assert_eq!(rebuilt, ux);
+    }
+
+    #[test]
+    fn concurrent_rank_reads() {
+        let path = tmp("concurrent.snapd");
+        let (ux, _) = write_sample(&path, 64, 6);
+        let r = SnapReader::open(&path).unwrap();
+        let ranges = distribute_balanced(64, 4);
+        let parts: Vec<Matrix> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&range| {
+                    let r = &r;
+                    s.spawn(move || r.read_rows("u_x", range).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut rebuilt = parts[0].clone();
+        for p in &parts[1..] {
+            rebuilt = rebuilt.vstack(p);
+        }
+        assert_eq!(rebuilt, ux);
+    }
+
+    #[test]
+    fn single_row_read() {
+        let path = tmp("row.snapd");
+        let (ux, _) = write_sample(&path, 20, 5);
+        let r = SnapReader::open(&path).unwrap();
+        assert_eq!(r.read_row("u_x", 13).unwrap(), ux.row(13));
+    }
+
+    #[test]
+    fn rejects_bad_access() {
+        let path = tmp("bad.snapd");
+        write_sample(&path, 10, 4);
+        let r = SnapReader::open(&path).unwrap();
+        assert!(r.read_rows("u_x", RowRange { start: 5, end: 11 }).is_err());
+        assert!(r.read_all("nope").is_err());
+    }
+
+    #[test]
+    fn writer_enforces_declaration() {
+        let path = tmp("declare.snapd");
+        let mut w =
+            SnapWriter::create(&path, &[("a", 4, 3)], Json::Null).unwrap();
+        // wrong name
+        assert!(w.write_variable("b", &Matrix::zeros(4, 3)).is_err());
+        // wrong shape
+        assert!(w.write_variable("a", &Matrix::zeros(3, 3)).is_err());
+        w.write_variable("a", &Matrix::zeros(4, 3)).unwrap();
+        w.finish().unwrap();
+        // missing variable
+        let w2 = SnapWriter::create(&path, &[("a", 1, 1)], Json::Null).unwrap();
+        assert!(w2.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_non_snapd_file() {
+        let path = tmp("not.snapd");
+        std::fs::write(&path, b"hello world, definitely not snapd").unwrap();
+        assert!(SnapReader::open(&path).is_err());
+    }
+}

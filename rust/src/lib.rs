@@ -1,0 +1,35 @@
+//! # dOpInf — distributed Operator Inference for large-scale reduced-order modeling
+//!
+//! A production Rust + JAX + Pallas implementation of
+//! *"A parallel implementation of reduced-order modeling of large-scale
+//! systems"* (Farcaș, Gundevia, Munipalli, Willcox — AIAA 2025-1170): the
+//! dOpInf pipeline that learns small quadratic reduced-order models from
+//! tall-and-skinny snapshot matrices fully in parallel, never forming the
+//! POD basis (Gram-matrix method of snapshots, Eqs. 5–8).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: thread-rank communicator, the five
+//!   dOpInf pipeline steps, regularization grid search, scaling harness,
+//!   the 2D Navier-Stokes snapshot generator, and all substrates (dense
+//!   linear algebra, dataset I/O, CLI, benches).
+//! * **L2/L1 (python/compile, build-time only)** — JAX graphs calling
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **Runtime** — [`runtime`] loads the HLO artifacts via PJRT (`xla`
+//!   crate) and executes them from the hot path, with a native
+//!   [`linalg`] fallback for unmatched shapes.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- --help`.
+
+pub mod comm;
+pub mod coordinator;
+pub mod io;
+pub mod linalg;
+pub mod opinf;
+pub mod rom;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use coordinator::config::DOpInfConfig;
+pub use coordinator::pipeline::{run_distributed, DOpInfResult};

@@ -1,0 +1,172 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The OpInf learning step solves the regularized normal equations
+//! (paper Eq. 12, tutorial line 262): `(DᵀD + Γ²) Ôᵀ = Dᵀ Q̂₂` where the
+//! regularizer makes the system symmetric positive definite — exactly
+//! Cholesky territory. Multiple right-hand sides are solved against one
+//! factorization (r RHS columns per (β₁,β₂) candidate).
+
+use super::matrix::Matrix;
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+///
+/// Errors if the matrix is not positive definite (non-positive pivot).
+pub fn cholesky_factor(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite (pivot {sum:.3e} at {i})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A X = B` for SPD `A` via Cholesky (B may have many columns).
+pub fn cholesky_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let l = cholesky_factor(a)?;
+    Ok(solve_factored(&l, b))
+}
+
+/// Solve with a precomputed factor: forward then backward substitution.
+pub fn solve_factored(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "rhs rows mismatch");
+    let m = b.cols();
+    let mut x = b.clone();
+    // forward: L y = b
+    for i in 0..n {
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik != 0.0 {
+                for c in 0..m {
+                    let v = lik * x[(k, c)];
+                    x[(i, c)] -= v;
+                }
+            }
+        }
+        let d = l[(i, i)];
+        for c in 0..m {
+            x[(i, c)] /= d;
+        }
+    }
+    // backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let lki = l[(k, i)];
+            if lki != 0.0 {
+                for c in 0..m {
+                    let v = lki * x[(k, c)];
+                    x[(i, c)] -= v;
+                }
+            }
+        }
+        let d = l[(i, i)];
+        for c in 0..m {
+            x[(i, c)] /= d;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk};
+    use crate::util::propcheck::{all_close, check, Config};
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        // AᵀA + I is SPD
+        let a = Matrix::randn(n + 3, n, seed);
+        let mut s = syrk(&a);
+        for i in 0..n {
+            s[(i, i)] += 1.0;
+        }
+        s
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(12, 5);
+        let l = cholesky_factor(&a).unwrap();
+        let rec = matmul(&l, &l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-10);
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let l = cholesky_factor(&random_spd(8, 2)).unwrap();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_known() {
+        let a = Matrix::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let b = Matrix::from_rows(&[&[2.0], &[1.0]]);
+        let x = cholesky_solve(&a, &b).unwrap();
+        // solution of [[4,2],[2,3]] x = [2,1]: x = [0.5, 0]
+        assert!((x[(0, 0)] - 0.5).abs() < 1e-14);
+        assert!(x[(1, 0)].abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_residual_property() {
+        check(
+            Config { cases: 32, seed: 4 },
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(25) as usize;
+                let m = 1 + rng.below(6) as usize;
+                (random_spd(n, rng.next_u64()), Matrix::randn(n, m, rng.next_u64()))
+            },
+            |(a, b)| {
+                let x = cholesky_solve(a, b).map_err(|e| e.to_string())?;
+                let ax = matmul(a, &x);
+                all_close(ax.data(), b.data(), 1e-8, 1e-8)
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_err());
+    }
+
+    #[test]
+    fn regularized_normal_equations_shape() {
+        // the exact system OpInf solves: (DᵀD + β I) X = Dᵀ Q2
+        let k = 40;
+        let d = 12;
+        let r = 4;
+        let dhat = Matrix::randn(k, d, 8);
+        let q2 = Matrix::randn(k, r, 9);
+        let mut dtd = syrk(&dhat);
+        for i in 0..d {
+            dtd[(i, i)] += 1e-6;
+        }
+        let rhs = crate::linalg::gemm::matmul_tn(&dhat, &q2);
+        let x = cholesky_solve(&dtd, &rhs).unwrap();
+        assert_eq!((x.rows(), x.cols()), (d, r));
+        let res = matmul(&dtd, &x);
+        assert!(res.max_abs_diff(&rhs) < 1e-7);
+    }
+}

@@ -1,0 +1,408 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (`tred2`)
+//! + implicit-shift QL iteration (`tql2`).
+//!
+//! A faithful port of the classical EISPACK pair (via the public-domain
+//! JAMA translation) that LAPACK's `dsyev` — and hence
+//! `numpy.linalg.eigh`, which the paper's tutorial calls at line 83 —
+//! descends from. dOpInf applies it to the nt×nt global Gram matrix `D`,
+//! whose eigenvalues are the squared singular values of the snapshot
+//! matrix and whose eigenvectors are its right singular vectors
+//! (paper Eq. 6).
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition result: `a == vectors * diag(values) * vectorsᵀ`.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    /// Eigenvalues in **ascending** order (`numpy.linalg.eigh`
+    /// convention; `opinf::podgram` then re-sorts descending like the
+    /// tutorial's `argsort(eigs)[::-1]`).
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors as **columns**, matching `values` order.
+    pub vectors: Matrix,
+}
+
+/// Compute all eigenpairs of a symmetric matrix.
+///
+/// Panics if `a` is not square. Symmetry is assumed; callers with
+/// roundoff-asymmetric inputs should symmetrize first. O(n³) — fine for
+/// the nt×nt Gram matrices this pipeline produces (nt ≲ a few thousand).
+pub fn eigh(a: &Matrix) -> Eigh {
+    assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return Eigh { values: vec![], vectors: Matrix::zeros(0, 0) };
+    }
+    let mut v = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+    Eigh { values: d, vectors: v }
+}
+
+/// Householder reduction of `v` (symmetric) to tridiagonal form,
+/// accumulating the orthogonal transformation in `v`.
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = v.rows();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+
+    for i in (1..n).rev() {
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for dk in d.iter().take(i) {
+            scale += dk.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            // generate the Householder vector
+            for dk in d.iter_mut().take(i) {
+                *dk /= scale;
+                h += *dk * *dk;
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for ej in e.iter_mut().take(i) {
+                *ej = 0.0;
+            }
+
+            // apply the similarity transformation to the trailing block
+            for j in 0..i {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..i {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    let delta = f * e[k] + g * d[k];
+                    v[(k, j)] -= delta;
+                }
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+
+    // accumulate transformations
+    for i in 0..n.saturating_sub(1) {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    let dk = d[k];
+                    v[(k, j)] -= g * dk;
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL iteration on the tridiagonal (d, e), rotating the
+/// accumulated transformation in `v` into the eigenvector matrix. Sorts
+/// eigenpairs ascending on exit.
+///
+/// Perf (EXPERIMENTS.md §Perf iter. 5): the Givens rotations touch two
+/// *columns* of V per sweep — stride-n access. We therefore work on the
+/// transpose (columns stored as contiguous rows) and transpose back at
+/// the end; the two O(n²) transposes are noise next to the O(n³)
+/// rotation traffic.
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = v.rows();
+    let mut vt = v.transpose();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = 2.0f64.powi(-52);
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter < 100, "tql2 failed to converge at l={l}");
+
+                // form the implicit shift
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for di in d.iter_mut().take(n).skip(l + 2) {
+                    *di -= h;
+                }
+                f += h;
+
+                // implicit QL sweep
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+
+                    // rotate eigenvectors: rows i and i+1 of the
+                    // transpose are contiguous slices
+                    {
+                        let (head, tail) = vt.data_mut().split_at_mut((i + 1) * n);
+                        let row_i = &mut head[i * n..];
+                        let row_i1 = &mut tail[..n];
+                        for (vi, vi1) in row_i.iter_mut().zip(row_i1.iter_mut()) {
+                            let hh = *vi1;
+                            *vi1 = s * *vi + c * hh;
+                            *vi = c * *vi - s * hh;
+                        }
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // selection-sort eigenpairs ascending (column swap = row swap on vt)
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for col in 0..n {
+                let a = vt[(i, col)];
+                vt[(i, col)] = vt[(k, col)];
+                vt[(k, col)] = a;
+            }
+        }
+    }
+    *v = vt.transpose();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn, syrk};
+    use crate::util::propcheck::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn reconstruct(eig: &Eigh) -> Matrix {
+        // V diag(d) Vᵀ
+        let n = eig.values.len();
+        let mut vd = eig.vectors.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vd[(i, j)] *= eig.values[j];
+            }
+        }
+        matmul(&vd, &eig.vectors.transpose())
+    }
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let a = Matrix::randn(n, n, seed);
+        let mut s = a.clone();
+        s.axpy(1.0, &a.transpose());
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let eig = eigh(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-14);
+        assert!((eig.values[1] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let eig = eigh(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-13);
+        assert!((eig.values[1] - 3.0).abs() < 1e-13);
+        // eigenvector for 3 is (1,1)/sqrt(2) up to sign
+        let v = eig.vectors.col(1);
+        assert!((v[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        assert!((v[0] - v[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        check(
+            Config { cases: 24, seed: 77 },
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(30) as usize;
+                random_symmetric(n, rng.next_u64())
+            },
+            |a| {
+                let eig = eigh(a);
+                let rec = reconstruct(&eig);
+                let err = a.max_abs_diff(&rec);
+                if err < 1e-9 * (1.0 + a.fro_norm()) {
+                    Ok(())
+                } else {
+                    Err(format!("reconstruction error {err:.3e}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(25, 9);
+        let eig = eigh(&a);
+        let vtv = matmul_tn(&eig.vectors, &eig.vectors);
+        assert!(vtv.max_abs_diff(&Matrix::eye(25)) < 1e-11);
+    }
+
+    #[test]
+    fn values_sorted_ascending() {
+        let a = random_symmetric(40, 11);
+        let eig = eigh(&a);
+        for w in eig.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-14);
+        }
+    }
+
+    #[test]
+    fn gram_matrix_eigs_match_squared_singular_values() {
+        // paper Eq. 6: eig(QᵀQ) = σ², checked against a matrix with
+        // known singular values (diag padded into a tall matrix, rotated)
+        let nt = 12;
+        let mut q = Matrix::zeros(50, nt);
+        let sv: Vec<f64> = (1..=nt).map(|i| i as f64).collect();
+        for (j, s) in sv.iter().enumerate() {
+            q[(j, j)] = *s;
+        }
+        // rotate rows by a random orthogonal transform built via QR-less
+        // Householder: use eigenvectors of a random symmetric matrix.
+        let rot = eigh(&random_symmetric(50, 3)).vectors;
+        let qrot = matmul(&rot, &q);
+        let eig = eigh(&syrk(&qrot));
+        let mut got: Vec<f64> = eig.values.iter().rev().take(nt).copied().collect();
+        got.reverse();
+        for (g, s) in got.iter().zip(sv.iter()) {
+            assert!((g - s * s).abs() < 1e-8 * s * s, "{g} vs {}", s * s);
+        }
+    }
+
+    #[test]
+    fn handles_zero_and_identity() {
+        let z = Matrix::zeros(5, 5);
+        let eig = eigh(&z);
+        assert!(eig.values.iter().all(|v| v.abs() < 1e-15));
+        let eig = eigh(&Matrix::eye(6));
+        assert!(eig.values.iter().all(|v| (v - 1.0).abs() < 1e-14));
+    }
+
+    #[test]
+    fn clustered_eigenvalues_converge() {
+        // nearly-degenerate spectrum is the classic QL stress case
+        let mut a = Matrix::eye(20);
+        a[(3, 4)] = 1e-10;
+        a[(4, 3)] = 1e-10;
+        let eig = eigh(&a);
+        assert_eq!(eig.values.len(), 20);
+        for v in &eig.values {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn psd_gram_eigs_nonnegative() {
+        let q = Matrix::randn(80, 15, 21);
+        let eig = eigh(&syrk(&q));
+        for v in &eig.values {
+            assert!(*v > -1e-9, "negative eigenvalue {v}");
+        }
+    }
+}

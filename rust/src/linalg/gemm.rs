@@ -1,0 +1,243 @@
+//! Blocked dense matrix products.
+//!
+//! The native analogue of the L1 Pallas kernels (`gram.py`, `matmul.py`):
+//! used as the runtime fallback when no PJRT artifact matches the
+//! requested shape, and by all substrates. Cache-blocked with an
+//! `i-k-j` inner ordering so the innermost loop is a contiguous
+//! axpy over the output row — the standard scalar-GEMM layout that
+//! autovectorizes well.
+
+use super::matrix::Matrix;
+
+/// Cache block edge (elements). 64×64 f64 tiles = 32 KiB per operand
+/// pair, comfortably inside L1+L2 on any target this runs on.
+const BLOCK: usize = 64;
+
+/// `C = A @ B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions differ");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &ad[i * k..(i + 1) * k];
+                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[kk * n + j0..kk * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ @ B` without materializing the transpose.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "leading dimensions differ");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    // Stream over the shared (tall) dimension: one pass over A and B.
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for (i, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Symmetric rank-k update `D = Aᵀ A` (the Gram hot-spot, paper Eq. 5).
+///
+/// Computes only the upper triangle then mirrors — ~2× fewer flops than
+/// `matmul_tn(a, a)`; this is the native fallback for the Pallas `gram`
+/// kernel and must match it to machine precision.
+///
+/// Perf (EXPERIMENTS.md §Perf iter. 4): processes **four** A-rows per
+/// sweep of D (rank-4 update). D is n² ≈ 2.9 MB at nt = 600 — far
+/// beyond L1/L2 — so the D write traffic, not FLOPs, bounds this loop;
+/// the rank-4 fusion quarters it.
+pub fn syrk(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows(), a.cols());
+    let mut d = Matrix::zeros(n, n);
+    let ad = a.data();
+    let dd = d.data_mut();
+
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let (r0, rest) = ad[kk * n..].split_at(n);
+        let (r1, rest) = rest.split_at(n);
+        let (r2, rest) = rest.split_at(n);
+        let r3 = &rest[..n];
+        for i in 0..n {
+            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let drow = &mut dd[i * n + i..(i + 1) * n];
+            for (j, dv) in drow.iter_mut().enumerate() {
+                let jj = i + j;
+                *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
+            }
+        }
+        kk += 4;
+    }
+    // remainder rows
+    for kk in kk..k {
+        let row = &ad[kk * n..(kk + 1) * n];
+        for i in 0..n {
+            let ai = row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let drow = &mut dd[i * n..(i + 1) * n];
+            for j in i..n {
+                drow[j] += ai * row[j];
+            }
+        }
+    }
+    // mirror upper -> lower
+    for i in 0..n {
+        for j in (i + 1)..n {
+            dd[j * n + i] = dd[i * n + j];
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{all_close, quick};
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        quick(
+            |rng: &mut Rng| {
+                let m = 1 + rng.below(40) as usize;
+                let k = 1 + rng.below(40) as usize;
+                let n = 1 + rng.below(40) as usize;
+                (Matrix::randn(m, k, rng.next_u64()), Matrix::randn(k, n, rng.next_u64()))
+            },
+            |(a, b)| {
+                all_close(matmul(a, b).data(), naive_matmul(a, b).data(), 1e-12, 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_blocked_boundaries() {
+        // sizes straddling the 64 block edge
+        for &(m, k, n) in &[(63, 64, 65), (64, 64, 64), (65, 130, 1), (1, 1, 200)] {
+            let a = Matrix::randn(m, k, 5);
+            let b = Matrix::randn(k, n, 6);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-10, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_path() {
+        quick(
+            |rng: &mut Rng| {
+                let k = 1 + rng.below(60) as usize;
+                let m = 1 + rng.below(30) as usize;
+                let n = 1 + rng.below(30) as usize;
+                (Matrix::randn(k, m, rng.next_u64()), Matrix::randn(k, n, rng.next_u64()))
+            },
+            |(a, b)| {
+                all_close(
+                    matmul_tn(a, b).data(),
+                    matmul(&a.transpose(), b).data(),
+                    1e-12,
+                    1e-12,
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn syrk_matches_matmul_tn() {
+        quick(
+            |rng: &mut Rng| {
+                let k = 1 + rng.below(80) as usize;
+                let n = 1 + rng.below(40) as usize;
+                Matrix::randn(k, n, rng.next_u64())
+            },
+            |a| all_close(syrk(a).data(), matmul_tn(a, a).data(), 1e-12, 1e-12),
+        );
+    }
+
+    #[test]
+    fn syrk_is_symmetric_psd() {
+        let a = Matrix::randn(100, 17, 3);
+        let d = syrk(&a);
+        assert_eq!(d.symmetry_defect(), 0.0);
+        // xᵀDx = |Ax|² >= 0 for random x
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let x = rng.normal_vec(17);
+            let dx = d.matvec(&x);
+            let q: f64 = x.iter().zip(&dx).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-10);
+        }
+    }
+
+    #[test]
+    fn gram_additivity() {
+        // syrk(vstack(a,b)) == syrk(a) + syrk(b): the Allreduce identity
+        let a = Matrix::randn(30, 8, 7);
+        let b = Matrix::randn(50, 8, 8);
+        let full = a.vstack(&b);
+        let mut sum = syrk(&a);
+        sum.axpy(1.0, &syrk(&b));
+        assert!(syrk(&full).max_abs_diff(&sum) < 1e-12);
+    }
+}

@@ -1,0 +1,27 @@
+//! Dense numerical linear algebra substrate.
+//!
+//! The paper leans on "standard dense numerical linear algebra
+//! operations ... efficiently implemented in most scientific computing
+//! libraries" (numpy/BLAS/LAPACK). None are available in the vendored
+//! crate set, so this module implements them from scratch:
+//!
+//! * [`matrix::Matrix`] — row-major f64 dense matrix
+//! * [`gemm`] — blocked matrix-matrix products (`matmul`, `syrk` AᵀA)
+//! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonal +
+//!   implicit-shift QL, the EISPACK `tred2`/`tql2` pair — what LAPACK
+//!   `dsyev` descends from and what `numpy.linalg.eigh` calls)
+//! * [`cholesky`] — SPD factorization/solve for the regularized OpInf
+//!   normal equations (paper Eq. 12)
+//!
+//! Everything is validated against the JAX/numpy oracles through the
+//! PJRT artifacts in the integration tests.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod gemm;
+pub mod matrix;
+
+pub use cholesky::{cholesky_factor, cholesky_solve};
+pub use eigh::eigh;
+pub use gemm::{matmul, matmul_tn, syrk};
+pub use matrix::Matrix;

@@ -1,0 +1,381 @@
+//! dopinf — distributed Operator Inference CLI.
+//!
+//! Subcommands:
+//!   simulate   run the 2D Navier–Stokes solver and write a dataset
+//!   train      run the distributed dOpInf pipeline on a dataset
+//!   scaling    strong-scaling study (paper Fig. 4)
+//!   probes     print probe row indices for a grid geometry
+//!   artifacts  list loaded PJRT artifacts
+//!
+//! Examples:
+//!   dopinf simulate --geometry cylinder --grid 192x36 --out data/cyl.snapd
+//!   dopinf train --data data/cyl.snapd --procs 8 --artifacts artifacts
+//!   dopinf scaling --data data/cyl.snapd --procs-list 1,2,4,8 --repeats 10
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::coordinator::scaling::strong_scaling;
+use dopinf::io::snapd::SnapReader;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::runtime::Manifest;
+use dopinf::sim::driver::{run_to_dataset, SimConfig};
+use dopinf::sim::{Geometry, Grid};
+use dopinf::util::cli::{usage, Args, OptSpec};
+use dopinf::util::csvout::CsvWriter;
+use dopinf::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "train" => cmd_train(rest),
+        "scaling" => cmd_scaling(rest),
+        "probes" => cmd_probes(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `dopinf help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "dopinf — distributed Operator Inference (AIAA 2025-1170 reproduction)\n\n\
+         Commands:\n\
+           simulate   run the 2D Navier-Stokes solver, write a SNAPD dataset\n\
+           train      run the distributed dOpInf pipeline\n\
+           scaling    strong-scaling study (Fig. 4)\n\
+           probes     print probe row indices for a geometry/grid\n\
+           artifacts  list PJRT artifacts from a manifest\n\n\
+         Run `dopinf <command> --help` for options."
+    );
+}
+
+fn parse_grid(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s.split_once('x').context("grid must look like 192x36")?;
+    Ok((a.parse()?, b.parse()?))
+}
+
+fn parse_geometry(s: &str) -> Result<Geometry> {
+    Ok(match s {
+        "cylinder" => Geometry::Cylinder,
+        "step" => Geometry::Step,
+        "channel" => Geometry::Channel,
+        other => bail!("unknown geometry {other:?} (cylinder|step|channel)"),
+    })
+}
+
+// ---------------------------------------------------------------- simulate
+
+fn cmd_simulate(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "geometry", help: "cylinder | step | channel", default: Some("cylinder"), is_flag: false },
+        OptSpec { name: "grid", help: "NXxNY cells", default: Some("192x36"), is_flag: false },
+        OptSpec { name: "out", help: "output SNAPD path", default: Some("data/flow.snapd"), is_flag: false },
+        OptSpec { name: "t-end", help: "simulation end time (s)", default: None, is_flag: false },
+        OptSpec { name: "t-sample", help: "sampling start time (s)", default: None, is_flag: false },
+        OptSpec { name: "sample-every", help: "seconds between snapshots", default: None, is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("simulate", "Run the flow solver and write a training dataset", &specs));
+        return Ok(());
+    }
+    let (nx, ny) = parse_grid(a.get_or("grid", "192x36"))?;
+    let geometry = parse_geometry(a.get_or("geometry", "cylinder"))?;
+    let mut cfg = match geometry {
+        Geometry::Step => SimConfig::step(nx, ny),
+        _ => SimConfig { geometry, ..SimConfig::cylinder(nx, ny) },
+    };
+    if let Some(v) = a.get("t-end") {
+        cfg.t_end = v.parse()?;
+    }
+    if let Some(v) = a.get("t-sample") {
+        cfg.t_sample = v.parse()?;
+    }
+    if let Some(v) = a.get("sample-every") {
+        cfg.sample_every = v.parse()?;
+    }
+    let out = a.get_or("out", "data/flow.snapd");
+    eprintln!("simulating {geometry:?} on {nx}x{ny} -> {out}");
+    let info = run_to_dataset(&cfg, out)?;
+    println!(
+        "wrote {out}: {} cells x {} snapshots ({} solver steps), probes at rows {:?}",
+        info.cells, info.n_samples, info.steps, info.probe_rows
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------- train
+
+fn train_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "data", help: "SNAPD dataset path", default: None, is_flag: false },
+        OptSpec { name: "procs", help: "number of ranks p", default: Some("4"), is_flag: false },
+        OptSpec { name: "energy", help: "retained-energy target", default: Some("0.9996"), is_flag: false },
+        OptSpec { name: "r", help: "override reduced dimension", default: None, is_flag: false },
+        OptSpec { name: "train-frac", help: "fraction of snapshots used for training", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "scaling", help: "apply max-abs variable scaling", default: None, is_flag: true },
+        OptSpec { name: "artifacts", help: "PJRT artifacts dir (omit for native)", default: None, is_flag: false },
+        OptSpec { name: "results", help: "results output dir", default: Some("results"), is_flag: false },
+        OptSpec { name: "grid-size", help: "reg grid: coarse | paper", default: Some("paper"), is_flag: false },
+        OptSpec { name: "max-growth", help: "growth-ratio bound", default: Some("1.2"), is_flag: false },
+        OptSpec { name: "procs-list", help: "(scaling) comma-separated p values", default: Some("1,2,4,8"), is_flag: false },
+        OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ]
+}
+
+/// Build the training configuration + data source from CLI options.
+fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, usize)> {
+    let data = a.get("data").context("--data is required")?;
+    let reader = SnapReader::open(data)?;
+    let vars: Vec<String> = reader.variables().iter().map(|s| s.to_string()).collect();
+    let ns = vars.len();
+    let nt_total = reader.var_info(&vars[0])?.cols;
+    let train_frac: f64 = a.get_parse("train-frac", 0.5)?;
+    let nt_train = ((nt_total as f64 * train_frac).round() as usize).clamp(2, nt_total);
+
+    // probe rows from metadata (written by `dopinf simulate`)
+    let probe_rows: Vec<usize> = reader
+        .meta()
+        .get("probe_rows")
+        .and_then(Json::as_arr)
+        .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default();
+
+    let grid = match a.get_or("grid-size", "paper") {
+        "coarse" => RegGrid::coarse(),
+        _ => RegGrid::paper_default(),
+    };
+    let opinf = OpInfConfig {
+        ns,
+        energy_target: a.get_parse("energy", 0.9996)?,
+        r_override: a.get("r").map(|v| v.parse()).transpose()?,
+        scaling: a.flag("scaling"),
+        grid,
+        max_growth: a.get_parse("max-growth", 1.2)?,
+        nt_p: nt_total,
+    };
+    let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
+    cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
+    // probes on both velocity variables
+    for &row in &probe_rows {
+        for var in 0..ns {
+            cfg.probes.push((var, row));
+        }
+    }
+    let source = DataSource::File { path: PathBuf::from(data), variables: vars };
+    Ok((cfg, source, probe_rows, nt_train))
+}
+
+/// Restrict a file-backed source to the first `nt_train` snapshots
+/// (training over [t_init, t_train], prediction beyond).
+fn training_source(source: &DataSource, nt_train: usize) -> Result<DataSource> {
+    match source {
+        DataSource::File { path, variables } => {
+            let reader = SnapReader::open(path)?;
+            let mut stacked: Option<dopinf::linalg::Matrix> = None;
+            for v in variables {
+                let m = reader.read_all(v)?.slice_cols(0, nt_train);
+                stacked = Some(match stacked {
+                    None => m,
+                    Some(s) => s.vstack(&m),
+                });
+            }
+            Ok(DataSource::InMemory(std::sync::Arc::new(stacked.context("no vars")?)))
+        }
+        s => Ok(s.clone()),
+    }
+}
+
+fn cmd_train(tokens: &[String]) -> Result<()> {
+    let specs = train_specs();
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("train", "Run the distributed dOpInf pipeline", &specs));
+        return Ok(());
+    }
+    let (cfg, source, probe_rows, nt_train) = build_train_setup(&a)?;
+    let train_src = training_source(&source, nt_train)?;
+    eprintln!(
+        "training: p={} nt_train={nt_train} nt_p={} energy={} artifacts={:?}",
+        cfg.p, cfg.opinf.nt_p, cfg.opinf.energy_target, cfg.artifacts_dir
+    );
+    let result = run_distributed(&cfg, &train_src)?;
+
+    println!("reduced dimension r = {}", result.r);
+    println!(
+        "optimal pair (beta1, beta2) = ({:.4e}, {:.4e}) on rank {}",
+        result.opt_pair.0, result.opt_pair.1, result.winner_rank
+    );
+    println!("training error = {:.4e}", result.train_err);
+    println!("ROM rollout time = {:.4} s for {} steps", result.rom_time, result.qtilde.cols());
+    let b = result.timing.breakdown();
+    println!(
+        "virtual time = {:.4} s (load {:.4}, compute {:.4}, comm {:.4}, learn {:.4}, post {:.4})",
+        b.total, b.load, b.compute, b.comm, b.learn, b.post
+    );
+
+    // persist outputs
+    let results_dir = PathBuf::from(a.get_or("results", "results"));
+    std::fs::create_dir_all(&results_dir)?;
+    let mut spectrum = CsvWriter::create(
+        results_dir.join("spectrum.csv"),
+        &["k", "eigenvalue", "retained_energy"],
+    )?;
+    for (k, (e, re)) in result.eigs.iter().zip(&result.retained_energy).enumerate() {
+        spectrum.row(&[(k + 1) as f64, *e, *re])?;
+    }
+    spectrum.finish()?;
+    for pred in &result.probes {
+        let name = format!("dOpInf_probe_row{}_var{}.npy", pred.row, pred.var);
+        dopinf::util::npy::write_f64(
+            results_dir.join(&name),
+            &[pred.values.len()],
+            &pred.values,
+        )?;
+    }
+    if !result.probes.is_empty() {
+        println!("wrote {} probe predictions for rows {probe_rows:?}", result.probes.len());
+    }
+    println!("results in {}", results_dir.display());
+    Ok(())
+}
+
+// ----------------------------------------------------------------- scaling
+
+fn cmd_scaling(tokens: &[String]) -> Result<()> {
+    let specs = train_specs();
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("scaling", "Strong-scaling study (Fig. 4)", &specs));
+        return Ok(());
+    }
+    let (cfg, source, _, nt_train) = build_train_setup(&a)?;
+    let train_src = training_source(&source, nt_train)?;
+    let procs = a.get_list::<usize>("procs-list", &[1, 2, 4, 8])?;
+    let repeats = a.get_parse("repeats", 10)?;
+
+    let rows = strong_scaling(&cfg, &train_src, &procs, repeats)?;
+    println!(
+        "{:>4} {:>12} {:>12} {:>9}  breakdown (load/compute/comm/learn/post)",
+        "p", "mean [s]", "std [s]", "speedup"
+    );
+    let results_dir = PathBuf::from(a.get_or("results", "results"));
+    let mut csv = CsvWriter::create(
+        results_dir.join("scaling.csv"),
+        &["p", "mean_s", "std_s", "speedup", "load", "compute", "comm", "learn", "post"],
+    )?;
+    for row in &rows {
+        let b = &row.breakdown;
+        println!(
+            "{:>4} {:>12.5} {:>12.5} {:>9.3}  {:.4}/{:.4}/{:.4}/{:.4}/{:.4}",
+            row.p, row.mean_s, row.std_s, row.speedup, b.load, b.compute, b.comm, b.learn, b.post
+        );
+        csv.row(&[
+            row.p as f64, row.mean_s, row.std_s, row.speedup, b.load, b.compute, b.comm, b.learn,
+            b.post,
+        ])?;
+    }
+    csv.finish()?;
+    println!("wrote {}/scaling.csv", results_dir.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------ probes
+
+fn cmd_probes(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "geometry", help: "cylinder | step | channel", default: Some("cylinder"), is_flag: false },
+        OptSpec { name: "grid", help: "NXxNY cells", default: Some("192x36"), is_flag: false },
+        OptSpec { name: "at", help: "comma-separated x:y pairs (defaults to the paper's probes)", default: None, is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("probes", "Map probe locations to dataset rows", &specs));
+        return Ok(());
+    }
+    let (nx, ny) = parse_grid(a.get_or("grid", "192x36"))?;
+    let geometry = parse_geometry(a.get_or("geometry", "cylinder"))?;
+    let (lx, ly) = match geometry {
+        Geometry::Cylinder => (2.2, 0.41),
+        Geometry::Step => (4.0, 1.0),
+        Geometry::Channel => (2.0, 1.0),
+    };
+    let grid = Grid::new(geometry, nx, ny, lx, ly);
+    let locations: Vec<(f64, f64)> = match a.get("at") {
+        Some(spec) => spec
+            .split(',')
+            .map(|pair| -> Result<(f64, f64)> {
+                let (x, y) = pair.split_once(':').context("use x:y")?;
+                Ok((x.trim().parse()?, y.trim().parse()?))
+            })
+            .collect::<Result<_>>()?,
+        None => dopinf::io::probes::ProbeSet::paper_fractions()
+            .iter()
+            .map(|(fx, fy)| (fx * lx, fy * ly))
+            .collect(),
+    };
+    for (x, y) in locations {
+        println!("({x:.4}, {y:.4}) -> row {}", grid.probe_index(x, y));
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- artifacts
+
+fn cmd_artifacts(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "dir", help: "artifacts directory", default: Some("artifacts"), is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("artifacts", "List PJRT artifacts", &specs));
+        return Ok(());
+    }
+    let dir = PathBuf::from(a.get_or("dir", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    if manifest.entries.is_empty() {
+        println!("no artifacts in {} (run `make artifacts`)", dir.display());
+        return Ok(());
+    }
+    println!("{:<16} {:<8} {:<28} inputs -> outputs", "entry", "profile", "file");
+    for e in &manifest.entries {
+        println!(
+            "{:<16} {:<8} {:<28} {:?} -> {:?}",
+            e.name,
+            e.profile,
+            e.path.file_name().unwrap_or_default().to_string_lossy(),
+            e.inputs,
+            e.outputs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! The dOpInf algorithm as a library (paper Sec. III).
+//!
+//! Functions here operate on *local* (per-rank) data blocks plus the few
+//! small replicated matrices; the [`crate::coordinator`] wires them to
+//! the communicator. This separation lets the serial reference
+//! implementation ([`serial`]) share the exact same numerics — the
+//! serial-vs-distributed equivalence test is the core correctness signal
+//! of the whole pipeline.
+//!
+//! * [`transform`]   — Step II: centering + max-abs scaling
+//! * [`podgram`]     — Step III: Gram-based dimensionality reduction
+//!   (Eqs. 5–8: D, eigh, T_r, Q̂ = T_rᵀD — no POD basis formed)
+//! * [`learn`]       — Step IV: discrete OpInf least squares (Eq. 12)
+//! * [`postprocess`] — Step V: probe lifting via V_{r,i} = Q_i T_r
+//! * [`serial`]      — the paper's serial OpInf reference (p = 1 baseline)
+//! * [`streaming`]   — extension: batch-streamed Gram accumulation
+//!   (paper §I cites streaming POD [15, 16])
+
+pub mod learn;
+pub mod podgram;
+pub mod postprocess;
+pub mod serial;
+pub mod streaming;
+pub mod transform;

@@ -1,0 +1,183 @@
+//! Step III: Gram-matrix dimensionality reduction (paper Eqs. 5–8).
+//!
+//! The heart of dOpInf's scalability: the rank-r POD *representation* of
+//! the data is computed from two small nt×nt matrices without ever
+//! forming the m×r POD basis —
+//!
+//! ```text
+//!   D = Σᵢ QᵢᵀQᵢ          (local SYRK + Allreduce)
+//!   D W = W Σ²            (replicated nt×nt eigendecomposition)
+//!   T_r = U_r Λ_r^{-1/2}
+//!   Q̂  = T_rᵀ D          (Eq. 8)
+//! ```
+
+use crate::linalg::{eigh, matmul_tn, Matrix};
+
+/// Spectral summary of the global Gram matrix.
+#[derive(Clone, Debug)]
+pub struct GramSpectrum {
+    /// eigenvalues of D sorted **descending** (= squared singular values
+    /// of the snapshot matrix, Eq. 6)
+    pub eigs: Vec<f64>,
+    /// eigenvectors as columns, matching `eigs` order
+    pub eigv: Matrix,
+}
+
+impl GramSpectrum {
+    /// Eigendecompose the (symmetric PSD) global Gram matrix and sort
+    /// descending — tutorial lines 83–87.
+    pub fn from_gram(d_global: &Matrix) -> GramSpectrum {
+        let e = eigh(d_global);
+        let n = e.values.len();
+        // ascending -> descending
+        let eigs: Vec<f64> = e.values.iter().rev().copied().collect();
+        let mut eigv = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                eigv[(i, j)] = e.vectors[(i, n - 1 - j)];
+            }
+        }
+        GramSpectrum { eigs, eigv }
+    }
+
+    /// Cumulative retained-energy curve `Σ_{k≤r} λ_k / Σ_k λ_k`
+    /// (Fig. 2 right panel; Eq. 9 with λ = σ²).
+    pub fn retained_energy(&self) -> Vec<f64> {
+        let total: f64 = self.eigs.iter().sum();
+        let mut acc = 0.0;
+        self.eigs
+            .iter()
+            .map(|&l| {
+                acc += l;
+                if total > 0.0 {
+                    acc / total
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Normalized singular values `σ_k / σ_1` (Fig. 2 left panel).
+    pub fn normalized_singular_values(&self) -> Vec<f64> {
+        let s1 = self.eigs.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+        self.eigs
+            .iter()
+            .map(|&l| if s1 > 0.0 { l.max(0.0).sqrt() / s1 } else { 0.0 })
+            .collect()
+    }
+
+    /// Smallest r whose retained energy exceeds `target` — tutorial
+    /// line 95 (`np.argmax(ret_energy > target) + 1`).
+    pub fn choose_r(&self, target: f64) -> usize {
+        let energy = self.retained_energy();
+        energy
+            .iter()
+            .position(|&e| e > target)
+            .map(|p| p + 1)
+            .unwrap_or(self.eigs.len())
+    }
+
+    /// `T_r = U_r Λ_r^{-1/2}` (nt, r) — tutorial line 98. Guards tiny /
+    /// negative (roundoff) eigenvalues.
+    pub fn tr(&self, r: usize) -> Matrix {
+        let nt = self.eigs.len();
+        assert!(r >= 1 && r <= nt, "invalid reduced dimension {r}");
+        let mut tr = Matrix::zeros(nt, r);
+        for j in 0..r {
+            let lam = self.eigs[j];
+            assert!(lam > 0.0, "eigenvalue {j} is {lam}; r too large for data rank");
+            let inv_sqrt = 1.0 / lam.sqrt();
+            for i in 0..nt {
+                tr[(i, j)] = self.eigv[(i, j)] * inv_sqrt;
+            }
+        }
+        tr
+    }
+}
+
+/// `Q̂ = T_rᵀ D` (r, nt) — tutorial line 100.
+pub fn project(tr: &Matrix, d_global: &Matrix) -> Matrix {
+    matmul_tn(tr, d_global)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, syrk};
+
+    fn low_rank_snapshots(m: usize, nt: usize, rank: usize, seed: u64) -> Matrix {
+        let a = Matrix::randn(m, rank, seed);
+        let b = Matrix::randn(rank, nt, seed + 1);
+        matmul(&a, &b)
+    }
+
+    #[test]
+    fn eigs_sorted_descending() {
+        let q = Matrix::randn(60, 12, 1);
+        let spec = GramSpectrum::from_gram(&syrk(&q));
+        for w in spec.eigs.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn energy_curve_monotone_to_one() {
+        let q = Matrix::randn(50, 10, 2);
+        let spec = GramSpectrum::from_gram(&syrk(&q));
+        let e = spec.retained_energy();
+        assert!(e.windows(2).all(|w| w[1] >= w[0] - 1e-15));
+        assert!((e.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn choose_r_detects_exact_rank() {
+        let q = low_rank_snapshots(80, 20, 4, 3);
+        let spec = GramSpectrum::from_gram(&syrk(&q));
+        assert_eq!(spec.choose_r(0.999_999_9), 4);
+    }
+
+    #[test]
+    fn projection_matches_pod_projection() {
+        // Q̂ = T_rᵀD must equal V_rᵀQ with V_r = Q T_r (Eq. 7/8)
+        let q = Matrix::randn(70, 15, 4);
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let r = 6;
+        let tr = spec.tr(r);
+        let qhat = project(&tr, &d);
+        let vr = matmul(&q, &tr); // (m, r)
+        let want = matmul_tn(&vr, &q); // V_rᵀ Q
+        assert!(qhat.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn pod_basis_is_orthonormal() {
+        // V_r = Q T_r has orthonormal columns (property of the method of
+        // snapshots) — validates T_r's Λ^{-1/2} normalization
+        let q = Matrix::randn(90, 12, 5);
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let tr = spec.tr(5);
+        let vr = matmul(&q, &tr);
+        let vtv = matmul_tn(&vr, &vr);
+        assert!(vtv.max_abs_diff(&Matrix::eye(5)) < 1e-10);
+    }
+
+    #[test]
+    fn normalized_svs_start_at_one() {
+        let q = Matrix::randn(40, 8, 6);
+        let spec = GramSpectrum::from_gram(&syrk(&q));
+        let ns = spec.normalized_singular_values();
+        assert!((ns[0] - 1.0).abs() < 1e-14);
+        assert!(ns.iter().all(|&v| (0.0..=1.0 + 1e-12).contains(&v)));
+    }
+
+    #[test]
+    #[should_panic(expected = "r too large")]
+    fn tr_rejects_rank_deficient_r() {
+        let q = low_rank_snapshots(40, 10, 2, 7);
+        let spec = GramSpectrum::from_gram(&syrk(&q));
+        let _ = spec.tr(9); // rank is 2, eigenvalue 9 ~ 0
+    }
+}

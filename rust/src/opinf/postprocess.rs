@@ -1,0 +1,187 @@
+//! Step V: postprocessing the reduced solution (paper Sec. III.F).
+//!
+//! Maps the reduced trajectory Q̃ (r, nt_p) back to original coordinates
+//! at selected rows: each rank computes its POD-basis slice on the fly
+//! via `V_{r,i} = Q_i T_r` (Eq. 7 — still never materializing the full
+//! basis), lifts `V_{r,i} Q̃`, and un-centers with the stored temporal
+//! means. For probe outputs only the probe rows are lifted (tutorial
+//! lines 323–355).
+
+use crate::linalg::{matmul, Matrix};
+
+/// Lift the reduced trajectory at one local row: returns the predicted
+/// signal over the horizon.
+///
+/// * `centered_row` — this rank's (centered, scaled) training row (nt,)
+/// * `tr`           — T_r (nt, r)
+/// * `qtilde`       — reduced trajectory (r, nt_p)
+/// * `mean`         — the row's temporal mean from centering
+/// * `scale`        — the row's variable scaling factor (1.0 if unscaled)
+pub fn lift_row(
+    centered_row: &[f64],
+    tr: &Matrix,
+    qtilde: &Matrix,
+    mean: f64,
+    scale: f64,
+) -> Vec<f64> {
+    let (nt, r) = (tr.rows(), tr.cols());
+    assert_eq!(centered_row.len(), nt);
+    assert_eq!(qtilde.rows(), r);
+    // φ = rowᵀ T_r  (1, r) — this row of the POD basis (tutorial line 344)
+    let mut phi = vec![0.0; r];
+    for j in 0..r {
+        let mut acc = 0.0;
+        for (k, &q) in centered_row.iter().enumerate() {
+            acc += q * tr[(k, j)];
+        }
+        phi[j] = acc;
+    }
+    // prediction = φ Q̃ · scale + mean (tutorial line 351 + un-scaling)
+    let nt_p = qtilde.cols();
+    let mut out = vec![0.0; nt_p];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for j in 0..r {
+            acc += phi[j] * qtilde[(j, t)];
+        }
+        *o = acc * scale + mean;
+    }
+    out
+}
+
+/// Lift a whole local block: `V_{r,i} Q̃` then un-transform. Returns the
+/// (local_rows, nt_p) reconstruction in original coordinates. `means`
+/// and `scales` are per-row.
+pub fn lift_block(
+    centered_block: &Matrix,
+    tr: &Matrix,
+    qtilde: &Matrix,
+    means: &[f64],
+    scales: &[f64],
+) -> Matrix {
+    let rows = centered_block.rows();
+    assert_eq!(means.len(), rows);
+    assert_eq!(scales.len(), rows);
+    let vr = matmul(centered_block, tr); // (rows, r)
+    let mut lifted = matmul(&vr, qtilde); // (rows, nt_p)
+    for i in 0..rows {
+        let row = lifted.row_mut(i);
+        for v in row.iter_mut() {
+            *v = *v * scales[i] + means[i];
+        }
+    }
+    lifted
+}
+
+/// Relative ℓ² reconstruction error per time instant:
+/// `‖approx_t − ref_t‖ / ‖ref_t‖` columns of two (rows, nt) matrices.
+pub fn relative_errors(reference: &Matrix, approx: &Matrix) -> Vec<f64> {
+    assert_eq!(reference.rows(), approx.rows());
+    assert_eq!(reference.cols(), approx.cols());
+    (0..reference.cols())
+        .map(|t| {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..reference.rows() {
+                let d = approx[(i, t)] - reference[(i, t)];
+                num += d * d;
+                den += reference[(i, t)] * reference[(i, t)];
+            }
+            if den > 0.0 {
+                (num / den).sqrt()
+            } else {
+                num.sqrt()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_tn, syrk};
+    use crate::opinf::podgram::{project, GramSpectrum};
+
+    /// Projecting training data and lifting it back must reproduce the
+    /// data when it is exactly rank-r (full POD round trip).
+    #[test]
+    fn roundtrip_on_low_rank_data() {
+        let rank = 4;
+        let m = 60;
+        let nt = 25;
+        let a = Matrix::randn(m, rank, 1);
+        let b = Matrix::randn(rank, nt, 2);
+        let q = matmul(&a, &b);
+
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let tr = spec.tr(rank);
+        let qhat = project(&tr, &d); // (r, nt)
+
+        let means = vec![0.0; m];
+        let scales = vec![1.0; m];
+        let lifted = lift_block(&q, &tr, &qhat, &means, &scales);
+        assert!(lifted.max_abs_diff(&q) < 1e-8);
+    }
+
+    #[test]
+    fn lift_row_matches_lift_block() {
+        let q = Matrix::randn(30, 12, 3);
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let tr = spec.tr(5);
+        let qhat = project(&tr, &d);
+        let means: Vec<f64> = (0..30).map(|i| i as f64 * 0.1).collect();
+        let scales: Vec<f64> = (0..30).map(|i| 1.0 + 0.01 * i as f64).collect();
+        let block = lift_block(&q, &tr, &qhat, &means, &scales);
+        for i in [0, 7, 29] {
+            let row = lift_row(q.row(i), &tr, &qhat, means[i], scales[i]);
+            for (t, &v) in row.iter().enumerate() {
+                assert!((v - block[(i, t)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_and_scale_restored() {
+        // constant reduced solution of zero => output equals the mean
+        let tr = Matrix::randn(10, 3, 4);
+        let qtilde = Matrix::zeros(3, 6);
+        let row = vec![0.5; 10];
+        let out = lift_row(&row, &tr, &qtilde, 7.25, 2.0);
+        assert!(out.iter().all(|&v| (v - 7.25).abs() < 1e-14));
+    }
+
+    #[test]
+    fn relative_errors_zero_for_identical() {
+        let a = Matrix::randn(8, 5, 6);
+        let errs = relative_errors(&a, &a);
+        assert!(errs.iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn relative_errors_detect_mismatch() {
+        let a = Matrix::randn(8, 5, 7);
+        let mut b = a.clone();
+        b.scale(1.1);
+        let errs = relative_errors(&a, &b);
+        for e in errs {
+            assert!((e - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn projection_consistency_with_matmul_tn() {
+        // lift of the projected data equals V_r V_rᵀ Q (orthogonal proj)
+        let q = Matrix::randn(40, 10, 8);
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let r = 3;
+        let tr = spec.tr(r);
+        let qhat = project(&tr, &d);
+        let lifted = lift_block(&q, &tr, &qhat, &vec![0.0; 40], &vec![1.0; 40]);
+        let vr = matmul(&q, &tr);
+        let want = matmul(&vr, &matmul_tn(&vr, &q));
+        assert!(lifted.max_abs_diff(&want) < 1e-9);
+    }
+}

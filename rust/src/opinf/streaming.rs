@@ -1,0 +1,77 @@
+//! Extension: streamed Gram accumulation (paper §I cites incremental /
+//! streaming POD [15, 16] as the complementary approach).
+//!
+//! `D = QᵀQ` is a sum over *row* blocks (the distributed identity,
+//! Eq. 5) but equally accumulates over *column* (snapshot-batch) outer
+//! products of rows — enabling datasets whose row blocks do not fit in
+//! memory: stream `nb` snapshot rows at a time from disk and accumulate.
+//! This gives the same D bitwise (same rank-ordered summation) as the
+//! in-memory path.
+
+use crate::linalg::{syrk, Matrix};
+
+/// Accumulates `D = Σ_b Q_bᵀ Q_b` over row batches of a tall matrix.
+#[derive(Clone, Debug)]
+pub struct GramAccumulator {
+    nt: usize,
+    d: Matrix,
+    rows_seen: usize,
+}
+
+impl GramAccumulator {
+    pub fn new(nt: usize) -> GramAccumulator {
+        GramAccumulator { nt, d: Matrix::zeros(nt, nt), rows_seen: 0 }
+    }
+
+    /// Fold one batch of rows (any row count, same nt columns).
+    pub fn push(&mut self, batch: &Matrix) {
+        assert_eq!(batch.cols(), self.nt, "batch column count");
+        self.d.axpy(1.0, &syrk(batch));
+        self.rows_seen += batch.rows();
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    /// The accumulated Gram matrix.
+    pub fn finish(self) -> Matrix {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_monolithic_gram() {
+        let q = Matrix::randn(97, 12, 3);
+        let mut acc = GramAccumulator::new(12);
+        let mut start = 0;
+        for size in [10, 30, 1, 56] {
+            acc.push(&q.slice_rows(start, start + size));
+            start += size;
+        }
+        assert_eq!(start, 97);
+        assert_eq!(acc.rows_seen(), 97);
+        let d = acc.finish();
+        assert!(d.max_abs_diff(&syrk(&q)) < 1e-12);
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let mut acc = GramAccumulator::new(5);
+        acc.push(&Matrix::zeros(0, 5));
+        assert_eq!(acc.rows_seen(), 0);
+        let d = acc.finish();
+        assert_eq!(d, Matrix::zeros(5, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn rejects_wrong_width() {
+        let mut acc = GramAccumulator::new(4);
+        acc.push(&Matrix::zeros(3, 5));
+    }
+}

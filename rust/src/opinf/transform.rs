@@ -1,0 +1,130 @@
+//! Step II: training-data transformations (paper Sec. III.C).
+//!
+//! Centering by the temporal mean is purely row-local, which is exactly
+//! why dOpInf splits the snapshot matrix by spatial rows (Remark 3).
+//! Max-abs scaling needs one global reduction per variable: the local
+//! max-abs values computed here are combined by the coordinator with an
+//! `Allreduce(MAX)` and applied via [`apply_scaling`].
+
+use crate::linalg::Matrix;
+
+/// Center each row by its temporal mean in place; returns the means
+/// (needed later to un-center probe predictions, tutorial line 347).
+pub fn center_rows(q: &mut Matrix) -> Vec<f64> {
+    let (rows, cols) = (q.rows(), q.cols());
+    assert!(cols > 0);
+    let mut means = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let row = q.row_mut(i);
+        let mean = row.iter().sum::<f64>() / cols as f64;
+        for v in row.iter_mut() {
+            *v -= mean;
+        }
+        means.push(mean);
+    }
+    means
+}
+
+/// Local per-variable max-abs over this rank's rows of each variable.
+/// `var_ranges[v] = (row_start, row_end)` within the local block.
+pub fn local_maxabs(q: &Matrix, var_ranges: &[(usize, usize)]) -> Vec<f64> {
+    var_ranges
+        .iter()
+        .map(|&(start, end)| {
+            let mut m = 0.0f64;
+            for i in start..end {
+                for &v in q.row(i) {
+                    m = m.max(v.abs());
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Scale each variable's rows by its (global) scaling parameter:
+/// `q[rows_of_var] /= scale[var]` (tutorial's scaling snippet). Zero
+/// scales are treated as 1 (constant variable).
+pub fn apply_scaling(q: &mut Matrix, var_ranges: &[(usize, usize)], scales: &[f64]) {
+    assert_eq!(var_ranges.len(), scales.len());
+    for (&(start, end), &s) in var_ranges.iter().zip(scales) {
+        let s = if s > 0.0 { s } else { 1.0 };
+        for i in start..end {
+            for v in q.row_mut(i) {
+                *v /= s;
+            }
+        }
+    }
+}
+
+/// Split a local block of `ns` equally-sized stacked variables into
+/// per-variable row ranges (the tutorial's `j*nx_i .. (j+1)*nx_i`).
+pub fn variable_ranges(local_rows: usize, ns: usize) -> Vec<(usize, usize)> {
+    assert_eq!(local_rows % ns, 0, "block must hold all variables equally");
+    let per = local_rows / ns;
+    (0..ns).map(|v| (v * per, (v + 1) * per)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centering_zeroes_row_means() {
+        let mut q = Matrix::randn(10, 7, 1);
+        let means = center_rows(&mut q);
+        assert_eq!(means.len(), 10);
+        for i in 0..10 {
+            let m: f64 = q.row(i).iter().sum::<f64>() / 7.0;
+            assert!(m.abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn centering_returns_original_means() {
+        let mut q = Matrix::from_rows(&[&[1.0, 3.0], &[10.0, 10.0]]);
+        let means = center_rows(&mut q);
+        assert_eq!(means, vec![2.0, 10.0]);
+        assert_eq!(q.row(0), &[-1.0, 1.0]);
+        assert_eq!(q.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxabs_per_variable() {
+        let q = Matrix::from_rows(&[&[1.0, -2.0], &[0.5, 0.1], &[-7.0, 3.0], &[0.0, 0.0]]);
+        let ranges = variable_ranges(4, 2);
+        let m = local_maxabs(&q, &ranges);
+        assert_eq!(m, vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn scaling_bounds_to_unit_interval() {
+        let mut q = Matrix::from_rows(&[&[4.0, -8.0], &[1.0, 2.0]]);
+        let ranges = variable_ranges(2, 2);
+        let scales = local_maxabs(&q, &ranges);
+        apply_scaling(&mut q, &ranges, &scales);
+        for v in q.data() {
+            assert!(v.abs() <= 1.0 + 1e-15);
+        }
+        assert_eq!(q.row(0), &[0.5, -1.0]);
+    }
+
+    #[test]
+    fn zero_scale_is_noop() {
+        let mut q = Matrix::from_rows(&[&[0.0, 0.0]]);
+        apply_scaling(&mut q, &[(0, 1)], &[0.0]);
+        assert_eq!(q.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn variable_ranges_split_evenly() {
+        assert_eq!(variable_ranges(6, 2), vec![(0, 3), (3, 6)]);
+        assert_eq!(variable_ranges(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "equally")]
+    fn variable_ranges_reject_ragged() {
+        variable_ranges(7, 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! The quadratic reduced-order model (paper Eq. 11) and its training
+//! machinery.
+//!
+//! * [`quadratic`] — non-redundant Kronecker products (the paper's
+//!   `compute_Qhat_sq`) and operator padding for fixed-shape artifacts
+//! * [`operators`] — the `(Â, Ĥ, ĉ)` operator triple
+//! * [`rollout`] — discrete time-stepping (`solve_discrete_dOpInf_model`)
+//! * [`regsearch`] — (β₁, β₂) grid, training-error metric, growth
+//!   filter, optimal-pair selection (paper Sec. III.E)
+
+pub mod operators;
+pub mod quadratic;
+pub mod regsearch;
+pub mod rollout;
+
+pub use operators::RomOperators;
+pub use regsearch::{RegGrid, RegSearchOutcome};
+pub use rollout::solve_discrete;

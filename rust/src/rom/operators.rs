@@ -1,0 +1,147 @@
+//! The inferred reduced-model operator triple `(Â, Ĥ, ĉ)`.
+
+use super::quadratic::{pad_column_map, s_dim};
+use crate::linalg::Matrix;
+
+/// Operators of the discrete quadratic ROM
+/// `q̂[k+1] = Â q̂[k] + Ĥ (q̂[k] ⊗' q̂[k]) + ĉ` (paper Eq. 11).
+#[derive(Clone, Debug)]
+pub struct RomOperators {
+    /// reduced dimension
+    pub r: usize,
+    /// linear operator, (r, r)
+    pub ahat: Matrix,
+    /// non-redundant quadratic operator, (r, r(r+1)/2)
+    pub fhat: Matrix,
+    /// constant operator (from centering), length r
+    pub chat: Vec<f64>,
+}
+
+impl RomOperators {
+    /// Assemble from the stacked OpInf solution `Ô = [Â | Ĥ | ĉ]`
+    /// of shape (r, r + s + 1) — the layout of paper Eq. 12.
+    pub fn from_stacked(ohat: &Matrix) -> RomOperators {
+        let r = ohat.rows();
+        let s = s_dim(r);
+        assert_eq!(ohat.cols(), r + s + 1, "stacked operator width");
+        RomOperators {
+            r,
+            ahat: ohat.slice_cols(0, r),
+            fhat: ohat.slice_cols(r, r + s),
+            chat: ohat.col(r + s),
+        }
+    }
+
+    /// All-zero operators (fixed point at the origin).
+    pub fn zeros(r: usize) -> RomOperators {
+        RomOperators {
+            r,
+            ahat: Matrix::zeros(r, r),
+            fhat: Matrix::zeros(r, s_dim(r)),
+            chat: vec![0.0; r],
+        }
+    }
+
+    /// Zero-pad to reduced dimension `r_pad` ≥ r, remapping the
+    /// quadratic columns into the padded non-redundant layout. Padding
+    /// is exact: rolled out from a padded initial condition, coordinates
+    /// `r..r_pad` stay identically zero and the first `r` coordinates
+    /// reproduce the unpadded trajectory (the fixed-shape PJRT rollout
+    /// artifact depends on this; see python/tests/test_rom_step.py).
+    pub fn pad_to(&self, r_pad: usize) -> RomOperators {
+        assert!(r_pad >= self.r);
+        if r_pad == self.r {
+            return self.clone();
+        }
+        let mut ahat = Matrix::zeros(r_pad, r_pad);
+        for i in 0..self.r {
+            for j in 0..self.r {
+                ahat[(i, j)] = self.ahat[(i, j)];
+            }
+        }
+        let mut fhat = Matrix::zeros(r_pad, s_dim(r_pad));
+        let map = pad_column_map(self.r, r_pad);
+        for i in 0..self.r {
+            for (k, &kp) in map.iter().enumerate() {
+                fhat[(i, kp)] = self.fhat[(i, k)];
+            }
+        }
+        let mut chat = vec![0.0; r_pad];
+        chat[..self.r].copy_from_slice(&self.chat);
+        RomOperators { r: r_pad, ahat, fhat, chat }
+    }
+
+    /// Frobenius norms (‖Â‖, ‖Ĥ‖, ‖ĉ‖) — reported alongside the
+    /// regularization diagnostics.
+    pub fn norms(&self) -> (f64, f64, f64) {
+        let c = self.chat.iter().map(|x| x * x).sum::<f64>().sqrt();
+        (self.ahat.fro_norm(), self.fhat.fro_norm(), c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::rollout::solve_discrete;
+
+    fn sample_ops(r: usize, seed: u64) -> RomOperators {
+        let mut a = Matrix::randn(r, r, seed);
+        a.scale(0.1);
+        let mut f = Matrix::randn(r, s_dim(r), seed + 1);
+        f.scale(0.05);
+        let mut chat = vec![0.0; r];
+        for (i, c) in chat.iter_mut().enumerate() {
+            *c = 0.01 * (i as f64 + 1.0);
+        }
+        RomOperators { r, ahat: a, fhat: f, chat }
+    }
+
+    #[test]
+    fn from_stacked_roundtrip() {
+        let r = 4;
+        let ops = sample_ops(r, 1);
+        let stacked = ops
+            .ahat
+            .hstack(&ops.fhat)
+            .hstack(&Matrix::from_vec(r, 1, ops.chat.clone()));
+        let back = RomOperators::from_stacked(&stacked);
+        assert_eq!(back.ahat, ops.ahat);
+        assert_eq!(back.fhat, ops.fhat);
+        assert_eq!(back.chat, ops.chat);
+    }
+
+    #[test]
+    fn padding_preserves_trajectory() {
+        let r = 5;
+        let ops = sample_ops(r, 7);
+        let padded = ops.pad_to(9);
+        let q0: Vec<f64> = (0..r).map(|i| 0.3 * (i as f64 - 2.0)).collect();
+        let mut q0_pad = q0.clone();
+        q0_pad.extend(vec![0.0; 4]);
+
+        let (nan_a, traj) = solve_discrete(&ops, &q0, 20);
+        let (nan_b, traj_pad) = solve_discrete(&padded, &q0_pad, 20);
+        assert!(!nan_a && !nan_b);
+        for k in 0..20 {
+            for i in 0..r {
+                assert!((traj[(k, i)] - traj_pad[(k, i)]).abs() < 1e-13);
+            }
+            for i in r..9 {
+                assert_eq!(traj_pad[(k, i)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_to_same_r_is_identity() {
+        let ops = sample_ops(3, 2);
+        let same = ops.pad_to(3);
+        assert_eq!(same.ahat, ops.ahat);
+    }
+
+    #[test]
+    fn norms_zero_for_zero_ops() {
+        let ops = RomOperators::zeros(6);
+        assert_eq!(ops.norms(), (0.0, 0.0, 0.0));
+    }
+}

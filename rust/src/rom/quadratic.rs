@@ -1,0 +1,151 @@
+//! Non-redundant quadratic (symmetric Kronecker) products.
+//!
+//! The quadratic operator Ĥ ∈ R^{r×r²} in paper Eq. (12) is not uniquely
+//! identifiable because q_i q_j = q_j q_i; dOpInf therefore learns the
+//! reduced operator over the s = r(r+1)/2 distinct products. Ordering
+//! convention — pairs (i, j) with j ≥ i, grouped by i — must match
+//! `python/compile/kernels/rom_step.py::nonredundant_indices` and
+//! `kernels/ref.py::qhat_sq_ref` exactly (tested via the artifacts).
+
+use crate::linalg::Matrix;
+
+/// Number of non-redundant quadratic terms for reduced dimension `r`.
+#[inline]
+pub fn s_dim(r: usize) -> usize {
+    r * (r + 1) / 2
+}
+
+/// The (i, j) index pairs in convention order.
+pub fn index_pairs(r: usize) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::with_capacity(s_dim(r));
+    for i in 0..r {
+        for j in i..r {
+            pairs.push((i, j));
+        }
+    }
+    pairs
+}
+
+/// `q ⊗' q` for a single state vector: length `s_dim(r)`.
+pub fn qhat_sq_vec(q: &[f64]) -> Vec<f64> {
+    let r = q.len();
+    let mut out = Vec::with_capacity(s_dim(r));
+    for i in 0..r {
+        let qi = q[i];
+        for &qj in &q[i..] {
+            out.push(qi * qj);
+        }
+    }
+    out
+}
+
+/// Row-batched products: input `(k, r)`, output `(k, s)` — the paper's
+/// 2-D `compute_Qhat_sq` branch used to build the OpInf data matrix.
+pub fn qhat_sq_rows(q: &Matrix) -> Matrix {
+    let (k, r) = (q.rows(), q.cols());
+    let mut out = Matrix::zeros(k, s_dim(r));
+    for row in 0..k {
+        let qrow = q.row(row);
+        let mut col = 0;
+        for i in 0..r {
+            let qi = qrow[i];
+            for &qj in &qrow[i..] {
+                out[(row, col)] = qi * qj;
+                col += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Map a column index in the r-sized layout to the column index of the
+/// same (i, j) pair in the `r_pad`-sized layout (for operator padding).
+pub fn pad_column_map(r: usize, r_pad: usize) -> Vec<usize> {
+    assert!(r_pad >= r);
+    let pos_in_pad: std::collections::BTreeMap<(usize, usize), usize> =
+        index_pairs(r_pad).into_iter().enumerate().map(|(k, p)| (p, k)).collect();
+    index_pairs(r).into_iter().map(|p| pos_in_pad[&p]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_paper_convention_r3() {
+        // (0,0),(0,1),(0,2),(1,1),(1,2),(2,2)
+        assert_eq!(index_pairs(3), vec![(0, 0), (0, 1), (0, 2), (1, 1), (1, 2), (2, 2)]);
+        let q = [2.0, 3.0, 5.0];
+        assert_eq!(qhat_sq_vec(&q), vec![4.0, 6.0, 10.0, 9.0, 15.0, 25.0]);
+    }
+
+    #[test]
+    fn s_dim_formula() {
+        for r in 0..20 {
+            assert_eq!(s_dim(r), index_pairs(r).len());
+        }
+    }
+
+    #[test]
+    fn rows_match_vec_per_row() {
+        quick(
+            |rng: &mut Rng| {
+                let k = 1 + rng.below(10) as usize;
+                let r = 1 + rng.below(12) as usize;
+                Matrix::randn(k, r, rng.next_u64())
+            },
+            |q| {
+                let batched = qhat_sq_rows(q);
+                for row in 0..q.rows() {
+                    let single = qhat_sq_vec(q.row(row));
+                    if batched.row(row) != single.as_slice() {
+                        return Err(format!("row {row} differs"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pad_map_identity_when_equal() {
+        let map = pad_column_map(4, 4);
+        assert_eq!(map, (0..s_dim(4)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pad_map_preserves_pairs() {
+        let r = 3;
+        let rp = 6;
+        let map = pad_column_map(r, rp);
+        let small = index_pairs(r);
+        let big = index_pairs(rp);
+        for (k, &kp) in map.iter().enumerate() {
+            assert_eq!(small[k], big[kp]);
+        }
+    }
+
+    #[test]
+    fn padded_vector_products_align() {
+        // qhat_sq of a zero-padded vector, gathered through the pad map,
+        // equals qhat_sq of the original — the rollout-padding invariant.
+        let q = [1.5, -2.0, 0.5];
+        let mut qp = q.to_vec();
+        qp.extend([0.0; 3]);
+        let small = qhat_sq_vec(&q);
+        let big = qhat_sq_vec(&qp);
+        let map = pad_column_map(3, 6);
+        for (k, &kp) in map.iter().enumerate() {
+            assert_eq!(small[k], big[kp]);
+        }
+        // all non-mapped entries are zero
+        let mapped: std::collections::BTreeSet<usize> = map.iter().copied().collect();
+        for (k, &v) in big.iter().enumerate() {
+            if !mapped.contains(&k) {
+                assert_eq!(v, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Regularization grid search (paper Sec. III.E).
+//!
+//! OpInf regularizes the least squares (Eq. 12) with β₁ on the linear +
+//! constant blocks and β₂ on the quadratic block, searched over the
+//! Cartesian product of two log-spaced candidate sets. The optimal pair
+//! minimizes the training error subject to the inferred coefficients
+//! having bounded growth over the trial horizon (tutorial lines
+//! 195–321). Pairs are split across ranks (`distribute_pairs` — the
+//! tutorial's `distribute_reg_pairs`), searched locally, and the winner
+//! found with one Allreduce(MIN).
+
+use crate::linalg::Matrix;
+
+/// Candidate sets B₁ × B₂.
+#[derive(Clone, Debug)]
+pub struct RegGrid {
+    pub beta1: Vec<f64>,
+    pub beta2: Vec<f64>,
+}
+
+impl RegGrid {
+    /// The tutorial's defaults: β₁ ∈ logspace(-10, 0, 8),
+    /// β₂ ∈ logspace(-4, 4, 8).
+    pub fn paper_default() -> RegGrid {
+        RegGrid { beta1: logspace(-10.0, 0.0, 8), beta2: logspace(-4.0, 4.0, 8) }
+    }
+
+    /// Smaller grid for tests/quickstarts.
+    pub fn coarse() -> RegGrid {
+        RegGrid { beta1: logspace(-10.0, 0.0, 4), beta2: logspace(-4.0, 4.0, 4) }
+    }
+
+    /// All (β₁, β₂) pairs, β₂ fastest — `itertools.product` order.
+    pub fn pairs(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.beta1.len() * self.beta2.len());
+        for &b1 in &self.beta1 {
+            for &b2 in &self.beta2 {
+                out.push((b1, b2));
+            }
+        }
+        out
+    }
+}
+
+/// `numpy.logspace`: `num` points from 10^start to 10^stop inclusive.
+pub fn logspace(start: f64, stop: f64, num: usize) -> Vec<f64> {
+    assert!(num >= 1);
+    if num == 1 {
+        return vec![10f64.powf(start)];
+    }
+    let step = (stop - start) / (num - 1) as f64;
+    (0..num).map(|k| 10f64.powf(start + k as f64 * step)).collect()
+}
+
+/// The tutorial's `distribute_reg_pairs`: contiguous chunks of
+/// `floor(n/p)`, remainder appended to the last rank.
+pub fn distribute_pairs(rank: usize, n_pairs: usize, size: usize) -> (usize, usize) {
+    let equal = n_pairs / size;
+    let start = rank * equal;
+    let mut end = (rank + 1) * equal;
+    if rank == size - 1 {
+        end = n_pairs;
+    }
+    (start, end)
+}
+
+/// Training error metric — the paper's `compute_train_err`
+/// (tutorial line 158): max over modes of the relative ℓ² misfit
+/// `max_i sqrt( Σ_k (Q̃_ik − Q̂_ik)² / Σ_k Q̂_ik² )` with rows = time,
+/// cols = modes.
+pub fn train_error(qhat_train: &Matrix, qtilde_train: &Matrix) -> f64 {
+    assert_eq!(qhat_train.rows(), qtilde_train.rows());
+    assert_eq!(qhat_train.cols(), qtilde_train.cols());
+    let (k, r) = (qhat_train.rows(), qhat_train.cols());
+    let mut worst = 0.0f64;
+    for mode in 0..r {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for t in 0..k {
+            let d = qtilde_train[(t, mode)] - qhat_train[(t, mode)];
+            num += d * d;
+            den += qhat_train[(t, mode)] * qhat_train[(t, mode)];
+        }
+        if den > 0.0 {
+            worst = worst.max((num / den).sqrt());
+        } else if num > 0.0 {
+            worst = f64::INFINITY;
+        }
+    }
+    worst
+}
+
+/// Growth diagnostic (tutorial lines 236–292): ratio of the trial
+/// trajectory's maximum absolute deviation from the training mean to the
+/// training trajectory's own maximum deviation. Rows = time, cols =
+/// modes; `mean` and `max_diff_train` are per-mode statistics of the
+/// *training* data.
+pub fn growth_ratio(qtilde_trial: &Matrix, mean: &[f64], max_diff_train: &[f64]) -> f64 {
+    let (k, r) = (qtilde_trial.rows(), qtilde_trial.cols());
+    assert_eq!(mean.len(), r);
+    assert_eq!(max_diff_train.len(), r);
+    let mut max_trial = 0.0f64;
+    for t in 0..k {
+        for mode in 0..r {
+            max_trial = max_trial.max((qtilde_trial[(t, mode)] - mean[mode]).abs());
+        }
+    }
+    let denom = max_diff_train.iter().fold(0.0f64, |m, &x| m.max(x));
+    if denom > 0.0 {
+        max_trial / denom
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Per-mode temporal mean and max |deviation| of the training data
+/// (rows = time, cols = modes) — tutorial lines 236–237.
+pub fn training_stats(qhat_train: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    let (k, r) = (qhat_train.rows(), qhat_train.cols());
+    let mut mean = vec![0.0; r];
+    for t in 0..k {
+        for m in 0..r {
+            mean[m] += qhat_train[(t, m)];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= k as f64;
+    }
+    let mut max_diff = vec![0.0f64; r];
+    for t in 0..k {
+        for m in 0..r {
+            max_diff[m] = max_diff[m].max((qhat_train[(t, m)] - mean[m]).abs());
+        }
+    }
+    (mean, max_diff)
+}
+
+/// Outcome of one rank's local grid search.
+#[derive(Clone, Debug)]
+pub struct RegSearchOutcome {
+    /// best (lowest) training error satisfying the growth bound; the
+    /// tutorial's sentinel 1e20 when nothing qualified
+    pub best_err: f64,
+    pub best_pair: Option<(f64, f64)>,
+    /// ROM trajectory of the winning pair over the trial horizon
+    pub best_trajectory: Option<Matrix>,
+    /// ROM rollout CPU time of the winning pair (paper's dOpInf ROM time)
+    pub best_rom_time: f64,
+    /// pairs this rank evaluated
+    pub evaluated: usize,
+    /// pairs rejected by the growth constraint or NaNs
+    pub rejected: usize,
+}
+
+impl RegSearchOutcome {
+    pub fn empty() -> RegSearchOutcome {
+        RegSearchOutcome {
+            best_err: 1e20,
+            best_pair: None,
+            best_trajectory: None,
+            best_rom_time: 0.0,
+            evaluated: 0,
+            rejected: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logspace_matches_numpy() {
+        let b1 = logspace(-10.0, 0.0, 8);
+        assert_eq!(b1.len(), 8);
+        assert!((b1[0] - 1e-10).abs() < 1e-24);
+        assert!((b1[7] - 1.0).abs() < 1e-14);
+        // numpy.logspace(-10, 0, 8)[1] = 10**(-10 + 10/7)
+        assert!((b1[1] - 10f64.powf(-10.0 + 10.0 / 7.0)).abs() < 1e-18);
+        assert_eq!(logspace(2.0, 2.0, 1), vec![100.0]);
+    }
+
+    #[test]
+    fn paper_grid_is_8x8() {
+        let g = RegGrid::paper_default();
+        assert_eq!(g.pairs().len(), 64);
+        // product order: beta2 varies fastest
+        let p = g.pairs();
+        assert_eq!(p[0].0, p[1].0);
+        assert!(p[0].1 < p[1].1);
+    }
+
+    #[test]
+    fn distribute_pairs_covers_range() {
+        for &(n, p) in &[(64, 8), (64, 3), (7, 4), (10, 1)] {
+            let mut covered = 0;
+            for rank in 0..p {
+                let (s, e) = distribute_pairs(rank, n, p);
+                assert!(s <= e);
+                covered += e - s;
+            }
+            assert_eq!(covered, n, "n={n} p={p}");
+        }
+        // divisible case matches the tutorial exactly
+        assert_eq!(distribute_pairs(2, 64, 8), (16, 24));
+    }
+
+    #[test]
+    fn train_error_zero_for_exact_match() {
+        let q = Matrix::randn(20, 4, 3);
+        assert_eq!(train_error(&q, &q), 0.0);
+    }
+
+    #[test]
+    fn train_error_scales_with_misfit() {
+        let q = Matrix::from_rows(&[&[1.0, 2.0], &[1.0, 2.0]]);
+        let mut qt = q.clone();
+        qt[(0, 0)] += 1.0;
+        let err = train_error(&q, &qt);
+        // mode 0: sqrt(1/2); mode 1: 0
+        assert!((err - (0.5f64).sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn growth_ratio_identity_for_training_data() {
+        let q = Matrix::randn(30, 3, 9);
+        let (mean, max_diff) = training_stats(&q);
+        let ratio = growth_ratio(&q, &mean, &max_diff);
+        assert!((ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn growth_ratio_flags_blowup() {
+        let q = Matrix::randn(30, 2, 10);
+        let (mean, max_diff) = training_stats(&q);
+        let mut trial = q.clone();
+        trial[(5, 1)] = 1e6;
+        assert!(growth_ratio(&trial, &mean, &max_diff) > 100.0);
+    }
+
+    #[test]
+    fn training_stats_simple() {
+        let q = Matrix::from_rows(&[&[1.0], &[3.0]]);
+        let (mean, max_diff) = training_stats(&q);
+        assert_eq!(mean, vec![2.0]);
+        assert_eq!(max_diff, vec![1.0]);
+    }
+}

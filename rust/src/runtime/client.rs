@@ -1,0 +1,143 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! One CPU `PjRtClient` per process; HLO text modules are compiled once
+//! and cached by path. Compilation follows the reference wiring in
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Matrix;
+
+/// Shared process-wide runtime (thread-safe; rank threads all use it).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the underlying PJRT CPU client is internally synchronized; the
+// xla crate wrappers are raw pointers without Send/Sync annotations, but
+// all mutation goes through the C API which the CPU plugin allows from
+// multiple threads. Executions from rank threads are additionally safe
+// because each call creates its own buffers.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+static RUNTIME: OnceLock<Result<Arc<PjrtRuntime>, String>> = OnceLock::new();
+
+impl PjrtRuntime {
+    /// The process-wide runtime, created on first use.
+    pub fn global() -> Result<Arc<PjrtRuntime>> {
+        let r = RUNTIME.get_or_init(|| {
+            xla::PjRtClient::cpu()
+                .map(|client| Arc::new(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) }))
+                .map_err(|e| format!("PjRtClient::cpu: {e}"))
+        });
+        match r {
+            Ok(rt) => Ok(rt.clone()),
+            Err(e) => anyhow::bail!("{e}"),
+        }
+    }
+
+    /// Compile (or fetch from cache) the HLO text module at `path`.
+    pub fn load(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f64 literal inputs; returns the output tuple parts.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Matrix -> f64 literal of shape (rows, cols).
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(m.data().as_ptr() as *const u8, m.data().len() * 8)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F64,
+        &[m.rows(), m.cols()],
+        bytes,
+    )?)
+}
+
+/// Vec -> f64 literal of shape (len,).
+pub fn vec_to_literal(v: &[f64]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F64,
+        &[v.len()],
+        bytes,
+    )?)
+}
+
+/// f64 literal -> Matrix with the given shape (checked against count).
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = lit.to_vec::<f64>()?;
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "literal has {} elements, want {}x{}",
+        data.len(),
+        rows,
+        cols
+    );
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_matrix() {
+        let m = Matrix::randn(7, 5, 1);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 7, 5).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn literal_roundtrip_vec() {
+        let v = vec![1.0, -2.5, 3.25];
+        let lit = vec_to_literal(&v).unwrap();
+        assert_eq!(lit.to_vec::<f64>().unwrap(), v);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        let m = Matrix::randn(3, 3, 2);
+        let lit = matrix_to_literal(&m).unwrap();
+        assert!(literal_to_matrix(&lit, 2, 2).is_err());
+    }
+
+    #[test]
+    fn global_runtime_initializes() {
+        // CPU PJRT must be available in this image
+        let rt = PjrtRuntime::global().unwrap();
+        let rt2 = PjrtRuntime::global().unwrap();
+        assert!(Arc::ptr_eq(&rt, &rt2));
+    }
+}

@@ -1,0 +1,284 @@
+//! Typed entry points over the artifacts + the Native/PJRT dispatch
+//! engine.
+//!
+//! Artifacts are shape-specialized, so the [`Engine`] matches each
+//! request against the manifest: row dimensions are tiled into
+//! `block_rows` chunks with exact zero-padding (zero rows add nothing to
+//! a Gram matrix; zero operator blocks keep padded ROM coordinates at
+//! zero — invariants tested in both pytest and here). Anything without
+//! a matching artifact falls back to the native `linalg` path, so the
+//! system stays fully functional without `make artifacts`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::client::{matrix_to_literal, literal_to_matrix, vec_to_literal, PjrtRuntime};
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::linalg::{matmul, matmul_tn, syrk, Matrix};
+use crate::rom::rollout::solve_discrete;
+use crate::rom::RomOperators;
+
+/// Dispatch statistics (observability + perf assertions in tests).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub pjrt_calls: AtomicUsize,
+    pub native_calls: AtomicUsize,
+}
+
+/// Native/PJRT execution engine.
+pub struct Engine {
+    manifest: Manifest,
+    runtime: Option<Arc<PjrtRuntime>>,
+    /// serializes PJRT executions (the CPU plugin is thread-safe, but
+    /// rank threads timeshare one core anyway — serialization costs
+    /// nothing and removes any doubt)
+    exec_lock: Mutex<()>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Pure-native engine (no artifacts).
+    pub fn native() -> Engine {
+        Engine {
+            manifest: Manifest::default(),
+            runtime: None,
+            exec_lock: Mutex::new(()),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Engine backed by the artifacts in `dir`; falls back to native for
+    /// unmatched shapes. Errors only on a malformed manifest or PJRT
+    /// initialization failure when artifacts exist.
+    pub fn from_artifacts(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let runtime = if manifest.entries.is_empty() {
+            None
+        } else {
+            Some(PjrtRuntime::global()?)
+        };
+        Ok(Engine { manifest, runtime, exec_lock: Mutex::new(()), stats: EngineStats::default() })
+    }
+
+    /// True if at least one artifact is loaded.
+    pub fn has_artifacts(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    fn run_entry(&self, entry: &ArtifactEntry, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let rt = self.runtime.as_ref().expect("run_entry without runtime");
+        let exe = rt.load(&entry.path)?;
+        let _guard = self.exec_lock.lock().unwrap();
+        let out = rt.execute(&exe, inputs)?;
+        self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Local Gram matrix `QᵀQ` (paper Eq. 5). PJRT path streams
+    /// zero-padded `block_rows`-chunks through the Pallas gram kernel
+    /// and accumulates; native path is `linalg::syrk`.
+    pub fn gram(&self, q: &Matrix) -> Matrix {
+        let nt = q.cols();
+        if self.runtime.is_some() {
+            if let Some(entry) = self.manifest.find("gram", |e| e.nt == nt) {
+                match self.gram_pjrt(entry, q) {
+                    Ok(d) => return d,
+                    Err(e) => eprintln!("pjrt gram failed ({e}); using native fallback"),
+                }
+            }
+        }
+        self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        syrk(q)
+    }
+
+    fn gram_pjrt(&self, entry: &ArtifactEntry, q: &Matrix) -> Result<Matrix> {
+        let (rows, nt) = (q.rows(), q.cols());
+        let bm = entry.block_rows;
+        let mut d = Matrix::zeros(nt, nt);
+        let mut chunk = Matrix::zeros(bm, nt);
+        let mut start = 0;
+        while start < rows {
+            let end = (start + bm).min(rows);
+            let len = end - start;
+            chunk.data_mut()[..len * nt]
+                .copy_from_slice(&q.data()[start * nt..end * nt]);
+            // zero-pad the tail chunk (exact: zero rows add nothing)
+            for v in chunk.data_mut()[len * nt..].iter_mut() {
+                *v = 0.0;
+            }
+            let out = self.run_entry(entry, &[matrix_to_literal(&chunk)?])?;
+            d.axpy(1.0, &literal_to_matrix(&out[0], nt, nt)?);
+            start = end;
+        }
+        Ok(d)
+    }
+
+    /// Discrete ROM rollout (paper Eq. 11). PJRT path pads the operators
+    /// to the artifact's `r_max` and truncates the trajectory back.
+    pub fn rollout(&self, ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, Matrix) {
+        if self.runtime.is_some() {
+            if let Some(entry) = self
+                .manifest
+                .find("rollout", |e| e.rollout_steps == n_steps && e.r_max >= ops.r)
+            {
+                match self.rollout_pjrt(entry, ops, q0) {
+                    Ok(result) => return result,
+                    Err(e) => eprintln!("pjrt rollout failed ({e}); using native fallback"),
+                }
+            }
+        }
+        self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        solve_discrete(ops, q0, n_steps)
+    }
+
+    fn rollout_pjrt(
+        &self,
+        entry: &ArtifactEntry,
+        ops: &RomOperators,
+        q0: &[f64],
+    ) -> Result<(bool, Matrix)> {
+        let rp = entry.r_max;
+        let padded = ops.pad_to(rp);
+        let mut q0_pad = q0.to_vec();
+        q0_pad.resize(rp, 0.0);
+        let out = self.run_entry(
+            entry,
+            &[
+                vec_to_literal(&q0_pad)?,
+                matrix_to_literal(&padded.ahat)?,
+                matrix_to_literal(&padded.fhat)?,
+                vec_to_literal(&padded.chat)?,
+            ],
+        )?;
+        let traj_pad = literal_to_matrix(&out[0], entry.rollout_steps, rp)?;
+        let traj = traj_pad.slice_cols(0, ops.r);
+        let nans = traj.data().iter().any(|x| !x.is_finite());
+        Ok((nans, traj))
+    }
+
+    /// Projection `Q̂ = T_rᵀ D` (paper Eq. 8). PJRT path pads T_r's
+    /// columns to `r_max` (extra Q̂ rows are zero; truncated on return).
+    pub fn project(&self, tr: &Matrix, d_global: &Matrix) -> Matrix {
+        let (nt, r) = (tr.rows(), tr.cols());
+        if self.runtime.is_some() {
+            if let Some(entry) = self.manifest.find("project", |e| e.nt == nt && e.r_max >= r) {
+                match self.project_pjrt(entry, tr, d_global) {
+                    Ok(q) => return q,
+                    Err(e) => eprintln!("pjrt project failed ({e}); using native fallback"),
+                }
+            }
+        }
+        self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        matmul_tn(tr, d_global)
+    }
+
+    fn project_pjrt(&self, entry: &ArtifactEntry, tr: &Matrix, d: &Matrix) -> Result<Matrix> {
+        let (nt, r) = (tr.rows(), tr.cols());
+        let rp = entry.r_max;
+        let mut tr_pad = Matrix::zeros(nt, rp);
+        for i in 0..nt {
+            tr_pad.row_mut(i)[..r].copy_from_slice(tr.row(i));
+        }
+        let out =
+            self.run_entry(entry, &[matrix_to_literal(&tr_pad)?, matrix_to_literal(d)?])?;
+        let qhat_pad = literal_to_matrix(&out[0], rp, nt)?;
+        Ok(qhat_pad.slice_rows(0, r))
+    }
+
+    /// Postprocessing lift `V_{r,i} Q̃` (paper Step V). PJRT path tiles
+    /// rows by `block_rows` and pads r/columns to the artifact shape.
+    pub fn reconstruct(&self, vr_block: &Matrix, qtilde: &Matrix) -> Matrix {
+        let r = vr_block.cols();
+        let cols = qtilde.cols();
+        if self.runtime.is_some() {
+            if let Some(entry) = self
+                .manifest
+                .find("reconstruct", |e| e.recon_cols == cols && e.r_max >= r)
+            {
+                match self.reconstruct_pjrt(entry, vr_block, qtilde) {
+                    Ok(m) => return m,
+                    Err(e) => eprintln!("pjrt reconstruct failed ({e}); using native fallback"),
+                }
+            }
+        }
+        self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        matmul(vr_block, qtilde)
+    }
+
+    fn reconstruct_pjrt(
+        &self,
+        entry: &ArtifactEntry,
+        vr: &Matrix,
+        qtilde: &Matrix,
+    ) -> Result<Matrix> {
+        let (rows, r) = (vr.rows(), vr.cols());
+        let cols = qtilde.cols();
+        let (bm, rp) = (entry.block_rows, entry.r_max);
+        // pad qtilde rows to r_max once
+        let mut qt_pad = Matrix::zeros(rp, cols);
+        for i in 0..r {
+            qt_pad.row_mut(i).copy_from_slice(qtilde.row(i));
+        }
+        let qt_lit = matrix_to_literal(&qt_pad)?;
+
+        let mut out = Matrix::zeros(rows, cols);
+        let mut chunk = Matrix::zeros(bm, rp);
+        let mut start = 0;
+        while start < rows {
+            let end = (start + bm).min(rows);
+            let len = end - start;
+            for v in chunk.data_mut().iter_mut() {
+                *v = 0.0;
+            }
+            for i in 0..len {
+                chunk.row_mut(i)[..r].copy_from_slice(vr.row(start + i));
+            }
+            let res = self.run_entry(entry, &[matrix_to_literal(&chunk)?, qt_lit.clone()])?;
+            let lifted = literal_to_matrix(&res[0], bm, cols)?;
+            for i in 0..len {
+                out.row_mut(start + i).copy_from_slice(lifted.row(i));
+            }
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_gram_matches_syrk() {
+        let e = Engine::native();
+        let q = Matrix::randn(50, 8, 1);
+        assert_eq!(e.gram(&q), syrk(&q));
+        assert_eq!(e.stats.native_calls.load(Ordering::Relaxed), 1);
+        assert!(!e.has_artifacts());
+    }
+
+    #[test]
+    fn native_engine_rollout_matches_direct() {
+        let e = Engine::native();
+        let mut ops = RomOperators::zeros(3);
+        ops.ahat[(0, 0)] = 0.9;
+        ops.chat[1] = 0.1;
+        let (nans, traj) = e.rollout(&ops, &[1.0, 0.0, 0.0], 10);
+        let (nans2, traj2) = solve_discrete(&ops, &[1.0, 0.0, 0.0], 10);
+        assert_eq!(nans, nans2);
+        assert!(traj.max_abs_diff(&traj2) == 0.0);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_gives_native() {
+        let e = Engine::from_artifacts(std::path::Path::new("/nope/missing")).unwrap();
+        assert!(!e.has_artifacts());
+        let q = Matrix::randn(10, 4, 2);
+        assert_eq!(e.gram(&q), syrk(&q));
+    }
+
+    // PJRT-backed equivalence tests live in rust/tests/integration_runtime.rs
+    // (they need the artifacts/ directory built by `make artifacts`).
+}

@@ -1,0 +1,151 @@
+//! `artifacts/manifest.json` parsing (written by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One AOT entry point: name, HLO file, shapes, and profile metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub profile: String,
+    /// absolute path to the HLO text file
+    pub path: PathBuf,
+    /// input shapes in call order
+    pub inputs: Vec<Vec<usize>>,
+    /// output shapes in tuple order
+    pub outputs: Vec<Vec<usize>>,
+    pub block_rows: usize,
+    pub gram_tile: usize,
+    pub nt: usize,
+    pub r_max: usize,
+    pub s_max: usize,
+    pub rollout_steps: usize,
+    pub recon_cols: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .context("expected shape array")?
+        .iter()
+        .map(|s| {
+            Ok(s.get("shape")
+                .and_then(Json::as_arr)
+                .context("missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<usize>>>()?)
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. A missing file yields an empty
+    /// manifest (native fallback everywhere), a malformed one errors.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(Manifest::default());
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors the relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = Vec::new();
+        for e in doc.get("entries").and_then(Json::as_arr).context("no entries")? {
+            let meta = e.get("meta").context("entry missing meta")?;
+            let get_meta = |k: &str| -> Result<usize> {
+                meta.get(k).and_then(Json::as_usize).with_context(|| format!("meta.{k}"))
+            };
+            entries.push(ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str).context("name")?.to_string(),
+                profile: e.get("profile").and_then(Json::as_str).context("profile")?.to_string(),
+                path: dir.join(e.get("file").and_then(Json::as_str).context("file")?),
+                inputs: shapes(e.get("inputs").context("inputs")?)?,
+                outputs: shapes(e.get("outputs").context("outputs")?)?,
+                block_rows: get_meta("block_rows")?,
+                gram_tile: get_meta("gram_tile")?,
+                nt: get_meta("nt")?,
+                r_max: get_meta("r_max")?,
+                s_max: get_meta("s_max")?,
+                rollout_steps: get_meta("rollout_steps")?,
+                recon_cols: get_meta("recon_cols")?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find an entry by name with a predicate on its metadata (e.g.
+    /// matching nt), preferring the smallest block_rows that fits.
+    pub fn find(&self, name: &str, pred: impl Fn(&ArtifactEntry) -> bool) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name && pred(e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "dtype": "float64",
+      "entries": [
+        {"name": "gram", "profile": "tiny", "file": "tiny/gram.hlo.txt",
+         "inputs": [{"shape": [64, 24], "dtype": "float64"}],
+         "outputs": [{"shape": [24, 24], "dtype": "float64"}],
+         "meta": {"block_rows": 64, "gram_tile": 16, "nt": 24, "r_max": 6,
+                  "s_max": 21, "rollout_steps": 32, "recon_cols": 32}},
+        {"name": "rollout", "profile": "tiny", "file": "tiny/rollout.hlo.txt",
+         "inputs": [{"shape": [6], "dtype": "float64"}],
+         "outputs": [{"shape": [32, 6], "dtype": "float64"}],
+         "meta": {"block_rows": 64, "gram_tile": 16, "nt": 24, "r_max": 6,
+                  "s_max": 21, "rollout_steps": 32, "recon_cols": 32}}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/arts")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let g = &m.entries[0];
+        assert_eq!(g.name, "gram");
+        assert_eq!(g.inputs, vec![vec![64, 24]]);
+        assert_eq!(g.outputs, vec![vec![24, 24]]);
+        assert_eq!(g.nt, 24);
+        assert_eq!(g.path, Path::new("/arts/tiny/gram.hlo.txt"));
+    }
+
+    #[test]
+    fn find_with_predicate() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.find("gram", |e| e.nt == 24).is_some());
+        assert!(m.find("gram", |e| e.nt == 600).is_none());
+        assert!(m.find("nope", |_| true).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let m = Manifest::load(Path::new("/definitely/not/here")).unwrap();
+        assert!(m.entries.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 9, "entries": []}"#, Path::new("/a")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/a")).is_err());
+    }
+}

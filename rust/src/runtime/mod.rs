@@ -1,0 +1,22 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2 graphs (python/compile/model.py) to
+//! HLO *text* (the interchange format xla_extension 0.5.1 accepts; see
+//! /opt/xla-example/README.md) plus `manifest.json`. This module:
+//!
+//! * [`manifest`] — parses the manifest into typed [`ArtifactEntry`]s
+//! * [`client`]   — one shared `PjRtClient` (CPU) + executable cache
+//! * [`exec`]     — typed, shape-checked entry points with zero-padding
+//!   (Gram blocks, ROM rollout, reconstruction, projection) and an
+//!   [`exec::Engine`] that transparently falls back to native
+//!   [`crate::linalg`] when no artifact matches or artifacts are absent
+//!
+//! Python never runs at request time: the Rust binary is self-contained
+//! once `artifacts/` exists.
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use exec::Engine;
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,226 @@
+//! Uniform MAC grid with solid-cell masks.
+//!
+//! Cell (i, j) spans `[i·dx, (i+1)·dx] × [j·dy, (j+1)·dy]`, i (column)
+//! along the channel, j (row) across it. Pressure and sampled velocities
+//! live at cell centers; face velocities are staggered (see
+//! `sim::solver`). Solid cells (cylinder, step) are masked out of the
+//! dynamics and the Poisson solve.
+
+/// Benchmark geometry selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Geometry {
+    /// DFG 2D-3 analogue: channel with a circular cylinder.
+    Cylinder,
+    /// Backward-facing step (the abstract's "flow over a step").
+    Step,
+    /// Plain channel (no obstacle) — used by solver unit tests.
+    Channel,
+}
+
+/// Uniform Cartesian grid with a solid mask.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub nx: usize,
+    pub ny: usize,
+    pub lx: f64,
+    pub ly: f64,
+    pub dx: f64,
+    pub dy: f64,
+    /// `true` = solid cell (excluded from fluid dynamics), len nx*ny
+    solid: Vec<bool>,
+    pub geometry: Geometry,
+}
+
+impl Grid {
+    /// Channel `[0,lx]×[0,ly]` with geometry-specific solids.
+    pub fn new(geometry: Geometry, nx: usize, ny: usize, lx: f64, ly: f64) -> Grid {
+        assert!(nx >= 4 && ny >= 4, "grid too small");
+        let dx = lx / nx as f64;
+        let dy = ly / ny as f64;
+        let mut g = Grid { nx, ny, lx, ly, dx, dy, solid: vec![false; nx * ny], geometry };
+        match geometry {
+            Geometry::Cylinder => {
+                // DFG 2D-3 proportions: cylinder of diameter ly/4.1*1.0,
+                // centered at (0.2/2.2·lx, 0.2/0.41·ly) in DFG units.
+                let cx = lx * (0.2 / 2.2);
+                let cy = ly * (0.2 / 0.41);
+                let radius = ly * (0.05 / 0.41);
+                g.add_cylinder(cx, cy, radius);
+            }
+            Geometry::Step => {
+                // backward-facing step: lower-left quarter blocked up to
+                // x = ly (step length equal to channel height)
+                let step_x = ly.min(lx * 0.25);
+                let step_y = ly * 0.5;
+                g.add_box(0.0, 0.0, step_x, step_y);
+            }
+            Geometry::Channel => {}
+        }
+        g
+    }
+
+    /// DFG-proportioned cylinder default used by the paper experiments.
+    pub fn dfg_cylinder(nx: usize, ny: usize) -> Grid {
+        Grid::new(Geometry::Cylinder, nx, ny, 2.2, 0.41)
+    }
+
+    /// Mark cells inside a circle as solid.
+    pub fn add_cylinder(&mut self, cx: f64, cy: f64, radius: f64) {
+        for j in 0..self.ny {
+            for i in 0..self.nx {
+                let (x, y) = self.cell_center(i, j);
+                if (x - cx).powi(2) + (y - cy).powi(2) <= radius * radius {
+                    let k = self.idx(i, j);
+                    self.solid[k] = true;
+                }
+            }
+        }
+    }
+
+    /// Mark cells inside an axis-aligned box as solid.
+    pub fn add_box(&mut self, x0: f64, y0: f64, x1: f64, y1: f64) {
+        for j in 0..self.ny {
+            for i in 0..self.nx {
+                let (x, y) = self.cell_center(i, j);
+                if x >= x0 && x <= x1 && y >= y0 && y <= y1 {
+                    let k = self.idx(i, j);
+                    self.solid[k] = true;
+                }
+            }
+        }
+    }
+
+    /// Flat index of cell (i, j); row-major by j.
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.nx && j < self.ny);
+        j * self.nx + i
+    }
+
+    #[inline]
+    pub fn cells(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    #[inline]
+    pub fn is_solid(&self, i: usize, j: usize) -> bool {
+        self.solid[self.idx(i, j)]
+    }
+
+    #[inline]
+    pub fn is_fluid(&self, i: usize, j: usize) -> bool {
+        !self.is_solid(i, j)
+    }
+
+    pub fn solid_count(&self) -> usize {
+        self.solid.iter().filter(|&&s| s).count()
+    }
+
+    /// Physical center of cell (i, j).
+    pub fn cell_center(&self, i: usize, j: usize) -> (f64, f64) {
+        ((i as f64 + 0.5) * self.dx, (j as f64 + 0.5) * self.dy)
+    }
+
+    /// Nearest *fluid* cell index to physical point (x, y) — the probe
+    /// extraction the paper ships as a repository script.
+    pub fn probe_index(&self, x: f64, y: f64) -> usize {
+        let ic = ((x / self.dx - 0.5).round().clamp(0.0, (self.nx - 1) as f64)) as usize;
+        let jc = ((y / self.dy - 0.5).round().clamp(0.0, (self.ny - 1) as f64)) as usize;
+        if self.is_fluid(ic, jc) {
+            return self.idx(ic, jc);
+        }
+        // spiral out to the nearest fluid cell
+        for radius in 1..self.nx.max(self.ny) {
+            let mut best: Option<(f64, usize)> = None;
+            let i0 = ic.saturating_sub(radius);
+            let i1 = (ic + radius).min(self.nx - 1);
+            let j0 = jc.saturating_sub(radius);
+            let j1 = (jc + radius).min(self.ny - 1);
+            for j in j0..=j1 {
+                for i in i0..=i1 {
+                    if self.is_fluid(i, j) {
+                        let (cx, cy) = self.cell_center(i, j);
+                        let d2 = (cx - x).powi(2) + (cy - y).powi(2);
+                        if best.map_or(true, |(bd, _)| d2 < bd) {
+                            best = Some((d2, self.idx(i, j)));
+                        }
+                    }
+                }
+            }
+            if let Some((_, idx)) = best {
+                return idx;
+            }
+        }
+        panic!("no fluid cell in grid");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_channel_has_no_solids() {
+        let g = Grid::new(Geometry::Channel, 16, 8, 2.0, 1.0);
+        assert_eq!(g.solid_count(), 0);
+        assert_eq!(g.cells(), 128);
+        assert!((g.dx - 0.125).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cylinder_mask_is_plausible() {
+        let g = Grid::dfg_cylinder(88, 41);
+        let area = g.solid_count() as f64 * g.dx * g.dy;
+        let expect = std::f64::consts::PI * 0.05 * 0.05;
+        assert!(g.solid_count() > 0);
+        assert!((area - expect).abs() / expect < 0.5, "area {area} vs {expect}");
+        // cylinder is in the left part of the channel, off the walls
+        assert!(g.is_fluid(0, 0));
+        assert!(g.is_fluid(g.nx - 1, g.ny - 1));
+    }
+
+    #[test]
+    fn step_blocks_lower_left() {
+        let g = Grid::new(Geometry::Step, 64, 16, 4.0, 1.0);
+        assert!(g.is_solid(0, 0));
+        assert!(g.is_fluid(0, g.ny - 1));
+        assert!(g.is_fluid(g.nx - 1, 0));
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        let g = Grid::new(Geometry::Channel, 10, 5, 1.0, 1.0);
+        assert_eq!(g.idx(0, 0), 0);
+        assert_eq!(g.idx(9, 4), 49);
+        assert_eq!(g.idx(3, 2), 23);
+    }
+
+    #[test]
+    fn probe_index_nearest_cell() {
+        let g = Grid::new(Geometry::Channel, 10, 10, 1.0, 1.0);
+        // point exactly at center of cell (2,7)
+        let (x, y) = g.cell_center(2, 7);
+        assert_eq!(g.probe_index(x, y), g.idx(2, 7));
+        // clamped outside the domain
+        assert_eq!(g.probe_index(-5.0, -5.0), g.idx(0, 0));
+        assert_eq!(g.probe_index(9.0, 9.0), g.idx(9, 9));
+    }
+
+    #[test]
+    fn probe_index_skips_solid() {
+        let mut g = Grid::new(Geometry::Channel, 20, 20, 1.0, 1.0);
+        g.add_cylinder(0.5, 0.5, 0.2);
+        let idx = g.probe_index(0.5, 0.5);
+        let (i, j) = (idx % 20, idx / 20);
+        assert!(g.is_fluid(i, j));
+    }
+
+    #[test]
+    fn paper_probe_fractions_map_into_grid() {
+        let g = Grid::dfg_cylinder(88, 41);
+        for (fx, fy) in crate::io::probes::ProbeSet::paper_fractions() {
+            let idx = g.probe_index(fx * g.lx, fy * g.ly);
+            assert!(idx < g.cells());
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! High-fidelity flow solver substrate.
+//!
+//! The paper's training data comes from a FEniCS finite-element solve of
+//! the 2D incompressible Navier–Stokes equations (DFG 2D-3 cylinder
+//! benchmark, Re=100, vortex shedding). FEniCS is not available here, so
+//! this module implements the same physics from scratch (DESIGN.md §3):
+//!
+//! * [`grid`] — uniform MAC staggered grid with solid masks (cylinder /
+//!   backward-facing step geometries) and probe-index extraction
+//! * [`poisson`] — matrix-free conjugate-gradient pressure solver
+//! * [`solver`] — Chorin projection scheme: explicit advection +
+//!   diffusion, pressure projection, inflow/outflow/no-slip BCs
+//! * [`synth`] — fast analytic traveling-wave datasets for tests and the
+//!   quickstart (low-rank by construction)
+//! * [`driver`] — time-integration loop producing SNAPD snapshot
+//!   datasets (downsampled, like the paper's factor-20 downsampling) and
+//!   reference probe trajectories
+
+pub mod driver;
+pub mod grid;
+pub mod poisson;
+pub mod solver;
+pub mod synth;
+
+pub use grid::{Geometry, Grid};
+pub use solver::FlowSolver;

@@ -1,0 +1,233 @@
+//! Matrix-free conjugate-gradient pressure Poisson solver.
+//!
+//! The projection step needs `∇²p = rhs` on the fluid cells with Neumann
+//! conditions at walls/solids/inflow (zero normal pressure gradient) and
+//! Dirichlet `p = 0` at the outflow column — which pins the pressure
+//! level and makes the (negated) operator symmetric positive definite,
+//! so plain CG with Jacobi preconditioning converges. This mirrors the
+//! paper's use of preconditioned Krylov solvers (BiCGstab/CG) in the
+//! FEniCS reference implementation.
+
+use super::grid::Grid;
+
+/// Pressure-Poisson operator bound to a grid.
+pub struct PoissonSolver<'g> {
+    grid: &'g Grid,
+    /// 1/dx², 1/dy²
+    ax: f64,
+    ay: f64,
+    /// diagonal of the operator (for the Jacobi preconditioner)
+    diag: Vec<f64>,
+    pub tol: f64,
+    pub max_iters: usize,
+}
+
+impl<'g> PoissonSolver<'g> {
+    pub fn new(grid: &'g Grid) -> PoissonSolver<'g> {
+        let ax = 1.0 / (grid.dx * grid.dx);
+        let ay = 1.0 / (grid.dy * grid.dy);
+        let mut solver =
+            PoissonSolver { grid, ax, ay, diag: vec![1.0; grid.cells()], tol: 1e-8, max_iters: 2000 };
+        solver.diag = solver.compute_diag();
+        solver
+    }
+
+    /// Face coefficient between cell (i,j) and its neighbor: 0 across
+    /// walls/solids (Neumann), ax/ay across fluid faces. The outflow
+    /// boundary (i = nx-1 east face) uses a Dirichlet ghost (p_ghost =
+    /// -p), contributing 2·ax to the diagonal.
+    fn compute_diag(&self) -> Vec<f64> {
+        let g = self.grid;
+        let mut diag = vec![1.0; g.cells()];
+        for j in 0..g.ny {
+            for i in 0..g.nx {
+                if g.is_solid(i, j) {
+                    continue;
+                }
+                let mut d = 0.0;
+                // west
+                if i > 0 && g.is_fluid(i - 1, j) {
+                    d += self.ax;
+                }
+                // east
+                if i + 1 < g.nx {
+                    if g.is_fluid(i + 1, j) {
+                        d += self.ax;
+                    }
+                } else {
+                    d += 2.0 * self.ax; // Dirichlet outflow ghost
+                }
+                // south
+                if j > 0 && g.is_fluid(i, j - 1) {
+                    d += self.ay;
+                }
+                // north
+                if j + 1 < g.ny && g.is_fluid(i, j + 1) {
+                    d += self.ay;
+                }
+                diag[g.idx(i, j)] = d.max(self.ax.min(self.ay)); // guard isolated cells
+            }
+        }
+        diag
+    }
+
+    /// `out = A p` where `A = -∇²` with the boundary closure above.
+    /// Solid cells are identity rows (p stays 0 there).
+    pub fn apply(&self, p: &[f64], out: &mut [f64]) {
+        let g = self.grid;
+        assert_eq!(p.len(), g.cells());
+        for j in 0..g.ny {
+            for i in 0..g.nx {
+                let k = g.idx(i, j);
+                if g.is_solid(i, j) {
+                    out[k] = p[k];
+                    continue;
+                }
+                let mut acc = self.diag[k] * p[k];
+                if i > 0 && g.is_fluid(i - 1, j) {
+                    acc -= self.ax * p[k - 1];
+                }
+                if i + 1 < g.nx && g.is_fluid(i + 1, j) {
+                    acc -= self.ax * p[k + 1];
+                }
+                if j > 0 && g.is_fluid(i, j - 1) {
+                    acc -= self.ay * p[k - g.nx];
+                }
+                if j + 1 < g.ny && g.is_fluid(i, j + 1) {
+                    acc -= self.ay * p[k + g.nx];
+                }
+                out[k] = acc;
+            }
+        }
+    }
+
+    /// Solve `-∇²p = rhs` by Jacobi-preconditioned CG. Returns the
+    /// iteration count. `p` is the initial guess (warm-start with the
+    /// previous step's pressure) and holds the solution on exit.
+    pub fn solve(&self, rhs: &[f64], p: &mut [f64]) -> usize {
+        let n = self.grid.cells();
+        assert_eq!(rhs.len(), n);
+        assert_eq!(p.len(), n);
+
+        let mut r = vec![0.0; n];
+        let mut z = vec![0.0; n];
+        let mut q = vec![0.0; n];
+        self.apply(p, &mut q);
+        for k in 0..n {
+            r[k] = rhs[k] - q[k];
+        }
+        let rhs_norm = rhs.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+        for k in 0..n {
+            z[k] = r[k] / self.diag[k];
+        }
+        let mut d = z.clone();
+        let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+
+        for iter in 0..self.max_iters {
+            let rnorm = r.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if rnorm <= self.tol * rhs_norm {
+                return iter;
+            }
+            self.apply(&d, &mut q);
+            let dq: f64 = d.iter().zip(&q).map(|(a, b)| a * b).sum();
+            if dq.abs() < 1e-300 {
+                return iter;
+            }
+            let alpha = rz / dq;
+            for k in 0..n {
+                p[k] += alpha * d[k];
+                r[k] -= alpha * q[k];
+            }
+            for k in 0..n {
+                z[k] = r[k] / self.diag[k];
+            }
+            let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let beta = rz_new / rz;
+            rz = rz_new;
+            for k in 0..n {
+                d[k] = z[k] + beta * d[k];
+            }
+        }
+        self.max_iters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::grid::Geometry;
+
+    #[test]
+    fn operator_is_symmetric() {
+        let g = Grid::new(Geometry::Cylinder, 22, 10, 2.2, 0.41);
+        let s = PoissonSolver::new(&g);
+        let n = g.cells();
+        // <Ax, y> == <x, Ay> for random x, y
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let mut ax = vec![0.0; n];
+        let mut ay = vec![0.0; n];
+        s.apply(&x, &mut ax);
+        s.apply(&y, &mut ay);
+        let axy: f64 = ax.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let xay: f64 = x.iter().zip(&ay).map(|(a, b)| a * b).sum();
+        assert!((axy - xay).abs() < 1e-8 * axy.abs().max(1.0));
+    }
+
+    #[test]
+    fn solves_manufactured_problem() {
+        // A p* = rhs for a random p*; CG must recover p*
+        let g = Grid::new(Geometry::Channel, 24, 12, 2.0, 1.0);
+        let s = PoissonSolver::new(&g);
+        let n = g.cells();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let p_star = rng.normal_vec(n);
+        let mut rhs = vec![0.0; n];
+        s.apply(&p_star, &mut rhs);
+        let mut p = vec![0.0; n];
+        let iters = s.solve(&rhs, &mut p);
+        assert!(iters < s.max_iters, "CG did not converge");
+        let err = p
+            .iter()
+            .zip(&p_star)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-5, "err {err}");
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let g = Grid::new(Geometry::Cylinder, 44, 20, 2.2, 0.41);
+        let s = PoissonSolver::new(&g);
+        let n = g.cells();
+        let mut rng = crate::util::rng::Rng::new(6);
+        let target = rng.normal_vec(n);
+        let mut rhs = vec![0.0; n];
+        s.apply(&target, &mut rhs);
+        let mut cold = vec![0.0; n];
+        let iters_cold = s.solve(&rhs, &mut cold);
+        // warm start from the solution: ~0 iterations
+        let mut warm = cold.clone();
+        let iters_warm = s.solve(&rhs, &mut warm);
+        assert!(iters_warm <= iters_cold);
+        assert!(iters_warm <= 1);
+    }
+
+    #[test]
+    fn solid_rows_stay_identity() {
+        let g = Grid::new(Geometry::Cylinder, 44, 20, 2.2, 0.41);
+        let s = PoissonSolver::new(&g);
+        let n = g.cells();
+        let rhs = vec![0.0; n];
+        let mut p = vec![0.0; n];
+        s.solve(&rhs, &mut p);
+        for j in 0..g.ny {
+            for i in 0..g.nx {
+                if g.is_solid(i, j) {
+                    assert_eq!(p[g.idx(i, j)], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Micro/macro bench harness (substrate; `criterion` is not in the
+//! vendored crate set).
+//!
+//! Benches are plain binaries registered with `harness = false`; each
+//! builds a [`Bench`] and reports mean ± std over warmup + measured
+//! iterations, plus throughput when element counts are supplied. Paper
+//! figures use [`Bench::run_sampled`] with explicit repeat counts (the
+//! paper repeats each measurement 100×).
+
+use crate::util::timer::{mean_std, WallTimer};
+
+/// One benchmark report row.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub samples: usize,
+    /// elements processed per iteration (for throughput), if meaningful
+    pub elems: Option<usize>,
+}
+
+impl Report {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / self.mean_s)
+    }
+
+    pub fn render(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {t:.2} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12.6} s ± {:>10.6} s  (n={}){tp}",
+            self.name, self.mean_s, self.std_s, self.samples
+        )
+    }
+}
+
+/// Bench runner: prints rows as they complete and collects reports.
+pub struct Bench {
+    pub reports: Vec<Report>,
+    warmup: usize,
+    samples: usize,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Respect quick runs: DOPINF_BENCH_SAMPLES=10 etc. The default
+        // favors one-core CI wall-time; the paper-style 100-repeat runs
+        // are opt-in.
+        let samples = std::env::var("DOPINF_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(5);
+        Bench { reports: Vec::new(), warmup: 1, samples }
+    }
+
+    pub fn with_samples(samples: usize, warmup: usize) -> Self {
+        Bench { reports: Vec::new(), warmup, samples }
+    }
+
+    /// Time `f` for the configured warmup+samples; prints and records.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Report {
+        self.run_with_elems(name, None, &mut f)
+    }
+
+    /// Like [`run`], also recording per-iteration element counts.
+    pub fn run_elems<R>(&mut self, name: &str, elems: usize, mut f: impl FnMut() -> R) -> &Report {
+        self.run_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn run_with_elems<R>(
+        &mut self,
+        name: &str,
+        elems: Option<usize>,
+        f: &mut impl FnMut() -> R,
+    ) -> &Report {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = WallTimer::start();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        let (mean_s, std_s) = mean_std(&times);
+        let report = Report { name: name.to_string(), mean_s, std_s, samples: self.samples, elems };
+        println!("{}", report.render());
+        self.reports.push(report);
+        self.reports.last().unwrap()
+    }
+
+    /// Record an externally-measured sample series under `name`.
+    pub fn record_samples(&mut self, name: &str, samples: &[f64]) -> &Report {
+        let (mean_s, std_s) = mean_std(samples);
+        let report = Report {
+            name: name.to_string(),
+            mean_s,
+            std_s,
+            samples: samples.len(),
+            elems: None,
+        };
+        println!("{}", report.render());
+        self.reports.push(report);
+        self.reports.last().unwrap()
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Report> {
+        self.reports.iter().find(|r| r.name == name)
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench::with_samples(3, 1);
+        b.run("noop", || 1 + 1);
+        b.run_elems("withelems", 1000, || (0..100).sum::<usize>());
+        assert_eq!(b.reports.len(), 2);
+        assert!(b.find("noop").is_some());
+        assert!(b.find("withelems").unwrap().throughput().unwrap() > 0.0);
+        assert!(b.reports[0].mean_s >= 0.0);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bench::with_samples(1, 0);
+        let r = b.record_samples("ext", &[1.0, 2.0, 3.0]).clone();
+        assert!((r.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn report_render_contains_name() {
+        let r = Report { name: "x".into(), mean_s: 0.5, std_s: 0.1, samples: 4, elems: Some(2_000_000) };
+        let s = r.render();
+        assert!(s.contains('x') && s.contains("Melem/s"));
+    }
+}

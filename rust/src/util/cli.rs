@@ -1,0 +1,199 @@
+//! Tiny CLI argument parser (substrate; `clap` is not in the vendored set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals, with
+//! typed getters, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec used for usage/help rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw tokens. `specs` distinguishes value-options from flags.
+    pub fn parse(tokens: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let is_flag = |name: &str| {
+            specs.iter().any(|s| s.name == name && s.is_flag)
+        };
+        let known = |name: &str| specs.iter().any(|s| s.name == name);
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known(&name) {
+                    return Err(CliError(format!("unknown option --{name}")));
+                }
+                if is_flag(&name) {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
+                    };
+                    args.opts.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get<'a>(&'a self, name: &str) -> Option<&'a str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| CliError(format!("--{name}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Parse a comma-separated list of T (e.g. `--procs 1,2,4,8`).
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<T>()
+                        .map_err(|_| CliError(format!("--{name}: cannot parse {x:?}")))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{about}\n\nUsage: dopinf {cmd} [options]\n\nOptions:");
+    for s in specs {
+        let head = if s.is_flag {
+            format!("  --{}", s.name)
+        } else {
+            format!("  --{} <value>", s.name)
+        };
+        let default = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        let _ = writeln!(out, "{head:<28}{}{}", s.help, default);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "grid", help: "nx x ny", default: Some("288x54"), is_flag: false },
+            OptSpec { name: "procs", help: "ranks", default: Some("4"), is_flag: false },
+            OptSpec { name: "verbose", help: "chatty", default: None, is_flag: true },
+        ]
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::parse(&toks(&["--grid", "64x32", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("grid"), Some("64x32"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&toks(&["--procs=8"]), &specs()).unwrap();
+        assert_eq!(a.get_parse::<usize>("procs", 4).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get_or("grid", "288x54"), "288x54");
+        assert_eq!(a.get_parse::<usize>("procs", 4).unwrap(), 4);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&toks(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&toks(&["--grid"]), &specs()).is_err());
+        assert!(Args::parse(&toks(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&toks(&["--procs", "1,2,4,8"]), &specs()).unwrap();
+        assert_eq!(a.get_list::<usize>("procs", &[4]).unwrap(), vec![1, 2, 4, 8]);
+        let b = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(b.get_list::<usize>("procs", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("simulate", "Run the flow solver", &specs());
+        assert!(u.contains("--grid"));
+        assert!(u.contains("[default: 288x54]"));
+    }
+}

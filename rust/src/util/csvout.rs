@@ -1,0 +1,72 @@
+//! CSV writer for figure/bench series (`results/*.csv`).
+//!
+//! Every bench that regenerates a paper figure emits its series here so
+//! plots can be rebuilt outside the harness.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Column-oriented CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row of f64 cells (full precision).
+    pub fn row(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "row width != header width");
+        let line = cells.iter().map(|c| format!("{c:.17e}")).collect::<Vec<_>>().join(",");
+        writeln!(self.out, "{line}")
+    }
+
+    /// Write one row of preformatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "row width != header width");
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dopinf_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&[1.0, 2.5]).unwrap();
+        w.row_str(&["x".into(), "y".into()]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert!(lines[1].starts_with("1."));
+        assert_eq!(lines[2], "x,y");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn panics_on_bad_width() {
+        let dir = std::env::temp_dir().join("dopinf_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

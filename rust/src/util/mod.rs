@@ -1,0 +1,16 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline vendored crate set has no `clap`/`serde_json`/`rand`/
+//! `criterion`/`proptest`, so this module provides from-scratch,
+//! fully-tested replacements: a splitmix/xorshift RNG, a JSON
+//! parser/emitter, a CLI argument parser, NPY/CSV writers, wall+thread
+//! CPU timers, a property-test mini-framework, and a bench harness.
+
+pub mod benchkit;
+pub mod cli;
+pub mod csvout;
+pub mod json;
+pub mod npy;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;

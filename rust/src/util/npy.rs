@@ -1,0 +1,146 @@
+//! NPY v1.0 writer/reader for f64 arrays.
+//!
+//! The paper's tutorial saves probe predictions with `np.save`; we keep
+//! the same on-disk format so its postprocessing notebooks can load our
+//! outputs directly, and so python tests can cross-check Rust results.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Write a little-endian f64 array of arbitrary shape (C order).
+pub fn write_f64<P: AsRef<Path>>(path: P, shape: &[usize], data: &[f64]) -> Result<()> {
+    let count: usize = shape.iter().product();
+    if count != data.len() {
+        bail!("shape {:?} has {} elements, data has {}", shape, count, data.len());
+    }
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = BufWriter::new(File::create(path)?);
+
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!("({})", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+    };
+    let mut header =
+        format!("{{'descr': '<f8', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // pad so magic(6)+version(2)+len(2)+header is a multiple of 64, ending in \n
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    out.write_all(b"\x93NUMPY\x01\x00")?;
+    out.write_all(&(header.len() as u16).to_le_bytes())?;
+    out.write_all(header.as_bytes())?;
+    for v in data {
+        out.write_all(&v.to_le_bytes())?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Read an NPY file of little-endian f64 (C order). Returns (shape, data).
+pub fn read_f64<P: AsRef<Path>>(path: P) -> Result<(Vec<usize>, Vec<f64>)> {
+    let mut input = BufReader::new(File::open(&path).with_context(|| {
+        format!("open {:?}", path.as_ref())
+    })?);
+    let mut magic = [0u8; 8];
+    input.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("not an NPY file");
+    }
+    let mut len_bytes = [0u8; 2];
+    input.read_exact(&mut len_bytes)?;
+    let header_len = u16::from_le_bytes(len_bytes) as usize;
+    let mut header = vec![0u8; header_len];
+    input.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+
+    if !header.contains("'descr': '<f8'") {
+        bail!("only <f8 supported, header: {header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order not supported");
+    }
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .context("no shape in header")?
+        .split('(')
+        .nth(1)
+        .context("bad shape")?
+        .split(')')
+        .next()
+        .context("bad shape")?;
+    let shape: Vec<usize> = shape_part
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("bad dim"))
+        .collect::<Result<_>>()?;
+
+    let count: usize = shape.iter().product();
+    let mut bytes = Vec::with_capacity(count * 8);
+    input.read_to_end(&mut bytes)?;
+    if bytes.len() < count * 8 {
+        bail!("truncated NPY: want {} bytes, have {}", count * 8, bytes.len());
+    }
+    let data = bytes[..count * 8]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let dir = std::env::temp_dir().join("dopinf_npy_test");
+        let path = dir.join("a.npy");
+        let data: Vec<f64> = (0..12).map(|i| i as f64 * 0.5).collect();
+        write_f64(&path, &[3, 4], &data).unwrap();
+        let (shape, got) = read_f64(&path).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(got, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("dopinf_npy_test1d");
+        let path = dir.join("b.npy");
+        write_f64(&path, &[5], &[1.0, -2.0, 3.5, f64::MIN_POSITIVE, 0.0]).unwrap();
+        let (shape, got) = read_f64(&path).unwrap();
+        assert_eq!(shape, vec![5]);
+        assert_eq!(got[3], f64::MIN_POSITIVE);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("dopinf_npy_test_bad");
+        assert!(write_f64(dir.join("c.npy"), &[2, 2], &[1.0]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn numpy_can_read_our_header_format() {
+        // Validate the header is byte-exact to numpy's convention:
+        // total header block (magic..newline) multiple of 64.
+        let dir = std::env::temp_dir().join("dopinf_npy_test_hdr");
+        let path = dir.join("d.npy");
+        write_f64(&path, &[7], &vec![0.0; 7]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+        assert_eq!(bytes[10 + header_len - 1], b'\n');
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,131 @@
+//! Mini property-based testing framework (substrate; `proptest` is not in
+//! the vendored crate set — DESIGN.md §3).
+//!
+//! Deterministic: each case derives from a fixed seed + case index, so
+//! failures are reproducible by rerunning the test. On failure the case
+//! index and generated inputs (via Debug) are reported.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xD0_91_F0 }
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. `gen` draws one input
+/// from the RNG. Panics (failing the enclosing #[test]) on the first
+/// falsified case, reporting the case index and input.
+pub fn check<T: std::fmt::Debug>(
+    config: Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..config.cases {
+        let mut rng = Rng::new(config.seed.wrapping_add(case as u64 * 0x9E37));
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property falsified at case {case}/{}: {msg}\ninput: {input:#?}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quick<T: std::fmt::Debug>(
+    generate: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(Config::default(), generate, prop)
+}
+
+/// Assert two floats are close (absolute + relative tolerance), with a
+/// useful error message for property bodies.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * b.abs().max(a.abs());
+    if diff <= bound || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (diff {diff:.3e} > bound {bound:.3e})"))
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        close(x, y, rtol, atol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        quick(
+            |rng| (rng.uniform(), rng.uniform()),
+            |(a, b)| {
+                if a + b >= *a {
+                    Ok(())
+                } else {
+                    Err("addition of non-negatives decreased".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn fails_false_property() {
+        quick(
+            |rng| rng.uniform(),
+            |x| if *x < 0.5 { Ok(()) } else { Err("x >= 0.5".into()) },
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut first: Vec<f64> = Vec::new();
+        check(
+            Config { cases: 5, seed: 9 },
+            |rng| rng.uniform(),
+            |x| {
+                first.push(*x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<f64> = Vec::new();
+        check(
+            Config { cases: 5, seed: 9 },
+            |rng| rng.uniform(),
+            |x| {
+                second.push(*x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-10, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-10, 0.0).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-13], 1e-10, 0.0).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-10, 0.0).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Wall-clock and per-thread CPU timers.
+//!
+//! The scaling study (paper Fig. 4) measures *per-rank compute time*:
+//! since this testbed has a single physical core, rank threads timeshare
+//! and wall-clock cannot show strong scaling. [`ThreadCpuTimer`] reads
+//! `CLOCK_THREAD_CPUTIME_ID`, which charges each rank only for cycles it
+//! actually executed — giving the virtual per-rank clocks described in
+//! DESIGN.md §3.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct WallTimer {
+    start: Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> Self {
+        WallTimer { start: Instant::now() }
+    }
+    /// Elapsed seconds since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Seconds of CPU time consumed by the *calling thread* so far.
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; CLOCK_THREAD_CPUTIME_ID is
+    // supported on all Linux targets this crate builds for.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Per-thread CPU stopwatch (excludes time the thread spent descheduled).
+#[derive(Debug)]
+pub struct ThreadCpuTimer {
+    start: f64,
+}
+
+impl ThreadCpuTimer {
+    pub fn start() -> Self {
+        ThreadCpuTimer { start: thread_cpu_time() }
+    }
+    /// CPU seconds this thread burned since start.
+    pub fn elapsed(&self) -> f64 {
+        thread_cpu_time() - self.start
+    }
+}
+
+/// Mean and (sample) standard deviation of a series of measurements.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_timer_monotone() {
+        let t = WallTimer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_advances_under_load() {
+        let t = ThreadCpuTimer::start();
+        // burn some cycles
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed() > 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_excludes_sleep() {
+        let t = ThreadCpuTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // CPU time during sleep should be ~0, certainly far below wall 50ms
+        assert!(t.elapsed() < 0.02, "cpu={}", t.elapsed());
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.138089935299395).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[3.5]);
+        assert_eq!((m1, s1), (3.5, 0.0));
+    }
+}

@@ -1,0 +1,108 @@
+//! Serial ⇄ distributed ⇄ PJRT equivalence — the §III-code-parity row
+//! of the DESIGN.md experiment index.
+//!
+//! The same dataset must yield the same ROM (r, optimal pair, reduced
+//! trajectory, probe predictions) through:
+//!   * the serial reference (paper's p=1 implementation),
+//!   * the distributed pipeline at several p (native engine),
+//!   * the distributed pipeline with the PJRT artifact engine.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::linalg::Matrix;
+use dopinf::opinf::serial::{self, OpInfConfig};
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Synthetic dataset sized to the `tiny` artifact profile
+/// (nt=24, rollout_steps=32) so the PJRT path engages end to end.
+fn tiny_profile_setup() -> (Matrix, OpInfConfig) {
+    // modes=3 -> centered rank 6, so r=5 keeps all used eigenvalues far
+    // from the numerical-rank floor (ill-conditioned T_r would amplify
+    // benign summation-order differences between p splits)
+    let spec = SynthSpec { nx: 130, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let cfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(5), // ≤ tiny r_max = 6
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 32, // == tiny rollout_steps
+    };
+    (q, cfg)
+}
+
+#[test]
+fn serial_vs_distributed_vs_pjrt() {
+    let (q, ocfg) = tiny_profile_setup();
+    let source = DataSource::InMemory(Arc::new(q.clone()));
+    let serial_res = serial::run(q, &ocfg).unwrap();
+
+    for (p, artifacts) in [(1, false), (2, false), (4, false), (2, true), (4, true)] {
+        let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+        cfg.cost_model = CostModel::free();
+        if artifacts {
+            cfg.artifacts_dir = Some(artifacts_dir());
+        }
+        let dist = run_distributed(&cfg, &source).unwrap();
+        let tag = format!("p={p} pjrt={artifacts}");
+        assert_eq!(dist.r, serial_res.r, "{tag}");
+        assert_eq!(dist.opt_pair, serial_res.opt_pair, "{tag}");
+        let qdiff = dist.qtilde.max_abs_diff(&serial_res.qtilde);
+        assert!(qdiff < 1e-7, "{tag}: trajectory diff {qdiff}");
+        let ediff = (dist.train_err - serial_res.train_err).abs();
+        assert!(ediff < 1e-8 + 1e-5 * serial_res.train_err, "{tag}: err diff {ediff}");
+    }
+}
+
+#[test]
+fn probe_predictions_agree_across_p() {
+    let (q, ocfg) = tiny_profile_setup();
+    let source = DataSource::InMemory(Arc::new(q));
+    let probes = vec![(0usize, 3usize), (1, 64), (0, 129)];
+
+    let mut reference: Option<Vec<Vec<f64>>> = None;
+    for p in [1, 3, 4] {
+        let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+        cfg.cost_model = CostModel::free();
+        cfg.probes = probes.clone();
+        let dist = run_distributed(&cfg, &source).unwrap();
+        let values: Vec<Vec<f64>> = dist.probes.iter().map(|pr| pr.values.clone()).collect();
+        match &reference {
+            None => reference = Some(values),
+            Some(want) => {
+                for (k, (got, expect)) in values.iter().zip(want).enumerate() {
+                    for (t, (a, b)) in got.iter().zip(expect).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-8,
+                            "p={p} probe {k} t={t}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scaling_toggle_changes_transform_not_quality() {
+    let (q, mut ocfg) = tiny_profile_setup();
+    let source = DataSource::InMemory(Arc::new(q));
+    ocfg.scaling = true;
+    let mut cfg = DOpInfConfig::new(2, ocfg);
+    cfg.cost_model = CostModel::free();
+    let dist = run_distributed(&cfg, &source).unwrap();
+    // the scaled pipeline must still produce a valid, accurate ROM
+    assert!(dist.train_err < 1e-2, "train err {}", dist.train_err);
+    assert_eq!(dist.qtilde.rows(), dist.r);
+}

@@ -1,0 +1,192 @@
+//! End-to-end pipeline over a file-backed dataset: flow solver →
+//! SNAPD file → distributed training with probes → prediction quality
+//! beyond the training horizon.
+
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::io::snapd::SnapReader;
+use dopinf::linalg::Matrix;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::driver::{run_to_dataset, SimConfig};
+use dopinf::sim::synth::{generate, SynthSpec};
+use dopinf::sim::Geometry;
+use dopinf::util::json::Json;
+
+#[test]
+fn dataset_file_to_trained_rom() {
+    // small channel run: enough to exercise the full file path quickly
+    let dir = std::env::temp_dir().join("dopinf_it_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("channel.snapd");
+    let sim = SimConfig {
+        geometry: Geometry::Channel,
+        nx: 24,
+        ny: 12,
+        nu: 0.01,
+        u_mean: 1.0,
+        t_sample: 0.2,
+        t_end: 1.0,
+        sample_every: 0.02,
+        dt: None,
+    };
+    let info = run_to_dataset(&sim, &path).unwrap();
+    assert!(info.n_samples >= 30);
+
+    let source = DataSource::File {
+        path: path.clone(),
+        variables: vec!["u_x".into(), "u_y".into()],
+    };
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.9999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 10.0, // steady channel: generous bound
+        nt_p: info.n_samples,
+    };
+    let mut cfg = DOpInfConfig::new(3, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.probes = vec![(0, info.probe_rows[0]), (1, info.probe_rows[0])];
+    let result = run_distributed(&cfg, &source).unwrap();
+
+    assert!(result.r >= 1);
+    assert!(result.train_err.is_finite());
+    assert_eq!(result.probes.len(), 2);
+    // channel flow is steady: probe prediction ≈ constant u_x there
+    let reader = SnapReader::open(&path).unwrap();
+    let truth = reader.read_row("u_x", info.probe_rows[0]).unwrap();
+    let pred = &result.probes[0].values;
+    let denom = truth.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+    for (t, (a, b)) in pred.iter().zip(&truth).enumerate() {
+        assert!((a - b).abs() / denom < 0.05, "t={t}: {a} vs {b}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prediction_beyond_training_horizon() {
+    // periodic synthetic dynamics: train on the first half, verify the
+    // ROM extrapolates over the second half (the paper's target use)
+    let spec = SynthSpec { nx: 180, ns: 2, nt: 160, modes: 3, ..Default::default() };
+    let full = generate(&spec, 0);
+    let train = full.slice_cols(0, 80);
+
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.5,
+        nt_p: 160,
+    };
+    let mut cfg = DOpInfConfig::new(4, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.probes = vec![(0, 17), (1, 95)];
+    let source = DataSource::InMemory(Arc::new(train));
+    let result = run_distributed(&cfg, &source).unwrap();
+
+    for probe in &result.probes {
+        let global_row = probe.var * 180 + probe.row;
+        let mut worst = 0.0f64;
+        for t in 80..160 {
+            let truth = full[(global_row, t)];
+            let got = probe.values[t];
+            worst = worst.max((got - truth).abs());
+        }
+        assert!(
+            worst < 0.05,
+            "probe (var {}, row {}): prediction error {worst} beyond training",
+            probe.var,
+            probe.row
+        );
+    }
+}
+
+#[test]
+fn missing_dataset_fails_cleanly() {
+    let source = DataSource::File {
+        path: "/does/not/exist.snapd".into(),
+        variables: vec!["u_x".into()],
+    };
+    let ocfg = OpInfConfig {
+        ns: 1,
+        energy_target: 0.99,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.2,
+        nt_p: 10,
+    };
+    let cfg = DOpInfConfig::new(2, ocfg);
+    assert!(run_distributed(&cfg, &source).is_err());
+}
+
+#[test]
+fn dataset_metadata_probe_rows_usable() {
+    // simulate writes probe_rows metadata that `dopinf train` consumes
+    let dir = std::env::temp_dir().join("dopinf_it_meta");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("meta.snapd");
+    let sim = SimConfig {
+        geometry: Geometry::Channel,
+        nx: 16,
+        ny: 8,
+        nu: 0.02,
+        u_mean: 1.0,
+        t_sample: 0.0,
+        t_end: 0.2,
+        sample_every: 0.05,
+        dt: None,
+    };
+    run_to_dataset(&sim, &path).unwrap();
+    let reader = SnapReader::open(&path).unwrap();
+    let rows: Vec<usize> = reader
+        .meta()
+        .get("probe_rows")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    assert_eq!(rows.len(), 3);
+    let cells = reader.var_info("u_x").unwrap().rows;
+    assert!(rows.iter().all(|&r| r < cells));
+    // rows must be readable
+    for &r in &rows {
+        let _ = reader.read_row("u_x", r).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn large_row_count_stresses_partitioning() {
+    // ragged split: 997 rows over 8 ranks, tutorial split gives the last
+    // rank extra rows; pipeline must stay exact
+    let spec = SynthSpec { nx: 997, ns: 2, nt: 30, modes: 2, ..Default::default() };
+    let q = generate(&spec, 0);
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(4),
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 60,
+    };
+    let mut c1 = DOpInfConfig::new(1, ocfg.clone());
+    c1.cost_model = CostModel::free();
+    let mut c8 = DOpInfConfig::new(8, ocfg);
+    c8.cost_model = CostModel::free();
+    let source = DataSource::InMemory(Arc::new(q));
+    let r1 = run_distributed(&c1, &source).unwrap();
+    let r8 = run_distributed(&c8, &source).unwrap();
+    assert_eq!(r1.opt_pair, r8.opt_pair);
+    assert!(r1.qtilde.max_abs_diff(&r8.qtilde) < 1e-7);
+    let _ = Matrix::zeros(1, 1);
+}

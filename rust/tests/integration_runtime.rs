@@ -1,0 +1,179 @@
+//! PJRT runtime integration: the AOT artifacts (python/compile, `tiny`
+//! profile) must reproduce the native linalg results exactly through
+//! every entry point — the L1/L2 ⇄ L3 contract.
+//!
+//! Requires `make artifacts` (the Makefile runs it before tests).
+
+use std::path::PathBuf;
+
+use dopinf::linalg::{matmul, matmul_tn, syrk, Matrix};
+use dopinf::rom::quadratic::s_dim;
+use dopinf::rom::{solve_discrete, RomOperators};
+use dopinf::runtime::Engine;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Engine {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let e = Engine::from_artifacts(&dir).expect("engine");
+    assert!(e.has_artifacts());
+    e
+}
+
+/// tiny profile shapes (python/compile/shapes.py): block_rows=64, nt=24,
+/// r_max=6, rollout_steps=32, recon_cols=32.
+const NT: usize = 24;
+const RMAX: usize = 6;
+const STEPS: usize = 32;
+
+#[test]
+fn pjrt_gram_matches_native_exact_blocks() {
+    let e = engine();
+    let q = Matrix::randn(128, NT, 1); // exactly 2 blocks of 64
+    let got = e.gram(&q);
+    let want = syrk(&q);
+    assert!(got.max_abs_diff(&want) < 1e-10, "diff {}", got.max_abs_diff(&want));
+    assert!(e.stats.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+}
+
+#[test]
+fn pjrt_gram_pads_ragged_tail() {
+    let e = engine();
+    for rows in [1, 63, 65, 100, 200] {
+        let q = Matrix::randn(rows, NT, rows as u64);
+        let got = e.gram(&q);
+        let want = syrk(&q);
+        assert!(
+            got.max_abs_diff(&want) < 1e-10,
+            "rows={rows} diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn pjrt_gram_falls_back_on_other_nt() {
+    let e = engine();
+    let q = Matrix::randn(50, 17, 3); // nt=17 has no artifact
+    let got = e.gram(&q);
+    assert_eq!(got, syrk(&q));
+    assert!(e.stats.native_calls.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+fn sample_ops(r: usize) -> (RomOperators, Vec<f64>) {
+    let mut ops = RomOperators::zeros(r);
+    let a = Matrix::randn(r, r, 11);
+    for i in 0..r {
+        for j in 0..r {
+            ops.ahat[(i, j)] = 0.2 * a[(i, j)] / r as f64;
+        }
+        ops.ahat[(i, i)] += 0.8;
+        ops.chat[i] = 0.01 * i as f64;
+    }
+    let f = Matrix::randn(r, s_dim(r), 12);
+    for i in 0..r {
+        for k in 0..s_dim(r) {
+            ops.fhat[(i, k)] = 0.02 * f[(i, k)];
+        }
+    }
+    let q0: Vec<f64> = (0..r).map(|i| 0.3 - 0.1 * i as f64).collect();
+    (ops, q0)
+}
+
+#[test]
+fn pjrt_rollout_matches_native_at_rmax() {
+    let e = engine();
+    let (ops, q0) = sample_ops(RMAX);
+    let (nans_p, got) = e.rollout(&ops, &q0, STEPS);
+    let (nans_n, want) = solve_discrete(&ops, &q0, STEPS);
+    assert_eq!(nans_p, nans_n);
+    assert!(got.max_abs_diff(&want) < 1e-11, "diff {}", got.max_abs_diff(&want));
+    // guard against a silent native fallback masking this comparison
+    assert!(e.stats.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn pjrt_rollout_pads_smaller_r() {
+    let e = engine();
+    for r in [1, 3, 5] {
+        let (ops, q0) = sample_ops(r);
+        let (nans_p, got) = e.rollout(&ops, &q0, STEPS);
+        let (nans_n, want) = solve_discrete(&ops, &q0, STEPS);
+        assert_eq!(nans_p, nans_n, "r={r}");
+        assert!(got.max_abs_diff(&want) < 1e-11, "r={r} diff {}", got.max_abs_diff(&want));
+    }
+}
+
+#[test]
+fn pjrt_rollout_falls_back_on_other_steps() {
+    let e = engine();
+    let (ops, q0) = sample_ops(4);
+    let (_, got) = e.rollout(&ops, &q0, 19); // no 19-step artifact
+    let (_, want) = solve_discrete(&ops, &q0, 19);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn pjrt_project_matches_native() {
+    let e = engine();
+    let q = Matrix::randn(100, NT, 21);
+    let d = syrk(&q);
+    for r in [1, 4, RMAX] {
+        let tr = Matrix::randn(NT, r, r as u64 + 5);
+        let got = e.project(&tr, &d);
+        let want = matmul_tn(&tr, &d);
+        assert!(got.max_abs_diff(&want) < 1e-10, "r={r} diff {}", got.max_abs_diff(&want));
+    }
+    assert!(e.stats.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+}
+
+#[test]
+fn pjrt_reconstruct_matches_native() {
+    let e = engine();
+    for (rows, r) in [(64, RMAX), (130, 4), (7, 1)] {
+        let vr = Matrix::randn(rows, r, 31);
+        let qt = Matrix::randn(r, STEPS, 32); // recon_cols == 32 in tiny
+        let got = e.reconstruct(&vr, &qt);
+        let want = matmul(&vr, &qt);
+        assert!(
+            got.max_abs_diff(&want) < 1e-10,
+            "rows={rows} r={r} diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+    assert!(e.stats.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+}
+
+#[test]
+fn pjrt_rollout_propagates_nans() {
+    let e = engine();
+    let mut ops = RomOperators::zeros(RMAX);
+    ops.fhat[(0, 0)] = 50.0;
+    let q0 = vec![100.0; RMAX];
+    let (nans, _) = e.rollout(&ops, &q0, STEPS);
+    assert!(nans, "divergence must be reported through the PJRT path");
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let e = std::sync::Arc::new(engine());
+    let q = std::sync::Arc::new(Matrix::randn(96, NT, 77));
+    let want = syrk(&q);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let e = e.clone();
+            let q = q.clone();
+            let want = want.clone();
+            s.spawn(move || {
+                let got = e.gram(&q);
+                assert!(got.max_abs_diff(&want) < 1e-10);
+            });
+        }
+    });
+}
