@@ -1,0 +1,63 @@
+//! Ensemble-rollout throughput: batched GEMM kernel vs looping the
+//! sequential `solve_discrete` baseline.
+//!
+//! `cargo bench --bench ensemble_throughput`
+//!
+//! Reports member-steps/sec. Acceptance target: the batched kernel is
+//! ≥ 3x the sequential loop at B = 64, r = 10 (the serving layer's
+//! bread-and-butter shape: a paper-sized ROM, one scheduling quantum of
+//! ensemble members). Record runs in EXPERIMENTS.md §Perf.
+
+use dopinf::rom::{solve_discrete, RomOperators};
+use dopinf::runtime::Engine;
+use dopinf::serve::batch::rollout_batch;
+use dopinf::serve::ensemble::perturbed_initial_conditions;
+use dopinf::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== ensemble rollout throughput (member-steps/s) ==\n");
+
+    let engine = Engine::native();
+    let r = 10;
+    let n_steps = 1200;
+    let ops = RomOperators::stable_sample(r, 5);
+    let q0: Vec<f64> = (0..r).map(|i| 0.2 + 0.01 * i as f64).collect();
+
+    let mut speedup_at_64 = 0.0;
+    for b in [1usize, 8, 64, 256] {
+        let q0s = perturbed_initial_conditions(&q0, b, 0.01, 42);
+        let member_steps = b * n_steps;
+
+        let seq = bench
+            .run_elems(&format!("sequential loop      B={b:<3} r={r} x {n_steps}"), member_steps, || {
+                let mut diverged = 0usize;
+                for i in 0..b {
+                    let (nans, traj) = solve_discrete(&ops, q0s.row(i), n_steps);
+                    diverged += usize::from(nans);
+                    std::hint::black_box(traj);
+                }
+                diverged
+            })
+            .throughput()
+            .expect("elems set");
+
+        let bat = bench
+            .run_elems(&format!("batched GEMM kernel  B={b:<3} r={r} x {n_steps}"), member_steps, || {
+                std::hint::black_box(rollout_batch(&engine, &ops, &q0s, n_steps))
+            })
+            .throughput()
+            .expect("elems set");
+
+        let speedup = bat / seq;
+        println!("  -> batched/sequential speedup at B={b}: {speedup:.2}x\n");
+        if b == 64 {
+            speedup_at_64 = speedup;
+        }
+    }
+
+    println!(
+        "acceptance: B=64 speedup {speedup_at_64:.2}x (target >= 3x){}",
+        if speedup_at_64 >= 3.0 { " — OK" } else { " — BELOW TARGET" }
+    );
+}

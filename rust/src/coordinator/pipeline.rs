@@ -24,8 +24,9 @@ use crate::io::partition::distribute_tutorial;
 use crate::linalg::Matrix;
 use crate::opinf::learn;
 use crate::opinf::podgram::GramSpectrum;
-use crate::opinf::postprocess::lift_row;
+use crate::opinf::postprocess::{lift_from_phi, probe_basis_row, ProbeBasis};
 use crate::opinf::serial::search_pairs;
+use crate::rom::RomOperators;
 use crate::opinf::transform::{apply_scaling, center_rows, local_maxabs, variable_ranges};
 use crate::rom::regsearch::distribute_pairs;
 use crate::runtime::Engine;
@@ -62,6 +63,16 @@ pub struct DOpInfResult {
     pub winner_rank: usize,
     /// probe predictions in config order
     pub probes: Vec<ProbePrediction>,
+    /// the learned operators at the optimal pair (re-solved from the
+    /// replicated problem — every rank computes the identical triple),
+    /// ready to package into a [`crate::serve::RomArtifact`]
+    pub ops: RomOperators,
+    /// reduced initial condition (first training state) — the serving
+    /// layer's ensemble anchor
+    pub qhat0: Vec<f64>,
+    /// per-probe POD-basis rows + un-centering transforms, in config
+    /// order (gathered from the owning ranks)
+    pub probe_bases: Vec<ProbeBasis>,
     /// virtual-clock timing per rank
     pub timing: RunTiming,
 }
@@ -184,20 +195,54 @@ fn rank_pipeline(
     let rom_time = data[2];
     let qtilde = Matrix::from_vec(r, nt_p, data[3..].to_vec());
 
+    // The learning problem is replicated (Q̂ is identical on all ranks),
+    // so every rank re-solves the optimal pair locally to materialize
+    // the operators the serving layer persists — no extra collective.
+    // Deliberately NOT charged to the virtual clock: the paper's
+    // pipeline has no such step, so billing it (one extra (r+s+1)²
+    // Cholesky, microseconds next to the grid search's rollouts) would
+    // skew the Fig. 4 timing breakdown.
+    let ops = problem
+        .solve(opt_pair.0, opt_pair.1)
+        .context("re-solving the optimal regularization pair")?;
+
     // ---- Step V: probe postprocessing ---------------------------------
     let mut probes = Vec::with_capacity(cfg.probes.len());
+    let mut probe_bases = Vec::with_capacity(cfg.probes.len());
     for &(var, row) in &cfg.probes {
         anyhow::ensure!(var < ns, "probe variable {var} out of range");
-        let mut contribution = vec![0.0; nt_p];
+        // an unowned row would silently produce an all-zero prediction
+        // AND an all-zero ProbeBasis (scale 0) baked into the serving
+        // artifact — reject it here instead
+        anyhow::ensure!(row < _nx, "probe row {row} out of range (nx = {_nx})");
+        // one payload per probe: [prediction (nt_p) | φ (r) | mean,
+        // scale] — φ is computed once and reused for the lift, and the
+        // serving-artifact fields ride the same single allreduce the
+        // paper's pipeline already pays, so the timed collective count
+        // is unchanged (only r+2 doubles wider)
+        let mut payload = vec![0.0; nt_p + r + 2];
         if row >= range.start && row < range.end {
             let local_row = var * range.len() + (row - range.start);
-            contribution = ctx.timed(Category::Post, || {
-                lift_row(q.row(local_row), &tr, &qtilde, means[local_row], row_scales[local_row])
+            ctx.timed(Category::Post, || {
+                let phi = probe_basis_row(q.row(local_row), &tr);
+                let values =
+                    lift_from_phi(&phi, &qtilde, means[local_row], row_scales[local_row]);
+                payload[..nt_p].copy_from_slice(&values);
+                payload[nt_p..nt_p + r].copy_from_slice(&phi);
+                payload[nt_p + r] = means[local_row];
+                payload[nt_p + r + 1] = row_scales[local_row];
             });
         }
         // owner's contribution + zeros elsewhere = gather-to-all
-        let values = ctx.allreduce(&contribution, Op::Sum);
-        probes.push(ProbePrediction { var, row, values });
+        let combined = ctx.allreduce(&payload, Op::Sum);
+        probes.push(ProbePrediction { var, row, values: combined[..nt_p].to_vec() });
+        probe_bases.push(ProbeBasis {
+            var,
+            row,
+            phi: combined[nt_p..nt_p + r].to_vec(),
+            mean: combined[nt_p + r],
+            scale: combined[nt_p + r + 1],
+        });
     }
 
     Ok(RankOut {
@@ -211,6 +256,9 @@ fn rank_pipeline(
             rom_time,
             winner_rank: winner,
             probes,
+            ops,
+            qhat0: problem.qhat0.clone(),
+            probe_bases,
             timing: RunTiming::new(Vec::new()), // filled by the caller
         },
     })
@@ -293,6 +341,34 @@ mod tests {
         assert_eq!(probe.values.len(), 120);
         for (t, &v) in probe.values.iter().enumerate() {
             assert!((v - lifted[(120 + 119, t)]).abs() < 1e-7, "t={t}");
+        }
+    }
+
+    #[test]
+    fn serving_fields_reproduce_the_run() {
+        let (source, ocfg, _) = test_setup(120);
+        let mut cfg = DOpInfConfig::new(3, ocfg);
+        cfg.cost_model = CostModel::free();
+        cfg.probes = vec![(0, 7), (1, 110)];
+        let dist = run_distributed(&cfg, &source).unwrap();
+
+        // the re-solved operators roll out to exactly the broadcast Q̃
+        let nt_p = dist.qtilde.cols();
+        let (nans, traj) = crate::rom::solve_discrete(&dist.ops, &dist.qhat0, nt_p);
+        assert!(!nans);
+        let diff = traj.transpose().max_abs_diff(&dist.qtilde);
+        assert!(diff < 1e-12, "operator rollout drifts from Q̃: {diff}");
+
+        // probe bases evaluate to the lifted probe predictions
+        assert_eq!(dist.probe_bases.len(), 2);
+        for (basis, pred) in dist.probe_bases.iter().zip(&dist.probes) {
+            assert_eq!((basis.var, basis.row), (pred.var, pred.row));
+            assert_eq!(basis.phi.len(), dist.r);
+            for t in 0..nt_p {
+                let state = dist.qtilde.col(t);
+                let v = basis.eval(&state);
+                assert!((v - pred.values[t]).abs() < 1e-10, "t={t}: {v} vs {}", pred.values[t]);
+            }
         }
     }
 

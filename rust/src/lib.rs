@@ -17,8 +17,27 @@
 //! * **Runtime** — [`runtime`] loads the HLO artifacts via PJRT (`xla`
 //!   crate) and executes them from the hot path, with a native
 //!   [`linalg`] fallback for unmatched shapes.
+//! * **Serving** — [`serve`] is the online stage as a service: training
+//!   persists a versioned ROM artifact ([`serve::RomArtifact`]: the
+//!   operators, the per-probe POD-basis rows with their un-centering
+//!   transform, and provenance metadata), and a serving process loads
+//!   it and evaluates *ensembles* of rollouts for UQ / design-space
+//!   exploration — B members advanced per step as one
+//!   `(r, r+s+1) @ (r+s+1, B)` GEMM ([`serve::batch`]), streamed into
+//!   per-probe mean/variance/quantile statistics ([`serve::ensemble`]),
+//!   sharded over rank workers and queued across requests
+//!   ([`serve::server`]).
 //!
-//! Quickstart: see `examples/quickstart.rs`, or run
+//! The training → artifact → serving flow:
+//!
+//! ```text
+//! dopinf simulate …            # write a SNAPD dataset
+//! dopinf train … --save-rom model.rom
+//! dopinf ensemble --model model.rom --members 256 --steps 1200
+//! ```
+//!
+//! Quickstart: see `examples/quickstart.rs` (training) and
+//! `examples/ensemble_uq.rs` (train → save → load → serve), or run
 //! `cargo run --release -- --help`.
 
 pub mod comm;
@@ -28,8 +47,10 @@ pub mod linalg;
 pub mod opinf;
 pub mod rom;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
 pub use coordinator::config::DOpInfConfig;
 pub use coordinator::pipeline::{run_distributed, DOpInfResult};
+pub use serve::RomArtifact;

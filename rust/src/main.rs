@@ -6,11 +6,13 @@
 //!   scaling    strong-scaling study (paper Fig. 4)
 //!   probes     print probe row indices for a grid geometry
 //!   artifacts  list loaded PJRT artifacts
+//!   ensemble   serve a saved ROM: batched ensemble rollout + UQ stats
 //!
 //! Examples:
 //!   dopinf simulate --geometry cylinder --grid 192x36 --out data/cyl.snapd
-//!   dopinf train --data data/cyl.snapd --procs 8 --artifacts artifacts
+//!   dopinf train --data data/cyl.snapd --procs 8 --save-rom models/cyl.rom
 //!   dopinf scaling --data data/cyl.snapd --procs-list 1,2,4,8 --repeats 10
+//!   dopinf ensemble --model models/cyl.rom --members 256 --steps 1200
 
 use std::path::PathBuf;
 
@@ -22,7 +24,8 @@ use dopinf::coordinator::scaling::strong_scaling;
 use dopinf::io::snapd::SnapReader;
 use dopinf::opinf::serial::OpInfConfig;
 use dopinf::rom::RegGrid;
-use dopinf::runtime::Manifest;
+use dopinf::runtime::{Engine, Manifest};
+use dopinf::serve::{serve_ensemble, EnsembleSpec, RomArtifact};
 use dopinf::sim::driver::{run_to_dataset, SimConfig};
 use dopinf::sim::{Geometry, Grid};
 use dopinf::util::cli::{usage, Args, OptSpec};
@@ -53,6 +56,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(rest),
         "probes" => cmd_probes(rest),
         "artifacts" => cmd_artifacts(rest),
+        "ensemble" | "serve" => cmd_ensemble(rest),
         "--help" | "-h" | "help" => {
             print_help();
             Ok(())
@@ -69,7 +73,8 @@ fn print_help() {
            train      run the distributed dOpInf pipeline\n\
            scaling    strong-scaling study (Fig. 4)\n\
            probes     print probe row indices for a geometry/grid\n\
-           artifacts  list PJRT artifacts from a manifest\n\n\
+           artifacts  list PJRT artifacts from a manifest\n\
+           ensemble   serve a saved ROM: batched ensemble rollout + UQ stats\n\n\
          Run `dopinf <command> --help` for options."
     );
 }
@@ -146,6 +151,7 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "max-growth", help: "growth-ratio bound", default: Some("1.2"), is_flag: false },
         OptSpec { name: "procs-list", help: "(scaling) comma-separated p values", default: Some("1,2,4,8"), is_flag: false },
         OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
+        OptSpec { name: "save-rom", help: "write the trained ROM artifact here (.rom)", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -263,6 +269,31 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
     if !result.probes.is_empty() {
         println!("wrote {} probe predictions for rows {probe_rows:?}", result.probes.len());
     }
+
+    // persist the servable ROM artifact (training → artifact → serving)
+    if let Some(rom_path) = a.get("save-rom") {
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("dataset".to_string(), a.get_or("data", "?").to_string());
+        meta.insert("r".to_string(), result.r.to_string());
+        meta.insert(
+            "beta_pair".to_string(),
+            format!("({:.6e}, {:.6e})", result.opt_pair.0, result.opt_pair.1),
+        );
+        meta.insert("train_err".to_string(), format!("{:.6e}", result.train_err));
+        meta.insert("procs".to_string(), cfg.p.to_string());
+        let artifact = dopinf::serve::RomArtifact {
+            ops: result.ops.clone(),
+            qhat0: result.qhat0.clone(),
+            probes: result.probe_bases.clone(),
+            meta,
+        };
+        artifact.save(rom_path)?;
+        println!(
+            "saved ROM artifact to {rom_path} (r={}, {} probes)",
+            result.r,
+            artifact.probes.len()
+        );
+    }
     println!("results in {}", results_dir.display());
     Ok(())
 }
@@ -376,6 +407,104 @@ fn cmd_artifacts(tokens: &[String]) -> Result<()> {
             e.inputs,
             e.outputs
         );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- ensemble
+
+fn cmd_ensemble(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "ROM artifact path (from train --save-rom)", default: None, is_flag: false },
+        OptSpec { name: "members", help: "ensemble size B", default: Some("256"), is_flag: false },
+        OptSpec { name: "sigma", help: "relative std-dev of IC perturbations", default: Some("0.01"), is_flag: false },
+        OptSpec { name: "steps", help: "rollout horizon per member", default: Some("1200"), is_flag: false },
+        OptSpec { name: "workers", help: "rank workers to shard members over", default: Some("4"), is_flag: false },
+        OptSpec { name: "seed", help: "ensemble RNG seed", default: Some("7"), is_flag: false },
+        OptSpec { name: "results", help: "results output dir", default: Some("results"), is_flag: false },
+        OptSpec { name: "artifacts", help: "PJRT artifacts dir (omit for native)", default: None, is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!(
+            "{}",
+            usage("ensemble", "Serve a trained ROM: batched ensemble rollout + UQ statistics", &specs)
+        );
+        return Ok(());
+    }
+    let model_path = a.get("model").context("--model is required (train with --save-rom)")?;
+    let artifact = RomArtifact::load(model_path)?;
+    let engine = match a.get("artifacts") {
+        Some(dir) => Engine::from_artifacts(std::path::Path::new(dir))?,
+        None => Engine::native(),
+    };
+    let spec = EnsembleSpec {
+        members: a.get_parse("members", 256)?,
+        sigma: a.get_parse("sigma", 0.01)?,
+        seed: a.get_parse("seed", 7)?,
+        n_steps: a.get_parse("steps", 1200)?,
+    };
+    let workers: usize = a.get_parse("workers", 4)?;
+    eprintln!(
+        "serving {model_path}: r={}, {} probes, B={} members x {} steps over {workers} workers",
+        artifact.r(),
+        artifact.probes.len(),
+        spec.members,
+        spec.n_steps
+    );
+    if !artifact.meta.is_empty() {
+        let meta: Vec<String> =
+            artifact.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        eprintln!("provenance: {}", meta.join(", "));
+    }
+
+    let t = dopinf::util::timer::WallTimer::start();
+    let stats = serve_ensemble(&engine, &artifact, &spec, workers)?;
+    let elapsed = t.elapsed();
+    let member_steps = (spec.members * spec.n_steps) as f64;
+    println!(
+        "rolled {} member-steps in {:.4} s ({:.3e} member-steps/s), {} of {} members diverged",
+        spec.members * spec.n_steps,
+        elapsed,
+        member_steps / elapsed.max(1e-12),
+        stats.n_diverged(),
+        spec.members
+    );
+
+    let results_dir = PathBuf::from(a.get_or("results", "results"));
+    for series in &stats.probes {
+        let k_last = spec.n_steps - 1;
+        println!(
+            "probe var{} row{}: final mean {:.6e}, variance {:.6e}, [q05, q95] = [{:.6e}, {:.6e}] ({} members)",
+            series.var,
+            series.row,
+            series.mean[k_last],
+            series.variance[k_last],
+            series.q05[k_last],
+            series.q95[k_last],
+            series.count[k_last]
+        );
+        let name = format!("ensemble_probe_var{}_row{}.csv", series.var, series.row);
+        let mut csv = CsvWriter::create(
+            results_dir.join(&name),
+            &["step", "mean", "variance", "q05", "q50", "q95", "count"],
+        )?;
+        for k in 0..spec.n_steps {
+            csv.row(&[
+                k as f64,
+                series.mean[k],
+                series.variance[k],
+                series.q05[k],
+                series.q50[k],
+                series.q95[k],
+                series.count[k] as f64,
+            ])?;
+        }
+        csv.finish()?;
+    }
+    if !stats.probes.is_empty() {
+        println!("wrote {} ensemble series to {}", stats.probes.len(), results_dir.display());
     }
     Ok(())
 }

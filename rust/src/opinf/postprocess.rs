@@ -9,6 +9,56 @@
 
 use crate::linalg::{matmul, Matrix};
 
+/// One spatial row's POD-basis slice plus its un-centering transform —
+/// everything needed to evaluate that row of the full-order field from
+/// *any* reduced trajectory, long after the training data is gone.
+///
+/// This is the serving-side contract of Step V: the pipeline extracts a
+/// `ProbeBasis` per probe during training, `serve::model` persists them
+/// in the ROM artifact, and the ensemble engine evaluates
+/// `φ · q̃(t) · scale + mean` per member per step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeBasis {
+    /// state-variable index of the probe
+    pub var: usize,
+    /// global spatial row (within the variable) of the probe
+    pub row: usize,
+    /// φ = rowᵀ T_r — this row of the POD basis V_r (length r)
+    pub phi: Vec<f64>,
+    /// the row's temporal mean from centering
+    pub mean: f64,
+    /// the row's variable scaling factor (1.0 if unscaled)
+    pub scale: f64,
+}
+
+impl ProbeBasis {
+    /// Evaluate this probe at one reduced state `q` (length r).
+    #[inline]
+    pub fn eval(&self, q: &[f64]) -> f64 {
+        debug_assert_eq!(q.len(), self.phi.len());
+        let mut acc = 0.0;
+        for (p, v) in self.phi.iter().zip(q) {
+            acc += p * v;
+        }
+        acc * self.scale + self.mean
+    }
+}
+
+/// φ = rowᵀ T_r — this row of the POD basis (tutorial line 344).
+pub fn probe_basis_row(centered_row: &[f64], tr: &Matrix) -> Vec<f64> {
+    let (nt, r) = (tr.rows(), tr.cols());
+    assert_eq!(centered_row.len(), nt);
+    let mut phi = vec![0.0; r];
+    for (j, p) in phi.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (k, &q) in centered_row.iter().enumerate() {
+            acc += q * tr[(k, j)];
+        }
+        *p = acc;
+    }
+    phi
+}
+
 /// Lift the reduced trajectory at one local row: returns the predicted
 /// signal over the horizon.
 ///
@@ -24,19 +74,15 @@ pub fn lift_row(
     mean: f64,
     scale: f64,
 ) -> Vec<f64> {
-    let (nt, r) = (tr.rows(), tr.cols());
-    assert_eq!(centered_row.len(), nt);
+    let phi = probe_basis_row(centered_row, tr);
+    lift_from_phi(&phi, qtilde, mean, scale)
+}
+
+/// The second half of [`lift_row`]: prediction = φ Q̃ · scale + mean
+/// (tutorial line 351 + un-scaling), for callers that already hold φ.
+pub fn lift_from_phi(phi: &[f64], qtilde: &Matrix, mean: f64, scale: f64) -> Vec<f64> {
+    let r = phi.len();
     assert_eq!(qtilde.rows(), r);
-    // φ = rowᵀ T_r  (1, r) — this row of the POD basis (tutorial line 344)
-    let mut phi = vec![0.0; r];
-    for j in 0..r {
-        let mut acc = 0.0;
-        for (k, &q) in centered_row.iter().enumerate() {
-            acc += q * tr[(k, j)];
-        }
-        phi[j] = acc;
-    }
-    // prediction = φ Q̃ · scale + mean (tutorial line 351 + un-scaling)
     let nt_p = qtilde.cols();
     let mut out = vec![0.0; nt_p];
     for (t, o) in out.iter_mut().enumerate() {
@@ -150,6 +196,27 @@ mod tests {
         let row = vec![0.5; 10];
         let out = lift_row(&row, &tr, &qtilde, 7.25, 2.0);
         assert!(out.iter().all(|&v| (v - 7.25).abs() < 1e-14));
+    }
+
+    #[test]
+    fn probe_basis_eval_matches_lift_row() {
+        let q = Matrix::randn(20, 9, 11);
+        let d = syrk(&q);
+        let spec = GramSpectrum::from_gram(&d);
+        let tr = spec.tr(4);
+        let qtilde = project(&tr, &d);
+        let basis = ProbeBasis {
+            var: 0,
+            row: 3,
+            phi: probe_basis_row(q.row(3), &tr),
+            mean: 0.75,
+            scale: 1.5,
+        };
+        let lifted = lift_row(q.row(3), &tr, &qtilde, 0.75, 1.5);
+        for t in 0..qtilde.cols() {
+            let state = qtilde.col(t);
+            assert!((basis.eval(&state) - lifted[t]).abs() < 1e-12, "t={t}");
+        }
     }
 
     #[test]

@@ -71,6 +71,30 @@ impl RomOperators {
         RomOperators { r: r_pad, ahat, fhat, chat }
     }
 
+    /// A deterministic, contractive sample ROM: diagonally-dominant Â
+    /// (0.8 diag + 0.2/r random coupling), small random Ĥ, small ĉ —
+    /// trajectories from O(1) initial conditions stay bounded. Shared
+    /// fixture for the serve-layer tests and benches, so stability
+    /// fixes land in one place.
+    pub fn stable_sample(r: usize, seed: u64) -> RomOperators {
+        let mut ops = RomOperators::zeros(r);
+        let a = Matrix::randn(r, r, seed);
+        for i in 0..r {
+            for j in 0..r {
+                ops.ahat[(i, j)] = 0.2 * a[(i, j)] / r as f64;
+            }
+            ops.ahat[(i, i)] += 0.8;
+            ops.chat[i] = 0.01 * (i as f64 + 1.0);
+        }
+        let f = Matrix::randn(r, s_dim(r), seed + 1);
+        for i in 0..r {
+            for k in 0..s_dim(r) {
+                ops.fhat[(i, k)] = 0.02 * f[(i, k)];
+            }
+        }
+        ops
+    }
+
     /// Frobenius norms (‖Â‖, ‖Ĥ‖, ‖ĉ‖) — reported alongside the
     /// regularization diagnostics.
     pub fn norms(&self) -> (f64, f64, f64) {

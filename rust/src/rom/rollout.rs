@@ -12,8 +12,11 @@ use crate::linalg::Matrix;
 
 /// Roll the ROM forward `n_steps` from `q0`. Returns
 /// `(contains_nans, trajectory)` with trajectory shape `(n_steps, r)`
-/// whose row 0 is `q0` — exactly the tutorial's semantics (lines
-/// 172–193): `Qtilde[:, i+1] = model(Qtilde[:, i])`.
+/// whose row 0 is `q0` — the tutorial's semantics (lines 172–193):
+/// `Qtilde[:, i+1] = model(Qtilde[:, i])`, except that integration
+/// stops at the first non-finite state (the tutorial keeps stepping and
+/// checks `np.any(isnan)` at the end; every caller rejects such a
+/// trajectory anyway, so the remaining rows are left at zero).
 pub fn solve_discrete(ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, Matrix) {
     let r = ops.r;
     assert_eq!(q0.len(), r, "initial condition dimension");
@@ -55,8 +58,14 @@ pub fn solve_discrete(ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, 
         }
         if q_next.iter().any(|x| !x.is_finite()) {
             contains_nans = true;
-            // keep filling (NaNs propagate) to match the tutorial, which
-            // integrates the full horizon then checks np.any(isnan)
+            // Early exit: the tutorial integrates the full horizon and
+            // checks np.any(isnan) afterwards, but every caller rejects
+            // a NaN trajectory outright, so propagating garbage rows is
+            // pure waste — especially in the regularization grid search
+            // where most rejected pairs diverge within a few steps. The
+            // first non-finite row is kept (so divergence is observable
+            // in the output); all later rows stay zero.
+            break;
         }
     }
     (contains_nans, traj)
@@ -123,6 +132,21 @@ mod tests {
         let (nans, traj) = solve_discrete(&ops, &[100.0], 300);
         assert!(nans);
         assert!(traj.data().iter().any(|x| !x.is_finite()));
+    }
+
+    #[test]
+    fn divergence_exits_early_leaving_zero_tail() {
+        // q[k+1] = 2 q[k] overflows after ~1024 doublings from 1.0; the
+        // first non-finite row is kept, everything after stays zero
+        let mut ops = RomOperators::zeros(1);
+        ops.ahat[(0, 0)] = 2.0;
+        let (nans, traj) = solve_discrete(&ops, &[1.0], 2000);
+        assert!(nans);
+        let bad = traj.data().iter().position(|x| !x.is_finite()).unwrap();
+        assert!(bad < 1100, "overflow expected near step 1024, got {bad}");
+        for k in (bad + 1)..2000 {
+            assert_eq!(traj[(k, 0)], 0.0, "tail row {k} must stay zero");
+        }
     }
 
     #[test]

@@ -117,6 +117,14 @@ impl Engine {
 
     /// Discrete ROM rollout (paper Eq. 11). PJRT path pads the operators
     /// to the artifact's `r_max` and truncates the trajectory back.
+    ///
+    /// Divergence contract: `contains_nans` is backend-independent, but
+    /// the trajectory *content* after the first non-finite state is
+    /// not — the native path stops integrating (zero tail), while the
+    /// fixed-shape PJRT artifact integrates the full horizon and
+    /// propagates NaN/inf. Callers must gate on the flag before
+    /// consuming the trajectory of a diverged rollout (all in-tree
+    /// callers do).
     pub fn rollout(&self, ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, Matrix) {
         if self.runtime.is_some() {
             if let Some(entry) = self
@@ -185,6 +193,19 @@ impl Engine {
             self.run_entry(entry, &[matrix_to_literal(&tr_pad)?, matrix_to_literal(d)?])?;
         let qhat_pad = literal_to_matrix(&out[0], rp, nt)?;
         Ok(qhat_pad.slice_rows(0, r))
+    }
+
+    /// General dense product `A @ B` for the serving layer's batched
+    /// rollout: the `(r, r+s+1) @ (r+s+1, B)` step GEMM has exactly the
+    /// `reconstruct` artifact's row-tiled/inner-padded structure, so the
+    /// same matching applies — PJRT only when an artifact with
+    /// `r_max ≥ r+s+1` and `recon_cols == B` exists (a serve-shaped
+    /// profile; the training `tiny`/paper profiles never match, so
+    /// today this is the native [`crate::linalg::matmul`] path).
+    /// Padding is exact (zero inner columns contribute nothing), so
+    /// both paths agree to floating-point — not bitwise — precision.
+    pub fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.reconstruct(a, b)
     }
 
     /// Postprocessing lift `V_{r,i} Q̃` (paper Step V). PJRT path tiles
@@ -269,6 +290,14 @@ mod tests {
         let (nans2, traj2) = solve_discrete(&ops, &[1.0, 0.0, 0.0], 10);
         assert_eq!(nans, nans2);
         assert!(traj.max_abs_diff(&traj2) == 0.0);
+    }
+
+    #[test]
+    fn native_engine_gemm_matches_matmul() {
+        let e = Engine::native();
+        let a = Matrix::randn(12, 66, 3);
+        let b = Matrix::randn(66, 10, 4);
+        assert_eq!(e.gemm(&a, &b), matmul(&a, &b));
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Batched ensemble rollout — the online-stage hot path.
+//!
+//! Advancing `B` ensemble members one step each is reformulated as a
+//! single GEMM instead of `B` independent r ≈ 10 matvec loops. States
+//! are kept **transposed** — one *column* per member — so with the
+//! stacked operator `O = [Â | Ĥ | ĉ]` (r, r+s+1) and the augmented
+//! state block `Xᵀ = [Q; Q ⊗' Q; 1]` (r+s+1, B):
+//!
+//! ```text
+//! Q_nextᵀ = O @ Xᵀ        (r, B)
+//! ```
+//!
+//! — one blocked product per step through [`Engine::gemm`] (PJRT
+//! artifact when the shape matches, native `linalg::matmul` otherwise)
+//! whose innermost loop streams contiguously across all B members: the
+//! quadratic expansion is B-wide elementwise row products, and every
+//! operator coefficient is applied as a length-B axpy. Columns are
+//! member-local, so divergence cannot cross members: a non-finite
+//! column is recorded, its first bad state stays visible in the output,
+//! and the member is deactivated (column zeroed, its `1`-row entry
+//! cleared) so the survivors keep full GEMM throughput — the batched
+//! analogue of `solve_discrete`'s early exit.
+
+use crate::linalg::Matrix;
+use crate::rom::quadratic::s_dim;
+use crate::rom::RomOperators;
+use crate::runtime::Engine;
+
+/// Trajectories of a batched rollout, stored step-major, member-major:
+/// `data[(k * b + i) * r + j]` is coordinate `j` of member `i` at step
+/// `k`. Rows of diverged members are zero from the step after their
+/// divergence on (the first non-finite state itself is preserved).
+#[derive(Clone, Debug)]
+pub struct BatchTrajectory {
+    /// ensemble size B
+    pub n_members: usize,
+    /// reduced dimension r
+    pub r: usize,
+    /// steps per member (row 0 = initial condition)
+    pub n_steps: usize,
+    /// `diverged_at[i] = Some(k)` if member `i` first went non-finite at
+    /// step `k`; `None` for members that stayed finite throughout
+    pub diverged_at: Vec<Option<usize>>,
+    data: Vec<f64>,
+}
+
+impl BatchTrajectory {
+    /// All member states at step `k` as a `(B * r)` member-major slice.
+    pub fn states_at(&self, k: usize) -> &[f64] {
+        let stride = self.n_members * self.r;
+        &self.data[k * stride..(k + 1) * stride]
+    }
+
+    /// Member `i`'s state at step `k`.
+    pub fn state(&self, k: usize, i: usize) -> &[f64] {
+        let start = (k * self.n_members + i) * self.r;
+        &self.data[start..start + self.r]
+    }
+
+    /// Member `i`'s full `(n_steps, r)` trajectory (copied out) — the
+    /// shape `solve_discrete` returns, for direct comparison.
+    pub fn member_trajectory(&self, i: usize) -> Matrix {
+        let mut out = Matrix::zeros(self.n_steps, self.r);
+        for k in 0..self.n_steps {
+            out.row_mut(k).copy_from_slice(self.state(k, i));
+        }
+        out
+    }
+
+    /// Number of members that diverged.
+    pub fn n_diverged(&self) -> usize {
+        self.diverged_at.iter().filter(|d| d.is_some()).count()
+    }
+}
+
+/// Advance all members and call `visit(step, states_t, diverged_at)` at
+/// every step, including step 0 with the initial conditions. `states_t`
+/// is the **transposed** `(r, B)` state matrix — member `i` is column
+/// `i` — so per-probe evaluation is a contiguous B-wide axpy. Columns
+/// of members already frozen are zero. Returns per-member divergence
+/// steps.
+///
+/// This is the streaming entry point: `serve::ensemble` accumulates
+/// probe statistics per step without ever materializing B full
+/// trajectories; [`rollout_batch`] is a thin wrapper that does.
+pub fn rollout_batch_with<F>(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+    mut visit: F,
+) -> Vec<Option<usize>>
+where
+    F: FnMut(usize, &Matrix, &[Option<usize>]),
+{
+    let r = ops.r;
+    let b = q0s.rows();
+    assert_eq!(q0s.cols(), r, "initial-condition width != r");
+    assert!(n_steps >= 1);
+    let s = s_dim(r);
+    let d = r + s + 1;
+
+    // O = [Â | Ĥ | ĉ] — the stacked step operator (paper Eq. 12 layout).
+    let o = ops.ahat.hstack(&ops.fhat).hstack(&Matrix::from_vec(r, 1, ops.chat.clone()));
+
+    let mut diverged_at: Vec<Option<usize>> = vec![None; b];
+    // transposed states: one column per member
+    let mut qt = q0s.transpose(); // (r, B)
+    for i in 0..b {
+        if (0..r).any(|j| !qt[(j, i)].is_finite()) {
+            diverged_at[i] = Some(0);
+        }
+    }
+    visit(0, &qt, &diverged_at);
+    for i in 0..b {
+        if diverged_at[i].is_some() {
+            for j in 0..r {
+                qt[(j, i)] = 0.0;
+            }
+        }
+    }
+
+    // augmented transposed state Xᵀ = [Q; Q ⊗' Q; 1], rebuilt per step
+    let mut xt = Matrix::zeros(d, b);
+    // the constant row doubles as the active mask: frozen members get 0
+    // (including members whose initial condition was already bad)
+    for i in 0..b {
+        xt[(d - 1, i)] = if diverged_at[i].is_none() { 1.0 } else { 0.0 };
+    }
+    let mut newly_bad = Vec::new();
+    for k in 0..n_steps - 1 {
+        // rows 0..r: copy the states (contiguous row copies)
+        xt.data_mut()[..r * b].copy_from_slice(qt.data());
+        // rows r..r+s: B-wide elementwise products q_a * q_b
+        {
+            let (state_rows, quad_rows) = xt.data_mut().split_at_mut(r * b);
+            let mut col = 0;
+            for a in 0..r {
+                let ra = &state_rows[a * b..(a + 1) * b];
+                for bb in a..r {
+                    let rb = &state_rows[bb * b..(bb + 1) * b];
+                    let dst = &mut quad_rows[col * b..(col + 1) * b];
+                    for ((dv, &x), &y) in dst.iter_mut().zip(ra).zip(rb) {
+                        *dv = x * y;
+                    }
+                    col += 1;
+                }
+            }
+        }
+
+        let next_t = engine.gemm(&o, &xt); // (r, B)
+
+        // member-local divergence scan (columns are independent)
+        newly_bad.clear();
+        for i in 0..b {
+            if diverged_at[i].is_none() && (0..r).any(|j| !next_t[(j, i)].is_finite()) {
+                diverged_at[i] = Some(k + 1);
+                newly_bad.push(i);
+            }
+        }
+        visit(k + 1, &next_t, &diverged_at);
+        qt = next_t;
+        // freeze newly diverged members: zero the column and clear the
+        // constant-row entry so Â·0 + Ĥ·0 + ĉ·0 stays exactly zero —
+        // matching solve_discrete's early-exit (first bad state kept,
+        // zeros after)
+        for &i in &newly_bad {
+            for j in 0..r {
+                qt[(j, i)] = 0.0;
+            }
+            xt[(d - 1, i)] = 0.0;
+        }
+    }
+    diverged_at
+}
+
+/// Batched rollout returning all trajectories (see [`rollout_batch_with`]
+/// for the streaming variant that avoids the O(B · n_steps · r) buffer).
+pub fn rollout_batch(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+) -> BatchTrajectory {
+    let (b, r) = (q0s.rows(), q0s.cols());
+    let mut data = vec![0.0; n_steps * b * r];
+    let diverged_at = rollout_batch_with(engine, ops, q0s, n_steps, |k, states_t, diverged| {
+        let dst = &mut data[k * b * r..(k + 1) * b * r];
+        for i in 0..b {
+            // a member frozen *before* this step stays zero; the first
+            // bad state (diverged == Some(k)) is preserved
+            if matches!(diverged[i], Some(at) if at < k) {
+                continue;
+            }
+            for j in 0..r {
+                dst[i * r + j] = states_t[(j, i)];
+            }
+        }
+    });
+    BatchTrajectory { n_members: b, r, n_steps, diverged_at, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::rollout::solve_discrete;
+    use crate::util::rng::Rng;
+
+    fn stable_ops(r: usize, seed: u64) -> RomOperators {
+        RomOperators::stable_sample(r, seed)
+    }
+
+    #[test]
+    fn batched_matches_sequential_for_b_1_to_32() {
+        let engine = Engine::native();
+        for r in [1usize, 3, 10] {
+            let ops = stable_ops(r, 40 + r as u64);
+            for b in [1usize, 2, 5, 17, 32] {
+                let mut rng = Rng::new(100 + b as u64);
+                let mut q0s = Matrix::zeros(b, r);
+                for i in 0..b {
+                    for j in 0..r {
+                        q0s[(i, j)] = 0.3 + 0.05 * rng.normal();
+                    }
+                }
+                let batch = rollout_batch(&engine, &ops, &q0s, 60);
+                assert_eq!(batch.n_diverged(), 0, "r={r} b={b}");
+                for i in 0..b {
+                    let (nans, want) = solve_discrete(&ops, q0s.row(i), 60);
+                    assert!(!nans);
+                    let got = batch.member_trajectory(i);
+                    let diff = got.max_abs_diff(&want);
+                    assert!(diff < 1e-12, "r={r} b={b} member {i}: diff {diff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_step_returns_initial_conditions() {
+        let ops = stable_ops(4, 1);
+        let q0s = Matrix::randn(6, 4, 2);
+        let batch = rollout_batch(&Engine::native(), &ops, &q0s, 1);
+        assert_eq!(batch.states_at(0), q0s.data());
+        assert_eq!(batch.n_diverged(), 0);
+    }
+
+    #[test]
+    fn divergence_is_member_local() {
+        // member 1 diverges (explosive quadratic from a huge IC); the
+        // other members must be unaffected by its presence.
+        let r = 3;
+        let mut ops = stable_ops(r, 9);
+        ops.fhat[(0, 0)] = 5.0;
+        let mut q0s = Matrix::zeros(3, r);
+        q0s.row_mut(0).copy_from_slice(&[0.1, 0.1, 0.1]);
+        q0s.row_mut(1).copy_from_slice(&[1e6, 0.0, 0.0]);
+        q0s.row_mut(2).copy_from_slice(&[-0.1, 0.05, 0.2]);
+        let batch = rollout_batch(&Engine::native(), &ops, &q0s, 80);
+
+        assert_eq!(batch.n_diverged(), 1);
+        let at = batch.diverged_at[1].expect("member 1 diverges");
+        assert!(at >= 1 && at < 80);
+        // tail rows of the diverged member are zero
+        for k in (at + 1)..80 {
+            assert!(batch.state(k, 1).iter().all(|&v| v == 0.0), "k={k}");
+        }
+        // survivors match their solo rollouts exactly
+        for i in [0usize, 2] {
+            let (nans, want) = solve_discrete(&ops, q0s.row(i), 80);
+            assert!(!nans, "member {i}");
+            let diff = batch.member_trajectory(i).max_abs_diff(&want);
+            assert!(diff < 1e-12, "member {i} diff {diff}");
+        }
+    }
+
+    #[test]
+    fn diverged_member_matches_sequential_early_exit() {
+        // r=1 logistic blow-up: q' = q + q^2 from q0=2 overflows within
+        // ~10 steps; every arithmetic term is shared with
+        // solve_discrete, so the trajectories (including the first
+        // non-finite state and the zero tail) must agree bitwise.
+        let mut ops = RomOperators::zeros(1);
+        ops.ahat[(0, 0)] = 1.0;
+        ops.fhat[(0, 0)] = 1.0;
+        let q0s = Matrix::from_rows(&[&[2.0]]);
+        let batch = rollout_batch(&Engine::native(), &ops, &q0s, 40);
+        let (nans, want) = solve_discrete(&ops, &[2.0], 40);
+        assert!(nans);
+        let at = batch.diverged_at[0].expect("blow-up must be flagged");
+        assert!(at < 15, "diverged at {at}");
+        let got = batch.member_trajectory(0);
+        for k in 0..40 {
+            let (a, b) = (got[(k, 0)], want[(k, 0)]);
+            // == covers finite values and ±inf; NaN compared by kind
+            assert!((a == b) || (a.is_nan() && b.is_nan()), "k={k}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn nonfinite_initial_condition_flagged_at_step_zero() {
+        let ops = stable_ops(2, 3);
+        let q0s = Matrix::from_rows(&[&[0.1, 0.2], &[f64::NAN, 0.0]]);
+        let batch = rollout_batch(&Engine::native(), &ops, &q0s, 10);
+        assert_eq!(batch.diverged_at[1], Some(0));
+        assert!(batch.diverged_at[0].is_none());
+        // the bad IC stays visible at step 0...
+        assert!(batch.state(0, 1)[0].is_nan());
+        // ...and the tail is zero
+        for k in 1..10 {
+            assert!(batch.state(k, 1).iter().all(|&v| v == 0.0));
+        }
+        // healthy member unaffected
+        let (_, want) = solve_discrete(&ops, &[0.1, 0.2], 10);
+        assert!(batch.member_trajectory(0).max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn streaming_visitor_sees_every_step_transposed() {
+        let ops = stable_ops(3, 5);
+        let q0s = Matrix::randn(4, 3, 6);
+        let mut seen = Vec::new();
+        rollout_batch_with(&Engine::native(), &ops, &q0s, 25, |k, states_t, _| {
+            assert_eq!((states_t.rows(), states_t.cols()), (3, 4));
+            seen.push(k);
+        });
+        assert_eq!(seen, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn visitor_step_zero_is_the_transposed_ics() {
+        let ops = stable_ops(2, 8);
+        let q0s = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        rollout_batch_with(&Engine::native(), &ops, &q0s, 2, |k, states_t, _| {
+            if k == 0 {
+                assert_eq!(states_t, &q0s.transpose());
+            }
+        });
+    }
+}

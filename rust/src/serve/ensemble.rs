@@ -1,0 +1,447 @@
+//! Ensemble construction + streaming statistics — the UQ workloads the
+//! paper builds ROMs *for* ("design space exploration, risk assessment,
+//! and uncertainty quantification").
+//!
+//! Two ensemble families:
+//!
+//! * **Perturbed initial conditions** — B copies of the artifact's
+//!   reference q̂₀ with Gaussian perturbations of relative magnitude σ
+//!   (member 0 stays unperturbed, so the deterministic prediction is
+//!   always a member). Deterministic per seed.
+//! * **Regularization-pair ensembles** — one ROM per (β₁, β₂) candidate
+//!   re-solved from a shared [`OpInfProblem`] (McQuarrie et al. 2020:
+//!   the reg sweep *is* an ensemble of plausible models).
+//!
+//! Statistics are accumulated *streaming*, one step at a time, straight
+//! off the batched rollout: per probe and step we keep mean, sample
+//! variance, and the (5, 50, 95)-percentiles over the members still
+//! finite at that step, plus per-member NaN-divergence accounting.
+//! Memory is O(probes · steps), independent of B's trajectories.
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::opinf::learn::OpInfProblem;
+use crate::opinf::postprocess::ProbeBasis;
+use crate::rom::RomOperators;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+use super::batch::rollout_batch_with;
+use super::model::RomArtifact;
+
+/// How to build and roll an ensemble.
+#[derive(Clone, Debug)]
+pub struct EnsembleSpec {
+    /// ensemble size B
+    pub members: usize,
+    /// relative std-dev of the Gaussian IC perturbation
+    pub sigma: f64,
+    /// RNG seed (ensembles are reproducible)
+    pub seed: u64,
+    /// rollout horizon per member
+    pub n_steps: usize,
+}
+
+impl Default for EnsembleSpec {
+    fn default() -> Self {
+        EnsembleSpec { members: 256, sigma: 0.01, seed: 7, n_steps: 600 }
+    }
+}
+
+/// B perturbed copies of `q0` as a `(B, r)` matrix. Member 0 is the
+/// unperturbed reference; member i ≥ 1 gets `q0_j · (1 + σ ξ)` with
+/// ξ ~ N(0, 1) (relative perturbation, so dominant and near-zero
+/// coordinates are disturbed proportionally).
+pub fn perturbed_initial_conditions(q0: &[f64], members: usize, sigma: f64, seed: u64) -> Matrix {
+    let r = q0.len();
+    assert!(members >= 1);
+    let mut out = Matrix::zeros(members, r);
+    out.row_mut(0).copy_from_slice(q0);
+    let mut rng = Rng::new(seed);
+    for i in 1..members {
+        for (j, &v) in q0.iter().enumerate() {
+            out[(i, j)] = v * (1.0 + sigma * rng.normal());
+        }
+    }
+    out
+}
+
+/// One ROM per regularization pair, re-solved from the shared training
+/// problem. Pairs whose Cholesky solve fails are skipped (returned
+/// alongside, for accounting).
+pub fn reg_pair_ensemble(
+    problem: &OpInfProblem,
+    pairs: &[(f64, f64)],
+) -> (Vec<RomOperators>, Vec<(f64, f64)>) {
+    let mut models = Vec::with_capacity(pairs.len());
+    let mut skipped = Vec::new();
+    for &(b1, b2) in pairs {
+        match problem.solve(b1, b2) {
+            Ok(ops) => models.push(ops),
+            Err(_) => skipped.push((b1, b2)),
+        }
+    }
+    (models, skipped)
+}
+
+/// Time series of ensemble statistics at one probe.
+#[derive(Clone, Debug)]
+pub struct ProbeSeries {
+    pub var: usize,
+    pub row: usize,
+    /// ensemble mean per step (over members finite at that step)
+    pub mean: Vec<f64>,
+    /// sample variance per step (0 when fewer than 2 members survive)
+    pub variance: Vec<f64>,
+    /// 5th / 50th / 95th percentiles per step
+    pub q05: Vec<f64>,
+    pub q50: Vec<f64>,
+    pub q95: Vec<f64>,
+    /// members contributing per step (surviving and finite-valued)
+    pub count: Vec<usize>,
+}
+
+impl ProbeSeries {
+    /// Empty series for one probe, pre-sized for `n_steps` — the single
+    /// construction path for the local and sharded reductions.
+    pub fn with_capacity(probe: &ProbeBasis, n_steps: usize) -> ProbeSeries {
+        ProbeSeries {
+            var: probe.var,
+            row: probe.row,
+            mean: Vec::with_capacity(n_steps),
+            variance: Vec::with_capacity(n_steps),
+            q05: Vec::with_capacity(n_steps),
+            q50: Vec::with_capacity(n_steps),
+            q95: Vec::with_capacity(n_steps),
+            count: Vec::with_capacity(n_steps),
+        }
+    }
+}
+
+/// Aggregated result of one ensemble evaluation.
+#[derive(Clone, Debug)]
+pub struct EnsembleStats {
+    pub probes: Vec<ProbeSeries>,
+    /// ensemble size B
+    pub members: usize,
+    /// steps rolled out
+    pub n_steps: usize,
+    /// `Some(step)` per member that went non-finite
+    pub diverged_at: Vec<Option<usize>>,
+}
+
+impl EnsembleStats {
+    pub fn n_diverged(&self) -> usize {
+        self.diverged_at.iter().filter(|d| d.is_some()).count()
+    }
+}
+
+/// Linear-interpolation percentile of a **sorted** slice (numpy
+/// `percentile(..., interpolation="linear")`), q ∈ [0, 1].
+fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let h = q * (n - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = (lo + 1).min(n - 1);
+    let frac = h - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// All B member values of one probe at one step: a contiguous B-wide
+/// axpy over the transposed `(r, B)` state matrix, then the affine
+/// un-centering. Shared by the local accumulator and the sharded
+/// server so both produce bitwise-identical values.
+pub(crate) fn probe_values(p: &ProbeBasis, states_t: &Matrix, out: &mut Vec<f64>) {
+    let b = states_t.cols();
+    debug_assert_eq!(states_t.rows(), p.phi.len());
+    out.clear();
+    out.resize(b, 0.0);
+    for (j, &pj) in p.phi.iter().enumerate() {
+        if pj == 0.0 {
+            continue;
+        }
+        for (v, &x) in out.iter_mut().zip(states_t.row(j)) {
+            *v += pj * x;
+        }
+    }
+    for v in out.iter_mut() {
+        *v = *v * p.scale + p.mean;
+    }
+}
+
+/// Mean / sample-variance / percentiles of one step's member values.
+/// Sorts `values` in place. Exposed to `serve::server` so sharded and
+/// local evaluations reduce through the identical code path.
+pub(crate) fn step_stats(values: &mut [f64]) -> (f64, f64, f64, f64, f64) {
+    let n = values.len();
+    assert!(n >= 1, "step_stats needs at least one surviving member");
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let variance = if n >= 2 {
+        values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    values.sort_by(f64::total_cmp);
+    (
+        mean,
+        variance,
+        percentile_sorted(values, 0.05),
+        percentile_sorted(values, 0.50),
+        percentile_sorted(values, 0.95),
+    )
+}
+
+/// Reduce one step's surviving-member values into `series`: NaN
+/// sentinels when no member survives, mean/variance/quantiles
+/// otherwise. `scratch` is sorted in place. The single reduction path
+/// shared by the local accumulator and the sharded server — keeping
+/// their outputs bitwise identical by construction.
+pub(crate) fn push_series_step(series: &mut ProbeSeries, scratch: &mut Vec<f64>) {
+    if scratch.is_empty() {
+        series.mean.push(f64::NAN);
+        series.variance.push(f64::NAN);
+        series.q05.push(f64::NAN);
+        series.q50.push(f64::NAN);
+        series.q95.push(f64::NAN);
+        series.count.push(0);
+    } else {
+        let (mean, var, q05, q50, q95) = step_stats(scratch);
+        series.mean.push(mean);
+        series.variance.push(var);
+        series.q05.push(q05);
+        series.q50.push(q50);
+        series.q95.push(q95);
+        series.count.push(scratch.len());
+    }
+}
+
+/// Streaming per-probe statistics accumulator fed one transposed
+/// `(r, B)` state batch per step.
+pub struct EnsembleAccumulator {
+    probes: Vec<ProbeBasis>,
+    series: Vec<ProbeSeries>,
+    /// scratch: all member probe values at the current step
+    vals: Vec<f64>,
+    /// scratch: surviving members' values (what step_stats reduces)
+    scratch: Vec<f64>,
+}
+
+impl EnsembleAccumulator {
+    pub fn new(probes: &[ProbeBasis], n_steps: usize) -> EnsembleAccumulator {
+        let series = probes.iter().map(|p| ProbeSeries::with_capacity(p, n_steps)).collect();
+        EnsembleAccumulator {
+            probes: probes.to_vec(),
+            series,
+            vals: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Fold in one step: `states_t` is the transposed `(r, B)`
+    /// member-state matrix (as the batched rollout streams it),
+    /// `diverged_at` the batch's divergence record (members flagged at
+    /// or before this step are excluded).
+    pub fn push_step(&mut self, step: usize, states_t: &Matrix, diverged_at: &[Option<usize>]) {
+        let b = states_t.cols();
+        debug_assert_eq!(diverged_at.len(), b);
+        for (p, series) in self.probes.iter().zip(&mut self.series) {
+            probe_values(p, states_t, &mut self.vals);
+            self.scratch.clear();
+            for (i, &v) in self.vals.iter().enumerate() {
+                let excluded = matches!(diverged_at[i], Some(at) if at <= step);
+                // a member's last *state* can still be finite while its
+                // probe dot product overflows (mixed-sign ±inf terms →
+                // inf/NaN) — exclude by value too, or the step's
+                // mean/variance would be poisoned
+                if !excluded && v.is_finite() {
+                    self.scratch.push(v);
+                }
+            }
+            push_series_step(series, &mut self.scratch);
+        }
+    }
+
+    pub fn finish(
+        self,
+        members: usize,
+        n_steps: usize,
+        diverged_at: Vec<Option<usize>>,
+    ) -> EnsembleStats {
+        EnsembleStats { probes: self.series, members, n_steps, diverged_at }
+    }
+}
+
+/// Evaluate a perturbed-IC ensemble of `spec.members` members on one
+/// artifact, streaming statistics per step. Single-threaded; see
+/// [`super::server`] for the sharded multi-worker path.
+pub fn run_ensemble(
+    engine: &Engine,
+    artifact: &RomArtifact,
+    spec: &EnsembleSpec,
+) -> Result<EnsembleStats> {
+    anyhow::ensure!(spec.members >= 1, "ensemble needs at least one member");
+    anyhow::ensure!(spec.n_steps >= 1, "ensemble needs at least one step");
+    let q0s =
+        perturbed_initial_conditions(&artifact.qhat0, spec.members, spec.sigma, spec.seed);
+    let mut acc = EnsembleAccumulator::new(&artifact.probes, spec.n_steps);
+    let diverged = rollout_batch_with(engine, &artifact.ops, &q0s, spec.n_steps, |k, states, d| {
+        acc.push_step(k, states, d);
+    });
+    Ok(acc.finish(spec.members, spec.n_steps, diverged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opinf::learn;
+    use crate::rom::quadratic::s_dim;
+    use crate::rom::rollout::solve_discrete;
+    use std::collections::BTreeMap;
+
+    fn artifact(r: usize) -> RomArtifact {
+        let ops = RomOperators::stable_sample(r, 21);
+        let probes = vec![
+            ProbeBasis { var: 0, row: 4, phi: vec![1.0; r], mean: 2.0, scale: 1.5 },
+            ProbeBasis {
+                var: 1,
+                row: 9,
+                phi: (0..r).map(|j| 0.1 * (j as f64 + 1.0)).collect(),
+                mean: -1.0,
+                scale: 1.0,
+            },
+        ];
+        RomArtifact {
+            ops,
+            qhat0: (0..r).map(|j| 0.4 - 0.05 * j as f64).collect(),
+            probes,
+            meta: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn perturbation_member_zero_is_reference() {
+        let q0 = [1.0, -2.0, 0.5];
+        let ics = perturbed_initial_conditions(&q0, 8, 0.1, 3);
+        assert_eq!(ics.row(0), &q0);
+        // deterministic per seed, differs across seeds
+        let again = perturbed_initial_conditions(&q0, 8, 0.1, 3);
+        assert_eq!(ics, again);
+        let other = perturbed_initial_conditions(&q0, 8, 0.1, 4);
+        assert!(ics.max_abs_diff(&other) > 0.0);
+        // relative: zero coordinates stay zero
+        let zics = perturbed_initial_conditions(&[0.0, 1.0], 5, 0.2, 1);
+        for i in 0..5 {
+            assert_eq!(zics[(i, 0)], 0.0);
+        }
+    }
+
+    #[test]
+    fn sigma_zero_collapses_the_ensemble() {
+        let art = artifact(4);
+        let spec = EnsembleSpec { members: 12, sigma: 0.0, seed: 1, n_steps: 30 };
+        let stats = run_ensemble(&Engine::native(), &art, &spec).unwrap();
+        assert_eq!(stats.n_diverged(), 0);
+        for series in &stats.probes {
+            // all members identical => zero variance, quantiles == mean
+            for k in 0..30 {
+                assert!(series.variance[k].abs() < 1e-24, "k={k}");
+                assert!((series.q05[k] - series.mean[k]).abs() < 1e-12);
+                assert!((series.q95[k] - series.mean[k]).abs() < 1e-12);
+                assert_eq!(series.count[k], 12);
+            }
+        }
+        // and the collapsed mean equals the deterministic probe series
+        let (_, traj) = solve_discrete(&art.ops, &art.qhat0, 30);
+        for k in 0..30 {
+            let want = art.probes[0].eval(traj.row(k));
+            assert!((stats.probes[0].mean[k] - want).abs() < 1e-10, "k={k}");
+        }
+    }
+
+    #[test]
+    fn variance_grows_with_sigma() {
+        let art = artifact(5);
+        let small = run_ensemble(
+            &Engine::native(),
+            &art,
+            &EnsembleSpec { members: 64, sigma: 1e-4, seed: 2, n_steps: 20 },
+        )
+        .unwrap();
+        let large = run_ensemble(
+            &Engine::native(),
+            &art,
+            &EnsembleSpec { members: 64, sigma: 1e-1, seed: 2, n_steps: 20 },
+        )
+        .unwrap();
+        let v_small: f64 = small.probes[0].variance.iter().sum();
+        let v_large: f64 = large.probes[0].variance.iter().sum();
+        assert!(v_large > 100.0 * v_small, "{v_large} vs {v_small}");
+    }
+
+    #[test]
+    fn quantiles_bracket_the_median() {
+        let art = artifact(3);
+        let stats = run_ensemble(
+            &Engine::native(),
+            &art,
+            &EnsembleSpec { members: 100, sigma: 0.05, seed: 5, n_steps: 15 },
+        )
+        .unwrap();
+        for series in &stats.probes {
+            for k in 0..15 {
+                assert!(series.q05[k] <= series.q50[k] && series.q50[k] <= series.q95[k]);
+                assert!(series.variance[k] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_matches_numpy_convention() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        let (_, _, q05, q50, q95) = step_stats(&mut v);
+        // numpy: percentile([1,2,3,4], 50) = 2.5, 5 -> 1.15, 95 -> 3.85
+        assert!((q50 - 2.5).abs() < 1e-12);
+        assert!((q05 - 1.15).abs() < 1e-12);
+        assert!((q95 - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diverged_members_are_excluded_and_counted() {
+        let r = 2;
+        let mut art = artifact(r);
+        art.ops.fhat[(0, 0)] = 4.0; // quadratic blow-up for big ICs
+        art.qhat0 = vec![0.05, 0.05];
+        // huge sigma: some members land on explosive ICs
+        let spec = EnsembleSpec { members: 64, sigma: 400.0, seed: 11, n_steps: 40 };
+        let stats = run_ensemble(&Engine::native(), &art, &spec).unwrap();
+        assert!(stats.n_diverged() > 0, "expected some divergence");
+        assert!(stats.n_diverged() < 64, "expected some survivors");
+        let last = &stats.probes[0];
+        let k_last = 39;
+        assert_eq!(last.count[k_last], 64 - stats.n_diverged());
+        assert!(last.mean[k_last].is_finite());
+        assert!(last.q95[k_last].is_finite());
+    }
+
+    #[test]
+    fn reg_pair_ensemble_builds_models() {
+        // learn from a synthetic stable trajectory
+        let ops = artifact(3).ops;
+        let (nans, traj) = solve_discrete(&ops, &[0.4, 0.35, 0.3], 80);
+        assert!(!nans);
+        let problem = learn::assemble(&traj.transpose());
+        let pairs = [(1e-8, 1e-8), (1e-4, 1e-2), (1.0, 1.0)];
+        let (models, skipped) = reg_pair_ensemble(&problem, &pairs);
+        assert_eq!(models.len() + skipped.len(), 3);
+        assert!(!models.is_empty());
+        for m in &models {
+            assert_eq!(m.r, 3);
+            assert_eq!(m.fhat.cols(), s_dim(3));
+        }
+    }
+}

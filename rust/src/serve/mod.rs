@@ -1,0 +1,39 @@
+//! The online stage as a service: persist trained ROMs and evaluate
+//! batched ensembles of rollouts at throughput.
+//!
+//! The paper makes ROMs cheap precisely so downstream workloads —
+//! "design space exploration, risk assessment, and uncertainty
+//! quantification" — can hammer them with queries. This subsystem is
+//! that online layer, decoupled from training:
+//!
+//! ```text
+//! train (opinf/coordinator) ──▶ RomArtifact (.rom on disk)
+//!                                   │ load
+//!                                   ▼
+//!            ensemble spec ──▶ batched rollout (one GEMM per step)
+//!                                   │ streaming stats
+//!                                   ▼
+//!            probe mean / variance / quantiles + divergence accounting
+//! ```
+//!
+//! * [`model`]    — versioned on-disk artifact: operators + probe bases
+//!   + un-centering transform + metadata (save/load, checksummed)
+//! * [`batch`]    — batched rollout kernel: B members per step as one
+//!   `(r, r+s+1) @ (r+s+1, B)` product through [`crate::runtime::Engine`]
+//! * [`ensemble`] — perturbed-IC / reg-pair ensemble construction and
+//!   streaming per-probe statistics
+//! * [`server`]   — member sharding over [`crate::comm`] rank workers
+//!   and a multi-threaded request queue over a shared artifact
+
+pub mod batch;
+pub mod ensemble;
+pub mod model;
+pub mod server;
+
+pub use batch::{rollout_batch, rollout_batch_with, BatchTrajectory};
+pub use ensemble::{
+    perturbed_initial_conditions, reg_pair_ensemble, run_ensemble, EnsembleSpec, EnsembleStats,
+    ProbeSeries,
+};
+pub use model::RomArtifact;
+pub use server::{serve_ensemble, RomServer};

@@ -1,0 +1,363 @@
+//! Versioned on-disk ROM artifact — the contract that decouples
+//! training from serving.
+//!
+//! A [`RomArtifact`] is everything the online stage needs and nothing
+//! it doesn't: the learned operator triple `(Â, Ĥ, ĉ)`, the reference
+//! reduced initial condition, the per-probe POD-basis rows with their
+//! un-centering transform ([`ProbeBasis`]), and free-form string
+//! metadata (provenance: dataset, r, optimal (β₁, β₂), training error).
+//! Training writes one with [`RomArtifact::save`]; a serving process —
+//! possibly on another machine, long after training — reads it back
+//! with [`RomArtifact::load`] and feeds it to `serve::batch` /
+//! `serve::server`.
+//!
+//! ## Wire format (`.rom`, little-endian)
+//!
+//! | section | bytes |
+//! |---------|-------|
+//! | magic   | 8 (`DOPINFRM`) |
+//! | format version | u32 |
+//! | header length  | u64 |
+//! | header  | JSON: dims, probe ids, metadata |
+//! | payload | f64 array: Â, Ĥ, ĉ, q̂₀, then per-probe (φ, mean, scale) |
+//! | checksum | u64 FNV-1a over header+payload |
+//!
+//! The payload is raw little-endian f64 (bitwise round-trip — operator
+//! equality after `save → load` is exact, which the tests assert), and
+//! the trailing checksum turns silent corruption into a load error.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::opinf::postprocess::ProbeBasis;
+use crate::rom::quadratic::s_dim;
+use crate::rom::RomOperators;
+use crate::util::json::{self, Json};
+
+/// File magic: identifies a dOpInf ROM artifact.
+pub const MAGIC: &[u8; 8] = b"DOPINFRM";
+
+/// Current artifact format version. Bump on any wire-format change;
+/// `load` rejects versions it does not understand.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// A trained ROM packaged for serving.
+#[derive(Clone, Debug)]
+pub struct RomArtifact {
+    /// learned operator triple (Â, Ĥ, ĉ)
+    pub ops: RomOperators,
+    /// reference reduced initial condition (first training state) —
+    /// the anchor that ensembles perturb
+    pub qhat0: Vec<f64>,
+    /// per-probe basis rows + un-centering transforms
+    pub probes: Vec<ProbeBasis>,
+    /// free-form provenance metadata (dataset, β pair, train error, …)
+    pub meta: BTreeMap<String, String>,
+}
+
+/// FNV-1a 64-bit checksum (deterministic, dependency-free).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn push_f64s(out: &mut Vec<u8>, values: &[f64]) {
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn take_f64s(bytes: &[u8], cursor: &mut usize, count: usize) -> Result<Vec<f64>> {
+    let need = count.checked_mul(8).context("corrupt artifact: payload size overflows")?;
+    let end = cursor.checked_add(need).context("corrupt artifact: payload offset overflows")?;
+    if end > bytes.len() {
+        bail!("truncated artifact payload: want {need} bytes at offset {cursor}");
+    }
+    let out = bytes[*cursor..end]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    *cursor = end;
+    Ok(out)
+}
+
+impl RomArtifact {
+    /// Reduced dimension of the packaged model.
+    pub fn r(&self) -> usize {
+        self.ops.r
+    }
+
+    /// Serialize to the versioned wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let r = self.ops.r;
+        let s = s_dim(r);
+        assert_eq!(self.qhat0.len(), r, "qhat0 length != r");
+        for p in &self.probes {
+            assert_eq!(p.phi.len(), r, "probe phi length != r");
+        }
+
+        let meta_obj = Json::Obj(
+            self.meta.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let probes_arr = Json::Arr(
+            self.probes
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("var", Json::Num(p.var as f64)),
+                        ("row", Json::Num(p.row as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let header = json::emit(&Json::obj(vec![
+            ("r", Json::Num(r as f64)),
+            ("n_probes", Json::Num(self.probes.len() as f64)),
+            ("probes", probes_arr),
+            ("meta", meta_obj),
+        ]));
+
+        let mut payload = Vec::with_capacity((r * r + r * s + 2 * r + self.probes.len() * (r + 2)) * 8);
+        push_f64s(&mut payload, self.ops.ahat.data());
+        push_f64s(&mut payload, self.ops.fhat.data());
+        push_f64s(&mut payload, &self.ops.chat);
+        push_f64s(&mut payload, &self.qhat0);
+        for p in &self.probes {
+            push_f64s(&mut payload, &p.phi);
+            push_f64s(&mut payload, &[p.mean, p.scale]);
+        }
+
+        let mut out = Vec::with_capacity(8 + 4 + 8 + header.len() + payload.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&payload);
+        let check = fnv1a(&out[8 + 4 + 8..]);
+        out.extend_from_slice(&check.to_le_bytes());
+        out
+    }
+
+    /// Parse the wire format (strict: magic, version, checksum, sizes).
+    pub fn from_bytes(bytes: &[u8]) -> Result<RomArtifact> {
+        if bytes.len() < 8 + 4 + 8 + 8 {
+            bail!("artifact too short ({} bytes)", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("not a dOpInf ROM artifact (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            bail!("unsupported ROM artifact version {version} (this build reads {FORMAT_VERSION})");
+        }
+        // header_len is not covered by the checksum (it locates it), so
+        // treat it as hostile: no unchecked arithmetic before validation
+        let header_len_raw = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let body_start = 20usize;
+        let check_start = bytes.len() - 8;
+        let header_len = usize::try_from(header_len_raw)
+            .ok()
+            .filter(|hl| {
+                body_start.checked_add(*hl).map_or(false, |end| end <= check_start)
+            })
+            .with_context(|| {
+                format!("corrupt artifact: header length {header_len_raw} exceeds file body")
+            })?;
+        let want_check = u64::from_le_bytes(bytes[check_start..].try_into().unwrap());
+        let got_check = fnv1a(&bytes[body_start..check_start]);
+        if want_check != got_check {
+            bail!("corrupt artifact: checksum mismatch ({got_check:#018x} != {want_check:#018x})");
+        }
+
+        let header_text = std::str::from_utf8(&bytes[body_start..body_start + header_len])
+            .context("artifact header is not UTF-8")?;
+        let header = json::parse(header_text)
+            .map_err(|e| anyhow::anyhow!("artifact header: {e}"))?;
+        let r = header.get("r").and_then(Json::as_usize).context("header missing r")?;
+        if r == 0 || r > 100_000 {
+            bail!("corrupt artifact: implausible reduced dimension r = {r}");
+        }
+        let n_probes =
+            header.get("n_probes").and_then(Json::as_usize).context("header missing n_probes")?;
+        let probe_ids: Vec<(usize, usize)> = header
+            .get("probes")
+            .and_then(Json::as_arr)
+            .context("header missing probes")?
+            .iter()
+            .map(|p| -> Result<(usize, usize)> {
+                Ok((
+                    p.get("var").and_then(Json::as_usize).context("probe var")?,
+                    p.get("row").and_then(Json::as_usize).context("probe row")?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        if probe_ids.len() != n_probes {
+            bail!("corrupt artifact: {} probe ids, n_probes says {n_probes}", probe_ids.len());
+        }
+        let mut meta = BTreeMap::new();
+        if let Some(obj) = header.get("meta").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                meta.insert(k.clone(), v.as_str().context("meta values must be strings")?.to_string());
+            }
+        }
+
+        let s = s_dim(r);
+        let payload = &bytes[body_start + header_len..check_start];
+        let mut cursor = 0usize;
+        let ahat = Matrix::from_vec(r, r, take_f64s(payload, &mut cursor, r * r)?);
+        let fhat = Matrix::from_vec(r, s, take_f64s(payload, &mut cursor, r * s)?);
+        let chat = take_f64s(payload, &mut cursor, r)?;
+        let qhat0 = take_f64s(payload, &mut cursor, r)?;
+        let mut probes = Vec::with_capacity(n_probes);
+        for &(var, row) in &probe_ids {
+            let phi = take_f64s(payload, &mut cursor, r)?;
+            let tail = take_f64s(payload, &mut cursor, 2)?;
+            probes.push(ProbeBasis { var, row, phi, mean: tail[0], scale: tail[1] });
+        }
+        if cursor != payload.len() {
+            bail!("corrupt artifact: {} trailing payload bytes", payload.len() - cursor);
+        }
+
+        Ok(RomArtifact { ops: RomOperators { r, ahat, fhat, chat }, qhat0, probes, meta })
+    }
+
+    /// Write the artifact to `path` (parent directories created).
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&self.to_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Read an artifact back from `path`.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<RomArtifact> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open ROM artifact {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("load ROM artifact {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_artifact(r: usize, n_probes: usize) -> RomArtifact {
+        let mut a = Matrix::randn(r, r, 1);
+        a.scale(0.1);
+        let mut f = Matrix::randn(r, s_dim(r), 2);
+        f.scale(0.02);
+        let ops = RomOperators { r, ahat: a, fhat: f, chat: vec![0.25; r] };
+        let probes = (0..n_probes)
+            .map(|i| ProbeBasis {
+                var: i % 2,
+                row: 10 * i + 3,
+                phi: Matrix::randn(1, r, 7 + i as u64).into_vec(),
+                mean: 1.5 + i as f64,
+                scale: 2.0,
+            })
+            .collect();
+        let mut meta = BTreeMap::new();
+        meta.insert("dataset".to_string(), "synthetic".to_string());
+        meta.insert("beta_pair".to_string(), "(1e-6, 1e-2)".to_string());
+        RomArtifact { ops, qhat0: vec![0.5; r], probes, meta }
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_bitwise() {
+        let art = sample_artifact(6, 3);
+        let back = RomArtifact::from_bytes(&art.to_bytes()).unwrap();
+        // bitwise operator equality (Matrix PartialEq compares raw f64)
+        assert_eq!(back.ops.ahat, art.ops.ahat);
+        assert_eq!(back.ops.fhat, art.ops.fhat);
+        assert_eq!(back.ops.chat, art.ops.chat);
+        assert_eq!(back.qhat0, art.qhat0);
+        assert_eq!(back.probes, art.probes);
+        assert_eq!(back.meta, art.meta);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dopinf_rom_artifact_test");
+        let path = dir.join("model.rom");
+        let art = sample_artifact(4, 2);
+        art.save(&path).unwrap();
+        let back = RomArtifact::load(&path).unwrap();
+        assert_eq!(back.ops.ahat, art.ops.ahat);
+        assert_eq!(back.probes.len(), 2);
+        assert_eq!(back.meta.get("dataset").map(String::as_str), Some("synthetic"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn no_probes_and_empty_meta() {
+        let mut art = sample_artifact(3, 0);
+        art.meta.clear();
+        let back = RomArtifact::from_bytes(&art.to_bytes()).unwrap();
+        assert!(back.probes.is_empty());
+        assert!(back.meta.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample_artifact(3, 1).to_bytes();
+        bytes[0] = b'X';
+        let err = RomArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut bytes = sample_artifact(3, 1).to_bytes();
+        bytes[8] = 99;
+        let err = RomArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_flipped_payload_byte() {
+        let mut bytes = sample_artifact(5, 2).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = RomArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn rejects_hostile_header_length_without_panicking() {
+        // header_len is outside the checksum; a corrupted huge value
+        // must surface as an error, not an overflow panic
+        let mut bytes = sample_artifact(3, 1).to_bytes();
+        bytes[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = RomArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("header length"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = sample_artifact(5, 2).to_bytes();
+        for keep in [0, 7, 19, bytes.len() / 2, bytes.len() - 1] {
+            assert!(RomArtifact::from_bytes(&bytes[..keep]).is_err(), "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn load_missing_file_errors_with_path() {
+        let err = RomArtifact::load("/definitely/not/here.rom").unwrap_err();
+        assert!(format!("{err:#}").contains("here.rom"), "{err:#}");
+    }
+}

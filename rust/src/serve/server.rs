@@ -1,0 +1,306 @@
+//! Serving: shard one ensemble across rank workers, and queue many
+//! ensemble requests over a worker pool.
+//!
+//! Two orthogonal layers of parallelism:
+//!
+//! * [`serve_ensemble`] — scale **one request**: members are sharded
+//!   contiguously over `workers` rank threads (the same
+//!   [`crate::comm`] SPMD machinery the training pipeline uses), each
+//!   shard runs the batched rollout streaming its probe values, the
+//!   per-member series are combined with an `Allgather`, and rank 0
+//!   reduces them in global member order. On the native engine the
+//!   result is bitwise equal to the single-threaded path (asserted in
+//!   tests); with PJRT artifacts loaded, shard widths can select
+//!   different artifact/native routes, so agreement there is to
+//!   floating-point accuracy, not bitwise.
+//! * [`RomServer`] — scale **request throughput**: a multi-threaded
+//!   request queue over one shared [`RomArtifact`]; each worker owns a
+//!   native engine and drains jobs from the queue, so B×steps work from
+//!   many clients overlaps.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::comm::{self, CostModel};
+use crate::io::partition::distribute_balanced;
+use crate::runtime::Engine;
+
+use super::batch::rollout_batch_with;
+use super::ensemble::{
+    perturbed_initial_conditions, probe_values, push_series_step, run_ensemble, EnsembleSpec,
+    EnsembleStats, ProbeSeries,
+};
+use super::model::RomArtifact;
+
+/// Evaluate one perturbed-IC ensemble with its members sharded over
+/// `workers` rank threads. On the native engine statistics are
+/// identical (bitwise) to [`run_ensemble`] on one thread: the global
+/// IC matrix is built once, shards are contiguous member ranges, and
+/// the gathered per-member series are reduced in global member order
+/// through the same [`push_series_step`] path.
+pub fn serve_ensemble(
+    engine: &Engine,
+    artifact: &RomArtifact,
+    spec: &EnsembleSpec,
+    workers: usize,
+) -> Result<EnsembleStats> {
+    anyhow::ensure!(spec.members >= 1, "ensemble needs at least one member");
+    anyhow::ensure!(spec.n_steps >= 1, "ensemble needs at least one step");
+    let workers = workers.max(1).min(spec.members);
+    if workers == 1 {
+        return run_ensemble(engine, artifact, spec);
+    }
+
+    let q0s =
+        perturbed_initial_conditions(&artifact.qhat0, spec.members, spec.sigma, spec.seed);
+    let shards = distribute_balanced(spec.members, workers);
+    let n_probes = artifact.probes.len();
+    let n_steps = spec.n_steps;
+
+    let outputs = comm::run(workers, CostModel::free(), |ctx| {
+        let shard = shards[ctx.rank()];
+        let shard_b = shard.len();
+        // shard rollout, streaming member probe values:
+        // values[p * n_steps * shard_b + k * shard_b + i]
+        let mut values = vec![0.0; n_probes * n_steps * shard_b];
+        let q0_shard = q0s.slice_rows(shard.start, shard.end);
+        let mut vals = Vec::new();
+        let diverged =
+            rollout_batch_with(engine, &artifact.ops, &q0_shard, n_steps, |k, states_t, _| {
+                for (p, probe) in artifact.probes.iter().enumerate() {
+                    probe_values(probe, states_t, &mut vals);
+                    let base = p * n_steps * shard_b + k * shard_b;
+                    values[base..base + shard_b].copy_from_slice(&vals);
+                }
+            });
+
+        // share per-member series + divergence flags with every rank
+        let all_values = ctx.allgather(&values);
+        let mut flags = vec![-1.0; shard_b];
+        for (i, d) in diverged.iter().enumerate() {
+            if let Some(at) = d {
+                flags[i] = *at as f64;
+            }
+        }
+        let all_flags = ctx.allgather(&flags);
+
+        // every rank participated in the collectives above; only rank 0
+        // pays for the global reduction (the others' copies would be
+        // discarded anyway)
+        if ctx.rank() != 0 {
+            return None;
+        }
+
+        // reassemble global member order (shards are contiguous,
+        // ascending by rank) and reduce
+        let mut diverged_at: Vec<Option<usize>> = Vec::with_capacity(spec.members);
+        for rank_flags in &all_flags {
+            for &f in rank_flags {
+                diverged_at.push(if f < 0.0 { None } else { Some(f as usize) });
+            }
+        }
+
+        let mut probes_out: Vec<ProbeSeries> = artifact
+            .probes
+            .iter()
+            .map(|p| ProbeSeries::with_capacity(p, n_steps))
+            .collect();
+        let mut scratch: Vec<f64> = Vec::with_capacity(spec.members);
+        for (p, series) in probes_out.iter_mut().enumerate() {
+            for k in 0..n_steps {
+                scratch.clear();
+                let mut member = 0usize;
+                for (rank, rank_values) in all_values.iter().enumerate() {
+                    let rb = shards[rank].len();
+                    let base = p * n_steps * rb + k * rb;
+                    for i in 0..rb {
+                        let excluded =
+                            matches!(diverged_at[member], Some(at) if at <= k);
+                        let v = rank_values[base + i];
+                        // same value-finiteness filter as the local
+                        // accumulator (see ensemble::EnsembleAccumulator)
+                        if !excluded && v.is_finite() {
+                            scratch.push(v);
+                        }
+                        member += 1;
+                    }
+                }
+                push_series_step(series, &mut scratch);
+            }
+        }
+
+        Some(EnsembleStats {
+            probes: probes_out,
+            members: spec.members,
+            n_steps,
+            diverged_at,
+        })
+    });
+
+    outputs.into_iter().flatten().next().context("no workers ran")
+}
+
+struct Job {
+    spec: EnsembleSpec,
+    reply: mpsc::Sender<Result<EnsembleStats>>,
+}
+
+/// Multi-threaded ensemble request queue over one shared ROM artifact.
+///
+/// Each worker thread owns a native [`Engine`] and drains jobs from the
+/// shared queue; [`RomServer::submit`] returns a one-shot channel the
+/// caller reads when convenient, so many clients' requests overlap.
+/// Dropping the server (or calling [`RomServer::shutdown`]) closes the
+/// queue and joins the workers after in-flight jobs finish.
+pub struct RomServer {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl RomServer {
+    /// Spawn `workers` threads serving `artifact`.
+    pub fn start(artifact: RomArtifact, workers: usize) -> RomServer {
+        let artifact = Arc::new(artifact);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let artifact = Arc::clone(&artifact);
+                std::thread::spawn(move || {
+                    let engine = Engine::native();
+                    loop {
+                        // scope the guard so the lock is held only while
+                        // dequeuing, not while running the job
+                        let dequeued = { rx.lock().unwrap().recv() };
+                        let job = match dequeued {
+                            Ok(job) => job,
+                            Err(_) => break, // queue closed
+                        };
+                        let out = run_ensemble(&engine, &artifact, &job.spec);
+                        // a dropped reply receiver just means the client
+                        // stopped caring; not an error
+                        let _ = job.reply.send(out);
+                    }
+                })
+            })
+            .collect();
+        RomServer { tx: Some(tx), handles }
+    }
+
+    /// Enqueue one ensemble evaluation; the returned channel yields the
+    /// result when a worker finishes it.
+    pub fn submit(&self, spec: EnsembleSpec) -> mpsc::Receiver<Result<EnsembleStats>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(Job { spec, reply })
+            .expect("worker pool alive");
+        rx
+    }
+
+    /// Drain the queue and join the workers.
+    pub fn shutdown(self) {
+        // Drop impl does the work
+    }
+}
+
+impl Drop for RomServer {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue: workers' recv() errors out
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opinf::postprocess::ProbeBasis;
+    use crate::rom::RomOperators;
+    use std::collections::BTreeMap;
+
+    fn artifact(r: usize) -> RomArtifact {
+        RomArtifact {
+            ops: RomOperators::stable_sample(r, 33),
+            qhat0: (0..r).map(|j| 0.3 + 0.02 * j as f64).collect(),
+            probes: vec![
+                ProbeBasis { var: 0, row: 1, phi: vec![0.5; r], mean: 1.0, scale: 2.0 },
+                ProbeBasis { var: 1, row: 7, phi: vec![-0.25; r], mean: 0.0, scale: 1.0 },
+            ],
+            meta: BTreeMap::new(),
+        }
+    }
+
+    fn assert_stats_equal(a: &EnsembleStats, b: &EnsembleStats) {
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.diverged_at, b.diverged_at);
+        assert_eq!(a.probes.len(), b.probes.len());
+        for (pa, pb) in a.probes.iter().zip(&b.probes) {
+            assert_eq!(pa.mean, pb.mean);
+            assert_eq!(pa.variance, pb.variance);
+            assert_eq!(pa.q05, pb.q05);
+            assert_eq!(pa.q50, pb.q50);
+            assert_eq!(pa.q95, pb.q95);
+            assert_eq!(pa.count, pb.count);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_threaded_bitwise() {
+        let art = artifact(4);
+        let engine = Engine::native();
+        let spec = EnsembleSpec { members: 23, sigma: 0.05, seed: 9, n_steps: 40 };
+        let serial = run_ensemble(&engine, &art, &spec).unwrap();
+        for workers in [2usize, 3, 5, 8] {
+            let sharded = serve_ensemble(&engine, &art, &spec, workers).unwrap();
+            assert_stats_equal(&serial, &sharded);
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        let art = artifact(3);
+        let engine = Engine::native();
+        let spec = EnsembleSpec { members: 2, sigma: 0.01, seed: 1, n_steps: 10 };
+        // more workers than members must not panic or change results
+        let a = serve_ensemble(&engine, &art, &spec, 16).unwrap();
+        let b = run_ensemble(&engine, &art, &spec).unwrap();
+        assert_stats_equal(&a, &b);
+    }
+
+    #[test]
+    fn queue_serves_concurrent_requests() {
+        let art = artifact(3);
+        let server = RomServer::start(art.clone(), 3);
+        let specs: Vec<EnsembleSpec> = (0..6)
+            .map(|i| EnsembleSpec {
+                members: 10 + i,
+                sigma: 0.01 * (i as f64 + 1.0),
+                seed: i as u64,
+                n_steps: 20,
+            })
+            .collect();
+        let tickets: Vec<_> = specs.iter().map(|s| server.submit(s.clone())).collect();
+        let engine = Engine::native();
+        for (spec, ticket) in specs.iter().zip(tickets) {
+            let got = ticket.recv().expect("worker replied").expect("ensemble ok");
+            let want = run_ensemble(&engine, &art, spec).unwrap();
+            assert_stats_equal(&want, &got);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let server = RomServer::start(artifact(2), 2);
+        let ticket = server.submit(EnsembleSpec { members: 4, sigma: 0.0, seed: 0, n_steps: 5 });
+        drop(server); // must finish the in-flight job, then join
+        assert!(ticket.recv().is_ok());
+    }
+}

@@ -15,15 +15,21 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn engine() -> Engine {
+/// The PJRT-backed engine, or `None` (test skipped) when the AOT
+/// artifacts have not been built: `make artifacts` needs the Python/JAX
+/// toolchain, which CI runners and bare checkouts don't have. Native
+/// fallback behavior is covered unconditionally in `runtime::exec`'s
+/// unit tests; these PJRT-equivalence tests engage wherever the
+/// artifacts directory exists.
+fn engine() -> Option<Engine> {
     let dir = artifacts_dir();
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
     let e = Engine::from_artifacts(&dir).expect("engine");
     assert!(e.has_artifacts());
-    e
+    Some(e)
 }
 
 /// tiny profile shapes (python/compile/shapes.py): block_rows=64, nt=24,
@@ -34,7 +40,7 @@ const STEPS: usize = 32;
 
 #[test]
 fn pjrt_gram_matches_native_exact_blocks() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let q = Matrix::randn(128, NT, 1); // exactly 2 blocks of 64
     let got = e.gram(&q);
     let want = syrk(&q);
@@ -44,7 +50,7 @@ fn pjrt_gram_matches_native_exact_blocks() {
 
 #[test]
 fn pjrt_gram_pads_ragged_tail() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     for rows in [1, 63, 65, 100, 200] {
         let q = Matrix::randn(rows, NT, rows as u64);
         let got = e.gram(&q);
@@ -59,7 +65,7 @@ fn pjrt_gram_pads_ragged_tail() {
 
 #[test]
 fn pjrt_gram_falls_back_on_other_nt() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let q = Matrix::randn(50, 17, 3); // nt=17 has no artifact
     let got = e.gram(&q);
     assert_eq!(got, syrk(&q));
@@ -88,7 +94,7 @@ fn sample_ops(r: usize) -> (RomOperators, Vec<f64>) {
 
 #[test]
 fn pjrt_rollout_matches_native_at_rmax() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (ops, q0) = sample_ops(RMAX);
     let (nans_p, got) = e.rollout(&ops, &q0, STEPS);
     let (nans_n, want) = solve_discrete(&ops, &q0, STEPS);
@@ -100,7 +106,7 @@ fn pjrt_rollout_matches_native_at_rmax() {
 
 #[test]
 fn pjrt_rollout_pads_smaller_r() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     for r in [1, 3, 5] {
         let (ops, q0) = sample_ops(r);
         let (nans_p, got) = e.rollout(&ops, &q0, STEPS);
@@ -112,7 +118,7 @@ fn pjrt_rollout_pads_smaller_r() {
 
 #[test]
 fn pjrt_rollout_falls_back_on_other_steps() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (ops, q0) = sample_ops(4);
     let (_, got) = e.rollout(&ops, &q0, 19); // no 19-step artifact
     let (_, want) = solve_discrete(&ops, &q0, 19);
@@ -121,7 +127,7 @@ fn pjrt_rollout_falls_back_on_other_steps() {
 
 #[test]
 fn pjrt_project_matches_native() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let q = Matrix::randn(100, NT, 21);
     let d = syrk(&q);
     for r in [1, 4, RMAX] {
@@ -135,7 +141,7 @@ fn pjrt_project_matches_native() {
 
 #[test]
 fn pjrt_reconstruct_matches_native() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     for (rows, r) in [(64, RMAX), (130, 4), (7, 1)] {
         let vr = Matrix::randn(rows, r, 31);
         let qt = Matrix::randn(r, STEPS, 32); // recon_cols == 32 in tiny
@@ -152,7 +158,7 @@ fn pjrt_reconstruct_matches_native() {
 
 #[test]
 fn pjrt_rollout_propagates_nans() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let mut ops = RomOperators::zeros(RMAX);
     ops.fhat[(0, 0)] = 50.0;
     let q0 = vec![100.0; RMAX];
@@ -162,7 +168,8 @@ fn pjrt_rollout_propagates_nans() {
 
 #[test]
 fn engine_is_shareable_across_threads() {
-    let e = std::sync::Arc::new(engine());
+    let Some(e) = engine() else { return };
+    let e = std::sync::Arc::new(e);
     let q = std::sync::Arc::new(Matrix::randn(96, NT, 77));
     let want = syrk(&q);
     std::thread::scope(|s| {

@@ -1,0 +1,178 @@
+//! Serving-layer integration: the full train → artifact → load →
+//! batched-ensemble flow on real pipeline output, plus the
+//! batched-vs-sequential rollout contract at integration scale.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::linalg::Matrix;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::{solve_discrete, RegGrid};
+use dopinf::runtime::Engine;
+use dopinf::serve::{
+    rollout_batch, run_ensemble, serve_ensemble, EnsembleSpec, RomArtifact, RomServer,
+};
+use dopinf::sim::synth::{generate, SynthSpec};
+
+fn trained_artifact() -> (RomArtifact, dopinf::DOpInfResult) {
+    let spec = SynthSpec { nx: 150, ns: 2, nt: 60, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.5,
+        nt_p: 120,
+    };
+    let mut cfg = DOpInfConfig::new(2, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.probes = vec![(0, 10), (1, 140)];
+    let result = run_distributed(&cfg, &DataSource::InMemory(Arc::new(q))).unwrap();
+
+    let mut meta = BTreeMap::new();
+    meta.insert("dataset".to_string(), "synth-150".to_string());
+    let artifact = RomArtifact {
+        ops: result.ops.clone(),
+        qhat0: result.qhat0.clone(),
+        probes: result.probe_bases.clone(),
+        meta,
+    };
+    (artifact, result)
+}
+
+#[test]
+fn train_save_load_serve_end_to_end() {
+    let (artifact, result) = trained_artifact();
+
+    // save → load is bitwise on everything that matters
+    let dir = std::env::temp_dir().join("dopinf_serve_integration");
+    let path = dir.join("model.rom");
+    artifact.save(&path).unwrap();
+    let served = RomArtifact::load(&path).unwrap();
+    assert_eq!(served.ops.ahat, artifact.ops.ahat);
+    assert_eq!(served.ops.fhat, artifact.ops.fhat);
+    assert_eq!(served.ops.chat, artifact.ops.chat);
+    assert_eq!(served.qhat0, artifact.qhat0);
+    assert_eq!(served.probes, artifact.probes);
+    assert_eq!(served.meta.get("dataset").map(String::as_str), Some("synth-150"));
+
+    // serve a small ensemble from the loaded artifact
+    let spec = EnsembleSpec { members: 32, sigma: 0.01, seed: 3, n_steps: 120 };
+    let stats = serve_ensemble(&Engine::native(), &served, &spec, 3).unwrap();
+    assert_eq!(stats.members, 32);
+    assert_eq!(stats.n_diverged(), 0, "a trained stable ROM must not diverge at sigma=1%");
+
+    // the ensemble tracks the deterministic training-time prediction
+    for (series, pred) in stats.probes.iter().zip(&result.probes) {
+        assert_eq!((series.var, series.row), (pred.var, pred.row));
+        for t in 0..120 {
+            let err = (series.mean[t] - pred.values[t]).abs();
+            let scale = pred.values[t].abs().max(1.0);
+            assert!(err < 0.05 * scale, "t={t}: ensemble mean drifts {err}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batched_rollout_matches_sequential_on_trained_model() {
+    let (artifact, _) = trained_artifact();
+    let engine = Engine::native();
+    // perturbed ICs around the trained model's anchor, B = 1..32
+    for b in [1usize, 4, 16, 32] {
+        let q0s = dopinf::serve::perturbed_initial_conditions(&artifact.qhat0, b, 0.02, b as u64);
+        let batch = rollout_batch(&engine, &artifact.ops, &q0s, 120);
+        for i in 0..b {
+            let (nans, want) = solve_discrete(&artifact.ops, q0s.row(i), 120);
+            assert!(!nans, "b={b} member {i}");
+            let diff = batch.member_trajectory(i).max_abs_diff(&want);
+            assert!(diff < 1e-12, "b={b} member {i}: diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn sharded_server_equals_local_ensemble() {
+    let (artifact, _) = trained_artifact();
+    let engine = Engine::native();
+    let spec = EnsembleSpec { members: 40, sigma: 0.03, seed: 12, n_steps: 80 };
+    let local = run_ensemble(&engine, &artifact, &spec).unwrap();
+    let sharded = serve_ensemble(&engine, &artifact, &spec, 4).unwrap();
+    assert_eq!(local.diverged_at, sharded.diverged_at);
+    for (a, b) in local.probes.iter().zip(&sharded.probes) {
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.variance, b.variance);
+        assert_eq!(a.q05, b.q05);
+        assert_eq!(a.q50, b.q50);
+        assert_eq!(a.q95, b.q95);
+        assert_eq!(a.count, b.count);
+    }
+}
+
+#[test]
+fn request_queue_matches_direct_evaluation() {
+    let (artifact, _) = trained_artifact();
+    let server = RomServer::start(artifact.clone(), 2);
+    let specs: Vec<EnsembleSpec> = (0..4)
+        .map(|i| EnsembleSpec { members: 8 + 4 * i, sigma: 0.02, seed: i as u64, n_steps: 50 })
+        .collect();
+    let tickets: Vec<_> = specs.iter().map(|s| server.submit(s.clone())).collect();
+    let engine = Engine::native();
+    for (spec, ticket) in specs.iter().zip(tickets) {
+        let got = ticket.recv().unwrap().unwrap();
+        let want = run_ensemble(&engine, &artifact, spec).unwrap();
+        assert_eq!(got.members, want.members);
+        for (a, b) in got.probes.iter().zip(&want.probes) {
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.variance, b.variance);
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn corrupted_artifact_files_fail_loudly() {
+    let (artifact, _) = trained_artifact();
+    let dir = std::env::temp_dir().join("dopinf_serve_corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bytes = artifact.to_bytes();
+
+    // bit flip in the middle
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    std::fs::write(dir.join("flipped.rom"), &flipped).unwrap();
+    assert!(RomArtifact::load(dir.join("flipped.rom")).is_err());
+
+    // truncation
+    std::fs::write(dir.join("short.rom"), &bytes[..bytes.len() / 3]).unwrap();
+    assert!(RomArtifact::load(dir.join("short.rom")).is_err());
+
+    // not an artifact at all
+    std::fs::write(dir.join("junk.rom"), b"hello world, not a rom").unwrap();
+    assert!(RomArtifact::load(dir.join("junk.rom")).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_is_deterministic_and_composition_independent() {
+    // a member's trajectory must not depend on which batch it rides in
+    let (artifact, _) = trained_artifact();
+    let engine = Engine::native();
+    let q0s = dopinf::serve::perturbed_initial_conditions(&artifact.qhat0, 24, 0.05, 99);
+    let full = rollout_batch(&engine, &artifact.ops, &q0s, 60);
+    let half = rollout_batch(&engine, &artifact.ops, &q0s.slice_rows(0, 12), 60);
+    for i in 0..12 {
+        assert_eq!(
+            full.member_trajectory(i).data(),
+            half.member_trajectory(i).data(),
+            "member {i} depends on batch composition"
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Offline vendored subset of the `libc` crate: exactly the symbols
+//! `dopinf::util::timer` needs to read `CLOCK_THREAD_CPUTIME_ID` on
+//! Linux (the only target this repo builds for — see DESIGN notes in
+//! `rust/src/comm/mod.rs` on the per-thread virtual clocks).
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+pub type time_t = i64;
+
+/// Per-thread CPU-time clock id (Linux, all architectures).
+pub const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct timespec {
+    pub tv_sec: time_t,
+    pub tv_nsec: c_long,
+}
+
+extern "C" {
+    pub fn clock_gettime(clockid: c_int, tp: *mut timespec) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cputime_clock_readable() {
+        let mut ts = timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        assert_eq!(rc, 0);
+        assert!(ts.tv_sec >= 0 && ts.tv_nsec >= 0);
+    }
+}
