@@ -20,7 +20,7 @@ use dopinf::coordinator::pipeline::run_distributed;
 use dopinf::opinf::serial::OpInfConfig;
 use dopinf::rom::RegGrid;
 use dopinf::runtime::Engine;
-use dopinf::serve::{serve_ensemble, EnsembleSpec, RomArtifact};
+use dopinf::serve::{serve_ensemble, EnsembleSpec, RegBlocks, RomArtifact};
 use dopinf::sim::synth::{generate, SynthSpec};
 
 fn main() -> anyhow::Result<()> {
@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         ops: result.ops.clone(),
         qhat0: result.qhat0.clone(),
         probes: result.probe_bases.clone(),
+        reg: Some(RegBlocks::from_problem(&result.problem)),
         meta,
     };
     let path = std::env::temp_dir().join("dopinf_ensemble_uq").join("synth.rom");

@@ -1,0 +1,118 @@
+//! Collective-primitive microbenchmark across transports.
+//!
+//! `cargo bench --bench comm_collectives`
+//!
+//! Measures each [`Communicator`] primitive per backend (thread
+//! shared-board vs localhost sockets) at p ∈ {2, 4}, reporting bytes/s
+//! (the `elems` column is the payload volume crossing the transport
+//! per run) and writing `results/comm_collectives.json` via
+//! `util::benchkit` — the seed of the perf trajectory for future
+//! transports.
+//!
+//! Each iteration spins the full rank group (thread spawn, and for the
+//! socket backend the TCP rendezvous) and then runs ROUNDS collective
+//! rounds, so fixed setup cost amortizes; the `barrier` row is the
+//! near-zero-payload baseline to subtract for per-byte costs.
+
+use dopinf::comm::{self, Communicator, CostModel, Op};
+use dopinf::util::benchkit::Bench;
+
+#[derive(Clone, Copy, Debug)]
+enum Backend {
+    Threads,
+    Sockets,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Prim {
+    Allreduce,
+    AllreduceInplace,
+    Broadcast,
+    Allgather,
+    Gather,
+    Reduce,
+    ReduceScatter,
+    Barrier,
+}
+
+const PRIMS: [(Prim, &str); 8] = [
+    (Prim::Allreduce, "allreduce"),
+    (Prim::AllreduceInplace, "allreduce_inplace"),
+    (Prim::Broadcast, "broadcast"),
+    (Prim::Allgather, "allgather"),
+    (Prim::Gather, "gather"),
+    (Prim::Reduce, "reduce"),
+    (Prim::ReduceScatter, "reduce_scatter_block"),
+    (Prim::Barrier, "barrier"),
+];
+
+/// collective rounds per rank-group spin
+const ROUNDS: usize = 8;
+
+/// One rank's work: ROUNDS rounds of the primitive over a `len`-element
+/// payload. Returns a checksum so nothing is optimized away.
+fn collective_pass<C: Communicator>(ctx: &mut C, prim: Prim, len: usize) -> f64 {
+    let data = vec![ctx.rank() as f64 + 0.5; len];
+    let mut acc = 0.0;
+    for _ in 0..ROUNDS {
+        acc += match prim {
+            Prim::Allreduce => ctx.allreduce(&data, Op::Sum)[0],
+            Prim::AllreduceInplace => {
+                let mut d = data.clone();
+                ctx.allreduce_inplace(&mut d, Op::Sum);
+                d[0]
+            }
+            Prim::Broadcast => {
+                let payload = (ctx.rank() == 0).then(|| data.clone());
+                ctx.broadcast(0, payload)[0]
+            }
+            Prim::Allgather => ctx.allgather(&data)[0][0],
+            Prim::Gather => ctx.gather(0, &data).map_or(0.0, |parts| parts[0][0]),
+            Prim::Reduce => ctx.reduce(0, &data, Op::Sum).map_or(0.0, |v| v[0]),
+            Prim::ReduceScatter => ctx.reduce_scatter_block(&data, Op::Sum)[0],
+            Prim::Barrier => {
+                ctx.barrier();
+                0.0
+            }
+        };
+    }
+    acc
+}
+
+fn payload_bytes(prim: Prim, p: usize, len: usize) -> usize {
+    // volume crossing the transport per spin (all rounds)
+    let per_round = match prim {
+        Prim::Barrier => 0,
+        // all-to-all style primitives move p contributions
+        Prim::Allgather | Prim::Gather | Prim::Allreduce | Prim::AllreduceInplace
+        | Prim::Reduce | Prim::ReduceScatter => len * 8 * p,
+        Prim::Broadcast => len * 8,
+    };
+    per_round * ROUNDS
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== collective microbenches (bytes/s per primitive per backend) ==\n");
+
+    let len = 1 << 14; // 16k f64 = 128 KiB per rank per round
+    for &(backend, bname) in &[(Backend::Threads, "threads"), (Backend::Sockets, "sockets")] {
+        for p in [2usize, 4] {
+            for &(prim, pname) in &PRIMS {
+                let name = format!("{pname:<20} {bname} p={p}");
+                let bytes = payload_bytes(prim, p, len).max(1);
+                bench.run_elems(&name, bytes, || match backend {
+                    Backend::Threads => {
+                        comm::run(p, CostModel::free(), |ctx| collective_pass(ctx, prim, len))
+                    }
+                    Backend::Sockets => {
+                        comm::socket::run(p, CostModel::free(), |ctx| collective_pass(ctx, prim, len))
+                    }
+                });
+            }
+        }
+    }
+
+    bench.write_json("results/comm_collectives.json").expect("write bench json");
+    println!("\nwrote results/comm_collectives.json (elem = byte crossing the transport)");
+}

@@ -11,7 +11,7 @@
 //!   * postprocessing lift (Step V)
 //!   * collectives (comm substrate overhead)
 
-use dopinf::comm::{self, CostModel, Op};
+use dopinf::comm::{self, Communicator, CostModel, Op};
 use dopinf::linalg::{cholesky_solve, eigh, matmul, matmul_tn, syrk, Matrix};
 use dopinf::opinf::learn;
 use dopinf::rom::quadratic::{qhat_sq_rows, s_dim};

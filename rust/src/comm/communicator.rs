@@ -1,19 +1,25 @@
-//! SPMD thread-rank communicator with exact collectives.
+//! The transport-abstracted collective vocabulary.
 //!
-//! [`run`] spawns `p` rank threads executing the same closure (the MPI
-//! model of the paper, Sec. III.A). Ranks synchronize through
-//! [`RankCtx`] collectives backed by a shared contribution board: each
-//! rank posts its payload, waits at a barrier, reduces all contributions
-//! *in rank order* (bitwise-deterministic results), then passes a second
-//! barrier before slots are reused.
-
-use std::sync::{Barrier, Mutex};
+//! [`Communicator`] is the SPMD contract the dOpInf pipeline (paper
+//! Sec. III.A) is written against: one instance per rank, collective
+//! methods called by every rank of the group in the same order. Three
+//! backends implement it:
+//!
+//! * [`super::thread::RankCtx`] — shared-board thread transport (the
+//!   default; exact collectives between rank threads of one process),
+//! * [`super::selfcomm::SelfComm`] — zero-overhead p = 1 backend (no
+//!   threads, no barriers; every collective is the identity),
+//! * [`super::socket::SocketComm`] — localhost TCP transport
+//!   (length-prefixed frames, rank 0 as rendezvous hub).
+//!
+//! All reductions funnel through [`fold`]: contributions are combined
+//! in rank order, so every backend produces bitwise-identical results
+//! regardless of thread scheduling or packet arrival order.
 
 use super::clock::{Category, Clock};
-use super::costmodel::CostModel;
 use crate::util::timer::ThreadCpuTimer;
 
-/// Reduction operator for Allreduce.
+/// Reduction operator for reducing collectives (MPI_Op subset).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
     Sum,
@@ -21,198 +27,154 @@ pub enum Op {
     Min,
 }
 
-struct Shared {
-    /// per-rank contribution slots for the active collective
-    slots: Vec<Mutex<Vec<f64>>>,
-    /// per-rank virtual-time postings for clock synchronization
-    times: Vec<Mutex<f64>>,
-    barrier: Barrier,
-    model: CostModel,
+/// Rank-ordered reduction kernels shared by every transport backend.
+///
+/// Keeping the fold in one place is what makes the "bitwise identical
+/// across transports" guarantee hold by construction: the thread board,
+/// the socket hub, and the single-rank backend all combine the same
+/// rank-ordered contribution list through these functions.
+pub mod fold {
+    use super::Op;
+
+    /// Identity element of `op`.
+    pub fn identity(op: Op) -> f64 {
+        match op {
+            Op::Sum => 0.0,
+            Op::Max => f64::NEG_INFINITY,
+            Op::Min => f64::INFINITY,
+        }
+    }
+
+    /// Fold `part` into `acc` elementwise.
+    pub fn accumulate(acc: &mut [f64], part: &[f64], op: Op) {
+        assert_eq!(acc.len(), part.len(), "collective length mismatch across ranks");
+        for (a, &v) in acc.iter_mut().zip(part) {
+            match op {
+                Op::Sum => *a += v,
+                Op::Max => *a = a.max(v),
+                Op::Min => *a = a.min(v),
+            }
+        }
+    }
+
+    /// Reduce rank-ordered contributions into `out` (rank 0 first —
+    /// the fixed order that makes results deterministic).
+    pub fn reduce_into(parts: &[Vec<f64>], out: &mut [f64], op: Op) {
+        out.fill(identity(op));
+        for part in parts {
+            accumulate(out, part, op);
+        }
+    }
+
+    /// Reduce rank-ordered contributions into a fresh vector.
+    pub fn reduce_parts(parts: &[Vec<f64>], op: Op) -> Vec<f64> {
+        let n = parts.first().map_or(0, Vec::len);
+        let mut out = vec![identity(op); n];
+        for part in parts {
+            accumulate(&mut out, part, op);
+        }
+        out
+    }
+
+    /// Rank `rank`'s block of an evenly divided reduced vector
+    /// (MPI_Reduce_scatter_block semantics: `reduced.len()` must be a
+    /// multiple of `size`).
+    pub fn block(reduced: &[f64], rank: usize, size: usize) -> Vec<f64> {
+        assert_eq!(
+            reduced.len() % size,
+            0,
+            "reduce_scatter_block length {} not divisible by p = {size}",
+            reduced.len()
+        );
+        let chunk = reduced.len() / size;
+        reduced[rank * chunk..(rank + 1) * chunk].to_vec()
+    }
 }
 
-/// Per-rank handle: rank id, collectives, and the virtual clock.
-pub struct RankCtx<'a> {
-    rank: usize,
-    size: usize,
-    shared: &'a Shared,
-    clock: Clock,
-}
+/// Transport-abstracted MPI-style communicator.
+///
+/// One instance per rank; every collective must be entered by all ranks
+/// of the group in the same order (the usual MPI contract — mismatched
+/// collectives panic on backends that can detect them). Reductions are
+/// applied in rank order on every backend, so results are bitwise
+/// deterministic and transport-independent.
+///
+/// The trait also carries the rank's virtual [`Clock`] (`clock` /
+/// `charge` / `timed`) so pipeline code can bill compute and model
+/// communication cost without knowing the transport.
+pub trait Communicator {
+    /// This rank's id in `0..size()`.
+    fn rank(&self) -> usize;
 
-impl<'a> RankCtx<'a> {
-    pub fn rank(&self) -> usize {
-        self.rank
-    }
+    /// Number of ranks in the group (the paper's p).
+    fn size(&self) -> usize;
 
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    pub fn clock(&self) -> &Clock {
-        &self.clock
-    }
+    /// This rank's virtual clock.
+    fn clock(&self) -> &Clock;
 
     /// Charge `seconds` of `category` work to this rank's virtual clock.
-    pub fn charge(&mut self, category: Category, seconds: f64) {
-        self.clock.add(category, seconds);
-    }
+    fn charge(&mut self, category: Category, seconds: f64);
 
     /// Run `f`, measuring its *thread CPU time* and charging it to
     /// `category`. Returns `f`'s result.
-    pub fn timed<R>(&mut self, category: Category, f: impl FnOnce() -> R) -> R {
+    fn timed<R>(&mut self, category: Category, f: impl FnOnce() -> R) -> R
+    where
+        Self: Sized,
+    {
         let t = ThreadCpuTimer::start();
         let out = f();
-        self.clock.add(category, t.elapsed());
+        self.charge(category, t.elapsed());
         out
     }
 
-    /// Post this rank's payload + clock, wait for all, then fold every
-    /// rank's payload in rank order with `fold`. Advances clocks to
-    /// max-entry + modeled cost.
-    fn collective<T>(
-        &mut self,
-        payload: Vec<f64>,
-        modeled_cost: f64,
-        fold: impl FnOnce(&[Vec<f64>]) -> T,
-    ) -> T {
-        *self.shared.slots[self.rank].lock().unwrap() = payload;
-        *self.shared.times[self.rank].lock().unwrap() = self.clock.now();
-        self.shared.barrier.wait();
-
-        // every rank reads all contributions; rank-ordered fold
-        let contributions: Vec<Vec<f64>> = (0..self.size)
-            .map(|i| self.shared.slots[i].lock().unwrap().clone())
-            .collect();
-        let max_entry = (0..self.size)
-            .map(|i| *self.shared.times[i].lock().unwrap())
-            .fold(0.0, f64::max);
-        let out = fold(&contributions);
-
-        // second barrier: nobody reuses slots until everyone has read
-        self.shared.barrier.wait();
-        self.clock.sync_to(max_entry + modeled_cost);
-        out
-    }
+    /// MPI_Allreduce, in place: on return `data` holds the rank-ordered
+    /// reduction of every rank's buffer. The in-place form is the
+    /// primitive (the allocating [`Communicator::allreduce`] wraps it)
+    /// so multi-megabyte payloads — Gram matrices, probe blocks — skip
+    /// the `Vec` round-trip on the caller's side.
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op);
 
     /// MPI_Allreduce over an f64 vector. All ranks receive the result.
-    pub fn allreduce(&mut self, data: &[f64], op: Op) -> Vec<f64> {
-        let bytes = data.len() * 8;
-        let cost = self.shared.model.allreduce(self.size, bytes);
-        let n = data.len();
-        self.collective(data.to_vec(), cost, |parts| {
-            let mut acc = vec![
-                match op {
-                    Op::Sum => 0.0,
-                    Op::Max => f64::NEG_INFINITY,
-                    Op::Min => f64::INFINITY,
-                };
-                n
-            ];
-            for part in parts {
-                assert_eq!(part.len(), n, "allreduce length mismatch across ranks");
-                for (a, &v) in acc.iter_mut().zip(part) {
-                    match op {
-                        Op::Sum => *a += v,
-                        Op::Max => *a = a.max(v),
-                        Op::Min => *a = a.min(v),
-                    }
-                }
-            }
-            acc
-        })
+    fn allreduce(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+        let mut out = data.to_vec();
+        self.allreduce_inplace(&mut out, op);
+        out
     }
 
     /// Scalar Allreduce convenience.
-    pub fn allreduce_scalar(&mut self, x: f64, op: Op) -> f64 {
-        self.allreduce(&[x], op)[0]
+    fn allreduce_scalar(&mut self, x: f64, op: Op) -> f64 {
+        let mut out = [x];
+        self.allreduce_inplace(&mut out, op);
+        out[0]
     }
 
-    /// MPI_Bcast: `root` provides `data`; everyone receives a copy.
-    pub fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
-        assert!(root < self.size);
-        if self.rank == root {
-            assert!(data.is_some(), "root must provide broadcast payload");
-        }
-        let payload = if self.rank == root { data.unwrap() } else { Vec::new() };
-        let bytes = payload.len() * 8;
-        // non-roots do not know the size yet; cost is computed from the
-        // root's payload length after exchange — approximate with own
-        // knowledge (root's bytes dominate; non-root cost equalized by
-        // the max-entry sync).
-        let cost = self.shared.model.broadcast(self.size, bytes);
-        self.collective(payload, cost, |parts| parts[root].clone())
-    }
+    /// MPI_Bcast: `root` passes `Some(data)`, every other rank `None`;
+    /// everyone receives the root's payload. Contract violations (a
+    /// non-root passing `Some`, the root passing `None`) panic with a
+    /// rank-tagged message on every rank instead of deadlocking.
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64>;
 
-    /// MPI_Gather to every rank (Allgather of variable-length parts).
-    pub fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
-        let bytes = data.len() * 8 * self.size;
-        let cost = self.shared.model.allreduce(self.size, bytes);
-        self.collective(data.to_vec(), cost, |parts| parts.to_vec())
-    }
+    /// MPI_Allgather of variable-length parts: every rank receives
+    /// every rank's contribution, in rank order.
+    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>>;
+
+    /// MPI_Gather: contributions travel to `root` only, which receives
+    /// them in rank order; every other rank gets `None`. On a real
+    /// network transport this is ~p× cheaper than [`Communicator::allgather`]
+    /// when only the root consumes the result.
+    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>>;
+
+    /// MPI_Reduce: the rank-ordered reduction lands on `root` only;
+    /// every other rank gets `None`.
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>>;
+
+    /// MPI_Reduce_scatter_block: reduce, then scatter equal blocks —
+    /// rank i receives elements `[i·n/p, (i+1)·n/p)` of the reduction.
+    /// `data.len()` must be a multiple of `size()`.
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64>;
 
     /// MPI_Barrier.
-    pub fn barrier(&mut self) {
-        let cost = self.shared.model.barrier(self.size);
-        self.collective(Vec::new(), cost, |_| ());
-    }
-}
-
-/// Spawn `p` rank threads running `f` and return the per-rank results in
-/// rank order. Panics in any rank propagate.
-pub fn run<R: Send>(
-    p: usize,
-    model: CostModel,
-    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
-) -> Vec<R> {
-    assert!(p >= 1, "need at least one rank");
-    let shared = Shared {
-        slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
-        times: (0..p).map(|_| Mutex::new(0.0)).collect(),
-        barrier: Barrier::new(p),
-        model,
-    };
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..p)
-            .map(|rank| {
-                let shared = &shared;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
-                    let out = f(&mut ctx);
-                    (out, ctx.clock)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("rank panicked").0).collect()
-    })
-}
-
-/// Like [`run`], but also returns each rank's final [`Clock`].
-pub fn run_with_clocks<R: Send>(
-    p: usize,
-    model: CostModel,
-    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
-) -> Vec<(R, Clock)> {
-    assert!(p >= 1, "need at least one rank");
-    let shared = Shared {
-        slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
-        times: (0..p).map(|_| Mutex::new(0.0)).collect(),
-        barrier: Barrier::new(p),
-        model,
-    };
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..p)
-            .map(|rank| {
-                let shared = &shared;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
-                    let out = f(&mut ctx);
-                    (out, ctx.clock)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
-    })
+    fn barrier(&mut self);
 }
 
 #[cfg(test)]
@@ -220,121 +182,45 @@ mod tests {
     use super::*;
 
     #[test]
-    fn allreduce_sum_exact() {
-        let results = run(4, CostModel::free(), |ctx| {
-            let mine = vec![ctx.rank() as f64, 1.0];
-            ctx.allreduce(&mine, Op::Sum)
-        });
-        for r in &results {
-            assert_eq!(r, &vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
-        }
+    fn fold_identities() {
+        assert_eq!(fold::identity(Op::Sum), 0.0);
+        assert_eq!(fold::identity(Op::Max), f64::NEG_INFINITY);
+        assert_eq!(fold::identity(Op::Min), f64::INFINITY);
     }
 
     #[test]
-    fn allreduce_max_min() {
-        let results = run(3, CostModel::free(), |ctx| {
-            let x = (ctx.rank() as f64 - 1.0) * 2.5;
-            (ctx.allreduce_scalar(x, Op::Max), ctx.allreduce_scalar(x, Op::Min))
-        });
-        for (mx, mn) in &results {
-            assert_eq!(*mx, 2.5);
-            assert_eq!(*mn, -2.5);
-        }
+    fn reduce_parts_in_rank_order() {
+        let parts = vec![vec![1.0, 10.0], vec![2.0, -3.0], vec![4.0, 0.5]];
+        assert_eq!(fold::reduce_parts(&parts, Op::Sum), vec![7.0, 7.5]);
+        assert_eq!(fold::reduce_parts(&parts, Op::Max), vec![4.0, 10.0]);
+        assert_eq!(fold::reduce_parts(&parts, Op::Min), vec![1.0, -3.0]);
     }
 
     #[test]
-    fn broadcast_from_nonzero_root() {
-        let results = run(4, CostModel::free(), |ctx| {
-            let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
-            ctx.broadcast(2, payload)
-        });
-        for r in &results {
-            assert_eq!(r, &vec![7.0, 8.0, 9.0]);
-        }
+    fn reduce_into_matches_reduce_parts() {
+        let parts = vec![vec![1e16, 1.0], vec![-1e16, 3.0]];
+        let mut out = vec![99.0, 99.0];
+        fold::reduce_into(&parts, &mut out, Op::Sum);
+        assert_eq!(out, fold::reduce_parts(&parts, Op::Sum));
     }
 
     #[test]
-    fn allgather_preserves_rank_order() {
-        let results = run(3, CostModel::free(), |ctx| ctx.allgather(&[ctx.rank() as f64]));
-        for r in &results {
-            assert_eq!(r, &vec![vec![0.0], vec![1.0], vec![2.0]]);
-        }
+    fn block_slices_evenly() {
+        let reduced = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(fold::block(&reduced, 0, 3), vec![0.0, 1.0]);
+        assert_eq!(fold::block(&reduced, 2, 3), vec![4.0, 5.0]);
     }
 
     #[test]
-    fn sequence_of_collectives() {
-        // exercise slot reuse across many rounds
-        let results = run(4, CostModel::free(), |ctx| {
-            let mut acc = 0.0;
-            for round in 0..20 {
-                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
-                ctx.barrier();
-            }
-            acc
-        });
-        let expect: f64 = (0..20).map(|r| (0..4).map(|k| (k + r) as f64).sum::<f64>()).sum();
-        for r in &results {
-            assert_eq!(*r, expect);
-        }
+    #[should_panic(expected = "not divisible")]
+    fn block_rejects_ragged_length() {
+        fold::block(&[1.0, 2.0, 3.0], 0, 2);
     }
 
     #[test]
-    fn deterministic_sum_order() {
-        // results must be identical across repeated runs (rank-ordered fold)
-        let vals = [1e16, 1.0, -1e16, 3.0];
-        let run_once = || {
-            run(4, CostModel::free(), |ctx| {
-                ctx.allreduce_scalar(vals[ctx.rank()], Op::Sum)
-            })[0]
-        };
-        let first = run_once();
-        for _ in 0..5 {
-            assert_eq!(run_once(), first);
-        }
-    }
-
-    #[test]
-    fn clocks_sync_at_collectives() {
-        let results = super::run_with_clocks(2, CostModel::shared_memory(), |ctx| {
-            if ctx.rank() == 0 {
-                ctx.charge(Category::Compute, 1.0);
-            } else {
-                ctx.charge(Category::Compute, 3.0);
-            }
-            ctx.allreduce_scalar(1.0, Op::Sum);
-            ctx.clock().now()
-        });
-        // both ranks end at >= 3.0 (max entry) and equal virtual time
-        let t0 = results[0].0;
-        let t1 = results[1].0;
-        assert!(t0 >= 3.0 && (t0 - t1).abs() < 1e-12, "{t0} vs {t1}");
-        // rank 0 waited ~2s in comm
-        assert!(results[0].1.in_category(Category::Comm) >= 2.0);
-    }
-
-    #[test]
-    fn single_rank_works() {
-        let results = run(1, CostModel::shared_memory(), |ctx| {
-            ctx.barrier();
-            ctx.allreduce_scalar(5.0, Op::Sum)
-        });
-        assert_eq!(results, vec![5.0]);
-    }
-
-    #[test]
-    fn timed_charges_cpu() {
-        let results = super::run_with_clocks(2, CostModel::free(), |ctx| {
-            ctx.timed(Category::Learn, || {
-                let mut acc = 0u64;
-                for i in 0..500_000u64 {
-                    acc = acc.wrapping_add(i * i);
-                }
-                std::hint::black_box(acc)
-            });
-            ctx.clock().in_category(Category::Learn)
-        });
-        for (learn, _) in &results {
-            assert!(*learn > 0.0);
-        }
+    #[should_panic(expected = "length mismatch")]
+    fn accumulate_rejects_mismatched_lengths() {
+        let mut acc = vec![0.0; 2];
+        fold::accumulate(&mut acc, &[1.0, 2.0, 3.0], Op::Sum);
     }
 }

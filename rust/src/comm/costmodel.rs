@@ -6,6 +6,14 @@
 //! * Allreduce (recursive doubling): `log2(p) · (α + n·β + n·γ)`
 //! * Broadcast (binomial tree):      `log2(p) · (α + n·β)`
 //! * Barrier (dissemination):        `log2(p) · α`
+//! * Reduce (binomial tree):         `log2(p) · (α + n·β + n·γ)`
+//! * Gather / Allgather:             `log2(p) · α + (p-1)/p · N·β`
+//! * Reduce_scatter (pairwise):      `log2(p) · α + (p-1)/p · N·(β+γ)`
+//!
+//! where `n` is the per-rank payload and `N` the total volume across
+//! ranks. The rooted primitives matter once the transport is a real
+//! network: `gather` moves `(p-1)/p · N` toward one root where
+//! allgather-then-discard would move `N` to every rank.
 //!
 //! Defaults model a shared-memory node like the paper's 256-core EPYC
 //! box (α ≈ 1 µs thread sync, β ≈ 1/12 GB/s effective per-pair memory
@@ -61,6 +69,38 @@ impl CostModel {
     pub fn barrier(&self, p: usize) -> f64 {
         Self::log2p(p) * self.alpha
     }
+
+    /// Fraction of the total volume that crosses the wire in the
+    /// gather/allgather/reduce-scatter estimates.
+    fn ring_fraction(p: usize) -> f64 {
+        if p <= 1 {
+            0.0
+        } else {
+            (p - 1) as f64 / p as f64
+        }
+    }
+
+    /// Modeled rooted Reduce time for a `bytes` per-rank payload.
+    pub fn reduce(&self, p: usize, bytes: usize) -> f64 {
+        Self::log2p(p) * (self.alpha + bytes as f64 * (self.beta + self.gamma))
+    }
+
+    /// Modeled rooted Gather time (`total_bytes` = p · per-rank bytes).
+    pub fn gather(&self, p: usize, total_bytes: usize) -> f64 {
+        Self::log2p(p) * self.alpha + Self::ring_fraction(p) * total_bytes as f64 * self.beta
+    }
+
+    /// Modeled Allgather time (`total_bytes` = p · per-rank bytes).
+    pub fn allgather(&self, p: usize, total_bytes: usize) -> f64 {
+        Self::log2p(p) * self.alpha + Self::ring_fraction(p) * total_bytes as f64 * self.beta
+    }
+
+    /// Modeled Reduce_scatter_block time (`total_bytes` reduced, each
+    /// rank keeping a 1/p block).
+    pub fn reduce_scatter(&self, p: usize, total_bytes: usize) -> f64 {
+        Self::log2p(p) * self.alpha
+            + Self::ring_fraction(p) * total_bytes as f64 * (self.beta + self.gamma)
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +138,28 @@ mod tests {
     fn free_model_is_zero() {
         let m = CostModel::free();
         assert_eq!(m.allreduce(1024, 1 << 30), 0.0);
+        assert_eq!(m.gather(1024, 1 << 30), 0.0);
+        assert_eq!(m.reduce_scatter(1024, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn rooted_primitives_single_rank_free() {
+        let m = CostModel::shared_memory();
+        assert_eq!(m.reduce(1, 1 << 20), 0.0);
+        assert_eq!(m.gather(1, 1 << 20), 0.0);
+        assert_eq!(m.allgather(1, 1 << 20), 0.0);
+        assert_eq!(m.reduce_scatter(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn rooted_costs_grow_with_p_and_bytes() {
+        let m = CostModel::shared_memory();
+        assert!(m.gather(8, 1 << 20) > m.gather(2, 1 << 20));
+        assert!(m.reduce(4, 1 << 20) > m.reduce(4, 1 << 10));
+        assert!(m.reduce_scatter(8, 1 << 20) > m.reduce_scatter(8, 1 << 10));
+        // reduce pays the reduction term on top of the transfer
+        assert!(m.reduce(4, 1 << 20) > m.broadcast(4, 1 << 20));
+        // rooted gather never costs more than allgather at equal volume
+        assert!(m.gather(16, 1 << 22) <= m.allgather(16, 1 << 22));
     }
 }

@@ -1,26 +1,56 @@
-//! In-process MPI-like communicator substrate.
+//! Transport-abstracted MPI-like communicator substrate.
 //!
-//! The paper runs dOpInf as one MPI group with p ranks (Sec. III.A). We
-//! reproduce the same SPMD programming model with p *threads*: each rank
-//! executes the same pipeline function against its own data partition
-//! and synchronizes through exact shared-memory collectives
-//! ([`communicator::RankCtx`]): `Allreduce(SUM|MAX|MIN)`, `Bcast`,
-//! `Barrier`, `Gather` — reductions applied in rank order, so results
-//! are bitwise deterministic regardless of thread scheduling.
+//! The paper runs dOpInf as one MPI group with p ranks (Sec. III.A).
+//! We reproduce the same SPMD programming model behind the
+//! [`Communicator`] trait: pipeline code is written against the
+//! collective vocabulary, never against a concrete transport, and
+//! every backend combines contributions through the same rank-ordered
+//! [`fold`] kernels — so results are **bitwise identical across
+//! transports** regardless of thread scheduling or packet order.
+//!
+//! ## Collective vocabulary
+//!
+//! | trait method                         | MPI counterpart          | pipeline use (paper Sec. III)              |
+//! |--------------------------------------|--------------------------|--------------------------------------------|
+//! | [`Communicator::allreduce`] / `_inplace` / `_scalar` | `MPI_Allreduce` | Step II maxabs, Step III Gram `D`, Step IV best-error vote |
+//! | [`Communicator::broadcast`]          | `MPI_Bcast`              | Step IV winner ships `(β₁, β₂, Q̃)`        |
+//! | [`Communicator::allgather`]          | `MPI_Allgather`          | replicated gathers where all ranks consume |
+//! | [`Communicator::gather`]             | `MPI_Gather`             | serve/: probe-series aggregation on rank 0 |
+//! | [`Communicator::reduce`]             | `MPI_Reduce`             | rooted reductions (root-only statistics)   |
+//! | [`Communicator::reduce_scatter_block`] | `MPI_Reduce_scatter_block` | block-distributed reductions             |
+//! | [`Communicator::barrier`]            | `MPI_Barrier`            | phase alignment in benches/tests           |
+//!
+//! ## Backends
+//!
+//! * [`thread`] — shared-board thread transport ([`RankCtx`], the
+//!   default): p rank threads in one process synchronizing through a
+//!   contribution board; exact collectives, reductions in rank order.
+//! * [`selfcomm`] — [`SelfComm`], the zero-overhead p = 1 backend: no
+//!   threads, no barriers; every collective is the identity.
+//! * [`socket`] — localhost TCP transport ([`socket::SocketComm`]):
+//!   length-prefixed frames with rank 0 as rendezvous hub. Proves the
+//!   trait boundary is transport-real and is the template for a true
+//!   multi-process / multi-node deployment.
 //!
 //! **Timing model** (DESIGN.md §3): this testbed has one physical core,
-//! so wall-clock cannot exhibit strong scaling. Each rank instead carries
-//! a virtual clock ([`clock::Clock`]) fed by per-thread CPU time
-//! (`CLOCK_THREAD_CPUTIME_ID`) for compute segments and by an α–β
-//! binomial-tree model ([`costmodel::CostModel`]) for collectives;
-//! collective entry synchronizes clocks to the max over ranks, exactly
-//! like a real bulk-synchronous MPI program. Numerics are unaffected —
-//! the collectives are exact.
+//! so wall-clock cannot exhibit strong scaling. Each rank instead
+//! carries a virtual clock ([`clock::Clock`]) fed by per-thread CPU
+//! time (`CLOCK_THREAD_CPUTIME_ID`) for compute segments and by an α–β
+//! binomial-tree model ([`costmodel::CostModel`], with per-primitive
+//! entries for the rooted collectives) for communication; collective
+//! entry synchronizes clocks to the max over ranks, exactly like a
+//! real bulk-synchronous MPI program. Numerics are unaffected — the
+//! collectives are exact.
 
 pub mod clock;
 pub mod communicator;
 pub mod costmodel;
+pub mod selfcomm;
+pub mod socket;
+pub mod thread;
 
 pub use clock::{Category, Clock};
-pub use communicator::{run, run_with_clocks, Op, RankCtx};
+pub use communicator::{fold, Communicator, Op};
 pub use costmodel::CostModel;
+pub use selfcomm::SelfComm;
+pub use thread::{run, run_with_clocks, RankCtx};

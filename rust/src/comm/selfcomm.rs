@@ -1,0 +1,117 @@
+//! Zero-overhead single-rank backend.
+//!
+//! [`SelfComm`] is MPI_COMM_SELF: a p = 1 communicator where every
+//! collective is the identity — no threads spawned, no barriers, no
+//! contribution board. `run_distributed` and `serve_ensemble` use it
+//! for p = 1 runs so the serial case pays nothing for the SPMD
+//! abstraction; it is also the reference backend for transport
+//! property tests (any collective over one rank must return its own
+//! contribution unchanged).
+
+use super::clock::{Category, Clock};
+use super::communicator::{Communicator, Op};
+
+/// The p = 1 communicator: every collective returns this rank's own
+/// contribution. Carries a virtual [`Clock`] like every backend so
+/// timing reports stay uniform.
+#[derive(Debug, Default)]
+pub struct SelfComm {
+    clock: Clock,
+}
+
+impl SelfComm {
+    pub fn new() -> SelfComm {
+        SelfComm { clock: Clock::new() }
+    }
+
+    /// Final clock, for timing reports after the rank function returns.
+    pub fn into_clock(self) -> Clock {
+        self.clock
+    }
+}
+
+impl Communicator for SelfComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    fn charge(&mut self, category: Category, seconds: f64) {
+        self.clock.add(category, seconds);
+    }
+
+    fn allreduce_inplace(&mut self, _data: &mut [f64], _op: Op) {}
+
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
+        assert_eq!(root, 0, "broadcast root {root} out of range (size 1)");
+        data.unwrap_or_else(|| {
+            panic!("rank 0: broadcast(root=0) — root rank 0 provided no payload")
+        })
+    }
+
+    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        vec![data.to_vec()]
+    }
+
+    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+        assert_eq!(root, 0, "gather root {root} out of range (size 1)");
+        Some(vec![data.to_vec()])
+    }
+
+    fn reduce(&mut self, root: usize, data: &[f64], _op: Op) -> Option<Vec<f64>> {
+        assert_eq!(root, 0, "reduce root {root} out of range (size 1)");
+        Some(data.to_vec())
+    }
+
+    fn reduce_scatter_block(&mut self, data: &[f64], _op: Op) -> Vec<f64> {
+        data.to_vec()
+    }
+
+    fn barrier(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collectives_are_identities() {
+        let mut c = SelfComm::new();
+        assert_eq!(c.rank(), 0);
+        assert_eq!(c.size(), 1);
+        let mut v = vec![1.5, -2.0];
+        c.allreduce_inplace(&mut v, Op::Sum);
+        assert_eq!(v, vec![1.5, -2.0]);
+        assert_eq!(c.allreduce_scalar(7.0, Op::Min), 7.0);
+        assert_eq!(c.broadcast(0, Some(vec![3.0])), vec![3.0]);
+        assert_eq!(c.allgather(&[4.0]), vec![vec![4.0]]);
+        assert_eq!(c.gather(0, &[5.0]).unwrap(), vec![vec![5.0]]);
+        assert_eq!(c.reduce(0, &[6.0], Op::Max).unwrap(), vec![6.0]);
+        assert_eq!(c.reduce_scatter_block(&[1.0, 2.0], Op::Sum), vec![1.0, 2.0]);
+        c.barrier();
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SelfComm::new();
+        c.charge(Category::Compute, 1.25);
+        let x = c.timed(Category::Learn, || 42);
+        assert_eq!(x, 42);
+        assert!((c.clock().in_category(Category::Compute) - 1.25).abs() < 1e-15);
+        let clock = c.into_clock();
+        assert!(clock.now() >= 1.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "provided no payload")]
+    fn broadcast_without_payload_panics() {
+        SelfComm::new().broadcast(0, None);
+    }
+}

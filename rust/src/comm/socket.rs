@@ -1,0 +1,592 @@
+//! Localhost socket transport: rank threads exchanging length-prefixed
+//! frames over TCP, with rank 0 as the rendezvous hub.
+//!
+//! This backend proves the [`Communicator`] boundary is transport-real:
+//! no shared memory crosses rank boundaries — every collective
+//! round-trips through rank 0 as little-endian length-prefixed frames,
+//! exactly the structure a multi-process / multi-node deployment needs
+//! (swap `127.0.0.1` for a host list and the same protocol runs across
+//! machines).
+//!
+//! ## Protocol
+//!
+//! Rank 0 binds an ephemeral listener; ranks 1..p connect and send a
+//! 4-byte hello carrying their rank id. Each collective is one
+//! request/reply round in strict lockstep:
+//!
+//! ```text
+//! request (leaf → hub):  opcode u8 | op u8 | provided u8 | root u32 |
+//!                        clock f64 | len u64 | payload f64 × len
+//! reply   (hub → leaf):  max_entry f64 | n_parts u64 |
+//!                        (len u64 | part f64 × len) × n_parts
+//! ```
+//!
+//! The hub collects every rank's contribution **in rank order**,
+//! validates that all ranks entered the same collective (mismatches
+//! panic with both call sites named), reduces through the shared
+//! [`fold`] kernels — so results are bitwise identical to the thread
+//! backend — and replies with only what each rank needs: rooted
+//! collectives (`gather`, `reduce`) ship data to the root alone, which
+//! is precisely the traffic saving that motivates them over
+//! allgather-then-discard.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use super::clock::{Category, Clock};
+use super::communicator::{fold, Communicator, Op};
+use super::costmodel::CostModel;
+
+/// Collective opcode on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OpCode {
+    Allreduce,
+    Broadcast,
+    Allgather,
+    Gather,
+    Reduce,
+    ReduceScatter,
+    Barrier,
+}
+
+impl OpCode {
+    fn to_byte(self) -> u8 {
+        match self {
+            OpCode::Allreduce => 0,
+            OpCode::Broadcast => 1,
+            OpCode::Allgather => 2,
+            OpCode::Gather => 3,
+            OpCode::Reduce => 4,
+            OpCode::ReduceScatter => 5,
+            OpCode::Barrier => 6,
+        }
+    }
+
+    fn from_byte(b: u8) -> OpCode {
+        match b {
+            0 => OpCode::Allreduce,
+            1 => OpCode::Broadcast,
+            2 => OpCode::Allgather,
+            3 => OpCode::Gather,
+            4 => OpCode::Reduce,
+            5 => OpCode::ReduceScatter,
+            6 => OpCode::Barrier,
+            other => panic!("socket transport: corrupt frame (unknown opcode {other})"),
+        }
+    }
+}
+
+fn op_to_byte(op: Op) -> u8 {
+    match op {
+        Op::Sum => 0,
+        Op::Max => 1,
+        Op::Min => 2,
+    }
+}
+
+fn op_from_byte(b: u8) -> Op {
+    match b {
+        0 => Op::Sum,
+        1 => Op::Max,
+        2 => Op::Min,
+        other => panic!("socket transport: corrupt frame (unknown reduction op {other})"),
+    }
+}
+
+// ---------------------------------------------------------------- frame I/O
+
+fn read_bytes(stream: &mut TcpStream, buf: &mut [u8], from: &str) {
+    stream
+        .read_exact(buf)
+        .unwrap_or_else(|e| panic!("socket transport: lost connection to {from}: {e}"));
+}
+
+fn read_u64(stream: &mut TcpStream, from: &str) -> u64 {
+    let mut b = [0u8; 8];
+    read_bytes(stream, &mut b, from);
+    u64::from_le_bytes(b)
+}
+
+fn read_f64s(stream: &mut TcpStream, count: usize, from: &str) -> Vec<f64> {
+    let mut raw = vec![0u8; count * 8];
+    read_bytes(stream, &mut raw, from);
+    raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
+    for v in values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Request {
+    code: OpCode,
+    op: u8,
+    provided: bool,
+    root: usize,
+    time: f64,
+    payload: Vec<f64>,
+}
+
+fn write_request(
+    stream: &mut TcpStream,
+    code: OpCode,
+    op: u8,
+    provided: bool,
+    root: usize,
+    time: f64,
+    payload: &[f64],
+) {
+    let mut buf = Vec::with_capacity(23 + payload.len() * 8);
+    buf.push(code.to_byte());
+    buf.push(op);
+    buf.push(u8::from(provided));
+    buf.extend_from_slice(&(root as u32).to_le_bytes());
+    buf.extend_from_slice(&time.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    push_f64s(&mut buf, payload);
+    stream
+        .write_all(&buf)
+        .unwrap_or_else(|e| panic!("socket transport: lost connection to rank 0: {e}"));
+}
+
+fn read_request(stream: &mut TcpStream, from_rank: usize) -> Request {
+    let from = format!("rank {from_rank}");
+    let mut head = [0u8; 7];
+    read_bytes(stream, &mut head, &from);
+    let code = OpCode::from_byte(head[0]);
+    let op = head[1];
+    let provided = head[2] != 0;
+    let root = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
+    let mut t = [0u8; 8];
+    read_bytes(stream, &mut t, &from);
+    let time = f64::from_le_bytes(t);
+    let len = read_u64(stream, &from) as usize;
+    let payload = read_f64s(stream, len, &from);
+    Request { code, op, provided, root, time, payload }
+}
+
+fn write_reply(stream: &mut TcpStream, max_entry: f64, parts: &[Vec<f64>], to_rank: usize) {
+    let total: usize = parts.iter().map(|p| 8 + p.len() * 8).sum();
+    let mut buf = Vec::with_capacity(16 + total);
+    buf.extend_from_slice(&max_entry.to_le_bytes());
+    buf.extend_from_slice(&(parts.len() as u64).to_le_bytes());
+    for part in parts {
+        buf.extend_from_slice(&(part.len() as u64).to_le_bytes());
+        push_f64s(&mut buf, part);
+    }
+    stream
+        .write_all(&buf)
+        .unwrap_or_else(|e| panic!("socket transport: lost connection to rank {to_rank}: {e}"));
+}
+
+fn read_reply(stream: &mut TcpStream) -> (f64, Vec<Vec<f64>>) {
+    let from = "rank 0 (did rank 0 abort?)";
+    let mut t = [0u8; 8];
+    read_bytes(stream, &mut t, from);
+    let max_entry = f64::from_le_bytes(t);
+    let n_parts = read_u64(stream, from) as usize;
+    let parts = (0..n_parts)
+        .map(|_| {
+            let len = read_u64(stream, from) as usize;
+            read_f64s(stream, len, from)
+        })
+        .collect();
+    (max_entry, parts)
+}
+
+// ---------------------------------------------------------------- the hub
+
+/// Compute every rank's reply parts for one collective. All reductions
+/// go through [`fold`] in rank order — bitwise identical to the thread
+/// backend by construction.
+fn hub_replies(
+    code: OpCode,
+    op: u8,
+    root: usize,
+    provided: &[bool],
+    parts: &[Vec<f64>],
+    size: usize,
+) -> Vec<Vec<Vec<f64>>> {
+    match code {
+        OpCode::Allreduce => {
+            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            (0..size).map(|_| vec![reduced.clone()]).collect()
+        }
+        OpCode::Broadcast => {
+            for (i, &flag) in provided.iter().enumerate() {
+                if i == root && !flag {
+                    panic!("broadcast(root={root}) — root rank {root} provided no payload");
+                }
+                if i != root && flag {
+                    panic!(
+                        "broadcast(root={root}) — non-root rank {i} passed Some(..); \
+                         only the root provides the payload"
+                    );
+                }
+            }
+            (0..size).map(|_| vec![parts[root].clone()]).collect()
+        }
+        OpCode::Allgather => (0..size).map(|_| parts.to_vec()).collect(),
+        OpCode::Gather => (0..size)
+            .map(|i| if i == root { parts.to_vec() } else { Vec::new() })
+            .collect(),
+        OpCode::Reduce => {
+            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            (0..size)
+                .map(|i| if i == root { vec![reduced.clone()] } else { Vec::new() })
+                .collect()
+        }
+        OpCode::ReduceScatter => {
+            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            (0..size).map(|i| vec![fold::block(&reduced, i, size)]).collect()
+        }
+        OpCode::Barrier => (0..size).map(|_| Vec::new()).collect(),
+    }
+}
+
+enum Conn {
+    /// rank 0: one stream per leaf, index i ↔ rank i + 1
+    Hub { streams: Vec<TcpStream> },
+    Leaf { stream: TcpStream },
+}
+
+/// Per-rank handle of the localhost socket transport.
+pub struct SocketComm {
+    rank: usize,
+    size: usize,
+    clock: Clock,
+    model: CostModel,
+    conn: Conn,
+}
+
+impl SocketComm {
+    /// One collective round: contribute `payload`, receive this rank's
+    /// reply parts plus the max clock entry time over all ranks.
+    fn exchange(
+        &mut self,
+        code: OpCode,
+        op: u8,
+        provided: bool,
+        root: usize,
+        payload: Vec<f64>,
+    ) -> (f64, Vec<Vec<f64>>) {
+        let now = self.clock.now();
+        match &mut self.conn {
+            Conn::Leaf { stream } => {
+                write_request(stream, code, op, provided, root, now, &payload);
+                read_reply(stream)
+            }
+            Conn::Hub { streams } => {
+                let mut times = vec![now];
+                let mut provided_flags = vec![provided];
+                let mut parts: Vec<Vec<f64>> = vec![payload];
+                for (i, s) in streams.iter_mut().enumerate() {
+                    let req = read_request(s, i + 1);
+                    if req.code != code || req.root != root || req.op != op {
+                        panic!(
+                            "socket transport: collective mismatch — rank 0 entered \
+                             {code:?}(root {root}), rank {} entered {:?}(root {})",
+                            i + 1,
+                            req.code,
+                            req.root
+                        );
+                    }
+                    times.push(req.time);
+                    provided_flags.push(req.provided);
+                    parts.push(req.payload);
+                }
+                let max_entry = times.iter().fold(0.0f64, |a, &b| a.max(b));
+                let mut replies = hub_replies(code, op, root, &provided_flags, &parts, self.size);
+                for (i, s) in streams.iter_mut().enumerate() {
+                    write_reply(s, max_entry, &replies[i + 1], i + 1);
+                }
+                (max_entry, replies.swap_remove(0))
+            }
+        }
+    }
+}
+
+impl Communicator for SocketComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    fn charge(&mut self, category: Category, seconds: f64) {
+        self.clock.add(category, seconds);
+    }
+
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) {
+        let cost = self.model.allreduce(self.size, data.len() * 8);
+        let (max_entry, mut parts) =
+            self.exchange(OpCode::Allreduce, op_to_byte(op), true, 0, data.to_vec());
+        let reduced = parts.pop().expect("allreduce reply");
+        assert_eq!(reduced.len(), data.len(), "collective length mismatch across ranks");
+        data.copy_from_slice(&reduced);
+        self.clock.sync_to(max_entry + cost);
+    }
+
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
+        assert!(root < self.size, "broadcast root {root} out of range (size {})", self.size);
+        let provided = data.is_some();
+        let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
+        let cost = self.model.broadcast(self.size, data_bytes);
+        let (max_entry, mut parts) =
+            self.exchange(OpCode::Broadcast, 0, provided, root, data.unwrap_or_default());
+        let out = parts.pop().expect("broadcast reply");
+        self.clock.sync_to(max_entry + cost);
+        out
+    }
+
+    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        let cost = self.model.allgather(self.size, data.len() * 8 * self.size);
+        let (max_entry, parts) = self.exchange(OpCode::Allgather, 0, true, 0, data.to_vec());
+        self.clock.sync_to(max_entry + cost);
+        parts
+    }
+
+    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+        assert!(root < self.size, "gather root {root} out of range (size {})", self.size);
+        let cost = self.model.gather(self.size, data.len() * 8 * self.size);
+        let (max_entry, parts) = self.exchange(OpCode::Gather, 0, true, root, data.to_vec());
+        self.clock.sync_to(max_entry + cost);
+        (self.rank == root).then_some(parts)
+    }
+
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>> {
+        assert!(root < self.size, "reduce root {root} out of range (size {})", self.size);
+        let cost = self.model.reduce(self.size, data.len() * 8);
+        let (max_entry, mut parts) =
+            self.exchange(OpCode::Reduce, op_to_byte(op), true, root, data.to_vec());
+        self.clock.sync_to(max_entry + cost);
+        if self.rank == root {
+            Some(parts.pop().expect("reduce reply"))
+        } else {
+            None
+        }
+    }
+
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+        assert_eq!(
+            data.len() % self.size,
+            0,
+            "rank {}: reduce_scatter_block length {} not divisible by p = {}",
+            self.rank,
+            data.len(),
+            self.size
+        );
+        let cost = self.model.reduce_scatter(self.size, data.len() * 8);
+        let (max_entry, mut parts) =
+            self.exchange(OpCode::ReduceScatter, op_to_byte(op), true, 0, data.to_vec());
+        self.clock.sync_to(max_entry + cost);
+        parts.pop().expect("reduce_scatter_block reply")
+    }
+
+    fn barrier(&mut self) {
+        let cost = self.model.barrier(self.size);
+        let (max_entry, _) = self.exchange(OpCode::Barrier, 0, true, 0, Vec::new());
+        self.clock.sync_to(max_entry + cost);
+    }
+}
+
+// ---------------------------------------------------------------- runners
+
+/// Spawn `p` rank threads connected over localhost TCP and return the
+/// per-rank results in rank order. Panics in any rank propagate with
+/// their original payload (a hub panic surfaces on rank 0; leaves then
+/// fail their reads and abort too — no deadlock).
+pub fn run<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut SocketComm) -> R + Send + Sync,
+) -> Vec<R> {
+    run_with_clocks(p, model, f).into_iter().map(|(out, _)| out).collect()
+}
+
+/// Like [`run`], but also returns each rank's final [`Clock`].
+pub fn run_with_clocks<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut SocketComm) -> R + Send + Sync,
+) -> Vec<(R, Clock)> {
+    assert!(p >= 1, "need at least one rank");
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind rendezvous listener");
+    let port = listener.local_addr().expect("listener addr").port();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(p);
+        handles.push(scope.spawn(move || {
+            // rank 0: accept every leaf, slotting streams by rank id
+            let mut slots: Vec<Option<TcpStream>> = (1..p).map(|_| None).collect();
+            for _ in 1..p {
+                let (mut s, _) = listener.accept().expect("accept leaf rank");
+                s.set_nodelay(true).ok();
+                let mut hello = [0u8; 4];
+                read_bytes(&mut s, &mut hello, "connecting leaf");
+                let peer = u32::from_le_bytes(hello) as usize;
+                assert!(peer >= 1 && peer < p, "socket transport: bad hello rank {peer}");
+                assert!(
+                    slots[peer - 1].replace(s).is_none(),
+                    "socket transport: duplicate hello from rank {peer}"
+                );
+            }
+            let streams: Vec<TcpStream> = slots.into_iter().map(|s| s.unwrap()).collect();
+            let mut ctx =
+                SocketComm { rank: 0, size: p, clock: Clock::new(), model, conn: Conn::Hub { streams } };
+            let out = f(&mut ctx);
+            (out, ctx.clock)
+        }));
+        for rank in 1..p {
+            handles.push(scope.spawn(move || {
+                let mut stream =
+                    TcpStream::connect(("127.0.0.1", port)).expect("connect to rank 0");
+                stream.set_nodelay(true).ok();
+                stream.write_all(&(rank as u32).to_le_bytes()).expect("send hello");
+                let mut ctx = SocketComm {
+                    rank,
+                    size: p,
+                    clock: Clock::new(),
+                    model,
+                    conn: Conn::Leaf { stream },
+                };
+                let out = f(&mut ctx);
+                (out, ctx.clock)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::thread;
+
+    #[test]
+    fn allreduce_sum_exact() {
+        let results = run(4, CostModel::free(), |ctx| {
+            ctx.allreduce(&[ctx.rank() as f64, 1.0], Op::Sum)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
+            ctx.broadcast(2, payload)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![7.0, 8.0, 9.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-root rank 2 passed Some")]
+    fn broadcast_nonroot_some_panics() {
+        run(3, CostModel::free(), |ctx| {
+            let payload = (ctx.rank() == 2).then(|| vec![1.0]);
+            ctx.broadcast(0, payload)
+        });
+    }
+
+    #[test]
+    fn allgather_and_gather_preserve_rank_order() {
+        let results = run(3, CostModel::free(), |ctx| {
+            let mine = vec![ctx.rank() as f64; ctx.rank() + 1];
+            (ctx.allgather(&mine), ctx.gather(1, &mine))
+        });
+        for (rank, (all, rooted)) in results.iter().enumerate() {
+            assert_eq!(all, &vec![vec![0.0], vec![1.0, 1.0], vec![2.0, 2.0, 2.0]]);
+            if rank == 1 {
+                assert_eq!(rooted.as_ref().unwrap(), all);
+            } else {
+                assert!(rooted.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_and_reduce_scatter() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mine = vec![ctx.rank() as f64; 8];
+            (ctx.reduce(3, &mine, Op::Max), ctx.reduce_scatter_block(&mine, Op::Sum))
+        });
+        for (rank, (reduced, scattered)) in results.iter().enumerate() {
+            assert_eq!(scattered, &vec![6.0, 6.0]);
+            if rank == 3 {
+                assert_eq!(reduced.as_ref().unwrap(), &vec![3.0; 8]);
+            } else {
+                assert!(reduced.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_of_collectives_stays_in_lockstep() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mut acc = 0.0;
+            for round in 0..10 {
+                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
+                ctx.barrier();
+            }
+            acc
+        });
+        let expect: f64 = (0..10).map(|r| (0..4).map(|k| (k + r) as f64).sum::<f64>()).sum();
+        for r in &results {
+            assert_eq!(*r, expect);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_a_lone_hub() {
+        let results = run(1, CostModel::free(), |ctx| {
+            ctx.barrier();
+            assert_eq!(ctx.gather(0, &[2.5]).unwrap(), vec![vec![2.5]]);
+            ctx.allreduce_scalar(5.0, Op::Sum)
+        });
+        assert_eq!(results, vec![5.0]);
+    }
+
+    #[test]
+    fn bitwise_matches_thread_backend() {
+        // non-associative payload: the rank-ordered fold must make the
+        // two transports agree to the bit
+        let payload = |rank: usize| {
+            vec![1e16 * (rank as f64 - 1.5), 1.0 + rank as f64 * 1e-13, -0.75]
+        };
+        let via_threads =
+            thread::run(4, CostModel::free(), |ctx| ctx.allreduce(&payload(ctx.rank()), Op::Sum));
+        let via_sockets =
+            run(4, CostModel::free(), |ctx| ctx.allreduce(&payload(ctx.rank()), Op::Sum));
+        assert_eq!(via_threads, via_sockets);
+    }
+
+    #[test]
+    fn clocks_sync_across_the_wire() {
+        let results = run_with_clocks(2, CostModel::shared_memory(), |ctx| {
+            ctx.charge(Category::Compute, if ctx.rank() == 0 { 1.0 } else { 3.0 });
+            ctx.allreduce_scalar(1.0, Op::Sum);
+            ctx.clock().now()
+        });
+        let (t0, t1) = (results[0].0, results[1].0);
+        assert!(t0 >= 3.0 && (t0 - t1).abs() < 1e-12, "{t0} vs {t1}");
+        assert!(results[0].1.in_category(Category::Comm) >= 2.0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Shared-board thread transport: exact collectives between rank
+//! threads of one process.
+//!
+//! [`run`] spawns `p` rank threads executing the same closure (the MPI
+//! model of the paper, Sec. III.A). Ranks synchronize through
+//! [`RankCtx`] collectives backed by a shared contribution board: each
+//! rank posts its payload, waits at a barrier, combines all
+//! contributions *in rank order* through the shared
+//! [`fold`](super::communicator::fold) kernels (bitwise-deterministic
+//! results), then passes a second barrier before slots are reused.
+//!
+//! Contract validation rides the board: `broadcast` exchanges a
+//! provided-payload flag with the data, so a rank that breaks the
+//! root-provides contract makes *every* rank panic with a rank-tagged
+//! message — a local assert would leave the compliant ranks parked
+//! forever at the barrier.
+
+use std::sync::{Barrier, Mutex};
+
+use super::clock::{Category, Clock};
+use super::communicator::{fold, Communicator, Op};
+use super::costmodel::CostModel;
+
+struct Shared {
+    /// per-rank contribution slots for the active collective
+    slots: Vec<Mutex<Vec<f64>>>,
+    /// per-rank virtual-time postings for clock synchronization
+    times: Vec<Mutex<f64>>,
+    barrier: Barrier,
+    model: CostModel,
+}
+
+/// Per-rank handle of the shared-board thread transport.
+pub struct RankCtx<'a> {
+    rank: usize,
+    size: usize,
+    shared: &'a Shared,
+    clock: Clock,
+}
+
+impl<'a> RankCtx<'a> {
+    /// Post this rank's payload + clock, wait for all, then combine
+    /// every rank's payload in rank order with `combine`. Advances
+    /// clocks to max-entry + modeled cost.
+    fn collective<T>(
+        &mut self,
+        payload: Vec<f64>,
+        modeled_cost: f64,
+        combine: impl FnOnce(&[Vec<f64>]) -> T,
+    ) -> T {
+        *self.shared.slots[self.rank].lock().unwrap() = payload;
+        *self.shared.times[self.rank].lock().unwrap() = self.clock.now();
+        self.shared.barrier.wait();
+
+        // every rank reads all contributions; rank-ordered combine
+        let contributions: Vec<Vec<f64>> = (0..self.size)
+            .map(|i| self.shared.slots[i].lock().unwrap().clone())
+            .collect();
+        let max_entry = (0..self.size)
+            .map(|i| *self.shared.times[i].lock().unwrap())
+            .fold(0.0, f64::max);
+        let out = combine(&contributions);
+
+        // second barrier: nobody reuses slots until everyone has read
+        self.shared.barrier.wait();
+        self.clock.sync_to(max_entry + modeled_cost);
+        out
+    }
+}
+
+impl Communicator for RankCtx<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    fn charge(&mut self, category: Category, seconds: f64) {
+        self.clock.add(category, seconds);
+    }
+
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) {
+        let bytes = data.len() * 8;
+        let cost = self.shared.model.allreduce(self.size, bytes);
+        let payload = data.to_vec(); // the board keeps its own copy
+        self.collective(payload, cost, |parts| fold::reduce_into(parts, data, op));
+    }
+
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
+        assert!(root < self.size, "broadcast root {root} out of range (size {})", self.size);
+        let rank = self.rank;
+        // A provided-payload flag travels with the data so contract
+        // violations surface as a panic on every rank after the
+        // exchange, not as a deadlock at the barrier.
+        let provided = data.is_some();
+        let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
+        let mut payload = vec![if provided { 1.0 } else { 0.0 }];
+        if let Some(d) = data {
+            payload.extend_from_slice(&d);
+        }
+        let cost = self.shared.model.broadcast(self.size, data_bytes);
+        self.collective(payload, cost, |parts| {
+            for (i, part) in parts.iter().enumerate() {
+                let flagged = part.first() == Some(&1.0);
+                if i == root && !flagged {
+                    panic!(
+                        "rank {rank}: broadcast(root={root}) — root rank {root} provided no payload"
+                    );
+                }
+                if i != root && flagged {
+                    panic!(
+                        "rank {rank}: broadcast(root={root}) — non-root rank {i} passed Some(..); \
+                         only the root provides the payload"
+                    );
+                }
+            }
+            parts[root][1..].to_vec()
+        })
+    }
+
+    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+        let bytes = data.len() * 8 * self.size;
+        let cost = self.shared.model.allgather(self.size, bytes);
+        self.collective(data.to_vec(), cost, |parts| parts.to_vec())
+    }
+
+    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+        assert!(root < self.size, "gather root {root} out of range (size {})", self.size);
+        let bytes = data.len() * 8 * self.size;
+        let cost = self.shared.model.gather(self.size, bytes);
+        let rank = self.rank;
+        self.collective(data.to_vec(), cost, |parts| (rank == root).then(|| parts.to_vec()))
+    }
+
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>> {
+        assert!(root < self.size, "reduce root {root} out of range (size {})", self.size);
+        let bytes = data.len() * 8;
+        let cost = self.shared.model.reduce(self.size, bytes);
+        let rank = self.rank;
+        self.collective(data.to_vec(), cost, |parts| {
+            (rank == root).then(|| fold::reduce_parts(parts, op))
+        })
+    }
+
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+        let bytes = data.len() * 8;
+        let cost = self.shared.model.reduce_scatter(self.size, bytes);
+        let (rank, size) = (self.rank, self.size);
+        // length validation happens after the exchange, over every
+        // rank's part: a rank with a ragged (or indivisible) length
+        // must panic the whole group, not park the compliant ranks
+        // forever at the board barrier (same rationale as broadcast's
+        // provided-payload flag)
+        self.collective(data.to_vec(), cost, |parts| {
+            for (i, part) in parts.iter().enumerate() {
+                assert_eq!(
+                    part.len() % size,
+                    0,
+                    "rank {rank}: reduce_scatter_block — rank {i}'s length {} not divisible by p = {size}",
+                    part.len()
+                );
+            }
+            let reduced = fold::reduce_parts(parts, op);
+            fold::block(&reduced, rank, size)
+        })
+    }
+
+    fn barrier(&mut self) {
+        let cost = self.shared.model.barrier(self.size);
+        self.collective(Vec::new(), cost, |_| ());
+    }
+}
+
+fn new_shared(p: usize, model: CostModel) -> Shared {
+    Shared {
+        slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        times: (0..p).map(|_| Mutex::new(0.0)).collect(),
+        barrier: Barrier::new(p),
+        model,
+    }
+}
+
+/// Spawn `p` rank threads running `f` and return the per-rank results in
+/// rank order. Panics in any rank propagate with their original payload.
+pub fn run<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+) -> Vec<R> {
+    run_with_clocks(p, model, f).into_iter().map(|(out, _)| out).collect()
+}
+
+/// Like [`run`], but also returns each rank's final [`Clock`].
+pub fn run_with_clocks<R: Send>(
+    p: usize,
+    model: CostModel,
+    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+) -> Vec<(R, Clock)> {
+    assert!(p >= 1, "need at least one rank");
+    let shared = new_shared(p, model);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let shared = &shared;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
+                    let out = f(&mut ctx);
+                    (out, ctx.clock)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sum_exact() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mine = vec![ctx.rank() as f64, 1.0];
+            ctx.allreduce(&mine, Op::Sum)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn allreduce_max_min() {
+        let results = run(3, CostModel::free(), |ctx| {
+            let x = (ctx.rank() as f64 - 1.0) * 2.5;
+            (ctx.allreduce_scalar(x, Op::Max), ctx.allreduce_scalar(x, Op::Min))
+        });
+        for (mx, mn) in &results {
+            assert_eq!(*mx, 2.5);
+            assert_eq!(*mn, -2.5);
+        }
+    }
+
+    #[test]
+    fn allreduce_inplace_matches_allocating() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mine: Vec<f64> = (0..6).map(|j| (ctx.rank() * 10 + j) as f64).collect();
+            let alloc = ctx.allreduce(&mine, Op::Sum);
+            let mut inplace = mine;
+            ctx.allreduce_inplace(&mut inplace, Op::Sum);
+            (alloc, inplace)
+        });
+        for (alloc, inplace) in &results {
+            assert_eq!(alloc, inplace);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
+            ctx.broadcast(2, payload)
+        });
+        for r in &results {
+            assert_eq!(r, &vec![7.0, 8.0, 9.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-root rank 1 passed Some")]
+    fn broadcast_nonroot_some_panics_everywhere() {
+        // the ISSUE-2 bug: non-root Some + root None used to hang the
+        // group; now every rank panics with a rank-tagged message
+        run(3, CostModel::free(), |ctx| {
+            let payload = (ctx.rank() == 1).then(|| vec![1.0]);
+            ctx.broadcast(0, payload)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "root rank 0 provided no payload")]
+    fn broadcast_root_none_panics_everywhere() {
+        run(3, CostModel::free(), |ctx| {
+            let _ = ctx.rank();
+            ctx.broadcast(0, None)
+        });
+    }
+
+    #[test]
+    fn allgather_preserves_rank_order() {
+        let results = run(3, CostModel::free(), |ctx| ctx.allgather(&[ctx.rank() as f64]));
+        for r in &results {
+            assert_eq!(r, &vec![vec![0.0], vec![1.0], vec![2.0]]);
+        }
+    }
+
+    #[test]
+    fn gather_lands_on_root_only() {
+        let results = run(4, CostModel::free(), |ctx| {
+            let mine = vec![ctx.rank() as f64; ctx.rank() + 1]; // ragged parts
+            ctx.gather(2, &mine)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            if rank == 2 {
+                let parts = r.as_ref().expect("root receives");
+                assert_eq!(parts.len(), 4);
+                for (i, part) in parts.iter().enumerate() {
+                    assert_eq!(part, &vec![i as f64; i + 1]);
+                }
+            } else {
+                assert!(r.is_none(), "rank {rank} must not receive");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_lands_on_root_only() {
+        let results = run(4, CostModel::free(), |ctx| {
+            ctx.reduce(1, &[ctx.rank() as f64, 1.0], Op::Sum)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            if rank == 1 {
+                assert_eq!(r.as_ref().unwrap(), &vec![6.0, 4.0]);
+            } else {
+                assert!(r.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_block_distributes_the_reduction() {
+        let results = run(3, CostModel::free(), |ctx| {
+            // rank r contributes [r, r, r, r, r, r]
+            let mine = vec![ctx.rank() as f64; 6];
+            ctx.reduce_scatter_block(&mine, Op::Sum)
+        });
+        // reduction is [3, 3, 3, 3, 3, 3]; each rank gets its 2-block
+        for r in &results {
+            assert_eq!(r, &vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn reduce_scatter_ragged_length_panics_without_deadlock() {
+        // rank 0 misuses the collective; every rank must panic (the
+        // validation rides the exchange) instead of rank 1 hanging
+        run(2, CostModel::free(), |ctx| {
+            let mine = vec![1.0; if ctx.rank() == 0 { 3 } else { 4 }];
+            ctx.reduce_scatter_block(&mine, Op::Sum)
+        });
+    }
+
+    #[test]
+    fn barrier_and_slot_reuse() {
+        // exercise slot reuse across many rounds and mixed primitives
+        let results = run(4, CostModel::free(), |ctx| {
+            let mut acc = 0.0;
+            for round in 0..20 {
+                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
+                ctx.barrier();
+            }
+            acc
+        });
+        let expect: f64 = (0..20).map(|r| (0..4).map(|k| (k + r) as f64).sum::<f64>()).sum();
+        for r in &results {
+            assert_eq!(*r, expect);
+        }
+    }
+
+    #[test]
+    fn deterministic_sum_order() {
+        // results must be identical across repeated runs (rank-ordered fold)
+        let vals = [1e16, 1.0, -1e16, 3.0];
+        let run_once = || {
+            run(4, CostModel::free(), |ctx| ctx.allreduce_scalar(vals[ctx.rank()], Op::Sum))[0]
+        };
+        let first = run_once();
+        for _ in 0..5 {
+            assert_eq!(run_once(), first);
+        }
+    }
+
+    #[test]
+    fn clocks_sync_at_collectives() {
+        let results = run_with_clocks(2, CostModel::shared_memory(), |ctx| {
+            if ctx.rank() == 0 {
+                ctx.charge(Category::Compute, 1.0);
+            } else {
+                ctx.charge(Category::Compute, 3.0);
+            }
+            ctx.allreduce_scalar(1.0, Op::Sum);
+            ctx.clock().now()
+        });
+        // both ranks end at >= 3.0 (max entry) and equal virtual time
+        let t0 = results[0].0;
+        let t1 = results[1].0;
+        assert!(t0 >= 3.0 && (t0 - t1).abs() < 1e-12, "{t0} vs {t1}");
+        // rank 0 waited ~2s in comm
+        assert!(results[0].1.in_category(Category::Comm) >= 2.0);
+    }
+
+    #[test]
+    fn single_rank_works() {
+        let results = run(1, CostModel::shared_memory(), |ctx| {
+            ctx.barrier();
+            assert_eq!(ctx.gather(0, &[3.0]).unwrap(), vec![vec![3.0]]);
+            ctx.allreduce_scalar(5.0, Op::Sum)
+        });
+        assert_eq!(results, vec![5.0]);
+    }
+
+    #[test]
+    fn timed_charges_cpu() {
+        let results = run_with_clocks(2, CostModel::free(), |ctx| {
+            ctx.timed(Category::Learn, || {
+                let mut acc = 0u64;
+                for i in 0..500_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                std::hint::black_box(acc)
+            });
+            ctx.clock().in_category(Category::Learn)
+        });
+        for (learn, _) in &results {
+            assert!(*learn > 0.0);
+        }
+    }
+}

@@ -81,6 +81,20 @@ impl DataSource {
     }
 }
 
+/// Which transport backs the rank communicator. p = 1 runs always use
+/// the zero-overhead [`crate::comm::SelfComm`] backend regardless of
+/// this setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// In-process shared-board thread collectives (the default).
+    #[default]
+    Threads,
+    /// Localhost TCP socket transport (rank 0 rendezvous) — exercises
+    /// the network code path; results are bitwise identical to
+    /// [`Transport::Threads`].
+    Sockets,
+}
+
 /// Full configuration of one distributed run.
 #[derive(Clone)]
 pub struct DOpInfConfig {
@@ -90,6 +104,8 @@ pub struct DOpInfConfig {
     pub opinf: OpInfConfig,
     /// communication cost model for the virtual clocks
     pub cost_model: CostModel,
+    /// which communicator backend carries the collectives
+    pub transport: Transport,
     /// modeled storage read bandwidth per rank (bytes/s) for Step I
     pub disk_bandwidth: f64,
     /// artifacts directory (None = pure-native engine)
@@ -104,6 +120,7 @@ impl DOpInfConfig {
             p,
             opinf,
             cost_model: CostModel::shared_memory(),
+            transport: Transport::default(),
             disk_bandwidth: 1.5e9,
             artifacts_dir: None,
             probes: Vec::new(),
@@ -161,6 +178,7 @@ mod tests {
             nt_p: 100,
         });
         assert_eq!(cfg.p, 4);
+        assert_eq!(cfg.transport, Transport::Threads);
         assert!(cfg.artifacts_dir.is_none());
         assert!(cfg.probes.is_empty());
     }

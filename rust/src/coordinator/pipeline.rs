@@ -1,8 +1,11 @@
 //! The five-step distributed dOpInf pipeline (paper Sec. III).
 //!
-//! Every rank thread executes this function over its row partition —
-//! the SPMD structure of the paper's MPI tutorial, collective for
-//! collective:
+//! Every rank executes [`rank_pipeline`] over its row partition — the
+//! SPMD structure of the paper's MPI tutorial, collective for
+//! collective. The function is generic over [`Communicator`], so the
+//! same code runs on the shared-board thread transport, the localhost
+//! socket transport ([`Transport::Sockets`]), or — for p = 1 — the
+//! zero-overhead [`SelfComm`] backend, with bitwise-identical results:
 //!
 //! | Step | local work                    | collective                |
 //! |------|-------------------------------|---------------------------|
@@ -17,9 +20,9 @@
 
 use anyhow::{Context, Result};
 
-use super::config::{DOpInfConfig, DataSource};
+use super::config::{DOpInfConfig, DataSource, Transport};
 use super::timing::{RankTiming, RunTiming};
-use crate::comm::{self, Category, Op, RankCtx};
+use crate::comm::{self, Category, Clock, Communicator, Op, SelfComm};
 use crate::io::partition::distribute_tutorial;
 use crate::linalg::Matrix;
 use crate::opinf::learn;
@@ -73,6 +76,10 @@ pub struct DOpInfResult {
     /// per-probe POD-basis rows + un-centering transforms, in config
     /// order (gathered from the owning ranks)
     pub probe_bases: Vec<ProbeBasis>,
+    /// the assembled learning problem (replicated on all ranks) — its
+    /// normal-equation blocks persist into v2 `.rom` artifacts so the
+    /// serving layer can re-solve regularization-pair ensembles
+    pub problem: crate::opinf::learn::OpInfProblem,
     /// virtual-clock timing per rank
     pub timing: RunTiming,
 }
@@ -94,9 +101,22 @@ pub fn run_distributed(cfg: &DOpInfConfig, source: &DataSource) -> Result<DOpInf
     };
     let pairs = cfg.opinf.grid.pairs();
 
-    let outputs = comm::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
-        rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
-    });
+    let outputs: Vec<(Result<RankOut>, Clock)> = if cfg.p == 1 {
+        // p = 1: no rank threads, no barrier machinery — the
+        // zero-overhead single-rank backend
+        let mut ctx = SelfComm::new();
+        let out = rank_pipeline(&mut ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
+        vec![(out, ctx.into_clock())]
+    } else {
+        match cfg.transport {
+            Transport::Threads => comm::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
+                rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+            }),
+            Transport::Sockets => comm::socket::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
+                rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+            }),
+        }
+    };
 
     // surface rank errors + collect clocks
     let mut timings = Vec::with_capacity(cfg.p);
@@ -114,8 +134,8 @@ pub fn run_distributed(cfg: &DOpInfConfig, source: &DataSource) -> Result<DOpInf
 }
 
 #[allow(clippy::too_many_arguments)]
-fn rank_pipeline(
-    ctx: &mut RankCtx,
+fn rank_pipeline<C: Communicator>(
+    ctx: &mut C,
     cfg: &DOpInfConfig,
     source: &DataSource,
     ranges: &[crate::io::RowRange],
@@ -153,7 +173,10 @@ fn rank_pipeline(
 
     // ---- Step III: Gram-based dimensionality reduction ----------------
     let d_rank = ctx.timed(Category::Compute, || engine.gram(&q));
-    let d_vec = ctx.allreduce(d_rank.data(), Op::Sum);
+    // in place: the (nt, nt) Gram block is the pipeline's largest
+    // payload — no clone round-trip through the collective
+    let mut d_vec = d_rank.into_vec();
+    ctx.allreduce_inplace(&mut d_vec, Op::Sum);
     let d_global = Matrix::from_vec(nt, nt, d_vec);
     let spectrum = ctx.timed(Category::Compute, || GramSpectrum::from_gram(&d_global));
     let r = cfg
@@ -234,14 +257,14 @@ fn rank_pipeline(
             });
         }
         // owner's contribution + zeros elsewhere = gather-to-all
-        let combined = ctx.allreduce(&payload, Op::Sum);
-        probes.push(ProbePrediction { var, row, values: combined[..nt_p].to_vec() });
+        ctx.allreduce_inplace(&mut payload, Op::Sum);
+        probes.push(ProbePrediction { var, row, values: payload[..nt_p].to_vec() });
         probe_bases.push(ProbeBasis {
             var,
             row,
-            phi: combined[nt_p..nt_p + r].to_vec(),
-            mean: combined[nt_p + r],
-            scale: combined[nt_p + r + 1],
+            phi: payload[nt_p..nt_p + r].to_vec(),
+            mean: payload[nt_p + r],
+            scale: payload[nt_p + r + 1],
         });
     }
 
@@ -259,6 +282,7 @@ fn rank_pipeline(
             ops,
             qhat0: problem.qhat0.clone(),
             probe_bases,
+            problem,
             timing: RunTiming::new(Vec::new()), // filled by the caller
         },
     })
@@ -359,6 +383,14 @@ mod tests {
         let diff = traj.transpose().max_abs_diff(&dist.qtilde);
         assert!(diff < 1e-12, "operator rollout drifts from Q̃: {diff}");
 
+        // the replicated problem re-solves to the same operators — the
+        // contract the v2 artifact's reg blocks rely on
+        assert_eq!(dist.problem.r, dist.r);
+        let re = dist.problem.solve(dist.opt_pair.0, dist.opt_pair.1).unwrap();
+        assert_eq!(re.ahat, dist.ops.ahat);
+        assert_eq!(re.fhat, dist.ops.fhat);
+        assert_eq!(re.chat, dist.ops.chat);
+
         // probe bases evaluate to the lifted probe predictions
         assert_eq!(dist.probe_bases.len(), 2);
         for (basis, pred) in dist.probe_bases.iter().zip(&dist.probes) {
@@ -369,6 +401,25 @@ mod tests {
                 let v = basis.eval(&state);
                 assert!((v - pred.values[t]).abs() < 1e-10, "t={t}: {v} vs {}", pred.values[t]);
             }
+        }
+    }
+
+    #[test]
+    fn socket_transport_matches_threads_bitwise() {
+        let (source, ocfg, _) = test_setup(120);
+        let mut tcfg = DOpInfConfig::new(3, ocfg);
+        tcfg.cost_model = CostModel::free();
+        tcfg.probes = vec![(0, 5), (1, 100)];
+        let mut scfg = tcfg.clone();
+        scfg.transport = Transport::Sockets;
+        let a = run_distributed(&tcfg, &source).unwrap();
+        let b = run_distributed(&scfg, &source).unwrap();
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.eigs, b.eigs);
+        assert_eq!(a.opt_pair, b.opt_pair);
+        assert_eq!(a.qtilde.data(), b.qtilde.data());
+        for (pa, pb) in a.probes.iter().zip(&b.probes) {
+            assert_eq!(pa.values, pb.values);
         }
     }
 

@@ -8,10 +8,13 @@
 //! POD basis (Gram-matrix method of snapshots, Eqs. 5–8).
 //!
 //! Architecture (see DESIGN.md):
-//! * **L3 (this crate)** — coordinator: thread-rank communicator, the five
-//!   dOpInf pipeline steps, regularization grid search, scaling harness,
-//!   the 2D Navier-Stokes snapshot generator, and all substrates (dense
-//!   linear algebra, dataset I/O, CLI, benches).
+//! * **L3 (this crate)** — coordinator: the transport-abstracted
+//!   [`comm::Communicator`] collective vocabulary (thread shared-board,
+//!   zero-overhead single-rank, and localhost socket backends — all
+//!   bitwise-identical by construction), the five dOpInf pipeline
+//!   steps written generically against it, regularization grid search,
+//!   scaling harness, the 2D Navier-Stokes snapshot generator, and all
+//!   substrates (dense linear algebra, dataset I/O, CLI, benches).
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime** — [`runtime`] loads the HLO artifacts via PJRT (`xla`
@@ -20,20 +23,23 @@
 //! * **Serving** — [`serve`] is the online stage as a service: training
 //!   persists a versioned ROM artifact ([`serve::RomArtifact`]: the
 //!   operators, the per-probe POD-basis rows with their un-centering
-//!   transform, and provenance metadata), and a serving process loads
-//!   it and evaluates *ensembles* of rollouts for UQ / design-space
-//!   exploration — B members advanced per step as one
-//!   `(r, r+s+1) @ (r+s+1, B)` GEMM ([`serve::batch`]), streamed into
-//!   per-probe mean/variance/quantile statistics ([`serve::ensemble`]),
-//!   sharded over rank workers and queued across requests
+//!   transform, optional OpInf normal-equation blocks, and provenance
+//!   metadata), and a serving process loads it and evaluates
+//!   *ensembles* of rollouts for UQ / design-space exploration — B
+//!   members advanced per step as one `(r, r+s+1) @ (r+s+1, B)` GEMM
+//!   ([`serve::batch`]), streamed into per-probe mean/variance/quantile
+//!   statistics ([`serve::ensemble`], including serving-side
+//!   regularization-pair ensembles), sharded over rank workers with
+//!   rooted-`gather` aggregation and queued across requests
 //!   ([`serve::server`]).
 //!
 //! The training → artifact → serving flow:
 //!
 //! ```text
 //! dopinf simulate …            # write a SNAPD dataset
-//! dopinf train … --save-rom model.rom
+//! dopinf train … --save-rom model.rom     # add --transport sockets for the TCP backend
 //! dopinf ensemble --model model.rom --members 256 --steps 1200
+//! dopinf ensemble --model model.rom --reg-ensemble   # reg-pair ensemble from the v2 blocks
 //! ```
 //!
 //! Quickstart: see `examples/quickstart.rs` (training) and

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use dopinf::coordinator::config::{DOpInfConfig, DataSource};
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
 use dopinf::coordinator::scaling::strong_scaling;
 use dopinf::io::snapd::SnapReader;
@@ -152,8 +152,25 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "procs-list", help: "(scaling) comma-separated p values", default: Some("1,2,4,8"), is_flag: false },
         OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
         OptSpec { name: "save-rom", help: "write the trained ROM artifact here (.rom)", default: None, is_flag: false },
+        OptSpec { name: "transport", help: "communicator backend: threads | sockets", default: Some("threads"), is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
+}
+
+fn parse_transport(s: &str) -> Result<Transport> {
+    Ok(match s {
+        "threads" => Transport::Threads,
+        "sockets" => Transport::Sockets,
+        other => bail!("unknown transport {other:?} (threads|sockets)"),
+    })
+}
+
+fn parse_reg_grid(s: &str) -> Result<RegGrid> {
+    Ok(match s {
+        "coarse" => RegGrid::coarse(),
+        "paper" => RegGrid::paper_default(),
+        other => bail!("unknown regularization grid {other:?} (coarse|paper)"),
+    })
 }
 
 /// Build the training configuration + data source from CLI options.
@@ -174,10 +191,7 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
         .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
         .unwrap_or_default();
 
-    let grid = match a.get_or("grid-size", "paper") {
-        "coarse" => RegGrid::coarse(),
-        _ => RegGrid::paper_default(),
-    };
+    let grid = parse_reg_grid(a.get_or("grid-size", "paper"))?;
     let opinf = OpInfConfig {
         ns,
         energy_target: a.get_parse("energy", 0.9996)?,
@@ -188,6 +202,7 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
         nt_p: nt_total,
     };
     let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
+    cfg.transport = parse_transport(a.get_or("transport", "threads"))?;
     cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
     // probes on both velocity variables
     for &row in &probe_rows {
@@ -285,11 +300,14 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
             ops: result.ops.clone(),
             qhat0: result.qhat0.clone(),
             probes: result.probe_bases.clone(),
+            // v2: persist the normal-equation blocks so `ensemble
+            // --reg-ensemble` can re-solve reg-pair ensembles later
+            reg: Some(dopinf::serve::RegBlocks::from_problem(&result.problem)),
             meta,
         };
         artifact.save(rom_path)?;
         println!(
-            "saved ROM artifact to {rom_path} (r={}, {} probes)",
+            "saved ROM artifact to {rom_path} (r={}, {} probes, reg blocks included)",
             result.r,
             artifact.probes.len()
         );
@@ -423,6 +441,8 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
         OptSpec { name: "seed", help: "ensemble RNG seed", default: Some("7"), is_flag: false },
         OptSpec { name: "results", help: "results output dir", default: Some("results"), is_flag: false },
         OptSpec { name: "artifacts", help: "PJRT artifacts dir (omit for native)", default: None, is_flag: false },
+        OptSpec { name: "reg-ensemble", help: "ensemble over regularization pairs (needs a v2 .rom with reg blocks)", default: None, is_flag: true },
+        OptSpec { name: "reg-grid", help: "(reg-ensemble) candidate grid: coarse | paper", default: Some("coarse"), is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ];
     let a = Args::parse(tokens, &specs)?;
@@ -435,46 +455,75 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
     }
     let model_path = a.get("model").context("--model is required (train with --save-rom)")?;
     let artifact = RomArtifact::load(model_path)?;
-    let engine = match a.get("artifacts") {
-        Some(dir) => Engine::from_artifacts(std::path::Path::new(dir))?,
-        None => Engine::native(),
-    };
-    let spec = EnsembleSpec {
-        members: a.get_parse("members", 256)?,
-        sigma: a.get_parse("sigma", 0.01)?,
-        seed: a.get_parse("seed", 7)?,
-        n_steps: a.get_parse("steps", 1200)?,
-    };
-    let workers: usize = a.get_parse("workers", 4)?;
-    eprintln!(
-        "serving {model_path}: r={}, {} probes, B={} members x {} steps over {workers} workers",
-        artifact.r(),
-        artifact.probes.len(),
-        spec.members,
-        spec.n_steps
-    );
+    let n_steps: usize = a.get_parse("steps", 1200)?;
     if !artifact.meta.is_empty() {
         let meta: Vec<String> =
             artifact.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
         eprintln!("provenance: {}", meta.join(", "));
     }
 
+    let results_dir = PathBuf::from(a.get_or("results", "results"));
     let t = dopinf::util::timer::WallTimer::start();
-    let stats = serve_ensemble(&engine, &artifact, &spec, workers)?;
+    let (stats, prefix) = if a.flag("reg-ensemble") {
+        // members come from the candidate grid, the rollout is native
+        // and single-process — reject flags that would silently do
+        // nothing rather than leaving the user guessing
+        for flag in ["members", "sigma", "seed", "workers", "artifacts"] {
+            anyhow::ensure!(
+                a.get(flag).is_none(),
+                "--{flag} does not apply to --reg-ensemble (ensemble size = solvable \
+                 grid pairs; use --reg-grid to change the candidate set)"
+            );
+        }
+        let pairs = parse_reg_grid(a.get_or("reg-grid", "coarse"))?.pairs();
+        eprintln!(
+            "serving {model_path}: r={}, {} probes, reg ensemble over {} candidate pairs x {n_steps} steps",
+            artifact.r(),
+            artifact.probes.len(),
+            pairs.len()
+        );
+        let ens = dopinf::serve::run_reg_ensemble(&artifact, &pairs, n_steps)?;
+        println!(
+            "reg ensemble: {} of {} pairs solvable ({} skipped)",
+            ens.pairs_used.len(),
+            pairs.len(),
+            ens.skipped.len()
+        );
+        (ens.stats, "regens")
+    } else {
+        let spec = EnsembleSpec {
+            members: a.get_parse("members", 256)?,
+            sigma: a.get_parse("sigma", 0.01)?,
+            seed: a.get_parse("seed", 7)?,
+            n_steps,
+        };
+        let workers: usize = a.get_parse("workers", 4)?;
+        let engine = match a.get("artifacts") {
+            Some(dir) => Engine::from_artifacts(std::path::Path::new(dir))?,
+            None => Engine::native(),
+        };
+        eprintln!(
+            "serving {model_path}: r={}, {} probes, B={} members x {} steps over {workers} workers",
+            artifact.r(),
+            artifact.probes.len(),
+            spec.members,
+            spec.n_steps
+        );
+        (serve_ensemble(&engine, &artifact, &spec, workers)?, "ensemble")
+    };
     let elapsed = t.elapsed();
-    let member_steps = (spec.members * spec.n_steps) as f64;
+    let member_steps = (stats.members * stats.n_steps) as f64;
     println!(
         "rolled {} member-steps in {:.4} s ({:.3e} member-steps/s), {} of {} members diverged",
-        spec.members * spec.n_steps,
+        stats.members * stats.n_steps,
         elapsed,
         member_steps / elapsed.max(1e-12),
         stats.n_diverged(),
-        spec.members
+        stats.members
     );
 
-    let results_dir = PathBuf::from(a.get_or("results", "results"));
     for series in &stats.probes {
-        let k_last = spec.n_steps - 1;
+        let k_last = stats.n_steps - 1;
         println!(
             "probe var{} row{}: final mean {:.6e}, variance {:.6e}, [q05, q95] = [{:.6e}, {:.6e}] ({} members)",
             series.var,
@@ -485,12 +534,12 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
             series.q95[k_last],
             series.count[k_last]
         );
-        let name = format!("ensemble_probe_var{}_row{}.csv", series.var, series.row);
+        let name = format!("{prefix}_probe_var{}_row{}.csv", series.var, series.row);
         let mut csv = CsvWriter::create(
             results_dir.join(&name),
             &["step", "mean", "variance", "q05", "q50", "q95", "count"],
         )?;
-        for k in 0..spec.n_steps {
+        for k in 0..stats.n_steps {
             csv.row(&[
                 k as f64,
                 series.mean[k],

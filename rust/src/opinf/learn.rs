@@ -52,6 +52,21 @@ pub fn assemble(qhat: &Matrix) -> OpInfProblem {
 }
 
 impl OpInfProblem {
+    /// Rebuild a solvable problem from persisted normal-equation blocks
+    /// (the serving-side entry: v2 `.rom` artifacts carry `D̂ᵀD̂` and
+    /// `D̂ᵀQ̂₂ᵀ`). The training trajectory is not available in that
+    /// setting, so `qhat_t` is empty — [`OpInfProblem::solve`] works,
+    /// training-error search does not.
+    pub fn from_blocks(dtd: Matrix, dtq2: Matrix, qhat0: Vec<f64>) -> OpInfProblem {
+        let d = dtd.rows();
+        let r = dtq2.cols();
+        assert_eq!(dtd.cols(), d, "dtd must be square");
+        assert_eq!(dtq2.rows(), d, "dtq2 rows must match dtd");
+        assert_eq!(d, r + s_dim(r) + 1, "block dims inconsistent: d = {d} vs r = {r}");
+        assert_eq!(qhat0.len(), r, "qhat0 length != r");
+        OpInfProblem { r, d, dtd, dtq2, qhat_t: Matrix::zeros(0, r), qhat0 }
+    }
+
     /// Solve the (β₁, β₂)-regularized normal equations: β₁ on the linear
     /// and constant blocks, β₂ on the quadratic block (tutorial lines
     /// 253–262; note the tutorial adds β to the diagonal, i.e. Tikhonov
@@ -160,6 +175,28 @@ mod tests {
         let (_, f_base, _) = base.norms();
         let (_, f_quad, _) = quad_reg.norms();
         assert!(f_quad < 1e-3 * f_base, "quadratic block not suppressed");
+    }
+
+    #[test]
+    fn from_blocks_solves_identically() {
+        let qhat = Matrix::randn(4, 80, 11);
+        let full = assemble(&qhat);
+        let rebuilt =
+            OpInfProblem::from_blocks(full.dtd.clone(), full.dtq2.clone(), full.qhat0.clone());
+        assert_eq!(rebuilt.r, full.r);
+        assert_eq!(rebuilt.d, full.d);
+        let a = full.solve(1e-6, 1e-3).unwrap();
+        let b = rebuilt.solve(1e-6, 1e-3).unwrap();
+        // identical inputs → bitwise-identical operators
+        assert_eq!(a.ahat, b.ahat);
+        assert_eq!(a.fhat, b.fhat);
+        assert_eq!(a.chat, b.chat);
+    }
+
+    #[test]
+    #[should_panic(expected = "block dims inconsistent")]
+    fn from_blocks_rejects_mismatched_dims() {
+        OpInfProblem::from_blocks(Matrix::zeros(7, 7), Matrix::zeros(7, 3), vec![0.0; 3]);
     }
 
     #[test]

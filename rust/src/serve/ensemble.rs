@@ -23,6 +23,7 @@ use anyhow::Result;
 use crate::linalg::Matrix;
 use crate::opinf::learn::OpInfProblem;
 use crate::opinf::postprocess::ProbeBasis;
+use crate::rom::rollout::solve_discrete;
 use crate::rom::RomOperators;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
@@ -220,6 +221,41 @@ pub(crate) fn push_series_step(series: &mut ProbeSeries, scratch: &mut Vec<f64>)
     }
 }
 
+/// Reduce fully-materialized member values into per-probe series:
+/// `value_at(probe, step, member)` supplies the value, members flagged
+/// in `diverged_at` at or before a step are excluded there, and
+/// non-finite values are filtered exactly like the streaming
+/// accumulator. The single batch-reduction path shared by the sharded
+/// server and the reg-pair ensemble — divergence/finiteness semantics
+/// live here once.
+pub(crate) fn reduce_member_series(
+    probes: &[ProbeBasis],
+    n_steps: usize,
+    members: usize,
+    diverged_at: &[Option<usize>],
+    value_at: impl Fn(usize, usize, usize) -> f64,
+) -> Vec<ProbeSeries> {
+    debug_assert_eq!(diverged_at.len(), members);
+    let mut out: Vec<ProbeSeries> =
+        probes.iter().map(|p| ProbeSeries::with_capacity(p, n_steps)).collect();
+    let mut scratch: Vec<f64> = Vec::with_capacity(members);
+    for (p, series) in out.iter_mut().enumerate() {
+        for k in 0..n_steps {
+            scratch.clear();
+            for i in 0..members {
+                let excluded = matches!(diverged_at[i], Some(at) if at <= k);
+                let v = value_at(p, k, i);
+                // same value-finiteness filter as EnsembleAccumulator
+                if !excluded && v.is_finite() {
+                    scratch.push(v);
+                }
+            }
+            push_series_step(series, &mut scratch);
+        }
+    }
+    out
+}
+
 /// Streaming per-probe statistics accumulator fed one transposed
 /// `(r, B)` state batch per step.
 pub struct EnsembleAccumulator {
@@ -276,6 +312,77 @@ impl EnsembleAccumulator {
     }
 }
 
+/// Result of a regularization-pair ensemble evaluation.
+#[derive(Clone, Debug)]
+pub struct RegEnsemble {
+    /// the shared probe statistics; "members" are reg pairs, in
+    /// `pairs_used` order
+    pub stats: EnsembleStats,
+    /// pairs that produced a model (stats member order)
+    pub pairs_used: Vec<(f64, f64)>,
+    /// pairs whose regularized solve failed
+    pub skipped: Vec<(f64, f64)>,
+}
+
+/// Evaluate a regularization-pair ensemble from an artifact's persisted
+/// normal-equation blocks (v2 `.rom`): one ROM per solvable (β₁, β₂)
+/// candidate, each rolled out from the artifact's reference initial
+/// condition, reduced into the same per-probe mean/variance/quantile
+/// series as the perturbed-IC path (McQuarrie et al. 2020: the reg
+/// sweep *is* an ensemble of plausible models). Models whose rollout
+/// goes non-finite are flagged in `diverged_at` and excluded from the
+/// statistics beyond their divergence step.
+pub fn run_reg_ensemble(
+    artifact: &RomArtifact,
+    pairs: &[(f64, f64)],
+    n_steps: usize,
+) -> Result<RegEnsemble> {
+    anyhow::ensure!(n_steps >= 1, "ensemble needs at least one step");
+    anyhow::ensure!(!pairs.is_empty(), "ensemble needs at least one regularization pair");
+    let problem = artifact.reg_problem()?;
+    let (models, skipped) = reg_pair_ensemble(&problem, pairs);
+    anyhow::ensure!(
+        !models.is_empty(),
+        "no regularization pair was solvable ({} candidates)",
+        pairs.len()
+    );
+    let pairs_used: Vec<(f64, f64)> =
+        pairs.iter().copied().filter(|pair| !skipped.contains(pair)).collect();
+
+    // roll every model, recording member-major probe values:
+    // values[p][k * b + i]
+    let b = models.len();
+    let n_probes = artifact.probes.len();
+    let mut diverged_at: Vec<Option<usize>> = Vec::with_capacity(b);
+    let mut values = vec![vec![0.0; n_steps * b]; n_probes];
+    for (i, ops) in models.iter().enumerate() {
+        let (_, traj) = solve_discrete(ops, &artifact.qhat0, n_steps);
+        let mut first_bad = None;
+        for k in 0..n_steps {
+            let state = traj.row(k);
+            if first_bad.is_none() && state.iter().any(|x| !x.is_finite()) {
+                first_bad = Some(k);
+            }
+            for (p, probe) in artifact.probes.iter().enumerate() {
+                values[p][k * b + i] = probe.eval(state);
+            }
+        }
+        diverged_at.push(first_bad);
+    }
+
+    // reduce through the shared per-step path — identical statistics
+    // code to the perturbed-IC ensembles
+    let probes_out = reduce_member_series(&artifact.probes, n_steps, b, &diverged_at, |p, k, i| {
+        values[p][k * b + i]
+    });
+
+    Ok(RegEnsemble {
+        stats: EnsembleStats { probes: probes_out, members: b, n_steps, diverged_at },
+        pairs_used,
+        skipped,
+    })
+}
+
 /// Evaluate a perturbed-IC ensemble of `spec.members` members on one
 /// artifact, streaming statistics per step. Single-threaded; see
 /// [`super::server`] for the sharded multi-worker path.
@@ -319,8 +426,20 @@ mod tests {
             ops,
             qhat0: (0..r).map(|j| 0.4 - 0.05 * j as f64).collect(),
             probes,
+            reg: None,
             meta: BTreeMap::new(),
         }
+    }
+
+    /// Artifact whose reg blocks come from a real assembled problem on
+    /// a stable trajectory.
+    fn artifact_with_reg(r: usize) -> RomArtifact {
+        let mut art = artifact(r);
+        let (nans, traj) = solve_discrete(&art.ops, &art.qhat0, 90);
+        assert!(!nans);
+        let problem = learn::assemble(&traj.transpose());
+        art.reg = Some(crate::serve::model::RegBlocks::from_problem(&problem));
+        art
     }
 
     #[test]
@@ -426,6 +545,59 @@ mod tests {
         assert_eq!(last.count[k_last], 64 - stats.n_diverged());
         assert!(last.mean[k_last].is_finite());
         assert!(last.q95[k_last].is_finite());
+    }
+
+    #[test]
+    fn reg_ensemble_end_to_end_from_blocks() {
+        let art = artifact_with_reg(3);
+        let pairs = [(1e-8, 1e-8), (1e-5, 1e-3), (1e-2, 1e-1)];
+        let ens = run_reg_ensemble(&art, &pairs, 40).unwrap();
+        assert_eq!(ens.stats.members, ens.pairs_used.len());
+        assert_eq!(ens.pairs_used.len() + ens.skipped.len(), 3);
+        assert_eq!(ens.stats.n_steps, 40);
+        assert_eq!(ens.stats.probes.len(), art.probes.len());
+        for series in &ens.stats.probes {
+            assert_eq!(series.mean.len(), 40);
+            for k in 0..40 {
+                if series.count[k] > 0 {
+                    assert!(series.q05[k] <= series.q50[k] && series.q50[k] <= series.q95[k]);
+                    assert!(series.variance[k] >= 0.0);
+                }
+            }
+        }
+        // every member starts from the same reference IC: step 0 is
+        // degenerate — zero variance, quantiles collapsed onto the
+        // generating model's probe value
+        let want0 = art.probes[0].eval(&art.qhat0);
+        let series = &ens.stats.probes[0];
+        assert_eq!(series.count[0], ens.stats.members);
+        assert!(series.variance[0].abs() < 1e-20);
+        assert!((series.mean[0] - want0).abs() < 1e-9 * want0.abs().max(1.0));
+        assert_eq!(series.q05[0], series.q95[0]);
+    }
+
+    #[test]
+    fn reg_ensemble_survives_artifact_roundtrip() {
+        let art = artifact_with_reg(3);
+        let back = RomArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let pairs = [(1e-7, 1e-5), (1e-3, 1e-2)];
+        let a = run_reg_ensemble(&art, &pairs, 25).unwrap();
+        let b = run_reg_ensemble(&back, &pairs, 25).unwrap();
+        // blocks round-trip bitwise, so the ensembles agree bitwise
+        assert_eq!(a.pairs_used, b.pairs_used);
+        for (pa, pb) in a.stats.probes.iter().zip(&b.stats.probes) {
+            assert_eq!(pa.mean, pb.mean);
+            assert_eq!(pa.variance, pb.variance);
+            assert_eq!(pa.q05, pb.q05);
+            assert_eq!(pa.q95, pb.q95);
+        }
+    }
+
+    #[test]
+    fn reg_ensemble_requires_blocks() {
+        let art = artifact(3); // no reg blocks (v1-style)
+        let err = run_reg_ensemble(&art, &[(1e-6, 1e-6)], 10).unwrap_err();
+        assert!(format!("{err:#}").contains("no regularization blocks"), "{err:#}");
     }
 
     #[test]

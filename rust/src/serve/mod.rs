@@ -23,7 +23,14 @@
 //! * [`ensemble`] — perturbed-IC / reg-pair ensemble construction and
 //!   streaming per-probe statistics
 //! * [`server`]   — member sharding over [`crate::comm`] rank workers
-//!   and a multi-threaded request queue over a shared artifact
+//!   (probe series funnel to rank 0 through the rooted `gather`
+//!   collective) and a multi-threaded request queue over a shared
+//!   artifact
+//!
+//! v2 artifacts may also carry the OpInf normal-equation blocks
+//! ([`RegBlocks`]), enabling serving-side *regularization-pair*
+//! ensembles ([`run_reg_ensemble`]): one ROM per (β₁, β₂) candidate
+//! re-solved from the persisted blocks, no training data required.
 
 pub mod batch;
 pub mod ensemble;
@@ -32,8 +39,8 @@ pub mod server;
 
 pub use batch::{rollout_batch, rollout_batch_with, BatchTrajectory};
 pub use ensemble::{
-    perturbed_initial_conditions, reg_pair_ensemble, run_ensemble, EnsembleSpec, EnsembleStats,
-    ProbeSeries,
+    perturbed_initial_conditions, reg_pair_ensemble, run_ensemble, run_reg_ensemble,
+    EnsembleSpec, EnsembleStats, ProbeSeries, RegEnsemble,
 };
-pub use model::RomArtifact;
+pub use model::{RegBlocks, RomArtifact};
 pub use server::{serve_ensemble, RomServer};

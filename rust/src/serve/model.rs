@@ -18,13 +18,19 @@
 //! | magic   | 8 (`DOPINFRM`) |
 //! | format version | u32 |
 //! | header length  | u64 |
-//! | header  | JSON: dims, probe ids, metadata |
-//! | payload | f64 array: Â, Ĥ, ĉ, q̂₀, then per-probe (φ, mean, scale) |
+//! | header  | JSON: dims, probe ids, `has_reg` flag (v2), metadata |
+//! | payload | f64 array: Â, Ĥ, ĉ, q̂₀, per-probe (φ, mean, scale), then (v2, optional) D̂ᵀD̂ and D̂ᵀQ̂₂ᵀ |
 //! | checksum | u64 FNV-1a over header+payload |
 //!
 //! The payload is raw little-endian f64 (bitwise round-trip — operator
 //! equality after `save → load` is exact, which the tests assert), and
 //! the trailing checksum turns silent corruption into a load error.
+//!
+//! **Versioning:** v2 (current) may append the OpInf normal-equation
+//! blocks ([`RegBlocks`], ~(r+s+1)² doubles) so a serving process can
+//! re-solve regularization-pair ensembles without the training data.
+//! v1 files — written before the blocks existed — load unchanged
+//! (`reg = None`); [`RomArtifact::load`] accepts both.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -33,6 +39,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::linalg::Matrix;
+use crate::opinf::learn::OpInfProblem;
 use crate::opinf::postprocess::ProbeBasis;
 use crate::rom::quadratic::s_dim;
 use crate::rom::RomOperators;
@@ -42,8 +49,34 @@ use crate::util::json::{self, Json};
 pub const MAGIC: &[u8; 8] = b"DOPINFRM";
 
 /// Current artifact format version. Bump on any wire-format change;
-/// `load` rejects versions it does not understand.
-pub const FORMAT_VERSION: u32 = 1;
+/// `load` accepts every version up to this one (v1 files, which lack
+/// the regularization blocks, parse with `reg = None`).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// The pair-independent OpInf normal-equation blocks (paper Eq. 12):
+/// `D̂ᵀD̂` (d, d) and `D̂ᵀQ̂₂ᵀ` (d, r) with d = r + s + 1. Persisting
+/// them (~(r+s+1)² doubles — cheap) lets a serving process re-solve
+/// the β-regularized system per candidate pair, i.e. evaluate
+/// regularization-pair ensembles long after training.
+#[derive(Clone, Debug)]
+pub struct RegBlocks {
+    /// `D̂ᵀD̂`, (d, d)
+    pub dtd: Matrix,
+    /// `D̂ᵀQ̂₂ᵀ`, (d, r)
+    pub dtq2: Matrix,
+}
+
+impl RegBlocks {
+    /// d = r + s + 1.
+    pub fn d(&self) -> usize {
+        self.dtd.rows()
+    }
+
+    /// Snapshot the blocks out of an assembled training problem.
+    pub fn from_problem(problem: &OpInfProblem) -> RegBlocks {
+        RegBlocks { dtd: problem.dtd.clone(), dtq2: problem.dtq2.clone() }
+    }
+}
 
 /// A trained ROM packaged for serving.
 #[derive(Clone, Debug)]
@@ -55,6 +88,9 @@ pub struct RomArtifact {
     pub qhat0: Vec<f64>,
     /// per-probe basis rows + un-centering transforms
     pub probes: Vec<ProbeBasis>,
+    /// OpInf normal-equation blocks for serving-side reg-pair
+    /// ensembles (v2 artifacts; `None` in v1 files)
+    pub reg: Option<RegBlocks>,
     /// free-form provenance metadata (dataset, β pair, train error, …)
     pub meta: BTreeMap<String, String>,
 }
@@ -95,13 +131,30 @@ impl RomArtifact {
         self.ops.r
     }
 
+    /// Rebuild a solvable [`OpInfProblem`] from the persisted
+    /// normal-equation blocks — the serving-side entry for
+    /// regularization-pair ensembles. Errors when the artifact carries
+    /// no blocks (v1 files, or training predating them).
+    pub fn reg_problem(&self) -> Result<OpInfProblem> {
+        let reg = self.reg.as_ref().context(
+            "artifact has no regularization blocks (v1 .rom file — retrain with \
+             `train --save-rom` to enable --reg-ensemble)",
+        )?;
+        Ok(OpInfProblem::from_blocks(reg.dtd.clone(), reg.dtq2.clone(), self.qhat0.clone()))
+    }
+
     /// Serialize to the versioned wire format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let r = self.ops.r;
         let s = s_dim(r);
+        let d = r + s + 1;
         assert_eq!(self.qhat0.len(), r, "qhat0 length != r");
         for p in &self.probes {
             assert_eq!(p.phi.len(), r, "probe phi length != r");
+        }
+        if let Some(reg) = &self.reg {
+            assert_eq!((reg.dtd.rows(), reg.dtd.cols()), (d, d), "reg dtd shape != (d, d)");
+            assert_eq!((reg.dtq2.rows(), reg.dtq2.cols()), (d, r), "reg dtq2 shape != (d, r)");
         }
 
         let meta_obj = Json::Obj(
@@ -122,10 +175,14 @@ impl RomArtifact {
             ("r", Json::Num(r as f64)),
             ("n_probes", Json::Num(self.probes.len() as f64)),
             ("probes", probes_arr),
+            ("has_reg", Json::Bool(self.reg.is_some())),
             ("meta", meta_obj),
         ]));
 
-        let mut payload = Vec::with_capacity((r * r + r * s + 2 * r + self.probes.len() * (r + 2)) * 8);
+        let reg_len = if self.reg.is_some() { d * d + d * r } else { 0 };
+        let mut payload = Vec::with_capacity(
+            (r * r + r * s + 2 * r + self.probes.len() * (r + 2) + reg_len) * 8,
+        );
         push_f64s(&mut payload, self.ops.ahat.data());
         push_f64s(&mut payload, self.ops.fhat.data());
         push_f64s(&mut payload, &self.ops.chat);
@@ -133,6 +190,10 @@ impl RomArtifact {
         for p in &self.probes {
             push_f64s(&mut payload, &p.phi);
             push_f64s(&mut payload, &[p.mean, p.scale]);
+        }
+        if let Some(reg) = &self.reg {
+            push_f64s(&mut payload, reg.dtd.data());
+            push_f64s(&mut payload, reg.dtq2.data());
         }
 
         let mut out = Vec::with_capacity(8 + 4 + 8 + header.len() + payload.len() + 8);
@@ -155,8 +216,10 @@ impl RomArtifact {
             bail!("not a dOpInf ROM artifact (bad magic)");
         }
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != FORMAT_VERSION {
-            bail!("unsupported ROM artifact version {version} (this build reads {FORMAT_VERSION})");
+        if version == 0 || version > FORMAT_VERSION {
+            bail!(
+                "unsupported ROM artifact version {version} (this build reads 1..={FORMAT_VERSION})"
+            );
         }
         // header_len is not covered by the checksum (it locates it), so
         // treat it as hostile: no unchecked arithmetic before validation
@@ -208,6 +271,9 @@ impl RomArtifact {
                 meta.insert(k.clone(), v.as_str().context("meta values must be strings")?.to_string());
             }
         }
+        // v1 headers have no has_reg key; treat absent as false so old
+        // files keep loading
+        let has_reg = matches!(header.get("has_reg"), Some(Json::Bool(true)));
 
         let s = s_dim(r);
         let payload = &bytes[body_start + header_len..check_start];
@@ -222,11 +288,19 @@ impl RomArtifact {
             let tail = take_f64s(payload, &mut cursor, 2)?;
             probes.push(ProbeBasis { var, row, phi, mean: tail[0], scale: tail[1] });
         }
+        let reg = if has_reg {
+            let d = r + s + 1;
+            let dtd = Matrix::from_vec(d, d, take_f64s(payload, &mut cursor, d * d)?);
+            let dtq2 = Matrix::from_vec(d, r, take_f64s(payload, &mut cursor, d * r)?);
+            Some(RegBlocks { dtd, dtq2 })
+        } else {
+            None
+        };
         if cursor != payload.len() {
             bail!("corrupt artifact: {} trailing payload bytes", payload.len() - cursor);
         }
 
-        Ok(RomArtifact { ops: RomOperators { r, ahat, fhat, chat }, qhat0, probes, meta })
+        Ok(RomArtifact { ops: RomOperators { r, ahat, fhat, chat }, qhat0, probes, reg, meta })
     }
 
     /// Write the artifact to `path` (parent directories created).
@@ -274,7 +348,64 @@ mod tests {
         let mut meta = BTreeMap::new();
         meta.insert("dataset".to_string(), "synthetic".to_string());
         meta.insert("beta_pair".to_string(), "(1e-6, 1e-2)".to_string());
-        RomArtifact { ops, qhat0: vec![0.5; r], probes, meta }
+        RomArtifact { ops, qhat0: vec![0.5; r], probes, reg: None, meta }
+    }
+
+    fn sample_reg(r: usize) -> RegBlocks {
+        let d = r + s_dim(r) + 1;
+        // SPD-ish dtd so downstream solves are well posed
+        let g = Matrix::randn(d + 4, d, 31);
+        let mut dtd = crate::linalg::syrk(&g);
+        for i in 0..d {
+            dtd[(i, i)] += 1.0;
+        }
+        RegBlocks { dtd, dtq2: Matrix::randn(d, r, 32) }
+    }
+
+    /// Emit the pre-RegBlocks v1 wire layout (magic, version 1, header
+    /// without has_reg, payload without blocks) — what old artifacts on
+    /// disk look like.
+    fn v1_bytes(art: &RomArtifact) -> Vec<u8> {
+        assert!(art.reg.is_none());
+        let r = art.ops.r;
+        let probes_arr = Json::Arr(
+            art.probes
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("var", Json::Num(p.var as f64)),
+                        ("row", Json::Num(p.row as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let meta_obj = Json::Obj(
+            art.meta.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let header = json::emit(&Json::obj(vec![
+            ("r", Json::Num(r as f64)),
+            ("n_probes", Json::Num(art.probes.len() as f64)),
+            ("probes", probes_arr),
+            ("meta", meta_obj),
+        ]));
+        let mut payload = Vec::new();
+        push_f64s(&mut payload, art.ops.ahat.data());
+        push_f64s(&mut payload, art.ops.fhat.data());
+        push_f64s(&mut payload, &art.ops.chat);
+        push_f64s(&mut payload, &art.qhat0);
+        for p in &art.probes {
+            push_f64s(&mut payload, &p.phi);
+            push_f64s(&mut payload, &[p.mean, p.scale]);
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&payload);
+        let check = fnv1a(&out[8 + 4 + 8..]);
+        out.extend_from_slice(&check.to_le_bytes());
+        out
     }
 
     #[test]
@@ -288,6 +419,54 @@ mod tests {
         assert_eq!(back.qhat0, art.qhat0);
         assert_eq!(back.probes, art.probes);
         assert_eq!(back.meta, art.meta);
+    }
+
+    #[test]
+    fn reg_blocks_roundtrip_is_bitwise() {
+        let mut art = sample_artifact(5, 2);
+        art.reg = Some(sample_reg(5));
+        let back = RomArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let (want, got) = (art.reg.as_ref().unwrap(), back.reg.as_ref().unwrap());
+        assert_eq!(got.dtd, want.dtd);
+        assert_eq!(got.dtq2, want.dtq2);
+        assert_eq!(got.d(), 5 + s_dim(5) + 1);
+        // the rest of the artifact is untouched by the extension
+        assert_eq!(back.ops.ahat, art.ops.ahat);
+        assert_eq!(back.probes, art.probes);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let art = sample_artifact(4, 2);
+        let legacy = v1_bytes(&art);
+        let back = RomArtifact::from_bytes(&legacy).unwrap();
+        assert!(back.reg.is_none());
+        assert_eq!(back.ops.ahat, art.ops.ahat);
+        assert_eq!(back.ops.fhat, art.ops.fhat);
+        assert_eq!(back.qhat0, art.qhat0);
+        assert_eq!(back.probes, art.probes);
+        assert_eq!(back.meta, art.meta);
+        // and a v1 artifact refuses reg-ensemble serving with a clear error
+        let err = back.reg_problem().unwrap_err();
+        assert!(format!("{err:#}").contains("no regularization blocks"), "{err:#}");
+    }
+
+    #[test]
+    fn current_writer_emits_v2() {
+        let bytes = sample_artifact(3, 1).to_bytes();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 2);
+    }
+
+    #[test]
+    fn reg_problem_solves_from_persisted_blocks() {
+        let mut art = sample_artifact(4, 1);
+        art.reg = Some(sample_reg(4));
+        let back = RomArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let problem = back.reg_problem().unwrap();
+        assert_eq!(problem.r, 4);
+        assert_eq!(problem.qhat0, back.qhat0);
+        let ops = problem.solve(1e-6, 1e-4).unwrap();
+        assert_eq!(ops.r, 4);
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //!   contiguously over `workers` rank threads (the same
 //!   [`crate::comm`] SPMD machinery the training pipeline uses), each
 //!   shard runs the batched rollout streaming its probe values, the
-//!   per-member series are combined with an `Allgather`, and rank 0
-//!   reduces them in global member order. On the native engine the
+//!   per-member series travel to rank 0 with a rooted `Gather` (only
+//!   the root consumes them — an allgather would ship every shard's
+//!   series to every rank just to be discarded), and rank 0 reduces
+//!   them in global member order. On the native engine the
 //!   result is bitwise equal to the single-threaded path (asserted in
 //!   tests); with PJRT artifacts loaded, shard widths can select
 //!   different artifact/native routes, so agreement there is to
@@ -24,14 +26,14 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{self, CostModel};
+use crate::comm::{self, Communicator, CostModel};
 use crate::io::partition::distribute_balanced;
 use crate::runtime::Engine;
 
 use super::batch::rollout_batch_with;
 use super::ensemble::{
-    perturbed_initial_conditions, probe_values, push_series_step, run_ensemble, EnsembleSpec,
-    EnsembleStats, ProbeSeries,
+    perturbed_initial_conditions, probe_values, reduce_member_series, run_ensemble, EnsembleSpec,
+    EnsembleStats,
 };
 use super::model::RomArtifact;
 
@@ -39,8 +41,8 @@ use super::model::RomArtifact;
 /// `workers` rank threads. On the native engine statistics are
 /// identical (bitwise) to [`run_ensemble`] on one thread: the global
 /// IC matrix is built once, shards are contiguous member ranges, and
-/// the gathered per-member series are reduced in global member order
-/// through the same [`push_series_step`] path.
+/// the rank-0-gathered per-member series are reduced in global member
+/// order through the same [`push_series_step`] path.
 pub fn serve_ensemble(
     engine: &Engine,
     artifact: &RomArtifact,
@@ -77,60 +79,47 @@ pub fn serve_ensemble(
                 }
             });
 
-        // share per-member series + divergence flags with every rank
-        let all_values = ctx.allgather(&values);
+        // rooted gather: per-member series + divergence flags travel to
+        // rank 0 only — the one rank that reduces them (the former
+        // allgather shipped every shard's series to every rank just to
+        // be discarded)
+        let gathered_values = ctx.gather(0, &values);
         let mut flags = vec![-1.0; shard_b];
         for (i, d) in diverged.iter().enumerate() {
             if let Some(at) = d {
                 flags[i] = *at as f64;
             }
         }
-        let all_flags = ctx.allgather(&flags);
+        let gathered_flags = ctx.gather(0, &flags);
 
         // every rank participated in the collectives above; only rank 0
-        // pays for the global reduction (the others' copies would be
-        // discarded anyway)
-        if ctx.rank() != 0 {
+        // holds the data and pays for the global reduction
+        let (Some(all_values), Some(all_flags)) = (gathered_values, gathered_flags) else {
             return None;
-        }
+        };
 
         // reassemble global member order (shards are contiguous,
-        // ascending by rank) and reduce
+        // ascending by rank) and reduce through the shared path
         let mut diverged_at: Vec<Option<usize>> = Vec::with_capacity(spec.members);
-        for rank_flags in &all_flags {
-            for &f in rank_flags {
+        let mut member_loc: Vec<(usize, usize)> = Vec::with_capacity(spec.members);
+        for (rank, rank_flags) in all_flags.iter().enumerate() {
+            for (i, &f) in rank_flags.iter().enumerate() {
                 diverged_at.push(if f < 0.0 { None } else { Some(f as usize) });
+                member_loc.push((rank, i));
             }
         }
 
-        let mut probes_out: Vec<ProbeSeries> = artifact
-            .probes
-            .iter()
-            .map(|p| ProbeSeries::with_capacity(p, n_steps))
-            .collect();
-        let mut scratch: Vec<f64> = Vec::with_capacity(spec.members);
-        for (p, series) in probes_out.iter_mut().enumerate() {
-            for k in 0..n_steps {
-                scratch.clear();
-                let mut member = 0usize;
-                for (rank, rank_values) in all_values.iter().enumerate() {
-                    let rb = shards[rank].len();
-                    let base = p * n_steps * rb + k * rb;
-                    for i in 0..rb {
-                        let excluded =
-                            matches!(diverged_at[member], Some(at) if at <= k);
-                        let v = rank_values[base + i];
-                        // same value-finiteness filter as the local
-                        // accumulator (see ensemble::EnsembleAccumulator)
-                        if !excluded && v.is_finite() {
-                            scratch.push(v);
-                        }
-                        member += 1;
-                    }
-                }
-                push_series_step(series, &mut scratch);
-            }
-        }
+        let probes_out = reduce_member_series(
+            &artifact.probes,
+            n_steps,
+            spec.members,
+            &diverged_at,
+            |p, k, member| {
+                let (rank, i) = member_loc[member];
+                let rb = shards[rank].len();
+                all_values[rank][p * n_steps * rb + k * rb + i]
+            },
+        );
 
         Some(EnsembleStats {
             probes: probes_out,
@@ -233,6 +222,7 @@ mod tests {
                 ProbeBasis { var: 0, row: 1, phi: vec![0.5; r], mean: 1.0, scale: 2.0 },
                 ProbeBasis { var: 1, row: 7, phi: vec![-0.25; r], mean: 0.0, scale: 1.0 },
             ],
+            reg: None,
             meta: BTreeMap::new(),
         }
     }

@@ -5,8 +5,11 @@
 //! builds a [`Bench`] and reports mean ± std over warmup + measured
 //! iterations, plus throughput when element counts are supplied. Paper
 //! figures use [`Bench::run_sampled`] with explicit repeat counts (the
-//! paper repeats each measurement 100×).
+//! paper repeats each measurement 100×). [`Bench::write_json`] emits
+//! the machine-readable side (one report object per row) so perf
+//! trajectories diff across commits.
 
+use crate::util::json::{emit, Json};
 use crate::util::timer::{mean_std, WallTimer};
 
 /// One benchmark report row.
@@ -36,6 +39,23 @@ impl Report {
             "{:<44} {:>12.6} s ± {:>10.6} s  (n={}){tp}",
             self.name, self.mean_s, self.std_s, self.samples
         )
+    }
+
+    /// Machine-readable form of one report row.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("std_s", Json::Num(self.std_s)),
+            ("samples", Json::Num(self.samples as f64)),
+        ];
+        if let Some(e) = self.elems {
+            pairs.push(("elems", Json::Num(e as f64)));
+            if let Some(tp) = self.throughput() {
+                pairs.push(("throughput_per_s", Json::Num(tp)));
+            }
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -112,6 +132,22 @@ impl Bench {
     pub fn find(&self, name: &str) -> Option<&Report> {
         self.reports.iter().find(|r| r.name == name)
     }
+
+    /// Write every recorded report as one JSON document to `path`
+    /// (parent directories created).
+    pub fn write_json<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let doc = Json::obj(vec![(
+            "reports",
+            Json::Arr(self.reports.iter().map(Report::to_json).collect()),
+        )]);
+        std::fs::write(path, emit(&doc))
+    }
 }
 
 impl Default for Bench {
@@ -141,6 +177,24 @@ mod tests {
         let r = b.record_samples("ext", &[1.0, 2.0, 3.0]).clone();
         assert!((r.mean_s - 2.0).abs() < 1e-12);
         assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn json_output_roundtrips() {
+        let mut b = Bench::with_samples(2, 0);
+        b.run_elems("collective x", 4096, || (0..50_000u64).map(|i| i ^ 0x55).sum::<u64>());
+        b.run("no elems", || (0..50_000u64).map(|i| i | 0x3).sum::<u64>());
+        let path = std::env::temp_dir().join("dopinf_benchkit_test").join("out.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let reports = doc.get("reports").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].get("name").and_then(Json::as_str), Some("collective x"));
+        assert_eq!(reports[0].get("elems").and_then(Json::as_usize), Some(4096));
+        assert!(reports[0].get("throughput_per_s").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+        assert!(reports[1].get("elems").is_none());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

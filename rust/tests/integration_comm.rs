@@ -1,0 +1,216 @@
+//! Transport-equivalence property tests (util::propcheck).
+//!
+//! The Communicator contract: every backend combines contributions in
+//! rank order through the shared `fold` kernels, so collective results
+//! must be **bitwise identical** — across the thread and socket
+//! transports at every p, against the rank-ordered reference fold, and
+//! (for partition-invariant collectives like gather) across
+//! p ∈ {1, 2, 4, 7} as well. The final test closes the loop on the
+//! pipeline itself: `run_distributed` at p = 4 must produce a
+//! bitwise-identical `DOpInfResult` on threads vs sockets.
+
+use std::sync::Arc;
+
+use dopinf::comm::{self, fold, Communicator, CostModel, Op, SelfComm};
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::io::partition::distribute_balanced;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+use dopinf::util::propcheck::{check, Config};
+use dopinf::util::rng::Rng;
+
+const PS: [usize; 4] = [1, 2, 4, 7];
+
+/// Deterministic per-rank payload: depends only on (seed, rank), so
+/// every backend run regenerates identical contributions.
+fn rank_data(seed: u64, rank: usize, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ ((rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    (0..len).map(|_| rng.normal() * 8.0 + 0.125).collect()
+}
+
+#[test]
+fn allreduce_bitwise_identical_across_backends() {
+    check(
+        Config { cases: 8, seed: 41 },
+        |rng| (1 + rng.below(48) as usize, rng.below(1 << 30)),
+        |&(len, seed)| {
+            for p in PS {
+                for op in [Op::Sum, Op::Max, Op::Min] {
+                    let parts: Vec<Vec<f64>> = (0..p).map(|r| rank_data(seed, r, len)).collect();
+                    let want = fold::reduce_parts(&parts, op);
+                    let threads = comm::run(p, CostModel::free(), |ctx| {
+                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op)
+                    });
+                    let sockets = comm::socket::run(p, CostModel::free(), |ctx| {
+                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op)
+                    });
+                    for r in 0..p {
+                        if threads[r] != want {
+                            return Err(format!("thread backend differs at p={p} rank {r}"));
+                        }
+                        if sockets[r] != want {
+                            return Err(format!("socket backend differs at p={p} rank {r}"));
+                        }
+                    }
+                    if p == 1 {
+                        // SelfComm is the p=1 reference: identity
+                        let mut ctx = SelfComm::new();
+                        let got = ctx.allreduce(&parts[0], op);
+                        if got != parts[0] {
+                            return Err("SelfComm must be the identity".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gather_reconstructs_the_partitioned_vector_for_every_p() {
+    // gather of a balanced partition must reproduce the global vector
+    // bit for bit — for every p (partition-invariance) and on both
+    // transports, landing on the root alone
+    check(
+        Config { cases: 8, seed: 77 },
+        |rng| (7 + rng.below(200) as usize, rng.below(1 << 30)),
+        |&(n, seed)| {
+            let global = rank_data(seed, 0, n);
+            for p in PS {
+                let shards = distribute_balanced(n, p);
+                let root = p - 1;
+                let run_gather = |results: Vec<Option<Vec<Vec<f64>>>>| -> Result<(), String> {
+                    for (rank, out) in results.iter().enumerate() {
+                        if rank == root {
+                            let got = out.clone().ok_or(format!("p={p}: root got None"))?;
+                            if got.concat() != global {
+                                return Err(format!("p={p}: gathered vector differs"));
+                            }
+                        } else if out.is_some() {
+                            return Err(format!("p={p}: non-root rank {rank} received data"));
+                        }
+                    }
+                    Ok(())
+                };
+                run_gather(comm::run(p, CostModel::free(), |ctx| {
+                    let sh = shards[ctx.rank()];
+                    ctx.gather(root, &global[sh.start..sh.end])
+                }))?;
+                run_gather(comm::socket::run(p, CostModel::free(), |ctx| {
+                    let sh = shards[ctx.rank()];
+                    ctx.gather(root, &global[sh.start..sh.end])
+                }))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reduce_scatter_block_bitwise_thread_vs_socket() {
+    check(
+        Config { cases: 8, seed: 5 },
+        |rng| (1 + rng.below(24) as usize, rng.below(1 << 30)),
+        |&(chunk, seed)| {
+            for p in PS {
+                let len = chunk * p;
+                let parts: Vec<Vec<f64>> = (0..p).map(|r| rank_data(seed, r, len)).collect();
+                let reduced = fold::reduce_parts(&parts, Op::Sum);
+                let threads = comm::run(p, CostModel::free(), |ctx| {
+                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum)
+                });
+                let sockets = comm::socket::run(p, CostModel::free(), |ctx| {
+                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum)
+                });
+                for r in 0..p {
+                    let want = fold::block(&reduced, r, p);
+                    if threads[r] != want {
+                        return Err(format!("thread backend differs at p={p} rank {r}"));
+                    }
+                    if sockets[r] != want {
+                        return Err(format!("socket backend differs at p={p} rank {r}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rooted_reduce_bitwise_equals_allreduce_on_root() {
+    check(
+        Config { cases: 6, seed: 913 },
+        |rng| (1 + rng.below(40) as usize, rng.below(1 << 30)),
+        |&(len, seed)| {
+            for p in PS {
+                let root = p / 2;
+                let reduced = comm::run(p, CostModel::free(), |ctx| {
+                    let mine = rank_data(seed, ctx.rank(), len);
+                    (ctx.reduce(root, &mine, Op::Sum), ctx.allreduce(&mine, Op::Sum))
+                });
+                for (rank, (rooted, all)) in reduced.iter().enumerate() {
+                    if rank == root {
+                        if rooted.as_ref() != Some(all) {
+                            return Err(format!("p={p}: reduce != allreduce on root"));
+                        }
+                    } else if rooted.is_some() {
+                        return Err(format!("p={p}: non-root {rank} received reduction"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance gate: `run_distributed` at p = 4 on the tutorial-style
+/// config must produce a bitwise-identical `DOpInfResult` on the thread
+/// vs socket transports.
+#[test]
+fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
+    let spec = SynthSpec { nx: 180, ns: 2, nt: 60, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.5,
+        nt_p: 120,
+    };
+    let source = DataSource::InMemory(Arc::new(q));
+    let mut tcfg = DOpInfConfig::new(4, ocfg);
+    tcfg.cost_model = CostModel::free();
+    tcfg.probes = vec![(0, 17), (1, 95), (0, 179)];
+    let mut scfg = tcfg.clone();
+    scfg.transport = Transport::Sockets;
+
+    let a = run_distributed(&tcfg, &source).unwrap();
+    let b = run_distributed(&scfg, &source).unwrap();
+
+    assert_eq!(a.r, b.r);
+    assert_eq!(a.eigs, b.eigs);
+    assert_eq!(a.retained_energy, b.retained_energy);
+    assert_eq!(a.opt_pair, b.opt_pair);
+    assert_eq!(a.winner_rank, b.winner_rank);
+    assert_eq!(a.train_err.to_bits(), b.train_err.to_bits());
+    assert_eq!(a.qtilde.data(), b.qtilde.data());
+    assert_eq!(a.qhat0, b.qhat0);
+    assert_eq!(a.ops.ahat, b.ops.ahat);
+    assert_eq!(a.ops.fhat, b.ops.fhat);
+    assert_eq!(a.ops.chat, b.ops.chat);
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!((pa.var, pa.row), (pb.var, pb.row));
+        assert_eq!(pa.values, pb.values);
+    }
+    for (ba, bb) in a.probe_bases.iter().zip(&b.probe_bases) {
+        assert_eq!(ba.phi, bb.phi);
+        assert_eq!(ba.mean.to_bits(), bb.mean.to_bits());
+        assert_eq!(ba.scale.to_bits(), bb.scale.to_bits());
+    }
+}

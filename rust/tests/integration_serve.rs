@@ -40,6 +40,7 @@ fn trained_artifact() -> (RomArtifact, dopinf::DOpInfResult) {
         ops: result.ops.clone(),
         qhat0: result.qhat0.clone(),
         probes: result.probe_bases.clone(),
+        reg: Some(dopinf::serve::RegBlocks::from_problem(&result.problem)),
         meta,
     };
     (artifact, result)
@@ -60,6 +61,10 @@ fn train_save_load_serve_end_to_end() {
     assert_eq!(served.qhat0, artifact.qhat0);
     assert_eq!(served.probes, artifact.probes);
     assert_eq!(served.meta.get("dataset").map(String::as_str), Some("synth-150"));
+    // v2: the normal-equation blocks travel with the model, bitwise
+    let (want_reg, got_reg) = (artifact.reg.as_ref().unwrap(), served.reg.as_ref().unwrap());
+    assert_eq!(got_reg.dtd, want_reg.dtd);
+    assert_eq!(got_reg.dtq2, want_reg.dtq2);
 
     // serve a small ensemble from the loaded artifact
     let spec = EnsembleSpec { members: 32, sigma: 0.01, seed: 3, n_steps: 120 };
@@ -133,6 +138,41 @@ fn request_queue_matches_direct_evaluation() {
         }
     }
     server.shutdown();
+}
+
+#[test]
+fn reg_pair_ensemble_from_saved_v2_artifact() {
+    // the CLI `ensemble --reg-ensemble` path: train → save v2 → load →
+    // reg-pair ensemble from the persisted normal-equation blocks
+    let (artifact, result) = trained_artifact();
+    let dir = std::env::temp_dir().join("dopinf_serve_regens");
+    let path = dir.join("model.rom");
+    artifact.save(&path).unwrap();
+    let served = RomArtifact::load(&path).unwrap();
+
+    let pairs = RegGrid::coarse().pairs();
+    let ens = dopinf::serve::run_reg_ensemble(&served, &pairs, 60).unwrap();
+    assert_eq!(ens.pairs_used.len() + ens.skipped.len(), pairs.len());
+    assert_eq!(ens.stats.members, ens.pairs_used.len());
+    assert!(!ens.pairs_used.is_empty());
+    assert_eq!(ens.stats.probes.len(), artifact.probes.len());
+
+    // the training-time optimal pair is among the candidates
+    assert!(pairs.contains(&result.opt_pair));
+    // every reg model rolls from the same reference IC, so at step 0
+    // the ensemble is degenerate: zero variance, quantiles collapsed
+    // onto the deterministic training-time prediction
+    let series = &ens.stats.probes[0];
+    let pred0 = result.probes[0].values[0];
+    assert_eq!(series.count[0], ens.stats.members);
+    assert!(series.variance[0].abs() < 1e-20, "{}", series.variance[0]);
+    assert!((series.mean[0] - pred0).abs() < 1e-9 * pred0.abs().max(1.0));
+    assert_eq!(series.q05[0], series.q95[0]);
+    // and the sweep genuinely spreads later on
+    let k_last = 59;
+    assert!(series.count[k_last] >= 1);
+    assert!(series.q95[k_last] >= series.q05[k_last]);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
