@@ -1,0 +1,142 @@
+//! Ingestion-path throughput: streamed chunked passes vs the
+//! monolithic whole-block read.
+//!
+//! `cargo bench --bench ingest_throughput`
+//!
+//! Measures the full two-pass Step I–III data plane (pass 1 stats,
+//! pass 2 center/scale + Gram fold) over a SNAPD file at several chunk
+//! sizes, plus the pure read path, reporting block rows/s (`elems` =
+//! local rows per two-pass ingest). Each row's name carries the
+//! estimated peak residency of the data plane at that chunk size
+//! (chunk buffer + (nt, nt) Gram accumulator) — the quantity the
+//! streaming refactor bounds. JSON lands in
+//! `results/ingest_throughput.json` via `util::benchkit`, alongside
+//! the comm/ensemble bench trajectories.
+
+use dopinf::coordinator::config::DataSource;
+use dopinf::io::RowRange;
+use dopinf::opinf::streaming::{apply_chunk_transform, chunk_stats, GramAccumulator};
+use dopinf::sim::synth::{SynthField, SynthSpec};
+use dopinf::io::snapd::SnapWriter;
+use dopinf::linalg::Matrix;
+use dopinf::util::benchkit::Bench;
+use dopinf::util::json::Json;
+use std::path::PathBuf;
+
+/// Dataset shape: 2 × 8192 spatial rows × 128 snapshots = 16 MiB.
+const NX: usize = 8192;
+const NS: usize = 2;
+const NT: usize = 128;
+
+fn write_dataset() -> PathBuf {
+    let dir = std::env::temp_dir().join("dopinf_ingest_bench");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("ingest.snapd");
+    let spec = SynthSpec { nx: NX, ns: NS, nt: NT, modes: 4, ..Default::default() };
+    let field = SynthField::new(&spec);
+    let mut w = SnapWriter::create(
+        &path,
+        &[("u_x", NX, NT), ("u_y", NX, NT)],
+        Json::Null,
+    )
+    .expect("create dataset");
+    // written the memory-bounded way too: 1024-row generated chunks
+    for (var, name) in [(0usize, "u_x"), (1, "u_y")] {
+        let mut start = 0;
+        while start < NX {
+            let end = (start + 1024).min(NX);
+            let mut chunk = Matrix::zeros(end - start, NT);
+            for row in start..end {
+                field.fill_row(var, row, 0, chunk.row_mut(row - start));
+            }
+            w.write_rows(name, &chunk).expect("write chunk");
+            start = end;
+        }
+    }
+    w.finish().expect("finish dataset");
+    path
+}
+
+/// One full two-pass ingest (stats, then transform + Gram fold);
+/// returns a checksum so nothing is optimized away.
+fn two_pass_ingest(source: &DataSource, chunk_rows: usize) -> f64 {
+    let range = RowRange { start: 0, end: NX };
+    let mut reader = source.block_reader(range, NX, NS, chunk_rows).expect("reader");
+    let mut means = Vec::with_capacity(NS * NX);
+    let mut maxabs = vec![0.0f64; NS];
+    while let Some(chunk) = reader.next_chunk().expect("pass 1 chunk") {
+        chunk_stats(&chunk.data, chunk.start_row, NX, &mut means, &mut maxabs);
+    }
+    reader.reset().expect("reset");
+    let mut gram = GramAccumulator::new(NT);
+    while let Some(mut chunk) = reader.next_chunk().expect("pass 2 chunk") {
+        apply_chunk_transform(&mut chunk.data, chunk.start_row, NX, &means, Some(&maxabs));
+        gram.push(&chunk.data);
+    }
+    let d = gram.finish();
+    d[(0, 0)] + d[(NT - 1, NT - 1)]
+}
+
+/// Pure read path (no transforms): chunk drain only.
+fn read_only(source: &DataSource, chunk_rows: usize) -> f64 {
+    let range = RowRange { start: 0, end: NX };
+    let mut reader = source.block_reader(range, NX, NS, chunk_rows).expect("reader");
+    let mut acc = 0.0;
+    while let Some(chunk) = reader.next_chunk().expect("chunk") {
+        acc += chunk.data.row(0)[0];
+    }
+    acc
+}
+
+fn resident_kib(chunk_rows: usize) -> usize {
+    // chunk buffer + Gram accumulator (+ the O(rows) means vector)
+    (chunk_rows.min(NS * NX) * NT * 8 + NT * NT * 8 + NS * NX * 8) / 1024
+}
+
+fn main() {
+    let path = write_dataset();
+    let local_rows = NS * NX;
+    let source = DataSource::File {
+        path: path.clone(),
+        variables: vec!["u_x".to_string(), "u_y".to_string()],
+        nt_train: None,
+    };
+    println!(
+        "== ingest throughput: {NS}x{NX} rows x {NT} snapshots ({} MiB on disk) ==\n",
+        local_rows * NT * 8 / (1 << 20)
+    );
+
+    let mut bench = Bench::new();
+    for chunk_rows in [local_rows, 4096, 1024, 256, 64] {
+        let label = if chunk_rows == local_rows {
+            "monolithic".to_string()
+        } else {
+            format!("chunk={chunk_rows}")
+        };
+        bench.run_elems(
+            &format!("read-only   {label:<12} resident~{}KiB", resident_kib(chunk_rows)),
+            local_rows,
+            || read_only(&source, chunk_rows),
+        );
+        bench.run_elems(
+            &format!("two-pass    {label:<12} resident~{}KiB", resident_kib(chunk_rows)),
+            local_rows,
+            || two_pass_ingest(&source, chunk_rows),
+        );
+    }
+
+    // synthetic source: the generator bound, no storage at all
+    let spec = SynthSpec { nx: NX, ns: NS, nt: NT, modes: 4, ..Default::default() };
+    let synth = DataSource::Synthetic(spec);
+    bench.run_elems(
+        &format!("two-pass    synthetic    resident~{}KiB", resident_kib(1024)),
+        local_rows,
+        || two_pass_ingest(&synth, 1024),
+    );
+
+    bench
+        .write_json("results/ingest_throughput.json")
+        .expect("write bench json");
+    println!("\nwrote results/ingest_throughput.json (elem = block row per two-pass ingest)");
+    std::fs::remove_file(&path).ok();
+}

@@ -20,6 +20,46 @@
 //! bandwidth); `CostModel::cluster()` models an HPC interconnect for the
 //! p→2048 projection ablation (Ref. [1] of the paper).
 
+/// Storage read-path model for the chunked Step I ingestion charges:
+/// each [`crate::io::Chunk`] bills `reads · seek_latency +
+/// bytes / bandwidth` to the `Load` category, so `fig4_scaling` stays
+/// honest when chunking multiplies the number of discrete read
+/// operations (a chunk touching v variables issues v seeks).
+#[derive(Clone, Copy, Debug)]
+pub struct DiskModel {
+    /// sustained sequential read bandwidth (bytes/s)
+    pub bandwidth: f64,
+    /// per-read-operation latency: seek + request issue (seconds)
+    pub seek_latency: f64,
+}
+
+impl DiskModel {
+    /// Local NVMe-class storage (the default; bandwidth matches the
+    /// previous scalar `disk_bandwidth` so whole-block charges are
+    /// unchanged up to the single seek).
+    pub fn nvme() -> DiskModel {
+        DiskModel { bandwidth: 1.5e9, seek_latency: 8.0e-5 }
+    }
+
+    /// Parallel-filesystem-class storage (HPC burst buffer / Lustre
+    /// stripe): higher bandwidth, but each independent read pays more
+    /// request latency.
+    pub fn parallel_fs() -> DiskModel {
+        DiskModel { bandwidth: 5.0e9, seek_latency: 5.0e-4 }
+    }
+
+    /// Zero-cost model (pure-correctness runs / tests).
+    pub fn free() -> DiskModel {
+        DiskModel { bandwidth: f64::INFINITY, seek_latency: 0.0 }
+    }
+
+    /// Modeled wall time of `reads` discrete read operations moving
+    /// `bytes` in total.
+    pub fn read_time(&self, reads: usize, bytes: usize) -> f64 {
+        reads as f64 * self.seek_latency + bytes as f64 / self.bandwidth
+    }
+}
+
 /// Latency/bandwidth/reduction-op cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -149,6 +189,20 @@ mod tests {
         assert_eq!(m.gather(1, 1 << 20), 0.0);
         assert_eq!(m.allgather(1, 1 << 20), 0.0);
         assert_eq!(m.reduce_scatter(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn disk_model_charges_seek_per_read() {
+        let d = DiskModel::nvme();
+        // one big read beats many small reads at equal volume
+        let big = d.read_time(1, 1 << 24);
+        let small = d.read_time(256, 1 << 24);
+        assert!(small > big);
+        assert!((small - big - 255.0 * d.seek_latency).abs() < 1e-12);
+        // free model is exactly zero
+        assert_eq!(DiskModel::free().read_time(1000, 1 << 30), 0.0);
+        // bandwidth term scales linearly
+        assert!(d.read_time(1, 2 << 20) > d.read_time(1, 1 << 20));
     }
 
     #[test]

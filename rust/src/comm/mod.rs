@@ -51,6 +51,6 @@ pub mod thread;
 
 pub use clock::{Category, Clock};
 pub use communicator::{fold, Communicator, Op};
-pub use costmodel::CostModel;
+pub use costmodel::{CostModel, DiskModel};
 pub use selfcomm::SelfComm;
 pub use thread::{run, run_with_clocks, RankCtx};

@@ -1,22 +1,34 @@
-//! The five-step distributed dOpInf pipeline (paper Sec. III).
+//! The five-step distributed dOpInf pipeline (paper Sec. III), with a
+//! **pass-structured streaming data plane**: a rank never materializes
+//! its full `(n_s·n_x/p, n_t)` block.
 //!
 //! Every rank executes [`rank_pipeline`] over its row partition — the
 //! SPMD structure of the paper's MPI tutorial, collective for
-//! collective. The function is generic over [`Communicator`], so the
-//! same code runs on the shared-board thread transport, the localhost
-//! socket transport ([`Transport::Sockets`]), or — for p = 1 — the
-//! zero-overhead [`SelfComm`] backend, with bitwise-identical results:
+//! collective. Steps I–III are fused into two streaming passes over a
+//! [`crate::io::BlockReader`]:
 //!
-//! | Step | local work                    | collective                |
-//! |------|-------------------------------|---------------------------|
-//! | I    | read row block                | —                         |
-//! | II   | center rows (+ local maxabs)  | Allreduce(MAX) if scaling |
-//! | III  | Gram `QᵢᵀQᵢ`, eigh, T_r, Q̂  | Allreduce(SUM) of D       |
-//! | IV   | grid-search slice of B₁×B₂    | Allreduce(MIN) + Bcast    |
-//! | V    | lift probe rows               | Allreduce(SUM) gather     |
+//! | Phase  | per-chunk local work                   | collective                |
+//! |--------|----------------------------------------|---------------------------|
+//! | pass 1 | row means + centered max-abs           | Allreduce(MAX) if scaling |
+//! | pass 2 | center+scale, Gram fold, probe capture | Allreduce(SUM) of D       |
+//! | III    | eigh, T_r, streamed `Q̂ = T_rᵀD`       | —                         |
+//! | IV     | grid-search slice of B₁×B₂             | Allreduce(MIN) + Bcast    |
+//! | V      | lift captured probe rows               | Allreduce(SUM) gather     |
+//!
+//! Per-rank residency is O(`chunk_rows`·n_t) for the data plus the
+//! replicated (n_t, n_t) matrices; `cfg.chunk_rows = None` streams the
+//! block as one chunk. Results are **bitwise identical for every chunk
+//! size, p, and transport**: the streaming accumulators replay the
+//! monolithic kernels' exact operation sequence
+//! ([`crate::opinf::streaming`]), and every reduction funnels through
+//! the rank-ordered `comm::fold` kernel. Property-tested in
+//! `tests/integration_pipeline.rs`.
 //!
 //! Per-rank virtual clocks charge each segment to the Fig. 4 categories
-//! (Load / Compute / Comm / Learn / Post).
+//! (Load / Compute / Comm / Learn / Post); `Load` is billed per chunk
+//! read through the α-seek/β-bandwidth [`crate::comm::DiskModel`].
+
+use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
@@ -29,9 +41,11 @@ use crate::opinf::learn;
 use crate::opinf::podgram::GramSpectrum;
 use crate::opinf::postprocess::{lift_from_phi, probe_basis_row, ProbeBasis};
 use crate::opinf::serial::search_pairs;
-use crate::rom::RomOperators;
-use crate::opinf::transform::{apply_scaling, center_rows, local_maxabs, variable_ranges};
+use crate::opinf::streaming::{
+    apply_chunk_transform, chunk_stats, project_streamed, GramAccumulator,
+};
 use crate::rom::regsearch::distribute_pairs;
+use crate::rom::RomOperators;
 use crate::runtime::Engine;
 use crate::util::timer::ThreadCpuTimer;
 
@@ -149,30 +163,124 @@ fn rank_pipeline<C: Communicator>(
     let range = ranges[rank];
     let ns = cfg.opinf.ns;
     let nt_p = cfg.opinf.nt_p;
+    let per = range.len();
+    let local_rows = ns * per;
+    // None = one chunk = the whole block; any value yields bitwise the
+    // same results, so clamping to the block size is purely cosmetic.
+    // An empty range (p > n_x) streams zero chunks and contributes
+    // identity elements to every reduction, like the monolithic path did.
+    let chunk_rows = cfg.chunk_rows.unwrap_or(local_rows.max(1)).clamp(1, local_rows.max(1));
 
-    // ---- Step I: load this rank's block -------------------------------
-    let cpu = ThreadCpuTimer::start();
-    let (mut q, bytes) = source.load_block(range, _nx, ns)?;
-    ctx.charge(Category::Load, cpu.elapsed() + bytes as f64 / cfg.disk_bandwidth);
-
-    // ---- Step II: transforms ------------------------------------------
-    let var_ranges = variable_ranges(q.rows(), ns);
-    let means = ctx.timed(Category::Compute, || center_rows(&mut q));
-    let mut row_scales = vec![1.0; q.rows()];
-    if cfg.opinf.scaling {
-        let local = ctx.timed(Category::Compute, || local_maxabs(&q, &var_ranges));
-        let global = ctx.allreduce(&local, Op::Max);
-        ctx.timed(Category::Compute, || apply_scaling(&mut q, &var_ranges, &global));
-        for (v, &(s0, s1)) in var_ranges.iter().enumerate() {
-            let s = if global[v] > 0.0 { global[v] } else { 1.0 };
-            for item in row_scales.iter_mut().take(s1).skip(s0) {
-                *item = s;
-            }
-        }
+    // probe ownership must be known before streaming starts (pass 2
+    // captures probe rows as their chunk flows past), so validate now —
+    // identically on every rank, keeping the error collective-safe
+    for &(var, row) in &cfg.probes {
+        anyhow::ensure!(var < ns, "probe variable {var} out of range");
+        // an unowned row would silently produce an all-zero prediction
+        // AND an all-zero ProbeBasis (scale 0) baked into the serving
+        // artifact — reject it here instead
+        anyhow::ensure!(row < _nx, "probe row {row} out of range (nx = {_nx})");
     }
 
-    // ---- Step III: Gram-based dimensionality reduction ----------------
-    let d_rank = ctx.timed(Category::Compute, || engine.gram(&q));
+    // ---- Steps I+II, pass 1: stream row means + centered max-abs ------
+    let mut reader = source.block_reader(range, _nx, ns, chunk_rows)?;
+    let mut means: Vec<f64> = Vec::with_capacity(local_rows);
+    let mut local_max = vec![0.0f64; ns];
+    // When the whole block arrives as one chunk (the chunk_rows = None
+    // default), keep it for pass 2 — the data is read exactly once,
+    // with exactly one Load charge, like the monolithic pipeline.
+    let mut retained: Option<crate::io::Chunk> = None;
+    loop {
+        let cpu = ThreadCpuTimer::start();
+        let Some(chunk) = reader.next_chunk()? else { break };
+        ctx.charge(Category::Load, cpu.elapsed() + cfg.disk.read_time(chunk.reads, chunk.bytes));
+        ctx.timed(Category::Compute, || {
+            chunk_stats(&chunk.data, chunk.start_row, per, &mut means, &mut local_max)
+        });
+        if chunk.data.rows() == local_rows {
+            retained = Some(chunk);
+        }
+    }
+    anyhow::ensure!(
+        means.len() == local_rows,
+        "reader yielded {} of {local_rows} local rows",
+        means.len()
+    );
+    // per-variable global scales (max-abs over all ranks); raw zeros
+    // are kept here and substituted with 1 at application time, exactly
+    // like transform::apply_scaling
+    let scales: Option<Vec<f64>> =
+        cfg.opinf.scaling.then(|| ctx.allreduce(&local_max, Op::Max));
+    let scale_for = |li: usize| -> f64 {
+        match &scales {
+            Some(g) => crate::opinf::transform::effective_scale(g[li / per]),
+            None => 1.0,
+        }
+    };
+
+    // ---- Steps I+II+III, pass 2: center/scale chunks, fold the Gram ---
+    // transformed probe rows this rank owns, captured as they stream by
+    // (local row index -> centered+scaled row); this is all of the
+    // block Step V ever needs again
+    let mut probe_cache: BTreeMap<usize, Option<Vec<f64>>> = cfg
+        .probes
+        .iter()
+        .filter(|&&(_, row)| row >= range.start && row < range.end)
+        .map(|&(var, row)| (var * per + (row - range.start), None))
+        .collect();
+    // Native Gram folds through the rank-4-aligned accumulator (the
+    // bitwise chunk-invariance contract). A PJRT gram artifact matching
+    // this nt keeps its fast path — per-chunk `engine.gram` partials
+    // summed via axpy, which (like the pre-streaming gram_pjrt block
+    // loop) is machine-precision, not bitwise, stable across chunkings.
+    let mut gram = GramAccumulator::new(nt);
+    let mut gram_pjrt: Option<Matrix> =
+        engine.has_gram_artifact(nt).then(|| Matrix::zeros(nt, nt));
+    let mut rows_streamed = 0usize;
+    let mut pending = retained;
+    let rereading = pending.is_none();
+    if rereading {
+        reader.reset()?;
+    }
+    loop {
+        // retained whole-block chunk first (no second read, no second
+        // Load charge); otherwise re-stream from the reader
+        let next = if let Some(chunk) = pending.take() {
+            Some(chunk)
+        } else if rereading {
+            let cpu = ThreadCpuTimer::start();
+            let chunk = reader.next_chunk()?;
+            if let Some(c) = &chunk {
+                ctx.charge(Category::Load, cpu.elapsed() + cfg.disk.read_time(c.reads, c.bytes));
+            }
+            chunk
+        } else {
+            None
+        };
+        let Some(mut chunk) = next else { break };
+        ctx.timed(Category::Compute, || {
+            apply_chunk_transform(&mut chunk.data, chunk.start_row, per, &means, scales.as_deref());
+            match &mut gram_pjrt {
+                Some(d) => d.axpy(1.0, &engine.gram(&chunk.data)),
+                None => gram.push(&chunk.data),
+            }
+        });
+        rows_streamed += chunk.data.rows();
+        let chunk_end = chunk.start_row + chunk.data.rows();
+        for (&li, slot) in probe_cache.range_mut(chunk.start_row..chunk_end) {
+            *slot = Some(chunk.data.row(li - chunk.start_row).to_vec());
+        }
+    }
+    anyhow::ensure!(
+        rows_streamed == local_rows,
+        "reader replayed {rows_streamed} of {local_rows} local rows in pass 2"
+    );
+
+    // ---- Step III: Gram reduction + spectrum + projection -------------
+    let d_rank = match gram_pjrt {
+        Some(d) => d,
+        None => ctx.timed(Category::Compute, || gram.finish()),
+    };
     // in place: the (nt, nt) Gram block is the pipeline's largest
     // payload — no clone round-trip through the collective
     let mut d_vec = d_rank.into_vec();
@@ -185,7 +293,15 @@ fn rank_pipeline<C: Communicator>(
         .unwrap_or_else(|| spectrum.choose_r(cfg.opinf.energy_target));
     let (tr, qhat) = ctx.timed(Category::Compute, || {
         let tr = spectrum.tr(r);
-        let qhat = engine.project(&tr, &d_global);
+        // Q̂ = T_rᵀD touches only the replicated (nt, nt) matrices —
+        // the streamed kernel is bitwise identical to the native engine
+        // path for every chunk size; a loaded PJRT artifact still takes
+        // the fast path
+        let qhat = if engine.has_artifacts() {
+            engine.project(&tr, &d_global)
+        } else {
+            project_streamed(&tr, &d_global, chunk_rows.min(nt))
+        };
         (tr, qhat)
     });
 
@@ -233,11 +349,6 @@ fn rank_pipeline<C: Communicator>(
     let mut probes = Vec::with_capacity(cfg.probes.len());
     let mut probe_bases = Vec::with_capacity(cfg.probes.len());
     for &(var, row) in &cfg.probes {
-        anyhow::ensure!(var < ns, "probe variable {var} out of range");
-        // an unowned row would silently produce an all-zero prediction
-        // AND an all-zero ProbeBasis (scale 0) baked into the serving
-        // artifact — reject it here instead
-        anyhow::ensure!(row < _nx, "probe row {row} out of range (nx = {_nx})");
         // one payload per probe: [prediction (nt_p) | φ (r) | mean,
         // scale] — φ is computed once and reused for the lift, and the
         // serving-artifact fields ride the same single allreduce the
@@ -245,15 +356,19 @@ fn rank_pipeline<C: Communicator>(
         // is unchanged (only r+2 doubles wider)
         let mut payload = vec![0.0; nt_p + r + 2];
         if row >= range.start && row < range.end {
-            let local_row = var * range.len() + (row - range.start);
+            let local_row = var * per + (row - range.start);
+            let qrow = probe_cache
+                .get(&local_row)
+                .and_then(|slot| slot.as_ref())
+                .context("probe row not captured during pass 2")?;
+            let (mean, scale) = (means[local_row], scale_for(local_row));
             ctx.timed(Category::Post, || {
-                let phi = probe_basis_row(q.row(local_row), &tr);
-                let values =
-                    lift_from_phi(&phi, &qtilde, means[local_row], row_scales[local_row]);
+                let phi = probe_basis_row(qrow, &tr);
+                let values = lift_from_phi(&phi, &qtilde, mean, scale);
                 payload[..nt_p].copy_from_slice(&values);
                 payload[nt_p..nt_p + r].copy_from_slice(&phi);
-                payload[nt_p + r] = means[local_row];
-                payload[nt_p + r + 1] = row_scales[local_row];
+                payload[nt_p + r] = mean;
+                payload[nt_p + r + 1] = scale;
             });
         }
         // owner's contribution + zeros elsewhere = gather-to-all

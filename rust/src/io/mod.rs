@@ -1,4 +1,5 @@
-//! Snapshot dataset I/O substrate.
+//! Snapshot dataset I/O substrate — the streaming data plane's bottom
+//! layer.
 //!
 //! The paper stores training snapshots in HDF5 and leans on independent
 //! per-rank row-slice reads (Step I, Remark 1). HDF5 is an external C
@@ -7,6 +8,15 @@
 //! `(spatial_dof, n_snapshots)` stored row-major, which makes a rank's
 //! contiguous row range `[start, end)` a single contiguous pread — the
 //! same access pattern h5py hyperslab selection gives the tutorial.
+//! `SnapReader::open` validates the declared payload spans against the
+//! file before any data is served, and `SnapWriter` streams row chunks
+//! so datasets far beyond RAM can be written as well as read.
+//!
+//! [`reader`] is the primary ingestion path: the [`BlockReader`] trait
+//! yields bounded row [`reader::Chunk`]s of a rank's block (SNAPD,
+//! in-memory, or synthetic backed), which the pass-structured pipeline
+//! in `coordinator::pipeline` streams through the Step II–III kernels
+//! without ever materializing a full `(n_s·n_x/p, n_t)` block.
 //!
 //! [`partition`] implements the tutorial's `distribute_nx` splitting
 //! (equal blocks, remainder to the last rank) plus a balanced variant;
@@ -14,7 +24,9 @@
 
 pub mod partition;
 pub mod probes;
+pub mod reader;
 pub mod snapd;
 
 pub use partition::{distribute_balanced, distribute_tutorial, RowRange};
+pub use reader::{BlockReader, Chunk, InMemoryBlockReader, SnapdBlockReader, SyntheticBlockReader};
 pub use snapd::{SnapReader, SnapWriter};

@@ -27,11 +27,15 @@ use crate::util::json::{self, Json};
 const MAGIC: &[u8; 8] = b"SNAPD\x01\0\0";
 
 /// Dataset writer. Declares variables up-front, then streams each
-/// variable's full row-major payload.
+/// variable's row-major payload — either whole ([`Self::write_variable`])
+/// or in bounded row chunks ([`Self::write_rows`]), so fields far
+/// beyond RAM can be written without ever materializing them.
 pub struct SnapWriter {
     out: BufWriter<File>,
     vars: Vec<(String, usize, usize)>,
     written: usize,
+    /// rows of the current (partially streamed) variable already written
+    rows_in_flight: usize,
 }
 
 impl SnapWriter {
@@ -71,11 +75,14 @@ impl SnapWriter {
             out,
             vars: vars.iter().map(|(n, r, c)| (n.to_string(), *r, *c)).collect(),
             written: 0,
+            rows_in_flight: 0,
         })
     }
 
-    /// Write the next variable's payload (must match declared order/shape).
-    pub fn write_variable(&mut self, name: &str, data: &Matrix) -> Result<()> {
+    /// Stream the next rows of the current variable. Call repeatedly
+    /// with consecutive row chunks; once the declared row count is
+    /// reached the writer advances to the next declared variable.
+    pub fn write_rows(&mut self, name: &str, chunk: &Matrix) -> Result<()> {
         let (want_name, rows, cols) = self
             .vars
             .get(self.written)
@@ -84,24 +91,51 @@ impl SnapWriter {
         if want_name != name {
             bail!("expected variable {want_name:?} next, got {name:?}");
         }
-        if data.rows() != rows || data.cols() != cols {
+        if chunk.cols() != cols {
+            bail!("variable {name}: declared {cols} cols, chunk has {}", chunk.cols());
+        }
+        if self.rows_in_flight + chunk.rows() > rows {
             bail!(
-                "variable {name}: declared {}x{}, got {}x{}",
-                rows,
-                cols,
-                data.rows(),
-                data.cols()
+                "variable {name}: declared {rows} rows, writing {} would overrun",
+                self.rows_in_flight + chunk.rows()
             );
         }
-        for v in data.data() {
+        for v in chunk.data() {
             self.out.write_all(&v.to_le_bytes())?;
         }
-        self.written += 1;
+        self.rows_in_flight += chunk.rows();
+        if self.rows_in_flight == rows {
+            self.written += 1;
+            self.rows_in_flight = 0;
+        }
         Ok(())
     }
 
-    /// Flush and close; errors if any declared variable was not written.
+    /// Write the next variable's payload whole (must match declared
+    /// order/shape exactly).
+    pub fn write_variable(&mut self, name: &str, data: &Matrix) -> Result<()> {
+        if self.rows_in_flight > 0 {
+            bail!("variable {name}: mixing write_variable with a partially streamed variable");
+        }
+        if let Some((_, rows, cols)) = self.vars.get(self.written) {
+            if data.rows() != *rows || data.cols() != *cols {
+                bail!(
+                    "variable {name}: declared {rows}x{cols}, got {}x{}",
+                    data.rows(),
+                    data.cols()
+                );
+            }
+        }
+        self.write_rows(name, data)
+    }
+
+    /// Flush and close; errors if any declared variable was not written
+    /// (or only partially streamed).
     pub fn finish(mut self) -> Result<()> {
+        if self.rows_in_flight > 0 {
+            let (name, rows, _) = &self.vars[self.written];
+            bail!("variable {name}: only {} of {rows} rows streamed", self.rows_in_flight);
+        }
         if self.written != self.vars.len() {
             bail!("{} of {} variables written", self.written, self.vars.len());
         }
@@ -156,6 +190,54 @@ impl SnapReader {
                 },
             );
         }
+
+        // Fail fast on truncated or corrupt files: every declared
+        // payload must fit inside the file and payloads must not
+        // overlap. Without this, a short file surfaces as a confusing
+        // short-read mid-pipeline (or silently serves another
+        // variable's bytes).
+        let payload_start = 16 + header_len as u64;
+        let payload_len = f
+            .metadata()?
+            .len()
+            .checked_sub(payload_start)
+            .with_context(|| format!("{:?}: SNAPD header longer than file", path.as_ref()))?;
+        let mut spans: Vec<(u64, u64, &str)> = Vec::with_capacity(vars.len());
+        for (name, info) in &vars {
+            let len = (info.rows as u64)
+                .checked_mul(info.cols as u64)
+                .and_then(|n| n.checked_mul(8))
+                .with_context(|| {
+                    format!("variable {name:?}: declared {}x{} payload overflows", info.rows, info.cols)
+                })?;
+            spans.push((info.offset, len, name.as_str()));
+        }
+        for &(off, len, name) in &spans {
+            let end = off
+                .checked_add(len)
+                .with_context(|| format!("variable {name:?}: payload span overflows"))?;
+            if end > payload_len {
+                bail!(
+                    "{:?} is truncated or corrupt: variable {name:?} declares payload \
+                     bytes {off}..{end} but only {payload_len} payload bytes exist",
+                    path.as_ref()
+                );
+            }
+        }
+        spans.sort_by_key(|&(off, _, _)| off);
+        for w in spans.windows(2) {
+            let (off_a, len_a, name_a) = w[0];
+            let (off_b, _, name_b) = w[1];
+            if off_a + len_a > off_b {
+                bail!(
+                    "{:?} header is corrupt: variables {name_a:?} (bytes {off_a}..{}) and \
+                     {name_b:?} (from byte {off_b}) declare overlapping payloads",
+                    path.as_ref(),
+                    off_a + len_a
+                );
+            }
+        }
+
         Ok(SnapReader {
             path: path.as_ref().to_path_buf(),
             payload_start: 16 + header_len as u64,
@@ -180,6 +262,15 @@ impl SnapReader {
     /// pread per call; safe to call concurrently from many ranks (each
     /// opens its own handle, mirroring MPI-IO independent reads).
     pub fn read_rows(&self, name: &str, range: RowRange) -> Result<Matrix> {
+        let mut f = File::open(&self.path)?;
+        self.read_rows_from(&mut f, name, range)
+    }
+
+    /// [`Self::read_rows`] through an existing open handle — streaming
+    /// readers keep one handle per pass instead of reopening the file
+    /// for every chunk segment. Seeks are absolute, so one handle can
+    /// serve any sequence of segment reads.
+    pub fn read_rows_from(&self, f: &mut File, name: &str, range: RowRange) -> Result<Matrix> {
         let info = self.var_info(name)?.clone();
         if range.end > info.rows || range.start > range.end {
             bail!(
@@ -189,7 +280,6 @@ impl SnapReader {
                 info.rows
             );
         }
-        let mut f = File::open(&self.path)?;
         let byte_start =
             self.payload_start + info.offset + (range.start * info.cols * 8) as u64;
         f.seek(SeekFrom::Start(byte_start))?;
@@ -201,6 +291,12 @@ impl SnapReader {
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect();
         Ok(Matrix::from_vec(range.len(), info.cols, data))
+    }
+
+    /// A fresh read handle on the underlying file, for
+    /// [`Self::read_rows_from`].
+    pub fn open_handle(&self) -> Result<File> {
+        Ok(File::open(&self.path)?)
     }
 
     /// Read a whole variable.
@@ -327,5 +423,93 @@ mod tests {
         let path = tmp("not.snapd");
         std::fs::write(&path, b"hello world, definitely not snapd").unwrap();
         assert!(SnapReader::open(&path).is_err());
+    }
+
+    #[test]
+    fn chunked_row_writes_roundtrip() {
+        let path = tmp("chunked.snapd");
+        let ux = Matrix::randn(33, 5, 7);
+        let uy = Matrix::randn(33, 5, 8);
+        let mut w = SnapWriter::create(
+            &path,
+            &[("u_x", 33, 5), ("u_y", 33, 5)],
+            Json::Null,
+        )
+        .unwrap();
+        // ragged chunks, crossing into the next variable mid-stream
+        for (s, e) in [(0, 10), (10, 11), (11, 33)] {
+            w.write_rows("u_x", &ux.slice_rows(s, e)).unwrap();
+        }
+        for (s, e) in [(0, 32), (32, 33)] {
+            w.write_rows("u_y", &uy.slice_rows(s, e)).unwrap();
+        }
+        w.finish().unwrap();
+        let r = SnapReader::open(&path).unwrap();
+        assert_eq!(r.read_all("u_x").unwrap(), ux);
+        assert_eq!(r.read_all("u_y").unwrap(), uy);
+    }
+
+    #[test]
+    fn chunked_writer_enforces_bounds() {
+        let path = tmp("chunked_bounds.snapd");
+        let mut w = SnapWriter::create(&path, &[("a", 4, 3), ("b", 2, 3)], Json::Null).unwrap();
+        // row overrun
+        assert!(w.write_rows("a", &Matrix::zeros(5, 3)).is_err());
+        // wrong width
+        assert!(w.write_rows("a", &Matrix::zeros(2, 4)).is_err());
+        w.write_rows("a", &Matrix::zeros(2, 3)).unwrap();
+        // not the current variable
+        assert!(w.write_rows("b", &Matrix::zeros(1, 3)).is_err());
+        // write_variable cannot interleave with a partial stream
+        assert!(w.write_variable("a", &Matrix::zeros(4, 3)).is_err());
+        w.write_rows("a", &Matrix::zeros(2, 3)).unwrap();
+        // partial tail variable fails finish
+        w.write_rows("b", &Matrix::zeros(1, 3)).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn open_rejects_truncated_file() {
+        let path = tmp("truncated.snapd");
+        write_sample(&path, 16, 6);
+        let full = std::fs::metadata(&path).unwrap().len();
+        // chop half the second variable's payload off
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - (16 * 6 * 8) / 2).unwrap();
+        drop(f);
+        let err = SnapReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // the error names the variable whose payload is short
+        assert!(err.contains("u_y"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_header_payload_mismatch() {
+        // header declares more rows than the payload holds
+        let path = tmp("short_payload.snapd");
+        let header = r#"{"variables": [{"name": "u_x", "rows": 100, "cols": 10, "offset": 0}], "meta": null}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SNAPD\x01\0\0");
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 80]); // 10 doubles, not 1000
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SnapReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("u_x") && err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_overlapping_offsets() {
+        let path = tmp("overlap.snapd");
+        let header = r#"{"variables": [{"name": "a", "rows": 2, "cols": 2, "offset": 0}, {"name": "b", "rows": 2, "cols": 2, "offset": 16}], "meta": null}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SNAPD\x01\0\0");
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 48]); // enough for b's span, but a overlaps it
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SnapReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("overlapping"), "{err}");
+        assert!(err.contains('a') && err.contains('b'), "{err}");
     }
 }

@@ -12,9 +12,14 @@
 //!   [`comm::Communicator`] collective vocabulary (thread shared-board,
 //!   zero-overhead single-rank, and localhost socket backends — all
 //!   bitwise-identical by construction), the five dOpInf pipeline
-//!   steps written generically against it, regularization grid search,
-//!   scaling harness, the 2D Navier-Stokes snapshot generator, and all
-//!   substrates (dense linear algebra, dataset I/O, CLI, benches).
+//!   steps written generically against it with a **streaming,
+//!   memory-bounded data plane** (chunked [`io::BlockReader`]
+//!   ingestion through the [`opinf::streaming`] accumulators — per-rank
+//!   residency is O(chunk_rows·n_t) at any state dimension, results
+//!   bitwise identical to the monolithic path), regularization grid
+//!   search, scaling harness, the 2D Navier-Stokes snapshot generator,
+//!   and all substrates (dense linear algebra, dataset I/O, CLI,
+//!   benches).
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime** — [`runtime`] loads the HLO artifacts via PJRT (`xla`

@@ -46,6 +46,25 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+/// One rank-1 update `C += a_rowᵀ ⊗ b_row` of a row-major `(m, n)`
+/// accumulator. This is the *only* inner kernel of [`matmul_tn`], shared
+/// verbatim with the streaming
+/// [`crate::opinf::streaming::ProjectionAccumulator`] — because the
+/// accumulation is purely row-sequential, feeding the rows in any chunk
+/// partition produces bitwise-identical results to the monolithic
+/// product.
+pub(crate) fn tn_step1(cd: &mut [f64], n: usize, arow: &[f64], brow: &[f64]) {
+    for (i, &aik) in arow.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (cv, bv) in crow.iter_mut().zip(brow) {
+            *cv += aik * bv;
+        }
+    }
+}
+
 /// `C = Aᵀ @ B` without materializing the transpose.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "leading dimensions differ");
@@ -55,17 +74,7 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let cd = c.data_mut();
     // Stream over the shared (tall) dimension: one pass over A and B.
     for kk in 0..k {
-        let arow = &ad[kk * m..(kk + 1) * m];
-        let brow = &bd[kk * n..(kk + 1) * n];
-        for (i, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
-            }
-        }
+        tn_step1(cd, n, &ad[kk * m..(kk + 1) * m], &bd[kk * n..(kk + 1) * n]);
     }
     c
 }
@@ -92,40 +101,63 @@ pub fn syrk(a: &Matrix) -> Matrix {
         let (r1, rest) = rest.split_at(n);
         let (r2, rest) = rest.split_at(n);
         let r3 = &rest[..n];
-        for i in 0..n {
-            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
-            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                continue;
-            }
-            let drow = &mut dd[i * n + i..(i + 1) * n];
-            for (j, dv) in drow.iter_mut().enumerate() {
-                let jj = i + j;
-                *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
-            }
-        }
+        syrk_step4(dd, n, r0, r1, r2, r3);
         kk += 4;
     }
     // remainder rows
     for kk in kk..k {
-        let row = &ad[kk * n..(kk + 1) * n];
-        for i in 0..n {
-            let ai = row[i];
-            if ai == 0.0 {
-                continue;
-            }
-            let drow = &mut dd[i * n..(i + 1) * n];
-            for j in i..n {
-                drow[j] += ai * row[j];
-            }
+        syrk_step1(dd, n, &ad[kk * n..(kk + 1) * n]);
+    }
+    syrk_mirror(dd, n);
+    d
+}
+
+/// One fused rank-4 SYRK step: `D[i][i..] += Σ_{q<4} r_q[i]·r_q[i..]`
+/// over the upper triangle of a row-major `(n, n)` accumulator.
+///
+/// Shared verbatim between [`syrk`] and the streaming
+/// [`crate::opinf::streaming::GramAccumulator`]: as long as the rank-4
+/// groups stay aligned to the absolute row index (the accumulator's
+/// carry buffer guarantees it), every chunk partition of the rows runs
+/// the exact same sequence of floating-point operations — the bitwise
+/// foundation of the chunked data plane.
+pub(crate) fn syrk_step4(dd: &mut [f64], n: usize, r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64]) {
+    for i in 0..n {
+        let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+            continue;
+        }
+        let drow = &mut dd[i * n + i..(i + 1) * n];
+        for (j, dv) in drow.iter_mut().enumerate() {
+            let jj = i + j;
+            *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
         }
     }
-    // mirror upper -> lower
+}
+
+/// One single-row SYRK step (upper triangle only) — the `k mod 4`
+/// remainder path of [`syrk`], also the flush path of the streaming
+/// Gram accumulator.
+pub(crate) fn syrk_step1(dd: &mut [f64], n: usize, row: &[f64]) {
+    for i in 0..n {
+        let ai = row[i];
+        if ai == 0.0 {
+            continue;
+        }
+        let drow = &mut dd[i * n..(i + 1) * n];
+        for j in i..n {
+            drow[j] += ai * row[j];
+        }
+    }
+}
+
+/// Mirror the accumulated upper triangle into the lower half.
+pub(crate) fn syrk_mirror(dd: &mut [f64], n: usize) {
     for i in 0..n {
         for j in (i + 1)..n {
             dd[j * n + i] = dd[i * n + j];
         }
     }
-    d
 }
 
 #[cfg(test)]

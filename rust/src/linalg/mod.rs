@@ -24,4 +24,8 @@ pub mod matrix;
 pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eigh::eigh;
 pub use gemm::{matmul, matmul_tn, syrk};
+// inner kernels shared with the streaming accumulators
+// (opinf::streaming) so chunked accumulation is bitwise-identical to
+// the monolithic products by construction
+pub(crate) use gemm::{syrk_mirror, syrk_step1, syrk_step4, tn_step1};
 pub use matrix::Matrix;

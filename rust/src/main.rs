@@ -153,6 +153,8 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
         OptSpec { name: "save-rom", help: "write the trained ROM artifact here (.rom)", default: None, is_flag: false },
         OptSpec { name: "transport", help: "communicator backend: threads | sockets", default: Some("threads"), is_flag: false },
+        OptSpec { name: "chunk-rows", help: "stream ingestion in chunks of N local rows (default: whole block; native-engine results are bitwise identical)", default: None, is_flag: false },
+        OptSpec { name: "memory-budget-mb", help: "derive the ingestion chunk size from a per-rank memory budget (MiB)", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -204,34 +206,46 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
     let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
     cfg.transport = parse_transport(a.get_or("transport", "threads"))?;
     cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
+    // streamed ingestion: an explicit chunk size, or one derived from a
+    // per-rank memory budget (chunk bytes ≈ rows × nt_total × 8 — the
+    // full stored row streams through memory even when training
+    // truncates columns)
+    match (a.get("chunk-rows"), a.get("memory-budget-mb")) {
+        (Some(_), Some(_)) => {
+            bail!("--chunk-rows and --memory-budget-mb are mutually exclusive")
+        }
+        (Some(v), None) => {
+            let n: usize = v.parse().context("--chunk-rows")?;
+            anyhow::ensure!(n >= 1, "--chunk-rows must be >= 1");
+            cfg.chunk_rows = Some(n);
+        }
+        (None, Some(v)) => {
+            let mb: f64 = v.parse().context("--memory-budget-mb")?;
+            anyhow::ensure!(mb > 0.0, "--memory-budget-mb must be positive");
+            // peak residency per chunk is ~3x the chunk payload: the
+            // destination matrix plus the read path's raw-byte and
+            // decoded staging buffers live simultaneously
+            let rows =
+                ((mb * 1024.0 * 1024.0) / (3.0 * 8.0 * nt_total as f64)).floor() as usize;
+            cfg.chunk_rows = Some(rows.max(1));
+        }
+        (None, None) => {}
+    }
     // probes on both velocity variables
     for &row in &probe_rows {
         for var in 0..ns {
             cfg.probes.push((var, row));
         }
     }
-    let source = DataSource::File { path: PathBuf::from(data), variables: vars };
+    // the source itself carries the training-column truncation — the
+    // streamed readers slice columns per chunk, so no truncated copy of
+    // the dataset is ever staged in memory
+    let source = DataSource::File {
+        path: PathBuf::from(data),
+        variables: vars,
+        nt_train: Some(nt_train),
+    };
     Ok((cfg, source, probe_rows, nt_train))
-}
-
-/// Restrict a file-backed source to the first `nt_train` snapshots
-/// (training over [t_init, t_train], prediction beyond).
-fn training_source(source: &DataSource, nt_train: usize) -> Result<DataSource> {
-    match source {
-        DataSource::File { path, variables } => {
-            let reader = SnapReader::open(path)?;
-            let mut stacked: Option<dopinf::linalg::Matrix> = None;
-            for v in variables {
-                let m = reader.read_all(v)?.slice_cols(0, nt_train);
-                stacked = Some(match stacked {
-                    None => m,
-                    Some(s) => s.vstack(&m),
-                });
-            }
-            Ok(DataSource::InMemory(std::sync::Arc::new(stacked.context("no vars")?)))
-        }
-        s => Ok(s.clone()),
-    }
 }
 
 fn cmd_train(tokens: &[String]) -> Result<()> {
@@ -242,12 +256,15 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
         return Ok(());
     }
     let (cfg, source, probe_rows, nt_train) = build_train_setup(&a)?;
-    let train_src = training_source(&source, nt_train)?;
     eprintln!(
-        "training: p={} nt_train={nt_train} nt_p={} energy={} artifacts={:?}",
-        cfg.p, cfg.opinf.nt_p, cfg.opinf.energy_target, cfg.artifacts_dir
+        "training: p={} nt_train={nt_train} nt_p={} energy={} chunk_rows={} artifacts={:?}",
+        cfg.p,
+        cfg.opinf.nt_p,
+        cfg.opinf.energy_target,
+        cfg.chunk_rows.map_or("block".to_string(), |n| n.to_string()),
+        cfg.artifacts_dir
     );
-    let result = run_distributed(&cfg, &train_src)?;
+    let result = run_distributed(&cfg, &source)?;
 
     println!("reduced dimension r = {}", result.r);
     println!(
@@ -325,12 +342,11 @@ fn cmd_scaling(tokens: &[String]) -> Result<()> {
         print!("{}", usage("scaling", "Strong-scaling study (Fig. 4)", &specs));
         return Ok(());
     }
-    let (cfg, source, _, nt_train) = build_train_setup(&a)?;
-    let train_src = training_source(&source, nt_train)?;
+    let (cfg, source, _, _nt_train) = build_train_setup(&a)?;
     let procs = a.get_list::<usize>("procs-list", &[1, 2, 4, 8])?;
     let repeats = a.get_parse("repeats", 10)?;
 
-    let rows = strong_scaling(&cfg, &train_src, &procs, repeats)?;
+    let rows = strong_scaling(&cfg, &source, &procs, repeats)?;
     println!(
         "{:>4} {:>12} {:>12} {:>9}  breakdown (load/compute/comm/learn/post)",
         "p", "mean [s]", "std [s]", "speedup"

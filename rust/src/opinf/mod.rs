@@ -7,14 +7,17 @@
 //! serial-vs-distributed equivalence test is the core correctness signal
 //! of the whole pipeline.
 //!
-//! * [`transform`]   — Step II: centering + max-abs scaling
+//! * [`transform`]   — Step II reference kernels: centering + max-abs
+//!   scaling on a resident block (the serial path)
+//! * [`streaming`]   — the **primary** Step II–III engine: per-chunk
+//!   stats/transform kernels and the Gram/projection accumulators the
+//!   distributed pipeline streams its data through, bitwise identical
+//!   to the monolithic kernels for every chunking
 //! * [`podgram`]     — Step III: Gram-based dimensionality reduction
 //!   (Eqs. 5–8: D, eigh, T_r, Q̂ = T_rᵀD — no POD basis formed)
 //! * [`learn`]       — Step IV: discrete OpInf least squares (Eq. 12)
 //! * [`postprocess`] — Step V: probe lifting via V_{r,i} = Q_i T_r
 //! * [`serial`]      — the paper's serial OpInf reference (p = 1 baseline)
-//! * [`streaming`]   — extension: batch-streamed Gram accumulation
-//!   (paper §I cites streaming POD [15, 16])
 
 pub mod learn;
 pub mod podgram;

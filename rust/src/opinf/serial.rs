@@ -132,7 +132,7 @@ pub fn run_with_engine(mut q: Matrix, cfg: &OpInfConfig, engine: &Engine) -> Res
     let scales_per_var: Vec<f64> = if cfg.scaling {
         let s = local_maxabs(&q, &var_ranges);
         apply_scaling(&mut q, &var_ranges, &s);
-        s.iter().map(|&v| if v > 0.0 { v } else { 1.0 }).collect()
+        s.iter().copied().map(super::transform::effective_scale).collect()
     } else {
         vec![1.0; cfg.ns]
     };

@@ -1,51 +1,262 @@
-//! Extension: streamed Gram accumulation (paper §I cites incremental /
-//! streaming POD [15, 16] as the complementary approach).
+//! The streaming Step II–III engine: the **primary** training data
+//! plane (paper Sec. III, plus the streaming-POD line of work cited in
+//! §I [15, 16]).
 //!
-//! `D = QᵀQ` is a sum over *row* blocks (the distributed identity,
-//! Eq. 5) but equally accumulates over *column* (snapshot-batch) outer
-//! products of rows — enabling datasets whose row blocks do not fit in
-//! memory: stream `nb` snapshot rows at a time from disk and accumulate.
-//! This gives the same D bitwise (same rank-ordered summation) as the
-//! in-memory path.
+//! dOpInf exists because the snapshot data is "too large to process on
+//! a single computer" — so the per-rank pipeline must not materialize
+//! its full `(n_x/p, n_t)` block either. Every pass over the training
+//! data streams row chunks from a [`crate::io::BlockReader`] through
+//! the kernels in this module:
+//!
+//! ```text
+//! pass 1  chunk ─▶ chunk_stats        row means + centered max-abs
+//!                                     (Allreduce(MAX) joins the scales)
+//! pass 2  chunk ─▶ apply_chunk_transform  center + scale in the chunk
+//!               ─▶ GramAccumulator    D_local = Σ_b Q_bᵀ Q_b
+//!                                     (Allreduce(SUM) joins D)
+//!         spectrum ─▶ ProjectionAccumulator  Q̂ = T_rᵀ D, streamed
+//! ```
+//!
+//! Per-rank residency is O(chunk_rows · n_t) for the data plus the
+//! unavoidable (n_t, n_t) Gram accumulator — independent of n_x.
+//!
+//! ## The bitwise contract
+//!
+//! Streamed results are **bitwise identical** to the monolithic path
+//! for every chunk size, because each accumulator runs the *exact same
+//! sequence of floating-point operations* as its monolithic kernel:
+//!
+//! * [`GramAccumulator`] replays [`crate::linalg::syrk`]'s fused rank-4
+//!   row groups. A carry buffer keeps the groups aligned to the
+//!   absolute row index across chunk boundaries, and the `rows mod 4`
+//!   remainder is flushed through the same single-row step at
+//!   [`GramAccumulator::finish`] — exactly where `syrk` handles it.
+//! * [`ProjectionAccumulator`] replays [`crate::linalg::matmul_tn`]'s
+//!   purely row-sequential rank-1 updates, which are chunk-invariant
+//!   with no alignment bookkeeping at all.
+//! * [`chunk_stats`] / [`apply_chunk_transform`] are row-local, so they
+//!   reproduce [`super::transform::center_rows`] /
+//!   [`super::transform::local_maxabs`] /
+//!   [`super::transform::apply_scaling`] element for element.
+//!
+//! Combined with the rank-ordered `comm::fold` reduction kernel, the
+//! whole distributed pipeline is bitwise invariant in (chunk size, p,
+//! transport) — property-tested in `tests/integration_pipeline.rs`.
 
-use crate::linalg::{syrk, Matrix};
+use crate::linalg::{syrk_mirror, syrk_step1, syrk_step4, tn_step1, Matrix};
 
-/// Accumulates `D = Σ_b Q_bᵀ Q_b` over row batches of a tall matrix.
+/// Accumulates `D = Σ_b Q_bᵀ Q_b` over row chunks of a tall matrix,
+/// bitwise identical to `syrk` of the vertically stacked chunks.
 #[derive(Clone, Debug)]
 pub struct GramAccumulator {
     nt: usize,
     d: Matrix,
     rows_seen: usize,
+    /// 0–3 buffered rows so the fused rank-4 groups stay aligned to the
+    /// absolute row index regardless of chunk boundaries — the
+    /// invariant behind the bitwise chunk-independence guarantee.
+    carry: Vec<f64>,
 }
 
 impl GramAccumulator {
     pub fn new(nt: usize) -> GramAccumulator {
-        GramAccumulator { nt, d: Matrix::zeros(nt, nt), rows_seen: 0 }
+        GramAccumulator {
+            nt,
+            d: Matrix::zeros(nt, nt),
+            rows_seen: 0,
+            carry: Vec::with_capacity(4 * nt),
+        }
     }
 
-    /// Fold one batch of rows (any row count, same nt columns).
+    /// Fold one chunk of rows (any row count, same nt columns).
     pub fn push(&mut self, batch: &Matrix) {
         assert_eq!(batch.cols(), self.nt, "batch column count");
-        self.d.axpy(1.0, &syrk(batch));
-        self.rows_seen += batch.rows();
+        let n = self.nt;
+        let rows = batch.rows();
+        let bd = batch.data();
+        self.rows_seen += rows;
+
+        // top the carry up to a full rank-4 group first
+        let mut next = 0;
+        while !self.carry.is_empty() && self.carry.len() < 4 * n && next < rows {
+            self.carry.extend_from_slice(&bd[next * n..(next + 1) * n]);
+            next += 1;
+        }
+        let dd = self.d.data_mut();
+        if self.carry.len() == 4 * n {
+            let (r0, rest) = self.carry.split_at(n);
+            let (r1, rest) = rest.split_at(n);
+            let (r2, r3) = rest.split_at(n);
+            syrk_step4(dd, n, r0, r1, r2, r3);
+            self.carry.clear();
+        }
+        // whole rank-4 groups straight from the chunk
+        while next + 4 <= rows {
+            let (r0, rest) = bd[next * n..].split_at(n);
+            let (r1, rest) = rest.split_at(n);
+            let (r2, rest) = rest.split_at(n);
+            let r3 = &rest[..n];
+            syrk_step4(dd, n, r0, r1, r2, r3);
+            next += 4;
+        }
+        // buffer the tail (< 4 rows) for the next chunk
+        self.carry.extend_from_slice(&bd[next * n..rows * n]);
     }
 
     pub fn rows_seen(&self) -> usize {
         self.rows_seen
     }
 
-    /// The accumulated Gram matrix.
-    pub fn finish(self) -> Matrix {
+    /// The accumulated Gram matrix: flush the `rows mod 4` remainder
+    /// through the single-row step and mirror the upper triangle —
+    /// exactly `syrk`'s epilogue.
+    pub fn finish(mut self) -> Matrix {
+        let n = self.nt;
+        let dd = self.d.data_mut();
+        for row in self.carry.chunks_exact(n) {
+            syrk_step1(dd, n, row);
+        }
+        syrk_mirror(dd, n);
         self.d
+    }
+}
+
+/// Accumulates `C = Aᵀ B = Σ_k a_kᵀ ⊗ b_k` over paired row chunks of
+/// two matrices sharing their tall dimension — bitwise identical to
+/// `matmul_tn(A, B)` for every chunking, because `matmul_tn` itself is
+/// a pure row-sequential rank-1 accumulation.
+///
+/// In the pipeline this carries the Step III projection
+/// `Q̂ = T_rᵀ D` (Eq. 8) streamed over rows of the replicated Gram —
+/// the identity `Q̂ = Σ_b (Q_b T_r)ᵀ Q_b` shows the same quantity is a
+/// sum over data chunks, but the `T_rᵀ D` form needs only the (n_t,
+/// n_t) matrices already resident, so nothing block-sized survives
+/// Step III.
+#[derive(Clone, Debug)]
+pub struct ProjectionAccumulator {
+    m: usize,
+    n: usize,
+    c: Matrix,
+    rows_seen: usize,
+}
+
+impl ProjectionAccumulator {
+    /// Accumulator for an `(m, n)` product `AᵀB` with `A: (k, m)`,
+    /// `B: (k, n)` streamed in row chunks.
+    pub fn new(m: usize, n: usize) -> ProjectionAccumulator {
+        ProjectionAccumulator { m, n, c: Matrix::zeros(m, n), rows_seen: 0 }
+    }
+
+    /// Fold one paired chunk: `a` and `b` hold the same rows
+    /// `[seen, seen + chunk)` of their full matrices.
+    pub fn push(&mut self, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.rows(), b.rows(), "paired chunk row count");
+        assert_eq!(a.cols(), self.m, "left chunk column count");
+        assert_eq!(b.cols(), self.n, "right chunk column count");
+        let cd = self.c.data_mut();
+        for k in 0..a.rows() {
+            tn_step1(cd, self.n, a.row(k), b.row(k));
+        }
+        self.rows_seen += a.rows();
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    pub fn finish(self) -> Matrix {
+        self.c
+    }
+}
+
+/// `Q̂ = T_rᵀ D` streamed over `chunk_rows`-row blocks of both inputs
+/// (paper Eq. 8). Bitwise identical to the native
+/// `runtime::Engine::project` path for every chunk size.
+pub fn project_streamed(tr: &Matrix, d: &Matrix, chunk_rows: usize) -> Matrix {
+    assert!(chunk_rows >= 1, "chunk_rows must be >= 1");
+    assert_eq!(tr.rows(), d.rows(), "T_r and D row counts differ");
+    let mut acc = ProjectionAccumulator::new(tr.cols(), d.cols());
+    let mut start = 0;
+    while start < tr.rows() {
+        let end = (start + chunk_rows).min(tr.rows());
+        acc.push(&tr.slice_rows(start, end), &d.slice_rows(start, end));
+        start = end;
+    }
+    acc.finish()
+}
+
+/// Pass-1 per-chunk statistics: append each row's temporal mean to
+/// `means` (rows arrive in local var-major order, so `means[i]` ends up
+/// the mean of local row `i`) and fold each row's *centered* max-abs
+/// into its variable's `maxabs` slot. Bitwise identical to
+/// `center_rows` + `local_maxabs` on the monolithic block.
+///
+/// `start_row` is the chunk's first local row index; `rows_per_var` is
+/// the rank's per-variable row count (`|range|`).
+pub fn chunk_stats(
+    chunk: &Matrix,
+    start_row: usize,
+    rows_per_var: usize,
+    means: &mut Vec<f64>,
+    maxabs: &mut [f64],
+) {
+    let cols = chunk.cols();
+    assert!(cols > 0, "chunks must carry at least one snapshot");
+    assert!(rows_per_var > 0, "empty per-variable row range");
+    for i in 0..chunk.rows() {
+        let row = chunk.row(i);
+        let mean = row.iter().sum::<f64>() / cols as f64;
+        // hard error, not debug-only: an out-of-order BlockReader would
+        // otherwise mis-attribute every subsequent row's mean and
+        // silently corrupt the ROM
+        assert_eq!(means.len(), start_row + i, "rows must stream in order");
+        means.push(mean);
+        let m = &mut maxabs[(start_row + i) / rows_per_var];
+        for &v in row {
+            *m = m.max((v - mean).abs());
+        }
+    }
+}
+
+/// Pass-2 per-chunk transform: center each row by its pass-1 mean and,
+/// when `scales` is given, divide by its variable's global max-abs
+/// (zero scales act as 1, like `apply_scaling`). The elementwise
+/// operations match `center_rows` + `apply_scaling` exactly, so the
+/// transformed chunk is bitwise identical to the corresponding rows of
+/// the monolithically transformed block.
+pub fn apply_chunk_transform(
+    chunk: &mut Matrix,
+    start_row: usize,
+    rows_per_var: usize,
+    means: &[f64],
+    scales: Option<&[f64]>,
+) {
+    assert!(rows_per_var > 0, "empty per-variable row range");
+    for i in 0..chunk.rows() {
+        let li = start_row + i;
+        let mean = means[li];
+        let row = chunk.row_mut(i);
+        for v in row.iter_mut() {
+            *v -= mean;
+        }
+        if let Some(sc) = scales {
+            let s = super::transform::effective_scale(sc[li / rows_per_var]);
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{matmul_tn, syrk};
+    use crate::opinf::transform::{apply_scaling, center_rows, local_maxabs, variable_ranges};
+    use crate::util::rng::Rng;
 
     #[test]
-    fn matches_monolithic_gram() {
+    fn gram_matches_monolithic_bitwise() {
         let q = Matrix::randn(97, 12, 3);
         let mut acc = GramAccumulator::new(12);
         let mut start = 0;
@@ -56,7 +267,30 @@ mod tests {
         assert_eq!(start, 97);
         assert_eq!(acc.rows_seen(), 97);
         let d = acc.finish();
-        assert!(d.max_abs_diff(&syrk(&q)) < 1e-12);
+        assert_eq!(d.data(), syrk(&q).data(), "chunked Gram must be bitwise syrk");
+    }
+
+    #[test]
+    fn gram_bitwise_for_any_chunking() {
+        // random partitions, including single rows and rank-4-misaligned
+        // splits, must all reproduce syrk exactly
+        let mut rng = Rng::new(7);
+        for case in 0..20 {
+            let rows = 1 + (rng.below(50) as usize);
+            let nt = 2 + (rng.below(10) as usize);
+            let q = Matrix::randn(rows, nt, 100 + case);
+            let want = syrk(&q);
+            let mut acc = GramAccumulator::new(nt);
+            let mut start = 0;
+            while start < rows {
+                let take = 1 + rng.below(7) as usize;
+                let end = (start + take).min(rows);
+                acc.push(&q.slice_rows(start, end));
+                start = end;
+            }
+            let d = acc.finish();
+            assert_eq!(d.data(), want.data(), "case {case}: rows={rows} nt={nt}");
+        }
     }
 
     #[test]
@@ -73,5 +307,79 @@ mod tests {
     fn rejects_wrong_width() {
         let mut acc = GramAccumulator::new(4);
         acc.push(&Matrix::zeros(3, 5));
+    }
+
+    #[test]
+    fn projection_matches_matmul_tn_bitwise() {
+        let a = Matrix::randn(41, 6, 1);
+        let b = Matrix::randn(41, 9, 2);
+        let want = matmul_tn(&a, &b);
+        for chunk in [1, 3, 4, 40, 41, 100] {
+            let mut acc = ProjectionAccumulator::new(6, 9);
+            let mut start = 0;
+            while start < 41 {
+                let end = (start + chunk).min(41);
+                acc.push(&a.slice_rows(start, end), &b.slice_rows(start, end));
+                start = end;
+            }
+            assert_eq!(acc.rows_seen(), 41);
+            assert_eq!(acc.finish().data(), want.data(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn project_streamed_matches_native() {
+        let q = Matrix::randn(60, 14, 4);
+        let d = syrk(&q);
+        let tr = Matrix::randn(14, 5, 5);
+        let want = matmul_tn(&tr, &d);
+        for chunk in [1, 2, 5, 14, 64] {
+            assert_eq!(project_streamed(&tr, &d, chunk).data(), want.data(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "paired chunk row count")]
+    fn projection_rejects_mismatched_pairs() {
+        let mut acc = ProjectionAccumulator::new(2, 3);
+        acc.push(&Matrix::zeros(4, 2), &Matrix::zeros(3, 3));
+    }
+
+    #[test]
+    fn chunked_transform_matches_monolithic_bitwise() {
+        // monolithic reference: center, maxabs, scale on the full block
+        let ns = 3;
+        let per = 14;
+        let nt = 11;
+        let q0 = Matrix::randn(ns * per, nt, 9);
+        let mut mono = q0.clone();
+        let ranges = variable_ranges(ns * per, ns);
+        let want_means = center_rows(&mut mono);
+        let want_max = local_maxabs(&mono, &ranges);
+        apply_scaling(&mut mono, &ranges, &want_max);
+
+        for chunk in [1, 4, 5, per, ns * per] {
+            let mut means = Vec::new();
+            let mut maxabs = vec![0.0f64; ns];
+            let mut start = 0;
+            while start < ns * per {
+                let end = (start + chunk).min(ns * per);
+                chunk_stats(&q0.slice_rows(start, end), start, per, &mut means, &mut maxabs);
+                start = end;
+            }
+            assert_eq!(means, want_means, "chunk={chunk}");
+            assert_eq!(maxabs, want_max, "chunk={chunk}");
+
+            let mut rebuilt = Matrix::zeros(0, nt);
+            let mut start = 0;
+            while start < ns * per {
+                let end = (start + chunk).min(ns * per);
+                let mut c = q0.slice_rows(start, end);
+                apply_chunk_transform(&mut c, start, per, &means, Some(&maxabs));
+                rebuilt = rebuilt.vstack(&c);
+                start = end;
+            }
+            assert_eq!(rebuilt.data(), mono.data(), "chunk={chunk}");
+        }
     }
 }

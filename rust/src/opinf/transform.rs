@@ -42,13 +42,27 @@ pub fn local_maxabs(q: &Matrix, var_ranges: &[(usize, usize)]) -> Vec<f64> {
         .collect()
 }
 
+/// The effective scaling divisor for a raw per-variable max-abs: zero
+/// (a constant variable) acts as 1. The single definition of this
+/// convention — the monolithic and streaming transforms, the pipeline's
+/// probe un-scaling, and the serial path all route through it, so the
+/// scale baked into `.rom` probe bases can never drift from the scale
+/// applied to the training data.
+pub fn effective_scale(s: f64) -> f64 {
+    if s > 0.0 {
+        s
+    } else {
+        1.0
+    }
+}
+
 /// Scale each variable's rows by its (global) scaling parameter:
 /// `q[rows_of_var] /= scale[var]` (tutorial's scaling snippet). Zero
 /// scales are treated as 1 (constant variable).
 pub fn apply_scaling(q: &mut Matrix, var_ranges: &[(usize, usize)], scales: &[f64]) {
     assert_eq!(var_ranges.len(), scales.len());
     for (&(start, end), &s) in var_ranges.iter().zip(scales) {
-        let s = if s > 0.0 { s } else { 1.0 };
+        let s = effective_scale(s);
         for i in start..end {
             for v in q.row_mut(i) {
                 *v /= s;

@@ -67,6 +67,16 @@ impl Engine {
         self.runtime.is_some()
     }
 
+    /// True if [`Self::gram`] would take the PJRT path for an
+    /// `(·, nt)` block. The streaming pipeline uses this (not
+    /// [`Self::has_artifacts`]) to pick between the bitwise
+    /// chunk-invariant native accumulator and the PJRT fast path — a
+    /// loaded manifest with no matching gram entry must still get the
+    /// native bitwise contract.
+    pub fn has_gram_artifact(&self, nt: usize) -> bool {
+        self.runtime.is_some() && self.manifest.find("gram", |e| e.nt == nt).is_some()
+    }
+
     fn run_entry(&self, entry: &ArtifactEntry, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let rt = self.runtime.as_ref().expect("run_entry without runtime");
         let exe = rt.load(&entry.path)?;

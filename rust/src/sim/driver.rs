@@ -164,12 +164,47 @@ pub fn run_to_dataset<P: AsRef<Path>>(cfg: &SimConfig, out_path: P) -> Result<Da
         &[("u_x", cells, n_samples), ("u_y", cells, n_samples)],
         meta,
     )?;
-    writer.write_variable("u_x", &columns_to_matrix(cells, &ux_cols))?;
+    write_columns_chunked(&mut writer, "u_x", cells, &ux_cols)?;
     drop(ux_cols);
-    writer.write_variable("u_y", &columns_to_matrix(cells, &uy_cols))?;
+    write_columns_chunked(&mut writer, "u_y", cells, &uy_cols)?;
+    drop(uy_cols);
     writer.finish()?;
 
     Ok(DatasetInfo { cells, n_samples, steps, times, probe_rows })
+}
+
+/// Rows per streamed write chunk: 2048 rows × nt doubles keeps the
+/// transpose buffer in the low MB range at any sampling length.
+const WRITE_CHUNK_ROWS: usize = 2048;
+
+/// Stream the sampled columns into the writer as row chunks, so the
+/// full `(cells, n_samples)` field matrix is never materialized — the
+/// write-side counterpart of the chunked [`crate::io::BlockReader`]
+/// ingestion path.
+fn write_columns_chunked(
+    w: &mut SnapWriter,
+    name: &str,
+    cells: usize,
+    cols: &[Vec<f64>],
+) -> Result<()> {
+    let nt = cols.len();
+    if cells == 0 {
+        return w.write_rows(name, &Matrix::zeros(0, nt));
+    }
+    let mut start = 0;
+    while start < cells {
+        let end = (start + WRITE_CHUNK_ROWS).min(cells);
+        let mut chunk = Matrix::zeros(end - start, nt);
+        for (t, col) in cols.iter().enumerate() {
+            debug_assert_eq!(col.len(), cells);
+            for row in start..end {
+                chunk[(row - start, t)] = col[row];
+            }
+        }
+        w.write_rows(name, &chunk)?;
+        start = end;
+    }
+    Ok(())
 }
 
 fn domain(cfg: &SimConfig) -> (f64, f64) {
@@ -178,19 +213,6 @@ fn domain(cfg: &SimConfig) -> (f64, f64) {
         Geometry::Step => (4.0, 1.0),
         Geometry::Channel => (2.0, 1.0),
     }
-}
-
-/// Transpose sampled columns into the row-major (cells, n_samples) layout.
-fn columns_to_matrix(cells: usize, cols: &[Vec<f64>]) -> Matrix {
-    let nt = cols.len();
-    let mut m = Matrix::zeros(cells, nt);
-    for (t, col) in cols.iter().enumerate() {
-        assert_eq!(col.len(), cells);
-        for (row, &val) in col.iter().enumerate() {
-            m[(row, t)] = val;
-        }
-    }
-    m
 }
 
 #[cfg(test)]

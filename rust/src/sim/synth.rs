@@ -35,6 +35,58 @@ impl Default for SynthSpec {
     }
 }
 
+/// Precomputed mode table for row-on-demand generation: the streaming
+/// ingestion path ([`crate::io::SyntheticBlockReader`]) fills one row
+/// at a time, so the synthetic state dimension is never bounded by RAM.
+/// [`generate`] is a thin wrapper that fills every row.
+pub struct SynthField {
+    nx: usize,
+    dt: f64,
+    offset: f64,
+    modes: Vec<Mode>,
+}
+
+impl SynthField {
+    pub fn new(spec: &SynthSpec) -> SynthField {
+        let mut rng = Rng::new(spec.seed);
+        let modes: Vec<Mode> = (0..spec.modes)
+            .map(|k| Mode {
+                amp: 1.0 / (k as f64 + 1.0),
+                omega: 0.7 + 0.9 * (k as f64) + 0.2 * rng.uniform(),
+                kx: (k + 1) as f64 * std::f64::consts::PI,
+                phase_x: rng.range(0.0, std::f64::consts::TAU),
+                phase_per_var: (0..spec.ns)
+                    .map(|_| rng.range(0.0, std::f64::consts::TAU))
+                    .collect(),
+            })
+            .collect();
+        SynthField { nx: spec.nx, dt: spec.dt, offset: spec.offset, modes }
+    }
+
+    /// Value of variable `var` at spatial row `row`, snapshot column
+    /// `col` of the window starting at `t0_index`.
+    pub fn value(&self, var: usize, row: usize, t0_index: usize, col: usize) -> f64 {
+        let x = row as f64 / self.nx as f64;
+        let t = (t0_index + col) as f64 * self.dt;
+        let mut val = self.offset * (var as f64 + 1.0);
+        for m in &self.modes {
+            val += m.amp
+                * (m.kx * x + m.phase_x).sin()
+                * (m.omega * t + m.phase_per_var[var]).cos();
+        }
+        val
+    }
+
+    /// Fill one spatial row's full snapshot series (`out.len()`
+    /// columns) — bitwise identical to the corresponding [`generate`]
+    /// row.
+    pub fn fill_row(&self, var: usize, row: usize, t0_index: usize, out: &mut [f64]) {
+        for (col, v) in out.iter_mut().enumerate() {
+            *v = self.value(var, row, t0_index, col);
+        }
+    }
+}
+
 /// Generate the snapshot matrix for `spec` over snapshots
 /// `[t0_index, t0_index + nt)`: shape `(ns·nx, nt)` with the variables
 /// stacked like the paper's tutorial (all u_x rows, then all u_y rows).
@@ -44,32 +96,11 @@ impl Default for SynthSpec {
 /// field whose temporal dynamics are exactly periodic, so an OpInf ROM
 /// can predict beyond training.
 pub fn generate(spec: &SynthSpec, t0_index: usize) -> Matrix {
-    let mut rng = Rng::new(spec.seed);
-    let modes: Vec<Mode> = (0..spec.modes)
-        .map(|k| Mode {
-            amp: 1.0 / (k as f64 + 1.0),
-            omega: 0.7 + 0.9 * (k as f64) + 0.2 * rng.uniform(),
-            kx: (k + 1) as f64 * std::f64::consts::PI,
-            phase_x: rng.range(0.0, std::f64::consts::TAU),
-            phase_per_var: (0..spec.ns).map(|_| rng.range(0.0, std::f64::consts::TAU)).collect(),
-        })
-        .collect();
-
+    let field = SynthField::new(spec);
     let mut q = Matrix::zeros(spec.ns * spec.nx, spec.nt);
     for var in 0..spec.ns {
         for row in 0..spec.nx {
-            let x = row as f64 / spec.nx as f64;
-            let out_row = var * spec.nx + row;
-            for col in 0..spec.nt {
-                let t = (t0_index + col) as f64 * spec.dt;
-                let mut val = spec.offset * (var as f64 + 1.0);
-                for m in &modes {
-                    val += m.amp
-                        * (m.kx * x + m.phase_x).sin()
-                        * (m.omega * t + m.phase_per_var[var]).cos();
-                }
-                q[(out_row, col)] = val;
-            }
+            field.fill_row(var, row, t0_index, q.row_mut(var * spec.nx + row));
         }
     }
     q

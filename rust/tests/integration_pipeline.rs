@@ -1,20 +1,25 @@
 //! End-to-end pipeline over a file-backed dataset: flow solver →
 //! SNAPD file → distributed training with probes → prediction quality
-//! beyond the training horizon.
+//! beyond the training horizon — plus the streaming data plane's
+//! bitwise-invariance property tests (chunk size × p × transport).
 
 use std::sync::Arc;
 
 use dopinf::comm::CostModel;
-use dopinf::coordinator::config::{DOpInfConfig, DataSource};
-use dopinf::coordinator::pipeline::run_distributed;
-use dopinf::io::snapd::SnapReader;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
+use dopinf::coordinator::pipeline::{run_distributed, DOpInfResult};
+use dopinf::io::snapd::{SnapReader, SnapWriter};
 use dopinf::linalg::Matrix;
 use dopinf::opinf::serial::OpInfConfig;
+use dopinf::opinf::streaming::{project_streamed, GramAccumulator};
 use dopinf::rom::RegGrid;
+use dopinf::runtime::Engine;
 use dopinf::sim::driver::{run_to_dataset, SimConfig};
 use dopinf::sim::synth::{generate, SynthSpec};
 use dopinf::sim::Geometry;
 use dopinf::util::json::Json;
+use dopinf::util::propcheck;
+use dopinf::util::rng::Rng;
 
 #[test]
 fn dataset_file_to_trained_rom() {
@@ -39,6 +44,7 @@ fn dataset_file_to_trained_rom() {
     let source = DataSource::File {
         path: path.clone(),
         variables: vec!["u_x".into(), "u_y".into()],
+        nt_train: None,
     };
     let ocfg = OpInfConfig {
         ns: 2,
@@ -113,6 +119,7 @@ fn missing_dataset_fails_cleanly() {
     let source = DataSource::File {
         path: "/does/not/exist.snapd".into(),
         variables: vec!["u_x".into()],
+        nt_train: None,
     };
     let ocfg = OpInfConfig {
         ns: 1,
@@ -162,6 +169,194 @@ fn dataset_metadata_probe_rows_usable() {
         let _ = reader.read_row("u_x", r).unwrap();
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Assert two distributed results are bitwise identical — every f64 of
+/// every output artifact, not just within tolerance.
+fn assert_bitwise_eq(a: &DOpInfResult, b: &DOpInfResult, tag: &str) {
+    assert_eq!(a.r, b.r, "{tag}: r");
+    assert_eq!(a.eigs, b.eigs, "{tag}: eigs");
+    assert_eq!(a.retained_energy, b.retained_energy, "{tag}: energy");
+    assert_eq!(a.opt_pair, b.opt_pair, "{tag}: opt_pair");
+    assert_eq!(a.train_err, b.train_err, "{tag}: train_err");
+    assert_eq!(a.winner_rank, b.winner_rank, "{tag}: winner");
+    assert_eq!(a.qtilde.data(), b.qtilde.data(), "{tag}: qtilde");
+    assert_eq!(a.qhat0, b.qhat0, "{tag}: qhat0");
+    assert_eq!(a.ops.ahat.data(), b.ops.ahat.data(), "{tag}: ahat");
+    assert_eq!(a.ops.fhat.data(), b.ops.fhat.data(), "{tag}: fhat");
+    assert_eq!(a.ops.chat, b.ops.chat, "{tag}: chat");
+    assert_eq!(a.probes.len(), b.probes.len(), "{tag}: probe count");
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!((pa.var, pa.row), (pb.var, pb.row), "{tag}: probe id");
+        assert_eq!(pa.values, pb.values, "{tag}: probe values");
+    }
+    assert_eq!(a.probe_bases.len(), b.probe_bases.len(), "{tag}: probe basis count");
+    for (ba, bb) in a.probe_bases.iter().zip(&b.probe_bases) {
+        assert_eq!(ba.phi, bb.phi, "{tag}: probe basis phi");
+        assert_eq!(ba.mean, bb.mean, "{tag}: probe basis mean");
+        assert_eq!(ba.scale, bb.scale, "{tag}: probe basis scale");
+    }
+}
+
+#[test]
+fn streamed_pipeline_bitwise_equals_monolithic() {
+    // the core contract of the streaming data plane: chunk_rows ∈
+    // {1, 7, 64, whole-block} × p ∈ {1, 2, 4} × {threads, sockets} all
+    // produce the identical DOpInfResult, scaling transform included
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let source = DataSource::InMemory(Arc::new(q));
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(4),
+        scaling: true,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 48,
+    };
+    for p in [1usize, 2, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            let mut base = DOpInfConfig::new(p, ocfg.clone());
+            base.cost_model = CostModel::free();
+            base.transport = transport;
+            base.probes = vec![(0, 3), (1, 60)];
+            base.chunk_rows = None; // monolithic single-chunk reference
+            let mono = run_distributed(&base, &source).unwrap();
+            for chunk in [1usize, 7, 64] {
+                let mut cfg = base.clone();
+                cfg.chunk_rows = Some(chunk);
+                let streamed = run_distributed(&cfg, &source).unwrap();
+                assert_bitwise_eq(
+                    &mono,
+                    &streamed,
+                    &format!("p={p} {transport:?} chunk_rows={chunk}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_file_ingestion_bitwise_with_column_truncation() {
+    // file-backed source with nt_train truncation: the streamed reads
+    // must agree bitwise with themselves across chunk sizes, and the
+    // truncated source must behave like an in-memory column slice
+    let dir = std::env::temp_dir().join("dopinf_it_stream_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream.snapd");
+    let spec = SynthSpec { nx: 40, ns: 2, nt: 30, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let mut w = SnapWriter::create(&path, &[("u_x", 40, 30), ("u_y", 40, 30)], Json::Null)
+        .unwrap();
+    w.write_variable("u_x", &q.slice_rows(0, 40)).unwrap();
+    w.write_variable("u_y", &q.slice_rows(40, 80)).unwrap();
+    w.finish().unwrap();
+
+    let file_src = DataSource::File {
+        path: path.clone(),
+        variables: vec!["u_x".into(), "u_y".into()],
+        nt_train: Some(20),
+    };
+    assert_eq!(file_src.dims(2).unwrap(), (40, 2, 20));
+    let mem_src = DataSource::InMemory(Arc::new(q.slice_cols(0, 20)));
+
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(3),
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 30,
+    };
+    let mut cfg = DOpInfConfig::new(3, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.probes = vec![(1, 12)];
+    cfg.chunk_rows = None;
+    let reference = run_distributed(&cfg, &mem_src).unwrap();
+    for chunk in [1usize, 7, 512] {
+        let mut c = cfg.clone();
+        c.chunk_rows = Some(chunk);
+        let res = run_distributed(&c, &file_src).unwrap();
+        assert_bitwise_eq(&reference, &res, &format!("file chunk_rows={chunk}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn synthetic_source_streams_bitwise() {
+    // row-on-demand generation through the pipeline: any chunking of
+    // the synthetic reader matches the in-memory generate() path
+    let spec = SynthSpec { nx: 53, ns: 2, nt: 20, modes: 2, ..Default::default() };
+    let mem_src = DataSource::InMemory(Arc::new(generate(&spec, 0)));
+    let synth_src = DataSource::Synthetic(spec);
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(3),
+        scaling: true,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 40,
+    };
+    let mut cfg = DOpInfConfig::new(2, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.chunk_rows = None;
+    let reference = run_distributed(&cfg, &mem_src).unwrap();
+    for chunk in [5usize, 53] {
+        let mut c = cfg.clone();
+        c.chunk_rows = Some(chunk);
+        let res = run_distributed(&c, &synth_src).unwrap();
+        assert_bitwise_eq(&reference, &res, &format!("synthetic chunk_rows={chunk}"));
+    }
+}
+
+#[test]
+fn accumulators_match_engine_bitwise() {
+    // property: GramAccumulator == engine.gram and the streamed
+    // projection == engine.project, bitwise, for random matrices under
+    // random chunk partitions
+    let engine = Engine::native();
+    propcheck::check(
+        propcheck::Config { cases: 48, ..Default::default() },
+        |rng: &mut Rng| {
+            let rows = 1 + rng.below(70) as usize;
+            let nt = 2 + rng.below(14) as usize;
+            let r = 1 + rng.below(6) as usize;
+            (rows, nt, r, rng.next_u64())
+        },
+        |&(rows, nt, r, seed)| {
+            let q = Matrix::randn(rows, nt, seed);
+            let want_d = engine.gram(&q);
+            let mut chunk_rng = Rng::new(seed ^ 0xC0FFEE);
+            let mut acc = GramAccumulator::new(nt);
+            let mut start = 0;
+            while start < rows {
+                let end = (start + 1 + chunk_rng.below(9) as usize).min(rows);
+                acc.push(&q.slice_rows(start, end));
+                start = end;
+            }
+            let d = acc.finish();
+            if d.data() != want_d.data() {
+                return Err(format!(
+                    "streamed Gram diverges from engine.gram by {:e}",
+                    d.max_abs_diff(&want_d)
+                ));
+            }
+            let tr = Matrix::randn(nt, r.min(nt), seed ^ 0x5EED);
+            let want_q = engine.project(&tr, &want_d);
+            let chunk = 1 + (seed % 6) as usize;
+            let got = project_streamed(&tr, &want_d, chunk);
+            if got.data() != want_q.data() {
+                return Err(format!(
+                    "streamed projection diverges from engine.project by {:e}",
+                    got.max_abs_diff(&want_q)
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
