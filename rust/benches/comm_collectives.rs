@@ -55,23 +55,24 @@ fn collective_pass<C: Communicator>(ctx: &mut C, prim: Prim, len: usize) -> f64 
     let data = vec![ctx.rank() as f64 + 0.5; len];
     let mut acc = 0.0;
     for _ in 0..ROUNDS {
+        // happy-path microbench: collective failures abort the bench
         acc += match prim {
-            Prim::Allreduce => ctx.allreduce(&data, Op::Sum)[0],
+            Prim::Allreduce => ctx.allreduce(&data, Op::Sum).unwrap()[0],
             Prim::AllreduceInplace => {
                 let mut d = data.clone();
-                ctx.allreduce_inplace(&mut d, Op::Sum);
+                ctx.allreduce_inplace(&mut d, Op::Sum).unwrap();
                 d[0]
             }
             Prim::Broadcast => {
                 let payload = (ctx.rank() == 0).then(|| data.clone());
-                ctx.broadcast(0, payload)[0]
+                ctx.broadcast(0, payload).unwrap()[0]
             }
-            Prim::Allgather => ctx.allgather(&data)[0][0],
-            Prim::Gather => ctx.gather(0, &data).map_or(0.0, |parts| parts[0][0]),
-            Prim::Reduce => ctx.reduce(0, &data, Op::Sum).map_or(0.0, |v| v[0]),
-            Prim::ReduceScatter => ctx.reduce_scatter_block(&data, Op::Sum)[0],
+            Prim::Allgather => ctx.allgather(&data).unwrap()[0][0],
+            Prim::Gather => ctx.gather(0, &data).unwrap().map_or(0.0, |parts| parts[0][0]),
+            Prim::Reduce => ctx.reduce(0, &data, Op::Sum).unwrap().map_or(0.0, |v| v[0]),
+            Prim::ReduceScatter => ctx.reduce_scatter_block(&data, Op::Sum).unwrap()[0],
             Prim::Barrier => {
-                ctx.barrier();
+                ctx.barrier().unwrap();
                 0.0
             }
         };
@@ -107,6 +108,7 @@ fn main() {
                     }
                     Backend::Sockets => {
                         comm::socket::run(p, CostModel::free(), |ctx| collective_pass(ctx, prim, len))
+                            .expect("socket rendezvous")
                     }
                 });
             }

@@ -84,7 +84,7 @@ fn main() {
         bench.run(&format!("allreduce 600x600 over p={p} ranks"), || {
             comm::run(p, CostModel::free(), |ctx| {
                 let data = vec![ctx.rank() as f64; 600 * 600];
-                ctx.allreduce(&data, Op::Sum).len()
+                ctx.allreduce(&data, Op::Sum).unwrap().len()
             })
         });
     }

@@ -61,7 +61,7 @@ fn write_dataset() -> PathBuf {
 /// returns a checksum so nothing is optimized away.
 fn two_pass_ingest(source: &DataSource, chunk_rows: usize) -> f64 {
     let range = RowRange { start: 0, end: NX };
-    let mut reader = source.block_reader(range, NX, NS, chunk_rows).expect("reader");
+    let mut reader = source.block_reader(0, range, NX, NS, chunk_rows).expect("reader");
     let mut means = Vec::with_capacity(NS * NX);
     let mut maxabs = vec![0.0f64; NS];
     while let Some(chunk) = reader.next_chunk().expect("pass 1 chunk") {
@@ -80,7 +80,7 @@ fn two_pass_ingest(source: &DataSource, chunk_rows: usize) -> f64 {
 /// Pure read path (no transforms): chunk drain only.
 fn read_only(source: &DataSource, chunk_rows: usize) -> f64 {
     let range = RowRange { start: 0, end: NX };
-    let mut reader = source.block_reader(range, NX, NS, chunk_rows).expect("reader");
+    let mut reader = source.block_reader(0, range, NX, NS, chunk_rows).expect("reader");
     let mut acc = 0.0;
     while let Some(chunk) = reader.next_chunk().expect("chunk") {
         acc += chunk.data.row(0)[0];

@@ -15,8 +15,14 @@
 //! All reductions funnel through [`fold`]: contributions are combined
 //! in rank order, so every backend produces bitwise-identical results
 //! regardless of thread scheduling or packet arrival order.
+//!
+//! Every collective returns `Result<T, CommError>` and every backend
+//! supports **abort broadcast** ([`Communicator::abort`]): a rank that
+//! fails mid-pipeline poisons the group, waking peers parked at any
+//! collective with [`CommError::RemoteAbort`] instead of hanging.
 
 use super::clock::{Category, Clock};
+use super::error::{CommError, CommResult};
 use crate::util::timer::ThreadCpuTimer;
 
 /// Reduction operator for reducing collectives (MPI_Op subset).
@@ -34,6 +40,7 @@ pub enum Op {
 /// the socket hub, and the single-rank backend all combine the same
 /// rank-ordered contribution list through these functions.
 pub mod fold {
+    use super::super::error::CommError;
     use super::Op;
 
     /// Identity element of `op`.
@@ -76,6 +83,79 @@ pub mod fold {
         out
     }
 
+    /// The first contribution whose length differs from rank 0's, as
+    /// `(rank, its_len, rank0_len)` — backends turn this into a typed
+    /// `CommError::ContractViolation` on every rank *before* folding
+    /// ([`accumulate`] itself asserts, which would poison the group
+    /// with a panic instead of the typed error).
+    pub fn mismatched_length(parts: &[Vec<f64>]) -> Option<(usize, usize, usize)> {
+        let want = parts.first().map_or(0, Vec::len);
+        parts
+            .iter()
+            .enumerate()
+            .find(|(_, p)| p.len() != want)
+            .map(|(i, p)| (i, p.len(), want))
+    }
+
+    /// [`mismatched_length`] as the typed error every backend reports:
+    /// one shared construction keeps the wording identical across
+    /// transports. `rank` is the rank the violation is detected on.
+    pub fn length_violation(what: &str, rank: usize, parts: &[Vec<f64>]) -> Option<CommError> {
+        mismatched_length(parts).map(|(i, got, want)| CommError::ContractViolation {
+            rank,
+            message: format!(
+                "{what} length mismatch: rank {i} contributed {got} elements, rank 0 {want}"
+            ),
+        })
+    }
+
+    /// Broadcast payload-contract guard over every rank's
+    /// provided-payload flag (the root provides `Some`, everyone else
+    /// `None`). Shared by the backends so the wording — and which rank
+    /// the error is tagged with (`rank`, the detecting rank) — cannot
+    /// drift between transports.
+    pub fn broadcast_violation(root: usize, provided: &[bool], rank: usize) -> Option<CommError> {
+        for (i, &flag) in provided.iter().enumerate() {
+            if i == root && !flag {
+                return Some(CommError::ContractViolation {
+                    rank,
+                    message: format!(
+                        "broadcast(root={root}) — root rank {root} provided no payload"
+                    ),
+                });
+            }
+            if i != root && flag {
+                return Some(CommError::ContractViolation {
+                    rank,
+                    message: format!(
+                        "broadcast(root={root}) — non-root rank {i} passed Some(..); \
+                         only the root provides the payload"
+                    ),
+                });
+            }
+        }
+        None
+    }
+
+    /// `reduce_scatter_block` divisibility guard over every rank's
+    /// contribution length (validated after the exchange so the whole
+    /// group observes the same typed error).
+    pub fn divisibility_violation(
+        parts: &[Vec<f64>],
+        size: usize,
+        rank: usize,
+    ) -> Option<CommError> {
+        parts.iter().enumerate().find(|(_, p)| p.len() % size != 0).map(|(i, p)| {
+            CommError::ContractViolation {
+                rank,
+                message: format!(
+                    "reduce_scatter_block — rank {i}'s length {} not divisible by p = {size}",
+                    p.len()
+                ),
+            }
+        })
+    }
+
     /// Rank `rank`'s block of an evenly divided reduced vector
     /// (MPI_Reduce_scatter_block semantics: `reduced.len()` must be a
     /// multiple of `size`).
@@ -94,10 +174,17 @@ pub mod fold {
 /// Transport-abstracted MPI-style communicator.
 ///
 /// One instance per rank; every collective must be entered by all ranks
-/// of the group in the same order (the usual MPI contract — mismatched
-/// collectives panic on backends that can detect them). Reductions are
-/// applied in rank order on every backend, so results are bitwise
-/// deterministic and transport-independent.
+/// of the group in the same order (the usual MPI contract — detected
+/// mismatches and misuse surface as [`CommError::ContractViolation`] on
+/// every rank, never as a deadlock). Reductions are applied in rank
+/// order on every backend, so results are bitwise deterministic and
+/// transport-independent.
+///
+/// Every collective is fallible: a failing sibling rank that called
+/// [`Communicator::abort`] wakes this rank out of any collective with
+/// [`CommError::RemoteAbort`]; with a configured deadline, a silent
+/// peer yields [`CommError::Timeout`]. After any failure the group is
+/// poisoned — subsequent collectives fail fast with the same error.
 ///
 /// The trait also carries the rank's virtual [`Clock`] (`clock` /
 /// `charge` / `timed`) so pipeline code can bill compute and model
@@ -132,49 +219,74 @@ pub trait Communicator {
     /// primitive (the allocating [`Communicator::allreduce`] wraps it)
     /// so multi-megabyte payloads — Gram matrices, probe blocks — skip
     /// the `Vec` round-trip on the caller's side.
-    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op);
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()>;
 
     /// MPI_Allreduce over an f64 vector. All ranks receive the result.
-    fn allreduce(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+    fn allreduce(&mut self, data: &[f64], op: Op) -> CommResult<Vec<f64>> {
         let mut out = data.to_vec();
-        self.allreduce_inplace(&mut out, op);
-        out
+        self.allreduce_inplace(&mut out, op)?;
+        Ok(out)
     }
 
     /// Scalar Allreduce convenience.
-    fn allreduce_scalar(&mut self, x: f64, op: Op) -> f64 {
+    fn allreduce_scalar(&mut self, x: f64, op: Op) -> CommResult<f64> {
         let mut out = [x];
-        self.allreduce_inplace(&mut out, op);
-        out[0]
+        self.allreduce_inplace(&mut out, op)?;
+        Ok(out[0])
     }
 
     /// MPI_Bcast: `root` passes `Some(data)`, every other rank `None`;
     /// everyone receives the root's payload. Contract violations (a
-    /// non-root passing `Some`, the root passing `None`) panic with a
-    /// rank-tagged message on every rank instead of deadlocking.
-    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64>;
+    /// non-root passing `Some`, the root passing `None`) yield
+    /// [`CommError::ContractViolation`] on every rank instead of
+    /// deadlocking.
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>>;
 
     /// MPI_Allgather of variable-length parts: every rank receives
     /// every rank's contribution, in rank order.
-    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>>;
+    fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>>;
 
     /// MPI_Gather: contributions travel to `root` only, which receives
     /// them in rank order; every other rank gets `None`. On a real
     /// network transport this is ~p× cheaper than [`Communicator::allgather`]
     /// when only the root consumes the result.
-    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>>;
+    fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>>;
 
     /// MPI_Reduce: the rank-ordered reduction lands on `root` only;
     /// every other rank gets `None`.
-    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>>;
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> CommResult<Option<Vec<f64>>>;
 
     /// MPI_Reduce_scatter_block: reduce, then scatter equal blocks —
     /// rank i receives elements `[i·n/p, (i+1)·n/p)` of the reduction.
     /// `data.len()` must be a multiple of `size()`.
-    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64>;
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> CommResult<Vec<f64>>;
 
     /// MPI_Barrier.
-    fn barrier(&mut self);
+    fn barrier(&mut self) -> CommResult<()>;
+
+    /// Shared guard for the rooted collectives: an out-of-range `root`
+    /// is a local, deterministic contract violation (no exchange has
+    /// happened, so no peer is parked on this rank's contribution).
+    fn check_root(&self, what: &str, root: usize) -> CommResult<()> {
+        if root < self.size() {
+            Ok(())
+        } else {
+            Err(CommError::ContractViolation {
+                rank: self.rank(),
+                message: format!("{what} root {root} out of range (size {})", self.size()),
+            })
+        }
+    }
+
+    /// Abort broadcast — the recoverable analogue of `MPI_Abort`: this
+    /// rank failed, so poison the group and wake every peer parked at
+    /// any collective with [`CommError::RemoteAbort`].
+    ///
+    /// Returns the canonical group abort for *this* rank to propagate:
+    /// the first abort wins, so if a sibling already aborted (or this
+    /// rank already observed a failure) the existing rank-tagged error
+    /// is returned unchanged — `abort` is idempotent and never blocks.
+    fn abort(&mut self, message: &str) -> CommError;
 }
 
 #[cfg(test)]
@@ -222,5 +334,15 @@ mod tests {
     fn accumulate_rejects_mismatched_lengths() {
         let mut acc = vec![0.0; 2];
         fold::accumulate(&mut acc, &[1.0, 2.0, 3.0], Op::Sum);
+    }
+
+    #[test]
+    fn mismatched_length_finds_the_first_ragged_rank() {
+        assert_eq!(fold::mismatched_length(&[]), None);
+        assert_eq!(fold::mismatched_length(&[vec![1.0], vec![2.0]]), None);
+        assert_eq!(
+            fold::mismatched_length(&[vec![1.0, 2.0], vec![3.0], vec![4.0]]),
+            Some((1, 1, 2))
+        );
     }
 }

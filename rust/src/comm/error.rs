@@ -1,0 +1,186 @@
+//! Typed errors of the collective layer.
+//!
+//! Every [`super::Communicator`] method returns
+//! `Result<T, CommError>`: at scale, single-rank failures are routine,
+//! and the old infallible contract (panic on misuse, hang on a dead
+//! peer) is the wrong one for a pipeline that interleaves fallible I/O
+//! between collectives. The variants map onto the ways a collective can
+//! fail:
+//!
+//! * [`CommError::RemoteAbort`] — another rank failed and broadcast an
+//!   abort (the recoverable analogue of `MPI_Abort`): a rank parked at
+//!   any collective wakes with the origin rank and its error message
+//!   instead of waiting forever.
+//! * [`CommError::Timeout`] — a configured comm deadline elapsed while
+//!   waiting for peers (a worker that never connects, a peer that dies
+//!   silently mid-collective).
+//! * [`CommError::ContractViolation`] — the MPI usage contract was
+//!   broken (broadcast payload on a non-root, ragged
+//!   `reduce_scatter_block` lengths, root out of range, mismatched
+//!   collectives). Detected *after* the exchange wherever possible so
+//!   every rank observes the same typed error instead of deadlocking.
+//! * [`CommError::Transport`] — the transport substrate itself failed
+//!   (lost socket, corrupt frame).
+//!
+//! `CommError` implements [`std::error::Error`], so `?` lifts it into
+//! `anyhow::Result` call sites, and `anyhow::Error::downcast_ref::<CommError>()`
+//! recovers the typed value at the `run_distributed` boundary.
+
+use std::fmt;
+
+use super::communicator::Communicator;
+
+/// Result alias for collective operations.
+pub type CommResult<T> = Result<T, CommError>;
+
+/// Wrap one rank's closure result in the abort protocol (shared by the
+/// training pipeline and the serving shard workers):
+///
+/// * a **rank-local** failure (I/O error, bad input) broadcasts an
+///   abort so peers parked at any collective wake with
+///   [`CommError::RemoteAbort`] carrying this rank as the origin, and
+///   that canonical abort is what this rank propagates;
+/// * [`CommError::RemoteAbort`] passes through untouched — the group
+///   is already poisoned and the origin tag must be preserved;
+/// * [`CommError::Timeout`] passes through **without** re-broadcast:
+///   aborting here would mis-tag the timeout as a `RemoteAbort`
+///   originated by an innocent waiting rank; peers resolve through
+///   their own deadlines;
+/// * other typed comm errors (contract violation, transport failure)
+///   are returned as-is but still broadcast an abort first — they can
+///   be detected locally before any exchange (an out-of-range root),
+///   where peers would otherwise stay parked; when the group already
+///   observed the error the extra abort is an idempotent no-op.
+pub fn abort_on_local_failure<T>(
+    ctx: &mut impl Communicator,
+    result: anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    match result {
+        Ok(v) => Ok(v),
+        Err(e) => match e.downcast_ref::<CommError>() {
+            Some(CommError::RemoteAbort { .. } | CommError::Timeout { .. }) => Err(e),
+            Some(_) => {
+                ctx.abort(&format!("{e:#}"));
+                Err(e)
+            }
+            None => Err(anyhow::Error::from(ctx.abort(&format!("{e:#}")))),
+        },
+    }
+}
+
+/// Why a collective (or the transport beneath it) failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommError {
+    /// A rank called [`super::Communicator::abort`] (directly, or via
+    /// the pipeline's failure wrapper): the abort was broadcast and this
+    /// rank observed it. `origin_rank` is the first rank that aborted.
+    RemoteAbort { origin_rank: usize, message: String },
+    /// The configured communication deadline elapsed on `rank` while
+    /// waiting for `waiting_for`.
+    Timeout { rank: usize, seconds: f64, waiting_for: String },
+    /// The collective-usage contract was broken; `rank` is the rank the
+    /// error was detected on (every rank of the group observes it).
+    ContractViolation { rank: usize, message: String },
+    /// Transport-level failure observed by `rank` (lost connection,
+    /// corrupt frame, bind/accept failure).
+    Transport { rank: usize, message: String },
+}
+
+impl CommError {
+    /// The rank this error instance was observed on (for `RemoteAbort`,
+    /// the rank that originated the abort).
+    pub fn rank(&self) -> usize {
+        match self {
+            CommError::RemoteAbort { origin_rank, .. } => *origin_rank,
+            CommError::Timeout { rank, .. }
+            | CommError::ContractViolation { rank, .. }
+            | CommError::Transport { rank, .. } => *rank,
+        }
+    }
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::RemoteAbort { origin_rank, message } => {
+                write!(f, "aborted by rank {origin_rank}: {message}")
+            }
+            CommError::Timeout { rank, seconds, waiting_for } => {
+                write!(f, "rank {rank}: timed out after {seconds:.1}s waiting for {waiting_for}")
+            }
+            CommError::ContractViolation { rank, message } => {
+                write!(f, "rank {rank}: collective contract violation: {message}")
+            }
+            CommError::Transport { rank, message } => {
+                write!(f, "rank {rank}: transport failure: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_rank_tagged() {
+        let e = CommError::RemoteAbort { origin_rank: 3, message: "EIO".into() };
+        assert_eq!(e.to_string(), "aborted by rank 3: EIO");
+        assert_eq!(e.rank(), 3);
+        let t =
+            CommError::Timeout { rank: 1, seconds: 2.5, waiting_for: "reply from rank 0".into() };
+        assert!(t.to_string().contains("rank 1") && t.to_string().contains("2.5"));
+        assert_eq!(t.rank(), 1);
+    }
+
+    #[test]
+    fn abort_on_local_failure_broadcasts_only_local_errors() {
+        use super::super::SelfComm;
+        // a rank-local failure broadcasts an abort and returns the
+        // canonical origin-tagged error
+        let mut ctx = SelfComm::new();
+        let out: anyhow::Result<()> =
+            abort_on_local_failure(&mut ctx, Err(anyhow::anyhow!("EIO at chunk 4")));
+        match out.unwrap_err().downcast_ref::<CommError>() {
+            Some(CommError::RemoteAbort { origin_rank: 0, message }) => {
+                assert!(message.contains("EIO at chunk 4"));
+            }
+            other => panic!("expected RemoteAbort, got {other:?}"),
+        }
+        assert!(ctx.barrier().is_err(), "the group must be poisoned");
+
+        // a timeout passes through typed and is NOT re-broadcast (a
+        // timeout must stay a timeout, not become this rank's abort)
+        let mut ctx = SelfComm::new();
+        let timeout =
+            CommError::Timeout { rank: 0, seconds: 1.0, waiting_for: "peers".to_string() };
+        let out: anyhow::Result<()> =
+            abort_on_local_failure(&mut ctx, Err(anyhow::Error::from(timeout.clone())));
+        assert_eq!(out.unwrap_err().downcast_ref::<CommError>(), Some(&timeout));
+        assert!(ctx.barrier().is_ok(), "timeout passthrough must not poison the group");
+
+        // a contract violation stays typed but still broadcasts: it can
+        // be detected locally before any exchange (root out of range),
+        // where peers would otherwise stay parked
+        let mut ctx = SelfComm::new();
+        let cv = ctx.check_root("gather", 5).unwrap_err();
+        let out: anyhow::Result<()> =
+            abort_on_local_failure(&mut ctx, Err(anyhow::Error::from(cv.clone())));
+        assert_eq!(out.unwrap_err().downcast_ref::<CommError>(), Some(&cv));
+        assert!(ctx.barrier().is_err(), "local contract violation must poison the group");
+    }
+
+    #[test]
+    fn lifts_into_anyhow_and_downcasts_back() {
+        fn fails() -> anyhow::Result<()> {
+            Err(CommError::ContractViolation { rank: 2, message: "root 9 out of range".into() })?;
+            Ok(())
+        }
+        let e = fails().unwrap_err().context("step IV");
+        assert!(format!("{e:#}").contains("root 9 out of range"));
+        let ce = e.downcast_ref::<CommError>().expect("typed source survives");
+        assert_eq!(ce.rank(), 2);
+    }
+}

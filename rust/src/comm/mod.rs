@@ -10,6 +10,9 @@
 //!
 //! ## Collective vocabulary
 //!
+//! Every method returns `Result<T, CommError>` — at thousands of
+//! ranks, single-rank failures are routine, not exceptional.
+//!
 //! | trait method                         | MPI counterpart          | pipeline use (paper Sec. III)              |
 //! |--------------------------------------|--------------------------|--------------------------------------------|
 //! | [`Communicator::allreduce`] / `_inplace` / `_scalar` | `MPI_Allreduce` | Step II maxabs, Step III Gram `D`, Step IV best-error vote |
@@ -19,18 +22,37 @@
 //! | [`Communicator::reduce`]             | `MPI_Reduce`             | rooted reductions (root-only statistics)   |
 //! | [`Communicator::reduce_scatter_block`] | `MPI_Reduce_scatter_block` | block-distributed reductions             |
 //! | [`Communicator::barrier`]            | `MPI_Barrier`            | phase alignment in benches/tests           |
+//! | [`Communicator::abort`]              | ≈ `MPI_Abort`            | rank failure → abort broadcast, recoverable at `run_distributed` |
+//!
+//! ## Error semantics ([`CommError`])
+//!
+//! | failure                                   | every rank observes          | old (infallible) behaviour |
+//! |-------------------------------------------|------------------------------|----------------------------|
+//! | a rank calls `abort` (local I/O error, …) | `RemoteAbort { origin_rank }`| siblings hang at the next collective |
+//! | peer never arrives (deadline configured)  | `Timeout`                    | indefinite block           |
+//! | contract misuse (bcast payload, ragged reduce_scatter, mismatched collectives) | `ContractViolation` | rank-tagged panic |
+//! | lost connection / corrupt frame (sockets) | `Transport`                  | panic                      |
+//!
+//! `abort` is the recoverable analogue of `MPI_Abort`: it poisons the
+//! thread board / relays error frames through the socket hub /
+//! short-circuits [`SelfComm`], waking every peer parked at any
+//! collective — but the process survives, and `run_distributed`
+//! aggregates the per-rank errors into one typed
+//! `DOpInfError::RemoteAbort` carrying the originating rank.
 //!
 //! ## Backends
 //!
 //! * [`thread`] — shared-board thread transport ([`RankCtx`], the
 //!   default): p rank threads in one process synchronizing through a
-//!   contribution board; exact collectives, reductions in rank order.
+//!   poisonable contribution board; exact collectives, reductions in
+//!   rank order.
 //! * [`selfcomm`] — [`SelfComm`], the zero-overhead p = 1 backend: no
 //!   threads, no barriers; every collective is the identity.
 //! * [`socket`] — localhost TCP transport ([`socket::SocketComm`]):
-//!   length-prefixed frames with rank 0 as rendezvous hub. Proves the
-//!   trait boundary is transport-real and is the template for a true
-//!   multi-process / multi-node deployment.
+//!   length-prefixed frames with rank 0 as rendezvous hub, abort/error
+//!   frames on the same channel, optional rendezvous + I/O deadlines.
+//!   Proves the trait boundary is transport-real and is the template
+//!   for a true multi-process / multi-node deployment.
 //!
 //! **Timing model** (DESIGN.md §3): this testbed has one physical core,
 //! so wall-clock cannot exhibit strong scaling. Each rank instead
@@ -40,11 +62,13 @@
 //! entries for the rooted collectives) for communication; collective
 //! entry synchronizes clocks to the max over ranks, exactly like a
 //! real bulk-synchronous MPI program. Numerics are unaffected — the
-//! collectives are exact.
+//! collectives are exact, and the happy path is bitwise identical to
+//! the pre-fallible API.
 
 pub mod clock;
 pub mod communicator;
 pub mod costmodel;
+pub mod error;
 pub mod selfcomm;
 pub mod socket;
 pub mod thread;
@@ -52,5 +76,6 @@ pub mod thread;
 pub use clock::{Category, Clock};
 pub use communicator::{fold, Communicator, Op};
 pub use costmodel::{CostModel, DiskModel};
+pub use error::{abort_on_local_failure, CommError, CommResult};
 pub use selfcomm::SelfComm;
-pub use thread::{run, run_with_clocks, RankCtx};
+pub use thread::{run, run_with_clocks, run_with_clocks_timeout, RankCtx};

@@ -7,9 +7,15 @@
 //! abstraction; it is also the reference backend for transport
 //! property tests (any collective over one rank must return its own
 //! contribution unchanged).
+//!
+//! The fallible contract short-circuits: [`Communicator::abort`]
+//! records the abort, and every subsequent collective fails fast with
+//! the same [`CommError::RemoteAbort`] — exactly the poisoned-group
+//! semantics of the multi-rank transports, collapsed to one rank.
 
 use super::clock::{Category, Clock};
 use super::communicator::{Communicator, Op};
+use super::error::{CommError, CommResult};
 
 /// The p = 1 communicator: every collective returns this rank's own
 /// contribution. Carries a virtual [`Clock`] like every backend so
@@ -17,16 +23,24 @@ use super::communicator::{Communicator, Op};
 #[derive(Debug, Default)]
 pub struct SelfComm {
     clock: Clock,
+    aborted: Option<CommError>,
 }
 
 impl SelfComm {
     pub fn new() -> SelfComm {
-        SelfComm { clock: Clock::new() }
+        SelfComm { clock: Clock::new(), aborted: None }
     }
 
     /// Final clock, for timing reports after the rank function returns.
     pub fn into_clock(self) -> Clock {
         self.clock
+    }
+
+    fn check(&self) -> CommResult<()> {
+        match &self.aborted {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
     }
 }
 
@@ -47,34 +61,50 @@ impl Communicator for SelfComm {
         self.clock.add(category, seconds);
     }
 
-    fn allreduce_inplace(&mut self, _data: &mut [f64], _op: Op) {}
+    fn allreduce_inplace(&mut self, _data: &mut [f64], _op: Op) -> CommResult<()> {
+        self.check()
+    }
 
-    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
-        assert_eq!(root, 0, "broadcast root {root} out of range (size 1)");
-        data.unwrap_or_else(|| {
-            panic!("rank 0: broadcast(root=0) — root rank 0 provided no payload")
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>> {
+        self.check()?;
+        self.check_root("broadcast", root)?;
+        data.ok_or_else(|| CommError::ContractViolation {
+            rank: 0,
+            message: "broadcast(root=0) — root rank 0 provided no payload".to_string(),
         })
     }
 
-    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
-        vec![data.to_vec()]
+    fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
+        self.check()?;
+        Ok(vec![data.to_vec()])
     }
 
-    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
-        assert_eq!(root, 0, "gather root {root} out of range (size 1)");
-        Some(vec![data.to_vec()])
+    fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
+        self.check()?;
+        self.check_root("gather", root)?;
+        Ok(Some(vec![data.to_vec()]))
     }
 
-    fn reduce(&mut self, root: usize, data: &[f64], _op: Op) -> Option<Vec<f64>> {
-        assert_eq!(root, 0, "reduce root {root} out of range (size 1)");
-        Some(data.to_vec())
+    fn reduce(&mut self, root: usize, data: &[f64], _op: Op) -> CommResult<Option<Vec<f64>>> {
+        self.check()?;
+        self.check_root("reduce", root)?;
+        Ok(Some(data.to_vec()))
     }
 
-    fn reduce_scatter_block(&mut self, data: &[f64], _op: Op) -> Vec<f64> {
-        data.to_vec()
+    fn reduce_scatter_block(&mut self, data: &[f64], _op: Op) -> CommResult<Vec<f64>> {
+        self.check()?;
+        Ok(data.to_vec())
     }
 
-    fn barrier(&mut self) {}
+    fn barrier(&mut self) -> CommResult<()> {
+        self.check()
+    }
+
+    fn abort(&mut self, message: &str) -> CommError {
+        self.aborted
+            .get_or_insert(CommError::RemoteAbort { origin_rank: 0, message: message.to_string() })
+            .clone()
+    }
 }
 
 #[cfg(test)]
@@ -87,15 +117,15 @@ mod tests {
         assert_eq!(c.rank(), 0);
         assert_eq!(c.size(), 1);
         let mut v = vec![1.5, -2.0];
-        c.allreduce_inplace(&mut v, Op::Sum);
+        c.allreduce_inplace(&mut v, Op::Sum).unwrap();
         assert_eq!(v, vec![1.5, -2.0]);
-        assert_eq!(c.allreduce_scalar(7.0, Op::Min), 7.0);
-        assert_eq!(c.broadcast(0, Some(vec![3.0])), vec![3.0]);
-        assert_eq!(c.allgather(&[4.0]), vec![vec![4.0]]);
-        assert_eq!(c.gather(0, &[5.0]).unwrap(), vec![vec![5.0]]);
-        assert_eq!(c.reduce(0, &[6.0], Op::Max).unwrap(), vec![6.0]);
-        assert_eq!(c.reduce_scatter_block(&[1.0, 2.0], Op::Sum), vec![1.0, 2.0]);
-        c.barrier();
+        assert_eq!(c.allreduce_scalar(7.0, Op::Min).unwrap(), 7.0);
+        assert_eq!(c.broadcast(0, Some(vec![3.0])).unwrap(), vec![3.0]);
+        assert_eq!(c.allgather(&[4.0]).unwrap(), vec![vec![4.0]]);
+        assert_eq!(c.gather(0, &[5.0]).unwrap().unwrap(), vec![vec![5.0]]);
+        assert_eq!(c.reduce(0, &[6.0], Op::Max).unwrap().unwrap(), vec![6.0]);
+        assert_eq!(c.reduce_scatter_block(&[1.0, 2.0], Op::Sum).unwrap(), vec![1.0, 2.0]);
+        c.barrier().unwrap();
     }
 
     #[test]
@@ -110,8 +140,25 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "provided no payload")]
-    fn broadcast_without_payload_panics() {
-        SelfComm::new().broadcast(0, None);
+    fn broadcast_without_payload_is_a_contract_error() {
+        let e = SelfComm::new().broadcast(0, None).unwrap_err();
+        assert!(matches!(e, CommError::ContractViolation { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn abort_short_circuits_every_collective() {
+        let mut c = SelfComm::new();
+        let first = c.abort("p=1 local failure");
+        match &first {
+            CommError::RemoteAbort { origin_rank: 0, message } => {
+                assert!(message.contains("p=1 local failure"));
+            }
+            other => panic!("expected RemoteAbort, got {other:?}"),
+        }
+        // idempotent: the first abort wins
+        assert_eq!(c.abort("later"), first);
+        assert_eq!(c.allreduce_scalar(1.0, Op::Sum).unwrap_err(), first);
+        assert_eq!(c.barrier().unwrap_err(), first);
+        assert_eq!(c.broadcast(0, Some(vec![1.0])).unwrap_err(), first);
     }
 }

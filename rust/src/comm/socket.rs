@@ -15,27 +15,51 @@
 //! request/reply round in strict lockstep:
 //!
 //! ```text
-//! request (leaf → hub):  opcode u8 | op u8 | provided u8 | root u32 |
-//!                        clock f64 | len u64 | payload f64 × len
-//! reply   (hub → leaf):  max_entry f64 | n_parts u64 |
-//!                        (len u64 | part f64 × len) × n_parts
+//! request (leaf → hub):  frame u8 (0 = collective | 1 = abort)
+//!   collective: opcode u8 | op u8 | provided u8 | root u32 |
+//!               clock f64 | len u64 | payload f64 × len
+//!   abort:      encoded CommError (kind u8 | rank u64 | secs f64 |
+//!               len u64 | message bytes)
+//! reply   (hub → leaf):  status u8 (0 = ok | 1 = error)
+//!   ok:    max_entry f64 | n_parts u64 | (len u64 | part f64 × len) × n_parts
+//!   error: encoded CommError
 //! ```
 //!
 //! The hub collects every rank's contribution **in rank order**,
-//! validates that all ranks entered the same collective (mismatches
-//! panic with both call sites named), reduces through the shared
-//! [`fold`] kernels — so results are bitwise identical to the thread
-//! backend — and replies with only what each rank needs: rooted
-//! collectives (`gather`, `reduce`) ship data to the root alone, which
-//! is precisely the traffic saving that motivates them over
-//! allgather-then-discard.
+//! validates that all ranks entered the same collective, reduces
+//! through the shared [`fold`] kernels — so results are bitwise
+//! identical to the thread backend — and replies with only what each
+//! rank needs: rooted collectives (`gather`, `reduce`) ship data to the
+//! root alone.
+//!
+//! ## Failure semantics
+//!
+//! * **Abort broadcast** ([`Communicator::abort`]): a failing leaf
+//!   sends an abort frame in place of its next request; the hub relays
+//!   it to every leaf as an error reply, so ranks parked mid-collective
+//!   wake with [`CommError::RemoteAbort`]. A failing hub writes the
+//!   error reply to every leaf directly. After any failure the handle
+//!   is poisoned — subsequent collectives fail fast without touching
+//!   the (possibly desynced) wire.
+//! * **Deadlines** ([`run_with_clocks_timeout`]): rendezvous
+//!   (accept/connect/hello) and every frame read/write observe the
+//!   configured timeout, so a worker that never connects or a peer that
+//!   dies silently mid-collective yields [`CommError::Timeout`] instead
+//!   of blocking indefinitely.
+//! * **Contract misuse** (mismatched collectives, broadcast payload
+//!   violations, ragged `reduce_scatter_block` lengths, corrupt frames)
+//!   is detected at the hub and relayed to every rank as the same typed
+//!   [`CommError::ContractViolation`] / [`CommError::Transport`].
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use super::clock::{Category, Clock};
 use super::communicator::{fold, Communicator, Op};
 use super::costmodel::CostModel;
+use super::error::{CommError, CommResult};
+use crate::util::panic::panic_text;
 
 /// Collective opcode on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,8 +86,8 @@ impl OpCode {
         }
     }
 
-    fn from_byte(b: u8) -> OpCode {
-        match b {
+    fn from_byte(b: u8) -> io::Result<OpCode> {
+        Ok(match b {
             0 => OpCode::Allreduce,
             1 => OpCode::Broadcast,
             2 => OpCode::Allgather,
@@ -71,8 +95,8 @@ impl OpCode {
             4 => OpCode::Reduce,
             5 => OpCode::ReduceScatter,
             6 => OpCode::Barrier,
-            other => panic!("socket transport: corrupt frame (unknown opcode {other})"),
-        }
+            other => return Err(corrupt(format!("unknown opcode {other}"))),
+        })
     }
 }
 
@@ -84,33 +108,52 @@ fn op_to_byte(op: Op) -> u8 {
     }
 }
 
-fn op_from_byte(b: u8) -> Op {
-    match b {
+fn op_from_byte(b: u8) -> io::Result<Op> {
+    Ok(match b {
         0 => Op::Sum,
         1 => Op::Max,
         2 => Op::Min,
-        other => panic!("socket transport: corrupt frame (unknown reduction op {other})"),
+        other => return Err(corrupt(format!("unknown reduction op {other}"))),
+    })
+}
+
+fn corrupt(detail: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("corrupt frame ({detail})"))
+}
+
+/// Map an I/O failure while `waiting_for` into the typed comm error:
+/// an elapsed deadline is [`CommError::Timeout`], anything else is
+/// [`CommError::Transport`].
+fn io_error(rank: usize, timeout: Option<Duration>, waiting_for: &str, e: io::Error) -> CommError {
+    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
+        CommError::Timeout {
+            rank,
+            seconds: timeout.map_or(0.0, |t| t.as_secs_f64()),
+            waiting_for: waiting_for.to_string(),
+        }
+    } else {
+        CommError::Transport { rank, message: format!("{waiting_for}: {e}") }
     }
 }
 
 // ---------------------------------------------------------------- frame I/O
 
-fn read_bytes(stream: &mut TcpStream, buf: &mut [u8], from: &str) {
-    stream
-        .read_exact(buf)
-        .unwrap_or_else(|e| panic!("socket transport: lost connection to {from}: {e}"));
-}
-
-fn read_u64(stream: &mut TcpStream, from: &str) -> u64 {
+fn read_u64(stream: &mut TcpStream) -> io::Result<u64> {
     let mut b = [0u8; 8];
-    read_bytes(stream, &mut b, from);
-    u64::from_le_bytes(b)
+    stream.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 
-fn read_f64s(stream: &mut TcpStream, count: usize, from: &str) -> Vec<f64> {
+fn read_f64(stream: &mut TcpStream) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    stream.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn read_f64s(stream: &mut TcpStream, count: usize) -> io::Result<Vec<f64>> {
     let mut raw = vec![0u8; count * 8];
-    read_bytes(stream, &mut raw, from);
-    raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+    stream.read_exact(&mut raw)?;
+    Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
@@ -118,6 +161,45 @@ fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
         buf.extend_from_slice(&v.to_le_bytes());
     }
 }
+
+/// Encode a [`CommError`] onto the wire:
+/// `kind u8 | rank u64 | seconds f64 | len u64 | message bytes`.
+fn push_comm_error(buf: &mut Vec<u8>, e: &CommError) {
+    let (kind, rank, seconds, msg): (u8, usize, f64, &str) = match e {
+        CommError::RemoteAbort { origin_rank, message } => (0, *origin_rank, 0.0, message),
+        CommError::Timeout { rank, seconds, waiting_for } => (1, *rank, *seconds, waiting_for),
+        CommError::ContractViolation { rank, message } => (2, *rank, 0.0, message),
+        CommError::Transport { rank, message } => (3, *rank, 0.0, message),
+    };
+    buf.push(kind);
+    buf.extend_from_slice(&(rank as u64).to_le_bytes());
+    buf.extend_from_slice(&seconds.to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u64).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+}
+
+fn read_comm_error(stream: &mut TcpStream) -> io::Result<CommError> {
+    let mut kind = [0u8; 1];
+    stream.read_exact(&mut kind)?;
+    let rank = read_u64(stream)? as usize;
+    let seconds = read_f64(stream)?;
+    let len = read_u64(stream)? as usize;
+    let mut raw = vec![0u8; len];
+    stream.read_exact(&mut raw)?;
+    let msg = String::from_utf8_lossy(&raw).into_owned();
+    Ok(match kind[0] {
+        0 => CommError::RemoteAbort { origin_rank: rank, message: msg },
+        1 => CommError::Timeout { rank, seconds, waiting_for: msg },
+        2 => CommError::ContractViolation { rank, message: msg },
+        3 => CommError::Transport { rank, message: msg },
+        other => return Err(corrupt(format!("unknown error kind {other}"))),
+    })
+}
+
+const FRAME_COLLECTIVE: u8 = 0;
+const FRAME_ABORT: u8 = 1;
+const STATUS_OK: u8 = 0;
+const STATUS_ERROR: u8 = 1;
 
 struct Request {
     code: OpCode,
@@ -128,6 +210,12 @@ struct Request {
     payload: Vec<f64>,
 }
 
+/// A frame read by the hub from a leaf.
+enum Frame {
+    Request(Request),
+    Abort(CommError),
+}
+
 fn write_request(
     stream: &mut TcpStream,
     code: OpCode,
@@ -136,8 +224,9 @@ fn write_request(
     root: usize,
     time: f64,
     payload: &[f64],
-) {
-    let mut buf = Vec::with_capacity(23 + payload.len() * 8);
+) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(24 + payload.len() * 8);
+    buf.push(FRAME_COLLECTIVE);
     buf.push(code.to_byte());
     buf.push(op);
     buf.push(u8::from(provided));
@@ -145,60 +234,93 @@ fn write_request(
     buf.extend_from_slice(&time.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     push_f64s(&mut buf, payload);
-    stream
-        .write_all(&buf)
-        .unwrap_or_else(|e| panic!("socket transport: lost connection to rank 0: {e}"));
+    stream.write_all(&buf)
 }
 
-fn read_request(stream: &mut TcpStream, from_rank: usize) -> Request {
-    let from = format!("rank {from_rank}");
-    let mut head = [0u8; 7];
-    read_bytes(stream, &mut head, &from);
-    let code = OpCode::from_byte(head[0]);
-    let op = head[1];
-    let provided = head[2] != 0;
-    let root = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
-    let mut t = [0u8; 8];
-    read_bytes(stream, &mut t, &from);
-    let time = f64::from_le_bytes(t);
-    let len = read_u64(stream, &from) as usize;
-    let payload = read_f64s(stream, len, &from);
-    Request { code, op, provided, root, time, payload }
+fn write_abort(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
+    let mut buf = vec![FRAME_ABORT];
+    push_comm_error(&mut buf, e);
+    stream.write_all(&buf)
 }
 
-fn write_reply(stream: &mut TcpStream, max_entry: f64, parts: &[Vec<f64>], to_rank: usize) {
+fn read_frame(stream: &mut TcpStream) -> io::Result<Frame> {
+    let mut head = [0u8; 1];
+    stream.read_exact(&mut head)?;
+    match head[0] {
+        FRAME_COLLECTIVE => {
+            let mut fixed = [0u8; 7];
+            stream.read_exact(&mut fixed)?;
+            let code = OpCode::from_byte(fixed[0])?;
+            let op = fixed[1];
+            let provided = fixed[2] != 0;
+            let root = u32::from_le_bytes(fixed[3..7].try_into().unwrap()) as usize;
+            let time = read_f64(stream)?;
+            let len = read_u64(stream)? as usize;
+            let payload = read_f64s(stream, len)?;
+            Ok(Frame::Request(Request { code, op, provided, root, time, payload }))
+        }
+        FRAME_ABORT => Ok(Frame::Abort(read_comm_error(stream)?)),
+        other => Err(corrupt(format!("unknown request frame type {other}"))),
+    }
+}
+
+fn write_reply(stream: &mut TcpStream, max_entry: f64, parts: &[Vec<f64>]) -> io::Result<()> {
     let total: usize = parts.iter().map(|p| 8 + p.len() * 8).sum();
-    let mut buf = Vec::with_capacity(16 + total);
+    let mut buf = Vec::with_capacity(17 + total);
+    buf.push(STATUS_OK);
     buf.extend_from_slice(&max_entry.to_le_bytes());
     buf.extend_from_slice(&(parts.len() as u64).to_le_bytes());
     for part in parts {
         buf.extend_from_slice(&(part.len() as u64).to_le_bytes());
         push_f64s(&mut buf, part);
     }
-    stream
-        .write_all(&buf)
-        .unwrap_or_else(|e| panic!("socket transport: lost connection to rank {to_rank}: {e}"));
+    stream.write_all(&buf)
 }
 
-fn read_reply(stream: &mut TcpStream) -> (f64, Vec<Vec<f64>>) {
-    let from = "rank 0 (did rank 0 abort?)";
-    let mut t = [0u8; 8];
-    read_bytes(stream, &mut t, from);
-    let max_entry = f64::from_le_bytes(t);
-    let n_parts = read_u64(stream, from) as usize;
-    let parts = (0..n_parts)
-        .map(|_| {
-            let len = read_u64(stream, from) as usize;
-            read_f64s(stream, len, from)
-        })
-        .collect();
-    (max_entry, parts)
+fn write_error_reply(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
+    let mut buf = vec![STATUS_ERROR];
+    push_comm_error(&mut buf, e);
+    stream.write_all(&buf)
+}
+
+/// Best-effort error broadcast to every leaf. Write failures are
+/// ignored: a leaf whose connection is already gone cannot be woken,
+/// and the group is failing regardless.
+fn send_error_to_all(streams: &mut [TcpStream], e: &CommError) {
+    for s in streams.iter_mut() {
+        let _ = write_error_reply(s, e);
+    }
+}
+
+enum Reply {
+    Ok { max_entry: f64, parts: Vec<Vec<f64>> },
+    Error(CommError),
+}
+
+fn read_reply(stream: &mut TcpStream) -> io::Result<Reply> {
+    let mut status = [0u8; 1];
+    stream.read_exact(&mut status)?;
+    match status[0] {
+        STATUS_OK => {
+            let max_entry = read_f64(stream)?;
+            let n_parts = read_u64(stream)? as usize;
+            let mut parts = Vec::with_capacity(n_parts);
+            for _ in 0..n_parts {
+                let len = read_u64(stream)? as usize;
+                parts.push(read_f64s(stream, len)?);
+            }
+            Ok(Reply::Ok { max_entry, parts })
+        }
+        STATUS_ERROR => Ok(Reply::Error(read_comm_error(stream)?)),
+        other => Err(corrupt(format!("unknown reply status {other}"))),
+    }
 }
 
 // ---------------------------------------------------------------- the hub
 
-/// Compute every rank's reply parts for one collective. All reductions
-/// go through [`fold`] in rank order — bitwise identical to the thread
+/// Compute every rank's reply parts for one collective, validating the
+/// usage contract over every rank's contribution. All reductions go
+/// through [`fold`] in rank order — bitwise identical to the thread
 /// backend by construction.
 fn hub_replies(
     code: OpCode,
@@ -207,23 +329,25 @@ fn hub_replies(
     provided: &[bool],
     parts: &[Vec<f64>],
     size: usize,
-) -> Vec<Vec<Vec<f64>>> {
-    match code {
+) -> Result<Vec<Vec<Vec<f64>>>, CommError> {
+    // the hub (rank 0) is where ragged contributions are detected
+    let equal_lengths = |what: &str| -> Result<(), CommError> {
+        match fold::length_violation(what, 0, parts) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    };
+    Ok(match code {
         OpCode::Allreduce => {
-            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            equal_lengths("allreduce")?;
+            let reduced = fold::reduce_parts(parts, op_from_byte(op).map_err(|e| {
+                CommError::Transport { rank: 0, message: e.to_string() }
+            })?);
             (0..size).map(|_| vec![reduced.clone()]).collect()
         }
         OpCode::Broadcast => {
-            for (i, &flag) in provided.iter().enumerate() {
-                if i == root && !flag {
-                    panic!("broadcast(root={root}) — root rank {root} provided no payload");
-                }
-                if i != root && flag {
-                    panic!(
-                        "broadcast(root={root}) — non-root rank {i} passed Some(..); \
-                         only the root provides the payload"
-                    );
-                }
+            if let Some(e) = fold::broadcast_violation(root, provided, 0) {
+                return Err(e);
             }
             (0..size).map(|_| vec![parts[root].clone()]).collect()
         }
@@ -232,17 +356,26 @@ fn hub_replies(
             .map(|i| if i == root { parts.to_vec() } else { Vec::new() })
             .collect(),
         OpCode::Reduce => {
-            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            equal_lengths("reduce")?;
+            let reduced = fold::reduce_parts(parts, op_from_byte(op).map_err(|e| {
+                CommError::Transport { rank: 0, message: e.to_string() }
+            })?);
             (0..size)
                 .map(|i| if i == root { vec![reduced.clone()] } else { Vec::new() })
                 .collect()
         }
         OpCode::ReduceScatter => {
-            let reduced = fold::reduce_parts(parts, op_from_byte(op));
+            equal_lengths("reduce_scatter_block")?;
+            if let Some(e) = fold::divisibility_violation(parts, size, 0) {
+                return Err(e);
+            }
+            let reduced = fold::reduce_parts(parts, op_from_byte(op).map_err(|e| {
+                CommError::Transport { rank: 0, message: e.to_string() }
+            })?);
             (0..size).map(|i| vec![fold::block(&reduced, i, size)]).collect()
         }
         OpCode::Barrier => (0..size).map(|_| Vec::new()).collect(),
-    }
+    })
 }
 
 enum Conn {
@@ -258,6 +391,10 @@ pub struct SocketComm {
     clock: Clock,
     model: CostModel,
     conn: Conn,
+    timeout: Option<Duration>,
+    /// first failure observed on this handle; subsequent collectives
+    /// fail fast with it instead of touching a desynced stream
+    failed: Option<CommError>,
 }
 
 impl SocketComm {
@@ -270,40 +407,107 @@ impl SocketComm {
         provided: bool,
         root: usize,
         payload: Vec<f64>,
-    ) -> (f64, Vec<Vec<f64>>) {
+    ) -> CommResult<(f64, Vec<Vec<f64>>)> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
         let now = self.clock.now();
-        match &mut self.conn {
+        let (rank, size, timeout) = (self.rank, self.size, self.timeout);
+        let result = match &mut self.conn {
             Conn::Leaf { stream } => {
-                write_request(stream, code, op, provided, root, now, &payload);
-                read_reply(stream)
+                let sent = write_request(stream, code, op, provided, root, now, &payload)
+                    .map_err(|e| io_error(rank, timeout, "sending request to the rank 0 hub", e));
+                let reply = sent.and_then(|()| {
+                    read_reply(stream)
+                        .map_err(|e| io_error(rank, timeout, "reply from the rank 0 hub", e))
+                });
+                match reply {
+                    Ok(Reply::Ok { max_entry, parts }) => Ok((max_entry, parts)),
+                    Ok(Reply::Error(e)) | Err(e) => Err(e),
+                }
             }
             Conn::Hub { streams } => {
                 let mut times = vec![now];
                 let mut provided_flags = vec![provided];
                 let mut parts: Vec<Vec<f64>> = vec![payload];
+                let mut failure: Option<CommError> = None;
                 for (i, s) in streams.iter_mut().enumerate() {
-                    let req = read_request(s, i + 1);
-                    if req.code != code || req.root != root || req.op != op {
-                        panic!(
-                            "socket transport: collective mismatch — rank 0 entered \
-                             {code:?}(root {root}), rank {} entered {:?}(root {})",
-                            i + 1,
-                            req.code,
-                            req.root
-                        );
+                    match read_frame(s) {
+                        Ok(Frame::Request(req)) => {
+                            if req.code != code || req.root != root || req.op != op {
+                                // detected on the hub (rank 0), like
+                                // every other hub-side contract check
+                                failure = Some(CommError::ContractViolation {
+                                    rank: 0,
+                                    message: format!(
+                                        "collective mismatch — rank 0 entered {code:?}(root \
+                                         {root}), rank {} entered {:?}(root {})",
+                                        i + 1,
+                                        req.code,
+                                        req.root
+                                    ),
+                                });
+                                break;
+                            }
+                            times.push(req.time);
+                            provided_flags.push(req.provided);
+                            parts.push(req.payload);
+                        }
+                        Ok(Frame::Abort(e)) => {
+                            failure = Some(e);
+                            break;
+                        }
+                        Err(e) => {
+                            failure = Some(io_error(
+                                rank,
+                                timeout,
+                                &format!("request from rank {}", i + 1),
+                                e,
+                            ));
+                            break;
+                        }
                     }
-                    times.push(req.time);
-                    provided_flags.push(req.provided);
-                    parts.push(req.payload);
                 }
-                let max_entry = times.iter().fold(0.0f64, |a, &b| a.max(b));
-                let mut replies = hub_replies(code, op, root, &provided_flags, &parts, self.size);
-                for (i, s) in streams.iter_mut().enumerate() {
-                    write_reply(s, max_entry, &replies[i + 1], i + 1);
+                let computed = match failure {
+                    Some(e) => Err(e),
+                    None => hub_replies(code, op, root, &provided_flags, &parts, size),
+                };
+                match computed {
+                    Err(e) => {
+                        // relay the failure so ranks parked in
+                        // read_reply wake instead of hanging
+                        send_error_to_all(streams, &e);
+                        Err(e)
+                    }
+                    Ok(mut replies) => {
+                        let max_entry = times.iter().fold(0.0f64, |a, &b| a.max(b));
+                        let mut write_err = None;
+                        for (i, s) in streams.iter_mut().enumerate() {
+                            if let Err(e) = write_reply(s, max_entry, &replies[i + 1]) {
+                                write_err = Some(io_error(
+                                    rank,
+                                    timeout,
+                                    &format!("sending reply to rank {}", i + 1),
+                                    e,
+                                ));
+                                break;
+                            }
+                        }
+                        match write_err {
+                            Some(e) => {
+                                send_error_to_all(streams, &e);
+                                Err(e)
+                            }
+                            None => Ok((max_entry, replies.swap_remove(0))),
+                        }
+                    }
                 }
-                (max_entry, replies.swap_remove(0))
             }
+        };
+        if let Err(e) = &result {
+            self.failed = Some(e.clone());
         }
+        result
     }
 }
 
@@ -324,91 +528,222 @@ impl Communicator for SocketComm {
         self.clock.add(category, seconds);
     }
 
-    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) {
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()> {
         let cost = self.model.allreduce(self.size, data.len() * 8);
         let (max_entry, mut parts) =
-            self.exchange(OpCode::Allreduce, op_to_byte(op), true, 0, data.to_vec());
-        let reduced = parts.pop().expect("allreduce reply");
-        assert_eq!(reduced.len(), data.len(), "collective length mismatch across ranks");
+            self.exchange(OpCode::Allreduce, op_to_byte(op), true, 0, data.to_vec())?;
+        let reduced = parts.pop().ok_or_else(|| CommError::Transport {
+            rank: self.rank,
+            message: "empty allreduce reply".to_string(),
+        })?;
+        debug_assert_eq!(reduced.len(), data.len(), "hub validated equal lengths");
         data.copy_from_slice(&reduced);
         self.clock.sync_to(max_entry + cost);
+        Ok(())
     }
 
-    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
-        assert!(root < self.size, "broadcast root {root} out of range (size {})", self.size);
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>> {
+        self.check_root("broadcast", root)?;
         let provided = data.is_some();
         let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
         let cost = self.model.broadcast(self.size, data_bytes);
         let (max_entry, mut parts) =
-            self.exchange(OpCode::Broadcast, 0, provided, root, data.unwrap_or_default());
-        let out = parts.pop().expect("broadcast reply");
+            self.exchange(OpCode::Broadcast, 0, provided, root, data.unwrap_or_default())?;
+        let out = parts.pop().ok_or_else(|| CommError::Transport {
+            rank: self.rank,
+            message: "empty broadcast reply".to_string(),
+        })?;
         self.clock.sync_to(max_entry + cost);
-        out
+        Ok(out)
     }
 
-    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+    fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
         let cost = self.model.allgather(self.size, data.len() * 8 * self.size);
-        let (max_entry, parts) = self.exchange(OpCode::Allgather, 0, true, 0, data.to_vec());
+        let (max_entry, parts) = self.exchange(OpCode::Allgather, 0, true, 0, data.to_vec())?;
         self.clock.sync_to(max_entry + cost);
-        parts
+        Ok(parts)
     }
 
-    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
-        assert!(root < self.size, "gather root {root} out of range (size {})", self.size);
+    fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
+        self.check_root("gather", root)?;
         let cost = self.model.gather(self.size, data.len() * 8 * self.size);
-        let (max_entry, parts) = self.exchange(OpCode::Gather, 0, true, root, data.to_vec());
+        let (max_entry, parts) = self.exchange(OpCode::Gather, 0, true, root, data.to_vec())?;
         self.clock.sync_to(max_entry + cost);
-        (self.rank == root).then_some(parts)
+        Ok((self.rank == root).then_some(parts))
     }
 
-    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>> {
-        assert!(root < self.size, "reduce root {root} out of range (size {})", self.size);
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> CommResult<Option<Vec<f64>>> {
+        self.check_root("reduce", root)?;
         let cost = self.model.reduce(self.size, data.len() * 8);
         let (max_entry, mut parts) =
-            self.exchange(OpCode::Reduce, op_to_byte(op), true, root, data.to_vec());
+            self.exchange(OpCode::Reduce, op_to_byte(op), true, root, data.to_vec())?;
         self.clock.sync_to(max_entry + cost);
         if self.rank == root {
-            Some(parts.pop().expect("reduce reply"))
+            match parts.pop() {
+                Some(reduced) => Ok(Some(reduced)),
+                None => Err(CommError::Transport {
+                    rank: self.rank,
+                    message: "empty reduce reply on root".to_string(),
+                }),
+            }
         } else {
-            None
+            Ok(None)
         }
     }
 
-    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64> {
-        assert_eq!(
-            data.len() % self.size,
-            0,
-            "rank {}: reduce_scatter_block length {} not divisible by p = {}",
-            self.rank,
-            data.len(),
-            self.size
-        );
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> CommResult<Vec<f64>> {
+        // divisibility is validated at the hub over *every* rank's
+        // length, after the exchange: a local pre-check here would
+        // leave this rank silent while its peers park in read_reply
+        // (same rationale as the thread board's validation-rides-the-
+        // exchange rule)
         let cost = self.model.reduce_scatter(self.size, data.len() * 8);
         let (max_entry, mut parts) =
-            self.exchange(OpCode::ReduceScatter, op_to_byte(op), true, 0, data.to_vec());
+            self.exchange(OpCode::ReduceScatter, op_to_byte(op), true, 0, data.to_vec())?;
         self.clock.sync_to(max_entry + cost);
-        parts.pop().expect("reduce_scatter_block reply")
+        parts.pop().ok_or_else(|| CommError::Transport {
+            rank: self.rank,
+            message: "empty reduce_scatter_block reply".to_string(),
+        })
     }
 
-    fn barrier(&mut self) {
+    fn barrier(&mut self) -> CommResult<()> {
         let cost = self.model.barrier(self.size);
-        let (max_entry, _) = self.exchange(OpCode::Barrier, 0, true, 0, Vec::new());
+        let (max_entry, _) = self.exchange(OpCode::Barrier, 0, true, 0, Vec::new())?;
         self.clock.sync_to(max_entry + cost);
+        Ok(())
+    }
+
+    fn abort(&mut self, message: &str) -> CommError {
+        if let Some(e) = &self.failed {
+            return e.clone();
+        }
+        let err =
+            CommError::RemoteAbort { origin_rank: self.rank, message: message.to_string() };
+        match &mut self.conn {
+            // the leaf's abort frame rides the request channel; the hub
+            // relays it to every peer as an error reply
+            Conn::Leaf { stream } => {
+                let _ = write_abort(stream, &err);
+            }
+            // the hub short-circuits: error replies go straight out
+            Conn::Hub { streams } => send_error_to_all(streams, &err),
+        }
+        self.failed = Some(err.clone());
+        err
     }
 }
 
 // ---------------------------------------------------------------- runners
 
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Option<Instant>,
+) -> io::Result<TcpStream> {
+    match deadline {
+        None => listener.accept().map(|(s, _)| s),
+        Some(d) => {
+            listener.set_nonblocking(true)?;
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        return Ok(s);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if Instant::now() >= d {
+                            return Err(io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "rendezvous accept deadline elapsed",
+                            ));
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+}
+
+fn apply_stream_timeouts(stream: &TcpStream, timeout: Option<Duration>) {
+    stream.set_read_timeout(timeout).ok();
+    stream.set_write_timeout(timeout).ok();
+}
+
+/// Rank 0 rendezvous: accept every leaf, slotting streams by rank id.
+fn hub_rendezvous(
+    listener: &TcpListener,
+    p: usize,
+    timeout: Option<Duration>,
+) -> CommResult<Vec<TcpStream>> {
+    let deadline = timeout.map(|t| Instant::now() + t);
+    let mut slots: Vec<Option<TcpStream>> = (1..p).map(|_| None).collect();
+    for _ in 1..p {
+        let mut s = accept_with_deadline(listener, deadline)
+            .map_err(|e| io_error(0, timeout, "a worker rank to connect", e))?;
+        s.set_nodelay(true).ok();
+        apply_stream_timeouts(&s, timeout);
+        let mut hello = [0u8; 4];
+        s.read_exact(&mut hello)
+            .map_err(|e| io_error(0, timeout, "hello from a connecting worker", e))?;
+        let peer = u32::from_le_bytes(hello) as usize;
+        if !(1..p).contains(&peer) {
+            return Err(CommError::Transport { rank: 0, message: format!("bad hello rank {peer}") });
+        }
+        if slots[peer - 1].replace(s).is_some() {
+            return Err(CommError::Transport {
+                rank: 0,
+                message: format!("duplicate hello from rank {peer}"),
+            });
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+}
+
+/// Leaf rendezvous: connect to the hub and send the hello.
+fn leaf_rendezvous(rank: usize, port: u16, timeout: Option<Duration>) -> CommResult<TcpStream> {
+    let addr = SocketAddr::from(([127, 0, 0, 1], port));
+    let mut stream = match timeout {
+        Some(t) => TcpStream::connect_timeout(&addr, t),
+        None => TcpStream::connect(addr),
+    }
+    .map_err(|e| io_error(rank, timeout, "connecting to the rank 0 rendezvous", e))?;
+    stream.set_nodelay(true).ok();
+    apply_stream_timeouts(&stream, timeout);
+    stream
+        .write_all(&(rank as u32).to_le_bytes())
+        .map_err(|e| io_error(rank, timeout, "sending hello to rank 0", e))?;
+    Ok(stream)
+}
+
+/// Run `f` on a constructed rank handle, converting a genuine panic
+/// into an abort broadcast (so peers wake) before re-raising it.
+fn run_rank<R>(mut ctx: SocketComm, f: impl Fn(&mut SocketComm) -> R) -> (R, Clock) {
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx)));
+    match out {
+        Ok(v) => (v, ctx.clock),
+        Err(payload) => {
+            let rank = ctx.rank;
+            ctx.abort(&format!("rank {rank} panicked: {}", panic_text(&payload)));
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
 /// Spawn `p` rank threads connected over localhost TCP and return the
-/// per-rank results in rank order. Panics in any rank propagate with
-/// their original payload (a hub panic surfaces on rank 0; leaves then
-/// fail their reads and abort too — no deadlock).
+/// per-rank results in rank order. Returns `Err` when the rendezvous
+/// itself fails (bind, connect, hello — with a deadline configured via
+/// [`run_with_clocks_timeout`], a worker that never connects yields
+/// [`CommError::Timeout`]). Failures *inside* collectives surface
+/// through each rank's own closure result; genuine panics broadcast an
+/// abort to the peers and then propagate with their original payload.
 pub fn run<R: Send>(
     p: usize,
     model: CostModel,
     f: impl Fn(&mut SocketComm) -> R + Send + Sync,
-) -> Vec<R> {
-    run_with_clocks(p, model, f).into_iter().map(|(out, _)| out).collect()
+) -> Result<Vec<R>, CommError> {
+    Ok(run_with_clocks(p, model, f)?.into_iter().map(|(out, _)| out).collect())
 }
 
 /// Like [`run`], but also returns each rank's final [`Clock`].
@@ -416,49 +751,59 @@ pub fn run_with_clocks<R: Send>(
     p: usize,
     model: CostModel,
     f: impl Fn(&mut SocketComm) -> R + Send + Sync,
-) -> Vec<(R, Clock)> {
+) -> Result<Vec<(R, Clock)>, CommError> {
+    run_with_clocks_timeout(p, model, None, f)
+}
+
+/// Like [`run_with_clocks`], with an optional deadline applied to the
+/// rendezvous and to every frame read/write of every rank.
+pub fn run_with_clocks_timeout<R: Send>(
+    p: usize,
+    model: CostModel,
+    timeout: Option<Duration>,
+    f: impl Fn(&mut SocketComm) -> R + Send + Sync,
+) -> Result<Vec<(R, Clock)>, CommError> {
     assert!(p >= 1, "need at least one rank");
-    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind rendezvous listener");
-    let port = listener.local_addr().expect("listener addr").port();
-    std::thread::scope(|scope| {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| CommError::Transport {
+        rank: 0,
+        message: format!("binding the rendezvous listener: {e}"),
+    })?;
+    let port = listener
+        .local_addr()
+        .map_err(|e| CommError::Transport {
+            rank: 0,
+            message: format!("reading the rendezvous listener address: {e}"),
+        })?
+        .port();
+    let joined: Vec<Result<(R, Clock), CommError>> = std::thread::scope(|scope| {
         let f = &f;
         let mut handles = Vec::with_capacity(p);
         handles.push(scope.spawn(move || {
-            // rank 0: accept every leaf, slotting streams by rank id
-            let mut slots: Vec<Option<TcpStream>> = (1..p).map(|_| None).collect();
-            for _ in 1..p {
-                let (mut s, _) = listener.accept().expect("accept leaf rank");
-                s.set_nodelay(true).ok();
-                let mut hello = [0u8; 4];
-                read_bytes(&mut s, &mut hello, "connecting leaf");
-                let peer = u32::from_le_bytes(hello) as usize;
-                assert!(peer >= 1 && peer < p, "socket transport: bad hello rank {peer}");
-                assert!(
-                    slots[peer - 1].replace(s).is_none(),
-                    "socket transport: duplicate hello from rank {peer}"
-                );
-            }
-            let streams: Vec<TcpStream> = slots.into_iter().map(|s| s.unwrap()).collect();
-            let mut ctx =
-                SocketComm { rank: 0, size: p, clock: Clock::new(), model, conn: Conn::Hub { streams } };
-            let out = f(&mut ctx);
-            (out, ctx.clock)
+            let streams = hub_rendezvous(&listener, p, timeout)?;
+            let ctx = SocketComm {
+                rank: 0,
+                size: p,
+                clock: Clock::new(),
+                model,
+                conn: Conn::Hub { streams },
+                timeout,
+                failed: None,
+            };
+            Ok(run_rank(ctx, f))
         }));
         for rank in 1..p {
             handles.push(scope.spawn(move || {
-                let mut stream =
-                    TcpStream::connect(("127.0.0.1", port)).expect("connect to rank 0");
-                stream.set_nodelay(true).ok();
-                stream.write_all(&(rank as u32).to_le_bytes()).expect("send hello");
-                let mut ctx = SocketComm {
+                let stream = leaf_rendezvous(rank, port, timeout)?;
+                let ctx = SocketComm {
                     rank,
                     size: p,
                     clock: Clock::new(),
                     model,
                     conn: Conn::Leaf { stream },
+                    timeout,
+                    failed: None,
                 };
-                let out = f(&mut ctx);
-                (out, ctx.clock)
+                Ok(run_rank(ctx, f))
             }));
         }
         handles
@@ -468,7 +813,8 @@ pub fn run_with_clocks<R: Send>(
                 Err(e) => std::panic::resume_unwind(e),
             })
             .collect()
-    })
+    });
+    joined.into_iter().collect()
 }
 
 #[cfg(test)]
@@ -479,8 +825,9 @@ mod tests {
     #[test]
     fn allreduce_sum_exact() {
         let results = run(4, CostModel::free(), |ctx| {
-            ctx.allreduce(&[ctx.rank() as f64, 1.0], Op::Sum)
-        });
+            ctx.allreduce(&[ctx.rank() as f64, 1.0], Op::Sum).unwrap()
+        })
+        .unwrap();
         for r in &results {
             assert_eq!(r, &vec![6.0, 4.0]);
         }
@@ -490,28 +837,152 @@ mod tests {
     fn broadcast_from_nonzero_root() {
         let results = run(4, CostModel::free(), |ctx| {
             let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
-            ctx.broadcast(2, payload)
-        });
+            ctx.broadcast(2, payload).unwrap()
+        })
+        .unwrap();
         for r in &results {
             assert_eq!(r, &vec![7.0, 8.0, 9.0]);
         }
     }
 
     #[test]
-    #[should_panic(expected = "non-root rank 2 passed Some")]
-    fn broadcast_nonroot_some_panics() {
-        run(3, CostModel::free(), |ctx| {
+    fn broadcast_nonroot_some_errors_everywhere() {
+        let results = run(3, CostModel::free(), |ctx| {
             let payload = (ctx.rank() == 2).then(|| vec![1.0]);
             ctx.broadcast(0, payload)
-        });
+        })
+        .unwrap();
+        for r in &results {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("non-root rank 2 passed Some"), "{message}");
+                }
+                other => panic!("expected ContractViolation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn abort_frame_wakes_every_parked_rank() {
+        // rank 2 fails locally and aborts; the hub relays the abort to
+        // ranks parked in read_reply — nobody hangs, everyone observes
+        // the rank-tagged origin
+        let results = run(4, CostModel::free(), |ctx| {
+            if ctx.rank() == 2 {
+                Err(ctx.abort("injected chunk-read failure"))
+            } else {
+                ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+            }
+        })
+        .unwrap();
+        for (rank, r) in results.iter().enumerate() {
+            match r {
+                Err(CommError::RemoteAbort { origin_rank, message }) => {
+                    assert_eq!(*origin_rank, 2, "rank {rank}");
+                    assert!(message.contains("injected chunk-read failure"));
+                }
+                other => panic!("rank {rank}: expected RemoteAbort, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hub_abort_wakes_the_leaves() {
+        let results = run(3, CostModel::free(), |ctx| {
+            if ctx.rank() == 0 {
+                Err(ctx.abort("hub-side failure"))
+            } else {
+                ctx.barrier()
+            }
+        })
+        .unwrap();
+        for r in &results {
+            match r {
+                Err(CommError::RemoteAbort { origin_rank: 0, message }) => {
+                    assert!(message.contains("hub-side failure"));
+                }
+                other => panic!("expected RemoteAbort from rank 0, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn failed_handle_short_circuits_later_collectives() {
+        let results = run(2, CostModel::free(), |ctx| {
+            if ctx.rank() == 1 {
+                let first = ctx.abort("dead");
+                // subsequent collectives must fail fast with the same
+                // error, without touching the wire
+                let second = ctx.allreduce_scalar(1.0, Op::Sum).unwrap_err();
+                let third = ctx.barrier().unwrap_err();
+                (first == second, second == third)
+            } else {
+                let woken = ctx.allreduce_scalar(1.0, Op::Sum);
+                (woken.is_err(), ctx.barrier().is_err())
+            }
+        })
+        .unwrap();
+        for (a, b) in &results {
+            assert!(a && b);
+        }
+    }
+
+    #[test]
+    fn silent_peer_death_yields_timeout_not_hang() {
+        // rank 1 returns without entering the collective; its stream
+        // closes, and the hub must observe the dead peer (EOF ⇒
+        // Transport) or the deadline (⇒ Timeout) — never a hang
+        let results = run_with_clocks_timeout(
+            3,
+            CostModel::free(),
+            Some(Duration::from_millis(300)),
+            |ctx| {
+                if ctx.rank() == 1 {
+                    Ok(())
+                } else {
+                    ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+                }
+            },
+        )
+        .unwrap();
+        assert!(results[1].0.is_ok());
+        for rank in [0usize, 2] {
+            match &results[rank].0 {
+                Err(CommError::Timeout { .. }) | Err(CommError::Transport { .. }) => {}
+                other => panic!("rank {rank}: expected Timeout/Transport, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn comm_error_wire_roundtrip() {
+        let cases = vec![
+            CommError::RemoteAbort { origin_rank: 7, message: "EIO at chunk 3".into() },
+            CommError::Timeout { rank: 2, seconds: 1.5, waiting_for: "reply".into() },
+            CommError::ContractViolation { rank: 0, message: "ragged".into() },
+            CommError::Transport { rank: 4, message: "lost connection".into() },
+        ];
+        // round-trip through a real socket pair
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let mut tx = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let (mut rx, _) = listener.accept().unwrap();
+        for e in &cases {
+            let mut buf = Vec::new();
+            push_comm_error(&mut buf, e);
+            tx.write_all(&buf).unwrap();
+            let got = read_comm_error(&mut rx).unwrap();
+            assert_eq!(&got, e);
+        }
     }
 
     #[test]
     fn allgather_and_gather_preserve_rank_order() {
         let results = run(3, CostModel::free(), |ctx| {
             let mine = vec![ctx.rank() as f64; ctx.rank() + 1];
-            (ctx.allgather(&mine), ctx.gather(1, &mine))
-        });
+            (ctx.allgather(&mine).unwrap(), ctx.gather(1, &mine).unwrap())
+        })
+        .unwrap();
         for (rank, (all, rooted)) in results.iter().enumerate() {
             assert_eq!(all, &vec![vec![0.0], vec![1.0, 1.0], vec![2.0, 2.0, 2.0]]);
             if rank == 1 {
@@ -526,8 +997,12 @@ mod tests {
     fn reduce_and_reduce_scatter() {
         let results = run(4, CostModel::free(), |ctx| {
             let mine = vec![ctx.rank() as f64; 8];
-            (ctx.reduce(3, &mine, Op::Max), ctx.reduce_scatter_block(&mine, Op::Sum))
-        });
+            (
+                ctx.reduce(3, &mine, Op::Max).unwrap(),
+                ctx.reduce_scatter_block(&mine, Op::Sum).unwrap(),
+            )
+        })
+        .unwrap();
         for (rank, (reduced, scattered)) in results.iter().enumerate() {
             assert_eq!(scattered, &vec![6.0, 6.0]);
             if rank == 3 {
@@ -543,11 +1018,12 @@ mod tests {
         let results = run(4, CostModel::free(), |ctx| {
             let mut acc = 0.0;
             for round in 0..10 {
-                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
-                ctx.barrier();
+                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum).unwrap();
+                ctx.barrier().unwrap();
             }
             acc
-        });
+        })
+        .unwrap();
         let expect: f64 = (0..10).map(|r| (0..4).map(|k| (k + r) as f64).sum::<f64>()).sum();
         for r in &results {
             assert_eq!(*r, expect);
@@ -557,10 +1033,11 @@ mod tests {
     #[test]
     fn single_rank_is_a_lone_hub() {
         let results = run(1, CostModel::free(), |ctx| {
-            ctx.barrier();
-            assert_eq!(ctx.gather(0, &[2.5]).unwrap(), vec![vec![2.5]]);
-            ctx.allreduce_scalar(5.0, Op::Sum)
-        });
+            ctx.barrier().unwrap();
+            assert_eq!(ctx.gather(0, &[2.5]).unwrap().unwrap(), vec![vec![2.5]]);
+            ctx.allreduce_scalar(5.0, Op::Sum).unwrap()
+        })
+        .unwrap();
         assert_eq!(results, vec![5.0]);
     }
 
@@ -571,10 +1048,13 @@ mod tests {
         let payload = |rank: usize| {
             vec![1e16 * (rank as f64 - 1.5), 1.0 + rank as f64 * 1e-13, -0.75]
         };
-        let via_threads =
-            thread::run(4, CostModel::free(), |ctx| ctx.allreduce(&payload(ctx.rank()), Op::Sum));
-        let via_sockets =
-            run(4, CostModel::free(), |ctx| ctx.allreduce(&payload(ctx.rank()), Op::Sum));
+        let via_threads = thread::run(4, CostModel::free(), |ctx| {
+            ctx.allreduce(&payload(ctx.rank()), Op::Sum).unwrap()
+        });
+        let via_sockets = run(4, CostModel::free(), |ctx| {
+            ctx.allreduce(&payload(ctx.rank()), Op::Sum).unwrap()
+        })
+        .unwrap();
         assert_eq!(via_threads, via_sockets);
     }
 
@@ -582,9 +1062,10 @@ mod tests {
     fn clocks_sync_across_the_wire() {
         let results = run_with_clocks(2, CostModel::shared_memory(), |ctx| {
             ctx.charge(Category::Compute, if ctx.rank() == 0 { 1.0 } else { 3.0 });
-            ctx.allreduce_scalar(1.0, Op::Sum);
+            ctx.allreduce_scalar(1.0, Op::Sum).unwrap();
             ctx.clock().now()
-        });
+        })
+        .unwrap();
         let (t0, t1) = (results[0].0, results[1].0);
         assert!(t0 >= 3.0 && (t0 - t1).abs() < 1e-12, "{t0} vs {t1}");
         assert!(results[0].1.in_category(Category::Comm) >= 2.0);

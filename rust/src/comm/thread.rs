@@ -4,30 +4,132 @@
 //! [`run`] spawns `p` rank threads executing the same closure (the MPI
 //! model of the paper, Sec. III.A). Ranks synchronize through
 //! [`RankCtx`] collectives backed by a shared contribution board: each
-//! rank posts its payload, waits at a barrier, combines all
-//! contributions *in rank order* through the shared
+//! rank posts its payload, waits at a poisonable rendezvous, combines
+//! all contributions *in rank order* through the shared
 //! [`fold`](super::communicator::fold) kernels (bitwise-deterministic
-//! results), then passes a second barrier before slots are reused.
+//! results), then passes a second rendezvous before slots are reused.
 //!
-//! Contract validation rides the board: `broadcast` exchanges a
-//! provided-payload flag with the data, so a rank that breaks the
-//! root-provides contract makes *every* rank panic with a rank-tagged
-//! message — a local assert would leave the compliant ranks parked
-//! forever at the barrier.
+//! Failure semantics ride the board:
+//!
+//! * [`Communicator::abort`] **poisons** the rendezvous — every rank
+//!   parked at (or later entering) any collective wakes immediately
+//!   with [`CommError::RemoteAbort`] carrying the origin rank, instead
+//!   of waiting forever for a contribution that will never come.
+//! * Contract validation happens *after* the exchange (`broadcast`'s
+//!   provided-payload flag, `reduce_scatter_block`'s length check), so
+//!   a rank that breaks the contract makes *every* rank return the
+//!   same [`CommError::ContractViolation`] — a local assert would
+//!   leave the compliant ranks parked at the rendezvous.
+//! * An optional deadline ([`run_with_clocks_timeout`]) turns a peer
+//!   that never arrives into [`CommError::Timeout`] rather than an
+//!   indefinite block.
+//! * A genuine panic in rank code poisons the board before propagating
+//!   with its original payload, so sibling ranks fail fast instead of
+//!   deadlocking the join.
 
-use std::sync::{Barrier, Mutex};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::clock::{Category, Clock};
 use super::communicator::{fold, Communicator, Op};
 use super::costmodel::CostModel;
+use super::error::{CommError, CommResult};
+use crate::util::panic::panic_text;
+
+struct BoardState {
+    /// ranks arrived at the current rendezvous generation
+    arrived: usize,
+    /// bumped when a full rendezvous completes
+    generation: u64,
+    /// first abort wins; once set, every wait returns it immediately
+    poison: Option<CommError>,
+}
+
+/// Poisonable all-rank rendezvous (a `std::sync::Barrier` cannot be
+/// woken early, which is exactly the hang this transport must avoid).
+struct Board {
+    state: Mutex<BoardState>,
+    cv: Condvar,
+    size: usize,
+}
+
+impl Board {
+    fn new(size: usize) -> Board {
+        Board {
+            state: Mutex::new(BoardState { arrived: 0, generation: 0, poison: None }),
+            cv: Condvar::new(),
+            size,
+        }
+    }
+
+    /// Rendezvous of all ranks. Fails fast if the board is (or becomes)
+    /// poisoned, or when `timeout` elapses before every peer arrives.
+    fn wait(&self, rank: usize, timeout: Option<Duration>) -> CommResult<()> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut s = self.state.lock().unwrap();
+        if let Some(e) = &s.poison {
+            return Err(e.clone());
+        }
+        s.arrived += 1;
+        if s.arrived == self.size {
+            s.arrived = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = s.generation;
+        loop {
+            s = match deadline {
+                None => self.cv.wait(s).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        // withdraw this rank's arrival: a late peer must
+                        // not be able to complete the rendezvous against
+                        // a rank that has already given up on it (the
+                        // generation is unchanged under this lock, so
+                        // the increment is still ours to take back)
+                        s.arrived -= 1;
+                        return Err(self.timeout_error(rank, timeout));
+                    }
+                    self.cv.wait_timeout(s, d - now).unwrap().0
+                }
+            };
+            if let Some(e) = &s.poison {
+                return Err(e.clone());
+            }
+            if s.generation != gen {
+                return Ok(());
+            }
+        }
+    }
+
+    fn timeout_error(&self, rank: usize, timeout: Option<Duration>) -> CommError {
+        CommError::Timeout {
+            rank,
+            seconds: timeout.map_or(0.0, |t| t.as_secs_f64()),
+            waiting_for: format!("{} peer rank(s) at the collective rendezvous", self.size - 1),
+        }
+    }
+
+    /// Poison the board (first abort wins) and wake every waiter.
+    /// Returns the canonical group abort.
+    fn poison(&self, err: CommError) -> CommError {
+        let mut s = self.state.lock().unwrap();
+        let out = s.poison.get_or_insert(err).clone();
+        self.cv.notify_all();
+        out
+    }
+}
 
 struct Shared {
     /// per-rank contribution slots for the active collective
     slots: Vec<Mutex<Vec<f64>>>,
     /// per-rank virtual-time postings for clock synchronization
     times: Vec<Mutex<f64>>,
-    barrier: Barrier,
+    board: Board,
     model: CostModel,
+    timeout: Option<Duration>,
 }
 
 /// Per-rank handle of the shared-board thread transport.
@@ -36,21 +138,33 @@ pub struct RankCtx<'a> {
     size: usize,
     shared: &'a Shared,
     clock: Clock,
+    /// first failure observed on this handle; subsequent collectives
+    /// fail fast with it instead of touching a board the rank has
+    /// already fallen out of lockstep with
+    failed: Option<CommError>,
 }
 
 impl<'a> RankCtx<'a> {
-    /// Post this rank's payload + clock, wait for all, then combine
-    /// every rank's payload in rank order with `combine`. Advances
-    /// clocks to max-entry + modeled cost.
+    /// Post this rank's payload + clock, rendezvous with all, then
+    /// combine every rank's payload in rank order with `combine`.
+    /// Advances clocks to max-entry + modeled cost. Fails with the
+    /// group abort if the board is poisoned at either rendezvous, and
+    /// fail-fast once this handle has observed any failure.
     fn collective<T>(
         &mut self,
         payload: Vec<f64>,
         modeled_cost: f64,
-        combine: impl FnOnce(&[Vec<f64>]) -> T,
-    ) -> T {
+        combine: impl FnOnce(&[Vec<f64>]) -> CommResult<T>,
+    ) -> CommResult<T> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
         *self.shared.slots[self.rank].lock().unwrap() = payload;
         *self.shared.times[self.rank].lock().unwrap() = self.clock.now();
-        self.shared.barrier.wait();
+        if let Err(e) = self.shared.board.wait(self.rank, self.shared.timeout) {
+            self.failed = Some(e.clone());
+            return Err(e);
+        }
 
         // every rank reads all contributions; rank-ordered combine
         let contributions: Vec<Vec<f64>> = (0..self.size)
@@ -61,10 +175,21 @@ impl<'a> RankCtx<'a> {
             .fold(0.0, f64::max);
         let out = combine(&contributions);
 
-        // second barrier: nobody reuses slots until everyone has read
-        self.shared.barrier.wait();
+        // second rendezvous: nobody reuses slots until everyone has
+        // read. A contract violation from `combine` is deterministic —
+        // every rank derives the same error from the same board state —
+        // so the group stays in lockstep either way; the combine error
+        // takes display precedence over a racing poison.
+        let wait2 = self.shared.board.wait(self.rank, self.shared.timeout);
         self.clock.sync_to(max_entry + modeled_cost);
-        out
+        let result = match (out, wait2) {
+            (Err(e), _) | (Ok(_), Err(e)) => Err(e),
+            (Ok(v), Ok(())) => Ok(v),
+        };
+        if let Err(e) = &result {
+            self.failed = Some(e.clone());
+        }
+        result
     }
 }
 
@@ -85,19 +210,26 @@ impl Communicator for RankCtx<'_> {
         self.clock.add(category, seconds);
     }
 
-    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) {
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()> {
         let bytes = data.len() * 8;
         let cost = self.shared.model.allreduce(self.size, bytes);
+        let rank = self.rank;
         let payload = data.to_vec(); // the board keeps its own copy
-        self.collective(payload, cost, |parts| fold::reduce_into(parts, data, op));
+        self.collective(payload, cost, |parts| {
+            if let Some(e) = fold::length_violation("allreduce", rank, parts) {
+                return Err(e);
+            }
+            fold::reduce_into(parts, data, op);
+            Ok(())
+        })
     }
 
-    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> Vec<f64> {
-        assert!(root < self.size, "broadcast root {root} out of range (size {})", self.size);
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>> {
+        self.check_root("broadcast", root)?;
         let rank = self.rank;
         // A provided-payload flag travels with the data so contract
-        // violations surface as a panic on every rank after the
-        // exchange, not as a deadlock at the barrier.
+        // violations surface as the same typed error on every rank
+        // after the exchange, not as a deadlock at the rendezvous.
         let provided = data.is_some();
         let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
         let mut payload = vec![if provided { 1.0 } else { 0.0 }];
@@ -106,88 +238,91 @@ impl Communicator for RankCtx<'_> {
         }
         let cost = self.shared.model.broadcast(self.size, data_bytes);
         self.collective(payload, cost, |parts| {
-            for (i, part) in parts.iter().enumerate() {
-                let flagged = part.first() == Some(&1.0);
-                if i == root && !flagged {
-                    panic!(
-                        "rank {rank}: broadcast(root={root}) — root rank {root} provided no payload"
-                    );
-                }
-                if i != root && flagged {
-                    panic!(
-                        "rank {rank}: broadcast(root={root}) — non-root rank {i} passed Some(..); \
-                         only the root provides the payload"
-                    );
-                }
+            let flags: Vec<bool> = parts.iter().map(|p| p.first() == Some(&1.0)).collect();
+            if let Some(e) = fold::broadcast_violation(root, &flags, rank) {
+                return Err(e);
             }
-            parts[root][1..].to_vec()
+            Ok(parts[root][1..].to_vec())
         })
     }
 
-    fn allgather(&mut self, data: &[f64]) -> Vec<Vec<f64>> {
+    fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
         let bytes = data.len() * 8 * self.size;
         let cost = self.shared.model.allgather(self.size, bytes);
-        self.collective(data.to_vec(), cost, |parts| parts.to_vec())
+        self.collective(data.to_vec(), cost, |parts| Ok(parts.to_vec()))
     }
 
-    fn gather(&mut self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
-        assert!(root < self.size, "gather root {root} out of range (size {})", self.size);
+    fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
+        self.check_root("gather", root)?;
         let bytes = data.len() * 8 * self.size;
         let cost = self.shared.model.gather(self.size, bytes);
         let rank = self.rank;
-        self.collective(data.to_vec(), cost, |parts| (rank == root).then(|| parts.to_vec()))
+        self.collective(data.to_vec(), cost, |parts| {
+            Ok((rank == root).then(|| parts.to_vec()))
+        })
     }
 
-    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> Option<Vec<f64>> {
-        assert!(root < self.size, "reduce root {root} out of range (size {})", self.size);
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> CommResult<Option<Vec<f64>>> {
+        self.check_root("reduce", root)?;
         let bytes = data.len() * 8;
         let cost = self.shared.model.reduce(self.size, bytes);
         let rank = self.rank;
         self.collective(data.to_vec(), cost, |parts| {
-            (rank == root).then(|| fold::reduce_parts(parts, op))
+            if let Some(e) = fold::length_violation("reduce", rank, parts) {
+                return Err(e);
+            }
+            Ok((rank == root).then(|| fold::reduce_parts(parts, op)))
         })
     }
 
-    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> Vec<f64> {
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> CommResult<Vec<f64>> {
         let bytes = data.len() * 8;
         let cost = self.shared.model.reduce_scatter(self.size, bytes);
         let (rank, size) = (self.rank, self.size);
         // length validation happens after the exchange, over every
         // rank's part: a rank with a ragged (or indivisible) length
-        // must panic the whole group, not park the compliant ranks
-        // forever at the board barrier (same rationale as broadcast's
-        // provided-payload flag)
+        // must fail the whole group with the same typed error, not park
+        // the compliant ranks forever at the rendezvous (same rationale
+        // as broadcast's provided-payload flag)
         self.collective(data.to_vec(), cost, |parts| {
-            for (i, part) in parts.iter().enumerate() {
-                assert_eq!(
-                    part.len() % size,
-                    0,
-                    "rank {rank}: reduce_scatter_block — rank {i}'s length {} not divisible by p = {size}",
-                    part.len()
-                );
+            if let Some(e) = fold::divisibility_violation(parts, size, rank) {
+                return Err(e);
+            }
+            if let Some(e) = fold::length_violation("reduce_scatter_block", rank, parts) {
+                return Err(e);
             }
             let reduced = fold::reduce_parts(parts, op);
-            fold::block(&reduced, rank, size)
+            Ok(fold::block(&reduced, rank, size))
         })
     }
 
-    fn barrier(&mut self) {
+    fn barrier(&mut self) -> CommResult<()> {
         let cost = self.shared.model.barrier(self.size);
-        self.collective(Vec::new(), cost, |_| ());
+        self.collective(Vec::new(), cost, |_| Ok(()))
+    }
+
+    fn abort(&mut self, message: &str) -> CommError {
+        self.shared.board.poison(CommError::RemoteAbort {
+            origin_rank: self.rank,
+            message: message.to_string(),
+        })
     }
 }
 
-fn new_shared(p: usize, model: CostModel) -> Shared {
+fn new_shared(p: usize, model: CostModel, timeout: Option<Duration>) -> Shared {
     Shared {
         slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
         times: (0..p).map(|_| Mutex::new(0.0)).collect(),
-        barrier: Barrier::new(p),
+        board: Board::new(p),
         model,
+        timeout,
     }
 }
 
 /// Spawn `p` rank threads running `f` and return the per-rank results in
-/// rank order. Panics in any rank propagate with their original payload.
+/// rank order. Panics in any rank poison the board (siblings wake with
+/// [`CommError::RemoteAbort`]) and then propagate with their original
+/// payload.
 pub fn run<R: Send>(
     p: usize,
     model: CostModel,
@@ -202,17 +337,40 @@ pub fn run_with_clocks<R: Send>(
     model: CostModel,
     f: impl Fn(&mut RankCtx) -> R + Send + Sync,
 ) -> Vec<(R, Clock)> {
+    run_with_clocks_timeout(p, model, None, f)
+}
+
+/// Like [`run_with_clocks`], with an optional per-rendezvous deadline:
+/// a peer that never enters a collective yields [`CommError::Timeout`]
+/// on the waiting ranks instead of blocking indefinitely.
+pub fn run_with_clocks_timeout<R: Send>(
+    p: usize,
+    model: CostModel,
+    timeout: Option<Duration>,
+    f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+) -> Vec<(R, Clock)> {
     assert!(p >= 1, "need at least one rank");
-    let shared = new_shared(p, model);
+    let shared = new_shared(p, model, timeout);
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..p)
             .map(|rank| {
                 let shared = &shared;
                 let f = &f;
                 scope.spawn(move || {
-                    let mut ctx = RankCtx { rank, size: p, shared, clock: Clock::new() };
-                    let out = f(&mut ctx);
-                    (out, ctx.clock)
+                    let mut ctx =
+                        RankCtx { rank, size: p, shared, clock: Clock::new(), failed: None };
+                    // a genuine panic must poison the board before
+                    // propagating: siblings parked at a collective would
+                    // otherwise never be joinable
+                    let out =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx)));
+                    match out {
+                        Ok(v) => (v, ctx.clock),
+                        Err(payload) => {
+                            ctx.abort(&format!("rank {rank} panicked: {}", panic_text(&payload)));
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
                 })
             })
             .collect();
@@ -234,7 +392,7 @@ mod tests {
     fn allreduce_sum_exact() {
         let results = run(4, CostModel::free(), |ctx| {
             let mine = vec![ctx.rank() as f64, 1.0];
-            ctx.allreduce(&mine, Op::Sum)
+            ctx.allreduce(&mine, Op::Sum).unwrap()
         });
         for r in &results {
             assert_eq!(r, &vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
@@ -245,7 +403,10 @@ mod tests {
     fn allreduce_max_min() {
         let results = run(3, CostModel::free(), |ctx| {
             let x = (ctx.rank() as f64 - 1.0) * 2.5;
-            (ctx.allreduce_scalar(x, Op::Max), ctx.allreduce_scalar(x, Op::Min))
+            (
+                ctx.allreduce_scalar(x, Op::Max).unwrap(),
+                ctx.allreduce_scalar(x, Op::Min).unwrap(),
+            )
         });
         for (mx, mn) in &results {
             assert_eq!(*mx, 2.5);
@@ -257,9 +418,9 @@ mod tests {
     fn allreduce_inplace_matches_allocating() {
         let results = run(4, CostModel::free(), |ctx| {
             let mine: Vec<f64> = (0..6).map(|j| (ctx.rank() * 10 + j) as f64).collect();
-            let alloc = ctx.allreduce(&mine, Op::Sum);
+            let alloc = ctx.allreduce(&mine, Op::Sum).unwrap();
             let mut inplace = mine;
-            ctx.allreduce_inplace(&mut inplace, Op::Sum);
+            ctx.allreduce_inplace(&mut inplace, Op::Sum).unwrap();
             (alloc, inplace)
         });
         for (alloc, inplace) in &results {
@@ -271,7 +432,7 @@ mod tests {
     fn broadcast_from_nonzero_root() {
         let results = run(4, CostModel::free(), |ctx| {
             let payload = (ctx.rank() == 2).then(|| vec![7.0, 8.0, 9.0]);
-            ctx.broadcast(2, payload)
+            ctx.broadcast(2, payload).unwrap()
         });
         for r in &results {
             assert_eq!(r, &vec![7.0, 8.0, 9.0]);
@@ -279,28 +440,41 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "non-root rank 1 passed Some")]
-    fn broadcast_nonroot_some_panics_everywhere() {
-        // the ISSUE-2 bug: non-root Some + root None used to hang the
-        // group; now every rank panics with a rank-tagged message
-        run(3, CostModel::free(), |ctx| {
+    fn broadcast_nonroot_some_errors_everywhere() {
+        // the ISSUE-2 bug lineage: non-root Some + root None used to
+        // hang the group, then panicked; now every rank returns the
+        // same typed ContractViolation
+        let results = run(3, CostModel::free(), |ctx| {
             let payload = (ctx.rank() == 1).then(|| vec![1.0]);
             ctx.broadcast(0, payload)
         });
+        for r in &results {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("non-root rank 1 passed Some"), "{message}");
+                }
+                other => panic!("expected ContractViolation, got {other:?}"),
+            }
+        }
     }
 
     #[test]
-    #[should_panic(expected = "root rank 0 provided no payload")]
-    fn broadcast_root_none_panics_everywhere() {
-        run(3, CostModel::free(), |ctx| {
-            let _ = ctx.rank();
-            ctx.broadcast(0, None)
-        });
+    fn broadcast_root_none_errors_everywhere() {
+        let results = run(3, CostModel::free(), |ctx| ctx.broadcast(0, None));
+        for r in &results {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("root rank 0 provided no payload"), "{message}");
+                }
+                other => panic!("expected ContractViolation, got {other:?}"),
+            }
+        }
     }
 
     #[test]
     fn allgather_preserves_rank_order() {
-        let results = run(3, CostModel::free(), |ctx| ctx.allgather(&[ctx.rank() as f64]));
+        let results =
+            run(3, CostModel::free(), |ctx| ctx.allgather(&[ctx.rank() as f64]).unwrap());
         for r in &results {
             assert_eq!(r, &vec![vec![0.0], vec![1.0], vec![2.0]]);
         }
@@ -310,7 +484,7 @@ mod tests {
     fn gather_lands_on_root_only() {
         let results = run(4, CostModel::free(), |ctx| {
             let mine = vec![ctx.rank() as f64; ctx.rank() + 1]; // ragged parts
-            ctx.gather(2, &mine)
+            ctx.gather(2, &mine).unwrap()
         });
         for (rank, r) in results.iter().enumerate() {
             if rank == 2 {
@@ -328,7 +502,7 @@ mod tests {
     #[test]
     fn reduce_lands_on_root_only() {
         let results = run(4, CostModel::free(), |ctx| {
-            ctx.reduce(1, &[ctx.rank() as f64, 1.0], Op::Sum)
+            ctx.reduce(1, &[ctx.rank() as f64, 1.0], Op::Sum).unwrap()
         });
         for (rank, r) in results.iter().enumerate() {
             if rank == 1 {
@@ -344,7 +518,7 @@ mod tests {
         let results = run(3, CostModel::free(), |ctx| {
             // rank r contributes [r, r, r, r, r, r]
             let mine = vec![ctx.rank() as f64; 6];
-            ctx.reduce_scatter_block(&mine, Op::Sum)
+            ctx.reduce_scatter_block(&mine, Op::Sum).unwrap()
         });
         // reduction is [3, 3, 3, 3, 3, 3]; each rank gets its 2-block
         for r in &results {
@@ -353,14 +527,168 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not divisible")]
-    fn reduce_scatter_ragged_length_panics_without_deadlock() {
-        // rank 0 misuses the collective; every rank must panic (the
-        // validation rides the exchange) instead of rank 1 hanging
-        run(2, CostModel::free(), |ctx| {
+    fn reduce_scatter_ragged_length_errors_without_deadlock() {
+        // rank 0 misuses the collective; every rank must observe the
+        // violation (the validation rides the exchange) instead of
+        // rank 1 hanging
+        let results = run(2, CostModel::free(), |ctx| {
             let mine = vec![1.0; if ctx.rank() == 0 { 3 } else { 4 }];
             ctx.reduce_scatter_block(&mine, Op::Sum)
         });
+        for r in &results {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("not divisible"), "{message}");
+                }
+                other => panic!("expected ContractViolation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn abort_wakes_ranks_parked_at_a_collective() {
+        // rank 1 fails locally and aborts; ranks 0 and 2 are parked at
+        // an allreduce rendezvous and must wake with the rank-tagged
+        // RemoteAbort — this is the hang the redesign exists to fix
+        let results = run(3, CostModel::free(), |ctx| {
+            if ctx.rank() == 1 {
+                Err(ctx.abort("injected disk failure"))
+            } else {
+                // the group is poisoned: this must come back Err
+                ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+            }
+        });
+        for r in &results {
+            match r {
+                Err(CommError::RemoteAbort { origin_rank, message }) => {
+                    assert_eq!(*origin_rank, 1);
+                    assert!(message.contains("injected disk failure"));
+                }
+                other => panic!("expected RemoteAbort, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn abort_is_idempotent_and_first_wins() {
+        let results = run(2, CostModel::free(), |ctx| {
+            if ctx.rank() == 0 {
+                let first = ctx.abort("first failure");
+                let second = ctx.abort("second failure");
+                (first, second)
+            } else {
+                // rank 1 parks until the poison lands, then also aborts:
+                // it must receive rank 0's original error back
+                let woken = ctx.barrier().unwrap_err();
+                let follow_up = ctx.abort("rank 1 follow-up");
+                (woken, follow_up)
+            }
+        });
+        for (a, b) in &results {
+            assert_eq!(a, b, "abort must be idempotent");
+            match a {
+                CommError::RemoteAbort { origin_rank, message } => {
+                    assert_eq!(*origin_rank, 0);
+                    assert!(message.contains("first failure"));
+                }
+                other => panic!("expected RemoteAbort, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_board_fails_every_subsequent_collective() {
+        let results = run(2, CostModel::free(), |ctx| {
+            if ctx.rank() == 0 {
+                ctx.abort("dead");
+            }
+            let a = ctx.allreduce_scalar(1.0, Op::Sum);
+            let b = ctx.barrier();
+            (a.is_err(), b.is_err())
+        });
+        for (a, b) in &results {
+            assert!(a && b);
+        }
+    }
+
+    #[test]
+    fn deadline_turns_a_missing_peer_into_timeout() {
+        // rank 1 returns without ever entering the collective; rank 0
+        // must time out rather than block forever — and once timed out,
+        // the handle is failed: later collectives fail fast with the
+        // same error instead of touching the desynced board
+        let results =
+            run_with_clocks_timeout(2, CostModel::free(), Some(Duration::from_millis(150)), |ctx| {
+                if ctx.rank() == 0 {
+                    let first = ctx.allreduce_scalar(1.0, Op::Sum).unwrap_err();
+                    let second = ctx.barrier().unwrap_err();
+                    assert_eq!(first, second, "failed handle must fail fast");
+                    Err(first)
+                } else {
+                    Ok(())
+                }
+            });
+        match &results[0].0 {
+            Err(CommError::Timeout { rank, seconds, .. }) => {
+                assert_eq!(*rank, 0);
+                assert!(*seconds > 0.0);
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert!(results[1].0.is_ok());
+    }
+
+    #[test]
+    fn late_peer_cannot_complete_a_rendezvous_the_waiter_abandoned() {
+        // rank 0 times out and *withdraws* its arrival; rank 1 enters
+        // the collective only after that (gated on an explicit signal,
+        // not wall-clock) and must not be able to complete the
+        // rendezvous against the stale arrival (silently combining old
+        // slot data) — it parks and times out too
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (tx, rx) = (std::sync::Mutex::new(tx), std::sync::Mutex::new(rx));
+        let results = run_with_clocks_timeout(
+            2,
+            CostModel::free(),
+            Some(Duration::from_millis(120)),
+            |ctx| {
+                if ctx.rank() == 0 {
+                    let out = ctx.allreduce_scalar(1.0, Op::Sum);
+                    tx.lock().unwrap().send(()).ok();
+                    out
+                } else {
+                    let _ = rx.lock().unwrap().recv();
+                    ctx.allreduce_scalar(1.0, Op::Sum)
+                }
+            },
+        );
+        for (r, _) in &results {
+            assert!(matches!(r, Err(CommError::Timeout { .. })), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn rank_panic_poisons_siblings_then_propagates() {
+        // rank 1 panics; rank 0 must wake from the collective with a
+        // RemoteAbort (observed via a side channel, since run() itself
+        // re-raises the original panic afterwards)
+        let observed = std::sync::Mutex::new(None);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(2, CostModel::free(), |ctx| {
+                if ctx.rank() == 1 {
+                    panic!("boom in rank code");
+                }
+                let got = ctx.allreduce_scalar(1.0, Op::Sum);
+                *observed.lock().unwrap() = Some(got);
+            })
+        }));
+        assert!(caught.is_err(), "the original panic must still propagate");
+        match observed.into_inner().unwrap() {
+            Some(Err(CommError::RemoteAbort { origin_rank: 1, message })) => {
+                assert!(message.contains("boom in rank code"));
+            }
+            other => panic!("sibling should observe the panic as RemoteAbort, got {other:?}"),
+        }
     }
 
     #[test]
@@ -369,8 +697,8 @@ mod tests {
         let results = run(4, CostModel::free(), |ctx| {
             let mut acc = 0.0;
             for round in 0..20 {
-                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum);
-                ctx.barrier();
+                acc += ctx.allreduce_scalar((ctx.rank() + round) as f64, Op::Sum).unwrap();
+                ctx.barrier().unwrap();
             }
             acc
         });
@@ -385,7 +713,9 @@ mod tests {
         // results must be identical across repeated runs (rank-ordered fold)
         let vals = [1e16, 1.0, -1e16, 3.0];
         let run_once = || {
-            run(4, CostModel::free(), |ctx| ctx.allreduce_scalar(vals[ctx.rank()], Op::Sum))[0]
+            run(4, CostModel::free(), |ctx| {
+                ctx.allreduce_scalar(vals[ctx.rank()], Op::Sum).unwrap()
+            })[0]
         };
         let first = run_once();
         for _ in 0..5 {
@@ -401,7 +731,7 @@ mod tests {
             } else {
                 ctx.charge(Category::Compute, 3.0);
             }
-            ctx.allreduce_scalar(1.0, Op::Sum);
+            ctx.allreduce_scalar(1.0, Op::Sum).unwrap();
             ctx.clock().now()
         });
         // both ranks end at >= 3.0 (max entry) and equal virtual time
@@ -415,11 +745,24 @@ mod tests {
     #[test]
     fn single_rank_works() {
         let results = run(1, CostModel::shared_memory(), |ctx| {
-            ctx.barrier();
-            assert_eq!(ctx.gather(0, &[3.0]).unwrap(), vec![vec![3.0]]);
-            ctx.allreduce_scalar(5.0, Op::Sum)
+            ctx.barrier().unwrap();
+            assert_eq!(ctx.gather(0, &[3.0]).unwrap().unwrap(), vec![vec![3.0]]);
+            ctx.allreduce_scalar(5.0, Op::Sum).unwrap()
         });
         assert_eq!(results, vec![5.0]);
+    }
+
+    #[test]
+    fn root_out_of_range_is_a_local_contract_error() {
+        let results = run(2, CostModel::free(), |ctx| {
+            // no exchange happens: the error is local and identical on
+            // every rank, so nobody parks
+            let _ = ctx.rank();
+            ctx.broadcast(7, None)
+        });
+        for r in &results {
+            assert!(matches!(r, Err(CommError::ContractViolation { .. })), "{r:?}");
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::comm::{CostModel, DiskModel};
 use crate::io::reader::{
-    BlockReader, InMemoryBlockReader, SnapdBlockReader, SyntheticBlockReader,
+    BlockReader, FaultyBlockReader, InMemoryBlockReader, SnapdBlockReader, SyntheticBlockReader,
 };
 use crate::io::snapd::SnapReader;
 use crate::io::RowRange;
@@ -32,6 +32,19 @@ pub enum DataSource {
     /// dimension bounded by patience, not RAM (ingest benches, scale
     /// studies).
     Synthetic(SynthSpec),
+    /// Fault-injection wrapper for the error-propagation suites:
+    /// delegates to `inner`, but rank `fault.rank`'s reader fails with
+    /// a simulated I/O error once `fault.after_chunks` chunks have been
+    /// yielded (cumulative across passes — see
+    /// [`crate::io::FaultyBlockReader`]).
+    Faulty { inner: Box<DataSource>, fault: FaultSpec },
+}
+
+/// Which rank fails, and after how many yielded chunks.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub rank: usize,
+    pub after_chunks: usize,
 }
 
 impl DataSource {
@@ -65,13 +78,17 @@ impl DataSource {
                 Ok((q.rows() / ns_expected, ns_expected, q.cols()))
             }
             DataSource::Synthetic(spec) => Ok((spec.nx, spec.ns, spec.nt)),
+            DataSource::Faulty { inner, .. } => inner.dims(ns_expected),
         }
     }
 
-    /// Open a streaming reader over one rank's spatial `range`,
-    /// yielding var-major chunks of at most `chunk_rows` local rows.
+    /// Open a streaming reader over `rank`'s spatial `range`, yielding
+    /// var-major chunks of at most `chunk_rows` local rows. The rank id
+    /// only selects the failing reader of a [`DataSource::Faulty`]
+    /// source — the data a reader yields depends on `range` alone.
     pub fn block_reader(
         &self,
+        rank: usize,
         range: RowRange,
         nx: usize,
         ns: usize,
@@ -90,6 +107,14 @@ impl DataSource {
             )?)),
             DataSource::Synthetic(spec) => {
                 Ok(Box::new(SyntheticBlockReader::new(spec, range, chunk_rows)?))
+            }
+            DataSource::Faulty { inner, fault } => {
+                let reader = inner.block_reader(rank, range, nx, ns, chunk_rows)?;
+                Ok(if rank == fault.rank {
+                    Box::new(FaultyBlockReader::new(reader, fault.after_chunks))
+                } else {
+                    reader
+                })
             }
         }
     }
@@ -133,6 +158,12 @@ pub struct DOpInfConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// probes to postprocess: (variable index, global spatial row)
     pub probes: Vec<(usize, usize)>,
+    /// communication deadline in seconds (`--comm-timeout`): bounds the
+    /// socket rendezvous and every collective wait, so a worker that
+    /// never connects or a peer that dies silently yields
+    /// [`crate::comm::CommError::Timeout`] instead of an indefinite
+    /// block. `None` (the default) waits forever, as MPI does.
+    pub comm_timeout: Option<f64>,
 }
 
 impl DOpInfConfig {
@@ -160,6 +191,7 @@ impl DOpInfConfig {
             chunk_rows,
             artifacts_dir: None,
             probes: Vec::new(),
+            comm_timeout: None,
         }
     }
 }
@@ -196,8 +228,8 @@ mod tests {
             let ranges = distribute_tutorial(nx, 3);
             let mut var0 = Matrix::zeros(0, 5);
             let mut var1 = Matrix::zeros(0, 5);
-            for range in ranges {
-                let mut reader = src.block_reader(range, nx, 2, chunk_rows).unwrap();
+            for (rank, range) in ranges.into_iter().enumerate() {
+                let mut reader = src.block_reader(rank, range, nx, 2, chunk_rows).unwrap();
                 let block = read_all_chunks(reader.as_mut()).unwrap();
                 assert_eq!(block.rows(), 2 * range.len());
                 var0 = var0.vstack(&block.slice_rows(0, range.len()));
@@ -215,9 +247,24 @@ mod tests {
         assert_eq!(src.dims(2).unwrap(), (21, 2, 6));
         let full = generate(&spec, 0);
         let range = RowRange { start: 0, end: 21 };
-        let mut reader = src.block_reader(range, 21, 2, 4).unwrap();
+        let mut reader = src.block_reader(0, range, 21, 2, 4).unwrap();
         let block = read_all_chunks(reader.as_mut()).unwrap();
         assert_eq!(block.data(), full.data());
+    }
+
+    #[test]
+    fn faulty_source_fails_only_the_configured_rank() {
+        let faulty = DataSource::Faulty {
+            inner: Box::new(mem_source(12, 2, 5)),
+            fault: FaultSpec { rank: 1, after_chunks: 0 },
+        };
+        assert_eq!(faulty.dims(2).unwrap(), (12, 2, 5));
+        let ranges = distribute_tutorial(12, 2);
+        let mut ok = faulty.block_reader(0, ranges[0], 12, 2, 100).unwrap();
+        assert!(read_all_chunks(ok.as_mut()).is_ok());
+        let mut bad = faulty.block_reader(1, ranges[1], 12, 2, 100).unwrap();
+        let e = read_all_chunks(bad.as_mut()).unwrap_err();
+        assert!(format!("{e}").contains("injected read fault"), "{e}");
     }
 
     #[test]
@@ -235,6 +282,7 @@ mod tests {
         assert_eq!(cfg.transport, Transport::Threads);
         assert!(cfg.artifacts_dir.is_none());
         assert!(cfg.probes.is_empty());
+        assert!(cfg.comm_timeout.is_none());
         assert!(cfg.disk.bandwidth > 0.0);
         // chunk_rows defaults to None unless DOPINF_TEST_CHUNK_ROWS is
         // set (the chunked CI job) — either way it must be usable

@@ -2,7 +2,7 @@
 //! **pass-structured streaming data plane**: a rank never materializes
 //! its full `(n_s·n_x/p, n_t)` block.
 //!
-//! Every rank executes [`rank_pipeline`] over its row partition — the
+//! Every rank executes `rank_pipeline` over its row partition — the
 //! SPMD structure of the paper's MPI tutorial, collective for
 //! collective. Steps I–III are fused into two streaming passes over a
 //! [`crate::io::BlockReader`]:
@@ -27,6 +27,15 @@
 //! Per-rank virtual clocks charge each segment to the Fig. 4 categories
 //! (Load / Compute / Comm / Learn / Post); `Load` is billed per chunk
 //! read through the α-seek/β-bandwidth [`crate::comm::DiskModel`].
+//!
+//! **Failure contract.** Every collective is fallible, and a rank that
+//! fails locally (an EIO in a pass-2 chunk read, an unowned probe row)
+//! broadcasts an **abort** before returning: sibling ranks parked at
+//! the next collective wake with [`crate::comm::CommError::RemoteAbort`]
+//! instead of hanging, and [`run_distributed`] aggregates the per-rank
+//! failures into one origin-tagged [`DOpInfError`] — recoverable by the
+//! caller, unlike `MPI_Abort`. The happy path is bitwise identical to
+//! the infallible API (asserted by the transport-equivalence suites).
 
 use std::collections::BTreeMap;
 
@@ -35,6 +44,7 @@ use anyhow::{Context, Result};
 use super::config::{DOpInfConfig, DataSource, Transport};
 use super::timing::{RankTiming, RunTiming};
 use crate::comm::{self, Category, Clock, Communicator, Op, SelfComm};
+use crate::error::DOpInfError;
 use crate::io::partition::distribute_tutorial;
 use crate::linalg::Matrix;
 use crate::opinf::learn;
@@ -102,18 +112,40 @@ struct RankOut {
     result: DOpInfResult,
 }
 
-/// Run the distributed pipeline with `cfg.p` rank threads.
-pub fn run_distributed(cfg: &DOpInfConfig, source: &DataSource) -> Result<DOpInfResult> {
+/// Everything `run_distributed` resolves before ranks launch; failures
+/// here are [`DOpInfError::Setup`] — no rank ever started.
+#[allow(clippy::type_complexity)]
+fn prepare(
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+) -> Result<(Vec<crate::io::RowRange>, Engine, Vec<(f64, f64)>, usize, usize)> {
     let ns = cfg.opinf.ns;
     let (nx, ns_src, nt) = source.dims(ns)?;
     anyhow::ensure!(ns_src == ns, "source has {ns_src} variables, config says {ns}");
     anyhow::ensure!(nt >= 2, "need at least 2 snapshots");
+    anyhow::ensure!(cfg.p >= 1, "need at least one rank");
     let ranges = distribute_tutorial(nx, cfg.p);
     let engine = match &cfg.artifacts_dir {
         Some(dir) => Engine::from_artifacts(dir)?,
         None => Engine::native(),
     };
-    let pairs = cfg.opinf.grid.pairs();
+    Ok((ranges, engine, cfg.opinf.grid.pairs(), nx, nt))
+}
+
+/// Run the distributed pipeline with `cfg.p` rank threads.
+///
+/// A failure on *any* rank resolves the whole run promptly: the failing
+/// rank broadcasts an abort, every sibling wakes out of its collective,
+/// and the per-rank errors are aggregated into one typed
+/// [`DOpInfError`] — [`DOpInfError::RemoteAbort`] carries the
+/// originating rank and its error chain. With `cfg.comm_timeout` set,
+/// even a silently-dead peer resolves as [`DOpInfError::Timeout`].
+pub fn run_distributed(
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+) -> Result<DOpInfResult, DOpInfError> {
+    let (ranges, engine, pairs, nx, nt) = prepare(cfg, source).map_err(DOpInfError::Setup)?;
+    let timeout = cfg.comm_timeout.map(std::time::Duration::from_secs_f64);
 
     let outputs: Vec<(Result<RankOut>, Clock)> = if cfg.p == 1 {
         // p = 1: no rank threads, no barrier machinery — the
@@ -123,32 +155,70 @@ pub fn run_distributed(cfg: &DOpInfConfig, source: &DataSource) -> Result<DOpInf
         vec![(out, ctx.into_clock())]
     } else {
         match cfg.transport {
-            Transport::Threads => comm::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
-                rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
-            }),
-            Transport::Sockets => comm::socket::run_with_clocks(cfg.p, cfg.cost_model, |ctx| {
-                rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
-            }),
+            Transport::Threads => {
+                comm::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
+                    rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+                })
+            }
+            // a socket rendezvous failure (worker never connected)
+            // surfaces before any rank ran
+            Transport::Sockets => {
+                comm::socket::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
+                    rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+                })
+                .map_err(DOpInfError::from)?
+            }
         }
     };
 
-    // surface rank errors + collect clocks
+    // join: collect clocks, aggregate failures into the origin story
     let mut timings = Vec::with_capacity(cfg.p);
     let mut first: Option<RankOut> = None;
+    let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
     for (i, (out, clock)) in outputs.into_iter().enumerate() {
         timings.push(RankTiming::from_clock(i, &clock));
-        let out = out.map_err(|e| e.context(format!("rank {i}")))?;
-        if i == 0 {
-            first = Some(out);
+        match out {
+            Ok(o) => {
+                if i == 0 {
+                    first = Some(o);
+                }
+            }
+            Err(e) => failures.push((i, e)),
         }
     }
-    let mut result = first.context("no ranks ran")?.result;
+    if !failures.is_empty() {
+        return Err(DOpInfError::from_rank_failures(failures));
+    }
+    let mut result = match first {
+        Some(o) => o.result,
+        None => return Err(DOpInfError::Setup(anyhow::anyhow!("no ranks ran"))),
+    };
     result.timing = RunTiming::new(timings);
     Ok(result)
 }
 
+/// One rank's pipeline, wrapped in the abort protocol
+/// ([`comm::abort_on_local_failure`]): a rank-local failure broadcasts
+/// an abort before returning, so sibling ranks parked at a collective
+/// wake with [`crate::comm::CommError::RemoteAbort`] instead of
+/// hanging; comm-layer failures pass through typed.
 #[allow(clippy::too_many_arguments)]
 fn rank_pipeline<C: Communicator>(
+    ctx: &mut C,
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+    ranges: &[crate::io::RowRange],
+    engine: &Engine,
+    pairs: &[(f64, f64)],
+    nx: usize,
+    nt: usize,
+) -> Result<RankOut> {
+    let steps = rank_steps(ctx, cfg, source, ranges, engine, pairs, nx, nt);
+    comm::abort_on_local_failure(ctx, steps)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_steps<C: Communicator>(
     ctx: &mut C,
     cfg: &DOpInfConfig,
     source: &DataSource,
@@ -183,7 +253,7 @@ fn rank_pipeline<C: Communicator>(
     }
 
     // ---- Steps I+II, pass 1: stream row means + centered max-abs ------
-    let mut reader = source.block_reader(range, _nx, ns, chunk_rows)?;
+    let mut reader = source.block_reader(rank, range, _nx, ns, chunk_rows)?;
     let mut means: Vec<f64> = Vec::with_capacity(local_rows);
     let mut local_max = vec![0.0f64; ns];
     // When the whole block arrives as one chunk (the chunk_rows = None
@@ -209,8 +279,11 @@ fn rank_pipeline<C: Communicator>(
     // per-variable global scales (max-abs over all ranks); raw zeros
     // are kept here and substituted with 1 at application time, exactly
     // like transform::apply_scaling
-    let scales: Option<Vec<f64>> =
-        cfg.opinf.scaling.then(|| ctx.allreduce(&local_max, Op::Max));
+    let scales: Option<Vec<f64>> = if cfg.opinf.scaling {
+        Some(ctx.allreduce(&local_max, Op::Max)?)
+    } else {
+        None
+    };
     let scale_for = |li: usize| -> f64 {
         match &scales {
             Some(g) => crate::opinf::transform::effective_scale(g[li / per]),
@@ -284,7 +357,7 @@ fn rank_pipeline<C: Communicator>(
     // in place: the (nt, nt) Gram block is the pipeline's largest
     // payload — no clone round-trip through the collective
     let mut d_vec = d_rank.into_vec();
-    ctx.allreduce_inplace(&mut d_vec, Op::Sum);
+    ctx.allreduce_inplace(&mut d_vec, Op::Sum)?;
     let d_global = Matrix::from_vec(nt, nt, d_vec);
     let spectrum = ctx.timed(Category::Compute, || GramSpectrum::from_gram(&d_global));
     let r = cfg
@@ -312,13 +385,13 @@ fn rank_pipeline<C: Communicator>(
         search_pairs(engine, &problem, &pairs[pair_start..pair_end], cfg.opinf.max_growth, nt_p)
     });
 
-    let global_best = ctx.allreduce_scalar(outcome.best_err, Op::Min);
+    let global_best = ctx.allreduce_scalar(outcome.best_err, Op::Min)?;
     anyhow::ensure!(
         global_best < 1e20,
         "no regularization pair satisfied the growth constraint on any rank"
     );
     let claim = if outcome.best_err == global_best { rank as f64 } else { f64::INFINITY };
-    let winner = ctx.allreduce_scalar(claim, Op::Min) as usize;
+    let winner = ctx.allreduce_scalar(claim, Op::Min)? as usize;
 
     // winner broadcasts [β₁, β₂, rom_time, Q̃ flat]
     let payload = (rank == winner).then(|| {
@@ -328,7 +401,7 @@ fn rank_pipeline<C: Communicator>(
         data.extend_from_slice(qt.data());
         data
     });
-    let data = ctx.broadcast(winner, payload);
+    let data = ctx.broadcast(winner, payload)?;
     anyhow::ensure!(data.len() == 3 + r * nt_p, "winner payload size mismatch");
     let opt_pair = (data[0], data[1]);
     let rom_time = data[2];
@@ -372,7 +445,7 @@ fn rank_pipeline<C: Communicator>(
             });
         }
         // owner's contribution + zeros elsewhere = gather-to-all
-        ctx.allreduce_inplace(&mut payload, Op::Sum);
+        ctx.allreduce_inplace(&mut payload, Op::Sum)?;
         probes.push(ProbePrediction { var, row, values: payload[..nt_p].to_vec() });
         probe_bases.push(ProbeBasis {
             var,
@@ -571,6 +644,49 @@ mod tests {
         let (source, mut ocfg, _) = test_setup(50);
         ocfg.ns = 3; // source has 2
         let cfg = DOpInfConfig::new(2, ocfg);
-        assert!(run_distributed(&cfg, &source).is_err());
+        // validation fails before any rank launches
+        assert!(matches!(run_distributed(&cfg, &source), Err(DOpInfError::Setup(_))));
+    }
+
+    #[test]
+    fn p1_read_fault_is_an_origin_tagged_abort() {
+        use super::super::config::FaultSpec;
+        let (source, ocfg, _) = test_setup(100);
+        let mut cfg = DOpInfConfig::new(1, ocfg);
+        cfg.cost_model = CostModel::free();
+        cfg.chunk_rows = Some(7);
+        let faulty = DataSource::Faulty {
+            inner: Box::new(source),
+            fault: FaultSpec { rank: 0, after_chunks: 2 },
+        };
+        match run_distributed(&cfg, &faulty) {
+            Err(DOpInfError::RemoteAbort { origin_rank: 0, message }) => {
+                assert!(message.contains("injected read fault"), "{message}");
+            }
+            other => panic!("expected RemoteAbort from rank 0, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn multi_rank_read_fault_aborts_with_the_failing_rank() {
+        use super::super::config::FaultSpec;
+        let (source, ocfg, _) = test_setup(120);
+        for fail_rank in [0usize, 2] {
+            let mut cfg = DOpInfConfig::new(3, ocfg.clone());
+            cfg.cost_model = CostModel::free();
+            cfg.chunk_rows = Some(5);
+            cfg.comm_timeout = Some(30.0);
+            let faulty = DataSource::Faulty {
+                inner: Box::new(source.clone()),
+                fault: FaultSpec { rank: fail_rank, after_chunks: 1 },
+            };
+            match run_distributed(&cfg, &faulty) {
+                Err(DOpInfError::RemoteAbort { origin_rank, message }) => {
+                    assert_eq!(origin_rank, fail_rank);
+                    assert!(message.contains("injected read fault"), "{message}");
+                }
+                other => panic!("expected RemoteAbort from rank {fail_rank}, got {other:?}"),
+            }
+        }
     }
 }

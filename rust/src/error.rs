@@ -1,0 +1,209 @@
+//! The crate's top-level typed error: what a distributed run can
+//! report to its caller.
+//!
+//! [`crate::run_distributed`] joins every rank and aggregates their
+//! failures into one [`DOpInfError`]. The contract that makes
+//! single-rank failures survivable at scale: a rank that fails
+//! mid-pipeline broadcasts an abort through its
+//! [`crate::comm::Communicator`], so *every* rank returns promptly —
+//! the originating rank with its own error, the siblings with
+//! [`crate::comm::CommError::RemoteAbort`] — and the aggregation
+//! recovers the origin. Unlike `MPI_Abort`, nothing kills the process:
+//! the error is an ordinary `Result` at the `run_distributed`
+//! boundary, so a driver can retry, reschedule, or report.
+
+use std::fmt;
+
+use crate::comm::CommError;
+
+/// Error of one distributed training / serving run.
+#[derive(Debug)]
+pub enum DOpInfError {
+    /// A rank failed mid-pipeline and the abort was broadcast:
+    /// `origin_rank` is the rank whose failure started it, `message`
+    /// its rank-local error chain.
+    RemoteAbort { origin_rank: usize, message: String },
+    /// A communication deadline elapsed (`--comm-timeout`): a worker
+    /// never connected, or a peer died silently mid-collective.
+    Timeout { rank: usize, seconds: f64, message: String },
+    /// The communication layer failed in a non-abort way (contract
+    /// violation, lost connection, corrupt frame).
+    Comm { rank: usize, source: CommError },
+    /// A rank failed without a comm-layer classification (shouldn't
+    /// normally happen — rank failures are wrapped into aborts — but
+    /// kept so no error is ever swallowed).
+    Rank { rank: usize, source: anyhow::Error },
+    /// The run failed before any rank launched (bad config, unreadable
+    /// dataset, rendezvous bind failure).
+    Setup(anyhow::Error),
+}
+
+impl DOpInfError {
+    /// Aggregate per-rank failures (rank id, rank error) into the run
+    /// error, preferring the *originating* rank's story:
+    ///
+    /// 1. a rank whose `RemoteAbort` names itself (it started the
+    ///    abort — its message is the root cause),
+    /// 2. any `RemoteAbort` (origin recovered from a sibling),
+    /// 3. a `Timeout`, then any other typed comm error,
+    /// 4. the first rank error verbatim.
+    pub fn from_rank_failures(mut failures: Vec<(usize, anyhow::Error)>) -> DOpInfError {
+        assert!(!failures.is_empty(), "no failures to aggregate");
+        let comm_of = |e: &anyhow::Error| e.downcast_ref::<CommError>().cloned();
+        if let Some((rank, e)) = failures.iter().find(|(rank, e)| {
+            matches!(comm_of(e), Some(CommError::RemoteAbort { origin_rank, .. }) if origin_rank == *rank)
+        }) {
+            let Some(CommError::RemoteAbort { message, .. }) = comm_of(e) else { unreachable!() };
+            return DOpInfError::RemoteAbort { origin_rank: *rank, message };
+        }
+        if let Some(CommError::RemoteAbort { origin_rank, message }) =
+            failures.iter().find_map(|(_, e)| match comm_of(e) {
+                Some(ce @ CommError::RemoteAbort { .. }) => Some(ce),
+                _ => None,
+            })
+        {
+            return DOpInfError::RemoteAbort { origin_rank, message };
+        }
+        if let Some((rank, seconds, waiting_for)) =
+            failures.iter().find_map(|(_, e)| match comm_of(e) {
+                Some(CommError::Timeout { rank, seconds, waiting_for }) => {
+                    Some((rank, seconds, waiting_for))
+                }
+                _ => None,
+            })
+        {
+            return DOpInfError::Timeout { rank, seconds, message: waiting_for };
+        }
+        if let Some((rank, ce)) = failures.iter().find_map(|(rank, e)| comm_of(e).map(|ce| (*rank, ce)))
+        {
+            return DOpInfError::Comm { rank, source: ce };
+        }
+        let (rank, source) = failures.swap_remove(0);
+        DOpInfError::Rank { rank, source }
+    }
+
+    /// The rank this error is attributed to (origin for aborts), if the
+    /// failure happened after ranks launched.
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            DOpInfError::RemoteAbort { origin_rank, .. } => Some(*origin_rank),
+            DOpInfError::Timeout { rank, .. }
+            | DOpInfError::Comm { rank, .. }
+            | DOpInfError::Rank { rank, .. } => Some(*rank),
+            DOpInfError::Setup(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for DOpInfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DOpInfError::RemoteAbort { origin_rank, message } => {
+                write!(f, "run aborted by rank {origin_rank}: {message}")
+            }
+            DOpInfError::Timeout { rank, seconds, message } => {
+                write!(
+                    f,
+                    "communication timed out on rank {rank} after {seconds:.1}s ({message})"
+                )
+            }
+            DOpInfError::Comm { rank, source } => {
+                write!(f, "communication failed on rank {rank}: {source}")
+            }
+            DOpInfError::Rank { rank, source } => write!(f, "rank {rank} failed: {source:#}"),
+            DOpInfError::Setup(source) => write!(f, "run setup failed: {source:#}"),
+        }
+    }
+}
+
+impl std::error::Error for DOpInfError {}
+
+impl From<CommError> for DOpInfError {
+    /// Lift a pre-launch comm failure (socket rendezvous) into the run
+    /// error.
+    fn from(e: CommError) -> DOpInfError {
+        match e {
+            CommError::RemoteAbort { origin_rank, message } => {
+                DOpInfError::RemoteAbort { origin_rank, message }
+            }
+            CommError::Timeout { rank, seconds, waiting_for } => {
+                DOpInfError::Timeout { rank, seconds, message: waiting_for }
+            }
+            other => DOpInfError::Comm { rank: other.rank(), source: other },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn abort_err(origin: usize, msg: &str) -> anyhow::Error {
+        anyhow::Error::from(CommError::RemoteAbort {
+            origin_rank: origin,
+            message: msg.to_string(),
+        })
+    }
+
+    #[test]
+    fn aggregation_prefers_the_originating_rank() {
+        // ranks 0 and 2 observed rank 1's abort; rank 1 is the origin
+        let failures = vec![
+            (0, abort_err(1, "EIO at chunk 3")),
+            (1, abort_err(1, "EIO at chunk 3")),
+            (2, abort_err(1, "EIO at chunk 3")),
+        ];
+        match DOpInfError::from_rank_failures(failures) {
+            DOpInfError::RemoteAbort { origin_rank, message } => {
+                assert_eq!(origin_rank, 1);
+                assert!(message.contains("EIO at chunk 3"));
+            }
+            other => panic!("expected RemoteAbort, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn aggregation_recovers_origin_from_siblings_alone() {
+        // the origin rank's own result is missing (e.g. it panicked);
+        // siblings still carry the origin tag
+        let failures = vec![(0, abort_err(3, "died")), (2, abort_err(3, "died"))];
+        match DOpInfError::from_rank_failures(failures) {
+            DOpInfError::RemoteAbort { origin_rank: 3, .. } => {}
+            other => panic!("expected RemoteAbort from rank 3, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn aggregation_surfaces_timeouts() {
+        let failures = vec![(
+            0,
+            anyhow::Error::from(CommError::Timeout {
+                rank: 0,
+                seconds: 5.0,
+                waiting_for: "reply from the rank 0 hub".to_string(),
+            }),
+        )];
+        match DOpInfError::from_rank_failures(failures) {
+            DOpInfError::Timeout { rank: 0, seconds, .. } => assert_eq!(seconds, 5.0),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn aggregation_falls_back_to_the_first_rank_error() {
+        let failures = vec![(2, anyhow::anyhow!("plain local failure"))];
+        match DOpInfError::from_rank_failures(failures) {
+            DOpInfError::Rank { rank: 2, source } => {
+                assert!(format!("{source}").contains("plain local failure"));
+            }
+            other => panic!("expected Rank, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_is_origin_tagged() {
+        let e = DOpInfError::RemoteAbort { origin_rank: 5, message: "boom".into() };
+        assert_eq!(e.to_string(), "run aborted by rank 5: boom");
+        assert_eq!(e.rank(), Some(5));
+    }
+}

@@ -28,5 +28,8 @@ pub mod reader;
 pub mod snapd;
 
 pub use partition::{distribute_balanced, distribute_tutorial, RowRange};
-pub use reader::{BlockReader, Chunk, InMemoryBlockReader, SnapdBlockReader, SyntheticBlockReader};
+pub use reader::{
+    BlockReader, Chunk, FaultyBlockReader, InMemoryBlockReader, SnapdBlockReader,
+    SyntheticBlockReader,
+};
 pub use snapd::{SnapReader, SnapWriter};

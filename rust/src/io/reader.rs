@@ -345,6 +345,57 @@ impl BlockReader for SyntheticBlockReader {
     }
 }
 
+// --------------------------------------------------- fault injection
+
+/// Deterministic fault injection for the error-propagation suites:
+/// delegates to `inner`, but [`BlockReader::next_chunk`] fails with a
+/// simulated I/O error once `fail_after` chunks have been yielded.
+///
+/// The counter is cumulative across [`BlockReader::reset`], so a value
+/// past one pass's chunk count lands the failure **mid-pass-2** — after
+/// the rank has already participated in the pass-1 collectives, which
+/// is exactly the "sibling ranks park at the next collective" hang the
+/// abort broadcast exists to prevent.
+pub struct FaultyBlockReader {
+    inner: Box<dyn BlockReader>,
+    fail_after: usize,
+    yielded: usize,
+}
+
+impl FaultyBlockReader {
+    pub fn new(inner: Box<dyn BlockReader>, fail_after: usize) -> FaultyBlockReader {
+        FaultyBlockReader { inner, fail_after, yielded: 0 }
+    }
+}
+
+impl BlockReader for FaultyBlockReader {
+    fn local_rows(&self) -> usize {
+        self.inner.local_rows()
+    }
+
+    fn nt(&self) -> usize {
+        self.inner.nt()
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        anyhow::ensure!(
+            self.yielded < self.fail_after,
+            "injected read fault after {} chunks (simulated EIO)",
+            self.yielded
+        );
+        let chunk = self.inner.next_chunk()?;
+        if chunk.is_some() {
+            self.yielded += 1;
+        }
+        Ok(chunk)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        // the cumulative fault counter survives on purpose (see above)
+        self.inner.reset()
+    }
+}
+
 /// Drain a whole pass into one stacked matrix (tests/benches; defeats
 /// the memory bound on purpose).
 pub fn read_all_chunks(reader: &mut dyn BlockReader) -> Result<Matrix> {
@@ -368,6 +419,25 @@ mod tests {
     use crate::sim::synth::generate;
     use crate::util::json::Json;
     use std::path::PathBuf;
+
+    #[test]
+    fn faulty_reader_fails_at_the_configured_cumulative_chunk() {
+        let q = Arc::new(Matrix::randn(2 * 6, 5, 3));
+        let inner = Box::new(
+            InMemoryBlockReader::new(q, RowRange { start: 0, end: 6 }, 6, 2, 4).unwrap(),
+        ) as Box<dyn BlockReader>;
+        // 12 local rows / 4 = 3 chunks per pass; fail_after = 4 ⇒ the
+        // first pass completes, the second pass fails on its 2nd call
+        let mut r = FaultyBlockReader::new(inner, 4);
+        for _ in 0..3 {
+            assert!(r.next_chunk().unwrap().is_some());
+        }
+        assert!(r.next_chunk().unwrap().is_none(), "pass 1 unaffected");
+        r.reset().unwrap();
+        assert!(r.next_chunk().unwrap().is_some(), "4th chunk still yields");
+        let e = r.next_chunk().unwrap_err();
+        assert!(format!("{e}").contains("injected read fault"), "{e}");
+    }
 
     fn tmp(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("dopinf_reader_tests");

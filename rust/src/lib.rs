@@ -11,8 +11,12 @@
 //! * **L3 (this crate)** — coordinator: the transport-abstracted
 //!   [`comm::Communicator`] collective vocabulary (thread shared-board,
 //!   zero-overhead single-rank, and localhost socket backends — all
-//!   bitwise-identical by construction), the five dOpInf pipeline
-//!   steps written generically against it with a **streaming,
+//!   bitwise-identical by construction, every collective fallible with
+//!   **abort broadcast**: a rank that fails mid-pipeline wakes its
+//!   peers with a typed [`comm::CommError::RemoteAbort`] instead of
+//!   hanging them, and [`run_distributed`] aggregates the per-rank
+//!   failures into one origin-tagged [`DOpInfError`]), the five dOpInf
+//!   pipeline steps written generically against it with a **streaming,
 //!   memory-bounded data plane** (chunked [`io::BlockReader`]
 //!   ingestion through the [`opinf::streaming`] accumulators — per-rank
 //!   residency is O(chunk_rows·n_t) at any state dimension, results
@@ -53,6 +57,7 @@
 
 pub mod comm;
 pub mod coordinator;
+pub mod error;
 pub mod io;
 pub mod linalg;
 pub mod opinf;
@@ -64,4 +69,5 @@ pub mod util;
 
 pub use coordinator::config::DOpInfConfig;
 pub use coordinator::pipeline::{run_distributed, DOpInfResult};
+pub use error::DOpInfError;
 pub use serve::RomArtifact;

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
 use dopinf::coordinator::scaling::strong_scaling;
+use dopinf::error::DOpInfError;
 use dopinf::io::snapd::SnapReader;
 use dopinf::opinf::serial::OpInfConfig;
 use dopinf::rom::RegGrid;
@@ -37,8 +38,17 @@ fn main() {
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
+            // a distributed-run failure prints the originating rank's
+            // story ("run aborted by rank N: …") and exits with a
+            // distinct status so a scheduler can tell "the run itself
+            // failed mid-flight" from bad usage/setup. Note: a rank
+            // abort is not necessarily transient — the message carries
+            // the origin rank's error chain for that judgment.
             eprintln!("error: {e:#}");
-            1
+            match e.downcast_ref::<DOpInfError>() {
+                Some(DOpInfError::RemoteAbort { .. } | DOpInfError::Timeout { .. }) => 2,
+                _ => 1,
+            }
         }
     };
     std::process::exit(code);
@@ -153,6 +163,7 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
         OptSpec { name: "save-rom", help: "write the trained ROM artifact here (.rom)", default: None, is_flag: false },
         OptSpec { name: "transport", help: "communicator backend: threads | sockets", default: Some("threads"), is_flag: false },
+        OptSpec { name: "comm-timeout", help: "communication deadline in seconds (rendezvous + every collective); a dead rank fails the run instead of hanging it", default: None, is_flag: false },
         OptSpec { name: "chunk-rows", help: "stream ingestion in chunks of N local rows (default: whole block; native-engine results are bitwise identical)", default: None, is_flag: false },
         OptSpec { name: "memory-budget-mb", help: "derive the ingestion chunk size from a per-rank memory budget (MiB)", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
@@ -206,6 +217,11 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
     let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
     cfg.transport = parse_transport(a.get_or("transport", "threads"))?;
     cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
+    if let Some(v) = a.get("comm-timeout") {
+        let secs: f64 = v.parse().context("--comm-timeout")?;
+        anyhow::ensure!(secs > 0.0, "--comm-timeout must be positive");
+        cfg.comm_timeout = Some(secs);
+    }
     // streamed ingestion: an explicit chunk size, or one derived from a
     // per-rank memory budget (chunk bytes ≈ rows × nt_total × 8 — the
     // full stored row streams through memory even when training

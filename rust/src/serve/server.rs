@@ -27,8 +27,12 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::comm::{self, Communicator, CostModel};
+use crate::error::DOpInfError;
 use crate::io::partition::distribute_balanced;
+use crate::io::RowRange;
+use crate::linalg::Matrix;
 use crate::runtime::Engine;
+use crate::util::panic::panic_text;
 
 use super::batch::rollout_batch_with;
 use super::ensemble::{
@@ -42,7 +46,7 @@ use super::model::RomArtifact;
 /// identical (bitwise) to [`run_ensemble`] on one thread: the global
 /// IC matrix is built once, shards are contiguous member ranges, and
 /// the rank-0-gathered per-member series are reduced in global member
-/// order through the same [`push_series_step`] path.
+/// order through the same `push_series_step` path.
 pub fn serve_ensemble(
     engine: &Engine,
     artifact: &RomArtifact,
@@ -59,77 +63,106 @@ pub fn serve_ensemble(
     let q0s =
         perturbed_initial_conditions(&artifact.qhat0, spec.members, spec.sigma, spec.seed);
     let shards = distribute_balanced(spec.members, workers);
-    let n_probes = artifact.probes.len();
-    let n_steps = spec.n_steps;
 
     let outputs = comm::run(workers, CostModel::free(), |ctx| {
-        let shard = shards[ctx.rank()];
-        let shard_b = shard.len();
-        // shard rollout, streaming member probe values:
-        // values[p * n_steps * shard_b + k * shard_b + i]
-        let mut values = vec![0.0; n_probes * n_steps * shard_b];
-        let q0_shard = q0s.slice_rows(shard.start, shard.end);
-        let mut vals = Vec::new();
-        let diverged =
-            rollout_batch_with(engine, &artifact.ops, &q0_shard, n_steps, |k, states_t, _| {
-                for (p, probe) in artifact.probes.iter().enumerate() {
-                    probe_values(probe, states_t, &mut vals);
-                    let base = p * n_steps * shard_b + k * shard_b;
-                    values[base..base + shard_b].copy_from_slice(&vals);
-                }
-            });
-
-        // rooted gather: per-member series + divergence flags travel to
-        // rank 0 only — the one rank that reduces them (the former
-        // allgather shipped every shard's series to every rank just to
-        // be discarded)
-        let gathered_values = ctx.gather(0, &values);
-        let mut flags = vec![-1.0; shard_b];
-        for (i, d) in diverged.iter().enumerate() {
-            if let Some(at) = d {
-                flags[i] = *at as f64;
-            }
-        }
-        let gathered_flags = ctx.gather(0, &flags);
-
-        // every rank participated in the collectives above; only rank 0
-        // holds the data and pays for the global reduction
-        let (Some(all_values), Some(all_flags)) = (gathered_values, gathered_flags) else {
-            return None;
-        };
-
-        // reassemble global member order (shards are contiguous,
-        // ascending by rank) and reduce through the shared path
-        let mut diverged_at: Vec<Option<usize>> = Vec::with_capacity(spec.members);
-        let mut member_loc: Vec<(usize, usize)> = Vec::with_capacity(spec.members);
-        for (rank, rank_flags) in all_flags.iter().enumerate() {
-            for (i, &f) in rank_flags.iter().enumerate() {
-                diverged_at.push(if f < 0.0 { None } else { Some(f as usize) });
-                member_loc.push((rank, i));
-            }
-        }
-
-        let probes_out = reduce_member_series(
-            &artifact.probes,
-            n_steps,
-            spec.members,
-            &diverged_at,
-            |p, k, member| {
-                let (rank, i) = member_loc[member];
-                let rb = shards[rank].len();
-                all_values[rank][p * n_steps * rb + k * rb + i]
-            },
-        );
-
-        Some(EnsembleStats {
-            probes: probes_out,
-            members: spec.members,
-            n_steps,
-            diverged_at,
-        })
+        // the abort protocol, same as the training pipeline: a failing
+        // worker wakes its peers out of the rooted gathers instead of
+        // leaving them parked
+        let shard = ensemble_shard(ctx, engine, artifact, spec, &q0s, &shards);
+        comm::abort_on_local_failure(ctx, shard)
     });
 
-    outputs.into_iter().flatten().next().context("no workers ran")
+    let mut stats: Option<EnsembleStats> = None;
+    let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+    for (i, out) in outputs.into_iter().enumerate() {
+        match out {
+            Ok(Some(s)) => stats = stats.or(Some(s)),
+            Ok(None) => {}
+            Err(e) => failures.push((i, e)),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(anyhow::Error::from(DOpInfError::from_rank_failures(failures)));
+    }
+    stats.context("no workers ran")
+}
+
+/// One worker's shard of [`serve_ensemble`]: batched rollout, rooted
+/// gather to rank 0, and (on rank 0 only) the global reduction.
+fn ensemble_shard(
+    ctx: &mut comm::RankCtx,
+    engine: &Engine,
+    artifact: &RomArtifact,
+    spec: &EnsembleSpec,
+    q0s: &Matrix,
+    shards: &[RowRange],
+) -> Result<Option<EnsembleStats>> {
+    let n_probes = artifact.probes.len();
+    let n_steps = spec.n_steps;
+    let shard = shards[ctx.rank()];
+    let shard_b = shard.len();
+    // shard rollout, streaming member probe values:
+    // values[p * n_steps * shard_b + k * shard_b + i]
+    let mut values = vec![0.0; n_probes * n_steps * shard_b];
+    let q0_shard = q0s.slice_rows(shard.start, shard.end);
+    let mut vals = Vec::new();
+    let diverged =
+        rollout_batch_with(engine, &artifact.ops, &q0_shard, n_steps, |k, states_t, _| {
+            for (p, probe) in artifact.probes.iter().enumerate() {
+                probe_values(probe, states_t, &mut vals);
+                let base = p * n_steps * shard_b + k * shard_b;
+                values[base..base + shard_b].copy_from_slice(&vals);
+            }
+        });
+
+    // rooted gather: per-member series + divergence flags travel to
+    // rank 0 only — the one rank that reduces them (the former
+    // allgather shipped every shard's series to every rank just to
+    // be discarded)
+    let gathered_values = ctx.gather(0, &values)?;
+    let mut flags = vec![-1.0; shard_b];
+    for (i, d) in diverged.iter().enumerate() {
+        if let Some(at) = d {
+            flags[i] = *at as f64;
+        }
+    }
+    let gathered_flags = ctx.gather(0, &flags)?;
+
+    // every rank participated in the collectives above; only rank 0
+    // holds the data and pays for the global reduction
+    let (Some(all_values), Some(all_flags)) = (gathered_values, gathered_flags) else {
+        return Ok(None);
+    };
+
+    // reassemble global member order (shards are contiguous,
+    // ascending by rank) and reduce through the shared path
+    let mut diverged_at: Vec<Option<usize>> = Vec::with_capacity(spec.members);
+    let mut member_loc: Vec<(usize, usize)> = Vec::with_capacity(spec.members);
+    for (rank, rank_flags) in all_flags.iter().enumerate() {
+        for (i, &f) in rank_flags.iter().enumerate() {
+            diverged_at.push(if f < 0.0 { None } else { Some(f as usize) });
+            member_loc.push((rank, i));
+        }
+    }
+
+    let probes_out = reduce_member_series(
+        &artifact.probes,
+        n_steps,
+        spec.members,
+        &diverged_at,
+        |p, k, member| {
+            let (rank, i) = member_loc[member];
+            let rb = shards[rank].len();
+            all_values[rank][p * n_steps * rb + k * rb + i]
+        },
+    );
+
+    Ok(Some(EnsembleStats {
+        probes: probes_out,
+        members: spec.members,
+        n_steps,
+        diverged_at,
+    }))
 }
 
 struct Job {
@@ -144,6 +177,11 @@ struct Job {
 /// caller reads when convenient, so many clients' requests overlap.
 /// Dropping the server (or calling [`RomServer::shutdown`]) closes the
 /// queue and joins the workers after in-flight jobs finish.
+///
+/// A worker failure (a panicking evaluation) resolves the in-flight
+/// request with an error response and leaves the queue serviceable for
+/// every subsequent request — one bad job must not take the server (or
+/// the queue mutex) down with it.
 pub struct RomServer {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
@@ -163,13 +201,28 @@ impl RomServer {
                     let engine = Engine::native();
                     loop {
                         // scope the guard so the lock is held only while
-                        // dequeuing, not while running the job
-                        let dequeued = { rx.lock().unwrap().recv() };
+                        // dequeuing, not while running the job; recover a
+                        // poisoned mutex (a panic between recv and guard
+                        // drop) instead of cascading it to every worker
+                        let dequeued = {
+                            rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv()
+                        };
                         let job = match dequeued {
                             Ok(job) => job,
                             Err(_) => break, // queue closed
                         };
-                        let out = run_ensemble(&engine, &artifact, &job.spec);
+                        // contain a panicking evaluation: the client gets
+                        // an error response instead of a dead channel,
+                        // and this worker lives to serve the next job
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run_ensemble(&engine, &artifact, &job.spec)
+                        }))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow::anyhow!(
+                                "ensemble evaluation panicked: {}",
+                                panic_text(&*p)
+                            ))
+                        });
                         // a dropped reply receiver just means the client
                         // stopped caring; not an error
                         let _ = job.reply.send(out);
@@ -282,6 +335,32 @@ mod tests {
             let got = ticket.recv().expect("worker replied").expect("ensemble ok");
             let want = run_ensemble(&engine, &art, spec).unwrap();
             assert_stats_equal(&want, &got);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_resolves_the_request_and_keeps_the_queue_serviceable() {
+        // truncated qhat0 ⇒ every evaluation panics inside the worker
+        // ("initial-condition width != r"); the request must resolve
+        // with an error response — and with a single worker, the queue
+        // must stay serviceable for the requests after it (before the
+        // catch, the first panic killed the lone worker and every
+        // later submit died with a closed reply channel)
+        let mut bad = artifact(3);
+        bad.qhat0.pop();
+        let server = RomServer::start(bad, 1);
+        let spec = EnsembleSpec { members: 4, sigma: 0.01, seed: 1, n_steps: 10 };
+        for round in 0..3 {
+            let reply = server
+                .submit(spec.clone())
+                .recv()
+                .unwrap_or_else(|_| panic!("round {round}: worker died instead of replying"));
+            let e = match reply {
+                Err(e) => e,
+                Ok(_) => panic!("round {round}: panicking evaluation must not succeed"),
+            };
+            assert!(format!("{e}").contains("panicked"), "{e}");
         }
         server.shutdown();
     }

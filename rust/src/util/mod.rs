@@ -11,6 +11,7 @@ pub mod cli;
 pub mod csvout;
 pub mod json;
 pub mod npy;
+pub mod panic;
 pub mod propcheck;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,32 @@
+//! Panic-payload helpers for the failure-isolation layers (comm abort
+//! broadcast, RomServer worker recovery).
+
+use std::any::Any;
+
+/// Best-effort text of a caught panic payload (`&str` and `String`
+/// payloads cover `panic!`/`assert!`; anything else is labeled).
+pub fn panic_text(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_str_and_string_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("static text")).unwrap_err();
+        assert_eq!(panic_text(&*p), "static text");
+        let n = 7;
+        let p = std::panic::catch_unwind(move || panic!("formatted {n}")).unwrap_err();
+        assert_eq!(panic_text(&*p), "formatted 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_text(&*p), "non-string panic payload");
+    }
+}

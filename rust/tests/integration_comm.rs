@@ -1,20 +1,32 @@
-//! Transport-equivalence property tests (util::propcheck).
+//! Transport-equivalence property tests (util::propcheck) and the
+//! error-propagation suite of the fallible-collectives contract.
 //!
-//! The Communicator contract: every backend combines contributions in
-//! rank order through the shared `fold` kernels, so collective results
-//! must be **bitwise identical** — across the thread and socket
-//! transports at every p, against the rank-ordered reference fold, and
-//! (for partition-invariant collectives like gather) across
-//! p ∈ {1, 2, 4, 7} as well. The final test closes the loop on the
-//! pipeline itself: `run_distributed` at p = 4 must produce a
-//! bitwise-identical `DOpInfResult` on threads vs sockets.
+//! Two halves:
+//!
+//! * **Happy path** — every backend combines contributions in rank
+//!   order through the shared `fold` kernels, so collective results
+//!   must be **bitwise identical** — across the thread and socket
+//!   transports at every p, against the rank-ordered reference fold,
+//!   and (for partition-invariant collectives like gather) across
+//!   p ∈ {1, 2, 4, 7} as well. `run_distributed` at p = 4 must produce
+//!   a bitwise-identical `DOpInfResult` on threads vs sockets. These
+//!   suites predate the fallible API redesign and pass unchanged — the
+//!   redesign's byte-identity guarantee.
+//! * **Error path** — a mid-pass-2 read fault on any single rank must
+//!   resolve *every* rank promptly: siblings wake from their parked
+//!   collectives with a rank-tagged `CommError::RemoteAbort`, and
+//!   `run_distributed` returns `DOpInfError::RemoteAbort` carrying the
+//!   originating rank — zero hangs, zero panics, on both transports at
+//!   p ∈ {2, 4}. (CI wraps this test binary in a hard `timeout`, so a
+//!   regression back to hanging fails the job instead of stalling it.)
 
 use std::sync::Arc;
 
-use dopinf::comm::{self, fold, Communicator, CostModel, Op, SelfComm};
-use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
+use dopinf::comm::{self, fold, CommError, Communicator, CostModel, Op, SelfComm};
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
-use dopinf::io::partition::distribute_balanced;
+use dopinf::error::DOpInfError;
+use dopinf::io::partition::{distribute_balanced, distribute_tutorial};
 use dopinf::opinf::serial::OpInfConfig;
 use dopinf::rom::RegGrid;
 use dopinf::sim::synth::{generate, SynthSpec};
@@ -41,11 +53,12 @@ fn allreduce_bitwise_identical_across_backends() {
                     let parts: Vec<Vec<f64>> = (0..p).map(|r| rank_data(seed, r, len)).collect();
                     let want = fold::reduce_parts(&parts, op);
                     let threads = comm::run(p, CostModel::free(), |ctx| {
-                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op)
+                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op).unwrap()
                     });
                     let sockets = comm::socket::run(p, CostModel::free(), |ctx| {
-                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op)
-                    });
+                        ctx.allreduce(&rank_data(seed, ctx.rank(), len), op).unwrap()
+                    })
+                    .expect("socket rendezvous");
                     for r in 0..p {
                         if threads[r] != want {
                             return Err(format!("thread backend differs at p={p} rank {r}"));
@@ -57,7 +70,7 @@ fn allreduce_bitwise_identical_across_backends() {
                     if p == 1 {
                         // SelfComm is the p=1 reference: identity
                         let mut ctx = SelfComm::new();
-                        let got = ctx.allreduce(&parts[0], op);
+                        let got = ctx.allreduce(&parts[0], op).unwrap();
                         if got != parts[0] {
                             return Err("SelfComm must be the identity".into());
                         }
@@ -97,12 +110,15 @@ fn gather_reconstructs_the_partitioned_vector_for_every_p() {
                 };
                 run_gather(comm::run(p, CostModel::free(), |ctx| {
                     let sh = shards[ctx.rank()];
-                    ctx.gather(root, &global[sh.start..sh.end])
+                    ctx.gather(root, &global[sh.start..sh.end]).unwrap()
                 }))?;
-                run_gather(comm::socket::run(p, CostModel::free(), |ctx| {
-                    let sh = shards[ctx.rank()];
-                    ctx.gather(root, &global[sh.start..sh.end])
-                }))?;
+                run_gather(
+                    comm::socket::run(p, CostModel::free(), |ctx| {
+                        let sh = shards[ctx.rank()];
+                        ctx.gather(root, &global[sh.start..sh.end]).unwrap()
+                    })
+                    .expect("socket rendezvous"),
+                )?;
             }
             Ok(())
         },
@@ -120,11 +136,12 @@ fn reduce_scatter_block_bitwise_thread_vs_socket() {
                 let parts: Vec<Vec<f64>> = (0..p).map(|r| rank_data(seed, r, len)).collect();
                 let reduced = fold::reduce_parts(&parts, Op::Sum);
                 let threads = comm::run(p, CostModel::free(), |ctx| {
-                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum)
+                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum).unwrap()
                 });
                 let sockets = comm::socket::run(p, CostModel::free(), |ctx| {
-                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum)
-                });
+                    ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len), Op::Sum).unwrap()
+                })
+                .expect("socket rendezvous");
                 for r in 0..p {
                     let want = fold::block(&reduced, r, p);
                     if threads[r] != want {
@@ -150,7 +167,7 @@ fn rooted_reduce_bitwise_equals_allreduce_on_root() {
                 let root = p / 2;
                 let reduced = comm::run(p, CostModel::free(), |ctx| {
                     let mine = rank_data(seed, ctx.rank(), len);
-                    (ctx.reduce(root, &mine, Op::Sum), ctx.allreduce(&mine, Op::Sum))
+                    (ctx.reduce(root, &mine, Op::Sum).unwrap(), ctx.allreduce(&mine, Op::Sum).unwrap())
                 });
                 for (rank, (rooted, all)) in reduced.iter().enumerate() {
                     if rank == root {
@@ -167,12 +184,8 @@ fn rooted_reduce_bitwise_equals_allreduce_on_root() {
     );
 }
 
-/// The acceptance gate: `run_distributed` at p = 4 on the tutorial-style
-/// config must produce a bitwise-identical `DOpInfResult` on the thread
-/// vs socket transports.
-#[test]
-fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
-    let spec = SynthSpec { nx: 180, ns: 2, nt: 60, modes: 3, ..Default::default() };
+fn tutorial_config(nx: usize) -> (DataSource, OpInfConfig) {
+    let spec = SynthSpec { nx, ns: 2, nt: 60, modes: 3, ..Default::default() };
     let q = generate(&spec, 0);
     let ocfg = OpInfConfig {
         ns: 2,
@@ -183,7 +196,15 @@ fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
         max_growth: 1.5,
         nt_p: 120,
     };
-    let source = DataSource::InMemory(Arc::new(q));
+    (DataSource::InMemory(Arc::new(q)), ocfg)
+}
+
+/// The acceptance gate: `run_distributed` at p = 4 on the tutorial-style
+/// config must produce a bitwise-identical `DOpInfResult` on the thread
+/// vs socket transports.
+#[test]
+fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
+    let (source, ocfg) = tutorial_config(180);
     let mut tcfg = DOpInfConfig::new(4, ocfg);
     tcfg.cost_model = CostModel::free();
     tcfg.probes = vec![(0, 17), (1, 95), (0, 179)];
@@ -212,5 +233,148 @@ fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
         assert_eq!(ba.phi, bb.phi);
         assert_eq!(ba.mean.to_bits(), bb.mean.to_bits());
         assert_eq!(ba.scale.to_bits(), bb.scale.to_bits());
+    }
+}
+
+// ------------------------------------------------------ error paths
+
+/// Every rank of a group with one aborting member must return a
+/// rank-tagged `RemoteAbort` — observed per rank, on both transports,
+/// at p ∈ {2, 4}.
+#[test]
+fn abort_reaches_every_rank_on_both_transports() {
+    for p in [2usize, 4] {
+        let fail_rank = p - 1;
+        let check_all = |results: Vec<Result<(), CommError>>| {
+            assert_eq!(results.len(), p);
+            for (rank, r) in results.iter().enumerate() {
+                match r {
+                    Err(CommError::RemoteAbort { origin_rank, message }) => {
+                        assert_eq!(*origin_rank, fail_rank, "p={p} rank {rank}");
+                        assert!(message.contains("simulated EIO"), "{message}");
+                    }
+                    other => panic!("p={p} rank {rank}: expected RemoteAbort, got {other:?}"),
+                }
+            }
+        };
+        check_all(comm::run(p, CostModel::free(), |ctx| {
+            if ctx.rank() == fail_rank {
+                Err(ctx.abort("simulated EIO"))
+            } else {
+                // two rounds: whichever collective the abort lands in,
+                // the rank must come back with an error, promptly
+                ctx.allreduce_scalar(1.0, Op::Sum).and_then(|_| ctx.barrier())
+            }
+        }));
+        check_all(
+            comm::socket::run(p, CostModel::free(), |ctx| {
+                if ctx.rank() == fail_rank {
+                    Err(ctx.abort("simulated EIO"))
+                } else {
+                    ctx.allreduce_scalar(1.0, Op::Sum).and_then(|_| ctx.barrier())
+                }
+            })
+            .expect("socket rendezvous"),
+        );
+    }
+}
+
+/// The acceptance criterion of the redesign: a mid-pass-2 read error on
+/// any single rank causes `run_distributed` to return an origin-tagged
+/// `DOpInfError::RemoteAbort` — zero hangs, zero panics — for
+/// p ∈ {2, 4} on both transports.
+#[test]
+fn read_fault_resolves_run_distributed_on_both_transports() {
+    let nx = 120;
+    let chunk_rows = 7;
+    let (source, mut ocfg) = tutorial_config(nx);
+    // scaling on ⇒ pass 1 ends in an Allreduce(MAX): the failing rank
+    // participates in a collective *before* its fault fires, the exact
+    // "sibling ranks park at the next collective" scenario
+    ocfg.scaling = true;
+    for p in [2usize, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            let fail_rank = p / 2;
+            // land the fault mid-pass-2: past one full pass of chunks,
+            // short of two
+            let per = distribute_tutorial(nx, p)[fail_rank].len();
+            let chunks_per_pass = (2 * per).div_ceil(chunk_rows);
+            let fault = FaultSpec { rank: fail_rank, after_chunks: chunks_per_pass + 1 };
+
+            let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+            cfg.cost_model = CostModel::free();
+            cfg.transport = transport;
+            cfg.chunk_rows = Some(chunk_rows);
+            // the suite's own hang-regression guard: every collective
+            // wait is bounded, so a broken abort broadcast fails the
+            // test instead of freezing it (CI adds a hard job timeout
+            // on top)
+            cfg.comm_timeout = Some(60.0);
+            let faulty =
+                DataSource::Faulty { inner: Box::new(source.clone()), fault };
+
+            match run_distributed(&cfg, &faulty) {
+                Err(DOpInfError::RemoteAbort { origin_rank, message }) => {
+                    assert_eq!(origin_rank, fail_rank, "p={p} {transport:?}");
+                    assert!(
+                        message.contains("injected read fault"),
+                        "p={p} {transport:?}: {message}"
+                    );
+                }
+                other => {
+                    panic!("p={p} {transport:?}: expected RemoteAbort, got {other:?}")
+                }
+            }
+        }
+    }
+}
+
+/// A rank that silently stops participating (no abort, no panic) must
+/// resolve as a timeout when a deadline is configured — not a hang.
+#[test]
+fn silent_rank_resolves_as_timeout_with_deadline() {
+    let results = comm::run_with_clocks_timeout(
+        3,
+        CostModel::free(),
+        Some(std::time::Duration::from_millis(200)),
+        |ctx| {
+            if ctx.rank() == 1 {
+                Ok(()) // never enters the collective
+            } else {
+                ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+            }
+        },
+    );
+    assert!(results[1].0.is_ok());
+    for rank in [0usize, 2] {
+        match &results[rank].0 {
+            Err(CommError::Timeout { .. }) => {}
+            other => panic!("rank {rank}: expected Timeout, got {other:?}"),
+        }
+    }
+}
+
+/// The happy path of the faulty wrapper: a fault configured past the
+/// total chunk count never fires, and the result is bitwise identical
+/// to the unwrapped source — fault injection is observability-free.
+#[test]
+fn unfired_fault_wrapper_is_bitwise_invisible() {
+    let (source, ocfg) = tutorial_config(100);
+    let mut cfg = DOpInfConfig::new(2, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.chunk_rows = Some(9);
+    cfg.probes = vec![(0, 11), (1, 60)];
+    let wrapped = DataSource::Faulty {
+        inner: Box::new(source.clone()),
+        fault: FaultSpec { rank: 0, after_chunks: usize::MAX },
+    };
+    let plain = run_distributed(&cfg, &source).unwrap();
+    let faulty = run_distributed(&cfg, &wrapped).unwrap();
+    assert_eq!(plain.r, faulty.r);
+    assert_eq!(plain.eigs, faulty.eigs);
+    assert_eq!(plain.opt_pair, faulty.opt_pair);
+    assert_eq!(plain.qtilde.data(), faulty.qtilde.data());
+    for (pa, pb) in plain.probes.iter().zip(&faulty.probes) {
+        assert_eq!(pa.values, pb.values);
     }
 }

@@ -2,24 +2,29 @@
 //!
 //! The build environment has no network crate registry, so this crate
 //! reimplements exactly the surface `dopinf` uses: [`Error`] (a context
-//! chain), [`Result`], the [`Context`] extension trait for `Result` and
-//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros. Semantics
-//! match upstream anyhow where exercised: `{}` displays the outermost
-//! message, `{:#}` joins the whole chain with `": "`, and `Debug`
-//! renders a "Caused by" list.
+//! chain around an optional typed source), [`Result`], the [`Context`]
+//! extension trait for `Result` and `Option`, downcasting back to the
+//! typed source ([`Error::downcast_ref`]), and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics match upstream anyhow where exercised:
+//! `{}` displays the outermost message, `{:#}` joins the whole chain
+//! with `": "`, `Debug` renders a "Caused by" list, and `downcast_ref`
+//! recovers the original error value a `?` conversion wrapped.
 
 use std::error::Error as StdError;
 use std::fmt;
 
-/// A dynamic error carrying a context chain (outermost first).
+/// A dynamic error carrying a context chain (outermost first) and,
+/// when built from a typed `std::error::Error`, the original value for
+/// [`Error::downcast_ref`].
 pub struct Error {
     chain: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Construct from a single displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], source: None }
     }
 
     /// Wrap with an outer context message.
@@ -31,6 +36,18 @@ impl Error {
     /// The context chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// A reference to the typed error this `Error` was converted from,
+    /// if it was `E` (upstream `anyhow::Error::downcast_ref`). Context
+    /// wrapping does not hide the source.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
+
+    /// Whether the typed source this `Error` was converted from is `E`.
+    pub fn is<E: StdError + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 }
 
@@ -65,7 +82,7 @@ impl<E: StdError + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, source: Some(Box::new(e)) }
     }
 }
 
@@ -183,6 +200,17 @@ mod tests {
         assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
         let e = anyhow!("plain {}", "msg");
         assert_eq!(format!("{e}"), "plain msg");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_source() {
+        let e: Error = io_err().into();
+        let e = e.context("reading dataset");
+        let io = e.downcast_ref::<std::io::Error>().expect("source survives context");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
