@@ -1,16 +1,21 @@
 //! Ensemble-rollout throughput: batched GEMM kernel vs looping the
-//! sequential `solve_discrete` baseline.
+//! sequential `solve_discrete` baseline, plus the compute-plane sweep
+//! (member bands over T ∈ {1, 2, 4, 8} pool workers — bitwise
+//! identical trajectories at every T, so only the clock moves).
 //!
 //! `cargo bench --bench ensemble_throughput`
 //!
-//! Reports member-steps/sec. Acceptance target: the batched kernel is
+//! Reports member-steps/sec. Acceptance targets: the batched kernel is
 //! ≥ 3x the sequential loop at B = 64, r = 10 (the serving layer's
-//! bread-and-butter shape: a paper-sized ROM, one scheduling quantum of
-//! ensemble members). Record runs in EXPERIMENTS.md §Perf.
+//! bread-and-butter shape), and the banded rollout at T = 4 is ≥ 2.5x
+//! its own T = 1 time at B = 1024 (one node-sized scheduling quantum,
+//! where the per-step barrier cost is amortized). Machine-readable
+//! output: results/ensemble_throughput.json. Record runs in
+//! EXPERIMENTS.md §Perf.
 
 use dopinf::rom::{solve_discrete, RomOperators};
 use dopinf::runtime::Engine;
-use dopinf::serve::batch::rollout_batch;
+use dopinf::serve::batch::{rollout_batch, rollout_batch_threaded};
 use dopinf::serve::ensemble::perturbed_initial_conditions;
 use dopinf::util::benchkit::Bench;
 
@@ -56,8 +61,51 @@ fn main() {
         }
     }
 
+    // ---- compute-plane sweep: member bands over T pool workers --------
+    // streaming visitor (no trajectory buffer) — the serving layer's
+    // actual calling convention; the acceptance shape is B = 1024
+    let mut speedup_t4 = 0.0;
+    for b in [256usize, 1024] {
+        let q0s = perturbed_initial_conditions(&q0, b, 0.01, 43);
+        let member_steps = b * n_steps;
+        let mut t1 = f64::NAN;
+        for t in [1usize, 2, 4, 8] {
+            let rep = bench
+                .run_elems(
+                    &format!("banded rollout       B={b:<4} r={r} x {n_steps} T={t}"),
+                    member_steps,
+                    || {
+                        std::hint::black_box(rollout_batch_threaded(
+                            &engine,
+                            &ops,
+                            &q0s,
+                            n_steps,
+                            t,
+                            |_, _, _| {},
+                        ))
+                    },
+                )
+                .mean_s;
+            if t == 1 {
+                t1 = rep;
+            }
+            if t == 4 && b == 1024 {
+                speedup_t4 = t1 / rep;
+            }
+        }
+        println!();
+    }
+
+    bench
+        .write_json("results/ensemble_throughput.json")
+        .expect("write results/ensemble_throughput.json");
+    println!("wrote results/ensemble_throughput.json");
     println!(
-        "acceptance: B=64 speedup {speedup_at_64:.2}x (target >= 3x){}",
+        "acceptance: B=64 batched/sequential {speedup_at_64:.2}x (target >= 3x){}",
         if speedup_at_64 >= 3.0 { " — OK" } else { " — BELOW TARGET" }
+    );
+    println!(
+        "acceptance: B=1024 T=4/T=1 {speedup_t4:.2}x (target >= 2.5x){}",
+        if speedup_t4 >= 2.5 { " — OK" } else { " — BELOW TARGET" }
     );
 }

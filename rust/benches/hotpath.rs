@@ -3,21 +3,79 @@
 //! `cargo bench --bench hotpath`
 //!
 //! Covers every compute kernel on the pipeline's critical path, native
-//! vs PJRT where both exist:
+//! vs PJRT where both exist, and sweeps the intra-rank compute plane
+//! (`T ∈ {1, 2, 4, 8}` pool workers — results bitwise identical at
+//! every T, so only the clock moves):
 //!   * Gram product QᵀQ (Step III's dominant cost — L1 kernel territory)
 //!   * symmetric eigendecomposition (replicated serial fraction)
 //!   * OpInf assembly + one regularized solve (Step IV inner loop)
 //!   * ROM rollout (Step IV trial + online phase)
 //!   * postprocessing lift (Step V)
 //!   * collectives (comm substrate overhead)
+//!
+//! Machine-readable output: results/hotpath.json (one report object per
+//! row via `benchkit::write_json`) — the perf trajectory CI uploads.
 
 use dopinf::comm::{self, Communicator, CostModel, Op};
-use dopinf::linalg::{cholesky_solve, eigh, matmul, matmul_tn, syrk, Matrix};
+use dopinf::linalg::{
+    cholesky_solve, eigh, matmul, matmul_tn, matmul_tn_with_threads, syrk, syrk_with_threads,
+    Matrix,
+};
 use dopinf::opinf::learn;
 use dopinf::rom::quadratic::{qhat_sq_rows, s_dim};
 use dopinf::rom::{solve_discrete, RomOperators};
 use dopinf::runtime::Engine;
 use dopinf::util::benchkit::Bench;
+
+/// The pre-compute-plane syrk inner loops, zero-skip branches included,
+/// kept verbatim as the measurement baseline for the "drop the dense
+/// kernels' zero branches" decision (see `linalg::gemm` docs): inputs
+/// post-centering are dense, so the branch never fires on the hot path
+/// — this row quantifies what keeping it would cost/save.
+fn syrk_zero_skip_reference(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows(), a.cols());
+    let mut d = Matrix::zeros(n, n);
+    let ad = a.data();
+    let dd = d.data_mut();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let (r0, rest) = ad[kk * n..].split_at(n);
+        let (r1, rest) = rest.split_at(n);
+        let (r2, rest) = rest.split_at(n);
+        let r3 = &rest[..n];
+        for i in 0..n {
+            let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let drow = &mut dd[i * n + i..(i + 1) * n];
+            for (j, dv) in drow.iter_mut().enumerate() {
+                let jj = i + j;
+                *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
+            }
+        }
+        kk += 4;
+    }
+    for kk in kk..k {
+        let row = &ad[kk * n..(kk + 1) * n];
+        for i in 0..n {
+            let ai = row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let drow = &mut dd[i * n..(i + 1) * n];
+            for j in i..n {
+                drow[j] += ai * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            dd[j * n + i] = dd[i * n + j];
+        }
+    }
+    d
+}
 
 fn main() {
     let mut bench = Bench::new();
@@ -29,6 +87,36 @@ fn main() {
         let q = Matrix::randn(rows, nt, rows as u64);
         bench.run_elems(&format!("gram native syrk {rows}x{nt}"), rows * nt, || syrk(&q));
     }
+
+    // compute-plane sweep on the acceptance shape (T-invariance means
+    // the result bits never move; only the clock does)
+    let q8k = Matrix::randn(8192, nt, 8192);
+    let mut syrk_t1 = f64::NAN;
+    let mut syrk_t4 = f64::NAN;
+    for t in [1usize, 2, 4, 8] {
+        let rep = bench
+            .run_elems(&format!("gram native syrk 8192x{nt} T={t}"), 8192 * nt, || {
+                syrk_with_threads(&q8k, t)
+            })
+            .mean_s;
+        if t == 1 {
+            syrk_t1 = rep;
+        }
+        if t == 4 {
+            syrk_t4 = rep;
+        }
+    }
+    println!(
+        "  -> syrk 8192x{nt} T=4 speedup: {:.2}x (target >= 2.5x)\n",
+        syrk_t1 / syrk_t4
+    );
+
+    // zero-skip branch baseline (satellite measurement: dense inputs,
+    // branch never taken — rows quantify the compare overhead)
+    bench.run_elems(&format!("gram syrk zero-skip reference 8192x{nt}"), 8192 * nt, || {
+        syrk_zero_skip_reference(&q8k)
+    });
+
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let engine = Engine::from_artifacts(std::path::Path::new("artifacts")).unwrap();
         for rows in [2048usize, 8192] {
@@ -77,7 +165,17 @@ fn main() {
     bench.run("lift: V_r = Q T_r (8192x600 @ 600x10)", || matmul(&centered, &tr));
     let vr = matmul(&centered, &tr);
     bench.run("lift: V_r Qtilde (8192x10 @ 10x1200)", || matmul(&vr, &qtilde));
-    bench.run("project: T_rT D (600x10_T @ 600x600)", || matmul_tn(&tr, &syrk(&Matrix::randn(700, nt, 3))));
+    let d_proj = syrk(&Matrix::randn(700, nt, 3));
+    bench.run("project: T_rT D (600x10_T @ 600x600)", || matmul_tn(&tr, &d_proj));
+    for t in [1usize, 2, 4, 8] {
+        bench.run(&format!("project: T_rT D 600x600 T={t}"), || {
+            matmul_tn_with_threads(&tr, &d_proj, t)
+        });
+    }
+
+    // ---- transpose (tiled; serve/batch's IC staging) -------------------
+    let tall = Matrix::randn(65_536, r, 12);
+    bench.run_elems("transpose 65536x10 (tiled)", 65_536 * r, || tall.transpose());
 
     // ---- collectives -----------------------------------------------------
     for p in [2usize, 4, 8] {
@@ -89,5 +187,7 @@ fn main() {
         });
     }
 
-    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+    bench.write_json("results/hotpath.json").expect("write results/hotpath.json");
+    println!("\nwrote results/hotpath.json");
+    println!("(record before/after in EXPERIMENTS.md §Perf)");
 }

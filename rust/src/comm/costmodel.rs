@@ -60,6 +60,52 @@ impl DiskModel {
     }
 }
 
+/// Intra-rank compute-plane model for the node-level scaling
+/// projections: with the deterministic worker pool
+/// ([`crate::linalg::par`]) a rank's `Compute` segment shrinks by the
+/// Amdahl factor below, while `Load`/`Comm`/`Learn` stay serial per
+/// rank (ingestion is I/O-bound, the collectives are the transport's,
+/// and the grid search is already sharded across ranks). `fig4_scaling`
+/// uses this to extend the measured p-sweep into a p × T table — the
+/// paper's 256-core EPYC box runs p ranks × T cores each, and modeling
+/// that term is what lets the strong-scaling figure speak to node-level
+/// speedup instead of rank count alone.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreModel {
+    /// physical cores available to one rank (T is clamped to this)
+    pub cores_per_rank: usize,
+    /// fraction of a rank's compute that stays serial at any T —
+    /// band-partition epilogues (the syrk mirror), carry flushes, and
+    /// the sub-threshold kernels the plane leaves inline
+    pub serial_fraction: f64,
+}
+
+impl CoreModel {
+    /// A node slice like the paper's testbed: 8 cores per rank, a few
+    /// percent serial.
+    pub fn node() -> CoreModel {
+        CoreModel { cores_per_rank: 8, serial_fraction: 0.05 }
+    }
+
+    /// The degenerate single-core rank (speedup ≡ 1 at every T).
+    pub fn single_core() -> CoreModel {
+        CoreModel { cores_per_rank: 1, serial_fraction: 1.0 }
+    }
+
+    /// Amdahl speedup of the `Compute` category at `threads` pool
+    /// workers: `1 / (s + (1-s)/min(T, cores))`.
+    pub fn speedup(&self, threads: usize) -> f64 {
+        let t = threads.max(1).min(self.cores_per_rank.max(1)) as f64;
+        let s = self.serial_fraction.clamp(0.0, 1.0);
+        1.0 / (s + (1.0 - s) / t)
+    }
+
+    /// Modeled wall seconds of a `Compute` segment measured serial.
+    pub fn compute_time(&self, serial_seconds: f64, threads: usize) -> f64 {
+        serial_seconds / self.speedup(threads)
+    }
+}
+
 /// Latency/bandwidth/reduction-op cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -203,6 +249,27 @@ mod tests {
         assert_eq!(DiskModel::free().read_time(1000, 1 << 30), 0.0);
         // bandwidth term scales linearly
         assert!(d.read_time(1, 2 << 20) > d.read_time(1, 1 << 20));
+    }
+
+    #[test]
+    fn core_model_speedup_shape() {
+        let m = CoreModel::node();
+        // T=1 is exactly 1, monotone up to the core count, then flat
+        assert_eq!(m.speedup(1), 1.0);
+        assert!(m.speedup(2) > m.speedup(1));
+        assert!(m.speedup(4) > m.speedup(2));
+        assert!(m.speedup(8) > m.speedup(4));
+        assert_eq!(m.speedup(16), m.speedup(8), "clamped at cores_per_rank");
+        // Amdahl ceiling: never beats 1/serial_fraction
+        assert!(m.speedup(8) < 1.0 / m.serial_fraction);
+        // sub-linear: T=4 yields less than 4x
+        assert!(m.speedup(4) < 4.0);
+        // compute_time divides through
+        assert!((m.compute_time(10.0, 4) - 10.0 / m.speedup(4)).abs() < 1e-12);
+        // the single-core degenerate model never speeds up
+        let one = CoreModel::single_core();
+        assert_eq!(one.speedup(1), 1.0);
+        assert_eq!(one.speedup(64), 1.0);
     }
 
     #[test]

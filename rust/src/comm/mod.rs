@@ -75,7 +75,7 @@ pub mod thread;
 
 pub use clock::{Category, Clock};
 pub use communicator::{fold, Communicator, Op};
-pub use costmodel::{CostModel, DiskModel};
+pub use costmodel::{CoreModel, CostModel, DiskModel};
 pub use error::{abort_on_local_failure, CommError, CommResult};
 pub use selfcomm::SelfComm;
 pub use thread::{run, run_with_clocks, run_with_clocks_timeout, RankCtx};

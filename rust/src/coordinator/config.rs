@@ -164,6 +164,19 @@ pub struct DOpInfConfig {
     /// [`crate::comm::CommError::Timeout`] instead of an indefinite
     /// block. `None` (the default) waits forever, as MPI does.
     pub comm_timeout: Option<f64>,
+    /// compute-plane worker threads per rank (`--threads` /
+    /// `DOPINF_THREADS`): every native hot kernel fans its output rows
+    /// over this many workers through [`crate::linalg::par`]. Results
+    /// are **bitwise identical for every value** (property-tested in
+    /// `tests/integration_pipeline.rs` alongside chunk size, p, and
+    /// transport); only wall time changes.
+    pub threads_per_rank: usize,
+    /// explicit opt-in to `p × threads_per_rank` exceeding the visible
+    /// cores (`--oversubscribe`). Both transports run their ranks as
+    /// local threads, so the product is this process's real thread
+    /// footprint; refusing silently-oversubscribed runs keeps the
+    /// `fig4_scaling`-style CPU-time measurements honest.
+    pub allow_oversubscribe: bool,
 }
 
 impl DOpInfConfig {
@@ -192,6 +205,8 @@ impl DOpInfConfig {
             artifacts_dir: None,
             probes: Vec::new(),
             comm_timeout: None,
+            threads_per_rank: crate::linalg::par::env_threads(),
+            allow_oversubscribe: false,
         }
     }
 }
@@ -284,6 +299,10 @@ mod tests {
         assert!(cfg.probes.is_empty());
         assert!(cfg.comm_timeout.is_none());
         assert!(cfg.disk.bandwidth > 0.0);
+        // threads_per_rank defaults to DOPINF_THREADS or 1 — either way
+        // it must be usable, and oversubscription stays opt-in
+        assert!(cfg.threads_per_rank >= 1);
+        assert!(!cfg.allow_oversubscribe);
         // chunk_rows defaults to None unless DOPINF_TEST_CHUNK_ROWS is
         // set (the chunked CI job) — either way it must be usable
         if let Some(n) = cfg.chunk_rows {

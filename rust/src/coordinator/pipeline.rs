@@ -18,9 +18,11 @@
 //! Per-rank residency is O(`chunk_rows`·n_t) for the data plus the
 //! replicated (n_t, n_t) matrices; `cfg.chunk_rows = None` streams the
 //! block as one chunk. Results are **bitwise identical for every chunk
-//! size, p, and transport**: the streaming accumulators replay the
-//! monolithic kernels' exact operation sequence
-//! ([`crate::opinf::streaming`]), and every reduction funnels through
+//! size, p, transport, and `threads_per_rank`**: the streaming
+//! accumulators replay the monolithic kernels' exact operation sequence
+//! ([`crate::opinf::streaming`]), the intra-rank compute plane
+//! ([`crate::linalg::par`]) partitions only output rows (per-element
+//! operation order untouched), and every reduction funnels through
 //! the rank-ordered `comm::fold` kernel. Property-tested in
 //! `tests/integration_pipeline.rs`.
 //!
@@ -124,6 +126,18 @@ fn prepare(
     anyhow::ensure!(ns_src == ns, "source has {ns_src} variables, config says {ns}");
     anyhow::ensure!(nt >= 2, "need at least 2 snapshots");
     anyhow::ensure!(cfg.p >= 1, "need at least one rank");
+    // thread-transport oversubscription guard: p ranks × T compute-
+    // plane workers is the process's real thread footprint (shared
+    // policy in crate::linalg::par — silently timesharing cores would
+    // corrupt the per-rank CPU-time measurements the scaling figures
+    // rest on, so exceeding the machine requires the explicit opt-in)
+    if let Err(msg) = crate::linalg::par::check_oversubscription(
+        cfg.p,
+        cfg.threads_per_rank.max(1),
+        cfg.allow_oversubscribe,
+    ) {
+        anyhow::bail!("{msg}; lower --procs/--threads or pass --oversubscribe to opt in");
+    }
     let ranges = distribute_tutorial(nx, cfg.p);
     let engine = match &cfg.artifacts_dir {
         Some(dir) => Engine::from_artifacts(dir)?,
@@ -145,6 +159,11 @@ pub fn run_distributed(
     source: &DataSource,
 ) -> Result<DOpInfResult, DOpInfError> {
     let (ranges, engine, pairs, nx, nt) = prepare(cfg, source).map_err(DOpInfError::Setup)?;
+    // arm the intra-rank compute plane: every native hot kernel a rank
+    // calls from here on fans out over threads_per_rank workers. The
+    // knob is process-wide; concurrent runs racing on it can only
+    // affect wall time, never results (bitwise T-invariance).
+    crate::linalg::par::set_threads(cfg.threads_per_rank.max(1));
     let timeout = cfg.comm_timeout.map(std::time::Duration::from_secs_f64);
 
     let outputs: Vec<(Result<RankOut>, Clock)> = if cfg.p == 1 {
@@ -637,6 +656,27 @@ mod tests {
         // the synthetic field has offset ~1.0, so values O(1)
         let v0 = dist.probes[0].values[0];
         assert!(v0.abs() < 10.0 && v0.abs() > 1e-3, "{v0}");
+    }
+
+    #[test]
+    fn oversubscription_requires_opt_in() {
+        let (source, ocfg, _) = test_setup(50);
+        let mut cfg = DOpInfConfig::new(2, ocfg);
+        cfg.cost_model = CostModel::free();
+        // absurd thread count: guaranteed to exceed any machine
+        cfg.threads_per_rank = 1 << 20;
+        match run_distributed(&cfg, &source) {
+            Err(DOpInfError::Setup(e)) => {
+                assert!(format!("{e:#}").contains("oversubscribes"), "{e:#}")
+            }
+            other => panic!("expected a setup refusal, got {:?}", other.map(|r| r.r)),
+        }
+        // the explicit opt-in clears the guard (results stay bitwise
+        // identical at any T; the tiny kernels here just run serial
+        // under the work threshold)
+        cfg.allow_oversubscribe = true;
+        cfg.threads_per_rank = 2;
+        run_distributed(&cfg, &source).unwrap();
     }
 
     #[test]

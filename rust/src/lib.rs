@@ -20,10 +20,13 @@
 //!   memory-bounded data plane** (chunked [`io::BlockReader`]
 //!   ingestion through the [`opinf::streaming`] accumulators — per-rank
 //!   residency is O(chunk_rows·n_t) at any state dimension, results
-//!   bitwise identical to the monolithic path), regularization grid
-//!   search, scaling harness, the 2D Navier-Stokes snapshot generator,
-//!   and all substrates (dense linear algebra, dataset I/O, CLI,
-//!   benches).
+//!   bitwise identical to the monolithic path), a **deterministic
+//!   intra-rank compute plane** ([`linalg::par`]: every native hot
+//!   kernel fans its output rows over `--threads` pool workers with
+//!   results bitwise identical at every thread count), regularization
+//!   grid search, scaling harness, the 2D Navier-Stokes snapshot
+//!   generator, and all substrates (dense linear algebra, dataset I/O,
+//!   CLI, benches).
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime** — [`runtime`] loads the HLO artifacts via PJRT (`xla`

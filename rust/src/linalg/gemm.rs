@@ -1,36 +1,73 @@
-//! Blocked dense matrix products.
+//! Blocked dense matrix products, thread-parallel over output rows.
 //!
-//! The native analogue of the L1 Pallas kernels (`gram.py`, `matmul.py`):
-//! used as the runtime fallback when no PJRT artifact matches the
-//! requested shape, and by all substrates. Cache-blocked with an
-//! `i-k-j` inner ordering so the innermost loop is a contiguous
+//! The native analogue of the L1 Pallas kernels (`gram.py`,
+//! `matmul.py`): used as the runtime fallback when no PJRT artifact
+//! matches the requested shape, and by all substrates. Cache-blocked
+//! with an `i-k-j` inner ordering so the innermost loop is a contiguous
 //! axpy over the output row — the standard scalar-GEMM layout that
 //! autovectorizes well.
+//!
+//! Every kernel here routes through the deterministic compute plane
+//! ([`super::par`]): output rows are partitioned into contiguous bands,
+//! one band per worker. Each output element's floating-point
+//! accumulation order depends only on the shared (k) dimension, so the
+//! results are **bitwise identical for every thread count** — asserted
+//! by the parallel-vs-serial property tests below. The `*_with_threads`
+//! variants take an explicit count (benches, tests); the plain entry
+//! points read the process knob [`super::par::threads`].
+
+use std::ops::Range;
 
 use super::matrix::Matrix;
+use super::par;
 
 /// Cache block edge (elements). 64×64 f64 tiles = 32 KiB per operand
 /// pair, comfortably inside L1+L2 on any target this runs on.
 const BLOCK: usize = 64;
 
-/// `C = A @ B`.
+/// `C = A @ B` with the process-wide thread count.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_with_threads(a, b, par::threads())
+}
+
+/// `C = A @ B` over `threads` workers (row bands of C). Bitwise
+/// identical for every `threads` value.
+pub fn matmul_with_threads(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "inner dimensions differ");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
     let (ad, bd) = (a.data(), b.data());
     let cd = c.data_mut();
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+    let work = m.saturating_mul(k).saturating_mul(n);
+    let nb = par::effective_bands(threads, m, work);
+    par::for_each_band(cd, n, m, nb, |rows, c_band| {
+        matmul_band(c_band, ad, bd, rows, k, n);
+    });
+    c
+}
+
+/// One row band of the blocked product: fills `c_band` (the contiguous
+/// rows `rows` of C) from all of A and B. The k-loop structure is
+/// independent of the banding, so each element accumulates in exactly
+/// the serial order.
+fn matmul_band(c_band: &mut [f64], ad: &[f64], bd: &[f64], rows: Range<usize>, k: usize, n: usize) {
+    for i0 in (rows.start..rows.end).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(rows.end);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for j0 in (0..n).step_by(BLOCK) {
                 let j1 = (j0 + BLOCK).min(n);
                 for i in i0..i1 {
                     let arow = &ad[i * k..(i + 1) * k];
-                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    let li = i - rows.start;
+                    let crow = &mut c_band[li * n + j0..li * n + j1];
                     for kk in k0..k1 {
                         let aik = arow[kk];
+                        // Kept (unlike the syrk/tn kernels): matmul's A
+                        // operand is genuinely zero-heavy on real paths —
+                        // zero-padded tail chunks in the engine fallbacks
+                        // and sparse operator blocks — where skipping a
+                        // whole row-axpy pays for the compare.
                         if aik == 0.0 {
                             continue;
                         }
@@ -43,43 +80,70 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// One rank-1 update `C += a_rowᵀ ⊗ b_row` of a row-major `(m, n)`
-/// accumulator. This is the *only* inner kernel of [`matmul_tn`], shared
-/// verbatim with the streaming
+/// accumulator, restricted to output rows `band` (`c_band` = those
+/// rows' contiguous storage; pass `0..m` with the full matrix for the
+/// serial form). This is the *only* inner kernel of [`matmul_tn`],
+/// shared verbatim with the streaming
 /// [`crate::opinf::streaming::ProjectionAccumulator`] — because the
 /// accumulation is purely row-sequential, feeding the rows in any chunk
 /// partition produces bitwise-identical results to the monolithic
-/// product.
-pub(crate) fn tn_step1(cd: &mut [f64], n: usize, arow: &[f64], brow: &[f64]) {
-    for (i, &aik) in arow.iter().enumerate() {
-        if aik == 0.0 {
-            continue;
-        }
-        let crow = &mut cd[i * n..(i + 1) * n];
+/// product. Dense inner loop: post-centering inputs (snapshot rows,
+/// eigenvector rows) are provably dense, so the old `aik == 0.0` skip
+/// only cost a branch per output row — measured in `benches/hotpath.rs`
+/// against a zero-skip reference.
+pub(crate) fn tn_step1_band(
+    c_band: &mut [f64],
+    n: usize,
+    band: Range<usize>,
+    arow: &[f64],
+    brow: &[f64],
+) {
+    for i in band.clone() {
+        let aik = arow[i];
+        let off = (i - band.start) * n;
+        let crow = &mut c_band[off..off + n];
         for (cv, bv) in crow.iter_mut().zip(brow) {
             *cv += aik * bv;
         }
     }
 }
 
-/// `C = Aᵀ @ B` without materializing the transpose.
+/// `C = Aᵀ @ B` without materializing the transpose (process knob).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_tn_with_threads(a, b, par::threads())
+}
+
+/// `C = Aᵀ @ B` over `threads` workers (row bands of C = column bands
+/// of A). Every band streams the shared (tall) dimension in the same
+/// order, so results are bitwise identical for every `threads` value.
+pub fn matmul_tn_with_threads(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "leading dimensions differ");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
     let (ad, bd) = (a.data(), b.data());
     let cd = c.data_mut();
-    // Stream over the shared (tall) dimension: one pass over A and B.
-    for kk in 0..k {
-        tn_step1(cd, n, &ad[kk * m..(kk + 1) * m], &bd[kk * n..(kk + 1) * n]);
-    }
+    let work = k.saturating_mul(m).saturating_mul(n);
+    let nb = par::effective_bands(threads, m, work);
+    par::for_each_band(cd, n, m, nb, |band, c_band| {
+        // one pass over A and B per band; per-element order is the
+        // serial kk order regardless of the banding
+        for kk in 0..k {
+            tn_step1_band(c_band, n, band.clone(), &ad[kk * m..(kk + 1) * m], &bd[kk * n..(kk + 1) * n]);
+        }
+    });
     c
 }
 
-/// Symmetric rank-k update `D = Aᵀ A` (the Gram hot-spot, paper Eq. 5).
+/// Symmetric rank-k update `D = Aᵀ A` (the Gram hot-spot, paper Eq. 5),
+/// process knob. See [`syrk_with_threads`].
+pub fn syrk(a: &Matrix) -> Matrix {
+    syrk_with_threads(a, par::threads())
+}
+
+/// Symmetric rank-k update `D = Aᵀ A` over `threads` workers.
 ///
 /// Computes only the upper triangle then mirrors — ~2× fewer flops than
 /// `matmul_tn(a, a)`; this is the native fallback for the Pallas `gram`
@@ -88,46 +152,63 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 /// Perf (EXPERIMENTS.md §Perf iter. 4): processes **four** A-rows per
 /// sweep of D (rank-4 update). D is n² ≈ 2.9 MB at nt = 600 — far
 /// beyond L1/L2 — so the D write traffic, not FLOPs, bounds this loop;
-/// the rank-4 fusion quarters it.
-pub fn syrk(a: &Matrix) -> Matrix {
+/// the rank-4 fusion quarters it, and the row-band partition splits it
+/// across workers without changing any element's accumulation order
+/// (bitwise identical for every `threads` value).
+pub fn syrk_with_threads(a: &Matrix, threads: usize) -> Matrix {
     let (k, n) = (a.rows(), a.cols());
     let mut d = Matrix::zeros(n, n);
     let ad = a.data();
     let dd = d.data_mut();
-
-    let mut kk = 0;
-    while kk + 4 <= k {
-        let (r0, rest) = ad[kk * n..].split_at(n);
-        let (r1, rest) = rest.split_at(n);
-        let (r2, rest) = rest.split_at(n);
-        let r3 = &rest[..n];
-        syrk_step4(dd, n, r0, r1, r2, r3);
-        kk += 4;
-    }
-    // remainder rows
-    for kk in kk..k {
-        syrk_step1(dd, n, &ad[kk * n..(kk + 1) * n]);
-    }
+    let work = k.saturating_mul(n).saturating_mul(n) / 2;
+    let nb = par::effective_bands(threads, n, work);
+    par::for_each_band(dd, n, n, nb, |band, dd_band| {
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (r0, rest) = ad[kk * n..].split_at(n);
+            let (r1, rest) = rest.split_at(n);
+            let (r2, rest) = rest.split_at(n);
+            let r3 = &rest[..n];
+            syrk_step4_band(dd_band, n, band.clone(), r0, r1, r2, r3);
+            kk += 4;
+        }
+        // remainder rows
+        for kk in kk..k {
+            syrk_step1_band(dd_band, n, band.clone(), &ad[kk * n..(kk + 1) * n]);
+        }
+    });
     syrk_mirror(dd, n);
     d
 }
 
 /// One fused rank-4 SYRK step: `D[i][i..] += Σ_{q<4} r_q[i]·r_q[i..]`
-/// over the upper triangle of a row-major `(n, n)` accumulator.
+/// over the upper triangle of a row-major `(n, n)` accumulator,
+/// restricted to D rows `band` (`dd_band` = those rows' contiguous
+/// storage; pass `0..n` with the full matrix for the serial form).
 ///
 /// Shared verbatim between [`syrk`] and the streaming
 /// [`crate::opinf::streaming::GramAccumulator`]: as long as the rank-4
 /// groups stay aligned to the absolute row index (the accumulator's
 /// carry buffer guarantees it), every chunk partition of the rows runs
 /// the exact same sequence of floating-point operations — the bitwise
-/// foundation of the chunked data plane.
-pub(crate) fn syrk_step4(dd: &mut [f64], n: usize, r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64]) {
-    for i in 0..n {
+/// foundation of the chunked data plane. The inner loop is dense:
+/// centered snapshot rows are provably dense, so the previous
+/// "all four coefficients zero" skip never fired on the hot path and
+/// only cost four compares per output row (reference comparison kept in
+/// `benches/hotpath.rs`).
+pub(crate) fn syrk_step4_band(
+    dd_band: &mut [f64],
+    n: usize,
+    band: Range<usize>,
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+) {
+    for i in band.clone() {
         let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
-        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-            continue;
-        }
-        let drow = &mut dd[i * n + i..(i + 1) * n];
+        let off = (i - band.start) * n;
+        let drow = &mut dd_band[off + i..off + n];
         for (j, dv) in drow.iter_mut().enumerate() {
             let jj = i + j;
             *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
@@ -139,23 +220,41 @@ pub(crate) fn syrk_step4(dd: &mut [f64], n: usize, r0: &[f64], r1: &[f64], r2: &
 /// remainder path of [`syrk`], also the flush path of the streaming
 /// Gram accumulator.
 pub(crate) fn syrk_step1(dd: &mut [f64], n: usize, row: &[f64]) {
-    for i in 0..n {
+    syrk_step1_band(dd, n, 0..n, row);
+}
+
+/// Band-restricted [`syrk_step1`] (dense inner loop, same rationale as
+/// [`syrk_step4_band`]).
+pub(crate) fn syrk_step1_band(dd_band: &mut [f64], n: usize, band: Range<usize>, row: &[f64]) {
+    for i in band.clone() {
         let ai = row[i];
-        if ai == 0.0 {
-            continue;
-        }
-        let drow = &mut dd[i * n..(i + 1) * n];
+        let off = (i - band.start) * n;
+        let drow = &mut dd_band[off..off + n];
         for j in i..n {
             drow[j] += ai * row[j];
         }
     }
 }
 
-/// Mirror the accumulated upper triangle into the lower half.
+/// Mirror the accumulated upper triangle into the lower half,
+/// tile-by-tile: the naive row sweep wrote one strided column element
+/// per iteration (n² cold-cache touches at nt = 600); walking 64×64
+/// tiles keeps both the read tile and the transposed write tile
+/// resident. Pure data movement — bit-for-bit the same D, in any order.
+/// Serial: it is O(n²) against syrk's O(k·n²) and not worth a fan-out.
 pub(crate) fn syrk_mirror(dd: &mut [f64], n: usize) {
-    for i in 0..n {
-        for j in (i + 1)..n {
-            dd[j * n + i] = dd[i * n + j];
+    for i0 in (0..n).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(n);
+        for j0 in (i0..n).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(n);
+            // within the tile, iterate the *write* rows (j) outer so the
+            // stores stream contiguously along dd[j][i0..]
+            for j in j0.max(i0 + 1)..j1 {
+                let hi = i1.min(j);
+                for i in i0..hi {
+                    dd[j * n + i] = dd[i * n + j];
+                }
+            }
         }
     }
 }
@@ -263,6 +362,17 @@ mod tests {
     }
 
     #[test]
+    fn mirror_exact_across_tile_boundaries() {
+        // sizes straddling the 64 tile edge: mirror must produce an
+        // exactly symmetric D (defect identically zero, not just small)
+        for n in [1usize, 63, 64, 65, 129] {
+            let a = Matrix::randn(2 * n + 3, n, n as u64);
+            let d = syrk(&a);
+            assert_eq!(d.symmetry_defect(), 0.0, "n={n}");
+        }
+    }
+
+    #[test]
     fn gram_additivity() {
         // syrk(vstack(a,b)) == syrk(a) + syrk(b): the Allreduce identity
         let a = Matrix::randn(30, 8, 7);
@@ -271,5 +381,54 @@ mod tests {
         let mut sum = syrk(&a);
         sum.axpy(1.0, &syrk(&b));
         assert!(syrk(&full).max_abs_diff(&sum) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_equal_serial() {
+        // the compute-plane contract at kernel level: every thread
+        // count produces bit-for-bit the serial result. Threshold 0
+        // forces the banded path even for these small inputs.
+        par::set_par_min_elems(0);
+        quick(
+            |rng: &mut Rng| {
+                let m = 1 + rng.below(50) as usize;
+                let k = 1 + rng.below(50) as usize;
+                let n = 1 + rng.below(50) as usize;
+                (
+                    Matrix::randn(m, k, rng.next_u64()), // A  (m, k)
+                    Matrix::randn(k, n, rng.next_u64()), // B  (k, n)
+                    Matrix::randn(k, m, rng.next_u64()), // Aᵀ-shaped (k, m)
+                )
+            },
+            |(a, b, at)| {
+                let mm1 = matmul_with_threads(a, b, 1);
+                let tn1 = matmul_tn_with_threads(at, b, 1);
+                let sy1 = syrk_with_threads(a, 1);
+                for t in [2usize, 3, 4, 7] {
+                    if matmul_with_threads(a, b, t).data() != mm1.data() {
+                        return Err(format!("matmul differs at T={t}"));
+                    }
+                    if matmul_tn_with_threads(at, b, t).data() != tn1.data() {
+                        return Err(format!("matmul_tn differs at T={t}"));
+                    }
+                    if syrk_with_threads(a, t).data() != sy1.data() {
+                        return Err(format!("syrk differs at T={t}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_syrk_bitwise_at_block_boundaries() {
+        par::set_par_min_elems(0);
+        for n in [63usize, 64, 65, 130] {
+            let a = Matrix::randn(2 * n + 1, n, 11 + n as u64);
+            let want = syrk_with_threads(&a, 1);
+            for t in [2usize, 4, 8] {
+                assert_eq!(syrk_with_threads(&a, t).data(), want.data(), "n={n} T={t}");
+            }
+        }
     }
 }

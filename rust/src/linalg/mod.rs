@@ -1,17 +1,28 @@
-//! Dense numerical linear algebra substrate.
+//! Dense numerical linear algebra substrate, with a deterministic
+//! thread-parallel compute plane.
 //!
 //! The paper leans on "standard dense numerical linear algebra
 //! operations ... efficiently implemented in most scientific computing
 //! libraries" (numpy/BLAS/LAPACK). None are available in the vendored
 //! crate set, so this module implements them from scratch:
 //!
-//! * [`matrix::Matrix`] — row-major f64 dense matrix
+//! * [`matrix::Matrix`] — row-major f64 dense matrix (tiled transpose)
 //! * [`gemm`] — blocked matrix-matrix products (`matmul`, `syrk` AᵀA)
+//! * [`par`] — the intra-rank worker pool behind every gemm kernel:
+//!   output rows are partitioned into contiguous bands, one per
+//!   worker, so each element's floating-point accumulation order is
+//!   the serial order and results are **bitwise identical at every
+//!   thread count** (`DOPINF_THREADS` / `--threads` /
+//!   `DOpInfConfig.threads_per_rank`)
 //! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonal +
 //!   implicit-shift QL, the EISPACK `tred2`/`tql2` pair — what LAPACK
 //!   `dsyev` descends from and what `numpy.linalg.eigh` calls)
 //! * [`cholesky`] — SPD factorization/solve for the regularized OpInf
 //!   normal equations (paper Eq. 12)
+//!
+//! `eigh`/`cholesky` stay serial: they are the replicated O(n_t³)/O(r³)
+//! fractions whose inner recurrences are order-sensitive, and they are
+//! not on the data-sized hot path.
 //!
 //! Everything is validated against the JAX/numpy oracles through the
 //! PJRT artifacts in the integration tests.
@@ -20,12 +31,16 @@ pub mod cholesky;
 pub mod eigh;
 pub mod gemm;
 pub mod matrix;
+pub mod par;
 
 pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eigh::eigh;
-pub use gemm::{matmul, matmul_tn, syrk};
+pub use gemm::{
+    matmul, matmul_tn, matmul_tn_with_threads, matmul_with_threads, syrk, syrk_with_threads,
+};
 // inner kernels shared with the streaming accumulators
 // (opinf::streaming) so chunked accumulation is bitwise-identical to
-// the monolithic products by construction
-pub(crate) use gemm::{syrk_mirror, syrk_step1, syrk_step4, tn_step1};
+// the monolithic products by construction; the *_band forms are the
+// same kernels restricted to a compute-plane row band
+pub(crate) use gemm::{syrk_mirror, syrk_step1, syrk_step4_band, tn_step1_band};
 pub use matrix::Matrix;

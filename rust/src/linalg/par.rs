@@ -1,0 +1,299 @@
+//! Deterministic intra-rank compute plane: a `std::thread` fork-join
+//! pool that partitions **output rows** into contiguous bands.
+//!
+//! The distributed pipeline gives each rank one thread no matter how
+//! many cores the machine has; this module is the intra-rank analogue
+//! of the rank partition. Every native hot kernel ([`super::gemm`], the
+//! streaming accumulators in [`crate::opinf::streaming`], the batched
+//! ensemble step in [`crate::serve::batch`]) fans its output rows out
+//! over `threads()` workers.
+//!
+//! ## Why results are bitwise identical at every thread count
+//!
+//! All pool-routed kernels are **output-row accumulations**: each
+//! output element `C[i][j]` is produced by a sequence of floating-point
+//! updates whose order is a function of the *shared* (k) dimension
+//! only, never of which other output rows are computed alongside it.
+//! Partitioning the output rows into contiguous bands hands every
+//! element's complete update sequence to exactly one worker, unchanged
+//! — so the result is bit-for-bit the serial result for **any** band
+//! partition, and in particular for any `T`. This extends the repo's
+//! core invariant (streamed ≡ monolithic ≡ any p ≡ any transport) with
+//! "≡ any T"; `tests/integration_pipeline.rs` property-tests the full
+//! pipeline across `threads_per_rank` × p × transport, and the kernel
+//! suites below check parallel-vs-serial bitwise equality directly.
+//!
+//! Contrast with the *wrong* way to parallelize these kernels —
+//! splitting the shared dimension and summing per-thread partials —
+//! which reassociates the accumulation and changes results with `T`.
+//!
+//! ## Configuration
+//!
+//! The pool size is a process-wide knob: [`threads`] (initialized from
+//! `DOPINF_THREADS`, default 1) read by the kernel entry points, and
+//! [`set_threads`] written by `run_distributed` from
+//! `DOpInfConfig.threads_per_rank` (CLI `--threads`). Because results
+//! are bitwise invariant in `T`, concurrent runs racing on this knob
+//! can only affect performance, never results. Small inputs stay on the
+//! serial path via a work threshold (`par_min_elems`, overridable
+//! through [`set_par_min_elems`]) so chunk-sized folds don't pay
+//! thread-spawn latency; the threshold is likewise results-neutral by
+//! construction.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default minimum output-element work (inner-loop iterations) before a
+/// kernel fans out: below this, spawn latency beats the speedup.
+const DEFAULT_MIN_ELEMS: usize = 1 << 18;
+
+/// 0 = "not yet initialized from the environment".
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+/// usize::MAX = "not yet initialized" (0 is a meaningful override).
+static MIN_ELEMS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// The `DOPINF_THREADS` environment default (1 when unset/invalid).
+pub fn env_threads() -> usize {
+    std::env::var("DOPINF_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+/// Current compute-plane thread count (≥ 1).
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => {
+            // first reader installs the env default — compare_exchange
+            // so a racing set_threads() (e.g. --threads 8 arming the
+            // knob while a worker takes its first read) is never
+            // clobbered back to the default
+            let t = env_threads();
+            match THREADS.compare_exchange(0, t, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => t,
+                Err(current) => current,
+            }
+        }
+        t => t,
+    }
+}
+
+/// Set the compute-plane thread count (clamped to ≥ 1). Results are
+/// bitwise identical for every value; only wall time changes.
+pub fn set_threads(t: usize) {
+    THREADS.store(t.max(1), Ordering::Relaxed);
+}
+
+/// Current serial/parallel work threshold in output elements.
+pub(crate) fn par_min_elems() -> usize {
+    match MIN_ELEMS.load(Ordering::Relaxed) {
+        usize::MAX => DEFAULT_MIN_ELEMS,
+        n => n,
+    }
+}
+
+/// Override the work threshold (test hook: 0 forces every kernel onto
+/// the banded path so tiny property-test inputs exercise it).
+pub fn set_par_min_elems(n: usize) {
+    MIN_ELEMS.store(n, Ordering::Relaxed);
+}
+
+/// The oversubscription policy shared by every CLI surface: both
+/// transports and the serve worker pool run their ranks as threads of
+/// this process, so `ranks × threads` is the real thread footprint.
+/// Returns the refusal message when the product exceeds the visible
+/// cores and the caller has not opted in; `threads == 1` is always
+/// allowed (results are bitwise T-invariant either way — the guard
+/// protects the per-rank CPU-time measurements, not correctness).
+pub fn check_oversubscription(ranks: usize, threads: usize, opt_in: bool) -> Result<(), String> {
+    if threads <= 1 || opt_in {
+        return Ok(());
+    }
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let total = ranks.saturating_mul(threads);
+    if total <= cores {
+        Ok(())
+    } else {
+        Err(format!(
+            "{ranks} ranks x {threads} threads/rank = {total} worker threads oversubscribes \
+             the {cores} visible cores"
+        ))
+    }
+}
+
+/// Contiguous near-equal partition of `rows` into at most `max_bands`
+/// bands (empty for `rows == 0`; never more bands than rows).
+pub fn bands(rows: usize, max_bands: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let b = max_bands.max(1).min(rows);
+    let base = rows / b;
+    let extra = rows % b;
+    let mut out = Vec::with_capacity(b);
+    let mut start = 0;
+    for i in 0..b {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Band count a kernel should actually use: 1 (serial inline) unless
+/// `threads > 1`, there are at least two output rows, and the total
+/// inner-loop work clears [`par_min_elems`].
+pub(crate) fn effective_bands(threads: usize, rows: usize, work_elems: usize) -> usize {
+    effective_bands_with_min(threads, rows, work_elems, par_min_elems())
+}
+
+fn effective_bands_with_min(threads: usize, rows: usize, work_elems: usize, min: usize) -> usize {
+    if threads <= 1 || rows < 2 || work_elems < min {
+        1
+    } else {
+        threads.min(rows)
+    }
+}
+
+/// Run `f` once per contiguous band of `rows` output rows. Band
+/// `r0..r1` receives `&mut out[r0*stride .. r1*stride]` — its own rows
+/// of the output, exclusively. With a single band, runs inline on the
+/// caller (no threads touched); otherwise the caller executes band 0
+/// while `nbands - 1` scoped workers take the rest. Returns after every
+/// band completes.
+pub(crate) fn for_each_band<F>(out: &mut [f64], stride: usize, rows: usize, nbands: usize, f: F)
+where
+    F: Fn(Range<usize>, &mut [f64]) + Sync,
+{
+    debug_assert!(out.len() >= rows * stride, "output slice too short for its rows");
+    let parts = bands(rows, nbands);
+    if parts.len() <= 1 {
+        f(0..rows, &mut out[..rows * stride]);
+        return;
+    }
+    let (head, tail) = parts.split_first().expect("at least two bands");
+    let (head_slice, mut rest) = out[..rows * stride].split_at_mut(head.end * stride);
+    std::thread::scope(|s| {
+        for part in tail {
+            let buf = std::mem::take(&mut rest);
+            let (mine, next) = buf.split_at_mut((part.end - part.start) * stride);
+            rest = next;
+            let range = part.clone();
+            let fref = &f;
+            s.spawn(move || fref(range, mine));
+        }
+        f(head.clone(), head_slice);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_cover_contiguously() {
+        for rows in [0usize, 1, 2, 5, 7, 64, 997] {
+            for t in [1usize, 2, 3, 4, 8, 1000] {
+                let parts = bands(rows, t);
+                if rows == 0 {
+                    assert!(parts.is_empty());
+                    continue;
+                }
+                assert!(parts.len() <= t.max(1) && parts.len() <= rows);
+                assert_eq!(parts[0].start, 0, "rows={rows} t={t}");
+                assert_eq!(parts.last().unwrap().end, rows, "rows={rows} t={t}");
+                for w in parts.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "rows={rows} t={t}");
+                }
+                // near-equal: lengths differ by at most one
+                let lens: Vec<usize> = parts.iter().map(|r| r.end - r.start).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1, "rows={rows} t={t}: {lens:?}");
+                assert!(*lo >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_band_touches_every_row_once() {
+        let rows = 37;
+        let stride = 3;
+        let mut out = vec![0.0f64; rows * stride];
+        for_each_band(&mut out, stride, rows, 4, |band, slice| {
+            assert_eq!(slice.len(), (band.end - band.start) * stride);
+            for i in band.clone() {
+                let local = (i - band.start) * stride;
+                for j in 0..stride {
+                    slice[local + j] += (i * stride + j) as f64 + 1.0;
+                }
+            }
+        });
+        for (idx, v) in out.iter().enumerate() {
+            assert_eq!(*v, idx as f64 + 1.0, "row element {idx} written exactly once");
+        }
+    }
+
+    #[test]
+    fn single_band_runs_inline() {
+        let mut out = vec![0.0f64; 8];
+        let caller = std::thread::current().id();
+        for_each_band(&mut out, 2, 4, 1, |band, _| {
+            assert_eq!(band, 0..4);
+            assert_eq!(std::thread::current().id(), caller);
+        });
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let mut out: Vec<f64> = Vec::new();
+        for_each_band(&mut out, 5, 0, 4, |band, slice| {
+            assert_eq!(band, 0..0);
+            assert!(slice.is_empty());
+        });
+    }
+
+    #[test]
+    fn effective_bands_gates() {
+        // explicit threshold (the global knob is shared test state)
+        assert_eq!(effective_bands_with_min(4, 100, 10, 1 << 18), 1);
+        assert_eq!(effective_bands_with_min(4, 100, usize::MAX, 1 << 18), 4);
+        // threshold 0 forces the banded path
+        assert_eq!(effective_bands_with_min(4, 100, 0, 0), 4);
+        // serial requests stay serial
+        assert_eq!(effective_bands_with_min(1, 1 << 20, usize::MAX, 0), 1);
+        // never more bands than rows
+        assert_eq!(effective_bands_with_min(8, 3, usize::MAX, 0), 3);
+        assert_eq!(effective_bands_with_min(8, 1, usize::MAX, 0), 1);
+    }
+
+    #[test]
+    fn oversubscription_policy() {
+        // threads = 1 and explicit opt-in always pass
+        assert!(check_oversubscription(1 << 20, 1, false).is_ok());
+        assert!(check_oversubscription(1 << 20, 1 << 20, true).is_ok());
+        // an absurd product is refused with the canonical message
+        let msg = check_oversubscription(1 << 20, 1 << 20, false).unwrap_err();
+        assert!(msg.contains("oversubscribes"), "{msg}");
+        // a footprint of 1x2 <= cores passes on any machine with 2+
+        // cores; on a 1-core machine it is refused — both are valid,
+        // so only assert consistency with the visible count
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        assert_eq!(check_oversubscription(1, 2, false).is_ok(), 2 <= cores);
+    }
+
+    #[test]
+    fn thread_knob_invariants() {
+        // THREADS is process-global and other lib tests (every
+        // run_distributed call) store to it concurrently, so asserting
+        // a specific value here would be racy. The testable invariants:
+        // the env default is >= 1, and the knob can never observe 0
+        // regardless of interleaving (both the env init and set_threads
+        // clamp before storing).
+        assert!(env_threads() >= 1);
+        set_threads(0); // clamped on store
+        for _ in 0..100 {
+            assert!(threads() >= 1);
+        }
+    }
+}

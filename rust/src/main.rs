@@ -166,6 +166,8 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "comm-timeout", help: "communication deadline in seconds (rendezvous + every collective); a dead rank fails the run instead of hanging it", default: None, is_flag: false },
         OptSpec { name: "chunk-rows", help: "stream ingestion in chunks of N local rows (default: whole block; native-engine results are bitwise identical)", default: None, is_flag: false },
         OptSpec { name: "memory-budget-mb", help: "derive the ingestion chunk size from a per-rank memory budget (MiB)", default: None, is_flag: false },
+        OptSpec { name: "threads", help: "compute-plane worker threads per rank (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
+        OptSpec { name: "oversubscribe", help: "allow procs x threads to exceed the visible cores (timesharing skews per-rank CPU timings)", default: None, is_flag: true },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -217,6 +219,11 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
     let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
     cfg.transport = parse_transport(a.get_or("transport", "threads"))?;
     cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
+    // intra-rank compute plane: p ranks x T worker threads (bitwise
+    // identical results at any T — only wall time changes)
+    cfg.threads_per_rank = a.get_parse("threads", dopinf::linalg::par::env_threads())?;
+    anyhow::ensure!(cfg.threads_per_rank >= 1, "--threads must be >= 1");
+    cfg.allow_oversubscribe = a.flag("oversubscribe");
     if let Some(v) = a.get("comm-timeout") {
         let secs: f64 = v.parse().context("--comm-timeout")?;
         anyhow::ensure!(secs > 0.0, "--comm-timeout must be positive");
@@ -470,6 +477,8 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
         OptSpec { name: "sigma", help: "relative std-dev of IC perturbations", default: Some("0.01"), is_flag: false },
         OptSpec { name: "steps", help: "rollout horizon per member", default: Some("1200"), is_flag: false },
         OptSpec { name: "workers", help: "rank workers to shard members over", default: Some("4"), is_flag: false },
+        OptSpec { name: "threads", help: "compute-plane worker threads per rank worker (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
+        OptSpec { name: "oversubscribe", help: "allow workers x threads to exceed the visible cores", default: None, is_flag: true },
         OptSpec { name: "seed", help: "ensemble RNG seed", default: Some("7"), is_flag: false },
         OptSpec { name: "results", help: "results output dir", default: Some("results"), is_flag: false },
         OptSpec { name: "artifacts", help: "PJRT artifacts dir (omit for native)", default: None, is_flag: false },
@@ -488,6 +497,23 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
     let model_path = a.get("model").context("--model is required (train with --save-rom)")?;
     let artifact = RomArtifact::load(model_path)?;
     let n_steps: usize = a.get_parse("steps", 1200)?;
+    // arm the compute plane for the batched rollout (bitwise identical
+    // results at any value; member bands carry the parallelism). Same
+    // oversubscription guard as the training pipeline: rank workers are
+    // threads of this process, so workers x threads is the real thread
+    // footprint (the reg-ensemble path is single-process: workers = 1).
+    let threads: usize = a.get_parse("threads", dopinf::linalg::par::env_threads())?;
+    anyhow::ensure!(threads >= 1, "--threads must be >= 1");
+    let guard_workers: usize =
+        if a.flag("reg-ensemble") { 1 } else { a.get_parse("workers", 4)? };
+    if let Err(msg) = dopinf::linalg::par::check_oversubscription(
+        guard_workers,
+        threads,
+        a.flag("oversubscribe"),
+    ) {
+        bail!("{msg}; lower --workers/--threads or pass --oversubscribe to opt in");
+    }
+    dopinf::linalg::par::set_threads(threads);
     if !artifact.meta.is_empty() {
         let meta: Vec<String> =
             artifact.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();

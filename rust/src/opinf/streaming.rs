@@ -42,14 +42,27 @@
 //! Combined with the rank-ordered `comm::fold` reduction kernel, the
 //! whole distributed pipeline is bitwise invariant in (chunk size, p,
 //! transport) — property-tested in `tests/integration_pipeline.rs`.
+//!
+//! Since the compute-plane change the per-chunk work also fans out over
+//! [`crate::linalg::par`] worker threads: the accumulators replay their
+//! kernels over contiguous **output-row bands** (rows of D, rows of C)
+//! and the transform over chunk-row bands, which leaves every element's
+//! floating-point operation sequence untouched — so the invariant
+//! extends to (chunk size, p, transport, **T**). Thread counts come
+//! from `DOpInfConfig.threads_per_rank` via the process knob (or the
+//! `with_threads` constructors, used by the property tests).
 
-use crate::linalg::{syrk_mirror, syrk_step1, syrk_step4, tn_step1, Matrix};
+use crate::linalg::par;
+use crate::linalg::{syrk_mirror, syrk_step1, syrk_step4_band, tn_step1_band, Matrix};
 
 /// Accumulates `D = Σ_b Q_bᵀ Q_b` over row chunks of a tall matrix,
 /// bitwise identical to `syrk` of the vertically stacked chunks.
 #[derive(Clone, Debug)]
 pub struct GramAccumulator {
     nt: usize,
+    /// compute-plane width for the per-chunk fold (results are bitwise
+    /// identical for every value)
+    threads: usize,
     d: Matrix,
     rows_seen: usize,
     /// 0–3 buffered rows so the fused rank-4 groups stay aligned to the
@@ -60,8 +73,15 @@ pub struct GramAccumulator {
 
 impl GramAccumulator {
     pub fn new(nt: usize) -> GramAccumulator {
+        GramAccumulator::with_threads(nt, par::threads())
+    }
+
+    /// Accumulator with an explicit compute-plane width (tests/benches;
+    /// [`GramAccumulator::new`] reads the process knob).
+    pub fn with_threads(nt: usize, threads: usize) -> GramAccumulator {
         GramAccumulator {
             nt,
+            threads: threads.max(1),
             d: Matrix::zeros(nt, nt),
             rows_seen: 0,
             carry: Vec::with_capacity(4 * nt),
@@ -82,25 +102,66 @@ impl GramAccumulator {
             self.carry.extend_from_slice(&bd[next * n..(next + 1) * n]);
             next += 1;
         }
-        let dd = self.d.data_mut();
-        if self.carry.len() == 4 * n {
-            let (r0, rest) = self.carry.split_at(n);
-            let (r1, rest) = rest.split_at(n);
-            let (r2, r3) = rest.split_at(n);
-            syrk_step4(dd, n, r0, r1, r2, r3);
+        // this push's aligned rank-4 group sequence — the completed
+        // carry group first, then whole groups straight from the chunk
+        // — is what syrk would run monolithically; banding D's rows
+        // replays it once per band without touching any element's
+        // operation order
+        let carry_full = self.carry.len() == 4 * n;
+        let chunk_groups = (rows - next) / 4;
+        let tail = next + 4 * chunk_groups;
+        let ngroups = usize::from(carry_full) + chunk_groups;
+        if ngroups > 0 {
+            let work = ngroups.saturating_mul(2 * n).saturating_mul(n);
+            let nb = par::effective_bands(self.threads, n, work);
+            let dd = self.d.data_mut();
+            let carry_group: Option<[&[f64]; 4]> = if carry_full {
+                let (r0, rest) = self.carry.split_at(n);
+                let (r1, rest) = rest.split_at(n);
+                let (r2, r3) = rest.split_at(n);
+                Some([r0, r1, r2, r3])
+            } else {
+                None
+            };
+            if nb <= 1 {
+                // serial: replay straight through, no staging allocation
+                // (the common case with small chunks — chunk_rows = 7)
+                if let Some(g) = &carry_group {
+                    syrk_step4_band(dd, n, 0..n, g[0], g[1], g[2], g[3]);
+                }
+                let mut at = next;
+                while at + 4 <= rows {
+                    let (r0, rest) = bd[at * n..].split_at(n);
+                    let (r1, rest) = rest.split_at(n);
+                    let (r2, rest) = rest.split_at(n);
+                    syrk_step4_band(dd, n, 0..n, r0, r1, r2, &rest[..n]);
+                    at += 4;
+                }
+            } else {
+                let mut groups: Vec<[&[f64]; 4]> = Vec::with_capacity(ngroups);
+                if let Some(g) = carry_group {
+                    groups.push(g);
+                }
+                let mut at = next;
+                while at + 4 <= rows {
+                    let (r0, rest) = bd[at * n..].split_at(n);
+                    let (r1, rest) = rest.split_at(n);
+                    let (r2, rest) = rest.split_at(n);
+                    groups.push([r0, r1, r2, &rest[..n]]);
+                    at += 4;
+                }
+                par::for_each_band(dd, n, n, nb, |band, dd_band| {
+                    for g in &groups {
+                        syrk_step4_band(dd_band, n, band.clone(), g[0], g[1], g[2], g[3]);
+                    }
+                });
+            }
+        }
+        if carry_full {
             self.carry.clear();
         }
-        // whole rank-4 groups straight from the chunk
-        while next + 4 <= rows {
-            let (r0, rest) = bd[next * n..].split_at(n);
-            let (r1, rest) = rest.split_at(n);
-            let (r2, rest) = rest.split_at(n);
-            let r3 = &rest[..n];
-            syrk_step4(dd, n, r0, r1, r2, r3);
-            next += 4;
-        }
         // buffer the tail (< 4 rows) for the next chunk
-        self.carry.extend_from_slice(&bd[next * n..rows * n]);
+        self.carry.extend_from_slice(&bd[tail * n..rows * n]);
     }
 
     pub fn rows_seen(&self) -> usize {
@@ -136,6 +197,9 @@ impl GramAccumulator {
 pub struct ProjectionAccumulator {
     m: usize,
     n: usize,
+    /// compute-plane width for the per-chunk fold (results are bitwise
+    /// identical for every value)
+    threads: usize,
     c: Matrix,
     rows_seen: usize,
 }
@@ -144,20 +208,48 @@ impl ProjectionAccumulator {
     /// Accumulator for an `(m, n)` product `AᵀB` with `A: (k, m)`,
     /// `B: (k, n)` streamed in row chunks.
     pub fn new(m: usize, n: usize) -> ProjectionAccumulator {
-        ProjectionAccumulator { m, n, c: Matrix::zeros(m, n), rows_seen: 0 }
+        ProjectionAccumulator::with_threads(m, n, par::threads())
+    }
+
+    /// Accumulator with an explicit compute-plane width (tests/benches;
+    /// [`ProjectionAccumulator::new`] reads the process knob).
+    pub fn with_threads(m: usize, n: usize, threads: usize) -> ProjectionAccumulator {
+        ProjectionAccumulator {
+            m,
+            n,
+            threads: threads.max(1),
+            c: Matrix::zeros(m, n),
+            rows_seen: 0,
+        }
     }
 
     /// Fold one paired chunk: `a` and `b` hold the same rows
-    /// `[seen, seen + chunk)` of their full matrices.
+    /// `[seen, seen + chunk)` of their full matrices. The rank-1 update
+    /// sequence is row-sequential per output element, so banding C's
+    /// rows across the compute plane leaves every element's operation
+    /// order — and therefore the bits — unchanged.
     pub fn push(&mut self, a: &Matrix, b: &Matrix) {
         assert_eq!(a.rows(), b.rows(), "paired chunk row count");
         assert_eq!(a.cols(), self.m, "left chunk column count");
         assert_eq!(b.cols(), self.n, "right chunk column count");
+        let rows = a.rows();
+        let (m, n) = (self.m, self.n);
+        let (ad, bd) = (a.data(), b.data());
         let cd = self.c.data_mut();
-        for k in 0..a.rows() {
-            tn_step1(cd, self.n, a.row(k), b.row(k));
-        }
-        self.rows_seen += a.rows();
+        let work = rows.saturating_mul(m).saturating_mul(n);
+        let nb = par::effective_bands(self.threads, m, work);
+        par::for_each_band(cd, n, m, nb, |band, c_band| {
+            for kk in 0..rows {
+                tn_step1_band(
+                    c_band,
+                    n,
+                    band.clone(),
+                    &ad[kk * m..(kk + 1) * m],
+                    &bd[kk * n..(kk + 1) * n],
+                );
+            }
+        });
+        self.rows_seen += rows;
     }
 
     pub fn rows_seen(&self) -> usize {
@@ -223,7 +315,9 @@ pub fn chunk_stats(
 /// (zero scales act as 1, like `apply_scaling`). The elementwise
 /// operations match `center_rows` + `apply_scaling` exactly, so the
 /// transformed chunk is bitwise identical to the corresponding rows of
-/// the monolithically transformed block.
+/// the monolithically transformed block. Row-local, so the chunk rows
+/// fan out over the compute plane (process knob) without any effect on
+/// the bits.
 pub fn apply_chunk_transform(
     chunk: &mut Matrix,
     start_row: usize,
@@ -231,21 +325,42 @@ pub fn apply_chunk_transform(
     means: &[f64],
     scales: Option<&[f64]>,
 ) {
+    apply_chunk_transform_with_threads(chunk, start_row, rows_per_var, means, scales, par::threads())
+}
+
+/// [`apply_chunk_transform`] with an explicit compute-plane width
+/// (tests/benches).
+pub fn apply_chunk_transform_with_threads(
+    chunk: &mut Matrix,
+    start_row: usize,
+    rows_per_var: usize,
+    means: &[f64],
+    scales: Option<&[f64]>,
+    threads: usize,
+) {
     assert!(rows_per_var > 0, "empty per-variable row range");
-    for i in 0..chunk.rows() {
-        let li = start_row + i;
-        let mean = means[li];
-        let row = chunk.row_mut(i);
-        for v in row.iter_mut() {
-            *v -= mean;
-        }
-        if let Some(sc) = scales {
-            let s = super::transform::effective_scale(sc[li / rows_per_var]);
+    let rows = chunk.rows();
+    let cols = chunk.cols();
+    let work = rows.saturating_mul(cols);
+    let nb = par::effective_bands(threads, rows, work);
+    let data = chunk.data_mut();
+    par::for_each_band(data, cols, rows, nb, |band, band_rows| {
+        for i in band.clone() {
+            let li = start_row + i;
+            let mean = means[li];
+            let off = (i - band.start) * cols;
+            let row = &mut band_rows[off..off + cols];
             for v in row.iter_mut() {
-                *v /= s;
+                *v -= mean;
+            }
+            if let Some(sc) = scales {
+                let s = super::transform::effective_scale(sc[li / rows_per_var]);
+                for v in row.iter_mut() {
+                    *v /= s;
+                }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -343,6 +458,55 @@ mod tests {
     fn projection_rejects_mismatched_pairs() {
         let mut acc = ProjectionAccumulator::new(2, 3);
         acc.push(&Matrix::zeros(4, 2), &Matrix::zeros(3, 3));
+    }
+
+    #[test]
+    fn parallel_folds_bitwise_equal_serial() {
+        // the compute-plane contract at accumulator level: any thread
+        // count, any chunking — bit-for-bit the serial syrk/matmul_tn.
+        // Threshold 0 forces the banded path for these small inputs.
+        crate::linalg::par::set_par_min_elems(0);
+        let mut rng = Rng::new(31);
+        for case in 0..8 {
+            let rows = 5 + rng.below(90) as usize;
+            let nt = 2 + rng.below(12) as usize;
+            let q = Matrix::randn(rows, nt, 500 + case);
+            let want_d = crate::linalg::syrk_with_threads(&q, 1);
+            let b = Matrix::randn(rows, 7, 900 + case);
+            let want_c = crate::linalg::matmul_tn_with_threads(&q, &b, 1);
+            for t in [2usize, 4] {
+                let mut gram = GramAccumulator::with_threads(nt, t);
+                let mut proj = ProjectionAccumulator::with_threads(nt, 7, t);
+                let mut start = 0;
+                while start < rows {
+                    let end = (start + 1 + rng.below(8) as usize).min(rows);
+                    gram.push(&q.slice_rows(start, end));
+                    proj.push(&q.slice_rows(start, end), &b.slice_rows(start, end));
+                    start = end;
+                }
+                assert_eq!(gram.finish().data(), want_d.data(), "gram case {case} T={t}");
+                assert_eq!(proj.finish().data(), want_c.data(), "proj case {case} T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunk_transform_bitwise() {
+        crate::linalg::par::set_par_min_elems(0);
+        let ns = 2;
+        let per = 17;
+        let nt = 9;
+        let q0 = Matrix::randn(ns * per, nt, 77);
+        let mut means = Vec::new();
+        let mut maxabs = vec![0.0f64; ns];
+        chunk_stats(&q0, 0, per, &mut means, &mut maxabs);
+        let mut want = q0.clone();
+        apply_chunk_transform_with_threads(&mut want, 0, per, &means, Some(&maxabs), 1);
+        for t in [2usize, 4, 8] {
+            let mut got = q0.clone();
+            apply_chunk_transform_with_threads(&mut got, 0, per, &means, Some(&maxabs), t);
+            assert_eq!(got.data(), want.data(), "T={t}");
+        }
     }
 
     #[test]

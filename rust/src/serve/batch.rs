@@ -10,8 +10,9 @@
 //! Q_nextᵀ = O @ Xᵀ        (r, B)
 //! ```
 //!
-//! — one blocked product per step through [`Engine::gemm`] (PJRT
-//! artifact when the shape matches, native `linalg::matmul` otherwise)
+//! — one blocked product per step ([`Engine::gemm`] when a PJRT
+//! artifact matches the shape, the native `linalg::matmul` at the
+//! requested compute-plane width otherwise)
 //! whose innermost loop streams contiguously across all B members: the
 //! quadratic expansion is B-wide elementwise row products, and every
 //! operator coefficient is applied as a length-B axpy. Columns are
@@ -20,8 +21,28 @@
 //! and the member is deactivated (column zeroed, its `1`-row entry
 //! cleared) so the survivors keep full GEMM throughput — the batched
 //! analogue of `solve_discrete`'s early exit.
+//!
+//! ## The compute plane: member bands
+//!
+//! On the native engine the rollout additionally fans out over
+//! [`crate::linalg::par`] worker threads by partitioning the members
+//! into contiguous **column bands** of the state block. Each worker
+//! advances its own band through the whole horizon (band-local
+//! quadratic expansion, band-local GEMM, band-local divergence
+//! freezing), and the per-step visitor runs on the caller after a
+//! barrier, over the reassembled full `(r, B)` state. Because every
+//! member column's arithmetic is independent of which other columns
+//! share its GEMM — each output element accumulates over the shared
+//! `r+s+1` dimension in the same order at any width — the trajectory of
+//! every member is **bitwise identical for every thread count**
+//! (property-tested below). With PJRT artifacts loaded, band widths
+//! could select different artifact/native routes, so the banded path is
+//! native-only; the artifact path keeps the single full-width GEMM.
 
-use crate::linalg::Matrix;
+use std::ops::Range;
+use std::sync::{Barrier, Mutex};
+
+use crate::linalg::{matmul_with_threads, par, Matrix};
 use crate::rom::quadratic::s_dim;
 use crate::rom::RomOperators;
 use crate::runtime::Engine;
@@ -78,17 +99,36 @@ impl BatchTrajectory {
 /// is the **transposed** `(r, B)` state matrix — member `i` is column
 /// `i` — so per-probe evaluation is a contiguous B-wide axpy. Columns
 /// of members already frozen are zero. Returns per-member divergence
-/// steps.
+/// steps. The visitor always runs on the calling thread, in step order.
 ///
 /// This is the streaming entry point: `serve::ensemble` accumulates
 /// probe statistics per step without ever materializing B full
-/// trajectories; [`rollout_batch`] is a thin wrapper that does.
+/// trajectories; [`rollout_batch`] is a thin wrapper that does. Uses
+/// the process-wide compute-plane width ([`par::threads`]); see
+/// [`rollout_batch_threaded`] for an explicit count.
 pub fn rollout_batch_with<F>(
     engine: &Engine,
     ops: &RomOperators,
     q0s: &Matrix,
     n_steps: usize,
-    mut visit: F,
+    visit: F,
+) -> Vec<Option<usize>>
+where
+    F: FnMut(usize, &Matrix, &[Option<usize>]),
+{
+    rollout_batch_threaded(engine, ops, q0s, n_steps, par::threads(), visit)
+}
+
+/// [`rollout_batch_with`] with an explicit compute-plane width.
+/// Results — every state of every member, every divergence flag — are
+/// bitwise identical for every `threads` value.
+pub fn rollout_batch_threaded<F>(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+    threads: usize,
+    visit: F,
 ) -> Vec<Option<usize>>
 where
     F: FnMut(usize, &Matrix, &[Option<usize>]),
@@ -99,6 +139,83 @@ where
     assert!(n_steps >= 1);
     let s = s_dim(r);
     let d = r + s + 1;
+    // per-step flops: the (r, d) @ (d, band) GEMM plus the quadratic
+    // expansion; below the plane threshold the barrier latency beats
+    // the speedup and the serial path wins
+    let step_work = b
+        .saturating_mul(d)
+        .saturating_mul(r)
+        .saturating_mul(2)
+        .saturating_add(b.saturating_mul(s));
+    let t = threads.max(1).min(b);
+    if engine.has_artifacts() || t <= 1 || step_work < par::par_min_elems() {
+        rollout_serial(engine, ops, q0s, n_steps, t, visit)
+    } else {
+        rollout_banded(engine, ops, q0s, n_steps, t, visit)
+    }
+}
+
+/// Flag columns whose state went non-finite at `step`, appending the
+/// newly flagged column indices. Member-local by construction; shared
+/// verbatim between the serial and banded paths so the bitwise
+/// T-invariance contract cannot drift between them.
+fn scan_nonfinite_columns(
+    states_t: &Matrix,
+    diverged: &mut [Option<usize>],
+    step: usize,
+    newly_bad: &mut Vec<usize>,
+) {
+    let r = states_t.rows();
+    for i in 0..states_t.cols() {
+        if diverged[i].is_none() && (0..r).any(|j| !states_t[(j, i)].is_finite()) {
+            diverged[i] = Some(step);
+            newly_bad.push(i);
+        }
+    }
+}
+
+/// Zero the listed state columns (the first bad state has already been
+/// visited/deposited; zeros from here on, like `solve_discrete`'s
+/// early exit).
+fn zero_columns(qt: &mut Matrix, cols: &[usize]) {
+    let r = qt.rows();
+    for &i in cols {
+        for j in 0..r {
+            qt[(j, i)] = 0.0;
+        }
+    }
+}
+
+/// Freeze newly diverged members: zero the state column and clear the
+/// constant/mask-row entry so `Â·0 + Ĥ·0 + ĉ·0` stays exactly zero.
+fn freeze_columns(qt: &mut Matrix, xt: &mut Matrix, cols: &[usize]) {
+    zero_columns(qt, cols);
+    let d = xt.rows();
+    for &i in cols {
+        xt[(d - 1, i)] = 0.0;
+    }
+}
+
+/// The single-coordinator path: one full-width GEMM per step — the
+/// PJRT artifact when one matches, otherwise the native product at
+/// exactly the requested width (NOT the process knob, so an explicit
+/// `threads = 1` is honestly serial even when the global knob is armed
+/// — the T-sweep benches depend on that).
+fn rollout_serial<F>(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+    threads: usize,
+    mut visit: F,
+) -> Vec<Option<usize>>
+where
+    F: FnMut(usize, &Matrix, &[Option<usize>]),
+{
+    let r = ops.r;
+    let b = q0s.rows();
+    let s = s_dim(r);
+    let d = r + s + 1;
 
     // O = [Â | Ĥ | ĉ] — the stacked step operator (paper Eq. 12 layout).
     let o = ops.ahat.hstack(&ops.fhat).hstack(&Matrix::from_vec(r, 1, ops.chat.clone()));
@@ -106,19 +223,11 @@ where
     let mut diverged_at: Vec<Option<usize>> = vec![None; b];
     // transposed states: one column per member
     let mut qt = q0s.transpose(); // (r, B)
-    for i in 0..b {
-        if (0..r).any(|j| !qt[(j, i)].is_finite()) {
-            diverged_at[i] = Some(0);
-        }
-    }
+    let mut newly_bad = Vec::new();
+    scan_nonfinite_columns(&qt, &mut diverged_at, 0, &mut newly_bad);
     visit(0, &qt, &diverged_at);
-    for i in 0..b {
-        if diverged_at[i].is_some() {
-            for j in 0..r {
-                qt[(j, i)] = 0.0;
-            }
-        }
-    }
+    // bad ICs: first state visited above, zero from here on
+    zero_columns(&mut qt, &newly_bad);
 
     // augmented transposed state Xᵀ = [Q; Q ⊗' Q; 1], rebuilt per step
     let mut xt = Matrix::zeros(d, b);
@@ -127,51 +236,195 @@ where
     for i in 0..b {
         xt[(d - 1, i)] = if diverged_at[i].is_none() { 1.0 } else { 0.0 };
     }
-    let mut newly_bad = Vec::new();
     for k in 0..n_steps - 1 {
-        // rows 0..r: copy the states (contiguous row copies)
-        xt.data_mut()[..r * b].copy_from_slice(qt.data());
-        // rows r..r+s: B-wide elementwise products q_a * q_b
-        {
-            let (state_rows, quad_rows) = xt.data_mut().split_at_mut(r * b);
-            let mut col = 0;
-            for a in 0..r {
-                let ra = &state_rows[a * b..(a + 1) * b];
-                for bb in a..r {
-                    let rb = &state_rows[bb * b..(bb + 1) * b];
-                    let dst = &mut quad_rows[col * b..(col + 1) * b];
-                    for ((dv, &x), &y) in dst.iter_mut().zip(ra).zip(rb) {
-                        *dv = x * y;
-                    }
-                    col += 1;
-                }
-            }
-        }
+        build_augmented(&mut xt, &qt, r, b);
 
-        let next_t = engine.gemm(&o, &xt); // (r, B)
+        // (r, B) step product
+        let next_t = if engine.has_artifacts() {
+            engine.gemm(&o, &xt)
+        } else {
+            // keep the engine's dispatch telemetry honest even though
+            // the product runs off-engine at the requested width
+            engine.stats.native_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            matmul_with_threads(&o, &xt, threads)
+        };
 
         // member-local divergence scan (columns are independent)
         newly_bad.clear();
-        for i in 0..b {
-            if diverged_at[i].is_none() && (0..r).any(|j| !next_t[(j, i)].is_finite()) {
-                diverged_at[i] = Some(k + 1);
-                newly_bad.push(i);
-            }
-        }
+        scan_nonfinite_columns(&next_t, &mut diverged_at, k + 1, &mut newly_bad);
         visit(k + 1, &next_t, &diverged_at);
         qt = next_t;
-        // freeze newly diverged members: zero the column and clear the
-        // constant-row entry so Â·0 + Ĥ·0 + ĉ·0 stays exactly zero —
-        // matching solve_discrete's early-exit (first bad state kept,
-        // zeros after)
-        for &i in &newly_bad {
-            for j in 0..r {
-                qt[(j, i)] = 0.0;
-            }
-            xt[(d - 1, i)] = 0.0;
-        }
+        freeze_columns(&mut qt, &mut xt, &newly_bad);
     }
     diverged_at
+}
+
+/// Fill the state and quadratic rows of the augmented block `Xᵀ` from
+/// the transposed states (width `b` columns); the constant/mask row is
+/// maintained by the caller. Identical arithmetic per member column at
+/// any width — the banded path calls this with a band-width `b`.
+fn build_augmented(xt: &mut Matrix, qt: &Matrix, r: usize, b: usize) {
+    // rows 0..r: copy the states (contiguous row copies)
+    xt.data_mut()[..r * b].copy_from_slice(qt.data());
+    // rows r..r+s: B-wide elementwise products q_a * q_b
+    let (state_rows, quad_rows) = xt.data_mut().split_at_mut(r * b);
+    let mut col = 0;
+    for a in 0..r {
+        let ra = &state_rows[a * b..(a + 1) * b];
+        for bb in a..r {
+            let rb = &state_rows[bb * b..(bb + 1) * b];
+            let dst = &mut quad_rows[col * b..(col + 1) * b];
+            for ((dv, &x), &y) in dst.iter_mut().zip(ra).zip(rb) {
+                *dv = x * y;
+            }
+            col += 1;
+        }
+    }
+}
+
+/// One band's per-step deposit for the coordinator: the transposed
+/// band states just computed plus the band-local divergence flags.
+struct BandSlot {
+    states: Matrix,
+    diverged: Vec<Option<usize>>,
+}
+
+/// The member-banded rollout: `t` workers each own a contiguous member
+/// band end to end; the caller coordinates, reassembling the full
+/// state block and running the visitor between the two per-step
+/// barrier waves. Native-only (see the module docs).
+fn rollout_banded<F>(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+    t: usize,
+    mut visit: F,
+) -> Vec<Option<usize>>
+where
+    F: FnMut(usize, &Matrix, &[Option<usize>]),
+{
+    let r = ops.r;
+    let b = q0s.rows();
+    let o = ops.ahat.hstack(&ops.fhat).hstack(&Matrix::from_vec(r, 1, ops.chat.clone()));
+    let bands = par::bands(b, t);
+    let slots: Vec<Mutex<BandSlot>> = bands
+        .iter()
+        .map(|band| {
+            Mutex::new(BandSlot {
+                states: Matrix::zeros(r, band.len()),
+                diverged: vec![None; band.len()],
+            })
+        })
+        .collect();
+    // workers + this coordinator thread rendezvous twice per step:
+    // once when every band's step-k states are deposited, once when the
+    // visitor has consumed them
+    let barrier = Barrier::new(bands.len() + 1);
+    let mut diverged_at: Vec<Option<usize>> = vec![None; b];
+    let mut full = Matrix::zeros(r, b);
+    // A panicking visitor must not strand workers at the barrier
+    // (std::sync::Barrier cannot be poisoned and thread::scope joins
+    // before propagating): catch it, keep the rendezvous protocol
+    // running visit-free, and re-raise once every worker has exited.
+    // Workers themselves are panic-free by construction — pure indexed
+    // arithmetic on shapes validated before the fan-out.
+    let mut visit_panic: Option<Box<dyn std::any::Any + Send>> = None;
+
+    std::thread::scope(|scope| {
+        for (slot, band) in slots.iter().zip(&bands) {
+            let band = band.clone();
+            let o = &o;
+            let barrier = &barrier;
+            scope.spawn(move || band_worker(o, q0s, band, n_steps, slot, barrier));
+        }
+        for k in 0..n_steps {
+            barrier.wait(); // every band deposited step k
+            if visit_panic.is_none() {
+                for (slot, band) in slots.iter().zip(&bands) {
+                    let slot = slot.lock().unwrap();
+                    for j in 0..r {
+                        full.row_mut(j)[band.start..band.end]
+                            .copy_from_slice(slot.states.row(j));
+                    }
+                    diverged_at[band.start..band.end].copy_from_slice(&slot.diverged);
+                }
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    visit(k, &full, &diverged_at)
+                }));
+                if let Err(payload) = caught {
+                    visit_panic = Some(payload);
+                }
+            }
+            barrier.wait(); // visitor done; bands may overwrite slots
+        }
+    });
+    if let Some(payload) = visit_panic {
+        std::panic::resume_unwind(payload);
+    }
+    // the band GEMMs ran off-engine; account them in the dispatch
+    // telemetry at the same per-product granularity as the serial path
+    // (one native product per band per compute step)
+    engine
+        .stats
+        .native_calls
+        .fetch_add(bands.len() * (n_steps - 1), std::sync::atomic::Ordering::Relaxed);
+    diverged_at
+}
+
+/// One worker of [`rollout_banded`]: advances members
+/// `band.start..band.end` through the whole horizon. The arithmetic per
+/// member is [`rollout_serial`]'s exactly — same augmented-block
+/// expansion, same blocked GEMM accumulation order over the shared
+/// dimension, same freeze rule — restricted to the band's columns.
+fn band_worker(
+    o: &Matrix,
+    q0s: &Matrix,
+    band: Range<usize>,
+    n_steps: usize,
+    slot: &Mutex<BandSlot>,
+    barrier: &Barrier,
+) {
+    let r = o.rows();
+    let d = o.cols();
+    let bw = band.len();
+    let mut diverged: Vec<Option<usize>> = vec![None; bw];
+    // transposed band states: column i is member band.start + i
+    let mut qt = Matrix::zeros(r, bw);
+    for i in 0..bw {
+        for j in 0..r {
+            qt[(j, i)] = q0s[(band.start + i, j)];
+        }
+    }
+    let mut newly_bad = Vec::new();
+    scan_nonfinite_columns(&qt, &mut diverged, 0, &mut newly_bad);
+    deposit(slot, &qt, &diverged);
+    barrier.wait(); // step-0 states visible to the coordinator
+    barrier.wait(); // visit(0) done
+    zero_columns(&mut qt, &newly_bad);
+    let mut xt = Matrix::zeros(d, bw);
+    for i in 0..bw {
+        xt[(d - 1, i)] = if diverged[i].is_none() { 1.0 } else { 0.0 };
+    }
+    for k in 0..n_steps - 1 {
+        build_augmented(&mut xt, &qt, r, bw);
+        // native GEMM, explicitly serial: the member bands ARE the
+        // parallelism here (a nested fan-out would oversubscribe)
+        let next_t = matmul_with_threads(o, &xt, 1);
+        newly_bad.clear();
+        scan_nonfinite_columns(&next_t, &mut diverged, k + 1, &mut newly_bad);
+        deposit(slot, &next_t, &diverged);
+        qt = next_t;
+        barrier.wait(); // step k+1 states visible to the coordinator
+        barrier.wait(); // visit(k+1) done
+        freeze_columns(&mut qt, &mut xt, &newly_bad);
+    }
+}
+
+fn deposit(slot: &Mutex<BandSlot>, states: &Matrix, diverged: &[Option<usize>]) {
+    let mut guard = slot.lock().unwrap();
+    guard.states.data_mut().copy_from_slice(states.data());
+    guard.diverged.copy_from_slice(diverged);
 }
 
 /// Batched rollout returning all trajectories (see [`rollout_batch_with`]
@@ -182,21 +435,34 @@ pub fn rollout_batch(
     q0s: &Matrix,
     n_steps: usize,
 ) -> BatchTrajectory {
+    rollout_batch_collect(engine, ops, q0s, n_steps, par::threads())
+}
+
+/// [`rollout_batch`] with an explicit compute-plane width (bitwise
+/// identical for every value; benches sweep it).
+pub fn rollout_batch_collect(
+    engine: &Engine,
+    ops: &RomOperators,
+    q0s: &Matrix,
+    n_steps: usize,
+    threads: usize,
+) -> BatchTrajectory {
     let (b, r) = (q0s.rows(), q0s.cols());
     let mut data = vec![0.0; n_steps * b * r];
-    let diverged_at = rollout_batch_with(engine, ops, q0s, n_steps, |k, states_t, diverged| {
-        let dst = &mut data[k * b * r..(k + 1) * b * r];
-        for i in 0..b {
-            // a member frozen *before* this step stays zero; the first
-            // bad state (diverged == Some(k)) is preserved
-            if matches!(diverged[i], Some(at) if at < k) {
-                continue;
+    let diverged_at =
+        rollout_batch_threaded(engine, ops, q0s, n_steps, threads, |k, states_t, diverged| {
+            let dst = &mut data[k * b * r..(k + 1) * b * r];
+            for i in 0..b {
+                // a member frozen *before* this step stays zero; the first
+                // bad state (diverged == Some(k)) is preserved
+                if matches!(diverged[i], Some(at) if at < k) {
+                    continue;
+                }
+                for j in 0..r {
+                    dst[i * r + j] = states_t[(j, i)];
+                }
             }
-            for j in 0..r {
-                dst[i * r + j] = states_t[(j, i)];
-            }
-        }
-    });
+        });
     BatchTrajectory { n_members: b, r, n_steps, diverged_at, data }
 }
 
@@ -237,10 +503,91 @@ mod tests {
     }
 
     #[test]
+    fn banded_rollout_bitwise_equals_serial() {
+        // the compute-plane contract for the online stage: every thread
+        // count reproduces the serial visitor trace bit for bit —
+        // states, step order, divergence flags. Threshold 0 forces the
+        // banded path at these small shapes.
+        par::set_par_min_elems(0);
+        let engine = Engine::native();
+        for (r, b, steps) in [(1usize, 8usize, 30usize), (3, 5, 40), (10, 17, 25)] {
+            let ops = stable_ops(r, 7 + r as u64);
+            let mut rng = Rng::new(1000 + b as u64);
+            let mut q0s = Matrix::zeros(b, r);
+            for i in 0..b {
+                for j in 0..r {
+                    q0s[(i, j)] = 0.3 + 0.05 * rng.normal();
+                }
+            }
+            let mut reference: Vec<(usize, Vec<f64>, Vec<Option<usize>>)> = Vec::new();
+            let d1 = rollout_batch_threaded(&engine, &ops, &q0s, steps, 1, |k, st, dv| {
+                reference.push((k, st.data().to_vec(), dv.to_vec()));
+            });
+            for t in [2usize, 3, 4, 7] {
+                let mut idx = 0;
+                let dt = rollout_batch_threaded(&engine, &ops, &q0s, steps, t, |k, st, dv| {
+                    let (want_k, want_st, want_dv) = &reference[idx];
+                    assert_eq!(k, *want_k, "T={t}");
+                    assert_eq!(st.data(), &want_st[..], "T={t} k={k} r={r} b={b}");
+                    assert_eq!(dv, &want_dv[..], "T={t} k={k} r={r} b={b}");
+                    idx += 1;
+                });
+                assert_eq!(idx, steps, "T={t}: visitor ran every step");
+                assert_eq!(dt, d1, "T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_rollout_divergence_bitwise() {
+        // divergence freezing is member-local, so a blow-up must be
+        // flagged at the same step with the same (NaN-kinded) states at
+        // every thread count — including a bad IC frozen at step 0
+        par::set_par_min_elems(0);
+        let engine = Engine::native();
+        let r = 3;
+        let mut ops = stable_ops(r, 9);
+        ops.fhat[(0, 0)] = 5.0;
+        let mut q0s = Matrix::zeros(4, r);
+        q0s.row_mut(0).copy_from_slice(&[0.1, 0.1, 0.1]);
+        q0s.row_mut(1).copy_from_slice(&[1e6, 0.0, 0.0]);
+        q0s.row_mut(2).copy_from_slice(&[-0.1, 0.05, 0.2]);
+        q0s.row_mut(3).copy_from_slice(&[f64::NAN, 0.0, 0.0]);
+        let want = rollout_batch_collect(&engine, &ops, &q0s, 60, 1);
+        for t in [2usize, 4] {
+            let got = rollout_batch_collect(&engine, &ops, &q0s, 60, t);
+            assert_eq!(got.diverged_at, want.diverged_at, "T={t}");
+            for (a, b) in got.states_at(0).iter().zip(want.states_at(0)) {
+                assert!((a == b) || (a.is_nan() && b.is_nan()), "T={t}: {a} vs {b}");
+            }
+            for k in 0..60 {
+                for i in 0..4 {
+                    for (a, b) in got.state(k, i).iter().zip(want.state(k, i)) {
+                        assert!(
+                            (a == b) || (a.is_nan() && b.is_nan()),
+                            "T={t} k={k} member {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn single_step_returns_initial_conditions() {
         let ops = stable_ops(4, 1);
         let q0s = Matrix::randn(6, 4, 2);
         let batch = rollout_batch(&Engine::native(), &ops, &q0s, 1);
+        assert_eq!(batch.states_at(0), q0s.data());
+        assert_eq!(batch.n_diverged(), 0);
+    }
+
+    #[test]
+    fn banded_single_step_returns_initial_conditions() {
+        par::set_par_min_elems(0);
+        let ops = stable_ops(4, 1);
+        let q0s = Matrix::randn(6, 4, 2);
+        let batch = rollout_batch_collect(&Engine::native(), &ops, &q0s, 1, 3);
         assert_eq!(batch.states_at(0), q0s.data());
         assert_eq!(batch.n_diverged(), 0);
     }

@@ -37,7 +37,10 @@ pub mod ensemble;
 pub mod model;
 pub mod server;
 
-pub use batch::{rollout_batch, rollout_batch_with, BatchTrajectory};
+pub use batch::{
+    rollout_batch, rollout_batch_collect, rollout_batch_threaded, rollout_batch_with,
+    BatchTrajectory,
+};
 pub use ensemble::{
     perturbed_initial_conditions, reg_pair_ensemble, run_ensemble, run_reg_ensemble,
     EnsembleSpec, EnsembleStats, ProbeSeries, RegEnsemble,

@@ -238,6 +238,54 @@ fn streamed_pipeline_bitwise_equals_monolithic() {
 }
 
 #[test]
+fn pipeline_bitwise_invariant_across_thread_counts() {
+    // the compute-plane contract end to end: threads_per_rank ∈
+    // {1, 2, 4} × p ∈ {1, 2, 4} × both transports all produce the
+    // identical DOpInfResult — every f64 of every artifact — both
+    // monolithic and chunked. Threshold 0 forces the banded kernels
+    // even at this test-sized problem; the p×T products exceed small CI
+    // machines, which is exactly what allow_oversubscribe is for
+    // (results are T-invariant; only wall time would care).
+    dopinf::linalg::par::set_par_min_elems(0);
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let source = DataSource::InMemory(Arc::new(q));
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(4),
+        scaling: true,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 48,
+    };
+    for p in [1usize, 2, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            let mut base = DOpInfConfig::new(p, ocfg.clone());
+            base.cost_model = CostModel::free();
+            base.transport = transport;
+            base.probes = vec![(0, 3), (1, 60)];
+            base.threads_per_rank = 1;
+            base.allow_oversubscribe = true;
+            let reference = run_distributed(&base, &source).unwrap();
+            for t in [2usize, 4] {
+                for chunk in [None, Some(7)] {
+                    let mut cfg = base.clone();
+                    cfg.threads_per_rank = t;
+                    cfg.chunk_rows = chunk;
+                    let res = run_distributed(&cfg, &source).unwrap();
+                    assert_bitwise_eq(
+                        &reference,
+                        &res,
+                        &format!("p={p} {transport:?} T={t} chunk_rows={chunk:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn streamed_file_ingestion_bitwise_with_column_truncation() {
     // file-backed source with nt_train truncation: the streamed reads
     // must agree bitwise with themselves across chunk sizes, and the
