@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Diff fresh bench reports against the committed manifest and snapshots.
+
+Usage:
+    python3 python/diff_bench_reports.py \
+        --fresh results --committed results-committed \
+        --manifest results/expected_rows.json
+
+For every report file named in the manifest:
+
+* The fresh copy must exist, parse, and contain at least one row
+  matching each manifest substring (coverage gate — a silently dropped
+  bench row fails here with exit status 1).
+* Rows present in the fresh report but matched by no manifest entry are
+  listed as informational (new rows should gain a manifest entry).
+* If the committed directory holds a snapshot of the same filename,
+  per-row ``mean_s`` deltas are printed for rows present in both.
+  Deltas are informational only: this script never fails on timing
+  movement (CI runners are noisy), only on missing coverage.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_reports(path):
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    rows = doc.get("reports")
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: no 'reports' array")
+    return {r["name"]: r for r in rows if "name" in r}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True, help="directory with fresh bench reports")
+    ap.add_argument("--committed", required=True,
+                    help="directory with committed snapshot reports (may lack files)")
+    ap.add_argument("--manifest", required=True,
+                    help="expected_rows.json: report file -> required row substrings")
+    opts = ap.parse_args()
+
+    with open(opts.manifest, encoding="utf-8") as fh:
+        manifest = json.load(fh)
+
+    failures = 0
+    for fname, needles in sorted(manifest.items()):
+        fresh_path = os.path.join(opts.fresh, fname)
+        try:
+            fresh = load_reports(fresh_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {fname}: unreadable fresh report: {e}")
+            failures += 1
+            continue
+
+        missing = [n for n in needles if not any(n in name for name in fresh)]
+        for n in missing:
+            print(f"FAIL {fname}: no row matching {n!r}")
+        failures += len(missing)
+
+        unmatched = [name for name in fresh
+                     if not any(n in name for n in needles)]
+        for name in sorted(unmatched):
+            print(f"note {fname}: row {name!r} has no manifest entry")
+
+        committed_path = os.path.join(opts.committed, fname)
+        if not os.path.exists(committed_path):
+            print(f"ok   {fname}: {len(fresh)} rows, all "
+                  f"{len(needles)} manifest entries matched (no snapshot to diff)")
+            continue
+        try:
+            committed = load_reports(committed_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"note {fname}: unreadable committed snapshot: {e}")
+            continue
+        print(f"ok   {fname}: {len(fresh)} rows; mean_s vs committed snapshot:")
+        for name in sorted(set(fresh) & set(committed)):
+            a, b = committed[name]["mean_s"], fresh[name]["mean_s"]
+            delta = (b / a - 1.0) * 100.0 if a > 0 else float("nan")
+            print(f"       {name:<50} {a:.6f}s -> {b:.6f}s  ({delta:+.1f}%)")
+        for name in sorted(set(committed) - set(fresh)):
+            print(f"note {fname}: snapshot row {name!r} gone from fresh report")
+
+    if failures:
+        print(f"diff_bench_reports: {failures} coverage failure(s)")
+        sys.exit(1)
+    print("diff_bench_reports: coverage OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Validate the observability exports of a `dopinf train --trace/--metrics` run.
+
+Usage:
+    python3 python/validate_obs.py TRACE.json METRICS.json [--ranks P]
+
+Checks (CI smoke gate for the obs/ plane):
+
+* Both files are well-formed JSON.
+* The trace is a Chrome trace-event document: a ``traceEvents`` array
+  where every ``"ph": "X"`` event carries ``ts``/``dur``/``tid``/``cat``
+  (no collective or phase span left open), and every rank track
+  0..P-1 shows at least one span in each of the five categories
+  (``load``/``compute``/``learn``/``post`` from phase spans, ``comm``
+  from the per-collective telemetry events).
+* Comm events carry the predicted-vs-actual overlay args
+  (``bytes``/``predicted_us``/``wait_us``).
+* The metrics summary is schema ``dopinf-metrics-v1`` with the
+  ``categories``/``comm``/``phases`` sections present, the comm table
+  non-empty with every row holding
+  ``calls``/``bytes``/``measured_s``/``wait_s``/``predicted_s``, and the
+  category totals equal to the column sums of the per-rank rows.
+
+Exit status 0 on success; prints the first failure and exits 1 otherwise.
+"""
+
+import argparse
+import json
+import sys
+
+CATEGORIES = ("load", "compute", "comm", "learn", "post")
+COMM_FIELDS = ("calls", "bytes", "measured_s", "wait_s", "predicted_s")
+
+
+def fail(msg):
+    print(f"validate_obs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+
+def check_trace(doc, path, ranks):
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: missing or empty traceEvents array")
+    spans = [e for e in events if e.get("ph") == "X"]
+    if not spans:
+        fail(f"{path}: no complete (ph=X) events")
+    for e in spans:
+        for key in ("ts", "dur", "tid", "cat", "name"):
+            if key not in e:
+                fail(f"{path}: X event {e.get('name', '?')!r} missing {key!r}")
+        if e["dur"] < 0:
+            fail(f"{path}: negative duration on {e['name']!r}")
+        if e["cat"] == "comm":
+            args = e.get("args", {})
+            for key in ("bytes", "predicted_us", "wait_us"):
+                if key not in args:
+                    fail(f"{path}: comm event {e['name']!r} missing args.{key}")
+    tids = {e["tid"] for e in spans}
+    want = set(range(ranks)) if ranks else tids
+    if ranks and tids != want:
+        fail(f"{path}: rank tracks {sorted(tids)} != expected {sorted(want)}")
+    for tid in sorted(want):
+        cats = {e["cat"] for e in spans if e["tid"] == tid}
+        missing = [c for c in CATEGORIES if c not in cats]
+        if missing:
+            fail(f"{path}: rank {tid} has no spans in categories {missing}")
+    print(f"validate_obs: {path}: {len(spans)} spans across {len(want)} rank track(s), "
+          "all categories covered")
+
+
+def check_metrics(doc, path, ranks):
+    if doc.get("schema") != "dopinf-metrics-v1":
+        fail(f"{path}: schema is {doc.get('schema')!r}, want 'dopinf-metrics-v1'")
+    if ranks and doc.get("ranks") != ranks:
+        fail(f"{path}: ranks is {doc.get('ranks')!r}, want {ranks}")
+    cats = doc.get("categories")
+    if not isinstance(cats, dict):
+        fail(f"{path}: missing categories section")
+    totals, per_rank = cats.get("totals"), cats.get("per_rank")
+    if not isinstance(totals, dict) or not isinstance(per_rank, list) or not per_rank:
+        fail(f"{path}: categories.totals / categories.per_rank malformed")
+    for key in CATEGORIES + ("total",):
+        want = sum(row.get(key, 0.0) for row in per_rank)
+        got = totals.get(key)
+        if got is None or abs(got - want) > 1e-9 * (1.0 + abs(want)):
+            fail(f"{path}: totals.{key}={got} does not reconcile with "
+                 f"per-rank sum {want}")
+    comm = doc.get("comm")
+    if not isinstance(comm, dict) or not comm:
+        fail(f"{path}: comm table missing or empty")
+    for prim, row in comm.items():
+        for key in COMM_FIELDS:
+            if key not in row:
+                fail(f"{path}: comm.{prim} missing {key!r}")
+        if "ratio" not in row:
+            fail(f"{path}: comm.{prim} missing the predicted-vs-actual ratio")
+    if not isinstance(doc.get("phases"), dict) or not doc["phases"]:
+        fail(f"{path}: phases section missing or empty")
+    print(f"validate_obs: {path}: schema ok, {len(per_rank)} rank row(s), "
+          f"{len(comm)} comm primitive(s), totals reconcile")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON written by --trace")
+    ap.add_argument("metrics", help="metrics summary JSON written by --metrics")
+    ap.add_argument("--ranks", type=int, default=0,
+                    help="expected rank count (0 = don't check)")
+    opts = ap.parse_args()
+    check_trace(load(opts.trace), opts.trace, opts.ranks)
+    check_metrics(load(opts.metrics), opts.metrics, opts.ranks)
+    print("validate_obs: OK")
+
+
+if __name__ == "__main__":
+    main()

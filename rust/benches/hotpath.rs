@@ -16,7 +16,7 @@
 //! Machine-readable output: results/hotpath.json (one report object per
 //! row via `benchkit::write_json`) — the perf trajectory CI uploads.
 
-use dopinf::comm::{self, Communicator, CostModel, Op};
+use dopinf::comm::{self, Category, Communicator, CostModel, Op};
 use dopinf::linalg::{
     cholesky_solve, eigh, matmul, matmul_tn, matmul_tn_with_threads, syrk, syrk_with_threads,
     Matrix,
@@ -24,6 +24,7 @@ use dopinf::linalg::{
 use dopinf::opinf::learn;
 use dopinf::rom::quadratic::{qhat_sq_rows, s_dim};
 use dopinf::rom::{solve_discrete, RomOperators};
+use dopinf::obs::Tracer;
 use dopinf::runtime::Engine;
 use dopinf::util::benchkit::Bench;
 
@@ -116,6 +117,43 @@ fn main() {
     bench.run_elems(&format!("gram syrk zero-skip reference 8192x{nt}"), 8192 * nt, || {
         syrk_zero_skip_reference(&q8k)
     });
+
+    // ---- tracer overhead on the hot path (obs/ contract) ---------------
+    // Wraps each syrk call in one span exactly the way the pipeline
+    // instruments its phases. The obs/ overhead contract: with the
+    // tracer *disabled* (the default), span calls must stay within 1%
+    // of the bare kernel; the enabled row bounds the per-span cost when
+    // an exporter is armed.
+    let q2k = Matrix::randn(2048, nt, 777);
+    let bare = bench
+        .run_elems(&format!("syrk 2048x{nt} tracer bare"), 2048 * nt, || syrk(&q2k))
+        .mean_s;
+    let mut t_off = Tracer::new(0);
+    let off = bench
+        .run_elems(&format!("syrk 2048x{nt} tracer off"), 2048 * nt, || {
+            let s = t_off.span_start();
+            let d = syrk(&q2k);
+            t_off.span_end(s, "bench_syrk", Category::Compute);
+            d
+        })
+        .mean_s;
+    let mut t_on = Tracer::new(0);
+    t_on.set_enabled(true);
+    let on = bench
+        .run_elems(&format!("syrk 2048x{nt} tracer on"), 2048 * nt, || {
+            let s = t_on.span_start();
+            let d = syrk(&q2k);
+            t_on.span_end(s, "bench_syrk", Category::Compute);
+            d
+        })
+        .mean_s;
+    // keep the enabled tracer's buffer from looking dead to the optimizer
+    std::hint::black_box(t_on.take());
+    println!(
+        "  -> tracer overhead per syrk: off {:+.2}% (contract <= 1%), on {:+.2}%\n",
+        (off / bare - 1.0) * 100.0,
+        (on / bare - 1.0) * 100.0
+    );
 
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let engine = Engine::from_artifacts(std::path::Path::new("artifacts")).unwrap();

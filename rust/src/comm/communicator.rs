@@ -23,6 +23,7 @@
 
 use super::clock::{Category, Clock};
 use super::error::{CommError, CommResult};
+use crate::obs::Tracer;
 use crate::util::timer::ThreadCpuTimer;
 
 /// Reduction operator for reducing collectives (MPI_Op subset).
@@ -201,6 +202,16 @@ pub trait Communicator {
 
     /// Charge `seconds` of `category` work to this rank's virtual clock.
     fn charge(&mut self, category: Category, seconds: f64);
+
+    /// This rank's span recorder (default-off; see [`crate::obs`]).
+    /// Each backend owns one tracer per rank, so recording is
+    /// lock-free; collectives record their telemetry internally, and
+    /// pipeline code opens/closes phase spans through these accessors.
+    fn tracer(&self) -> &Tracer;
+
+    /// Mutable access to the rank's span recorder (for closing spans,
+    /// recording gauges, enabling, and draining at join).
+    fn tracer_mut(&mut self) -> &mut Tracer;
 
     /// Run `f`, measuring its *thread CPU time* and charging it to
     /// `category`. Returns `f`'s result.

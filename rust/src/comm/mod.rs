@@ -54,6 +54,22 @@
 //!   Proves the trait boundary is transport-real and is the template
 //!   for a true multi-process / multi-node deployment.
 //!
+//! ## Telemetry
+//!
+//! Every backend carries a per-rank [`crate::obs::Tracer`]
+//! ([`Communicator::tracer`] / [`Communicator::tracer_mut`]), and every
+//! collective — in all three transports — closes exactly one
+//! [`crate::obs::CommRecord`] per call: primitive name, payload bytes
+//! (the same byte count handed to the cost model), measured wall time,
+//! the wait share (time parked at the rendezvous: the thread board
+//! wait, a socket leaf's `read_reply`, the hub's frame-read loop), and
+//! the α–β *predicted* time next to it. Failed collectives record too
+//! — an aborted run never leaves a collective span open — while the
+//! fail-fast path of an already-poisoned handle records nothing.
+//! Tracing is off by default (one branch per probe point) and wall
+//! readings never feed the virtual clocks, so numerics and the timing
+//! model are unaffected either way.
+//!
 //! **Timing model** (DESIGN.md §3): this testbed has one physical core,
 //! so wall-clock cannot exhibit strong scaling. Each rank instead
 //! carries a virtual clock ([`clock::Clock`]) fed by per-thread CPU

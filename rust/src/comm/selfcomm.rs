@@ -16,19 +16,23 @@
 use super::clock::{Category, Clock};
 use super::communicator::{Communicator, Op};
 use super::error::{CommError, CommResult};
+use crate::obs::Tracer;
 
 /// The p = 1 communicator: every collective returns this rank's own
 /// contribution. Carries a virtual [`Clock`] like every backend so
-/// timing reports stay uniform.
+/// timing reports stay uniform, and a [`Tracer`] so traced p = 1 runs
+/// still show their collective call pattern (predicted cost is 0 — the
+/// α–β model is free at p = 1).
 #[derive(Debug, Default)]
 pub struct SelfComm {
     clock: Clock,
     aborted: Option<CommError>,
+    tracer: Tracer,
 }
 
 impl SelfComm {
     pub fn new() -> SelfComm {
-        SelfComm { clock: Clock::new(), aborted: None }
+        SelfComm { clock: Clock::new(), aborted: None, tracer: Tracer::new(0) }
     }
 
     /// Final clock, for timing reports after the rank function returns.
@@ -41,6 +45,12 @@ impl SelfComm {
             Some(e) => Err(e.clone()),
             None => Ok(()),
         }
+    }
+
+    /// Record a collective identity op (no peers → zero wait, zero
+    /// predicted cost; measured time is the local copy).
+    fn record(&mut self, start: crate::obs::CommStart, primitive: &'static str, bytes: usize) {
+        self.tracer.comm_record(start, primitive, bytes, 0.0, 0.0);
     }
 }
 
@@ -61,43 +71,72 @@ impl Communicator for SelfComm {
         self.clock.add(category, seconds);
     }
 
-    fn allreduce_inplace(&mut self, _data: &mut [f64], _op: Op) -> CommResult<()> {
-        self.check()
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
+    fn allreduce_inplace(&mut self, data: &mut [f64], _op: Op) -> CommResult<()> {
+        self.check()?;
+        let cs = self.tracer.comm_start();
+        self.record(cs, "allreduce", data.len() * 8);
+        Ok(())
     }
 
     fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>> {
         self.check()?;
         self.check_root("broadcast", root)?;
-        data.ok_or_else(|| CommError::ContractViolation {
+        let cs = self.tracer.comm_start();
+        let out = data.ok_or_else(|| CommError::ContractViolation {
             rank: 0,
             message: "broadcast(root=0) — root rank 0 provided no payload".to_string(),
-        })
+        })?;
+        self.record(cs, "broadcast", out.len() * 8);
+        Ok(out)
     }
 
     fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
         self.check()?;
-        Ok(vec![data.to_vec()])
+        let cs = self.tracer.comm_start();
+        let out = vec![data.to_vec()];
+        self.record(cs, "allgather", data.len() * 8);
+        Ok(out)
     }
 
     fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
         self.check()?;
         self.check_root("gather", root)?;
-        Ok(Some(vec![data.to_vec()]))
+        let cs = self.tracer.comm_start();
+        let out = Some(vec![data.to_vec()]);
+        self.record(cs, "gather", data.len() * 8);
+        Ok(out)
     }
 
     fn reduce(&mut self, root: usize, data: &[f64], _op: Op) -> CommResult<Option<Vec<f64>>> {
         self.check()?;
         self.check_root("reduce", root)?;
-        Ok(Some(data.to_vec()))
+        let cs = self.tracer.comm_start();
+        let out = Some(data.to_vec());
+        self.record(cs, "reduce", data.len() * 8);
+        Ok(out)
     }
 
     fn reduce_scatter_block(&mut self, data: &[f64], _op: Op) -> CommResult<Vec<f64>> {
         self.check()?;
-        Ok(data.to_vec())
+        let cs = self.tracer.comm_start();
+        let out = data.to_vec();
+        self.record(cs, "reduce_scatter", data.len() * 8);
+        Ok(out)
     }
 
     fn barrier(&mut self) -> CommResult<()> {
-        self.check()
+        self.check()?;
+        let cs = self.tracer.comm_start();
+        self.record(cs, "barrier", 0);
+        Ok(())
     }
 
     fn abort(&mut self, message: &str) -> CommError {
@@ -137,6 +176,27 @@ mod tests {
         assert!((c.clock().in_category(Category::Compute) - 1.25).abs() < 1e-15);
         let clock = c.into_clock();
         assert!(clock.now() >= 1.25);
+    }
+
+    #[test]
+    fn traced_collectives_record_per_primitive() {
+        let mut c = SelfComm::new();
+        c.tracer_mut().set_enabled(true);
+        c.allreduce_scalar(1.0, Op::Sum).unwrap();
+        c.barrier().unwrap();
+        c.broadcast(0, Some(vec![1.0, 2.0])).unwrap();
+        let trace = c.tracer_mut().take();
+        assert_eq!(trace.comm.len(), 3);
+        assert_eq!(trace.comm[0].primitive, "allreduce");
+        assert_eq!(trace.comm[0].bytes, 8);
+        assert_eq!(trace.comm[0].predicted_s, 0.0);
+        assert_eq!(trace.comm[1].primitive, "barrier");
+        assert_eq!(trace.comm[1].bytes, 0);
+        assert_eq!(trace.comm[2].bytes, 16);
+        // untraced by default: a fresh SelfComm records nothing
+        let mut quiet = SelfComm::new();
+        quiet.barrier().unwrap();
+        assert!(quiet.tracer_mut().take().comm.is_empty());
     }
 
     #[test]

@@ -59,6 +59,7 @@ use super::clock::{Category, Clock};
 use super::communicator::{fold, Communicator, Op};
 use super::costmodel::CostModel;
 use super::error::{CommError, CommResult};
+use crate::obs::Tracer;
 use crate::util::panic::panic_text;
 
 /// Collective opcode on the wire.
@@ -384,6 +385,14 @@ enum Conn {
     Leaf { stream: TcpStream },
 }
 
+/// Telemetry identity of one collective: what the tracer records when
+/// the exchange closes (the α–β `cost` doubles as the predicted time).
+struct Probe {
+    primitive: &'static str,
+    bytes: usize,
+    cost: f64,
+}
+
 /// Per-rank handle of the localhost socket transport.
 pub struct SocketComm {
     rank: usize,
@@ -395,13 +404,22 @@ pub struct SocketComm {
     /// first failure observed on this handle; subsequent collectives
     /// fail fast with it instead of touching a desynced stream
     failed: Option<CommError>,
+    /// per-rank span/telemetry recorder (default off; see [`crate::obs`])
+    tracer: Tracer,
 }
 
 impl SocketComm {
     /// One collective round: contribute `payload`, receive this rank's
     /// reply parts plus the max clock entry time over all ranks.
+    ///
+    /// Every exit below the fail-fast check closes exactly one tracer
+    /// comm record (success or failure), so an aborted or timed-out run
+    /// never leaves a collective span open. The wait split is the time
+    /// parked on the wire: `read_reply` for a leaf, the rank-ordered
+    /// frame-read loop for the hub.
     fn exchange(
         &mut self,
+        probe: Probe,
         code: OpCode,
         op: u8,
         provided: bool,
@@ -411,16 +429,24 @@ impl SocketComm {
         if let Some(e) = &self.failed {
             return Err(e.clone());
         }
+        let cs = self.tracer.comm_start();
+        let mut wait_s = 0.0;
         let now = self.clock.now();
         let (rank, size, timeout) = (self.rank, self.size, self.timeout);
         let result = match &mut self.conn {
             Conn::Leaf { stream } => {
                 let sent = write_request(stream, code, op, provided, root, now, &payload)
                     .map_err(|e| io_error(rank, timeout, "sending request to the rank 0 hub", e));
-                let reply = sent.and_then(|()| {
-                    read_reply(stream)
-                        .map_err(|e| io_error(rank, timeout, "reply from the rank 0 hub", e))
-                });
+                let reply = match sent {
+                    Err(e) => Err(e),
+                    Ok(()) => {
+                        let parked = self.tracer.comm_start();
+                        let reply = read_reply(stream)
+                            .map_err(|e| io_error(rank, timeout, "reply from the rank 0 hub", e));
+                        wait_s = self.tracer.elapsed_since(parked);
+                        reply
+                    }
+                };
                 match reply {
                     Ok(Reply::Ok { max_entry, parts }) => Ok((max_entry, parts)),
                     Ok(Reply::Error(e)) | Err(e) => Err(e),
@@ -431,6 +457,7 @@ impl SocketComm {
                 let mut provided_flags = vec![provided];
                 let mut parts: Vec<Vec<f64>> = vec![payload];
                 let mut failure: Option<CommError> = None;
+                let parked = self.tracer.comm_start();
                 for (i, s) in streams.iter_mut().enumerate() {
                     match read_frame(s) {
                         Ok(Frame::Request(req)) => {
@@ -468,6 +495,7 @@ impl SocketComm {
                         }
                     }
                 }
+                wait_s = self.tracer.elapsed_since(parked);
                 let computed = match failure {
                     Some(e) => Err(e),
                     None => hub_replies(code, op, root, &provided_flags, &parts, size),
@@ -504,6 +532,7 @@ impl SocketComm {
                 }
             }
         };
+        self.tracer.comm_record(cs, probe.primitive, probe.bytes, probe.cost, wait_s);
         if let Err(e) = &result {
             self.failed = Some(e.clone());
         }
@@ -528,10 +557,25 @@ impl Communicator for SocketComm {
         self.clock.add(category, seconds);
     }
 
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
     fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()> {
-        let cost = self.model.allreduce(self.size, data.len() * 8);
-        let (max_entry, mut parts) =
-            self.exchange(OpCode::Allreduce, op_to_byte(op), true, 0, data.to_vec())?;
+        let bytes = data.len() * 8;
+        let cost = self.model.allreduce(self.size, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "allreduce", bytes, cost },
+            OpCode::Allreduce,
+            op_to_byte(op),
+            true,
+            0,
+            data.to_vec(),
+        )?;
         let reduced = parts.pop().ok_or_else(|| CommError::Transport {
             rank: self.rank,
             message: "empty allreduce reply".to_string(),
@@ -547,8 +591,14 @@ impl Communicator for SocketComm {
         let provided = data.is_some();
         let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
         let cost = self.model.broadcast(self.size, data_bytes);
-        let (max_entry, mut parts) =
-            self.exchange(OpCode::Broadcast, 0, provided, root, data.unwrap_or_default())?;
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "broadcast", bytes: data_bytes, cost },
+            OpCode::Broadcast,
+            0,
+            provided,
+            root,
+            data.unwrap_or_default(),
+        )?;
         let out = parts.pop().ok_or_else(|| CommError::Transport {
             rank: self.rank,
             message: "empty broadcast reply".to_string(),
@@ -558,25 +608,48 @@ impl Communicator for SocketComm {
     }
 
     fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
-        let cost = self.model.allgather(self.size, data.len() * 8 * self.size);
-        let (max_entry, parts) = self.exchange(OpCode::Allgather, 0, true, 0, data.to_vec())?;
+        let bytes = data.len() * 8 * self.size;
+        let cost = self.model.allgather(self.size, bytes);
+        let (max_entry, parts) = self.exchange(
+            Probe { primitive: "allgather", bytes, cost },
+            OpCode::Allgather,
+            0,
+            true,
+            0,
+            data.to_vec(),
+        )?;
         self.clock.sync_to(max_entry + cost);
         Ok(parts)
     }
 
     fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
         self.check_root("gather", root)?;
-        let cost = self.model.gather(self.size, data.len() * 8 * self.size);
-        let (max_entry, parts) = self.exchange(OpCode::Gather, 0, true, root, data.to_vec())?;
+        let bytes = data.len() * 8 * self.size;
+        let cost = self.model.gather(self.size, bytes);
+        let (max_entry, parts) = self.exchange(
+            Probe { primitive: "gather", bytes, cost },
+            OpCode::Gather,
+            0,
+            true,
+            root,
+            data.to_vec(),
+        )?;
         self.clock.sync_to(max_entry + cost);
         Ok((self.rank == root).then_some(parts))
     }
 
     fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> CommResult<Option<Vec<f64>>> {
         self.check_root("reduce", root)?;
-        let cost = self.model.reduce(self.size, data.len() * 8);
-        let (max_entry, mut parts) =
-            self.exchange(OpCode::Reduce, op_to_byte(op), true, root, data.to_vec())?;
+        let bytes = data.len() * 8;
+        let cost = self.model.reduce(self.size, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "reduce", bytes, cost },
+            OpCode::Reduce,
+            op_to_byte(op),
+            true,
+            root,
+            data.to_vec(),
+        )?;
         self.clock.sync_to(max_entry + cost);
         if self.rank == root {
             match parts.pop() {
@@ -597,9 +670,16 @@ impl Communicator for SocketComm {
         // leave this rank silent while its peers park in read_reply
         // (same rationale as the thread board's validation-rides-the-
         // exchange rule)
-        let cost = self.model.reduce_scatter(self.size, data.len() * 8);
-        let (max_entry, mut parts) =
-            self.exchange(OpCode::ReduceScatter, op_to_byte(op), true, 0, data.to_vec())?;
+        let bytes = data.len() * 8;
+        let cost = self.model.reduce_scatter(self.size, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "reduce_scatter", bytes, cost },
+            OpCode::ReduceScatter,
+            op_to_byte(op),
+            true,
+            0,
+            data.to_vec(),
+        )?;
         self.clock.sync_to(max_entry + cost);
         parts.pop().ok_or_else(|| CommError::Transport {
             rank: self.rank,
@@ -609,7 +689,14 @@ impl Communicator for SocketComm {
 
     fn barrier(&mut self) -> CommResult<()> {
         let cost = self.model.barrier(self.size);
-        let (max_entry, _) = self.exchange(OpCode::Barrier, 0, true, 0, Vec::new())?;
+        let (max_entry, _) = self.exchange(
+            Probe { primitive: "barrier", bytes: 0, cost },
+            OpCode::Barrier,
+            0,
+            true,
+            0,
+            Vec::new(),
+        )?;
         self.clock.sync_to(max_entry + cost);
         Ok(())
     }
@@ -788,6 +875,7 @@ pub fn run_with_clocks_timeout<R: Send>(
                 conn: Conn::Hub { streams },
                 timeout,
                 failed: None,
+                tracer: Tracer::new(0),
             };
             Ok(run_rank(ctx, f))
         }));
@@ -802,6 +890,7 @@ pub fn run_with_clocks_timeout<R: Send>(
                     conn: Conn::Leaf { stream },
                     timeout,
                     failed: None,
+                    tracer: Tracer::new(rank),
                 };
                 Ok(run_rank(ctx, f))
             }));
@@ -952,6 +1041,47 @@ mod tests {
                 other => panic!("rank {rank}: expected Timeout/Transport, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn traced_collectives_record_telemetry_on_hub_and_leaf() {
+        let traces = run(2, CostModel::shared_memory(), |ctx| {
+            ctx.tracer_mut().set_enabled(true);
+            ctx.allreduce_scalar(1.0, Op::Sum).unwrap();
+            ctx.barrier().unwrap();
+            ctx.tracer_mut().take()
+        })
+        .unwrap();
+        let predicted = CostModel::shared_memory().allreduce(2, 8);
+        for (rank, trace) in traces.iter().enumerate() {
+            assert_eq!(trace.rank, rank);
+            assert_eq!(trace.comm.len(), 2);
+            assert_eq!(trace.comm[0].primitive, "allreduce");
+            assert_eq!(trace.comm[0].bytes, 8);
+            assert!((trace.comm[0].predicted_s - predicted).abs() < 1e-15);
+            assert!(trace.comm[0].measured_s >= trace.comm[0].wait_s);
+            assert_eq!(trace.comm[1].primitive, "barrier");
+            assert_eq!(trace.comm[1].bytes, 0);
+        }
+    }
+
+    #[test]
+    fn abort_still_closes_the_pending_comm_record() {
+        let traces = run(2, CostModel::free(), |ctx| {
+            ctx.tracer_mut().set_enabled(true);
+            if ctx.rank() == 1 {
+                let _ = ctx.abort("injected failure");
+            } else {
+                assert!(ctx.allreduce_scalar(1.0, Op::Sum).is_err());
+            }
+            ctx.tracer_mut().take()
+        })
+        .unwrap();
+        // the hub's failed allreduce is still one *closed* record …
+        assert_eq!(traces[0].comm.len(), 1);
+        assert_eq!(traces[0].comm[0].primitive, "allreduce");
+        // … and the aborting rank never entered a collective
+        assert!(traces[1].comm.is_empty());
     }
 
     #[test]

@@ -34,6 +34,7 @@ use super::clock::{Category, Clock};
 use super::communicator::{fold, Communicator, Op};
 use super::costmodel::CostModel;
 use super::error::{CommError, CommResult};
+use crate::obs::Tracer;
 use crate::util::panic::panic_text;
 
 struct BoardState {
@@ -142,6 +143,8 @@ pub struct RankCtx<'a> {
     /// fail fast with it instead of touching a board the rank has
     /// already fallen out of lockstep with
     failed: Option<CommError>,
+    /// per-rank span recorder (default-off; see [`crate::obs`])
+    tracer: Tracer,
 }
 
 impl<'a> RankCtx<'a> {
@@ -150,8 +153,17 @@ impl<'a> RankCtx<'a> {
     /// Advances clocks to max-entry + modeled cost. Fails with the
     /// group abort if the board is poisoned at either rendezvous, and
     /// fail-fast once this handle has observed any failure.
+    ///
+    /// Every exit that performed an exchange closes a tracer comm
+    /// record (primitive, bytes, wait split, α–β prediction); only the
+    /// fail-fast entry records nothing, because no exchange happened.
+    /// The wait split is the time from entry to the first rendezvous
+    /// completing (peers arriving); everything after is local
+    /// combine + slot-reuse handshake.
     fn collective<T>(
         &mut self,
+        primitive: &'static str,
+        bytes: usize,
         payload: Vec<f64>,
         modeled_cost: f64,
         combine: impl FnOnce(&[Vec<f64>]) -> CommResult<T>,
@@ -159,12 +171,16 @@ impl<'a> RankCtx<'a> {
         if let Some(e) = &self.failed {
             return Err(e.clone());
         }
+        let cs = self.tracer.comm_start();
         *self.shared.slots[self.rank].lock().unwrap() = payload;
         *self.shared.times[self.rank].lock().unwrap() = self.clock.now();
         if let Err(e) = self.shared.board.wait(self.rank, self.shared.timeout) {
+            let wait_s = self.tracer.elapsed_since(cs);
+            self.tracer.comm_record(cs, primitive, bytes, modeled_cost, wait_s);
             self.failed = Some(e.clone());
             return Err(e);
         }
+        let wait_s = self.tracer.elapsed_since(cs);
 
         // every rank reads all contributions; rank-ordered combine
         let contributions: Vec<Vec<f64>> = (0..self.size)
@@ -182,6 +198,7 @@ impl<'a> RankCtx<'a> {
         // takes display precedence over a racing poison.
         let wait2 = self.shared.board.wait(self.rank, self.shared.timeout);
         self.clock.sync_to(max_entry + modeled_cost);
+        self.tracer.comm_record(cs, primitive, bytes, modeled_cost, wait_s);
         let result = match (out, wait2) {
             (Err(e), _) | (Ok(_), Err(e)) => Err(e),
             (Ok(v), Ok(())) => Ok(v),
@@ -210,12 +227,20 @@ impl Communicator for RankCtx<'_> {
         self.clock.add(category, seconds);
     }
 
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
     fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()> {
         let bytes = data.len() * 8;
         let cost = self.shared.model.allreduce(self.size, bytes);
         let rank = self.rank;
         let payload = data.to_vec(); // the board keeps its own copy
-        self.collective(payload, cost, |parts| {
+        self.collective("allreduce", bytes, payload, cost, |parts| {
             if let Some(e) = fold::length_violation("allreduce", rank, parts) {
                 return Err(e);
             }
@@ -237,7 +262,7 @@ impl Communicator for RankCtx<'_> {
             payload.extend_from_slice(&d);
         }
         let cost = self.shared.model.broadcast(self.size, data_bytes);
-        self.collective(payload, cost, |parts| {
+        self.collective("broadcast", data_bytes, payload, cost, |parts| {
             let flags: Vec<bool> = parts.iter().map(|p| p.first() == Some(&1.0)).collect();
             if let Some(e) = fold::broadcast_violation(root, &flags, rank) {
                 return Err(e);
@@ -249,7 +274,7 @@ impl Communicator for RankCtx<'_> {
     fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
         let bytes = data.len() * 8 * self.size;
         let cost = self.shared.model.allgather(self.size, bytes);
-        self.collective(data.to_vec(), cost, |parts| Ok(parts.to_vec()))
+        self.collective("allgather", bytes, data.to_vec(), cost, |parts| Ok(parts.to_vec()))
     }
 
     fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
@@ -257,7 +282,7 @@ impl Communicator for RankCtx<'_> {
         let bytes = data.len() * 8 * self.size;
         let cost = self.shared.model.gather(self.size, bytes);
         let rank = self.rank;
-        self.collective(data.to_vec(), cost, |parts| {
+        self.collective("gather", bytes, data.to_vec(), cost, |parts| {
             Ok((rank == root).then(|| parts.to_vec()))
         })
     }
@@ -267,7 +292,7 @@ impl Communicator for RankCtx<'_> {
         let bytes = data.len() * 8;
         let cost = self.shared.model.reduce(self.size, bytes);
         let rank = self.rank;
-        self.collective(data.to_vec(), cost, |parts| {
+        self.collective("reduce", bytes, data.to_vec(), cost, |parts| {
             if let Some(e) = fold::length_violation("reduce", rank, parts) {
                 return Err(e);
             }
@@ -284,7 +309,7 @@ impl Communicator for RankCtx<'_> {
         // must fail the whole group with the same typed error, not park
         // the compliant ranks forever at the rendezvous (same rationale
         // as broadcast's provided-payload flag)
-        self.collective(data.to_vec(), cost, |parts| {
+        self.collective("reduce_scatter", bytes, data.to_vec(), cost, |parts| {
             if let Some(e) = fold::divisibility_violation(parts, size, rank) {
                 return Err(e);
             }
@@ -298,7 +323,7 @@ impl Communicator for RankCtx<'_> {
 
     fn barrier(&mut self) -> CommResult<()> {
         let cost = self.shared.model.barrier(self.size);
-        self.collective(Vec::new(), cost, |_| Ok(()))
+        self.collective("barrier", 0, Vec::new(), cost, |_| Ok(()))
     }
 
     fn abort(&mut self, message: &str) -> CommError {
@@ -357,8 +382,14 @@ pub fn run_with_clocks_timeout<R: Send>(
                 let shared = &shared;
                 let f = &f;
                 scope.spawn(move || {
-                    let mut ctx =
-                        RankCtx { rank, size: p, shared, clock: Clock::new(), failed: None };
+                    let mut ctx = RankCtx {
+                        rank,
+                        size: p,
+                        shared,
+                        clock: Clock::new(),
+                        failed: None,
+                        tracer: Tracer::new(rank),
+                    };
                     // a genuine panic must poison the board before
                     // propagating: siblings parked at a collective would
                     // otherwise never be joinable
@@ -763,6 +794,46 @@ mod tests {
         for r in &results {
             assert!(matches!(r, Err(CommError::ContractViolation { .. })), "{r:?}");
         }
+    }
+
+    #[test]
+    fn traced_collectives_record_telemetry_per_rank() {
+        let traces = run(2, CostModel::shared_memory(), |ctx| {
+            ctx.tracer_mut().set_enabled(true);
+            ctx.allreduce_scalar(ctx.rank() as f64, Op::Sum).unwrap();
+            ctx.barrier().unwrap();
+            ctx.tracer_mut().take()
+        });
+        for (rank, trace) in traces.iter().enumerate() {
+            assert_eq!(trace.rank, rank);
+            assert_eq!(trace.comm.len(), 2);
+            let ar = &trace.comm[0];
+            assert_eq!(ar.primitive, "allreduce");
+            assert_eq!(ar.bytes, 8);
+            // predicted cost is the α–β model the clock was charged with
+            assert!((ar.predicted_s - CostModel::shared_memory().allreduce(2, 8)).abs() < 1e-18);
+            assert!(ar.measured_s >= ar.wait_s);
+            assert_eq!(trace.comm[1].primitive, "barrier");
+        }
+    }
+
+    #[test]
+    fn abort_closes_the_pending_collective_record() {
+        // ranks parked at a collective when the abort lands must still
+        // close their comm record — no open span in a failure trace
+        let traces = run(2, CostModel::free(), |ctx| {
+            ctx.tracer_mut().set_enabled(true);
+            if ctx.rank() == 1 {
+                ctx.abort("injected failure");
+            } else {
+                let _ = ctx.allreduce_scalar(1.0, Op::Sum);
+            }
+            ctx.tracer_mut().take()
+        });
+        assert_eq!(traces[0].comm.len(), 1, "rank 0's aborted allreduce must be recorded");
+        assert!(traces[0].comm[0].measured_s >= 0.0);
+        // fail-fast entries after the poison record nothing
+        assert!(traces[1].comm.is_empty());
     }
 
     #[test]

@@ -177,6 +177,18 @@ pub struct DOpInfConfig {
     /// footprint; refusing silently-oversubscribed runs keeps the
     /// `fig4_scaling`-style CPU-time measurements honest.
     pub allow_oversubscribe: bool,
+    /// write a Chrome trace-event timeline here (`--trace FILE`):
+    /// per-rank tracks of pipeline-phase, data-plane, and collective
+    /// spans (see [`crate::obs`]). `None` (the default) disables span
+    /// recording entirely — the probe points reduce to one branch each
+    /// — and either way the traced quantities never feed the numeric
+    /// path, so results are bitwise identical on/off.
+    pub trace: Option<PathBuf>,
+    /// write a `dopinf-metrics-v1` structured summary here
+    /// (`--metrics FILE`): per-category totals copied from the virtual
+    /// clocks, the per-primitive comm table with the α–β
+    /// predicted-vs-measured ratio, phase aggregates, and gauges.
+    pub metrics: Option<PathBuf>,
 }
 
 impl DOpInfConfig {
@@ -207,6 +219,8 @@ impl DOpInfConfig {
             comm_timeout: None,
             threads_per_rank: crate::linalg::par::env_threads(),
             allow_oversubscribe: false,
+            trace: None,
+            metrics: None,
         }
     }
 }
@@ -303,6 +317,7 @@ mod tests {
         // it must be usable, and oversubscription stays opt-in
         assert!(cfg.threads_per_rank >= 1);
         assert!(!cfg.allow_oversubscribe);
+        assert!(cfg.trace.is_none() && cfg.metrics.is_none());
         // chunk_rows defaults to None unless DOPINF_TEST_CHUNK_ROWS is
         // set (the chunked CI job) — either way it must be usable
         if let Some(n) = cfg.chunk_rows {

@@ -38,6 +38,16 @@
 //! failures into one origin-tagged [`DOpInfError`] — recoverable by the
 //! caller, unlike `MPI_Abort`. The happy path is bitwise identical to
 //! the infallible API (asserted by the transport-equivalence suites).
+//!
+//! **Instrumentation.** With `cfg.trace`/`cfg.metrics` set, every rank
+//! records phase spans (`pass1`/`pass2`/`eigh`/`projection`/`learn`/
+//! `post`), per-chunk data-plane spans (`chunk_read`/`chunk_stats`/
+//! `chunk_transform`), a peak chunk-residency gauge, and one
+//! [`crate::obs::CommRecord`] per collective; the join flushes the
+//! exports *before* the failure early-return, so aborted runs keep
+//! their partial traces. Wall readings never touch the virtual clocks
+//! or numerics — traced runs are bitwise identical to untraced ones
+//! (asserted in `tests/integration_obs.rs`).
 
 use std::collections::BTreeMap;
 
@@ -49,6 +59,7 @@ use crate::comm::{self, Category, Clock, Communicator, Op, SelfComm};
 use crate::error::DOpInfError;
 use crate::io::partition::distribute_tutorial;
 use crate::linalg::Matrix;
+use crate::obs::{self, RankTrace};
 use crate::opinf::learn;
 use crate::opinf::podgram::GramSpectrum;
 use crate::opinf::postprocess::{lift_from_phi, probe_basis_row, ProbeBasis};
@@ -166,36 +177,49 @@ pub fn run_distributed(
     crate::linalg::par::set_threads(cfg.threads_per_rank.max(1));
     let timeout = cfg.comm_timeout.map(std::time::Duration::from_secs_f64);
 
-    let outputs: Vec<(Result<RankOut>, Clock)> = if cfg.p == 1 {
+    // span/telemetry recording is armed only when an exporter will
+    // consume it; off, every probe point is a single branch
+    let traced = cfg.trace.is_some() || cfg.metrics.is_some();
+
+    let outputs: Vec<((Result<RankOut>, RankTrace), Clock)> = if cfg.p == 1 {
         // p = 1: no rank threads, no barrier machinery — the
         // zero-overhead single-rank backend
         let mut ctx = SelfComm::new();
+        ctx.tracer_mut().set_enabled(traced);
         let out = rank_pipeline(&mut ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
-        vec![(out, ctx.into_clock())]
+        let trace = ctx.tracer_mut().take();
+        vec![((out, trace), ctx.into_clock())]
     } else {
         match cfg.transport {
             Transport::Threads => {
                 comm::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
-                    rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+                    ctx.tracer_mut().set_enabled(traced);
+                    let out = rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
+                    (out, ctx.tracer_mut().take())
                 })
             }
             // a socket rendezvous failure (worker never connected)
             // surfaces before any rank ran
             Transport::Sockets => {
                 comm::socket::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
-                    rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt)
+                    ctx.tracer_mut().set_enabled(traced);
+                    let out = rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
+                    (out, ctx.tracer_mut().take())
                 })
                 .map_err(DOpInfError::from)?
             }
         }
     };
 
-    // join: collect clocks, aggregate failures into the origin story
+    // join: collect clocks + traces, aggregate failures into the origin
+    // story
     let mut timings = Vec::with_capacity(cfg.p);
+    let mut traces = Vec::with_capacity(cfg.p);
     let mut first: Option<RankOut> = None;
     let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
-    for (i, (out, clock)) in outputs.into_iter().enumerate() {
+    for (i, ((out, trace), clock)) in outputs.into_iter().enumerate() {
         timings.push(RankTiming::from_clock(i, &clock));
+        traces.push(trace);
         match out {
             Ok(o) => {
                 if i == 0 {
@@ -205,15 +229,42 @@ pub fn run_distributed(
             Err(e) => failures.push((i, e)),
         }
     }
+    let timing = RunTiming::new(timings);
+    // flush BEFORE the failure early-return: an aborted or timed-out
+    // run still ships every rank's partial spans (the ranks all joined
+    // — that's the abort protocol's promise)
+    let flushed = flush_observability(cfg, &traces, &timing);
     if !failures.is_empty() {
+        if let Err(e) = flushed {
+            eprintln!("warning: run failed and its trace/metrics could not be written: {e}");
+        }
         return Err(DOpInfError::from_rank_failures(failures));
     }
+    flushed.map_err(|e| {
+        DOpInfError::Setup(anyhow::anyhow!("writing the requested trace/metrics export: {e}"))
+    })?;
     let mut result = match first {
         Some(o) => o.result,
         None => return Err(DOpInfError::Setup(anyhow::anyhow!("no ranks ran"))),
     };
-    result.timing = RunTiming::new(timings);
+    result.timing = timing;
     Ok(result)
+}
+
+/// Write whichever exports `cfg` requests (no-op when neither is set).
+/// Runs on the success *and* failure join paths.
+fn flush_observability(
+    cfg: &DOpInfConfig,
+    traces: &[RankTrace],
+    timing: &RunTiming,
+) -> std::io::Result<()> {
+    if let Some(path) = &cfg.trace {
+        obs::write_chrome_trace(path, traces)?;
+    }
+    if let Some(path) = &cfg.metrics {
+        obs::write_metrics(path, traces, timing, None)?;
+    }
+    Ok(())
 }
 
 /// One rank's pipeline, wrapped in the abort protocol
@@ -272,6 +323,7 @@ fn rank_steps<C: Communicator>(
     }
 
     // ---- Steps I+II, pass 1: stream row means + centered max-abs ------
+    let pass1_span = ctx.tracer().span_start();
     let mut reader = source.block_reader(rank, range, _nx, ns, chunk_rows)?;
     let mut means: Vec<f64> = Vec::with_capacity(local_rows);
     let mut local_max = vec![0.0f64; ns];
@@ -280,12 +332,18 @@ fn rank_steps<C: Communicator>(
     // with exactly one Load charge, like the monolithic pipeline.
     let mut retained: Option<crate::io::Chunk> = None;
     loop {
+        let read_span = ctx.tracer().span_start();
         let cpu = ThreadCpuTimer::start();
         let Some(chunk) = reader.next_chunk()? else { break };
+        ctx.tracer_mut().span_end(read_span, "chunk_read", Category::Load);
         ctx.charge(Category::Load, cpu.elapsed() + cfg.disk.read_time(chunk.reads, chunk.bytes));
+        let resident = (chunk.data.rows() * chunk.data.cols() * 8) as f64;
+        ctx.tracer_mut().gauge_max("peak_chunk_resident_bytes", resident);
+        let stats_span = ctx.tracer().span_start();
         ctx.timed(Category::Compute, || {
             chunk_stats(&chunk.data, chunk.start_row, per, &mut means, &mut local_max)
         });
+        ctx.tracer_mut().span_end(stats_span, "chunk_stats", Category::Compute);
         if chunk.data.rows() == local_rows {
             retained = Some(chunk);
         }
@@ -295,6 +353,7 @@ fn rank_steps<C: Communicator>(
         "reader yielded {} of {local_rows} local rows",
         means.len()
     );
+    ctx.tracer_mut().span_end(pass1_span, "pass1", Category::Load);
     // per-variable global scales (max-abs over all ranks); raw zeros
     // are kept here and substituted with 1 at application time, exactly
     // like transform::apply_scaling
@@ -334,15 +393,18 @@ fn rank_steps<C: Communicator>(
     if rereading {
         reader.reset()?;
     }
+    let pass2_span = ctx.tracer().span_start();
     loop {
         // retained whole-block chunk first (no second read, no second
         // Load charge); otherwise re-stream from the reader
         let next = if let Some(chunk) = pending.take() {
             Some(chunk)
         } else if rereading {
+            let read_span = ctx.tracer().span_start();
             let cpu = ThreadCpuTimer::start();
             let chunk = reader.next_chunk()?;
             if let Some(c) = &chunk {
+                ctx.tracer_mut().span_end(read_span, "chunk_read", Category::Load);
                 ctx.charge(Category::Load, cpu.elapsed() + cfg.disk.read_time(c.reads, c.bytes));
             }
             chunk
@@ -350,6 +412,7 @@ fn rank_steps<C: Communicator>(
             None
         };
         let Some(mut chunk) = next else { break };
+        let transform_span = ctx.tracer().span_start();
         ctx.timed(Category::Compute, || {
             apply_chunk_transform(&mut chunk.data, chunk.start_row, per, &means, scales.as_deref());
             match &mut gram_pjrt {
@@ -357,6 +420,7 @@ fn rank_steps<C: Communicator>(
                 None => gram.push(&chunk.data),
             }
         });
+        ctx.tracer_mut().span_end(transform_span, "chunk_transform", Category::Compute);
         rows_streamed += chunk.data.rows();
         let chunk_end = chunk.start_row + chunk.data.rows();
         for (&li, slot) in probe_cache.range_mut(chunk.start_row..chunk_end) {
@@ -367,6 +431,7 @@ fn rank_steps<C: Communicator>(
         rows_streamed == local_rows,
         "reader replayed {rows_streamed} of {local_rows} local rows in pass 2"
     );
+    ctx.tracer_mut().span_end(pass2_span, "pass2", Category::Compute);
 
     // ---- Step III: Gram reduction + spectrum + projection -------------
     let d_rank = match gram_pjrt {
@@ -378,11 +443,14 @@ fn rank_steps<C: Communicator>(
     let mut d_vec = d_rank.into_vec();
     ctx.allreduce_inplace(&mut d_vec, Op::Sum)?;
     let d_global = Matrix::from_vec(nt, nt, d_vec);
+    let eigh_span = ctx.tracer().span_start();
     let spectrum = ctx.timed(Category::Compute, || GramSpectrum::from_gram(&d_global));
+    ctx.tracer_mut().span_end(eigh_span, "eigh", Category::Compute);
     let r = cfg
         .opinf
         .r_override
         .unwrap_or_else(|| spectrum.choose_r(cfg.opinf.energy_target));
+    let projection_span = ctx.tracer().span_start();
     let (tr, qhat) = ctx.timed(Category::Compute, || {
         let tr = spectrum.tr(r);
         // Q̂ = T_rᵀD touches only the replicated (nt, nt) matrices —
@@ -396,13 +464,16 @@ fn rank_steps<C: Communicator>(
         };
         (tr, qhat)
     });
+    ctx.tracer_mut().span_end(projection_span, "projection", Category::Compute);
 
     // ---- Step IV: distributed operator learning -----------------------
+    let learn_span = ctx.tracer().span_start();
     let problem = ctx.timed(Category::Learn, || learn::assemble(&qhat));
     let (pair_start, pair_end) = distribute_pairs(rank, pairs.len(), p);
     let outcome = ctx.timed(Category::Learn, || {
         search_pairs(engine, &problem, &pairs[pair_start..pair_end], cfg.opinf.max_growth, nt_p)
     });
+    ctx.tracer_mut().span_end(learn_span, "learn", Category::Learn);
 
     let global_best = ctx.allreduce_scalar(outcome.best_err, Op::Min)?;
     anyhow::ensure!(
@@ -438,6 +509,9 @@ fn rank_steps<C: Communicator>(
         .context("re-solving the optimal regularization pair")?;
 
     // ---- Step V: probe postprocessing ---------------------------------
+    // the "post" span is recorded even with zero probes, so every
+    // traced rank shows all five categories on its track
+    let post_span = ctx.tracer().span_start();
     let mut probes = Vec::with_capacity(cfg.probes.len());
     let mut probe_bases = Vec::with_capacity(cfg.probes.len());
     for &(var, row) in &cfg.probes {
@@ -474,6 +548,7 @@ fn rank_steps<C: Communicator>(
             scale: payload[nt_p + r + 1],
         });
     }
+    ctx.tracer_mut().span_end(post_span, "post", Category::Post);
 
     Ok(RankOut {
         result: DOpInfResult {

@@ -33,8 +33,10 @@ pub enum DOpInfError {
     /// normally happen — rank failures are wrapped into aborts — but
     /// kept so no error is ever swallowed).
     Rank { rank: usize, source: anyhow::Error },
-    /// The run failed before any rank launched (bad config, unreadable
-    /// dataset, rendezvous bind failure).
+    /// The run failed outside the rank pipeline: before any rank
+    /// launched (bad config, unreadable dataset, rendezvous bind
+    /// failure), or after a successful join when a requested
+    /// `--trace`/`--metrics` export could not be written.
     Setup(anyhow::Error),
 }
 

@@ -44,6 +44,16 @@
 //!   regularization-pair ensembles), sharded over rank workers with
 //!   rooted-`gather` aggregation and queued across requests
 //!   ([`serve::server`]).
+//! * **Observability** — [`obs`] is the run-wide tracing & metrics
+//!   plane: a default-off, per-rank span recorder rides every
+//!   [`comm::Communicator`] backend (pipeline phase spans, per-chunk
+//!   data-plane spans, per-collective records with payload bytes, the
+//!   wait/transfer split, and the α–β cost-model prediction next to the
+//!   measured time), the serve tier records queue-wait/latency/batch
+//!   histograms, and `train --trace FILE --metrics FILE` exports a
+//!   Chrome trace-event timeline plus a structured summary whose
+//!   category totals reconcile with the virtual clocks. Tracing off is
+//!   a one-branch no-op; tracing on never perturbs results.
 //!
 //! The training → artifact → serving flow:
 //!
@@ -63,6 +73,7 @@ pub mod coordinator;
 pub mod error;
 pub mod io;
 pub mod linalg;
+pub mod obs;
 pub mod opinf;
 pub mod rom;
 pub mod runtime;

@@ -28,6 +28,7 @@ use dopinf::rom::RegGrid;
 use dopinf::runtime::{Engine, Manifest};
 use dopinf::serve::{serve_ensemble, EnsembleSpec, RomArtifact};
 use dopinf::sim::driver::{run_to_dataset, SimConfig};
+use dopinf::sim::synth::SynthSpec;
 use dopinf::sim::{Geometry, Grid};
 use dopinf::util::cli::{usage, Args, OptSpec};
 use dopinf::util::csvout::CsvWriter;
@@ -150,6 +151,7 @@ fn cmd_simulate(tokens: &[String]) -> Result<()> {
 fn train_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "data", help: "SNAPD dataset path", default: None, is_flag: false },
+        OptSpec { name: "synth", help: "train on generated data instead of a file: NXxNT spatial rows x snapshots of the analytic traveling-wave field (mutually exclusive with --data; trains on all NT columns)", default: None, is_flag: false },
         OptSpec { name: "procs", help: "number of ranks p", default: Some("4"), is_flag: false },
         OptSpec { name: "energy", help: "retained-energy target", default: Some("0.9996"), is_flag: false },
         OptSpec { name: "r", help: "override reduced dimension", default: None, is_flag: false },
@@ -168,6 +170,8 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "memory-budget-mb", help: "derive the ingestion chunk size from a per-rank memory budget (MiB)", default: None, is_flag: false },
         OptSpec { name: "threads", help: "compute-plane worker threads per rank (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
         OptSpec { name: "oversubscribe", help: "allow procs x threads to exceed the visible cores (timesharing skews per-rank CPU timings)", default: None, is_flag: true },
+        OptSpec { name: "trace", help: "write a Chrome trace-event timeline here: one track per rank with phase, data-plane, and per-collective spans (open in Perfetto / chrome://tracing; under `scaling` the last run wins)", default: None, is_flag: false },
+        OptSpec { name: "metrics", help: "write a structured metrics summary here: per-category clock totals, the per-primitive comm table with the predicted-vs-measured cost-model ratio, phase aggregates, and gauges", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -190,21 +194,43 @@ fn parse_reg_grid(s: &str) -> Result<RegGrid> {
 
 /// Build the training configuration + data source from CLI options.
 fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, usize)> {
-    let data = a.get("data").context("--data is required")?;
-    let reader = SnapReader::open(data)?;
-    let vars: Vec<String> = reader.variables().iter().map(|s| s.to_string()).collect();
-    let ns = vars.len();
-    let nt_total = reader.var_info(&vars[0])?.cols;
-    let train_frac: f64 = a.get_parse("train-frac", 0.5)?;
-    let nt_train = ((nt_total as f64 * train_frac).round() as usize).clamp(2, nt_total);
-
-    // probe rows from metadata (written by `dopinf simulate`)
-    let probe_rows: Vec<usize> = reader
-        .meta()
-        .get("probe_rows")
-        .and_then(Json::as_arr)
-        .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
-        .unwrap_or_default();
+    // dataset: a SNAPD file, or `--synth NXxNT` — the analytic
+    // traveling-wave generator, so smoke/trace runs need no file
+    let (source, ns, nt_total, nt_train, probe_rows) = match (a.get("data"), a.get("synth")) {
+        (Some(_), Some(_)) => bail!("--data and --synth are mutually exclusive"),
+        (None, None) => bail!("--data is required (or --synth NXxNT for generated data)"),
+        (Some(data), None) => {
+            let reader = SnapReader::open(data)?;
+            let vars: Vec<String> = reader.variables().iter().map(|s| s.to_string()).collect();
+            let ns = vars.len();
+            let nt_total = reader.var_info(&vars[0])?.cols;
+            let train_frac: f64 = a.get_parse("train-frac", 0.5)?;
+            let nt_train = ((nt_total as f64 * train_frac).round() as usize).clamp(2, nt_total);
+            // probe rows from metadata (written by `dopinf simulate`)
+            let probe_rows: Vec<usize> = reader
+                .meta()
+                .get("probe_rows")
+                .and_then(Json::as_arr)
+                .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            // the source itself carries the training-column truncation —
+            // the streamed readers slice columns per chunk, so no
+            // truncated copy of the dataset is ever staged in memory
+            let source = DataSource::File {
+                path: PathBuf::from(data),
+                variables: vars,
+                nt_train: Some(nt_train),
+            };
+            (source, ns, nt_total, nt_train, probe_rows)
+        }
+        (None, Some(spec)) => {
+            let (nx, nt) = parse_grid(spec).context("--synth must look like NXxNT")?;
+            anyhow::ensure!(nx >= 1 && nt >= 2, "--synth needs NX >= 1 and NT >= 2");
+            let spec = SynthSpec { nx, nt, ..Default::default() };
+            let ns = spec.ns;
+            (DataSource::Synthetic(spec), ns, nt, nt, Vec::new())
+        }
+    };
 
     let grid = parse_reg_grid(a.get_or("grid-size", "paper"))?;
     let opinf = OpInfConfig {
@@ -254,20 +280,16 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
         }
         (None, None) => {}
     }
+    // observability exports (see crate::obs): span recording turns on
+    // iff one of these is set — results are bitwise identical either way
+    cfg.trace = a.get("trace").map(PathBuf::from);
+    cfg.metrics = a.get("metrics").map(PathBuf::from);
     // probes on both velocity variables
     for &row in &probe_rows {
         for var in 0..ns {
             cfg.probes.push((var, row));
         }
     }
-    // the source itself carries the training-column truncation — the
-    // streamed readers slice columns per chunk, so no truncated copy of
-    // the dataset is ever staged in memory
-    let source = DataSource::File {
-        path: PathBuf::from(data),
-        variables: vars,
-        nt_train: Some(nt_train),
-    };
     Ok((cfg, source, probe_rows, nt_train))
 }
 

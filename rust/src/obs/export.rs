@@ -1,0 +1,370 @@
+//! Trace and metrics exporters, built on [`crate::util::json`].
+//!
+//! * [`chrome_trace`] — Chrome trace-event JSON (the `{"traceEvents":
+//!   [...]}` object form), loadable in `chrome://tracing` or Perfetto.
+//!   One track (`tid`) per rank; spans and collectives are `"ph":"X"`
+//!   complete events (µs units), gauges are `"ph":"C"` counters.
+//!   Timestamps are relative to each rank's own trace origin, so
+//!   within-rank ordering is exact while cross-rank alignment is
+//!   approximate (ranks start their tracers within the spawn window).
+//! * [`metrics_summary`] — a structured summary document (schema
+//!   `dopinf-metrics-v1`): per-category virtual-clock totals copied
+//!   verbatim from [`RunTiming`] (so they reconcile with the Fig. 4
+//!   tables by construction), a per-primitive comm table with the
+//!   measured-vs-α–β-predicted ratio, span aggregates, gauges, and the
+//!   serve-tier histograms when serving.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::coordinator::timing::{RankTiming, RunTiming};
+use crate::util::json::{emit, Json};
+
+use super::hist::ServeMetrics;
+use super::tracer::RankTrace;
+
+/// Build the Chrome trace-event document for the given rank traces.
+pub fn chrome_trace(traces: &[RankTrace]) -> Json {
+    let mut events = Vec::new();
+    for t in traces {
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(t.rank as f64)),
+            ("name", Json::Str("thread_name".into())),
+            ("args", Json::obj(vec![("name", Json::Str(format!("rank {}", t.rank)))])),
+        ]));
+        for s in &t.spans {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(t.rank as f64)),
+                ("ts", Json::Num(s.start_s * 1e6)),
+                ("dur", Json::Num(s.dur_s * 1e6)),
+                ("name", Json::Str(s.label.to_string())),
+                ("cat", Json::Str(s.category.name().to_string())),
+            ]));
+        }
+        for c in &t.comm {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(t.rank as f64)),
+                ("ts", Json::Num(c.start_s * 1e6)),
+                ("dur", Json::Num(c.measured_s * 1e6)),
+                ("name", Json::Str(c.primitive.to_string())),
+                ("cat", Json::Str("comm".into())),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("bytes", Json::Num(c.bytes as f64)),
+                        ("predicted_us", Json::Num(c.predicted_s * 1e6)),
+                        ("wait_us", Json::Num(c.wait_s * 1e6)),
+                    ]),
+                ),
+            ]));
+        }
+        for (name, value) in &t.gauges {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("C".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(t.rank as f64)),
+                ("ts", Json::Num(0.0)),
+                ("name", Json::Str(name.to_string())),
+                ("args", Json::obj(vec![("value", Json::Num(*value))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+fn rank_timing_json(r: &RankTiming) -> Json {
+    Json::obj(vec![
+        ("rank", Json::Num(r.rank as f64)),
+        ("total", Json::Num(r.total)),
+        ("load", Json::Num(r.load)),
+        ("compute", Json::Num(r.compute)),
+        ("comm", Json::Num(r.comm)),
+        ("learn", Json::Num(r.learn)),
+        ("post", Json::Num(r.post)),
+    ])
+}
+
+/// Build the structured metrics summary. `serve` is `None` for
+/// training runs; the serve tier passes its histogram snapshot.
+pub fn metrics_summary(
+    traces: &[RankTrace],
+    timing: &RunTiming,
+    serve: Option<&ServeMetrics>,
+) -> Json {
+    // Category totals come from the virtual clocks, not the wall-clock
+    // spans: the contract is that these reconcile exactly with the
+    // RunTiming the caller already reports.
+    let sum = |f: fn(&RankTiming) -> f64| timing.per_rank.iter().map(f).sum::<f64>();
+    let totals = Json::obj(vec![
+        ("total", Json::Num(sum(|r| r.total))),
+        ("load", Json::Num(sum(|r| r.load))),
+        ("compute", Json::Num(sum(|r| r.compute))),
+        ("comm", Json::Num(sum(|r| r.comm))),
+        ("learn", Json::Num(sum(|r| r.learn))),
+        ("post", Json::Num(sum(|r| r.post))),
+    ]);
+    let per_rank: Vec<Json> = timing.per_rank.iter().map(rank_timing_json).collect();
+
+    #[derive(Default)]
+    struct CommAgg {
+        calls: u64,
+        bytes: u64,
+        measured: f64,
+        wait: f64,
+        predicted: f64,
+    }
+    let mut comm: BTreeMap<&'static str, CommAgg> = BTreeMap::new();
+    for t in traces {
+        for c in &t.comm {
+            let a = comm.entry(c.primitive).or_default();
+            a.calls += 1;
+            a.bytes += c.bytes as u64;
+            a.measured += c.measured_s;
+            a.wait += c.wait_s;
+            a.predicted += c.predicted_s;
+        }
+    }
+    let comm_json = Json::Obj(
+        comm.iter()
+            .map(|(k, a)| {
+                let ratio = if a.predicted > 0.0 {
+                    Json::Num(a.measured / a.predicted)
+                } else {
+                    Json::Null
+                };
+                (
+                    k.to_string(),
+                    Json::obj(vec![
+                        ("calls", Json::Num(a.calls as f64)),
+                        ("bytes", Json::Num(a.bytes as f64)),
+                        ("measured_s", Json::Num(a.measured)),
+                        ("wait_s", Json::Num(a.wait)),
+                        ("predicted_s", Json::Num(a.predicted)),
+                        ("ratio", ratio),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    let mut phases: BTreeMap<&'static str, (u64, f64)> = BTreeMap::new();
+    for t in traces {
+        for s in &t.spans {
+            let e = phases.entry(s.label).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.dur_s;
+        }
+    }
+    let phases_json = Json::Obj(
+        phases
+            .iter()
+            .map(|(k, (calls, total))| {
+                (
+                    k.to_string(),
+                    Json::obj(vec![
+                        ("calls", Json::Num(*calls as f64)),
+                        ("total_s", Json::Num(*total)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    let mut gauges: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for t in traces {
+        for (&name, &value) in &t.gauges {
+            let slot = gauges.entry(name).or_insert(value);
+            if value > *slot {
+                *slot = value;
+            }
+        }
+    }
+    let gauges_json =
+        Json::Obj(gauges.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect());
+
+    Json::obj(vec![
+        ("schema", Json::Str("dopinf-metrics-v1".into())),
+        ("ranks", Json::Num(timing.per_rank.len() as f64)),
+        ("categories", Json::obj(vec![("totals", totals), ("per_rank", Json::Arr(per_rank))])),
+        ("comm", comm_json),
+        ("phases", phases_json),
+        ("gauges", gauges_json),
+        ("serve", serve.map_or(Json::Null, ServeMetrics::to_json)),
+    ])
+}
+
+fn write_doc(path: &Path, doc: &Json) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, emit(doc))
+}
+
+/// Write the Chrome trace-event document to `path` (parents created).
+pub fn write_chrome_trace(path: &Path, traces: &[RankTrace]) -> io::Result<()> {
+    write_doc(path, &chrome_trace(traces))
+}
+
+/// Write the metrics summary document to `path` (parents created).
+pub fn write_metrics(
+    path: &Path,
+    traces: &[RankTrace],
+    timing: &RunTiming,
+    serve: Option<&ServeMetrics>,
+) -> io::Result<()> {
+    write_doc(path, &metrics_summary(traces, timing, serve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Category;
+    use crate::obs::tracer::{CommRecord, Span};
+    use crate::util::json::parse;
+
+    fn fake_trace(rank: usize) -> RankTrace {
+        RankTrace {
+            rank,
+            enabled: true,
+            spans: vec![
+                Span { label: "pass1", category: Category::Load, start_s: 0.0, dur_s: 0.5 },
+                Span { label: "pass2", category: Category::Compute, start_s: 0.5, dur_s: 0.25 },
+            ],
+            comm: vec![CommRecord {
+                primitive: "allreduce",
+                bytes: 800,
+                predicted_s: 1e-5,
+                measured_s: 2e-5,
+                wait_s: 5e-6,
+                start_s: 0.75,
+            }],
+            gauges: [("peak_bytes", 1000.0 + rank as f64)].into_iter().collect(),
+        }
+    }
+
+    fn fake_timing(p: usize) -> RunTiming {
+        RunTiming::new(
+            (0..p)
+                .map(|rank| RankTiming {
+                    rank,
+                    total: 1.0,
+                    load: 0.5,
+                    compute: 0.25,
+                    comm: 0.15,
+                    learn: 0.05,
+                    post: 0.05,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_has_tracks() {
+        let traces = vec![fake_trace(0), fake_trace(1)];
+        let doc = chrome_trace(&traces);
+        let parsed = parse(&emit(&doc)).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // per rank: 1 metadata + 2 spans + 1 comm + 1 gauge
+        assert_eq!(events.len(), 10);
+        // every X event carries a dur (no open spans in the export)
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) == Some("X") {
+                assert!(e.get("dur").and_then(Json::as_f64).is_some());
+                assert!(e.get("ts").and_then(Json::as_f64).unwrap() >= 0.0);
+            }
+        }
+        // both rank tracks present
+        for tid in [0, 1] {
+            assert!(events
+                .iter()
+                .any(|e| e.get("tid").and_then(Json::as_usize) == Some(tid)));
+        }
+        // comm args carry the overlay fields
+        let comm = events
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("comm"))
+            .unwrap();
+        let args = comm.get("args").unwrap();
+        assert_eq!(args.get("bytes").and_then(Json::as_usize), Some(800));
+        assert!(args.get("predicted_us").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(args.get("wait_us").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn metrics_reconcile_with_run_timing() {
+        let traces = vec![fake_trace(0), fake_trace(1)];
+        let timing = fake_timing(2);
+        let doc = metrics_summary(&traces, &timing, None);
+        let parsed = parse(&emit(&doc)).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("dopinf-metrics-v1"));
+        assert_eq!(parsed.get("ranks").and_then(Json::as_usize), Some(2));
+        let per_rank = parsed.get("categories").unwrap().get("per_rank").unwrap().as_arr().unwrap();
+        assert_eq!(per_rank.len(), 2);
+        for (row, want) in per_rank.iter().zip(&timing.per_rank) {
+            assert_eq!(row.get("load").and_then(Json::as_f64), Some(want.load));
+            assert_eq!(row.get("comm").and_then(Json::as_f64), Some(want.comm));
+            assert_eq!(row.get("total").and_then(Json::as_f64), Some(want.total));
+        }
+        let ar = parsed.get("comm").unwrap().get("allreduce").unwrap();
+        assert_eq!(ar.get("calls").and_then(Json::as_usize), Some(2));
+        assert_eq!(ar.get("bytes").and_then(Json::as_usize), Some(1600));
+        // ratio = measured/predicted = 2.0 for the fake records
+        assert!((ar.get("ratio").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-12);
+        // phases aggregated across ranks
+        let p1 = parsed.get("phases").unwrap().get("pass1").unwrap();
+        assert_eq!(p1.get("calls").and_then(Json::as_usize), Some(2));
+        // gauge is the max across ranks
+        assert_eq!(
+            parsed.get("gauges").unwrap().get("peak_bytes").and_then(Json::as_f64),
+            Some(1001.0)
+        );
+        assert_eq!(parsed.get("serve"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn zero_predicted_cost_reports_null_ratio() {
+        let mut t = fake_trace(0);
+        t.comm[0].predicted_s = 0.0;
+        let doc = metrics_summary(&[t], &fake_timing(1), None);
+        let ar = doc.get("comm").unwrap().get("allreduce").unwrap();
+        assert_eq!(ar.get("ratio"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn serve_section_included_when_present() {
+        let mut m = ServeMetrics::new();
+        m.record_request(4, 1e-4, 3e-3);
+        let doc = metrics_summary(&[], &fake_timing(1), Some(&m));
+        assert_eq!(
+            doc.get("serve").unwrap().get("requests").and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn writers_create_parent_dirs() {
+        let dir = std::env::temp_dir().join(format!("dopinf_obs_export_{}", std::process::id()));
+        let trace_path = dir.join("nested").join("trace.json");
+        let metrics_path = dir.join("nested").join("metrics.json");
+        let traces = vec![fake_trace(0)];
+        write_chrome_trace(&trace_path, &traces).unwrap();
+        write_metrics(&metrics_path, &traces, &fake_timing(1), None).unwrap();
+        for p in [&trace_path, &metrics_path] {
+            let text = std::fs::read_to_string(p).unwrap();
+            assert!(parse(&text).is_ok(), "{p:?} must hold valid JSON");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,216 @@
+//! Fixed log-spaced histograms and the serve-tier metrics they feed.
+//!
+//! The serve tier is latency-sensitive: a mean hides tail behavior, so
+//! [`crate::serve::RomServer`] records queue wait, request latency, and
+//! batch size into [`Histogram`]s with fixed power-of-two buckets. The
+//! fixed layout keeps recording allocation-free and makes histograms
+//! from different runs directly comparable (same bucket edges always).
+
+use crate::util::json::Json;
+
+/// Number of finite buckets; one overflow bucket is appended.
+pub const BUCKETS: usize = 32;
+
+/// Log-spaced histogram: bucket `i` holds values in
+/// `(base·2^(i-1), base·2^i]` (bucket 0 is `[0, base]`), plus an
+/// overflow bucket past `base·2^(BUCKETS-1)`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    base: f64,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// `base` is the upper edge of the first bucket (e.g. `1e-6` for
+    /// seconds-scale latencies, `1.0` for counts).
+    pub fn new(base: f64) -> Histogram {
+        assert!(base > 0.0, "histogram base must be positive");
+        Histogram {
+            base,
+            counts: vec![0; BUCKETS + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Record one observation (negative values clamp to zero).
+    pub fn record(&mut self, value: f64) {
+        let v = value.max(0.0);
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        let mut idx = 0;
+        let mut edge = self.base;
+        while v > edge && idx < BUCKETS {
+            edge *= 2.0;
+            idx += 1;
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of the recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Structured form: count/sum/min/max plus the non-empty buckets as
+    /// `{le, count}` rows (`le` is the bucket's upper edge; the
+    /// overflow bucket reports `"inf"`).
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let le = if i < BUCKETS {
+                Json::Num(self.base * 2f64.powi(i as i32))
+            } else {
+                Json::Str("inf".to_string())
+            };
+            buckets.push(Json::obj(vec![("le", le), ("count", Json::Num(c as f64))]));
+        }
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(if self.count == 0 { 0.0 } else { self.min })),
+            ("max", Json::Num(self.max)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Aggregated serve-tier metrics: one instance per [`crate::serve::RomServer`],
+/// shared by its workers and snapshotted via `RomServer::metrics`.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    /// requests completed (success or failure)
+    pub requests: u64,
+    /// seconds a job sat queued before a worker dequeued it
+    pub queue_wait: Histogram,
+    /// seconds from dequeue to reply (the ensemble run itself)
+    pub latency: Histogram,
+    /// ensemble members per request (the "batch size" of the shard run)
+    pub batch_members: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            requests: 0,
+            queue_wait: Histogram::new(1e-6),
+            latency: Histogram::new(1e-6),
+            batch_members: Histogram::new(1.0),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record_request(&mut self, members: usize, queue_wait_s: f64, latency_s: f64) {
+        self.requests += 1;
+        self.queue_wait.record(queue_wait_s);
+        self.latency.record(latency_s);
+        self.batch_members.record(members as f64);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("queue_wait_s", self.queue_wait.to_json()),
+            ("latency_s", self.latency.to_json()),
+            ("batch_members", self.batch_members.to_json()),
+        ])
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{emit, parse};
+
+    #[test]
+    fn buckets_are_log_spaced() {
+        let mut h = Histogram::new(1.0);
+        h.record(0.5); // bucket 0: [0, 1]
+        h.record(1.0); // bucket 0 (inclusive upper edge)
+        h.record(1.5); // bucket 1: (1, 2]
+        h.record(100.0); // bucket 7: (64, 128]
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 103.0).abs() < 1e-12);
+        let j = h.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        let row = |le: f64| {
+            buckets
+                .iter()
+                .find(|b| b.get("le").and_then(Json::as_f64) == Some(le))
+                .and_then(|b| b.get("count"))
+                .and_then(Json::as_usize)
+        };
+        assert_eq!(row(1.0), Some(2));
+        assert_eq!(row(2.0), Some(1));
+        assert_eq!(row(128.0), Some(1));
+    }
+
+    #[test]
+    fn overflow_and_negatives() {
+        let mut h = Histogram::new(1e-6);
+        h.record(-5.0); // clamps to 0 → bucket 0
+        h.record(1e12); // past the last finite edge → overflow
+        let j = h.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert!(buckets.iter().any(|b| b.get("le").and_then(Json::as_str) == Some("inf")));
+        assert_eq!(j.get("min").and_then(Json::as_f64), Some(0.0));
+        // the document is valid JSON even with the overflow sentinel
+        assert!(parse(&emit(&j)).is_ok());
+    }
+
+    #[test]
+    fn empty_histogram_is_well_formed() {
+        let h = Histogram::new(1.0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(0));
+        assert_eq!(j.get("min").and_then(Json::as_f64), Some(0.0));
+        assert!(j.get("buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn serve_metrics_records_all_three() {
+        let mut m = ServeMetrics::new();
+        m.record_request(8, 1e-4, 2e-3);
+        m.record_request(2, 5e-5, 1e-3);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.queue_wait.count(), 2);
+        assert!((m.batch_members.sum() - 10.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(2));
+        assert!(j.get("latency_s").unwrap().get("count").is_some());
+    }
+}

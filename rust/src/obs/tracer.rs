@@ -1,0 +1,251 @@
+//! Per-rank span recorder: lock-free within a rank, merged at join.
+//!
+//! One [`Tracer`] rides each [`crate::comm::Communicator`] backend, so
+//! recording a span or a collective record is a plain `Vec::push` on
+//! rank-local state — no atomics, no locks, no channels. The runner
+//! merges the per-rank [`RankTrace`]s after join, exactly like it
+//! merges the virtual [`crate::comm::Clock`]s.
+//!
+//! Two contracts the rest of the crate relies on:
+//!
+//! * **Off is free.** The tracer is default-off; every probe point
+//!   checks one `bool` before touching a clock, and disabled probes
+//!   read no `Instant`, allocate nothing, and return unit or `0.0`.
+//!   The `hotpath` bench carries a tracer-off row next to the bare
+//!   kernel to keep this honest (acceptance: ≤ 1% regression).
+//! * **On observes, never perturbs.** Wall-clock readings never feed
+//!   the virtual clocks or any numeric path, so results are bitwise
+//!   identical with tracing enabled — `integration_obs` asserts this
+//!   across p × transport × T.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::comm::Category;
+
+/// One closed span on a rank's timeline.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// stable label ("pass1", "chunk_read", ...)
+    pub label: &'static str,
+    /// the virtual-clock category the spanned work bills to
+    pub category: Category,
+    /// wall seconds since the rank's trace origin
+    pub start_s: f64,
+    /// wall duration (seconds)
+    pub dur_s: f64,
+}
+
+/// One collective call: measured wall time next to its α–β prediction.
+#[derive(Clone, Debug)]
+pub struct CommRecord {
+    /// primitive name ("allreduce", "broadcast", ...)
+    pub primitive: &'static str,
+    /// payload bytes, using the same convention the cost model is fed
+    pub bytes: usize,
+    /// `comm::costmodel` α–β prediction (seconds)
+    pub predicted_s: f64,
+    /// measured wall time of the whole call (seconds)
+    pub measured_s: f64,
+    /// portion of the call spent waiting for peers (seconds)
+    pub wait_s: f64,
+    /// wall seconds since the rank's trace origin
+    pub start_s: f64,
+}
+
+/// Token from [`Tracer::span_start`]: `None` when tracing is off, so
+/// the matching [`Tracer::span_end`] is a no-op without re-checking.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart(Option<Instant>);
+
+/// Token from [`Tracer::comm_start`]; same disabled-is-`None` shape.
+#[derive(Clone, Copy, Debug)]
+pub struct CommStart(Option<Instant>);
+
+/// Per-rank recorder for spans, collective records, and gauges.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    rank: usize,
+    origin: Instant,
+    spans: Vec<Span>,
+    comm: Vec<CommRecord>,
+    gauges: BTreeMap<&'static str, f64>,
+}
+
+impl Tracer {
+    /// A disabled tracer for `rank`; every backend constructs one.
+    pub fn new(rank: usize) -> Tracer {
+        Tracer {
+            enabled: false,
+            rank,
+            origin: Instant::now(),
+            spans: Vec::new(),
+            comm: Vec::new(),
+            gauges: BTreeMap::new(),
+        }
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Open a span. Reads the clock only when enabled.
+    #[inline]
+    pub fn span_start(&self) -> SpanStart {
+        SpanStart(self.enabled.then(Instant::now))
+    }
+
+    /// Close a span opened with [`span_start`](Self::span_start).
+    pub fn span_end(&mut self, start: SpanStart, label: &'static str, category: Category) {
+        if let Some(t0) = start.0 {
+            self.spans.push(Span {
+                label,
+                category,
+                start_s: t0.duration_since(self.origin).as_secs_f64(),
+                dur_s: t0.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    /// Open a collective record. Reads the clock only when enabled.
+    #[inline]
+    pub fn comm_start(&self) -> CommStart {
+        CommStart(self.enabled.then(Instant::now))
+    }
+
+    /// Wall seconds since `start` (0.0 when tracing is off) — used by
+    /// the transports to split wait time out of a collective.
+    pub fn elapsed_since(&self, start: CommStart) -> f64 {
+        start.0.map_or(0.0, |t0| t0.elapsed().as_secs_f64())
+    }
+
+    /// Close a collective record opened with
+    /// [`comm_start`](Self::comm_start); `measured_s` is taken here so
+    /// every exit path of a collective closes its record.
+    pub fn comm_record(
+        &mut self,
+        start: CommStart,
+        primitive: &'static str,
+        bytes: usize,
+        predicted_s: f64,
+        wait_s: f64,
+    ) {
+        if let Some(t0) = start.0 {
+            self.comm.push(CommRecord {
+                primitive,
+                bytes,
+                predicted_s,
+                measured_s: t0.elapsed().as_secs_f64(),
+                wait_s,
+                start_s: t0.duration_since(self.origin).as_secs_f64(),
+            });
+        }
+    }
+
+    /// Record a running-maximum gauge (e.g. peak resident chunk bytes).
+    pub fn gauge_max(&mut self, name: &'static str, value: f64) {
+        if self.enabled {
+            let slot = self.gauges.entry(name).or_insert(value);
+            if value > *slot {
+                *slot = value;
+            }
+        }
+    }
+
+    /// Move the recorded data out (the tracer stays usable but empty).
+    pub fn take(&mut self) -> RankTrace {
+        RankTrace {
+            rank: self.rank,
+            enabled: self.enabled,
+            spans: std::mem::take(&mut self.spans),
+            comm: std::mem::take(&mut self.comm),
+            gauges: std::mem::take(&mut self.gauges),
+        }
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(0)
+    }
+}
+
+/// One rank's recorded trace, moved out of the rank at join time.
+#[derive(Clone, Debug)]
+pub struct RankTrace {
+    pub rank: usize,
+    /// whether the rank recorded at all (exporters skip disabled ranks)
+    pub enabled: bool,
+    pub spans: Vec<Span>,
+    pub comm: Vec<CommRecord>,
+    pub gauges: BTreeMap<&'static str, f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Tracer::new(3);
+        assert!(!t.is_enabled());
+        let s = t.span_start();
+        t.span_end(s, "pass1", Category::Load);
+        let c = t.comm_start();
+        assert_eq!(t.elapsed_since(c), 0.0);
+        t.comm_record(c, "allreduce", 64, 1.0e-6, 0.0);
+        t.gauge_max("peak", 42.0);
+        let trace = t.take();
+        assert_eq!(trace.rank, 3);
+        assert!(!trace.enabled);
+        assert!(trace.spans.is_empty());
+        assert!(trace.comm.is_empty());
+        assert!(trace.gauges.is_empty());
+    }
+
+    #[test]
+    fn enabled_records_spans_and_comm() {
+        let mut t = Tracer::new(1);
+        t.set_enabled(true);
+        let s = t.span_start();
+        std::hint::black_box((0..1000u64).sum::<u64>());
+        t.span_end(s, "pass2", Category::Compute);
+        let c = t.comm_start();
+        let wait = t.elapsed_since(c);
+        t.comm_record(c, "broadcast", 128, 2.5e-6, wait);
+        let trace = t.take();
+        assert!(trace.enabled);
+        assert_eq!(trace.spans.len(), 1);
+        assert_eq!(trace.spans[0].label, "pass2");
+        assert!(trace.spans[0].dur_s >= 0.0);
+        assert!(trace.spans[0].start_s >= 0.0);
+        assert_eq!(trace.comm.len(), 1);
+        let r = &trace.comm[0];
+        assert_eq!(r.primitive, "broadcast");
+        assert_eq!(r.bytes, 128);
+        assert!((r.predicted_s - 2.5e-6).abs() < 1e-18);
+        assert!(r.measured_s >= r.wait_s);
+        // take() drains: a second take is empty
+        assert!(t.take().spans.is_empty());
+    }
+
+    #[test]
+    fn gauge_keeps_the_maximum() {
+        let mut t = Tracer::new(0);
+        t.set_enabled(true);
+        t.gauge_max("peak_bytes", 100.0);
+        t.gauge_max("peak_bytes", 40.0);
+        t.gauge_max("peak_bytes", 250.0);
+        let trace = t.take();
+        assert_eq!(trace.gauges.get("peak_bytes"), Some(&250.0));
+    }
+}

@@ -25,7 +25,10 @@
 //! * [`server`]   — member sharding over [`crate::comm`] rank workers
 //!   (probe series funnel to rank 0 through the rooted `gather`
 //!   collective) and a multi-threaded request queue over a shared
-//!   artifact
+//!   artifact. The queue is instrumented: every completed request
+//!   records queue wait, latency, and batch size into the fixed
+//!   log-spaced [`crate::obs::ServeMetrics`] histograms, snapshotted
+//!   via [`RomServer::metrics`]
 //!
 //! v2 artifacts may also carry the OpInf normal-equation blocks
 //! ([`RegBlocks`]), enabling serving-side *regularization-pair*

@@ -23,6 +23,7 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -31,6 +32,7 @@ use crate::error::DOpInfError;
 use crate::io::partition::distribute_balanced;
 use crate::io::RowRange;
 use crate::linalg::Matrix;
+use crate::obs::ServeMetrics;
 use crate::runtime::Engine;
 use crate::util::panic::panic_text;
 
@@ -168,6 +170,9 @@ fn ensemble_shard(
 struct Job {
     spec: EnsembleSpec,
     reply: mpsc::Sender<Result<EnsembleStats>>,
+    /// when the client submitted it — queue wait is measured from here
+    /// to the worker's dequeue
+    submitted: Instant,
 }
 
 /// Multi-threaded ensemble request queue over one shared ROM artifact.
@@ -182,21 +187,29 @@ struct Job {
 /// request with an error response and leaves the queue serviceable for
 /// every subsequent request — one bad job must not take the server (or
 /// the queue mutex) down with it.
+///
+/// Every completed request (success or error reply) records into the
+/// shared [`ServeMetrics`] — queue wait (submit → dequeue), latency
+/// (dequeue → reply), and batch size — snapshot it any time with
+/// [`RomServer::metrics`].
 pub struct RomServer {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    metrics: Arc<Mutex<ServeMetrics>>,
 }
 
 impl RomServer {
     /// Spawn `workers` threads serving `artifact`.
     pub fn start(artifact: RomArtifact, workers: usize) -> RomServer {
         let artifact = Arc::new(artifact);
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let artifact = Arc::clone(&artifact);
+                let metrics = Arc::clone(&metrics);
                 std::thread::spawn(move || {
                     let engine = Engine::native();
                     loop {
@@ -211,6 +224,8 @@ impl RomServer {
                             Ok(job) => job,
                             Err(_) => break, // queue closed
                         };
+                        let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+                        let started = Instant::now();
                         // contain a panicking evaluation: the client gets
                         // an error response instead of a dead channel,
                         // and this worker lives to serve the next job
@@ -223,6 +238,17 @@ impl RomServer {
                                 panic_text(&*p)
                             ))
                         });
+                        // error replies count too: a request that burned
+                        // worker time is precisely what latency
+                        // histograms must not hide
+                        metrics
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .record_request(
+                                job.spec.members,
+                                queue_wait_s,
+                                started.elapsed().as_secs_f64(),
+                            );
                         // a dropped reply receiver just means the client
                         // stopped caring; not an error
                         let _ = job.reply.send(out);
@@ -230,7 +256,7 @@ impl RomServer {
                 })
             })
             .collect();
-        RomServer { tx: Some(tx), handles }
+        RomServer { tx: Some(tx), handles, metrics }
     }
 
     /// Enqueue one ensemble evaluation; the returned channel yields the
@@ -240,9 +266,15 @@ impl RomServer {
         self.tx
             .as_ref()
             .expect("server already shut down")
-            .send(Job { spec, reply })
+            .send(Job { spec, reply, submitted: Instant::now() })
             .expect("worker pool alive");
         rx
+    }
+
+    /// Snapshot the aggregated request metrics (queue-wait / latency /
+    /// batch-size histograms over every request completed so far).
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 
     /// Drain the queue and join the workers.
@@ -362,6 +394,24 @@ mod tests {
             };
             assert!(format!("{e}").contains("panicked"), "{e}");
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_track_every_completed_request() {
+        let server = RomServer::start(artifact(3), 2);
+        let spec = EnsembleSpec { members: 6, sigma: 0.01, seed: 3, n_steps: 15 };
+        let tickets: Vec<_> = (0..4).map(|_| server.submit(spec.clone())).collect();
+        for t in tickets {
+            t.recv().expect("worker replied").expect("ensemble ok");
+        }
+        // workers record before replying, so after the last recv all
+        // four requests are visible in the snapshot
+        let m = server.metrics();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.queue_wait.count(), 4);
+        assert_eq!(m.latency.count(), 4);
+        assert!((m.batch_members.sum() - 24.0).abs() < 1e-12);
         server.shutdown();
     }
 

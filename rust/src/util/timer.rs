@@ -45,9 +45,18 @@ impl ThreadCpuTimer {
     pub fn start() -> Self {
         ThreadCpuTimer { start: thread_cpu_time() }
     }
-    /// CPU seconds this thread burned since start.
+    /// CPU seconds this thread burned since start, clamped to zero.
+    ///
+    /// `CLOCK_THREAD_CPUTIME_ID` is per-CPU state under the hood: after
+    /// a migration across cores with imperfectly synchronized TSCs, a
+    /// later reading can come out *below* an earlier one by a few ns.
+    /// A negative delta would poison every downstream consumer
+    /// (`Clock::add` debug-asserts non-negative charges; the virtual
+    /// clocks and timing tables silently lose time in release), so the
+    /// delta saturates at zero — the same contract
+    /// `Instant::duration_since` adopted for wall clocks.
     pub fn elapsed(&self) -> f64 {
-        thread_cpu_time() - self.start
+        (thread_cpu_time() - self.start).max(0.0)
     }
 }
 
@@ -94,6 +103,15 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(50));
         // CPU time during sleep should be ~0, certainly far below wall 50ms
         assert!(t.elapsed() < 0.02, "cpu={}", t.elapsed());
+    }
+
+    #[test]
+    fn thread_cpu_clamps_nonmonotonic_readings_to_zero() {
+        // simulate a cross-core migration where the new core's clock is
+        // behind: a timer whose start is in the "future" must report
+        // 0.0, never a negative delta
+        let t = ThreadCpuTimer { start: thread_cpu_time() + 1e9 };
+        assert_eq!(t.elapsed(), 0.0);
     }
 
     #[test]

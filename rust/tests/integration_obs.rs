@@ -1,0 +1,263 @@
+//! Observability-plane contracts, end to end (ISSUE 6 acceptance):
+//!
+//! * **Bitwise invisibility** — arming `--trace`/`--metrics` must not
+//!   move a single bit of any `DOpInfResult` artifact, across
+//!   p ∈ {1, 2, 4} × both transports × T ∈ {1, 4}. The tracer reads
+//!   wall clocks but never feeds them back into the virtual `Clock`s
+//!   or the numerics, so the outputs are byte-identical by design;
+//!   this suite is the regression fence for that design.
+//! * **Coverage** — a traced p = 4 run emits a valid Chrome
+//!   trace-event document with all five categories on every rank
+//!   track and the predicted-vs-actual overlay on every comm event.
+//! * **Reconciliation** — the metrics summary's category totals are
+//!   the virtual-clock `RunTiming` verbatim.
+//! * **Fault path** — an injected mid-run read fault still flushes a
+//!   parseable trace holding the originating rank's partial spans,
+//!   with no X event missing its `dur` (no collective left open).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dopinf::comm::CostModel;
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
+use dopinf::coordinator::pipeline::{run_distributed, DOpInfResult};
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::{generate, SynthSpec};
+use dopinf::util::json::{parse, Json};
+
+fn obs_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dopinf_it_obs_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn test_setup(nx: usize) -> (DataSource, OpInfConfig) {
+    let spec = SynthSpec { nx, ns: 2, nt: 60, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.5,
+        nt_p: 120,
+    };
+    (DataSource::InMemory(Arc::new(q)), ocfg)
+}
+
+/// Every f64 of every output artifact, not just within tolerance.
+fn assert_bitwise_eq(a: &DOpInfResult, b: &DOpInfResult, tag: &str) {
+    assert_eq!(a.r, b.r, "{tag}: r");
+    assert_eq!(a.eigs, b.eigs, "{tag}: eigs");
+    assert_eq!(a.retained_energy, b.retained_energy, "{tag}: energy");
+    assert_eq!(a.opt_pair, b.opt_pair, "{tag}: opt_pair");
+    assert_eq!(a.train_err, b.train_err, "{tag}: train_err");
+    assert_eq!(a.qtilde.data(), b.qtilde.data(), "{tag}: qtilde");
+    assert_eq!(a.ops.ahat.data(), b.ops.ahat.data(), "{tag}: ahat");
+    assert_eq!(a.ops.fhat.data(), b.ops.fhat.data(), "{tag}: fhat");
+    assert_eq!(a.ops.chat, b.ops.chat, "{tag}: chat");
+    assert_eq!(a.probes.len(), b.probes.len(), "{tag}: probe count");
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!(pa.values, pb.values, "{tag}: probe values");
+    }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_to_results() {
+    let dir = obs_dir("invisible");
+    let (source, ocfg) = test_setup(61);
+    for p in [1usize, 2, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            for t in [1usize, 4] {
+                let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+                cfg.cost_model = CostModel::free();
+                cfg.transport = transport;
+                cfg.threads_per_rank = t;
+                // p × T products exceed this machine's cores; results
+                // are T-invariant so only wall time could care
+                cfg.allow_oversubscribe = true;
+                cfg.probes = vec![(0, 3), (1, 60)];
+                let plain = run_distributed(&cfg, &source).unwrap();
+
+                let mut traced_cfg = cfg.clone();
+                let tag = format!("p{p}_{transport:?}_t{t}");
+                traced_cfg.trace = Some(dir.join(format!("{tag}.trace.json")));
+                traced_cfg.metrics = Some(dir.join(format!("{tag}.metrics.json")));
+                let traced = run_distributed(&traced_cfg, &source).unwrap();
+
+                assert_bitwise_eq(&plain, &traced, &tag);
+                // both exports must exist and hold valid JSON
+                for path in [&traced_cfg.trace, &traced_cfg.metrics] {
+                    let text = std::fs::read_to_string(path.as_ref().unwrap()).unwrap();
+                    assert!(parse(&text).is_ok(), "{tag}: export must be valid JSON");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Collect the category (`cat`) values of all X events on one rank's
+/// track. Comm telemetry appears as `cat: "comm"` events rather than
+/// spans, so this is exactly the five-category coverage check.
+fn cats_on_rank(events: &[Json], rank: usize) -> HashSet<String> {
+    events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .filter(|e| e.get("tid").and_then(Json::as_usize) == Some(rank))
+        .filter_map(|e| e.get("cat").and_then(Json::as_str).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn trace_at_p4_covers_all_categories_on_every_rank() {
+    let dir = obs_dir("coverage");
+    let trace_path = dir.join("trace.json");
+    let (source, ocfg) = test_setup(97);
+    let mut cfg = DOpInfConfig::new(4, ocfg);
+    cfg.cost_model = CostModel::shared_memory();
+    cfg.chunk_rows = Some(7);
+    cfg.probes = vec![(0, 5), (1, 90)];
+    cfg.trace = Some(trace_path.clone());
+    run_distributed(&cfg, &source).unwrap();
+
+    let doc = parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    for rank in 0..4 {
+        let cats = cats_on_rank(events, rank);
+        for want in ["load", "compute", "comm", "learn", "post"] {
+            assert!(cats.contains(want), "rank {rank} missing category {want}: {cats:?}");
+        }
+    }
+    // every X event is closed (has dur) and every comm event carries
+    // the predicted-vs-actual overlay
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        assert!(e.get("dur").and_then(Json::as_f64).is_some(), "open span in export");
+        if e.get("cat").and_then(Json::as_str) == Some("comm") {
+            let args = e.get("args").expect("comm event without args");
+            assert!(args.get("bytes").and_then(Json::as_f64).is_some());
+            assert!(args.get("predicted_us").and_then(Json::as_f64).unwrap() >= 0.0);
+            assert!(args.get("wait_us").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+    }
+    // the streaming data plane's residency gauge made it through
+    assert!(
+        events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("C")
+                && e.get("name").and_then(Json::as_str) == Some("peak_chunk_resident_bytes")
+        }),
+        "missing peak-residency gauge"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metrics_categories_reconcile_with_run_timing() {
+    let dir = obs_dir("reconcile");
+    let metrics_path = dir.join("metrics.json");
+    let (source, ocfg) = test_setup(97);
+    let mut cfg = DOpInfConfig::new(4, ocfg);
+    // a real α–β model so the overlay has nonzero predictions
+    cfg.cost_model = CostModel::shared_memory();
+    cfg.probes = vec![(0, 5)];
+    cfg.metrics = Some(metrics_path.clone());
+    let result = run_distributed(&cfg, &source).unwrap();
+
+    let doc = parse(&std::fs::read_to_string(&metrics_path).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some("dopinf-metrics-v1"));
+    assert_eq!(doc.get("ranks").and_then(Json::as_usize), Some(4));
+
+    // per-rank rows are the virtual-clock RunTiming verbatim (float
+    // tolerance only for the JSON text roundtrip)
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+    let cats = doc.get("categories").unwrap();
+    let per_rank = cats.get("per_rank").unwrap().as_arr().unwrap();
+    assert_eq!(per_rank.len(), result.timing.per_rank.len());
+    for (row, want) in per_rank.iter().zip(&result.timing.per_rank) {
+        for (key, val) in [
+            ("total", want.total),
+            ("load", want.load),
+            ("compute", want.compute),
+            ("comm", want.comm),
+            ("learn", want.learn),
+            ("post", want.post),
+        ] {
+            let got = row.get(key).and_then(Json::as_f64).unwrap();
+            assert!(close(got, val), "rank row {key}: {got} vs {val}");
+        }
+    }
+    // totals are the column sums of those rows
+    let totals = cats.get("totals").unwrap();
+    let sum = |f: fn(&dopinf::coordinator::timing::RankTiming) -> f64| {
+        result.timing.per_rank.iter().map(f).sum::<f64>()
+    };
+    assert!(close(totals.get("comm").and_then(Json::as_f64).unwrap(), sum(|r| r.comm)));
+    assert!(close(totals.get("total").and_then(Json::as_f64).unwrap(), sum(|r| r.total)));
+
+    // the comm table carries the predicted-vs-actual overlay: the
+    // pipeline allreduces on every run, with calls, bytes, and a
+    // nonzero α–β prediction feeding a finite ratio
+    let ar = doc.get("comm").unwrap().get("allreduce").expect("allreduce row");
+    assert!(ar.get("calls").and_then(Json::as_usize).unwrap() >= 4);
+    assert!(ar.get("bytes").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(ar.get("predicted_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(ar.get("ratio").and_then(Json::as_f64).unwrap().is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn aborted_run_still_flushes_a_parseable_partial_trace() {
+    let dir = obs_dir("abort");
+    let (source, ocfg) = test_setup(120);
+    for p in [2usize, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            let fail_rank = 1usize;
+            let trace_path = dir.join(format!("abort_p{p}_{transport:?}.trace.json"));
+            let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+            cfg.cost_model = CostModel::free();
+            cfg.transport = transport;
+            cfg.chunk_rows = Some(5);
+            // bounded waits: a broken abort path fails instead of hanging
+            cfg.comm_timeout = Some(60.0);
+            cfg.trace = Some(trace_path.clone());
+            let faulty = DataSource::Faulty {
+                inner: Box::new(source.clone()),
+                fault: FaultSpec { rank: fail_rank, after_chunks: 1 },
+            };
+            let err = run_distributed(&cfg, &faulty).unwrap_err();
+            let tag = format!("p={p} {transport:?}");
+            assert!(format!("{err:?}").contains("injected read fault"), "{tag}: {err:?}");
+
+            // the partial trace was flushed before the error returned
+            let text = std::fs::read_to_string(&trace_path)
+                .unwrap_or_else(|e| panic!("{tag}: no trace flushed: {e}"));
+            let doc = parse(&text).unwrap_or_else(|e| panic!("{tag}: invalid JSON: {e:?}"));
+            let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+            // the originating rank got through one chunk before its
+            // fault fired: its partial spans must be present
+            let origin_spans = events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+                .filter(|e| e.get("tid").and_then(Json::as_usize) == Some(fail_rank))
+                .count();
+            assert!(origin_spans >= 1, "{tag}: originating rank has no partial spans");
+            // nothing is left open, comm records included: every X
+            // event in the export carries a duration
+            for e in events {
+                if e.get("ph").and_then(Json::as_str) == Some("X") {
+                    assert!(
+                        e.get("dur").and_then(Json::as_f64).is_some(),
+                        "{tag}: open span in aborted-run export"
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
