@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Load generator + smoke validator for the `dopinf serve` HTTP tier.
+
+Usage:
+    python3 python/load_http.py --base http://127.0.0.1:8080 \
+        [--clients 4] [--requests 6] [--model NAME] [--reload] [--shutdown]
+
+Stdlib only (http.client + threading). Drives the serving tier the way
+CI needs it driven end to end:
+
+* Waits for ``GET /healthz`` to answer ``ok`` (bounded retry loop).
+* Lists ``GET /v1/models`` and picks a model (``--model`` overrides).
+* Runs ``--clients`` threads, each issuing ``--requests`` mixed-size
+  ``POST /v1/ensemble`` calls (members cycles through 1/4/16, steps
+  through 50/200) and validating every response document: echoed
+  members/steps, per-probe stats arrays of the right length, finite
+  counts.
+* With ``--reload``, issues ``POST /v1/models/{name}/reload`` while the
+  load is in flight and checks the generation advances.
+* Fetches ``GET /metrics`` and reconciles: the per-model request count
+  covers every ensemble call made here, and the HTTP response counters
+  are consistent (2xx at least the successes we observed).
+* With ``--shutdown``, ends with ``POST /admin/shutdown`` (the server
+  must have been started with ``--admin-shutdown``).
+
+Exit status 0 on success; prints the first failure and exits 1.
+"""
+
+import argparse
+import http.client
+import json
+import sys
+import threading
+import time
+import urllib.parse
+
+MEMBER_MIX = (1, 4, 16)
+STEP_MIX = (50, 200)
+
+
+def fail(msg):
+    print(f"load_http: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+class BadResponse(RuntimeError):
+    """A response failed validation (raisable from worker threads,
+    where sys.exit would only kill the thread)."""
+
+
+class Client:
+    """One keep-alive connection to the serving tier."""
+
+    def __init__(self, base):
+        u = urllib.parse.urlsplit(base)
+        if u.scheme != "http" or not u.hostname:
+            fail(f"--base must be an http:// URL, got {base!r}")
+        self.conn = http.client.HTTPConnection(u.hostname, u.port or 80, timeout=60)
+
+    def call(self, method, path, body=None):
+        payload = None if body is None else json.dumps(body).encode()
+        headers = {} if payload is None else {"Content-Type": "application/json"}
+        self.conn.request(method, path, body=payload, headers=headers)
+        resp = self.conn.getresponse()
+        raw = resp.read()
+        try:
+            doc = json.loads(raw) if raw else None
+        except json.JSONDecodeError as e:
+            raise BadResponse(
+                f"{method} {path}: response is not JSON ({e}): {raw[:200]!r}") from e
+        return resp.status, doc
+
+    def close(self):
+        self.conn.close()
+
+
+def wait_healthy(base, deadline_s=30.0):
+    t0 = time.monotonic()
+    last = "no attempt made"
+    while time.monotonic() - t0 < deadline_s:
+        try:
+            c = Client(base)
+            status, doc = c.call("GET", "/healthz")
+            c.close()
+            if status == 200 and doc.get("status") in ("ok", "draining"):
+                return doc
+            last = f"status {status}: {doc}"
+        except OSError as e:
+            last = str(e)
+        time.sleep(0.2)
+    fail(f"server at {base} not healthy after {deadline_s}s ({last})")
+
+
+def check_stats(doc, members, steps, tag):
+    if doc.get("members") != members or doc.get("steps") != steps:
+        raise BadResponse(
+            f"{tag}: echoed members/steps {doc.get('members')}/{doc.get('steps')} "
+            f"!= requested {members}/{steps}")
+    probes = doc.get("probes")
+    if not isinstance(probes, list) or not probes:
+        raise BadResponse(f"{tag}: missing probes array")
+    series = doc.get("series")
+    for p in probes:
+        for key in ("mean", "variance", "q05", "q50", "q95", "count"):
+            if key not in p:
+                raise BadResponse(f"{tag}: probe missing {key!r}")
+            if series == "full" and not (isinstance(p[key], list)
+                                         and len(p[key]) == steps):
+                raise BadResponse(f"{tag}: probe {key} is not a {steps}-long series")
+    div = doc.get("diverged")
+    if not isinstance(div, int) or not 0 <= div <= members:
+        raise BadResponse(f"{tag}: diverged={div!r} out of range 0..{members}")
+
+
+def run_client(base, model, requests, idx, counts, errors):
+    try:
+        c = Client(base)
+        for i in range(requests):
+            members = MEMBER_MIX[(idx + i) % len(MEMBER_MIX)]
+            steps = STEP_MIX[(idx + i) % len(STEP_MIX)]
+            body = {"model": model, "members": members, "sigma": 0.02,
+                    "seed": 100 * idx + i, "steps": steps,
+                    "series": "full" if i % 2 == 0 else "last"}
+            status, doc = c.call("POST", "/v1/ensemble", body)
+            if status != 200:
+                errors.append(f"client {idx} request {i}: status {status}: {doc}")
+                return
+            check_stats(doc, members, steps, f"client {idx} request {i}")
+            counts[idx] += 1
+        c.close()
+    except (OSError, BadResponse) as e:
+        errors.append(f"client {idx}: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", default="http://127.0.0.1:8080",
+                    help="server base URL (default %(default)s)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6,
+                    help="ensemble calls per client (default %(default)s)")
+    ap.add_argument("--model", default=None,
+                    help="model name (default: first listed)")
+    ap.add_argument("--reload", action="store_true",
+                    help="hot-reload the model while the load is in flight")
+    ap.add_argument("--shutdown", action="store_true",
+                    help="finish with POST /admin/shutdown")
+    opts = ap.parse_args()
+
+    health = wait_healthy(opts.base)
+    print(f"load_http: healthy ({health.get('models')} model(s), "
+          f"queue depth {health.get('queue_depth')})")
+
+    admin = Client(opts.base)
+    status, listing = admin.call("GET", "/v1/models")
+    if status != 200 or not isinstance(listing.get("models"), list) or not listing["models"]:
+        fail(f"GET /v1/models: status {status}: {listing}")
+    model = opts.model or listing["models"][0]["name"]
+    row = next((m for m in listing["models"] if m["name"] == model), None)
+    if row is None:
+        fail(f"model {model!r} not in registry listing {listing}")
+    gen0 = row.get("generation")
+    print(f"load_http: driving model {model!r} (r={row.get('r')}, generation {gen0})")
+
+    counts = [0] * opts.clients
+    errors = []
+    threads = [
+        threading.Thread(target=run_client,
+                         args=(opts.base, model, opts.requests, i, counts, errors))
+        for i in range(opts.clients)
+    ]
+    for t in threads:
+        t.start()
+
+    if opts.reload:
+        time.sleep(0.1)  # land mid-load so in-flight requests span the swap
+        status, doc = admin.call("POST", f"/v1/models/{model}/reload")
+        if status != 200:
+            fail(f"reload: status {status}: {doc}")
+        if doc.get("generation", 0) <= (gen0 or 0):
+            fail(f"reload did not advance the generation: {doc}")
+        print(f"load_http: hot-reloaded {model!r} -> generation {doc['generation']}")
+
+    for t in threads:
+        t.join()
+    if errors:
+        fail(errors[0])
+    made = sum(counts)
+    want = opts.clients * opts.requests
+    if made != want:
+        fail(f"only {made}/{want} ensemble calls succeeded")
+    print(f"load_http: {made} ensemble call(s) validated across {opts.clients} client(s)")
+
+    status, metrics = admin.call("GET", "/metrics")
+    if status != 200 or metrics.get("schema") != "dopinf-serve-http-v1":
+        fail(f"GET /metrics: status {status}, schema {metrics.get('schema')!r}")
+    served = metrics.get("models", {}).get(model, {}).get("requests")
+    if not isinstance(served, (int, float)) or served < made:
+        fail(f"metrics reconcile: model {model!r} served {served}, "
+             f"expected at least the {made} calls made here")
+    ok_2xx = metrics.get("http", {}).get("responses_2xx", 0)
+    if ok_2xx < made:
+        fail(f"metrics reconcile: responses_2xx={ok_2xx} < {made} successful calls")
+    print(f"load_http: metrics reconcile ({served:.0f} request(s) on {model!r}, "
+          f"{ok_2xx:.0f} 2xx responses)")
+
+    if opts.shutdown:
+        status, doc = admin.call("POST", "/admin/shutdown")
+        if status != 200 or doc.get("status") != "shutting down":
+            fail(f"POST /admin/shutdown: status {status}: {doc}")
+        print("load_http: shutdown acknowledged "
+              f"(draining {doc.get('draining')} queued job(s))")
+    admin.close()
+    print("load_http: OK")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except BadResponse as e:
+        fail(str(e))

@@ -1,0 +1,166 @@
+//! HTTP serving-tier throughput: req/s for concurrent single-member
+//! ensemble requests with cross-request coalescing off vs on, measured
+//! end-to-end through a live [`HttpServer`] (real sockets, real JSON,
+//! real queue — not a kernel microbench).
+//!
+//! `cargo bench --bench serve_http`
+//!
+//! The load shape is the coalescer's motivating case: 8 keep-alive
+//! clients each streaming B = 1 requests at a single worker. Without
+//! coalescing every request pays a full solo rollout; with it the queue
+//! fuses waiting requests into one batched GEMM. Acceptance target:
+//! coalescing lifts req/s by ≥ 2x at this shape. Machine-readable
+//! output: results/serve_http.json. Record runs in EXPERIMENTS.md §Perf.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use dopinf::opinf::postprocess::ProbeBasis;
+use dopinf::rom::RomOperators;
+use dopinf::serve::http::{HttpConfig, HttpServer, ModelRegistry};
+use dopinf::serve::RomArtifact;
+use dopinf::util::benchkit::Bench;
+use dopinf::util::json::Json;
+use dopinf::util::timer::WallTimer;
+
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 12;
+const STEPS: usize = 4096;
+const R: usize = 10;
+
+fn artifact() -> RomArtifact {
+    RomArtifact {
+        ops: RomOperators::stable_sample(R, 5),
+        qhat0: (0..R).map(|j| 0.2 + 0.01 * j as f64).collect(),
+        probes: vec![ProbeBasis { var: 0, row: 2, phi: vec![1.0; R], mean: 0.0, scale: 1.0 }],
+        reg: None,
+        meta: BTreeMap::new(),
+    }
+}
+
+/// Read one response off a keep-alive connection; return its status.
+fn read_status<B: BufRead>(r: &mut B) -> u16 {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed status line {line:?}"))
+        .parse()
+        .expect("numeric status");
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().expect("content-length value");
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("response body");
+    status
+}
+
+/// One load sample: `CLIENTS` keep-alive connections each stream
+/// `reqs` single-member requests; returns elapsed wall seconds.
+fn run_load(addr: SocketAddr, reqs: usize) -> f64 {
+    let t = WallTimer::start();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                for i in 0..reqs {
+                    let body = format!(
+                        "{{\"members\":1,\"sigma\":0.01,\"seed\":{},\"steps\":{STEPS},\"series\":\"last\"}}",
+                        1000 * c + i
+                    );
+                    let msg = format!(
+                        "POST /v1/ensemble HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    );
+                    stream.write_all(msg.as_bytes()).expect("send request");
+                    let status = read_status(&mut reader);
+                    assert_eq!(status, 200, "client {c} request {i} failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    t.elapsed()
+}
+
+/// Measure one server configuration: start, warm up, sample, tear down.
+/// Returns (mean wall seconds per sample, final metrics snapshot).
+fn measure(bench: &mut Bench, coalesce: bool, samples: usize) -> (f64, Json) {
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        coalesce,
+        ..HttpConfig::default()
+    };
+    let registry = ModelRegistry::from_artifacts(vec![("bench", artifact())]);
+    let server = HttpServer::start(registry, cfg).expect("server start");
+    let addr = server.local_addr();
+
+    run_load(addr, 2); // warmup: thread pool + route caches
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        times.push(run_load(addr, REQS_PER_CLIENT));
+    }
+    let mode = if coalesce { "on " } else { "off" };
+    let name = format!(
+        "serve http coalesce={mode} {CLIENTS} clients x B=1 x {STEPS}"
+    );
+    let mean_s = bench.record_samples(&name, &times).mean_s;
+    server.request_shutdown();
+    let metrics = server.join().expect("clean drain");
+    (mean_s, metrics)
+}
+
+fn main() {
+    let samples = std::env::var("DOPINF_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let mut bench = Bench::new();
+    println!("== HTTP serving tier: req/s with and without coalescing ==\n");
+    println!(
+        "   {CLIENTS} keep-alive clients x {REQS_PER_CLIENT} requests, members=1, \
+         r={R} x {STEPS} steps, 1 worker\n"
+    );
+
+    let (off_s, _) = measure(&mut bench, false, samples);
+    let (on_s, on_metrics) = measure(&mut bench, true, samples);
+
+    let total_reqs = (CLIENTS * REQS_PER_CLIENT) as f64;
+    let off_rps = total_reqs / off_s;
+    let on_rps = total_reqs / on_s;
+    let gain = off_s / on_s;
+    println!("\n  -> coalesce=off {off_rps:.1} req/s, coalesce=on {on_rps:.1} req/s");
+    let fused = on_metrics
+        .get("http")
+        .and_then(|h| h.get("coalesced_batches"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!("  -> batches evaluated with coalescing on: {fused:.0}");
+
+    bench.write_json("results/serve_http.json").expect("write results/serve_http.json");
+    println!("wrote results/serve_http.json");
+    println!(
+        "acceptance: coalescing req/s gain at {CLIENTS}x B=1 {gain:.2}x (target >= 2x){}",
+        if gain >= 2.0 { " — OK" } else { " — BELOW TARGET" }
+    );
+}

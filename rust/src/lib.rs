@@ -43,7 +43,13 @@
 //!   statistics ([`serve::ensemble`], including serving-side
 //!   regularization-pair ensembles), sharded over rank workers with
 //!   rooted-`gather` aggregation and queued across requests
-//!   ([`serve::server`]).
+//!   ([`serve::server`]). On top sits a production HTTP tier
+//!   ([`serve::http`], CLI `dopinf serve`): a zero-dependency
+//!   HTTP/1.1 front-end with a multi-model registry, atomic artifact
+//!   hot-reload, bounded-queue admission (503/504), graceful SIGINT
+//!   drain, and **cross-request coalescing** — concurrent small
+//!   requests fuse into one batched rollout with results bitwise
+//!   identical to solo serving.
 //! * **Observability** — [`obs`] is the run-wide tracing & metrics
 //!   plane: a default-off, per-rank span recorder rides every
 //!   [`comm::Communicator`] backend (pipeline phase spans, per-chunk
@@ -62,10 +68,12 @@
 //! dopinf train … --save-rom model.rom     # add --transport sockets for the TCP backend
 //! dopinf ensemble --model model.rom --members 256 --steps 1200
 //! dopinf ensemble --model model.rom --reg-ensemble   # reg-pair ensemble from the v2 blocks
+//! dopinf serve --model cyl=model.rom --port 8080     # HTTP tier: POST /v1/ensemble
 //! ```
 //!
-//! Quickstart: see `examples/quickstart.rs` (training) and
-//! `examples/ensemble_uq.rs` (train → save → load → serve), or run
+//! Quickstart: see `examples/quickstart.rs` (training),
+//! `examples/ensemble_uq.rs` (train → save → load → serve), and
+//! `examples/serve_quickstart.md` (the HTTP tier end to end), or run
 //! `cargo run --release -- --help`.
 
 pub mod comm;

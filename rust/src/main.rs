@@ -7,12 +7,14 @@
 //!   probes     print probe row indices for a grid geometry
 //!   artifacts  list loaded PJRT artifacts
 //!   ensemble   serve a saved ROM: batched ensemble rollout + UQ stats
+//!   serve      HTTP serving tier: multi-model, coalescing, hot-reload
 //!
 //! Examples:
 //!   dopinf simulate --geometry cylinder --grid 192x36 --out data/cyl.snapd
 //!   dopinf train --data data/cyl.snapd --procs 8 --save-rom models/cyl.rom
 //!   dopinf scaling --data data/cyl.snapd --procs-list 1,2,4,8 --repeats 10
 //!   dopinf ensemble --model models/cyl.rom --members 256 --steps 1200
+//!   dopinf serve --model cyl=models/cyl.rom --port 8080 --workers 2
 
 use std::path::PathBuf;
 
@@ -26,7 +28,7 @@ use dopinf::io::snapd::SnapReader;
 use dopinf::opinf::serial::OpInfConfig;
 use dopinf::rom::RegGrid;
 use dopinf::runtime::{Engine, Manifest};
-use dopinf::serve::{serve_ensemble, EnsembleSpec, RomArtifact};
+use dopinf::serve::{serve_ensemble, EnsembleSpec, HttpConfig, HttpServer, ModelRegistry, RomArtifact};
 use dopinf::sim::driver::{run_to_dataset, SimConfig};
 use dopinf::sim::synth::SynthSpec;
 use dopinf::sim::{Geometry, Grid};
@@ -67,7 +69,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(rest),
         "probes" => cmd_probes(rest),
         "artifacts" => cmd_artifacts(rest),
-        "ensemble" | "serve" => cmd_ensemble(rest),
+        "ensemble" => cmd_ensemble(rest),
+        "serve" => cmd_serve(rest),
         "--help" | "-h" | "help" => {
             print_help();
             Ok(())
@@ -85,7 +88,9 @@ fn print_help() {
            scaling    strong-scaling study (Fig. 4)\n\
            probes     print probe row indices for a geometry/grid\n\
            artifacts  list PJRT artifacts from a manifest\n\
-           ensemble   serve a saved ROM: batched ensemble rollout + UQ stats\n\n\
+           ensemble   serve a saved ROM: batched ensemble rollout + UQ stats\n\
+           serve      HTTP serving tier: multi-model registry, request\n\
+                      coalescing, hot-reload, graceful drain on ctrl-C\n\n\
          Run `dopinf <command> --help` for options."
     );
 }
@@ -635,5 +640,147 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
     if !stats.probes.is_empty() {
         println!("wrote {} ensemble series to {}", stats.probes.len(), results_dir.display());
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+/// Set by the SIGINT handler; the serve loop polls it.
+static SIGINT_SEEN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// `signal(2)` handler — async-signal-safe: one atomic store, nothing
+/// else.
+extern "C" fn note_sigint(_signum: i32) {
+    SIGINT_SEEN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn cmd_serve(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "NAME=PATH (repeatable) or a bare PATH (file stem names it)", default: None, is_flag: false },
+        OptSpec { name: "bind", help: "address to bind", default: Some("127.0.0.1"), is_flag: false },
+        OptSpec { name: "port", help: "port to bind (0 picks an ephemeral port)", default: Some("8080"), is_flag: false },
+        OptSpec { name: "workers", help: "evaluation worker threads behind the queue", default: Some("2"), is_flag: false },
+        OptSpec { name: "threads", help: "compute-plane threads per evaluation (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
+        OptSpec { name: "oversubscribe", help: "allow workers x threads to exceed the visible cores", default: None, is_flag: true },
+        OptSpec { name: "max-queue", help: "pending requests before 503 + Retry-After", default: Some("256"), is_flag: false },
+        OptSpec { name: "request-timeout", help: "default per-request deadline in seconds (0 disables)", default: Some("30"), is_flag: false },
+        OptSpec { name: "no-coalesce", help: "disable cross-request coalescing (results are bitwise identical either way)", default: None, is_flag: true },
+        OptSpec { name: "coalesce-max", help: "total members a fused batch may hold", default: Some("1024"), is_flag: false },
+        OptSpec { name: "split-members", help: "members at/above this shard over rank workers", default: Some("8192"), is_flag: false },
+        OptSpec { name: "split-workers", help: "most rank workers one split request may use", default: Some("4"), is_flag: false },
+        OptSpec { name: "max-connections", help: "concurrent connections before 503", default: Some("64"), is_flag: false },
+        OptSpec { name: "max-body-kb", help: "largest accepted request body, KiB", default: Some("1024"), is_flag: false },
+        OptSpec { name: "admin-shutdown", help: "enable POST /admin/shutdown (tests/CI; SIGINT is the production path)", default: None, is_flag: true },
+        OptSpec { name: "metrics", help: "write a final /metrics snapshot to FILE on shutdown", default: None, is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "serve",
+                "HTTP serving tier over saved ROMs: POST /v1/ensemble with \
+                 cross-request coalescing (bitwise identical to solo serving), \
+                 GET /v1/models, POST /v1/models/{name}/reload (hot-reload), \
+                 GET /healthz, GET /metrics. Ctrl-C drains gracefully.",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+
+    let model_args = a.get_all("model");
+    anyhow::ensure!(
+        !model_args.is_empty(),
+        "--model is required at least once (NAME=PATH, or PATH to use the file stem as the name)"
+    );
+    let mut model_specs = Vec::new();
+    for m in model_args {
+        let (name, path) = match m.split_once('=') {
+            Some((n, p)) => (n.to_string(), PathBuf::from(p)),
+            None => {
+                let path = PathBuf::from(m);
+                let stem = path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .filter(|s| !s.is_empty())
+                    .with_context(|| format!("cannot derive a model name from {m:?}; use NAME=PATH"))?;
+                (stem, path)
+            }
+        };
+        model_specs.push((name, path));
+    }
+    let registry = ModelRegistry::open(&model_specs)?;
+    let names: Vec<&str> = model_specs.iter().map(|(n, _)| n.as_str()).collect();
+
+    // evaluation workers are threads of this process, so workers x
+    // threads is the real thread footprint — same guard as train/ensemble
+    let workers: usize = a.get_parse("workers", 2)?;
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+    let threads: usize = a.get_parse("threads", dopinf::linalg::par::env_threads())?;
+    anyhow::ensure!(threads >= 1, "--threads must be >= 1");
+    if let Err(msg) =
+        dopinf::linalg::par::check_oversubscription(workers, threads, a.flag("oversubscribe"))
+    {
+        bail!("{msg}; lower --workers/--threads or pass --oversubscribe to opt in");
+    }
+    dopinf::linalg::par::set_threads(threads);
+
+    let bind = a.get_or("bind", "127.0.0.1");
+    let port: u16 = a.get_parse("port", 8080)?;
+    let timeout_s: u64 = a.get_parse("request-timeout", 30)?;
+    let max_body_kb: usize = a.get_parse("max-body-kb", 1024)?;
+    anyhow::ensure!(max_body_kb >= 1, "--max-body-kb must be >= 1");
+    let cfg = HttpConfig {
+        addr: format!("{bind}:{port}"),
+        workers,
+        max_queue: a.get_parse("max-queue", 256)?,
+        request_timeout: (timeout_s > 0).then(|| std::time::Duration::from_secs(timeout_s)),
+        coalesce: !a.flag("no-coalesce"),
+        max_coalesce_members: a.get_parse("coalesce-max", 1024)?,
+        split_members: a.get_parse("split-members", 8192)?,
+        split_workers: a.get_parse("split-workers", 4)?,
+        max_connections: a.get_parse("max-connections", 64)?,
+        limits: dopinf::serve::http::Limits {
+            max_body: max_body_kb * 1024,
+            ..Default::default()
+        },
+        admin_shutdown: a.flag("admin-shutdown"),
+        metrics_path: a.get("metrics").map(PathBuf::from),
+        ..HttpConfig::default()
+    };
+
+    // install the handler before the listener exists so a race-early
+    // ctrl-C still drains instead of killing the process
+    unsafe {
+        libc::signal(libc::SIGINT, note_sigint as libc::sighandler_t);
+    }
+
+    let server = HttpServer::start(registry, cfg)?;
+    eprintln!(
+        "serving {} model(s) [{}] with {workers} worker(s) x {threads} thread(s)",
+        names.len(),
+        names.join(", ")
+    );
+    println!("listening on http://{}", server.local_addr());
+
+    while !SIGINT_SEEN.load(std::sync::atomic::Ordering::SeqCst) && !server.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    eprintln!("shutdown requested; draining in-flight requests...");
+    server.request_shutdown();
+    let final_metrics = server.join()?;
+    let responses = final_metrics
+        .get("http")
+        .and_then(|h| h.get("responses"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    let connections = final_metrics
+        .get("http")
+        .and_then(|h| h.get("connections"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    println!("drained cleanly: {responses} response(s) over {connections} connection(s)");
     Ok(())
 }

@@ -76,6 +76,26 @@ impl Histogram {
         }
     }
 
+    /// Upper edge of the bucket holding the `q`-quantile observation
+    /// (0.0 when empty; the overflow bucket reports the exact max).
+    /// With log-spaced buckets this is an upper bound within 2× of the
+    /// true quantile — the resolution serving dashboards need for
+    /// p50/p99 without keeping raw samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i < BUCKETS { self.base * 2f64.powi(i as i32) } else { self.max };
+            }
+        }
+        self.max
+    }
+
     /// Structured form: count/sum/min/max plus the non-empty buckets as
     /// `{le, count}` rows (`le` is the bucket's upper edge; the
     /// overflow bucket reports `"inf"`).
@@ -199,6 +219,24 @@ mod tests {
         assert_eq!(j.get("count").and_then(Json::as_usize), Some(0));
         assert_eq!(j.get("min").and_then(Json::as_f64), Some(0.0));
         assert!(j.get("buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn quantiles_report_bucket_upper_edges() {
+        let mut h = Histogram::new(1.0);
+        for _ in 0..90 {
+            h.record(0.5); // bucket 0, edge 1.0
+        }
+        for _ in 0..9 {
+            h.record(3.0); // bucket 2, edge 4.0
+        }
+        h.record(1e15); // overflow
+        assert_eq!(h.quantile(0.5), 1.0);
+        assert_eq!(h.quantile(0.9), 1.0);
+        assert_eq!(h.quantile(0.95), 4.0);
+        assert_eq!(h.quantile(0.99), 4.0);
+        assert_eq!(h.quantile(1.0), 1e15); // overflow reports the max
+        assert_eq!(Histogram::new(1.0).quantile(0.5), 0.0);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Route dispatch + the hand-rolled JSON request/response codecs.
+//!
+//! Every route returns a [`Response`]; the connection layer owns the
+//! socket. Status mapping follows the scheduler's admission contract:
+//! queue full / draining → 503 with `Retry-After`, deadline → 504,
+//! evaluation failure (including a contained panic) → 500, unknown
+//! model → 404, any body the codec refuses → 400 with a reason.
+//!
+//! `POST /v1/ensemble` accepts a flat JSON object — unknown fields are
+//! rejected (a typo'd `"member"` silently running a 256-member default
+//! would be worse than a 400):
+//!
+//! | field        | default              | range                  |
+//! |--------------|----------------------|------------------------|
+//! | `model`      | sole registered model| registered name        |
+//! | `members`    | 256                  | `[1, max_members]`     |
+//! | `steps`      | 600                  | `[1, max_steps]`       |
+//! | `sigma`      | 0.01                 | finite, ≥ 0            |
+//! | `seed`       | 7                    | non-negative integer   |
+//! | `timeout_ms` | server default       | `[1, 86400000]`        |
+//! | `coalesce`   | `true`               | boolean opt-out        |
+//! | `series`     | `"full"`             | `"full"` or `"last"`   |
+//!
+//! Response floats ride the emitter's shortest-roundtrip `Display`, so
+//! a parsed response reproduces the computed statistics bit for bit —
+//! the end-to-end test leans on that to extend the coalescing contract
+//! through the wire format. Non-finite values (a diverged probe's NaN
+//! tail) emit as `null` instead of breaking the JSON.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::serve::ensemble::{EnsembleSpec, EnsembleStats};
+use crate::util::json::{parse, Json};
+
+use super::protocol::{Request, Response};
+use super::registry::{ModelEntry, ReloadError};
+use super::scheduler::JobError;
+use super::Ctx;
+
+/// Dispatch one parsed request and account the response's status class.
+pub(crate) fn handle(ctx: &Ctx, req: &Request) -> Response {
+    let resp = route(ctx, req);
+    ctx.metrics.note_response(resp.status);
+    resp
+}
+
+fn route(ctx: &Ctx, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/metrics") => Response::json(200, &super::metrics_document(ctx)),
+        ("GET", "/v1/models") => models(ctx),
+        ("POST", "/v1/ensemble") => ensemble(ctx, req),
+        ("POST", "/admin/shutdown") if ctx.cfg.admin_shutdown => {
+            // test-build escape hatch for SIGINT: close admission, tell
+            // the acceptor to wind down, report what is still draining
+            let depth = ctx.queue.depth();
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            let mut resp = Response::json(
+                200,
+                &Json::obj(vec![
+                    ("status", Json::Str("shutting down".into())),
+                    ("draining", Json::Num(depth as f64)),
+                ]),
+            );
+            resp.close = true;
+            resp
+        }
+        ("POST", p) => match reload_target(p) {
+            Some(name) => reload(ctx, name),
+            None => method_or_not_found(ctx, req),
+        },
+        _ => method_or_not_found(ctx, req),
+    }
+}
+
+/// `/v1/models/{name}/reload` → `{name}`; one path segment only.
+fn reload_target(path: &str) -> Option<&str> {
+    let name = path.strip_prefix("/v1/models/")?.strip_suffix("/reload")?;
+    if name.is_empty() || name.contains('/') {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Known path with the wrong method → 405 + `Allow`; anything else 404.
+fn method_or_not_found(ctx: &Ctx, req: &Request) -> Response {
+    let allow = match req.path.as_str() {
+        "/healthz" | "/metrics" | "/v1/models" => Some("GET"),
+        "/v1/ensemble" => Some("POST"),
+        "/admin/shutdown" if ctx.cfg.admin_shutdown => Some("POST"),
+        p if reload_target(p).is_some() => Some("POST"),
+        _ => None,
+    };
+    match allow {
+        Some(methods) => {
+            Response::error(405, "method not allowed").with_header("Allow", methods)
+        }
+        None => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+fn healthz(ctx: &Ctx) -> Response {
+    let draining = ctx.shutdown.load(Ordering::SeqCst);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::Str(if draining { "draining" } else { "ok" }.into())),
+            ("models", Json::Num(ctx.registry.len() as f64)),
+            ("queue_depth", Json::Num(ctx.queue.depth() as f64)),
+            ("uptime_s", Json::Num(ctx.started.elapsed().as_secs_f64())),
+        ]),
+    )
+}
+
+fn models(ctx: &Ctx) -> Response {
+    let rows: Vec<Json> = ctx
+        .registry
+        .entries()
+        .map(|e| {
+            let art = e.artifact();
+            Json::obj(vec![
+                ("name", Json::Str(e.name().into())),
+                ("r", Json::Num(art.r() as f64)),
+                ("probes", Json::Num(art.probes.len() as f64)),
+                ("generation", Json::Num(e.generation() as f64)),
+                ("reloads", Json::Num(e.reloads() as f64)),
+                ("requests", Json::Num(e.metrics().requests as f64)),
+                (
+                    "meta",
+                    Json::Obj(
+                        art.meta
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("models", Json::Arr(rows))]))
+}
+
+fn reload(ctx: &Ctx, name: &str) -> Response {
+    match ctx.registry.reload(name) {
+        Ok(rep) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("model", Json::Str(name.into())),
+                ("generation", Json::Num(rep.generation as f64)),
+                ("r", Json::Num(rep.r as f64)),
+                ("probes", Json::Num(rep.n_probes as f64)),
+            ]),
+        ),
+        Err(ReloadError::UnknownModel) => Response::error(404, &format!("unknown model {name:?}")),
+        Err(ReloadError::NotFileBacked) => {
+            Response::error(400, "model has no backing file to reload from")
+        }
+        Err(e @ ReloadError::Load(_)) => {
+            Response::error(500, &format!("{e}; serving the previous artifact"))
+        }
+    }
+}
+
+struct EnsembleCall {
+    entry: Arc<ModelEntry>,
+    model: String,
+    spec: EnsembleSpec,
+    coalesce: bool,
+    timeout: Option<Duration>,
+    series_last: bool,
+}
+
+fn ensemble(ctx: &Ctx, req: &Request) -> Response {
+    let call = match parse_ensemble(ctx, req) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    if ctx.shutdown.load(Ordering::SeqCst) {
+        ctx.metrics.note_rejected();
+        return Response::error(503, "server is draining").with_header("Retry-After", "1");
+    }
+    let deadline = call.timeout.map(|d| Instant::now() + d);
+    let rx = match ctx.queue.submit(
+        Arc::clone(&call.entry),
+        call.spec.clone(),
+        call.coalesce,
+        deadline,
+    ) {
+        Ok(rx) => rx,
+        Err(e) => {
+            ctx.metrics.note_rejected();
+            return Response::error(503, &e.to_string()).with_header("Retry-After", "1");
+        }
+    };
+    // the worker refuses expired jobs itself; the recv grace keeps this
+    // side from racing a reply that is already on its way
+    let reply = match call.timeout {
+        Some(d) => match rx.recv_timeout(d + Duration::from_millis(250)) {
+            Ok(reply) => reply,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                ctx.metrics.note_deadline();
+                return Response::error(504, "deadline exceeded waiting for the evaluation");
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Response::error(500, "evaluation worker dropped the request")
+            }
+        },
+        None => match rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => return Response::error(500, "evaluation worker dropped the request"),
+        },
+    };
+    match reply {
+        Ok(stats) => Response::json(200, &stats_document(&call.model, &stats, call.series_last)),
+        Err(JobError::Deadline) => {
+            ctx.metrics.note_deadline();
+            Response::error(504, "deadline exceeded before evaluation started")
+        }
+        Err(JobError::Failed(msg)) => Response::error(500, &msg),
+    }
+}
+
+fn parse_ensemble(ctx: &Ctx, req: &Request) -> Result<EnsembleCall, Response> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| Response::error(400, "body is not valid UTF-8"))?;
+    let doc = parse(text).map_err(|e| Response::error(400, &format!("invalid JSON body: {e}")))?;
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| Response::error(400, "body must be a JSON object"))?;
+    const KNOWN: [&str; 8] =
+        ["model", "members", "sigma", "seed", "steps", "timeout_ms", "coalesce", "series"];
+    for key in obj.keys() {
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(Response::error(400, &format!("unknown field {key:?}")));
+        }
+    }
+    let entry = match obj.get("model") {
+        Some(Json::Str(name)) => ctx
+            .registry
+            .get(name)
+            .ok_or_else(|| Response::error(404, &format!("unknown model {name:?}")))?,
+        Some(_) => return Err(Response::error(400, "\"model\" must be a string")),
+        None => ctx.registry.sole().ok_or_else(|| {
+            Response::error(400, "several models are registered; name one via \"model\"")
+        })?,
+    };
+    let members = field_usize(obj, "members", 256, 1, ctx.cfg.max_members)?;
+    let steps = field_usize(obj, "steps", 600, 1, ctx.cfg.max_steps)?;
+    let sigma = match obj.get("sigma") {
+        None => 0.01,
+        Some(Json::Num(v)) if v.is_finite() && *v >= 0.0 => *v,
+        Some(_) => {
+            return Err(Response::error(400, "\"sigma\" must be a finite non-negative number"))
+        }
+    };
+    let seed = match obj.get("seed") {
+        None => 7u64,
+        Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v < u64::MAX as f64 => *v as u64,
+        Some(_) => return Err(Response::error(400, "\"seed\" must be a non-negative integer")),
+    };
+    let timeout = match obj.get("timeout_ms") {
+        None => ctx.cfg.request_timeout,
+        Some(Json::Num(v)) if v.fract() == 0.0 && *v >= 1.0 && *v <= 86_400_000.0 => {
+            Some(Duration::from_millis(*v as u64))
+        }
+        Some(_) => {
+            return Err(Response::error(400, "\"timeout_ms\" must be an integer in [1, 86400000]"))
+        }
+    };
+    let coalesce = match obj.get("coalesce") {
+        None => true,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err(Response::error(400, "\"coalesce\" must be a boolean")),
+    };
+    let series_last = match obj.get("series") {
+        None => false,
+        Some(Json::Str(s)) if s == "full" => false,
+        Some(Json::Str(s)) if s == "last" => true,
+        Some(_) => return Err(Response::error(400, "\"series\" must be \"full\" or \"last\"")),
+    };
+    Ok(EnsembleCall {
+        model: entry.name().to_string(),
+        entry,
+        spec: EnsembleSpec { members, sigma, seed, n_steps: steps },
+        coalesce,
+        timeout,
+        series_last,
+    })
+}
+
+fn field_usize(
+    obj: &std::collections::BTreeMap<String, Json>,
+    key: &str,
+    default: usize,
+    min: usize,
+    max: usize,
+) -> Result<usize, Response> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(Json::Num(v)) if v.fract() == 0.0 && *v >= min as f64 && *v <= max as f64 => {
+            Ok(*v as usize)
+        }
+        Some(_) => {
+            Err(Response::error(400, &format!("{key:?} must be an integer in [{min}, {max}]")))
+        }
+    }
+}
+
+/// NaN/inf would emit as invalid JSON; diverged tails become `null`.
+fn finite(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn series(values: &[f64], last: bool) -> Json {
+    if last {
+        values.last().copied().map_or(Json::Null, finite)
+    } else {
+        Json::Arr(values.iter().map(|&v| finite(v)).collect())
+    }
+}
+
+fn stats_document(model: &str, stats: &EnsembleStats, last: bool) -> Json {
+    let probes: Vec<Json> = stats
+        .probes
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("var", Json::Num(p.var as f64)),
+                ("row", Json::Num(p.row as f64)),
+                ("mean", series(&p.mean, last)),
+                ("variance", series(&p.variance, last)),
+                ("q05", series(&p.q05, last)),
+                ("q50", series(&p.q50, last)),
+                ("q95", series(&p.q95, last)),
+                (
+                    "count",
+                    if last {
+                        p.count.last().map_or(Json::Null, |&c| Json::Num(c as f64))
+                    } else {
+                        Json::Arr(p.count.iter().map(|&c| Json::Num(c as f64)).collect())
+                    },
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.into())),
+        ("members", Json::Num(stats.members as f64)),
+        ("steps", Json::Num(stats.n_steps as f64)),
+        ("diverged", Json::Num(stats.n_diverged() as f64)),
+        ("series", Json::Str(if last { "last" } else { "full" }.into())),
+        ("probes", Json::Arr(probes)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reload_targets_are_single_segments() {
+        assert_eq!(reload_target("/v1/models/heat2d/reload"), Some("heat2d"));
+        assert_eq!(reload_target("/v1/models//reload"), None);
+        assert_eq!(reload_target("/v1/models/a/b/reload"), None);
+        assert_eq!(reload_target("/v1/models/a/relod"), None);
+        assert_eq!(reload_target("/v1/ensemble"), None);
+    }
+
+    #[test]
+    fn series_modes_and_nonfinite_guard() {
+        let vals = [1.5, f64::NAN, 2.5];
+        match series(&vals, false) {
+            Json::Arr(a) => {
+                assert_eq!(a[0], Json::Num(1.5));
+                assert_eq!(a[1], Json::Null);
+                assert_eq!(a[2], Json::Num(2.5));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert_eq!(series(&vals, true), Json::Num(2.5));
+        assert_eq!(series(&[f64::INFINITY], true), Json::Null);
+        assert_eq!(series(&[], true), Json::Null);
+    }
+}

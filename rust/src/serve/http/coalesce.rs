@@ -1,0 +1,213 @@
+//! Cross-request coalescing: many small ensemble requests against the
+//! same artifact merged into **one** batched rollout, then
+//! de-interleaved back into per-request statistics.
+//!
+//! This is the serving analogue of the batched-rollout win: the per-step
+//! cost of the `(r, r+s+1) @ (r+s+1, B)` product is dominated by fixed
+//! per-step work (augmented-state build, dispatch, probe pass) at small
+//! B, so eight B=1 requests cost nearly eight full rollouts served
+//! alone but barely more than one when fused into a B=8 batch.
+//!
+//! ## Results contract: coalescing is invisible
+//!
+//! The per-request [`EnsembleStats`] returned here are **bitwise
+//! identical** to serving each request alone through [`run_ensemble`].
+//! The argument is member-column independence, the same invariant the
+//! compute plane's T-invariance rests on:
+//!
+//! * each request's perturbed ICs are built by its own
+//!   [`perturbed_initial_conditions`] call (same seed, same σ, same B),
+//!   then placed in a *contiguous* column segment of the merged batch;
+//! * every per-step kernel is per-column arithmetic: the GEMM
+//!   accumulates each output element over the shared dimension in an
+//!   order independent of B, the quadratic expansion is elementwise per
+//!   column, and divergence scan/freeze are member-local;
+//! * the visitor copies each segment's columns into a `(r, B_i)` slab
+//!   in segment order — the same values, in the same layout, as the
+//!   solo rollout streams — and feeds the request's own
+//!   [`EnsembleAccumulator`], so the statistics reduction is the
+//!   identical code path on identical floats.
+//!
+//! The sweep in `tests/integration_http.rs` (N ∈ {1, 3, 8} requests ×
+//! B ∈ {1, 64} members) asserts the equality bit for bit.
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::runtime::Engine;
+use crate::serve::batch::rollout_batch_with;
+use crate::serve::ensemble::{
+    perturbed_initial_conditions, run_ensemble, EnsembleAccumulator, EnsembleSpec, EnsembleStats,
+};
+use crate::serve::model::RomArtifact;
+
+/// Evaluate `specs` as one fused rollout on `artifact`. All specs must
+/// share `n_steps` (the scheduler only coalesces compatible requests);
+/// `members`/`sigma`/`seed` may differ freely. Returns one
+/// [`EnsembleStats`] per spec, in order, each bitwise identical to a
+/// solo [`run_ensemble`] of that spec.
+pub fn run_coalesced(
+    engine: &Engine,
+    artifact: &RomArtifact,
+    specs: &[EnsembleSpec],
+) -> Result<Vec<EnsembleStats>> {
+    anyhow::ensure!(!specs.is_empty(), "coalesced batch needs at least one request");
+    let n_steps = specs[0].n_steps;
+    anyhow::ensure!(
+        specs.iter().all(|s| s.n_steps == n_steps),
+        "coalesced requests must share n_steps"
+    );
+    anyhow::ensure!(n_steps >= 1, "ensemble needs at least one step");
+    anyhow::ensure!(
+        specs.iter().all(|s| s.members >= 1),
+        "ensemble needs at least one member"
+    );
+    if specs.len() == 1 {
+        // nothing to fuse — take the solo path outright
+        return Ok(vec![run_ensemble(engine, artifact, &specs[0])?]);
+    }
+
+    let r = artifact.r();
+    let total: usize = specs.iter().map(|s| s.members).sum();
+
+    // each request's ICs, built exactly as its solo run would, stacked
+    // into contiguous member-row segments of one (total, r) batch
+    let mut q0s = Matrix::zeros(total, r);
+    let mut segments = Vec::with_capacity(specs.len());
+    let mut start = 0;
+    for spec in specs {
+        let ics =
+            perturbed_initial_conditions(&artifact.qhat0, spec.members, spec.sigma, spec.seed);
+        for i in 0..spec.members {
+            q0s.row_mut(start + i).copy_from_slice(ics.row(i));
+        }
+        segments.push(start..start + spec.members);
+        start += spec.members;
+    }
+
+    let mut accs: Vec<EnsembleAccumulator> =
+        specs.iter().map(|_| EnsembleAccumulator::new(&artifact.probes, n_steps)).collect();
+    // per-request (r, B_i) slabs the merged step states are
+    // de-interleaved into before hitting each accumulator
+    let mut slabs: Vec<Matrix> = segments.iter().map(|seg| Matrix::zeros(r, seg.len())).collect();
+
+    let diverged = rollout_batch_with(engine, &artifact.ops, &q0s, n_steps, |k, states_t, div| {
+        for ((seg, acc), slab) in segments.iter().zip(accs.iter_mut()).zip(slabs.iter_mut()) {
+            for j in 0..r {
+                slab.row_mut(j).copy_from_slice(&states_t.row(j)[seg.start..seg.end]);
+            }
+            acc.push_step(k, slab, &div[seg.start..seg.end]);
+        }
+    });
+
+    Ok(segments
+        .iter()
+        .zip(accs)
+        .zip(specs)
+        .map(|((seg, acc), spec)| {
+            acc.finish(spec.members, n_steps, diverged[seg.clone()].to_vec())
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opinf::postprocess::ProbeBasis;
+    use crate::rom::RomOperators;
+    use std::collections::BTreeMap;
+
+    fn artifact(r: usize) -> RomArtifact {
+        let probes = vec![
+            ProbeBasis { var: 0, row: 3, phi: vec![1.0; r], mean: 0.5, scale: 2.0 },
+            ProbeBasis {
+                var: 1,
+                row: 7,
+                phi: (0..r).map(|j| 0.2 * (j as f64 - 1.0)).collect(),
+                mean: -0.25,
+                scale: 1.0,
+            },
+        ];
+        RomArtifact {
+            ops: RomOperators::stable_sample(r, 21),
+            qhat0: (0..r).map(|j| 0.4 - 0.05 * j as f64).collect(),
+            probes,
+            reg: None,
+            meta: BTreeMap::new(),
+        }
+    }
+
+    fn assert_stats_bitwise(a: &EnsembleStats, b: &EnsembleStats) {
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.n_steps, b.n_steps);
+        assert_eq!(a.diverged_at, b.diverged_at);
+        assert_eq!(a.probes.len(), b.probes.len());
+        for (pa, pb) in a.probes.iter().zip(&b.probes) {
+            assert_eq!((pa.var, pa.row), (pb.var, pb.row));
+            assert_eq!(pa.mean, pb.mean, "mean differs at var{} row{}", pa.var, pa.row);
+            assert_eq!(pa.variance, pb.variance);
+            assert_eq!(pa.q05, pb.q05);
+            assert_eq!(pa.q50, pb.q50);
+            assert_eq!(pa.q95, pb.q95);
+            assert_eq!(pa.count, pb.count);
+        }
+    }
+
+    #[test]
+    fn two_fused_requests_match_solo_bitwise() {
+        let engine = Engine::native();
+        let art = artifact(5);
+        let specs = vec![
+            EnsembleSpec { members: 3, sigma: 0.02, seed: 11, n_steps: 40 },
+            EnsembleSpec { members: 5, sigma: 0.05, seed: 99, n_steps: 40 },
+        ];
+        let fused = run_coalesced(&engine, &art, &specs).unwrap();
+        assert_eq!(fused.len(), 2);
+        for (spec, got) in specs.iter().zip(&fused) {
+            let solo = run_ensemble(&engine, &art, spec).unwrap();
+            assert_stats_bitwise(got, &solo);
+        }
+    }
+
+    #[test]
+    fn single_request_degenerates_to_the_solo_path() {
+        let engine = Engine::native();
+        let art = artifact(4);
+        let spec = EnsembleSpec { members: 6, sigma: 0.01, seed: 3, n_steps: 25 };
+        let fused = run_coalesced(&engine, &art, std::slice::from_ref(&spec)).unwrap();
+        let solo = run_ensemble(&engine, &art, &spec).unwrap();
+        assert_stats_bitwise(&fused[0], &solo);
+    }
+
+    #[test]
+    fn divergence_stays_request_local() {
+        let engine = Engine::native();
+        let mut art = artifact(2);
+        art.ops.fhat[(0, 0)] = 4.0; // quadratic blow-up for big ICs
+        art.qhat0 = vec![0.05, 0.05];
+        // request 0 is tame, request 1 explodes some members
+        let specs = vec![
+            EnsembleSpec { members: 4, sigma: 0.01, seed: 1, n_steps: 40 },
+            EnsembleSpec { members: 32, sigma: 400.0, seed: 11, n_steps: 40 },
+        ];
+        let fused = run_coalesced(&engine, &art, &specs).unwrap();
+        assert_eq!(fused[0].n_diverged(), 0);
+        assert!(fused[1].n_diverged() > 0);
+        for (spec, got) in specs.iter().zip(&fused) {
+            let solo = run_ensemble(&engine, &art, spec).unwrap();
+            assert_stats_bitwise(got, &solo);
+        }
+    }
+
+    #[test]
+    fn mismatched_horizons_are_refused() {
+        let engine = Engine::native();
+        let art = artifact(3);
+        let specs = vec![
+            EnsembleSpec { members: 2, sigma: 0.01, seed: 1, n_steps: 10 },
+            EnsembleSpec { members: 2, sigma: 0.01, seed: 2, n_steps: 20 },
+        ];
+        assert!(run_coalesced(&engine, &art, &specs).is_err());
+        assert!(run_coalesced(&engine, &art, &[]).is_err());
+    }
+}

@@ -1,0 +1,545 @@
+//! Production HTTP/1.1 serving tier over the ensemble queue —
+//! zero-dependency (std `TcpListener` + bounded thread pool, no async
+//! runtime), keeping the vendored-offline build constraint.
+//!
+//! ## Endpoints
+//!
+//! | method · path                    | purpose                                    |
+//! |----------------------------------|--------------------------------------------|
+//! | `POST /v1/ensemble`              | run an ensemble; JSON body, see [`api`]    |
+//! | `GET /v1/models`                 | registered models + provenance             |
+//! | `POST /v1/models/{name}/reload`  | checksum-validated hot-reload, atomic swap |
+//! | `GET /healthz`                   | liveness: `ok` serving / `draining`        |
+//! | `GET /metrics`                   | tier + queue + per-model metrics JSON      |
+//! | `POST /admin/shutdown`           | test builds only ([`HttpConfig::admin_shutdown`]) |
+//!
+//! ## Layers
+//!
+//! * [`protocol`] — hardened parser + response emission: every read is
+//!   bounded before it happens; malformed input → 400/411/413/501,
+//!   never a panic.
+//! * [`coalesce`] — merges small concurrent same-model requests into
+//!   one batched rollout; results **bitwise identical** to solo serving.
+//! * [`scheduler`] — admission: bounded queue (503 + `Retry-After`),
+//!   per-request deadlines (504), large-B splitting over rank workers.
+//! * [`registry`] — multi-model map with hot-reload; in-flight requests
+//!   finish on the artifact they were admitted against.
+//!
+//! The connection model is thread-per-connection with a hard cap
+//! ([`HttpConfig::max_connections`]): beyond it the acceptor answers
+//! 503 and closes rather than queueing unbounded sockets. Keep-alive
+//! connections park in a short poll loop so shutdown is never blocked
+//! behind an idle client.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::obs::Histogram;
+use crate::util::json::{emit, Json};
+
+pub mod api;
+pub mod coalesce;
+pub mod protocol;
+pub mod registry;
+pub mod scheduler;
+
+pub use protocol::Limits;
+pub use registry::{ModelEntry, ModelRegistry, ReloadError, ReloadReport};
+pub use scheduler::{EnsembleQueue, JobError, QueueConfig, SubmitError};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// HTTP-tier counters, shared across the acceptor, connection handlers,
+/// and scheduler workers. Everything is monotonic; `/metrics` snapshots
+/// are therefore safe to diff across scrapes.
+pub struct TierMetrics {
+    connections: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    /// admission refusals: queue full, draining, connection cap
+    rejected_503: AtomicU64,
+    /// deadline expiries, both queue-side and handler-side
+    deadline_504: AtomicU64,
+    /// large-B requests sharded over rank workers
+    split_jobs: AtomicU64,
+    batches: AtomicU64,
+    requests_per_batch: Mutex<Histogram>,
+    members_per_batch: Mutex<Histogram>,
+}
+
+impl TierMetrics {
+    pub fn new() -> TierMetrics {
+        TierMetrics {
+            connections: AtomicU64::new(0),
+            responses_2xx: AtomicU64::new(0),
+            responses_4xx: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
+            rejected_503: AtomicU64::new(0),
+            deadline_504: AtomicU64::new(0),
+            split_jobs: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            requests_per_batch: Mutex::new(Histogram::new(1.0)),
+            members_per_batch: Mutex::new(Histogram::new(1.0)),
+        }
+    }
+
+    pub(crate) fn note_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_response(&self, status: u16) {
+        let class = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_rejected(&self) {
+        self.rejected_503.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_deadline(&self) {
+        self.deadline_504.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_split(&self) {
+        self.split_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_batch(&self, requests: usize, members: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        lock(&self.requests_per_batch).record(requests as f64);
+        lock(&self.members_per_batch).record(members as f64);
+    }
+
+    /// Responses accounted so far, over all status classes.
+    pub fn responses(&self) -> u64 {
+        self.responses_2xx.load(Ordering::Relaxed)
+            + self.responses_4xx.load(Ordering::Relaxed)
+            + self.responses_5xx.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::Num(self.connections.load(Ordering::Relaxed) as f64)),
+            ("responses", Json::Num(self.responses() as f64)),
+            ("responses_2xx", Json::Num(self.responses_2xx.load(Ordering::Relaxed) as f64)),
+            ("responses_4xx", Json::Num(self.responses_4xx.load(Ordering::Relaxed) as f64)),
+            ("responses_5xx", Json::Num(self.responses_5xx.load(Ordering::Relaxed) as f64)),
+            ("rejected_503", Json::Num(self.rejected_503.load(Ordering::Relaxed) as f64)),
+            ("deadline_504", Json::Num(self.deadline_504.load(Ordering::Relaxed) as f64)),
+            ("split_jobs", Json::Num(self.split_jobs.load(Ordering::Relaxed) as f64)),
+            ("coalesced_batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("requests_per_batch", lock(&self.requests_per_batch).to_json()),
+            ("members_per_batch", lock(&self.members_per_batch).to_json()),
+        ])
+    }
+}
+
+impl Default for TierMetrics {
+    fn default() -> Self {
+        TierMetrics::new()
+    }
+}
+
+/// Everything the serving tier is configured by; the CLI `serve`
+/// subcommand maps its flags 1:1 onto these fields.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// bind address, e.g. `127.0.0.1:8080`; port 0 picks an ephemeral
+    /// port (tests/benches read it back via [`HttpServer::local_addr`])
+    pub addr: String,
+    /// evaluation worker threads behind the queue
+    pub workers: usize,
+    /// pending requests admitted before 503 + `Retry-After`
+    pub max_queue: usize,
+    /// server-side default deadline; `None` disables (requests may
+    /// still set `timeout_ms` per call)
+    pub request_timeout: Option<Duration>,
+    /// fuse compatible concurrent requests into one rollout
+    pub coalesce: bool,
+    /// cap on a fused batch's total members
+    pub max_coalesce_members: usize,
+    /// members at or above this shard over rank workers
+    pub split_members: usize,
+    /// most rank workers one split request may use
+    pub split_workers: usize,
+    /// concurrent connections before the acceptor answers 503
+    pub max_connections: usize,
+    /// largest accepted `members` per request
+    pub max_members: usize,
+    /// largest accepted `steps` per request
+    pub max_steps: usize,
+    /// protocol-level byte caps (line/header/body)
+    pub limits: Limits,
+    /// enable `POST /admin/shutdown` (tests and the CI smoke; SIGINT is
+    /// the production path)
+    pub admin_shutdown: bool,
+    /// where to flush the final metrics snapshot on shutdown
+    pub metrics_path: Option<PathBuf>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 2,
+            max_queue: 256,
+            request_timeout: Some(Duration::from_secs(30)),
+            coalesce: true,
+            max_coalesce_members: 1024,
+            split_members: 8192,
+            split_workers: 4,
+            max_connections: 64,
+            max_members: 65_536,
+            max_steps: 1_000_000,
+            limits: Limits::default(),
+            admin_shutdown: false,
+            metrics_path: None,
+        }
+    }
+}
+
+impl HttpConfig {
+    fn queue_config(&self) -> QueueConfig {
+        QueueConfig {
+            workers: self.workers,
+            max_queue: self.max_queue,
+            coalesce: self.coalesce,
+            max_coalesce_members: self.max_coalesce_members,
+            split_members: self.split_members,
+            split_workers: self.split_workers,
+        }
+    }
+}
+
+/// Shared server state every connection handler sees.
+pub(crate) struct Ctx {
+    pub(crate) cfg: HttpConfig,
+    pub(crate) registry: ModelRegistry,
+    pub(crate) queue: EnsembleQueue,
+    pub(crate) metrics: Arc<TierMetrics>,
+    /// set by SIGINT / `POST /admin/shutdown`; acceptor and keep-alive
+    /// loops poll it
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) started: Instant,
+}
+
+/// A running serving tier: acceptor thread + connection threads +
+/// scheduler workers. [`HttpServer::join`] (or drop) drains everything.
+pub struct HttpServer {
+    ctx: Arc<Ctx>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl HttpServer {
+    /// Bind, spawn the scheduler workers and the acceptor, return
+    /// immediately. The listener is non-blocking so the acceptor can
+    /// poll the shutdown flag between accepts.
+    pub fn start(registry: ModelRegistry, cfg: HttpConfig) -> Result<HttpServer> {
+        anyhow::ensure!(!registry.is_empty(), "serving needs at least one model");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+
+        let metrics = Arc::new(TierMetrics::new());
+        let queue = EnsembleQueue::start(cfg.queue_config(), Arc::clone(&metrics));
+        let ctx = Arc::new(Ctx {
+            cfg,
+            registry,
+            queue,
+            metrics,
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+
+        let active = Arc::new(AtomicUsize::new(0));
+        let acceptor = {
+            let ctx = Arc::clone(&ctx);
+            let active = Arc::clone(&active);
+            std::thread::Builder::new()
+                .name("http-acceptor".to_string())
+                .spawn(move || accept_loop(&listener, &ctx, &active))
+                .context("spawning the acceptor thread")?
+        };
+        Ok(HttpServer { ctx, addr, acceptor: Some(acceptor), active })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the full `/metrics` document.
+    pub fn metrics_json(&self) -> Json {
+        metrics_document(&self.ctx)
+    }
+
+    /// Ask the server to stop: the acceptor exits, keep-alive
+    /// connections close after their in-flight request, the queue
+    /// drains. Returns immediately; pair with [`HttpServer::join`].
+    pub fn request_shutdown(&self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain connections and the queue, flush the final
+    /// metrics snapshot, and return it. No accepted request is dropped:
+    /// connections finish their in-flight request and the queue answers
+    /// everything it admitted.
+    pub fn join(mut self) -> Result<Json> {
+        self.finish()?;
+        Ok(metrics_document(&self.ctx))
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let Some(acceptor) = self.acceptor.take() else {
+            return Ok(()); // already joined
+        };
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        let _ = acceptor.join();
+        // connection handlers see the flag at their next poll tick
+        // (≤ 200ms) and exit after any in-flight request completes
+        let drain_deadline = Instant::now() + Duration::from_secs(30);
+        while self.active.load(Ordering::SeqCst) > 0 && Instant::now() < drain_deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // close admission and answer everything already accepted
+        self.ctx.queue.shutdown();
+        if let Some(path) = &self.ctx.cfg.metrics_path {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)
+                        .with_context(|| format!("creating {}", parent.display()))?;
+                }
+            }
+            let doc = emit(&metrics_document(&self.ctx)) + "\n";
+            std::fs::write(path, doc)
+                .with_context(|| format!("writing the final metrics snapshot to {}", path.display()))?;
+        }
+        let leaked = self.active.load(Ordering::SeqCst);
+        anyhow::ensure!(leaked == 0, "{leaked} connection(s) still active after the drain window");
+        Ok(())
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<Ctx>, active: &Arc<AtomicUsize>) {
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        let (stream, _peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+        };
+        // the listener's non-blocking flag is inherited per-platform;
+        // connection I/O must block (with read timeouts)
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+
+        if active.load(Ordering::SeqCst) >= ctx.cfg.max_connections {
+            ctx.metrics.note_rejected();
+            ctx.metrics.note_response(503);
+            let resp = protocol::Response::error(503, "connection limit reached")
+                .with_header("Retry-After", "1");
+            let mut stream = stream;
+            let _ = resp.write_to(&mut stream);
+            continue;
+        }
+
+        active.fetch_add(1, Ordering::SeqCst);
+        let ctx_conn = Arc::clone(ctx);
+        let active_conn = Arc::clone(active);
+        let spawned = std::thread::Builder::new().name("http-conn".to_string()).spawn(move || {
+            handle_connection(stream, &ctx_conn);
+            active_conn.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            // the closure never ran; undo its count here
+            active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Serve one keep-alive connection until the client closes, an error
+/// forces a close, or shutdown is requested.
+fn handle_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
+    ctx.metrics.note_connection();
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        if !wait_for_request(&mut reader, &stream, ctx) {
+            return;
+        }
+        // a request has started arriving: bound how long the rest may take
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        match protocol::read_request(&mut reader, &ctx.cfg.limits) {
+            Ok(None) => return, // clean close between requests
+            Ok(Some(req)) => {
+                let mut resp = api::handle(ctx, &req);
+                let client_close =
+                    req.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"));
+                if client_close || ctx.shutdown.load(Ordering::SeqCst) {
+                    resp.close = true;
+                }
+                let close = resp.close;
+                if resp.write_to(&mut stream).is_err() || close {
+                    return;
+                }
+            }
+            Err(e) => {
+                if let Some(resp) = e.to_response() {
+                    ctx.metrics.note_response(resp.status);
+                    let _ = resp.write_to(&mut stream);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Park until the next request's first byte is available, the client
+/// closes, or shutdown is requested. Short read-timeout slices keep the
+/// wait responsive to the shutdown flag without busy-spinning.
+fn wait_for_request(reader: &mut BufReader<TcpStream>, stream: &TcpStream, ctx: &Ctx) -> bool {
+    loop {
+        if !reader.buffer().is_empty() {
+            return true; // a pipelined request is already buffered
+        }
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        if stream.set_read_timeout(Some(Duration::from_millis(200))).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return false, // client closed
+            Ok(_) => return true,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return false,
+        }
+    }
+}
+
+/// The `/metrics` document: tier counters, queue state, per-model
+/// serving histograms (with p50/p99 read off the log buckets).
+pub(crate) fn metrics_document(ctx: &Ctx) -> Json {
+    let models: Vec<(String, Json)> = ctx
+        .registry
+        .entries()
+        .map(|e| {
+            let m = e.metrics();
+            let mut doc = match m.to_json() {
+                Json::Obj(map) => map,
+                _ => unreachable!("ServeMetrics::to_json emits an object"),
+            };
+            doc.insert("latency_p50_s".to_string(), Json::Num(m.latency.quantile(0.50)));
+            doc.insert("latency_p99_s".to_string(), Json::Num(m.latency.quantile(0.99)));
+            doc.insert("generation".to_string(), Json::Num(e.generation() as f64));
+            doc.insert("reloads".to_string(), Json::Num(e.reloads() as f64));
+            (e.name().to_string(), Json::Obj(doc))
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str("dopinf-serve-http-v1".to_string())),
+        ("uptime_s", Json::Num(ctx.started.elapsed().as_secs_f64())),
+        ("http", ctx.metrics.to_json()),
+        (
+            "queue",
+            Json::obj(vec![
+                ("depth", Json::Num(ctx.queue.depth() as f64)),
+                ("peak_depth", Json::Num(ctx.queue.peak_depth() as f64)),
+                ("max_queue", Json::Num(ctx.cfg.max_queue as f64)),
+                ("workers", Json::Num(ctx.cfg.workers as f64)),
+            ]),
+        ),
+        ("models", Json::Obj(models.into_iter().collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_metrics_classify_statuses() {
+        let m = TierMetrics::new();
+        m.note_response(200);
+        m.note_response(204);
+        m.note_response(400);
+        m.note_response(404);
+        m.note_response(503);
+        m.note_response(500);
+        assert_eq!(m.responses(), 6);
+        let j = m.to_json();
+        assert_eq!(j.get("responses_2xx").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("responses_4xx").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("responses_5xx").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn tier_metrics_batch_histograms() {
+        let m = TierMetrics::new();
+        m.note_batch(3, 12);
+        m.note_batch(1, 64);
+        let j = m.to_json();
+        assert_eq!(j.get("coalesced_batches").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            j.get("requests_per_batch").unwrap().get("sum").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert_eq!(
+            j.get("members_per_batch").unwrap().get("sum").unwrap().as_usize().unwrap(),
+            76
+        );
+    }
+
+    #[test]
+    fn config_defaults_are_consistent_with_the_queue() {
+        let cfg = HttpConfig::default();
+        let q = cfg.queue_config();
+        assert_eq!(q.workers, cfg.workers);
+        assert_eq!(q.max_queue, cfg.max_queue);
+        assert!(q.coalesce);
+        assert!(cfg.max_coalesce_members <= cfg.split_members);
+    }
+}

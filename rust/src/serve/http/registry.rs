@@ -1,0 +1,311 @@
+//! Multi-model registry: name → [`RomArtifact`], with checksum-validated
+//! hot-reload and atomic swap.
+//!
+//! The registry holds a *fixed set of names* (registered at startup);
+//! what can change at runtime is the artifact behind a name. A reload
+//! re-runs [`RomArtifact::load`] — which validates the on-disk FNV-1a
+//! checksum — and only on success swaps the entry's `Arc<RomArtifact>`.
+//! The swap is atomic from the scheduler's point of view: every request
+//! pins its artifact `Arc` at admission (see
+//! [`super::scheduler::EnsembleQueue::submit`]), so in-flight and
+//! already-queued requests finish on the artifact they were admitted
+//! against while new requests see the fresh one. A failed reload (bad
+//! checksum, truncated file, version mismatch) leaves the old artifact
+//! serving.
+//!
+//! Each entry also owns its per-model [`ServeMetrics`] — requests,
+//! queue-wait / latency / batch-size histograms — surfaced through
+//! `GET /metrics`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use anyhow::{Context, Result};
+
+use crate::obs::ServeMetrics;
+use crate::serve::model::RomArtifact;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct ModelState {
+    artifact: Arc<RomArtifact>,
+    /// bumped on every successful reload; lets clients detect swaps
+    generation: u64,
+    reloads: u64,
+}
+
+/// One registered model: its serving artifact, reload provenance, and
+/// per-model request metrics.
+pub struct ModelEntry {
+    name: String,
+    /// backing file for reloads; `None` for in-memory registrations
+    /// (tests/benches), which then refuse to reload
+    path: Option<PathBuf>,
+    state: Mutex<ModelState>,
+    served: Mutex<ServeMetrics>,
+}
+
+impl ModelEntry {
+    fn new(name: String, path: Option<PathBuf>, artifact: RomArtifact) -> ModelEntry {
+        ModelEntry {
+            name,
+            path,
+            state: Mutex::new(ModelState {
+                artifact: Arc::new(artifact),
+                generation: 1,
+                reloads: 0,
+            }),
+            served: Mutex::new(ServeMetrics::new()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The current serving artifact. Callers keep the returned `Arc`
+    /// for the lifetime of their request — that clone *is* the
+    /// in-flight-requests-finish-on-the-old-artifact guarantee.
+    pub fn artifact(&self) -> Arc<RomArtifact> {
+        Arc::clone(&lock(&self.state).artifact)
+    }
+
+    pub fn generation(&self) -> u64 {
+        lock(&self.state).generation
+    }
+
+    pub fn reloads(&self) -> u64 {
+        lock(&self.state).reloads
+    }
+
+    /// Snapshot of this model's request metrics.
+    pub fn metrics(&self) -> ServeMetrics {
+        lock(&self.served).clone()
+    }
+
+    pub(crate) fn record(&self, members: usize, queue_wait_s: f64, latency_s: f64) {
+        lock(&self.served).record_request(members, queue_wait_s, latency_s);
+    }
+}
+
+/// Why a reload was refused; maps onto 404 / 400 / 500 in the API layer.
+#[derive(Debug)]
+pub enum ReloadError {
+    UnknownModel,
+    /// registered from memory, no file to reload from
+    NotFileBacked,
+    /// load/checksum failure — the previous artifact keeps serving
+    Load(anyhow::Error),
+}
+
+impl std::fmt::Display for ReloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReloadError::UnknownModel => write!(f, "unknown model"),
+            ReloadError::NotFileBacked => write!(f, "model has no backing file to reload from"),
+            ReloadError::Load(e) => write!(f, "reload failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ReloadError {}
+
+/// What a successful reload swapped in.
+#[derive(Debug)]
+pub struct ReloadReport {
+    pub generation: u64,
+    pub r: usize,
+    pub n_probes: usize,
+}
+
+/// Name → model map shared by every connection handler and scheduler
+/// worker. The map itself is immutable after construction (no lock on
+/// the read path); mutability lives inside each entry.
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+}
+
+impl ModelRegistry {
+    /// Load every `(name, path)` spec from disk (checksum-validated).
+    pub fn open(specs: &[(String, PathBuf)]) -> Result<ModelRegistry> {
+        let mut models = BTreeMap::new();
+        for (name, path) in specs {
+            anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
+            let artifact = RomArtifact::load(path)
+                .with_context(|| format!("loading model {name:?} from {}", path.display()))?;
+            let prev = models.insert(
+                name.clone(),
+                Arc::new(ModelEntry::new(name.clone(), Some(path.clone()), artifact)),
+            );
+            anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
+        }
+        anyhow::ensure!(!models.is_empty(), "registry needs at least one model");
+        Ok(ModelRegistry { models })
+    }
+
+    /// Register in-memory artifacts (tests/benches); these entries
+    /// refuse hot-reload ([`ReloadError::NotFileBacked`]).
+    pub fn from_artifacts(models: Vec<(&str, RomArtifact)>) -> ModelRegistry {
+        assert!(!models.is_empty(), "registry needs at least one model");
+        ModelRegistry {
+            models: models
+                .into_iter()
+                .map(|(name, art)| {
+                    (name.to_string(), Arc::new(ModelEntry::new(name.to_string(), None, art)))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.get(name).cloned()
+    }
+
+    /// The single registered model, when there is exactly one — lets
+    /// requests omit `"model"` in the common one-model deployment.
+    pub fn sole(&self) -> Option<Arc<ModelEntry>> {
+        if self.models.len() == 1 {
+            self.models.values().next().cloned()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &Arc<ModelEntry>> {
+        self.models.values()
+    }
+
+    /// Re-load `name` from its backing file and atomically swap it in.
+    /// Queued and in-flight requests keep the `Arc` they pinned at
+    /// admission; only requests admitted after this call see the new
+    /// artifact. On failure the old artifact keeps serving.
+    pub fn reload(&self, name: &str) -> std::result::Result<ReloadReport, ReloadError> {
+        let entry = self.models.get(name).ok_or(ReloadError::UnknownModel)?;
+        let path = entry.path.as_ref().ok_or(ReloadError::NotFileBacked)?;
+        let fresh = RomArtifact::load(path).map_err(ReloadError::Load)?;
+        let report = ReloadReport {
+            generation: 0, // filled below under the lock
+            r: fresh.r(),
+            n_probes: fresh.probes.len(),
+        };
+        let mut st = lock(&entry.state);
+        st.artifact = Arc::new(fresh);
+        st.generation += 1;
+        st.reloads += 1;
+        Ok(ReloadReport { generation: st.generation, ..report })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::RomOperators;
+    use std::collections::BTreeMap as Meta;
+
+    fn artifact(r: usize, seed: u64) -> RomArtifact {
+        RomArtifact {
+            ops: RomOperators::stable_sample(r, seed),
+            qhat0: (0..r).map(|j| 0.3 - 0.01 * j as f64).collect(),
+            probes: Vec::new(),
+            reg: None,
+            meta: Meta::new(),
+        }
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dopinf_http_registry");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}_{}.rom", std::process::id()))
+    }
+
+    #[test]
+    fn open_get_and_sole() {
+        let path = temp_path("open");
+        artifact(3, 5).save(&path).unwrap();
+        let reg = ModelRegistry::open(&[("m".to_string(), path.clone())]).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("m").is_some());
+        assert!(reg.get("nope").is_none());
+        assert_eq!(reg.sole().unwrap().name(), "m");
+        assert_eq!(reg.get("m").unwrap().generation(), 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_rejects_missing_files_and_duplicates() {
+        assert!(ModelRegistry::open(&[("m".to_string(), PathBuf::from("/nonexistent.rom"))])
+            .is_err());
+        let path = temp_path("dup");
+        artifact(3, 5).save(&path).unwrap();
+        let dup = [("m".to_string(), path.clone()), ("m".to_string(), path.clone())];
+        assert!(ModelRegistry::open(&dup).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn sole_requires_exactly_one() {
+        let reg =
+            ModelRegistry::from_artifacts(vec![("a", artifact(3, 1)), ("b", artifact(3, 2))]);
+        assert!(reg.sole().is_none());
+        assert_eq!(reg.entries().count(), 2);
+    }
+
+    #[test]
+    fn reload_swaps_while_old_arcs_survive() {
+        let path = temp_path("swap");
+        artifact(3, 5).save(&path).unwrap();
+        let reg = ModelRegistry::open(&[("m".to_string(), path.clone())]).unwrap();
+        let entry = reg.get("m").unwrap();
+        let pinned = entry.artifact(); // an admitted request's pin
+
+        artifact(4, 9).save(&path).unwrap();
+        let report = reg.reload("m").unwrap();
+        assert_eq!(report.generation, 2);
+        assert_eq!(report.r, 4);
+        assert_eq!(entry.reloads(), 1);
+        // the pinned request still sees the old model; new pins see r=4
+        assert_eq!(pinned.r(), 3);
+        assert_eq!(entry.artifact().r(), 4);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn failed_reload_keeps_the_old_artifact() {
+        let path = temp_path("corrupt");
+        artifact(3, 5).save(&path).unwrap();
+        let reg = ModelRegistry::open(&[("m".to_string(), path.clone())]).unwrap();
+        let entry = reg.get("m").unwrap();
+
+        // corrupt the tail (checksum breaks), then a bad reload
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        match reg.reload("m") {
+            Err(ReloadError::Load(_)) => {}
+            other => panic!("expected a load failure, got {other:?}"),
+        }
+        assert_eq!(entry.generation(), 1);
+        assert_eq!(entry.reloads(), 0);
+        assert_eq!(entry.artifact().r(), 3); // still serving
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_and_memory_backed_reloads_are_typed() {
+        let reg = ModelRegistry::from_artifacts(vec![("m", artifact(3, 5))]);
+        assert!(matches!(reg.reload("nope"), Err(ReloadError::UnknownModel)));
+        assert!(matches!(reg.reload("m"), Err(ReloadError::NotFileBacked)));
+    }
+}

@@ -1,0 +1,509 @@
+//! Batch-size-aware admission + the coalescing worker pool behind the
+//! HTTP endpoints.
+//!
+//! Unlike [`crate::serve::RomServer`]'s mpsc queue, the pending queue
+//! here is an inspectable `VecDeque` under a mutex/condvar — a worker
+//! popping the oldest request can *also* drain every compatible pending
+//! request into one fused batch ([`super::coalesce`]). Admission rules:
+//!
+//! * **bounded depth** — `pending.len() == max_queue` refuses the job
+//!   ([`SubmitError::Full`] → 503 + `Retry-After`), so a burst degrades
+//!   into fast rejections instead of unbounded memory and latency;
+//! * **deadlines** — each job may carry one; a worker dequeuing an
+//!   already-expired job replies [`JobError::Deadline`] without burning
+//!   an evaluation on it (→ 504), and the HTTP handler independently
+//!   gives up at the same deadline, so one stuck evaluation cannot wedge
+//!   the connection while the queue stays serviceable;
+//! * **large-B splitting** — a request at or past `split_members`
+//!   bypasses coalescing and fans its members out over
+//!   [`serve_ensemble`]'s rank workers (bitwise identical to the solo
+//!   path by that function's own contract).
+//!
+//! Coalescing compatibility is deliberately strict: same pinned
+//! artifact **pointer** (`Arc::ptr_eq` — requests admitted across a
+//! hot-reload must not fuse), same horizon, both opted in, fused size
+//! capped. Workers `catch_unwind` evaluations like `RomServer` does:
+//! a panicking batch answers every member with an error and the worker
+//! lives on.
+//!
+//! Shutdown drains: `shutdown()` closes admission, then workers keep
+//! popping until the queue is empty before exiting — no accepted
+//! request is dropped.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::Engine;
+use crate::serve::ensemble::{run_ensemble, EnsembleSpec, EnsembleStats};
+use crate::serve::model::RomArtifact;
+use crate::serve::server::serve_ensemble;
+use crate::util::panic::panic_text;
+
+use super::coalesce::run_coalesced;
+use super::registry::ModelEntry;
+use super::TierMetrics;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Scheduler knobs; mirrored from [`super::HttpConfig`].
+#[derive(Clone, Debug)]
+pub struct QueueConfig {
+    /// evaluation worker threads
+    pub workers: usize,
+    /// pending jobs admitted before [`SubmitError::Full`]
+    pub max_queue: usize,
+    /// fuse compatible concurrent requests into one rollout
+    pub coalesce: bool,
+    /// cap on the fused batch's total members
+    pub max_coalesce_members: usize,
+    /// members at or above this shard over rank workers instead
+    pub split_members: usize,
+    /// most rank workers one split request may spawn
+    pub split_workers: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            workers: 2,
+            max_queue: 256,
+            coalesce: true,
+            max_coalesce_members: 1024,
+            split_members: 8192,
+            split_workers: 4,
+        }
+    }
+}
+
+/// Why a job's reply is an error rather than statistics.
+#[derive(Clone, Debug)]
+pub enum JobError {
+    /// the deadline passed before a worker could start it → 504
+    Deadline,
+    /// the evaluation failed or panicked → 500
+    Failed(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Deadline => write!(f, "deadline exceeded before evaluation started"),
+            JobError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Why admission refused a job.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// queue at `max_queue` → 503 + `Retry-After`
+    Full { depth: usize },
+    /// the queue is shutting down → 503
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full { depth } => write!(f, "queue full ({depth} pending)"),
+            SubmitError::Closed => write!(f, "queue is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+pub type JobReply = Result<EnsembleStats, JobError>;
+
+/// One admitted request. The artifact `Arc` is pinned at admission —
+/// the hot-reload guarantee that in-flight requests finish on the
+/// artifact they were admitted against.
+struct Job {
+    entry: Arc<ModelEntry>,
+    artifact: Arc<RomArtifact>,
+    spec: EnsembleSpec,
+    coalesce: bool,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    reply: mpsc::Sender<JobReply>,
+}
+
+struct QueueState {
+    pending: VecDeque<Job>,
+    open: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    cfg: QueueConfig,
+    metrics: Arc<TierMetrics>,
+}
+
+/// The coalescing request queue + its worker pool.
+pub struct EnsembleQueue {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// peak observed depth, for /metrics
+    peak_depth: AtomicU64,
+}
+
+impl EnsembleQueue {
+    /// Queue with **no** workers yet — tests use this to stage several
+    /// submissions and then spawn one worker, making the coalescing
+    /// decision deterministic. Production goes through [`start`].
+    ///
+    /// [`start`]: EnsembleQueue::start
+    pub fn new(cfg: QueueConfig, metrics: Arc<TierMetrics>) -> EnsembleQueue {
+        EnsembleQueue {
+            shared: Arc::new(Shared {
+                state: Mutex::new(QueueState { pending: VecDeque::new(), open: true }),
+                ready: Condvar::new(),
+                cfg,
+                metrics,
+            }),
+            workers: Mutex::new(Vec::new()),
+            peak_depth: AtomicU64::new(0),
+        }
+    }
+
+    /// Queue with `cfg.workers` workers already draining it.
+    pub fn start(cfg: QueueConfig, metrics: Arc<TierMetrics>) -> EnsembleQueue {
+        let q = EnsembleQueue::new(cfg, metrics);
+        let n = q.shared.cfg.workers;
+        q.spawn_workers(n);
+        q
+    }
+
+    pub fn spawn_workers(&self, n: usize) {
+        let mut workers = lock(&self.workers);
+        for i in 0..n {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("ensemble-worker-{i}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawning an evaluation worker");
+            workers.push(handle);
+        }
+    }
+
+    /// Admit one request. The artifact is pinned here; the returned
+    /// channel yields the reply when a worker finishes (or refuses) the
+    /// job.
+    pub fn submit(
+        &self,
+        entry: Arc<ModelEntry>,
+        spec: EnsembleSpec,
+        coalesce: bool,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<JobReply>, SubmitError> {
+        let artifact = entry.artifact();
+        let (reply, rx) = mpsc::channel();
+        {
+            let mut st = lock(&self.shared.state);
+            if !st.open {
+                return Err(SubmitError::Closed);
+            }
+            if st.pending.len() >= self.shared.cfg.max_queue {
+                return Err(SubmitError::Full { depth: st.pending.len() });
+            }
+            st.pending.push_back(Job {
+                entry,
+                artifact,
+                spec,
+                coalesce,
+                deadline,
+                submitted: Instant::now(),
+                reply,
+            });
+            self.peak_depth.fetch_max(st.pending.len() as u64, Ordering::Relaxed);
+        }
+        self.shared.ready.notify_one();
+        Ok(rx)
+    }
+
+    /// Requests currently queued (not counting in-flight evaluations).
+    pub fn depth(&self) -> usize {
+        lock(&self.shared.state).pending.len()
+    }
+
+    pub fn peak_depth(&self) -> u64 {
+        self.peak_depth.load(Ordering::Relaxed)
+    }
+
+    /// Close admission, drain everything already accepted, join the
+    /// workers. Idempotent; new submits fail with [`SubmitError::Closed`].
+    pub fn shutdown(&self) {
+        lock(&self.shared.state).open = false;
+        self.shared.ready.notify_all();
+        let handles: Vec<JoinHandle<()>> = lock(&self.workers).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EnsembleQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let engine = Engine::native();
+    loop {
+        let batch = {
+            let mut st = lock(&shared.state);
+            loop {
+                if let Some(first) = st.pending.pop_front() {
+                    break collect_batch(first, &mut st, &shared.cfg);
+                }
+                if !st.open {
+                    return; // drained and closed
+                }
+                st = shared.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        run_batch(&engine, batch, shared);
+    }
+}
+
+/// Greedily drain pending requests compatible with `first` into one
+/// batch. Called under the queue lock; O(pending) per dequeue.
+fn collect_batch(first: Job, st: &mut QueueState, cfg: &QueueConfig) -> Vec<Job> {
+    if !cfg.coalesce || !first.coalesce || first.spec.members >= cfg.split_members {
+        return vec![first];
+    }
+    let mut total = first.spec.members;
+    let mut batch = vec![first];
+    let mut i = 0;
+    while i < st.pending.len() {
+        let c = &st.pending[i];
+        let compatible = c.coalesce
+            && Arc::ptr_eq(&c.artifact, &batch[0].artifact)
+            && c.spec.n_steps == batch[0].spec.n_steps
+            && c.spec.members < cfg.split_members
+            && total + c.spec.members <= cfg.max_coalesce_members;
+        if compatible {
+            let job = st.pending.remove(i).expect("index in bounds");
+            total += job.spec.members;
+            batch.push(job);
+        } else {
+            i += 1;
+        }
+    }
+    batch
+}
+
+fn run_batch(engine: &Engine, batch: Vec<Job>, shared: &Shared) {
+    let dequeued = Instant::now();
+    // expired jobs answer Deadline without costing an evaluation; the
+    // rest share one fused run
+    let (live, expired): (Vec<Job>, Vec<Job>) =
+        batch.into_iter().partition(|j| j.deadline.is_none_or(|d| dequeued <= d));
+    for j in expired {
+        let _ = j.reply.send(Err(JobError::Deadline));
+    }
+    if live.is_empty() {
+        return;
+    }
+
+    let total_members: usize = live.iter().map(|j| j.spec.members).sum();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        evaluate(engine, &live, &shared.cfg, &shared.metrics)
+    }))
+    .unwrap_or_else(|p| Err(format!("ensemble evaluation panicked: {}", panic_text(&*p))));
+
+    let latency_s = dequeued.elapsed().as_secs_f64();
+    shared.metrics.note_batch(live.len(), total_members);
+    match result {
+        Ok(all) => {
+            debug_assert_eq!(all.len(), live.len());
+            for (j, stats) in live.into_iter().zip(all) {
+                let wait = dequeued.duration_since(j.submitted).as_secs_f64();
+                j.entry.record(j.spec.members, wait, latency_s);
+                let _ = j.reply.send(Ok(stats));
+            }
+        }
+        Err(msg) => {
+            // error replies record too — burned worker time must show
+            // in the latency histograms (same policy as RomServer)
+            for j in live {
+                let wait = dequeued.duration_since(j.submitted).as_secs_f64();
+                j.entry.record(j.spec.members, wait, latency_s);
+                let _ = j.reply.send(Err(JobError::Failed(msg.clone())));
+            }
+        }
+    }
+}
+
+fn evaluate(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &QueueConfig,
+    metrics: &TierMetrics,
+) -> Result<Vec<EnsembleStats>, String> {
+    if jobs.len() == 1 {
+        let j = &jobs[0];
+        let stats = if j.spec.members >= cfg.split_members && cfg.split_workers > 1 {
+            // very large B: shard members over rank workers —
+            // serve_ensemble's own contract keeps this bitwise equal to
+            // the solo path
+            metrics.note_split();
+            let shards = j.spec.members.div_ceil(cfg.split_members);
+            let w = shards.max(2).min(cfg.split_workers);
+            serve_ensemble(engine, &j.artifact, &j.spec, w)
+        } else {
+            run_ensemble(engine, &j.artifact, &j.spec)
+        }
+        .map_err(|e| format!("{e:#}"))?;
+        return Ok(vec![stats]);
+    }
+    let specs: Vec<EnsembleSpec> = jobs.iter().map(|j| j.spec.clone()).collect();
+    run_coalesced(engine, &jobs[0].artifact, &specs).map_err(|e| format!("{e:#}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::http::registry::ModelRegistry;
+    use crate::serve::model::RomArtifact;
+    use crate::opinf::postprocess::ProbeBasis;
+    use crate::rom::RomOperators;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn registry(r: usize) -> ModelRegistry {
+        let art = RomArtifact {
+            ops: RomOperators::stable_sample(r, 21),
+            qhat0: (0..r).map(|j| 0.4 - 0.05 * j as f64).collect(),
+            probes: vec![ProbeBasis { var: 0, row: 2, phi: vec![1.0; r], mean: 0.0, scale: 1.0 }],
+            reg: None,
+            meta: BTreeMap::new(),
+        };
+        ModelRegistry::from_artifacts(vec![("m", art)])
+    }
+
+    fn queue(cfg: QueueConfig) -> (EnsembleQueue, Arc<TierMetrics>) {
+        let metrics = Arc::new(TierMetrics::new());
+        (EnsembleQueue::new(cfg, Arc::clone(&metrics)), metrics)
+    }
+
+    #[test]
+    fn staged_submissions_coalesce_into_one_batch() {
+        let reg = registry(4);
+        let entry = reg.get("m").unwrap();
+        let (q, metrics) = queue(QueueConfig::default());
+        let spec = |seed| EnsembleSpec { members: 2, sigma: 0.01, seed, n_steps: 20 };
+        let rxs: Vec<_> =
+            (0..5).map(|s| q.submit(Arc::clone(&entry), spec(s), true, None).unwrap()).collect();
+        assert_eq!(q.depth(), 5);
+        q.spawn_workers(1);
+        for rx in rxs {
+            let stats = rx.recv().unwrap().unwrap();
+            assert_eq!(stats.members, 2);
+            assert_eq!(stats.n_steps, 20);
+        }
+        // all five went through as one fused batch of 10 members
+        let j = metrics.to_json();
+        assert_eq!(j.get("coalesced_batches").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            j.get("requests_per_batch").unwrap().get("sum").unwrap().as_usize().unwrap(),
+            5
+        );
+        assert_eq!(
+            j.get("members_per_batch").unwrap().get("sum").unwrap().as_usize().unwrap(),
+            10
+        );
+        q.shutdown();
+    }
+
+    #[test]
+    fn coalescing_respects_opt_out_and_caps() {
+        let reg = registry(3);
+        let entry = reg.get("m").unwrap();
+        let cfg = QueueConfig { max_coalesce_members: 4, ..QueueConfig::default() };
+        let (q, metrics) = queue(cfg);
+        let spec = |seed| EnsembleSpec { members: 2, sigma: 0.01, seed, n_steps: 10 };
+        // 2 coalescable + 1 opted out + 1 past the member cap
+        let rxs: Vec<_> = vec![
+            q.submit(Arc::clone(&entry), spec(0), true, None).unwrap(),
+            q.submit(Arc::clone(&entry), spec(1), true, None).unwrap(),
+            q.submit(Arc::clone(&entry), spec(2), false, None).unwrap(),
+            q.submit(Arc::clone(&entry), spec(3), true, None).unwrap(),
+        ];
+        q.spawn_workers(1);
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        // batch 1 = jobs {0, 1} (cap 4 members), batch 2 = job 2 (opted
+        // out), batch 3 = job 3
+        let j = metrics.to_json();
+        assert_eq!(j.get("coalesced_batches").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            j.get("requests_per_batch").unwrap().get("max").unwrap().as_usize().unwrap(),
+            2
+        );
+        q.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_refuses_with_full() {
+        let reg = registry(3);
+        let entry = reg.get("m").unwrap();
+        let cfg = QueueConfig { max_queue: 2, ..QueueConfig::default() };
+        let (q, _) = queue(cfg); // no workers: nothing drains
+        let spec = EnsembleSpec { members: 1, sigma: 0.01, seed: 0, n_steps: 5 };
+        let _a = q.submit(Arc::clone(&entry), spec.clone(), true, None).unwrap();
+        let _b = q.submit(Arc::clone(&entry), spec.clone(), true, None).unwrap();
+        match q.submit(Arc::clone(&entry), spec.clone(), true, None) {
+            Err(SubmitError::Full { depth }) => assert_eq!(depth, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn expired_jobs_reply_deadline_and_queue_stays_serviceable() {
+        let reg = registry(3);
+        let entry = reg.get("m").unwrap();
+        let (q, _) = queue(QueueConfig::default());
+        let spec = EnsembleSpec { members: 1, sigma: 0.01, seed: 0, n_steps: 5 };
+        // a deadline already in the past, then a healthy job
+        let past = Instant::now() - Duration::from_millis(1);
+        let dead = q.submit(Arc::clone(&entry), spec.clone(), true, Some(past)).unwrap();
+        let live = q
+            .submit(Arc::clone(&entry), spec.clone(), false, Some(Instant::now() + Duration::from_secs(60)))
+            .unwrap();
+        q.spawn_workers(1);
+        assert!(matches!(dead.recv().unwrap(), Err(JobError::Deadline)));
+        assert!(live.recv().unwrap().is_ok());
+        q.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_jobs() {
+        let reg = registry(3);
+        let entry = reg.get("m").unwrap();
+        let (q, _) = queue(QueueConfig::default());
+        let spec = |seed| EnsembleSpec { members: 2, sigma: 0.01, seed, n_steps: 15 };
+        let rxs: Vec<_> =
+            (0..3).map(|s| q.submit(Arc::clone(&entry), spec(s), true, None).unwrap()).collect();
+        q.spawn_workers(1);
+        // close admission immediately: the three accepted jobs must
+        // still be answered, the fourth refused
+        q.shutdown();
+        let spec4 = EnsembleSpec { members: 1, sigma: 0.01, seed: 9, n_steps: 5 };
+        assert!(matches!(q.submit(entry, spec4, true, None), Err(SubmitError::Closed)));
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok(), "accepted job dropped during shutdown");
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! The online stage as a service: persist trained ROMs and evaluate
-//! batched ensembles of rollouts at throughput.
+//! batched ensembles of rollouts at throughput — in-process or over
+//! HTTP.
 //!
 //! The paper makes ROMs cheap precisely so downstream workloads —
 //! "design space exploration, risk assessment, and uncertainty
@@ -8,12 +9,15 @@
 //!
 //! ```text
 //! train (opinf/coordinator) ──▶ RomArtifact (.rom on disk)
-//!                                   │ load
-//!                                   ▼
+//!                                   │ load (ModelRegistry: many named
+//!                                   ▼        artifacts, hot-reloadable)
 //!            ensemble spec ──▶ batched rollout (one GEMM per step)
 //!                                   │ streaming stats
 //!                                   ▼
 //!            probe mean / variance / quantiles + divergence accounting
+//!                                   │
+//!                                   ▼ (optional network front-end)
+//!            serve/http: POST /v1/ensemble · coalescing · deadlines
 //! ```
 //!
 //! * [`model`]    — versioned on-disk artifact: operators + probe bases
@@ -29,6 +33,11 @@
 //!   records queue wait, latency, and batch size into the fixed
 //!   log-spaced [`crate::obs::ServeMetrics`] histograms, snapshotted
 //!   via [`RomServer::metrics`]
+//! * [`http`]     — the production network tier (CLI `serve`): a
+//!   zero-dependency HTTP/1.1 front-end with cross-request coalescing
+//!   (bitwise identical to solo serving), bounded-queue admission with
+//!   503/504 backpressure, a multi-model [`ModelRegistry`] with
+//!   checksum-validated hot-reload, and graceful drain on SIGINT
 //!
 //! v2 artifacts may also carry the OpInf normal-equation blocks
 //! ([`RegBlocks`]), enabling serving-side *regularization-pair*
@@ -37,6 +46,7 @@
 
 pub mod batch;
 pub mod ensemble;
+pub mod http;
 pub mod model;
 pub mod server;
 
@@ -48,5 +58,6 @@ pub use ensemble::{
     perturbed_initial_conditions, reg_pair_ensemble, run_ensemble, run_reg_ensemble,
     EnsembleSpec, EnsembleStats, ProbeSeries, RegEnsemble,
 };
+pub use http::{HttpConfig, HttpServer, ModelRegistry};
 pub use model::{RegBlocks, RomArtifact};
 pub use server::{serve_ensemble, RomServer};

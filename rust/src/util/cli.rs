@@ -15,10 +15,12 @@ pub struct OptSpec {
     pub is_flag: bool,
 }
 
-/// Parsed arguments for one (sub)command.
+/// Parsed arguments for one (sub)command. Value-options may repeat
+/// (`--model a.rom --model b.rom`); [`Args::get`] returns the last
+/// occurrence, [`Args::get_all`] every occurrence in order.
 #[derive(Debug, Default)]
 pub struct Args {
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -64,7 +66,7 @@ impl Args {
                             .cloned()
                             .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
                     };
-                    args.opts.insert(name, val);
+                    args.opts.entry(name).or_default().push(val);
                 }
             } else {
                 args.positional.push(tok.clone());
@@ -77,8 +79,14 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value given for `name` (repeating an option overrides).
     pub fn get<'a>(&'a self, name: &str) -> Option<&'a str> {
-        self.opts.get(name).map(|s| s.as_str())
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every value given for `name`, in command-line order.
+    pub fn get_all<'a>(&'a self, name: &str) -> &'a [String] {
+        self.opts.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -180,6 +188,15 @@ mod tests {
         assert!(Args::parse(&toks(&["--nope"]), &specs()).is_err());
         assert!(Args::parse(&toks(&["--grid"]), &specs()).is_err());
         assert!(Args::parse(&toks(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a =
+            Args::parse(&toks(&["--grid", "1x1", "--grid", "2x2", "--grid=3x3"]), &specs()).unwrap();
+        assert_eq!(a.get("grid"), Some("3x3")); // last wins for get()
+        assert_eq!(a.get_all("grid"), &["1x1", "2x2", "3x3"]);
+        assert!(a.get_all("procs").is_empty());
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! HTTP serving-tier integration: the coalescing bitwise contract at
+//! sweep scale, and the full network path — raw `TcpStream` clients
+//! against a live [`HttpServer`] — covering success, every error
+//! status, deadlines, backpressure, hot-reload, and graceful drain.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use dopinf::opinf::postprocess::ProbeBasis;
+use dopinf::rom::RomOperators;
+use dopinf::runtime::Engine;
+use dopinf::serve::http::coalesce::run_coalesced;
+use dopinf::serve::http::{HttpConfig, HttpServer, ModelRegistry};
+use dopinf::serve::{run_ensemble, EnsembleSpec, EnsembleStats, RomArtifact};
+use dopinf::util::json::{parse, Json};
+
+fn artifact(r: usize, seed: u64) -> RomArtifact {
+    let probes = vec![
+        ProbeBasis { var: 0, row: 3, phi: vec![1.0; r], mean: 0.5, scale: 2.0 },
+        ProbeBasis {
+            var: 1,
+            row: 9,
+            phi: (0..r).map(|j| 0.15 * (j as f64 - 1.5)).collect(),
+            mean: -0.25,
+            scale: 1.0,
+        },
+    ];
+    RomArtifact {
+        ops: RomOperators::stable_sample(r, seed),
+        qhat0: (0..r).map(|j| 0.4 - 0.04 * j as f64).collect(),
+        probes,
+        reg: None,
+        meta: BTreeMap::new(),
+    }
+}
+
+fn assert_stats_bitwise(a: &EnsembleStats, b: &EnsembleStats) {
+    assert_eq!(a.members, b.members);
+    assert_eq!(a.n_steps, b.n_steps);
+    assert_eq!(a.diverged_at, b.diverged_at);
+    assert_eq!(a.probes.len(), b.probes.len());
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!((pa.var, pa.row), (pb.var, pb.row));
+        assert_eq!(pa.mean, pb.mean);
+        assert_eq!(pa.variance, pb.variance);
+        assert_eq!(pa.q05, pb.q05);
+        assert_eq!(pa.q50, pb.q50);
+        assert_eq!(pa.q95, pb.q95);
+        assert_eq!(pa.count, pb.count);
+    }
+}
+
+/// The tentpole contract at sweep scale: N coalesced requests are
+/// bitwise identical to the same N served sequentially, for
+/// N ∈ {1, 3, 8} × members ∈ {1, 64}.
+#[test]
+fn coalescing_sweep_is_bitwise_identical_to_sequential() {
+    let engine = Engine::native();
+    let art = artifact(6, 17);
+    for &n in &[1usize, 3, 8] {
+        for &members in &[1usize, 64] {
+            let specs: Vec<EnsembleSpec> = (0..n)
+                .map(|i| EnsembleSpec {
+                    members,
+                    sigma: 0.01 + 0.005 * i as f64,
+                    seed: 100 + i as u64,
+                    n_steps: 60,
+                })
+                .collect();
+            let fused = run_coalesced(&engine, &art, &specs).unwrap();
+            assert_eq!(fused.len(), n);
+            for (spec, got) in specs.iter().zip(&fused) {
+                let solo = run_ensemble(&engine, &art, spec).unwrap();
+                assert_stats_bitwise(got, &solo);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ raw client
+
+fn read_response<R: BufRead>(r: &mut R) -> (u16, Vec<(String, String)>, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed status line {line:?}"))
+        .parse()
+        .unwrap();
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let (k, v) = t.split_once(':').unwrap();
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8(body).unwrap())
+}
+
+fn raw(addr: SocketAddr, bytes: &[u8]) -> (u16, Vec<(String, String)>, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(bytes).unwrap();
+    read_response(&mut BufReader::new(s))
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let msg = match body {
+        Some(b) => format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b}",
+            b.len()
+        ),
+        None => format!("{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    };
+    let (status, _, resp) = raw(addr, msg.as_bytes());
+    (status, resp)
+}
+
+fn server(cfg: HttpConfig, models: Vec<(&str, RomArtifact)>) -> HttpServer {
+    let mut cfg = cfg;
+    cfg.addr = "127.0.0.1:0".to_string();
+    HttpServer::start(ModelRegistry::from_artifacts(models), cfg).unwrap()
+}
+
+fn json_f64s(doc: &Json, probe: usize, field: &str) -> Vec<f64> {
+    doc.get("probes").unwrap().as_arr().unwrap()[probe]
+        .get(field)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+/// The wire format preserves the computed statistics bit for bit: the
+/// emitter's shortest-roundtrip floats parse back to identical values,
+/// extending the coalescing contract through HTTP.
+#[test]
+fn http_roundtrip_preserves_statistics_bitwise() {
+    let art = artifact(5, 23);
+    let spec = EnsembleSpec { members: 16, sigma: 0.02, seed: 41, n_steps: 50 };
+    let solo = run_ensemble(&Engine::native(), &art, &spec).unwrap();
+
+    let srv = server(HttpConfig::default(), vec![("m", artifact(5, 23))]);
+    let addr = srv.local_addr();
+
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/v1/ensemble",
+        Some(r#"{"members": 16, "sigma": 0.02, "seed": 41, "steps": 50}"#),
+    );
+    assert_eq!(status, 200, "body: {body}");
+    let doc = parse(&body).unwrap();
+    assert_eq!(doc.get("model").unwrap().as_str().unwrap(), "m");
+    assert_eq!(doc.get("members").unwrap().as_usize().unwrap(), 16);
+    assert_eq!(doc.get("steps").unwrap().as_usize().unwrap(), 50);
+    assert_eq!(doc.get("diverged").unwrap().as_usize().unwrap(), solo.n_diverged());
+    for (i, probe) in solo.probes.iter().enumerate() {
+        assert_eq!(json_f64s(&doc, i, "mean"), probe.mean, "probe {i} mean drifts on the wire");
+        assert_eq!(json_f64s(&doc, i, "variance"), probe.variance);
+        assert_eq!(json_f64s(&doc, i, "q05"), probe.q05);
+        assert_eq!(json_f64s(&doc, i, "q50"), probe.q50);
+        assert_eq!(json_f64s(&doc, i, "q95"), probe.q95);
+    }
+
+    // series: "last" collapses each series to its final scalar
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/v1/ensemble",
+        Some(r#"{"members": 16, "sigma": 0.02, "seed": 41, "steps": 50, "series": "last"}"#),
+    );
+    assert_eq!(status, 200);
+    let doc = parse(&body).unwrap();
+    let p0 = &doc.get("probes").unwrap().as_arr().unwrap()[0];
+    assert_eq!(p0.get("mean").unwrap().as_f64().unwrap(), *solo.probes[0].mean.last().unwrap());
+
+    // healthz + models while we're here
+    let (status, body) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert_eq!(parse(&body).unwrap().get("status").unwrap().as_str().unwrap(), "ok");
+    let (status, body) = request(addr, "GET", "/v1/models", None);
+    assert_eq!(status, 200);
+    let models = parse(&body).unwrap();
+    let row = &models.get("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(row.get("name").unwrap().as_str().unwrap(), "m");
+    assert_eq!(row.get("r").unwrap().as_usize().unwrap(), 5);
+
+    srv.join().unwrap();
+}
+
+#[test]
+fn http_error_statuses_are_mapped() {
+    let cfg = HttpConfig {
+        limits: dopinf::serve::http::Limits { max_body: 4096, ..Default::default() },
+        ..HttpConfig::default()
+    };
+    let srv = server(cfg, vec![("m", artifact(4, 7))]);
+    let addr = srv.local_addr();
+
+    // unknown route → 404
+    let (status, _) = request(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    // wrong method on a known route → 405 + Allow
+    let msg = "GET /v1/ensemble HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    let (status, headers, _) = raw(addr, msg.as_bytes());
+    assert_eq!(status, 405);
+    assert!(headers.iter().any(|(k, v)| k == "allow" && v == "POST"));
+    // malformed JSON → 400
+    let (status, _) = request(addr, "POST", "/v1/ensemble", Some("{not json"));
+    assert_eq!(status, 400);
+    // unknown field → 400 (typos must not silently run defaults)
+    let (status, body) = request(addr, "POST", "/v1/ensemble", Some(r#"{"member": 4}"#));
+    assert_eq!(status, 400);
+    assert!(body.contains("member"), "the reason names the bad field: {body}");
+    // unknown model → 404
+    let (status, _) =
+        request(addr, "POST", "/v1/ensemble", Some(r#"{"model": "ghost", "members": 1}"#));
+    assert_eq!(status, 404);
+    // reload of a memory-backed model → 400
+    let (status, _) = request(addr, "POST", "/v1/models/m/reload", None);
+    assert_eq!(status, 400);
+    // reload of an unknown model → 404
+    let (status, _) = request(addr, "POST", "/v1/models/ghost/reload", None);
+    assert_eq!(status, 404);
+    // oversized declared body → 413, before the body is read
+    let msg = "POST /v1/ensemble HTTP/1.1\r\nHost: t\r\nContent-Length: 999999999\r\n\r\n";
+    let (status, _, _) = raw(addr, msg.as_bytes());
+    assert_eq!(status, 413);
+    // malformed request line → 400
+    let (status, _, _) = raw(addr, b"TOTAL GARBAGE\r\n\r\n");
+    assert_eq!(status, 400);
+    // POST without a Content-Length → 411
+    let msg = "POST /v1/ensemble HTTP/1.1\r\nHost: t\r\n\r\n";
+    let (status, _, _) = raw(addr, msg.as_bytes());
+    assert_eq!(status, 411);
+
+    // after all that abuse, the server still serves
+    let (status, _) = request(addr, "POST", "/v1/ensemble", Some(r#"{"members": 2, "steps": 5}"#));
+    assert_eq!(status, 200);
+    let final_metrics = srv.join().unwrap();
+    let http = final_metrics.get("http").unwrap();
+    assert!(http.get("responses_4xx").unwrap().as_usize().unwrap() >= 8);
+}
+
+/// A stuck evaluation answers 504 at its deadline while the queue keeps
+/// serving other requests.
+#[test]
+fn deadline_maps_to_504_and_queue_stays_serviceable() {
+    let cfg = HttpConfig { workers: 1, ..HttpConfig::default() };
+    let srv = server(cfg, vec![("m", artifact(6, 3))]);
+    let addr = srv.local_addr();
+
+    // the slow request occupies the only worker well past its deadline
+    let slow = std::thread::spawn(move || {
+        request(
+            addr,
+            "POST",
+            "/v1/ensemble",
+            Some(r#"{"members": 8, "steps": 300000, "timeout_ms": 100}"#),
+        )
+    });
+    // a healthy request queued behind it: must complete once the worker
+    // frees up, well within its own generous deadline
+    let fast = std::thread::spawn(move || {
+        request(
+            addr,
+            "POST",
+            "/v1/ensemble",
+            Some(r#"{"members": 2, "steps": 10, "timeout_ms": 110000}"#),
+        )
+    });
+    let (slow_status, _) = slow.join().unwrap();
+    assert_eq!(slow_status, 504, "the stuck request answers at its deadline");
+    let (fast_status, _) = fast.join().unwrap();
+    assert_eq!(fast_status, 200, "the queue stays serviceable past a stuck job");
+
+    let final_metrics = srv.join().unwrap();
+    assert!(final_metrics.get("http").unwrap().get("deadline_504").unwrap().as_usize().unwrap() >= 1);
+}
+
+#[test]
+fn queue_full_answers_503_with_retry_after() {
+    let cfg = HttpConfig { workers: 1, max_queue: 1, ..HttpConfig::default() };
+    let srv = server(cfg, vec![("m", artifact(6, 3))]);
+    let addr = srv.local_addr();
+
+    // A occupies the worker, B fills the queue slot of 1
+    let occupy = std::thread::spawn(move || {
+        request(addr, "POST", "/v1/ensemble", Some(r#"{"members": 8, "steps": 200000}"#))
+    });
+    std::thread::sleep(Duration::from_millis(300)); // A dequeued
+    let queued = std::thread::spawn(move || {
+        request(addr, "POST", "/v1/ensemble", Some(r#"{"members": 2, "steps": 10}"#))
+    });
+    std::thread::sleep(Duration::from_millis(300)); // B parked in the queue
+
+    let msg = format!(
+        "POST /v1/ensemble HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        r#"{"members": 1, "steps": 5}"#.len(),
+        r#"{"members": 1, "steps": 5}"#
+    );
+    let (status, headers, _) = raw(addr, msg.as_bytes());
+    assert_eq!(status, 503, "a full queue refuses rather than buffering unboundedly");
+    assert!(headers.iter().any(|(k, _)| k == "retry-after"));
+
+    assert_eq!(occupy.join().unwrap().0, 200);
+    assert_eq!(queued.join().unwrap().0, 200);
+    let final_metrics = srv.join().unwrap();
+    assert!(final_metrics.get("http").unwrap().get("rejected_503").unwrap().as_usize().unwrap() >= 1);
+}
+
+/// Hot-reload swaps the artifact atomically: the in-flight request
+/// finishes on the artifact it was admitted against, requests admitted
+/// after the swap see the new one — both verified bitwise.
+#[test]
+fn hot_reload_swaps_without_failing_in_flight_requests() {
+    let dir = std::env::temp_dir().join(format!("dopinf_http_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.rom");
+    let old_art = artifact(5, 31);
+    let new_art = artifact(5, 77); // same r, different operators
+    old_art.save(&path).unwrap();
+
+    let cfg = HttpConfig {
+        workers: 1,
+        addr: "127.0.0.1:0".to_string(),
+        ..HttpConfig::default()
+    };
+    let registry = ModelRegistry::open(&[("m".to_string(), path.clone())]).unwrap();
+    let srv = HttpServer::start(registry, cfg).unwrap();
+    let addr = srv.local_addr();
+
+    // in-flight slow request, admitted against the old artifact
+    let inflight = std::thread::spawn(move || {
+        request(
+            addr,
+            "POST",
+            "/v1/ensemble",
+            Some(r#"{"members": 8, "sigma": 0.02, "seed": 5, "steps": 150000, "series": "last"}"#),
+        )
+    });
+    std::thread::sleep(Duration::from_millis(200)); // let it be admitted + dequeued
+
+    new_art.save(&path).unwrap();
+    let (status, body) = request(addr, "POST", "/v1/models/m/reload", None);
+    assert_eq!(status, 200, "reload: {body}");
+    let rep = parse(&body).unwrap();
+    assert_eq!(rep.get("generation").unwrap().as_usize().unwrap(), 2);
+
+    // the in-flight request completed on the OLD artifact, bitwise
+    let (status, body) = inflight.join().unwrap();
+    assert_eq!(status, 200, "in-flight request must not fail across a reload: {body}");
+    let spec = EnsembleSpec { members: 8, sigma: 0.02, seed: 5, n_steps: 150_000 };
+    let old_solo = run_ensemble(&Engine::native(), &old_art, &spec).unwrap();
+    let doc = parse(&body).unwrap();
+    let got = doc.get("probes").unwrap().as_arr().unwrap()[0].get("mean").unwrap().as_f64();
+    assert_eq!(got, Some(*old_solo.probes[0].mean.last().unwrap()));
+
+    // a post-reload request serves the NEW artifact, bitwise
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/v1/ensemble",
+        Some(r#"{"members": 4, "sigma": 0.01, "seed": 9, "steps": 40, "series": "last"}"#),
+    );
+    assert_eq!(status, 200);
+    let spec = EnsembleSpec { members: 4, sigma: 0.01, seed: 9, n_steps: 40 };
+    let new_solo = run_ensemble(&Engine::native(), &new_art, &spec).unwrap();
+    let doc = parse(&body).unwrap();
+    let got = doc.get("probes").unwrap().as_arr().unwrap()[0].get("mean").unwrap().as_f64();
+    assert_eq!(got, Some(*new_solo.probes[0].mean.last().unwrap()));
+
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful shutdown: every admitted request is answered, the final
+/// metrics snapshot is flushed, and the port stops accepting.
+#[test]
+fn shutdown_drains_all_in_flight_requests() {
+    let dir = std::env::temp_dir().join(format!("dopinf_http_drain_{}", std::process::id()));
+    let metrics_path = dir.join("final_metrics.json");
+    let cfg = HttpConfig {
+        workers: 1,
+        admin_shutdown: true,
+        metrics_path: Some(metrics_path.clone()),
+        ..HttpConfig::default()
+    };
+    let srv = server(cfg, vec![("m", artifact(6, 3))]);
+    let addr = srv.local_addr();
+
+    // three requests: one in-flight on the worker, two parked in the queue
+    let clients: Vec<_> = (0..3)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"members": 4, "seed": {i}, "steps": 40000}}"#);
+                request(addr, "POST", "/v1/ensemble", Some(&body))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(300)); // all three admitted
+
+    let (status, body) = request(addr, "POST", "/admin/shutdown", None);
+    assert_eq!(status, 200);
+    assert_eq!(parse(&body).unwrap().get("status").unwrap().as_str().unwrap(), "shutting down");
+
+    // every admitted request completes despite the shutdown
+    for c in clients {
+        let (status, body) = c.join().unwrap();
+        assert_eq!(status, 200, "admitted request dropped during drain: {body}");
+    }
+    let final_metrics = srv.join().unwrap();
+    let served = final_metrics
+        .get("models")
+        .and_then(|m| m.get("m"))
+        .and_then(|m| m.get("requests"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert_eq!(served, 3, "all three ensemble requests recorded");
+
+    // the final snapshot was flushed and parses
+    let flushed = parse(&std::fs::read_to_string(&metrics_path).unwrap()).unwrap();
+    assert_eq!(flushed.get("schema").unwrap().as_str().unwrap(), "dopinf-serve-http-v1");
+    assert_eq!(
+        flushed.get("models").unwrap().get("m").unwrap().get("requests").unwrap().as_usize(),
+        Some(3)
+    );
+
+    // the listener is gone: connecting now fails, or the socket closes
+    // without ever answering
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(mut s) => {
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            let mut buf = Vec::new();
+            let n = s.read_to_end(&mut buf).unwrap_or(0);
+            assert_eq!(n, 0, "a drained server must not answer new requests");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn keep_alive_serves_pipelined_clients() {
+    let srv = server(HttpConfig::default(), vec![("m", artifact(4, 7))]);
+    let addr = srv.local_addr();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let body = r#"{"members": 2, "steps": 8, "series": "last"}"#;
+    let one = format!(
+        "POST /v1/ensemble HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    // two requests up front on one connection, then read two responses
+    s.write_all(format!("{one}{one}").as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let (s1, _, b1) = read_response(&mut r);
+    let (s2, _, b2) = read_response(&mut r);
+    assert_eq!((s1, s2), (200, 200));
+    assert_eq!(b1, b2, "identical pipelined requests get identical answers");
+    drop(r);
+    srv.join().unwrap();
+}

@@ -1,7 +1,9 @@
 //! Offline vendored subset of the `libc` crate: exactly the symbols
-//! `dopinf::util::timer` needs to read `CLOCK_THREAD_CPUTIME_ID` on
-//! Linux (the only target this repo builds for — see DESIGN notes in
-//! `rust/src/comm/mod.rs` on the per-thread virtual clocks).
+//! dopinf needs on Linux (the only target this repo builds for) —
+//! `CLOCK_THREAD_CPUTIME_ID` reads for `dopinf::util::timer` (see
+//! DESIGN notes in `rust/src/comm/mod.rs` on the per-thread virtual
+//! clocks) and `signal(SIGINT, …)` for the `serve` subcommand's
+//! graceful drain.
 
 #![allow(non_camel_case_types)]
 
@@ -19,8 +21,17 @@ pub struct timespec {
     pub tv_nsec: c_long,
 }
 
+/// Interrupt signal (ctrl-C); number 2 on Linux, all architectures.
+pub const SIGINT: c_int = 2;
+
+/// A signal handler address, as `signal(2)` takes it. Handlers must be
+/// `extern "C"` and async-signal-safe (the serve CLI's only stores to
+/// an `AtomicBool`).
+pub type sighandler_t = usize;
+
 extern "C" {
     pub fn clock_gettime(clockid: c_int, tp: *mut timespec) -> c_int;
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
 }
 
 #[cfg(test)]
