@@ -18,14 +18,15 @@
 
 use dopinf::comm::{self, Category, Communicator, CostModel, Op};
 use dopinf::linalg::{
-    cholesky_solve, eigh, matmul, matmul_tn, matmul_tn_with_threads, syrk, syrk_with_threads,
-    Matrix,
+    cholesky_solve, eigh, matmul, matmul_tn, matmul_tn_with_threads, simd, syrk,
+    syrk_with_threads, Matrix, SimdTier,
 };
 use dopinf::opinf::learn;
 use dopinf::rom::quadratic::{qhat_sq_rows, s_dim};
 use dopinf::rom::{solve_discrete, RomOperators};
 use dopinf::obs::Tracer;
 use dopinf::runtime::Engine;
+use dopinf::serve::rollout_batch_collect;
 use dopinf::util::benchkit::Bench;
 
 /// The pre-compute-plane syrk inner loops, zero-skip branches included,
@@ -124,6 +125,12 @@ fn main() {
     // tracer *disabled* (the default), span calls must stay within 1%
     // of the bare kernel; the enabled row bounds the per-span cost when
     // an exporter is armed.
+    // The three rows compare the *same* kernel with and without span
+    // instrumentation, so the lane-order tier is pinned explicitly —
+    // otherwise the contract ratio would float with whatever
+    // DOPINF_SIMD happens to be set in the environment between runs.
+    let ambient_tier = simd::tier();
+    simd::set_tier(SimdTier::Scalar);
     let q2k = Matrix::randn(2048, nt, 777);
     let bare = bench
         .run_elems(&format!("syrk 2048x{nt} tracer bare"), 2048 * nt, || syrk(&q2k))
@@ -149,6 +156,7 @@ fn main() {
         .mean_s;
     // keep the enabled tracer's buffer from looking dead to the optimizer
     std::hint::black_box(t_on.take());
+    simd::set_tier(ambient_tier);
     println!(
         "  -> tracer overhead per syrk: off {:+.2}% (contract <= 1%), on {:+.2}%\n",
         (off / bare - 1.0) * 100.0,
@@ -214,6 +222,44 @@ fn main() {
     // ---- transpose (tiled; serve/batch's IC staging) -------------------
     let tall = Matrix::randn(65_536, r, 12);
     bench.run_elems("transpose 65536x10 (tiled)", 65_536 * r, || tall.transpose());
+
+    // ---- lane-order dispatch tiers (linalg::simd) ----------------------
+    // native (AVX2+FMA intrinsics) and scalar (fused mul_add emulation
+    // in the identical lane order) are bitwise identical — only the
+    // clock separates those rows. `off` is the legacy pre-re-baseline
+    // arithmetic, kept as the perf/accuracy baseline. Each row pins its
+    // tier explicitly (the knob is process-wide). On a machine without
+    // AVX2+FMA the `native` rows silently measure the scalar tier.
+    let engine = Engine::native();
+    let ops_s = RomOperators::stable_sample(r, 42);
+    let q0s = Matrix::randn(512, r, 13);
+    let mut syrk_native = f64::NAN;
+    let mut syrk_off = f64::NAN;
+    for tier in [SimdTier::Native, SimdTier::Scalar, SimdTier::Off] {
+        simd::set_tier(tier);
+        let name = tier.name();
+        let t = bench
+            .run_elems(&format!("gram syrk-simd {name} 8192x{nt} T=1"), 8192 * nt, || {
+                syrk_with_threads(&q8k, 1)
+            })
+            .mean_s;
+        match tier {
+            SimdTier::Native => syrk_native = t,
+            SimdTier::Off => syrk_off = t,
+            SimdTier::Scalar => {}
+        }
+        bench.run(&format!("project: tn-simd {name} 600x600 T=1"), || {
+            matmul_tn_with_threads(&tr, &d_proj, 1)
+        });
+        bench.run_elems(&format!("rollout-simd {name} B=512 r=10 x 400 steps"), 512 * 400, || {
+            rollout_batch_collect(&engine, &ops_s, &q0s, 400, 1)
+        });
+    }
+    simd::set_tier(ambient_tier);
+    println!(
+        "  -> syrk 8192x{nt} T=1 simd-native vs simd-off speedup: {:.2}x (target >= 3x)\n",
+        syrk_off / syrk_native
+    );
 
     // ---- collectives -----------------------------------------------------
     for p in [2usize, 4, 8] {

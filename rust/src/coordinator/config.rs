@@ -189,6 +189,15 @@ pub struct DOpInfConfig {
     /// clocks, the per-primitive comm table with the α–β
     /// predicted-vs-measured ratio, phase aggregates, and gauges.
     pub metrics: Option<PathBuf>,
+    /// SIMD dispatch tier for the hot kernels (`--simd` /
+    /// `DOPINF_SIMD`). `None` keeps the process default (env var or
+    /// runtime CPU detection). `Native` and `Scalar` are **bitwise
+    /// identical** — the canonical lane order is the reference
+    /// arithmetic, emulated exactly by the portable tier — so this knob
+    /// never changes results between them (property-tested in
+    /// `tests/integration_pipeline.rs`); `Off` restores the legacy
+    /// pre-lane-order arithmetic and differs in the last ulp.
+    pub simd: Option<crate::linalg::SimdTier>,
 }
 
 impl DOpInfConfig {
@@ -221,6 +230,7 @@ impl DOpInfConfig {
             allow_oversubscribe: false,
             trace: None,
             metrics: None,
+            simd: None,
         }
     }
 }
@@ -318,6 +328,9 @@ mod tests {
         assert!(cfg.threads_per_rank >= 1);
         assert!(!cfg.allow_oversubscribe);
         assert!(cfg.trace.is_none() && cfg.metrics.is_none());
+        // SIMD tier defaults to the process-wide knob (env/CPU), not a
+        // per-run override
+        assert!(cfg.simd.is_none());
         // chunk_rows defaults to None unless DOPINF_TEST_CHUNK_ROWS is
         // set (the chunked CI job) — either way it must be usable
         if let Some(n) = cfg.chunk_rows {

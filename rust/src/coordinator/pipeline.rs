@@ -175,6 +175,14 @@ pub fn run_distributed(
     // knob is process-wide; concurrent runs racing on it can only
     // affect wall time, never results (bitwise T-invariance).
     crate::linalg::par::set_threads(cfg.threads_per_rank.max(1));
+    // arm the lane-order dispatch tier when the run pins one. Same
+    // process-wide-knob race argument — with the sharper guarantee that
+    // a native↔scalar race cannot even affect results in principle
+    // (the tiers are bitwise identical); only `off` changes bits, and
+    // only for runs that explicitly request the legacy arithmetic.
+    if let Some(tier) = cfg.simd {
+        crate::linalg::simd::set_tier(tier);
+    }
     let timeout = cfg.comm_timeout.map(std::time::Duration::from_secs_f64);
 
     // span/telemetry recording is armed only when an exporter will

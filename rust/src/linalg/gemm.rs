@@ -1,15 +1,21 @@
-//! Blocked dense matrix products, thread-parallel over output rows.
+//! Blocked dense matrix products, thread-parallel over output rows,
+//! vectorized through the canonical lane-order kernels.
 //!
 //! The native analogue of the L1 Pallas kernels (`gram.py`,
 //! `matmul.py`): used as the runtime fallback when no PJRT artifact
 //! matches the requested shape, and by all substrates. Cache-blocked
 //! with an `i-k-j` inner ordering so the innermost loop is a contiguous
-//! axpy over the output row — the standard scalar-GEMM layout that
-//! autovectorizes well.
+//! axpy over the output row — which is exactly the shape the
+//! [`super::simd`] kernels vectorize: lanes are independent output
+//! columns, the k-accumulation per element is never reassociated, and
+//! each update is a single-rounding FMA ([`super::simd::axpy`] /
+//! [`super::simd::axpy4`]). The AVX2+FMA tier and the portable scalar
+//! emulation are bitwise identical; `DOPINF_SIMD=off` restores the
+//! legacy two-rounding arithmetic.
 //!
-//! Every kernel here routes through the deterministic compute plane
-//! ([`super::par`]): output rows are partitioned into contiguous bands,
-//! one band per worker. Each output element's floating-point
+//! Every kernel here also routes through the deterministic compute
+//! plane ([`super::par`]): output rows are partitioned into contiguous
+//! bands, one band per worker. Each output element's floating-point
 //! accumulation order depends only on the shared (k) dimension, so the
 //! results are **bitwise identical for every thread count** — asserted
 //! by the parallel-vs-serial property tests below. The `*_with_threads`
@@ -20,6 +26,7 @@ use std::ops::Range;
 
 use super::matrix::Matrix;
 use super::par;
+use super::simd;
 
 /// Cache block edge (elements). 64×64 f64 tiles = 32 KiB per operand
 /// pair, comfortably inside L1+L2 on any target this runs on.
@@ -63,18 +70,19 @@ fn matmul_band(c_band: &mut [f64], ad: &[f64], bd: &[f64], rows: Range<usize>, k
                     let crow = &mut c_band[li * n + j0..li * n + j1];
                     for kk in k0..k1 {
                         let aik = arow[kk];
-                        // Kept (unlike the syrk/tn kernels): matmul's A
-                        // operand is genuinely zero-heavy on real paths —
-                        // zero-padded tail chunks in the engine fallbacks
-                        // and sparse operator blocks — where skipping a
-                        // whole row-axpy pays for the compare.
+                        // Kept in every SIMD tier (unlike the syrk/tn
+                        // kernels): matmul's A operand is genuinely
+                        // zero-heavy on real paths — zero-padded tail
+                        // chunks in the engine fallbacks, the frozen
+                        // member columns of the batched rollout — where
+                        // skipping a whole row-axpy pays for the
+                        // compare, and the skip is semantic: 0·NaN from
+                        // a frozen rollout column must never reach C.
                         if aik == 0.0 {
                             continue;
                         }
                         let brow = &bd[kk * n + j0..kk * n + j1];
-                        for (cv, bv) in crow.iter_mut().zip(brow) {
-                            *cv += aik * bv;
-                        }
+                        simd::axpy(crow, aik, brow);
                     }
                 }
             }
@@ -93,7 +101,8 @@ fn matmul_band(c_band: &mut [f64], ad: &[f64], bd: &[f64], rows: Range<usize>, k
 /// product. Dense inner loop: post-centering inputs (snapshot rows,
 /// eigenvector rows) are provably dense, so the old `aik == 0.0` skip
 /// only cost a branch per output row — measured in `benches/hotpath.rs`
-/// against a zero-skip reference.
+/// against a zero-skip reference. The row update is the lane-order
+/// [`simd::axpy`] (FMA per output element, tier-dispatched).
 pub(crate) fn tn_step1_band(
     c_band: &mut [f64],
     n: usize,
@@ -104,10 +113,7 @@ pub(crate) fn tn_step1_band(
     for i in band.clone() {
         let aik = arow[i];
         let off = (i - band.start) * n;
-        let crow = &mut c_band[off..off + n];
-        for (cv, bv) in crow.iter_mut().zip(brow) {
-            *cv += aik * bv;
-        }
+        simd::axpy(&mut c_band[off..off + n], aik, brow);
     }
 }
 
@@ -195,7 +201,9 @@ pub fn syrk_with_threads(a: &Matrix, threads: usize) -> Matrix {
 /// centered snapshot rows are provably dense, so the previous
 /// "all four coefficients zero" skip never fired on the hot path and
 /// only cost four compares per output row (reference comparison kept in
-/// `benches/hotpath.rs`).
+/// `benches/hotpath.rs`). The row update is the lane-order
+/// [`simd::axpy4`]: four chained FMAs per output element,
+/// tier-dispatched, with the chain order fixed by the re-baseline.
 pub(crate) fn syrk_step4_band(
     dd_band: &mut [f64],
     n: usize,
@@ -206,13 +214,9 @@ pub(crate) fn syrk_step4_band(
     r3: &[f64],
 ) {
     for i in band.clone() {
-        let (a0, a1, a2, a3) = (r0[i], r1[i], r2[i], r3[i]);
+        let a = [r0[i], r1[i], r2[i], r3[i]];
         let off = (i - band.start) * n;
-        let drow = &mut dd_band[off + i..off + n];
-        for (j, dv) in drow.iter_mut().enumerate() {
-            let jj = i + j;
-            *dv += a0 * r0[jj] + a1 * r1[jj] + a2 * r2[jj] + a3 * r3[jj];
-        }
+        simd::axpy4(&mut dd_band[off + i..off + n], a, &r0[i..], &r1[i..], &r2[i..], &r3[i..]);
     }
 }
 
@@ -224,15 +228,13 @@ pub(crate) fn syrk_step1(dd: &mut [f64], n: usize, row: &[f64]) {
 }
 
 /// Band-restricted [`syrk_step1`] (dense inner loop, same rationale as
-/// [`syrk_step4_band`]).
+/// [`syrk_step4_band`]; lane-order [`simd::axpy`] over the triangular
+/// row tail).
 pub(crate) fn syrk_step1_band(dd_band: &mut [f64], n: usize, band: Range<usize>, row: &[f64]) {
     for i in band.clone() {
         let ai = row[i];
         let off = (i - band.start) * n;
-        let drow = &mut dd_band[off..off + n];
-        for j in i..n {
-            drow[j] += ai * row[j];
-        }
+        simd::axpy(&mut dd_band[off + i..off + n], ai, &row[i..]);
     }
 }
 
@@ -414,6 +416,67 @@ mod tests {
                     if syrk_with_threads(a, t).data() != sy1.data() {
                         return Err(format!("syrk differs at T={t}"));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_zero_coefficient_skips_nonfinite_columns() {
+        // the zero-skip is part of matmul's contract in every SIMD
+        // tier: frozen rollout members rely on 0·NaN never reaching C
+        let a = Matrix::from_rows(&[&[0.0, 1.0]]);
+        let b = Matrix::from_rows(&[&[f64::NAN, f64::NAN], &[1.0, 2.0]]);
+        for t in [crate::linalg::SimdTier::Native, crate::linalg::SimdTier::Scalar] {
+            simd::set_tier(t);
+            let c = matmul(&a, &b);
+            assert_eq!(c.data(), &[1.0, 2.0], "tier {}", t.name());
+        }
+        simd::set_tier(crate::linalg::SimdTier::Native);
+    }
+
+    #[test]
+    fn simd_tiers_bitwise_equal_across_kernels() {
+        // the lane-order contract at full-kernel level: the AVX2+FMA
+        // tier and the portable scalar emulation produce identical bits
+        // for matmul, matmul_tn, and syrk — under the banded compute
+        // plane, across block-edge shapes. (Native↔Scalar toggles are
+        // results-neutral, so the global knob is safe to flip here even
+        // with concurrent tests.)
+        if !simd::native_available() {
+            return;
+        }
+        par::set_par_min_elems(0);
+        quick(
+            |rng: &mut Rng| {
+                let m = 1 + rng.below(70) as usize;
+                let k = 1 + rng.below(70) as usize;
+                let n = 1 + rng.below(70) as usize;
+                (
+                    Matrix::randn(m, k, rng.next_u64()),
+                    Matrix::randn(k, n, rng.next_u64()),
+                    Matrix::randn(k, m, rng.next_u64()),
+                )
+            },
+            |(a, b, at)| {
+                simd::set_tier(crate::linalg::SimdTier::Native);
+                let mm_n = matmul_with_threads(a, b, 2);
+                let tn_n = matmul_tn_with_threads(at, b, 2);
+                let sy_n = syrk_with_threads(a, 2);
+                simd::set_tier(crate::linalg::SimdTier::Scalar);
+                let mm_ok = matmul_with_threads(a, b, 2).data() == mm_n.data();
+                let tn_ok = matmul_tn_with_threads(at, b, 2).data() == tn_n.data();
+                let sy_ok = syrk_with_threads(a, 2).data() == sy_n.data();
+                simd::set_tier(crate::linalg::SimdTier::Native);
+                if !mm_ok {
+                    return Err("matmul scalar tier differs from native".to_string());
+                }
+                if !tn_ok {
+                    return Err("matmul_tn scalar tier differs from native".to_string());
+                }
+                if !sy_ok {
+                    return Err("syrk scalar tier differs from native".to_string());
                 }
                 Ok(())
             },

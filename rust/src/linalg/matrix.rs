@@ -1,22 +1,49 @@
-//! Row-major dense f64 matrix.
+//! Row-major dense f64 matrix with 32-byte-aligned storage.
 
 use crate::util::rng::Rng;
 
+/// One 32-byte SIMD lane group. The backing store of [`Matrix`] is a
+/// `Vec<Lane4>`, which makes the allocator hand out 32-byte-aligned
+/// blocks on every platform — no custom allocator, no fallback paths.
+/// `#[repr(C)]` guarantees the four f64s are laid out contiguously with
+/// no padding (32 bytes total), so the whole buffer reinterprets as a
+/// flat `[f64]`.
+#[derive(Clone, Copy)]
+#[repr(C, align(32))]
+struct Lane4(
+    // only ever read through the raw-slice views in data()/data_mut(),
+    // which the dead-code lint cannot see
+    #[allow(dead_code)] [f64; 4],
+);
+
 /// Dense row-major matrix of f64.
 ///
-/// Storage is a flat `Vec<f64>` with `data[i * cols + j]` addressing; all
-/// hot loops in [`crate::linalg::gemm`] operate on the flat slice.
-#[derive(Clone, Debug, PartialEq)]
+/// Storage is flat with `data[i * cols + j]` addressing; all hot loops
+/// in [`crate::linalg::gemm`] operate on the flat slice via
+/// [`Matrix::data`] / [`Matrix::data_mut`]. The base pointer is 32-byte
+/// aligned (see [`Lane4`]) so the [`crate::linalg::simd`] vector
+/// kernels start from an aligned row 0; correctness never depends on it
+/// — the kernels use unaligned loads because interior row offsets
+/// (e.g. `syrk`'s triangular `i*n + i`) land anywhere — it only keeps
+/// the aligned-access fast path available to the hardware.
+///
+/// `len` is the logical element count `rows * cols`; the lane-granular
+/// buffer may carry up to three trailing padding elements, which are
+/// zero-initialized, never exposed, and excluded from `PartialEq`.
+#[derive(Clone)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    len: usize,
+    data: Vec<Lane4>,
 }
 
 impl Matrix {
     /// Zero-filled matrix.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        let len = rows * cols;
+        let data = vec![Lane4([0.0; 4]); len.div_ceil(4)];
+        Matrix { rows, cols, len, data }
     }
 
     /// Identity.
@@ -28,28 +55,30 @@ impl Matrix {
         m
     }
 
-    /// From a flat row-major vec.
+    /// From a flat row-major vec (copied into aligned storage).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols, "data length != rows*cols");
-        Matrix { rows, cols, data }
+        let mut m = Matrix::zeros(rows, cols);
+        m.data_mut().copy_from_slice(&data);
+        m
     }
 
     /// From nested rows (test convenience).
     pub fn from_rows(rows: &[&[f64]]) -> Matrix {
         let r = rows.len();
         let c = rows.first().map_or(0, |row| row.len());
-        let mut data = Vec::with_capacity(r * c);
-        for row in rows {
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
             assert_eq!(row.len(), c, "ragged rows");
-            data.extend_from_slice(row);
+            m.row_mut(i).copy_from_slice(row);
         }
-        Matrix { rows: r, cols: c, data }
+        m
     }
 
     /// Standard-normal random matrix (deterministic per seed).
     pub fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
-        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
     }
 
     pub fn rows(&self) -> usize {
@@ -58,25 +87,41 @@ impl Matrix {
     pub fn cols(&self) -> usize {
         self.cols
     }
+
+    /// The logical elements as a flat row-major slice (padding lanes
+    /// excluded). The base pointer is 32-byte aligned.
     pub fn data(&self) -> &[f64] {
-        &self.data
+        // SAFETY: Lane4 is #[repr(C)] over [f64; 4], so the Vec's
+        // allocation is a contiguous run of 4 * data.len() properly
+        // initialized f64s; len <= 4 * data.len() by construction, and
+        // f64's alignment (8) is satisfied by Lane4's (32). An empty
+        // Vec's dangling pointer is non-null and aligned, valid for a
+        // zero-length slice.
+        unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const f64, self.len) }
     }
+
+    /// Mutable flat view of the logical elements (padding excluded, so
+    /// the zeroed tail lanes can never be overwritten).
     pub fn data_mut(&mut self) -> &mut [f64] {
-        &mut self.data
+        // SAFETY: as in `data`, with unique access through &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f64, self.len) }
     }
+
+    /// The elements copied out as a plain `Vec<f64>`.
     pub fn into_vec(self) -> Vec<f64> {
-        self.data
+        self.data().to_vec()
     }
 
     /// Borrow row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data()[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.data_mut()[i * cols..(i + 1) * cols]
     }
 
     /// Copy column `j` out.
@@ -94,7 +139,7 @@ impl Matrix {
         const TILE: usize = 32;
         let (r, c) = (self.rows, self.cols);
         let mut t = Matrix::zeros(c, r);
-        let sd = &self.data;
+        let sd = self.data();
         let td = t.data_mut();
         for i0 in (0..r).step_by(TILE) {
             let i1 = (i0 + TILE).min(r);
@@ -115,11 +160,10 @@ impl Matrix {
     /// Rows `[start, end)` as a new matrix.
     pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
         assert!(start <= end && end <= self.rows);
-        Matrix {
-            rows: end - start,
-            cols: self.cols,
-            data: self.data[start * self.cols..end * self.cols].to_vec(),
-        }
+        let mut out = Matrix::zeros(end - start, self.cols);
+        out.data_mut()
+            .copy_from_slice(&self.data()[start * self.cols..end * self.cols]);
+        out
     }
 
     /// Columns `[start, end)` as a new matrix.
@@ -135,9 +179,11 @@ impl Matrix {
     /// Stack vertically: `[self; other]`.
     pub fn vstack(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols);
-        let mut data = self.data.clone();
-        data.extend_from_slice(&other.data);
-        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+        let mut out = Matrix::zeros(self.rows + other.rows, self.cols);
+        let split = self.len;
+        out.data_mut()[..split].copy_from_slice(self.data());
+        out.data_mut()[split..].copy_from_slice(other.data());
+        out
     }
 
     /// Concatenate horizontally: `[self | other]`.
@@ -161,22 +207,22 @@ impl Matrix {
 
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data().iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
     /// Max |a_ij - b_ij|.
     pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        self.data
+        self.data()
             .iter()
-            .zip(&other.data)
+            .zip(other.data())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f64::max)
     }
 
     /// In-place scale.
     pub fn scale(&mut self, s: f64) {
-        for v in &mut self.data {
+        for v in self.data_mut() {
             *v *= s;
         }
     }
@@ -184,7 +230,8 @@ impl Matrix {
     /// Elementwise `self += other * s`.
     pub fn axpy(&mut self, s: f64, other: &Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        let od = other.data();
+        for (a, b) in self.data_mut().iter_mut().zip(od) {
             *a += s * b;
         }
     }
@@ -202,12 +249,30 @@ impl Matrix {
     }
 }
 
+/// Shape plus logical elements; the alignment-padding tail never takes
+/// part (it is unobservable through the public API).
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.data() == other.data()
+    }
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Matrix")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("data", &self.data())
+            .finish()
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline]
     fn index(&self, (i, j): (usize, usize)) -> &f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &self.data[i * self.cols + j]
+        &self.data()[i * self.cols + j]
     }
 }
 
@@ -215,7 +280,8 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &mut self.data[i * self.cols + j]
+        let cols = self.cols;
+        &mut self.data_mut()[i * cols + j]
     }
 }
 
@@ -229,6 +295,45 @@ mod tests {
         assert_eq!(m[(0, 1)], 2.0);
         assert_eq!(m.row(1), &[3.0, 4.0]);
         assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn storage_is_32_byte_aligned() {
+        // the SIMD satellite's contract: every constructor, every
+        // shape — including lane-remainder sizes and empty matrices —
+        // hands the kernels a 32-byte-aligned base pointer
+        for &(r, c) in &[(0usize, 0usize), (1, 1), (1, 3), (3, 5), (7, 7), (64, 600), (1, 4096)] {
+            let m = Matrix::zeros(r, c);
+            assert_eq!(m.data().as_ptr() as usize % 32, 0, "zeros {r}x{c}");
+            let m = Matrix::randn(r.max(1), c.max(1), 9);
+            assert_eq!(m.data().as_ptr() as usize % 32, 0, "randn {r}x{c}");
+            let m = m.transpose();
+            assert_eq!(m.data().as_ptr() as usize % 32, 0, "transpose {r}x{c}");
+        }
+        let m = Matrix::from_vec(1, 6, vec![0.5; 6]);
+        assert_eq!(m.data().as_ptr() as usize % 32, 0, "from_vec");
+        assert_eq!(m.clone().data().as_ptr() as usize % 32, 0, "clone");
+    }
+
+    #[test]
+    fn from_vec_into_vec_round_trips_lane_remainders() {
+        // lengths that are not multiples of the 4-element lane group:
+        // the padding must be invisible in every direction
+        for len in [1usize, 2, 3, 4, 5, 6, 7, 8, 9] {
+            let v: Vec<f64> = (0..len).map(|x| x as f64 + 0.25).collect();
+            let m = Matrix::from_vec(1, len, v.clone());
+            assert_eq!(m.data(), &v[..], "len={len}");
+            assert_eq!(m.clone(), m, "len={len}");
+            assert_eq!(m.into_vec(), v, "len={len}");
+        }
+    }
+
+    #[test]
+    fn equality_ignores_shape_only_when_equal() {
+        let a = Matrix::from_vec(2, 3, (0..6).map(f64::from).collect());
+        let b = Matrix::from_vec(3, 2, (0..6).map(f64::from).collect());
+        assert_ne!(a, b, "same elements, different shape");
+        assert_eq!(a, a.clone());
     }
 
     #[test]

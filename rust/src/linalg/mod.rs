@@ -1,17 +1,22 @@
 //! Dense numerical linear algebra substrate, with a deterministic
-//! thread-parallel compute plane.
+//! thread-parallel compute plane and one canonical lane order.
 //!
 //! The paper leans on "standard dense numerical linear algebra
 //! operations ... efficiently implemented in most scientific computing
 //! libraries" (numpy/BLAS/LAPACK). None are available in the vendored
 //! crate set, so this module implements them from scratch:
 //!
-//! * [`matrix::Matrix`] — row-major f64 dense matrix (tiled transpose)
+//! * [`matrix::Matrix`] — row-major f64 dense matrix (tiled transpose,
+//!   32-byte-aligned storage for the vector kernels)
 //! * [`gemm`] — blocked matrix-matrix products (`matmul`, `syrk` AᵀA)
+//! * [`simd`] — the canonical-lane-order kernel tier: one fixed-width
+//!   FMA arithmetic reference with AVX2+FMA vector kernels, a portable
+//!   scalar emulation that is **bitwise equal** to the vector path, and
+//!   a legacy escape hatch (`DOPINF_SIMD=off|scalar|native`, `--simd`)
 //! * [`par`] — the intra-rank worker pool behind every gemm kernel:
 //!   output rows are partitioned into contiguous bands, one per
 //!   worker, so each element's floating-point accumulation order is
-//!   the serial order and results are **bitwise identical at every
+//!   the reference order and results are **bitwise identical at every
 //!   thread count** (`DOPINF_THREADS` / `--threads` /
 //!   `DOpInfConfig.threads_per_rank`)
 //! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonal +
@@ -20,9 +25,18 @@
 //! * [`cholesky`] — SPD factorization/solve for the regularized OpInf
 //!   normal equations (paper Eq. 12)
 //!
-//! `eigh`/`cholesky` stay serial: they are the replicated O(n_t³)/O(r³)
-//! fractions whose inner recurrences are order-sensitive, and they are
-//! not on the data-sized hot path.
+//! The compute plane (banding, [`par`]) decides *who* runs each output
+//! row; the lane-order plane ([`simd`]) decides *which arithmetic* runs
+//! it. Both are bit-transparent by construction: banding never changes
+//! an element's operation sequence, and the vector/scalar tiers share
+//! one contraction order — so the repo-wide bitwise invariant
+//! (streamed ≡ monolithic ≡ any p ≡ any transport ≡ any T ≡ SIMD ≡
+//! scalar-emulation) reduces to properties checked kernel-by-kernel in
+//! this module.
+//!
+//! `eigh`/`cholesky` stay serial and scalar: they are the replicated
+//! O(n_t³)/O(r³) fractions whose inner recurrences are
+//! order-sensitive, and they are not on the data-sized hot path.
 //!
 //! Everything is validated against the JAX/numpy oracles through the
 //! PJRT artifacts in the integration tests.
@@ -32,6 +46,7 @@ pub mod eigh;
 pub mod gemm;
 pub mod matrix;
 pub mod par;
+pub mod simd;
 
 pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eigh::eigh;
@@ -44,3 +59,4 @@ pub use gemm::{
 // same kernels restricted to a compute-plane row band
 pub(crate) use gemm::{syrk_mirror, syrk_step1, syrk_step4_band, tn_step1_band};
 pub use matrix::Matrix;
+pub use simd::SimdTier;

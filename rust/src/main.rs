@@ -177,6 +177,7 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "oversubscribe", help: "allow procs x threads to exceed the visible cores (timesharing skews per-rank CPU timings)", default: None, is_flag: true },
         OptSpec { name: "trace", help: "write a Chrome trace-event timeline here: one track per rank with phase, data-plane, and per-collective spans (open in Perfetto / chrome://tracing; under `scaling` the last run wins)", default: None, is_flag: false },
         OptSpec { name: "metrics", help: "write a structured metrics summary here: per-category clock totals, the per-primitive comm table with the predicted-vs-measured cost-model ratio, phase aggregates, and gauges", default: None, is_flag: false },
+        OptSpec { name: "simd", help: "kernel dispatch tier: off | scalar | native (default: DOPINF_SIMD or native; native and scalar are bitwise identical, off restores the legacy lane order)", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -187,6 +188,16 @@ fn parse_transport(s: &str) -> Result<Transport> {
         "sockets" => Transport::Sockets,
         other => bail!("unknown transport {other:?} (threads|sockets)"),
     })
+}
+
+fn parse_simd(a: &Args) -> Result<Option<dopinf::linalg::SimdTier>> {
+    match a.get("simd") {
+        None => Ok(None),
+        Some(s) => match dopinf::linalg::simd::parse_tier(s) {
+            Some(t) => Ok(Some(t)),
+            None => bail!("unknown simd tier {s:?} (off|scalar|native)"),
+        },
+    }
 }
 
 fn parse_reg_grid(s: &str) -> Result<RegGrid> {
@@ -255,6 +266,9 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
     cfg.threads_per_rank = a.get_parse("threads", dopinf::linalg::par::env_threads())?;
     anyhow::ensure!(cfg.threads_per_rank >= 1, "--threads must be >= 1");
     cfg.allow_oversubscribe = a.flag("oversubscribe");
+    // lane-order plane: native and scalar are bitwise identical, so the
+    // choice never changes results — only `off` (legacy arithmetic) does
+    cfg.simd = parse_simd(&a)?;
     if let Some(v) = a.get("comm-timeout") {
         let secs: f64 = v.parse().context("--comm-timeout")?;
         anyhow::ensure!(secs > 0.0, "--comm-timeout must be positive");
@@ -505,6 +519,7 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
         OptSpec { name: "steps", help: "rollout horizon per member", default: Some("1200"), is_flag: false },
         OptSpec { name: "workers", help: "rank workers to shard members over", default: Some("4"), is_flag: false },
         OptSpec { name: "threads", help: "compute-plane worker threads per rank worker (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
+        OptSpec { name: "simd", help: "kernel dispatch tier: off | scalar | native (default: DOPINF_SIMD or native; native and scalar are bitwise identical, off restores the legacy lane order)", default: None, is_flag: false },
         OptSpec { name: "oversubscribe", help: "allow workers x threads to exceed the visible cores", default: None, is_flag: true },
         OptSpec { name: "seed", help: "ensemble RNG seed", default: Some("7"), is_flag: false },
         OptSpec { name: "results", help: "results output dir", default: Some("results"), is_flag: false },
@@ -541,6 +556,9 @@ fn cmd_ensemble(tokens: &[String]) -> Result<()> {
         bail!("{msg}; lower --workers/--threads or pass --oversubscribe to opt in");
     }
     dopinf::linalg::par::set_threads(threads);
+    if let Some(t) = parse_simd(&a)? {
+        dopinf::linalg::simd::set_tier(t);
+    }
     if !artifact.meta.is_empty() {
         let meta: Vec<String> =
             artifact.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
@@ -661,6 +679,7 @@ fn cmd_serve(tokens: &[String]) -> Result<()> {
         OptSpec { name: "port", help: "port to bind (0 picks an ephemeral port)", default: Some("8080"), is_flag: false },
         OptSpec { name: "workers", help: "evaluation worker threads behind the queue", default: Some("2"), is_flag: false },
         OptSpec { name: "threads", help: "compute-plane threads per evaluation (default: DOPINF_THREADS or 1); results are bitwise identical for every value", default: None, is_flag: false },
+        OptSpec { name: "simd", help: "kernel dispatch tier: off | scalar | native (default: DOPINF_SIMD or native; native and scalar are bitwise identical, off restores the legacy lane order)", default: None, is_flag: false },
         OptSpec { name: "oversubscribe", help: "allow workers x threads to exceed the visible cores", default: None, is_flag: true },
         OptSpec { name: "max-queue", help: "pending requests before 503 + Retry-After", default: Some("256"), is_flag: false },
         OptSpec { name: "request-timeout", help: "default per-request deadline in seconds (0 disables)", default: Some("30"), is_flag: false },
@@ -726,6 +745,9 @@ fn cmd_serve(tokens: &[String]) -> Result<()> {
         bail!("{msg}; lower --workers/--threads or pass --oversubscribe to opt in");
     }
     dopinf::linalg::par::set_threads(threads);
+    if let Some(t) = parse_simd(&a)? {
+        dopinf::linalg::simd::set_tier(t);
+    }
 
     let bind = a.get_or("bind", "127.0.0.1");
     let port: u16 = a.get_parse("port", 8080)?;

@@ -43,6 +43,15 @@
 //! whole distributed pipeline is bitwise invariant in (chunk size, p,
 //! transport) — property-tested in `tests/integration_pipeline.rs`.
 //!
+//! The shared kernels are the canonical lane-order kernels
+//! ([`crate::linalg::simd`]): replaying them means replaying the same
+//! FMA lane arithmetic, so the invariant extends to the SIMD dispatch
+//! tier too (native ≡ scalar-emulation, at any chunk size — including
+//! chunk boundaries that fall mid-lane-group, tested below). The ≤3-row
+//! carry buffer aligns the rank-4 *row groups* (the k-direction); the
+//! 4-wide *lanes* run along the output columns and never interact with
+//! chunking at all.
+//!
 //! Since the compute-plane change the per-chunk work also fans out over
 //! [`crate::linalg::par`] worker threads: the accumulators replay their
 //! kernels over contiguous **output-row bands** (rows of D, rows of C)
@@ -350,15 +359,13 @@ pub fn apply_chunk_transform_with_threads(
             let mean = means[li];
             let off = (i - band.start) * cols;
             let row = &mut band_rows[off..off + cols];
-            for v in row.iter_mut() {
-                *v -= mean;
-            }
-            if let Some(sc) = scales {
-                let s = super::transform::effective_scale(sc[li / rows_per_var]);
-                for v in row.iter_mut() {
-                    *v /= s;
-                }
-            }
+            // subtract-then-divide per element, exactly as the
+            // monolithic transform: no contraction exists, so the bits
+            // are identical in every SIMD tier (the kernel only
+            // vectorizes the walk)
+            let s = scales
+                .map(|sc| super::transform::effective_scale(sc[li / rows_per_var]));
+            crate::linalg::simd::center_scale(row, mean, s);
         }
     });
 }
@@ -458,6 +465,89 @@ mod tests {
     fn projection_rejects_mismatched_pairs() {
         let mut acc = ProjectionAccumulator::new(2, 3);
         acc.push(&Matrix::zeros(4, 2), &Matrix::zeros(3, 3));
+    }
+
+    #[test]
+    fn accumulators_bitwise_across_simd_tiers_and_seam_chunks() {
+        // the remainder-handling seam of the re-baseline: chunk
+        // boundaries falling mid-lane-group (chunk_rows ∈ {1,3,5,7},
+        // all misaligned with the rank-4 row groups) must replay the
+        // exact monolithic lane arithmetic in both lane-order tiers.
+        // Native↔Scalar toggles are results-neutral, so flipping the
+        // global knob here is safe alongside concurrent tests.
+        use crate::linalg::simd::{self, SimdTier};
+        for tier in [SimdTier::Native, SimdTier::Scalar] {
+            simd::set_tier(tier);
+            for rows in [5usize, 8, 13, 29] {
+                let nt = 9;
+                let q = Matrix::randn(rows, nt, 3000 + rows as u64);
+                let b = Matrix::randn(rows, 6, 4000 + rows as u64);
+                let want_d = syrk(&q);
+                let want_c = matmul_tn(&q, &b);
+                for chunk in [1usize, 3, 5, 7] {
+                    let mut gram = GramAccumulator::new(nt);
+                    let mut proj = ProjectionAccumulator::new(nt, 6);
+                    let mut start = 0;
+                    while start < rows {
+                        let end = (start + chunk).min(rows);
+                        gram.push(&q.slice_rows(start, end));
+                        proj.push(&q.slice_rows(start, end), &b.slice_rows(start, end));
+                        start = end;
+                    }
+                    assert_eq!(
+                        gram.finish().data(),
+                        want_d.data(),
+                        "gram tier={} rows={rows} chunk={chunk}",
+                        tier.name()
+                    );
+                    assert_eq!(
+                        proj.finish().data(),
+                        want_c.data(),
+                        "proj tier={} rows={rows} chunk={chunk}",
+                        tier.name()
+                    );
+                }
+            }
+        }
+        simd::set_tier(SimdTier::Native);
+    }
+
+    #[test]
+    fn transform_bitwise_across_simd_tiers() {
+        // center_scale carries no contraction, so the transformed chunk
+        // must be identical bits in both lane-order tiers (and chunked
+        // ≡ monolithic under each)
+        use crate::linalg::simd::{self, SimdTier};
+        let per = 11;
+        let q0 = Matrix::randn(2 * per, 8, 55);
+        let mut means = Vec::new();
+        let mut maxabs = vec![0.0f64; 2];
+        chunk_stats(&q0, 0, per, &mut means, &mut maxabs);
+        let mut reference: Option<Matrix> = None;
+        for tier in [SimdTier::Native, SimdTier::Scalar] {
+            simd::set_tier(tier);
+            for chunk in [1usize, 3, 5, 7, 2 * per] {
+                let mut rebuilt = Matrix::zeros(0, 8);
+                let mut start = 0;
+                while start < 2 * per {
+                    let end = (start + chunk).min(2 * per);
+                    let mut c = q0.slice_rows(start, end);
+                    apply_chunk_transform(&mut c, start, per, &means, Some(&maxabs));
+                    rebuilt = rebuilt.vstack(&c);
+                    start = end;
+                }
+                match &reference {
+                    None => reference = Some(rebuilt),
+                    Some(want) => assert_eq!(
+                        rebuilt.data(),
+                        want.data(),
+                        "tier={} chunk={chunk}",
+                        tier.name()
+                    ),
+                }
+            }
+        }
+        simd::set_tier(SimdTier::Native);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::operators::RomOperators;
 use super::quadratic::s_dim;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SimdTier};
 
 /// Roll the ROM forward `n_steps` from `q0`. Returns
 /// `(contains_nans, trajectory)` with trajectory shape `(n_steps, r)`
@@ -17,6 +17,14 @@ use crate::linalg::Matrix;
 /// stops at the first non-finite state (the tutorial keeps stepping and
 /// checks `np.any(isnan)` at the end; every caller rejects such a
 /// trajectory anyway, so the remaining rows are left at zero).
+///
+/// The step arithmetic follows the canonical lane order
+/// ([`crate::linalg::simd`]): each coordinate accumulates
+/// `Â q + Ĥ q² + ĉ` as one ascending zero-skipping FMA chain — exactly
+/// what the batched [`crate::serve::batch`] GEMM computes per member
+/// column with `O = [Â | Ĥ | ĉ]`, so solo and batched rollouts agree
+/// **bitwise** (including the NaN kind of the first diverged state).
+/// `DOPINF_SIMD=off` restores the legacy two-rounding accumulation.
 pub fn solve_discrete(ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, Matrix) {
     let r = ops.r;
     assert_eq!(q0.len(), r, "initial condition dimension");
@@ -28,6 +36,9 @@ pub fn solve_discrete(ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, 
     let mut contains_nans = false;
     let mut qsq = vec![0.0; s];
     let (ad, fd) = (ops.ahat.data(), ops.fhat.data());
+    // sampled once per rollout: the step kernel must not change tier
+    // mid-trajectory
+    let legacy = crate::linalg::simd::tier() == SimdTier::Off;
     for k in 0..n_steps - 1 {
         // split_at_mut to read row k while writing row k+1
         let (head, tail) = traj.data_mut().split_at_mut((k + 1) * r);
@@ -47,14 +58,40 @@ pub fn solve_discrete(ops: &RomOperators, q0: &[f64], n_steps: usize) -> (bool, 
         for i in 0..r {
             let arow = &ad[i * r..(i + 1) * r];
             let frow = &fd[i * s..(i + 1) * s];
-            let mut acc = ops.chat[i];
-            for (a, b) in arow.iter().zip(q.iter()) {
-                acc += a * b;
-            }
-            for (f, b) in frow.iter().zip(qsq.iter()) {
-                acc += f * b;
-            }
-            q_next[i] = acc;
+            q_next[i] = if legacy {
+                // pre-re-baseline arithmetic: ĉ first, two roundings
+                // per term, no zero skip
+                let mut acc = ops.chat[i];
+                for (a, b) in arow.iter().zip(q.iter()) {
+                    acc += a * b;
+                }
+                for (f, b) in frow.iter().zip(qsq.iter()) {
+                    acc += f * b;
+                }
+                acc
+            } else {
+                // canonical lane order: the per-element accumulation of
+                // the batched GEMM over O = [Â | Ĥ | ĉ] — ascending
+                // FMA chain from zero, skipping zero coefficients
+                // (matmul's semantic skip), ĉ last via the constant
+                // column (fma(c, 1, acc) ≡ acc + c bitwise)
+                let mut acc = 0.0f64;
+                for (a, b) in arow.iter().zip(q.iter()) {
+                    if *a != 0.0 {
+                        acc = a.mul_add(*b, acc);
+                    }
+                }
+                for (f, b) in frow.iter().zip(qsq.iter()) {
+                    if *f != 0.0 {
+                        acc = f.mul_add(*b, acc);
+                    }
+                }
+                let c = ops.chat[i];
+                if c != 0.0 {
+                    acc += c;
+                }
+                acc
+            };
         }
         if q_next.iter().any(|x| !x.is_finite()) {
             contains_nans = true;

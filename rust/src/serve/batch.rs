@@ -266,17 +266,16 @@ where
 fn build_augmented(xt: &mut Matrix, qt: &Matrix, r: usize, b: usize) {
     // rows 0..r: copy the states (contiguous row copies)
     xt.data_mut()[..r * b].copy_from_slice(qt.data());
-    // rows r..r+s: B-wide elementwise products q_a * q_b
+    // rows r..r+s: B-wide elementwise products q_a * q_b — the
+    // lane-order mul kernel (a single IEEE multiply per element, so
+    // the bits are identical in every SIMD tier)
     let (state_rows, quad_rows) = xt.data_mut().split_at_mut(r * b);
     let mut col = 0;
     for a in 0..r {
         let ra = &state_rows[a * b..(a + 1) * b];
         for bb in a..r {
             let rb = &state_rows[bb * b..(bb + 1) * b];
-            let dst = &mut quad_rows[col * b..(col + 1) * b];
-            for ((dv, &x), &y) in dst.iter_mut().zip(ra).zip(rb) {
-                *dv = x * y;
-            }
+            crate::linalg::simd::mul_into(&mut quad_rows[col * b..(col + 1) * b], ra, rb);
             col += 1;
         }
     }
@@ -571,6 +570,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn rollout_bitwise_across_simd_tiers() {
+        // the online-stage lane-order contract: the batched rollout —
+        // step GEMM, quadratic expansion, divergence freezing — must
+        // produce identical bits under the vector tier and the scalar
+        // emulation, serial and banded. (Native↔Scalar is
+        // results-neutral, so the global toggle is test-safe.)
+        use crate::linalg::simd::{self, SimdTier};
+        par::set_par_min_elems(0);
+        let engine = Engine::native();
+        let ops = stable_ops(6, 21);
+        let mut rng = Rng::new(2100);
+        let mut q0s = Matrix::zeros(9, 6);
+        for i in 0..9 {
+            for j in 0..6 {
+                q0s[(i, j)] = 0.3 + 0.05 * rng.normal();
+            }
+        }
+        simd::set_tier(SimdTier::Native);
+        let want = rollout_batch_collect(&engine, &ops, &q0s, 40, 1);
+        simd::set_tier(SimdTier::Scalar);
+        for t in [1usize, 3] {
+            let got = rollout_batch_collect(&engine, &ops, &q0s, 40, t);
+            assert_eq!(got.diverged_at, want.diverged_at, "T={t}");
+            for k in 0..40 {
+                assert_eq!(got.states_at(k), want.states_at(k), "T={t} k={k}");
+            }
+        }
+        simd::set_tier(SimdTier::Native);
     }
 
     #[test]

@@ -155,18 +155,25 @@ mod tests {
 
     #[test]
     fn two_fused_requests_match_solo_bitwise() {
+        // swept across both lane-order tiers: coalescing fuses requests
+        // as extra member *columns*, and lanes run along columns, so
+        // column independence is exactly what SIMD must not break
         let engine = Engine::native();
         let art = artifact(5);
         let specs = vec![
             EnsembleSpec { members: 3, sigma: 0.02, seed: 11, n_steps: 40 },
             EnsembleSpec { members: 5, sigma: 0.05, seed: 99, n_steps: 40 },
         ];
-        let fused = run_coalesced(&engine, &art, &specs).unwrap();
-        assert_eq!(fused.len(), 2);
-        for (spec, got) in specs.iter().zip(&fused) {
-            let solo = run_ensemble(&engine, &art, spec).unwrap();
-            assert_stats_bitwise(got, &solo);
+        for tier in [crate::linalg::SimdTier::Native, crate::linalg::SimdTier::Scalar] {
+            crate::linalg::simd::set_tier(tier);
+            let fused = run_coalesced(&engine, &art, &specs).unwrap();
+            assert_eq!(fused.len(), 2);
+            for (spec, got) in specs.iter().zip(&fused) {
+                let solo = run_ensemble(&engine, &art, spec).unwrap();
+                assert_stats_bitwise(got, &solo);
+            }
         }
+        crate::linalg::simd::set_tier(crate::linalg::SimdTier::Native);
     }
 
     #[test]
@@ -190,13 +197,17 @@ mod tests {
             EnsembleSpec { members: 4, sigma: 0.01, seed: 1, n_steps: 40 },
             EnsembleSpec { members: 32, sigma: 400.0, seed: 11, n_steps: 40 },
         ];
-        let fused = run_coalesced(&engine, &art, &specs).unwrap();
-        assert_eq!(fused[0].n_diverged(), 0);
-        assert!(fused[1].n_diverged() > 0);
-        for (spec, got) in specs.iter().zip(&fused) {
-            let solo = run_ensemble(&engine, &art, spec).unwrap();
-            assert_stats_bitwise(got, &solo);
+        for tier in [crate::linalg::SimdTier::Native, crate::linalg::SimdTier::Scalar] {
+            crate::linalg::simd::set_tier(tier);
+            let fused = run_coalesced(&engine, &art, &specs).unwrap();
+            assert_eq!(fused[0].n_diverged(), 0);
+            assert!(fused[1].n_diverged() > 0);
+            for (spec, got) in specs.iter().zip(&fused) {
+                let solo = run_ensemble(&engine, &art, spec).unwrap();
+                assert_stats_bitwise(got, &solo);
+            }
         }
+        crate::linalg::simd::set_tier(crate::linalg::SimdTier::Native);
     }
 
     #[test]

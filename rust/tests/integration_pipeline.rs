@@ -286,6 +286,60 @@ fn pipeline_bitwise_invariant_across_thread_counts() {
 }
 
 #[test]
+fn pipeline_bitwise_invariant_across_simd_tiers() {
+    // the lane-order contract end to end: the AVX2+FMA tier and its
+    // scalar mul_add emulation produce the identical DOpInfResult —
+    // every f64 of every artifact — across ranks, transports, and
+    // compute-plane widths. One reference (p=1, threads transport, T=1,
+    // native tier) pins the canonical bits; the sweep crosses
+    // p ∈ {1, 2, 4} × both transports × T ∈ {1, 4} × both lane-order
+    // tiers. (`off` is deliberately absent: it is the legacy arithmetic
+    // and produces different — equally valid — bits.) Threshold 0
+    // forces the banded kernels even at this test-sized problem.
+    dopinf::linalg::par::set_par_min_elems(0);
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let q = generate(&spec, 0);
+    let source = DataSource::InMemory(Arc::new(q));
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(4),
+        scaling: true,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 48,
+    };
+    let mut base = DOpInfConfig::new(1, ocfg.clone());
+    base.cost_model = CostModel::free();
+    base.probes = vec![(0, 3), (1, 60)];
+    base.threads_per_rank = 1;
+    base.allow_oversubscribe = true;
+    base.simd = Some(dopinf::linalg::SimdTier::Native);
+    let reference = run_distributed(&base, &source).unwrap();
+    for p in [1usize, 2, 4] {
+        for transport in [Transport::Threads, Transport::Sockets] {
+            for t in [1usize, 4] {
+                for tier in [dopinf::linalg::SimdTier::Native, dopinf::linalg::SimdTier::Scalar] {
+                    let mut cfg = DOpInfConfig::new(p, ocfg.clone());
+                    cfg.cost_model = CostModel::free();
+                    cfg.transport = transport;
+                    cfg.probes = vec![(0, 3), (1, 60)];
+                    cfg.threads_per_rank = t;
+                    cfg.allow_oversubscribe = true;
+                    cfg.simd = Some(tier);
+                    let res = run_distributed(&cfg, &source).unwrap();
+                    assert_bitwise_eq(
+                        &reference,
+                        &res,
+                        &format!("p={p} {transport:?} T={t} simd={tier:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn streamed_file_ingestion_bitwise_with_column_truncation() {
     // file-backed source with nt_train truncation: the streamed reads
     // must agree bitwise with themselves across chunk sizes, and the
