@@ -2,25 +2,31 @@
 //!
 //! `cargo bench --bench comm_collectives`
 //!
-//! Measures each [`Communicator`] primitive per backend (thread
-//! shared-board vs localhost sockets) at p ∈ {2, 4}, reporting bytes/s
-//! (the `elems` column is the payload volume crossing the transport
-//! per run) and writing `results/comm_collectives.json` via
-//! `util::benchkit` — the seed of the perf trajectory for future
-//! transports.
+//! Measures each [`Communicator`] primitive per backend — thread
+//! shared-board, localhost sockets, hierarchical two-level (`hier`,
+//! fixed at 2 node groups), and real OS worker processes — at
+//! p ∈ {2, 4}, reporting bytes/s (the `elems` column is the payload
+//! volume crossing the transport per run) and writing
+//! `results/comm_collectives.json` via `util::benchkit`.
 //!
-//! Each iteration spins the full rank group (thread spawn, and for the
-//! socket backend the TCP rendezvous) and then runs ROUNDS collective
-//! rounds, so fixed setup cost amortizes; the `barrier` row is the
-//! near-zero-payload baseline to subtract for per-byte costs.
+//! Each iteration spins the full rank group (thread spawn; TCP
+//! rendezvous for sockets; fork+exec+rendezvous for processes) and then
+//! runs ROUNDS collective rounds, so fixed setup cost amortizes; the
+//! `barrier` row is the near-zero-payload baseline to subtract for
+//! per-byte costs. The processes backend drives its rounds through the
+//! exercise job (`comm::proc::run_exercise` — the same code path the
+//! fault-injection suite exercises), which has no in-place-allreduce
+//! variant, so that backend reports 7 primitives instead of 8.
 
-use dopinf::comm::{self, Communicator, CostModel, Op};
+use dopinf::comm::{self, Communicator, CostModel, Op, TwoLevelModel};
+use dopinf::comm::proc::{run_exercise, ExerciseSpec};
 use dopinf::util::benchkit::Bench;
 
 #[derive(Clone, Copy, Debug)]
 enum Backend {
     Threads,
     Sockets,
+    Hier,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -97,7 +103,12 @@ fn main() {
     println!("== collective microbenches (bytes/s per primitive per backend) ==\n");
 
     let len = 1 << 14; // 16k f64 = 128 KiB per rank per round
-    for &(backend, bname) in &[(Backend::Threads, "threads"), (Backend::Sockets, "sockets")] {
+    let backends = [
+        (Backend::Threads, "threads"),
+        (Backend::Sockets, "sockets"),
+        (Backend::Hier, "hier"),
+    ];
+    for &(backend, bname) in &backends {
         for p in [2usize, 4] {
             for &(prim, pname) in &PRIMS {
                 let name = format!("{pname:<20} {bname} p={p}");
@@ -110,8 +121,57 @@ fn main() {
                         comm::socket::run(p, CostModel::free(), |ctx| collective_pass(ctx, prim, len))
                             .expect("socket rendezvous")
                     }
+                    // 2 node groups: the smallest shape that exercises
+                    // both the intra-node boards and the leader tree
+                    Backend::Hier => comm::hier::run(p, 2, TwoLevelModel::free(), |ctx| {
+                        collective_pass(ctx, prim, len)
+                    }),
                 });
             }
+        }
+    }
+
+    // the processes backend spawns real `dopinf worker` ranks; this
+    // bench executable has no `worker` subcommand, so point the
+    // launcher at the CLI binary Cargo built alongside us
+    std::env::set_var("DOPINF_WORKER_BIN", env!("CARGO_BIN_EXE_dopinf"));
+    let proc_prims: [(&str, Prim); 7] = [
+        ("allreduce", Prim::Allreduce),
+        ("broadcast", Prim::Broadcast),
+        ("allgather", Prim::Allgather),
+        ("gather", Prim::Gather),
+        ("reduce", Prim::Reduce),
+        ("reduce_scatter", Prim::ReduceScatter),
+        ("barrier", Prim::Barrier),
+    ];
+    for p in [2usize, 4] {
+        for &(pname, prim) in &proc_prims {
+            let name = format!("{pname:<20} processes p={p}");
+            let bytes = payload_bytes(prim, p, len).max(1);
+            let spec = ExerciseSpec {
+                prim: pname.to_string(),
+                len,
+                rounds: ROUNDS,
+                seed: 42,
+                pause_ms: 0,
+            };
+            bench.run_elems(&name, bytes, || {
+                let results = run_exercise(
+                    p,
+                    CostModel::free(),
+                    Some(std::time::Duration::from_secs(120)),
+                    &spec,
+                    |_| {},
+                )
+                .expect("process launch");
+                // consume every rank's digest so nothing is optimized away
+                results
+                    .into_iter()
+                    .map(|(outcome, _)| {
+                        outcome.expect("worker outcome").first().copied().unwrap_or(0.0)
+                    })
+                    .sum::<f64>()
+            });
         }
     }
 

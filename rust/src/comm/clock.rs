@@ -88,6 +88,21 @@ impl Clock {
     pub fn breakdown(&self) -> Vec<(Category, f64)> {
         ALL_CATEGORIES.iter().map(|&c| (c, self.in_category(c))).collect()
     }
+
+    /// Rebuild a clock from its raw parts. Used by the process
+    /// transport, whose worker ranks ship their final clocks back over
+    /// the wire at join; carrying the total explicitly (instead of
+    /// re-summing the split) makes the round-trip bitwise exact.
+    pub(crate) fn from_parts(total: f64, split: [f64; 5]) -> Clock {
+        Clock { total, split }
+    }
+
+    /// The raw `(total, per-category split)` parts (split in
+    /// [`ALL_CATEGORIES`] order), the wire counterpart of
+    /// [`Clock::from_parts`].
+    pub(crate) fn parts(&self) -> (f64, [f64; 5]) {
+        (self.total, self.split)
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +140,19 @@ mod tests {
         c.sync_to(0.5);
         let sum: f64 = c.breakdown().iter().map(|(_, s)| s).sum();
         assert!((sum - c.now()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parts_roundtrip_exactly() {
+        let mut c = Clock::new();
+        c.add(Category::Load, 0.125);
+        c.add(Category::Compute, 1.0 / 3.0);
+        c.sync_to(1.7);
+        let (total, split) = c.parts();
+        let rebuilt = Clock::from_parts(total, split);
+        assert_eq!(rebuilt.now().to_bits(), c.now().to_bits());
+        for cat in ALL_CATEGORIES {
+            assert_eq!(rebuilt.in_category(cat).to_bits(), c.in_category(cat).to_bits());
+        }
     }
 }

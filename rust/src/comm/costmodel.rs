@@ -133,6 +133,17 @@ impl CostModel {
         CostModel { alpha: 0.0, beta: 0.0, gamma: 0.0 }
     }
 
+    /// `(α, β, γ)` — the wire form the process transport ships so
+    /// worker-rank clocks advance identically to the parent's.
+    pub fn parts(&self) -> (f64, f64, f64) {
+        (self.alpha, self.beta, self.gamma)
+    }
+
+    /// Rebuild from [`CostModel::parts`].
+    pub fn from_parts(alpha: f64, beta: f64, gamma: f64) -> CostModel {
+        CostModel { alpha, beta, gamma }
+    }
+
     fn log2p(p: usize) -> f64 {
         if p <= 1 {
             0.0
@@ -186,6 +197,95 @@ impl CostModel {
     pub fn reduce_scatter(&self, p: usize, total_bytes: usize) -> f64 {
         Self::log2p(p) * self.alpha
             + Self::ring_fraction(p) * total_bytes as f64 * (self.beta + self.gamma)
+    }
+}
+
+/// Two-level α–β model for hierarchical collectives
+/// ([`crate::comm::hier`]): node-local hops priced by `intra`
+/// (shared-memory board), leader-tree hops priced by `inter` (network
+/// between nodes). Each primitive follows the standard two-level
+/// decomposition — local fold → leader exchange → local broadcast —
+/// so a group of `nodes × ranks_per_node` ranks pays `log2` terms in
+/// the *node-local* fan-in and the *node count* separately, instead of
+/// the flat model's `log2(p)` at a single (α, β). This is what makes
+/// the nodes × ranks-per-node projection in `fig4_scaling` say
+/// something the flat p-sweep cannot: at fixed p, fewer/fatter nodes
+/// trade cheap intra hops against the expensive inter tree.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoLevelModel {
+    /// node-local hop costs (thread board / shared memory)
+    pub intra: CostModel,
+    /// leader-tree hop costs (inter-node network)
+    pub inter: CostModel,
+}
+
+impl TwoLevelModel {
+    /// The paper-adjacent default: shared-memory α–β within a node,
+    /// cluster interconnect between nodes.
+    pub fn hpc() -> TwoLevelModel {
+        TwoLevelModel { intra: CostModel::shared_memory(), inter: CostModel::cluster() }
+    }
+
+    /// Zero-cost model (pure-correctness runs / tests).
+    pub fn free() -> TwoLevelModel {
+        TwoLevelModel { intra: CostModel::free(), inter: CostModel::free() }
+    }
+
+    /// Both levels at the same (α, β, γ) — the degenerate check that a
+    /// two-level decomposition over one node collapses to the flat
+    /// model's regime.
+    pub fn flat(m: CostModel) -> TwoLevelModel {
+        TwoLevelModel { intra: m, inter: m }
+    }
+
+    /// Allreduce of a `bytes` per-rank payload: local reduce → leader
+    /// allreduce → local broadcast.
+    pub fn allreduce(&self, nodes: usize, ranks_per_node: usize, bytes: usize) -> f64 {
+        self.intra.reduce(ranks_per_node, bytes)
+            + self.inter.allreduce(nodes, bytes)
+            + self.intra.broadcast(ranks_per_node, bytes)
+    }
+
+    /// Broadcast: leader tree → node-local fan-out.
+    pub fn broadcast(&self, nodes: usize, ranks_per_node: usize, bytes: usize) -> f64 {
+        self.inter.broadcast(nodes, bytes) + self.intra.broadcast(ranks_per_node, bytes)
+    }
+
+    /// Barrier: node-local arrive → leader barrier → node-local release.
+    pub fn barrier(&self, nodes: usize, ranks_per_node: usize) -> f64 {
+        2.0 * self.intra.barrier(ranks_per_node) + self.inter.barrier(nodes)
+    }
+
+    /// Rooted reduce: local reduce → leader reduce toward the root's
+    /// node.
+    pub fn reduce(&self, nodes: usize, ranks_per_node: usize, bytes: usize) -> f64 {
+        self.intra.reduce(ranks_per_node, bytes) + self.inter.reduce(nodes, bytes)
+    }
+
+    /// Rooted gather of `total_bytes` across all ranks: node-local
+    /// gather of each node's share, then the leader tree moves the
+    /// full volume to the root's node.
+    pub fn gather(&self, nodes: usize, ranks_per_node: usize, total_bytes: usize) -> f64 {
+        let per_node = total_bytes / nodes.max(1);
+        self.intra.gather(ranks_per_node, per_node) + self.inter.gather(nodes, total_bytes)
+    }
+
+    /// Allgather: node-local gather → leader allgather of the full
+    /// volume → node-local broadcast of the assembled vector.
+    pub fn allgather(&self, nodes: usize, ranks_per_node: usize, total_bytes: usize) -> f64 {
+        let per_node = total_bytes / nodes.max(1);
+        self.intra.gather(ranks_per_node, per_node)
+            + self.inter.allgather(nodes, total_bytes)
+            + self.intra.broadcast(ranks_per_node, total_bytes)
+    }
+
+    /// Reduce_scatter_block of a `total_bytes` vector: local reduce of
+    /// the full vector → leader reduce-scatter → node-local scatter of
+    /// the node's block.
+    pub fn reduce_scatter(&self, nodes: usize, ranks_per_node: usize, total_bytes: usize) -> f64 {
+        self.intra.reduce(ranks_per_node, total_bytes)
+            + self.inter.reduce_scatter(nodes, total_bytes)
+            + self.intra.broadcast(ranks_per_node, total_bytes / nodes.max(1))
     }
 }
 
@@ -270,6 +370,54 @@ mod tests {
         let one = CoreModel::single_core();
         assert_eq!(one.speedup(1), 1.0);
         assert_eq!(one.speedup(64), 1.0);
+    }
+
+    #[test]
+    fn two_level_shapes() {
+        let m = TwoLevelModel::hpc();
+        // single node, single rank: everything degenerates to zero
+        assert_eq!(m.allreduce(1, 1, 1 << 20), 0.0);
+        assert_eq!(m.barrier(1, 1), 0.0);
+        // one fat node never touches the inter network: allreduce cost
+        // is exactly the intra reduce + broadcast
+        let one_node = m.allreduce(1, 8, 4096);
+        assert_eq!(
+            one_node,
+            m.intra.reduce(8, 4096) + m.intra.broadcast(8, 4096),
+            "nodes = 1 must not pay inter terms"
+        );
+        // at fixed p = 16, spreading over more nodes costs more (the
+        // inter α–β dominates the saved intra hops)
+        assert!(m.allreduce(4, 4, 1 << 20) > m.allreduce(2, 8, 1 << 20));
+        assert!(m.allreduce(2, 8, 1 << 20) > m.allreduce(1, 16, 1 << 20));
+        // the hierarchy beats the flat model run entirely at inter
+        // costs (that is its point)
+        let flat_inter = CostModel::cluster().allreduce(16, 1 << 20);
+        assert!(m.allreduce(2, 8, 1 << 20) < flat_inter);
+        // costs grow with volume on every primitive
+        for (a, b) in [
+            (m.broadcast(4, 4, 1 << 20), m.broadcast(4, 4, 1 << 10)),
+            (m.gather(4, 4, 1 << 20), m.gather(4, 4, 1 << 10)),
+            (m.allgather(4, 4, 1 << 20), m.allgather(4, 4, 1 << 10)),
+            (m.reduce_scatter(4, 4, 1 << 20), m.reduce_scatter(4, 4, 1 << 10)),
+            (m.reduce(4, 4, 1 << 20), m.reduce(4, 4, 1 << 10)),
+        ] {
+            assert!(a > b);
+        }
+        // free() is identically zero, flat() uses one regime twice
+        assert_eq!(TwoLevelModel::free().allreduce(8, 8, 1 << 20), 0.0);
+        let f = TwoLevelModel::flat(CostModel::shared_memory());
+        assert_eq!(f.intra.alpha, f.inter.alpha);
+    }
+
+    #[test]
+    fn cost_model_parts_roundtrip() {
+        let m = CostModel::cluster();
+        let (a, b, g) = m.parts();
+        let r = CostModel::from_parts(a, b, g);
+        assert_eq!(r.alpha.to_bits(), m.alpha.to_bits());
+        assert_eq!(r.beta.to_bits(), m.beta.to_bits());
+        assert_eq!(r.gamma.to_bits(), m.gamma.to_bits());
     }
 
     #[test]

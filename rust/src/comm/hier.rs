@@ -1,0 +1,1283 @@
+//! Hierarchical two-level transport: thread boards within a node,
+//! a socket tree between per-node leader ranks.
+//!
+//! [`run_with_clocks_timeout`] spawns `p` rank threads grouped into
+//! `nodes` contiguous node groups (node sizes differ by at most one).
+//! Each node owns a poisonable rendezvous [`Board`] plus contribution /
+//! reply slots; the first rank of each node is the node *leader* and
+//! additionally holds TCP streams to its neighbours in a binary tree
+//! over the node ids (`parent(n) = (n-1)/2`, children `2n+1`/`2n+2`,
+//! node 0 — and therefore global rank 0 — at the root). The tree
+//! replaces the flat socket transport's rank-0 star: no leader ever
+//! talks to more than three peers, so the leader exchange scales with
+//! `log2(nodes)` hops instead of a single hub fanning out to `p - 1`
+//! streams.
+//!
+//! Every collective is the same three-phase decomposition:
+//!
+//! 1. **local fold** — all node ranks post `(header, payload, clock)`
+//!    to their node's slots and pass the first board rendezvous;
+//! 2. **leader exchange** — each leader bundles its node's *raw,
+//!    rank-tagged* contributions with its children's bundles and ships
+//!    them up the tree; the root assembles every rank's part **in
+//!    global rank order** and computes all replies with the shared
+//!    [`hub_replies`] kernel, then per-rank replies travel back down;
+//! 3. **local broadcast** — leaders drop the replies into the node
+//!    reply slots and a second rendezvous releases every rank.
+//!
+//! Bitwise identity with the flat transports is by construction, not by
+//! accident: partial per-node reductions would re-associate the
+//! floating-point fold, so the tree forwards *unreduced* parts and the
+//! root folds exactly once, in rank order, through the same
+//! [`fold`](super::communicator::fold) kernels every other transport
+//! uses. The integration property sweeps assert this across
+//! p × nodes shapes.
+//!
+//! Failure semantics:
+//!
+//! * [`Communicator::abort`] installs a **group-wide poison**
+//!   (first abort wins) and poisons every node board, so ranks parked
+//!   at either rendezvous wake immediately; leaders parked on tree
+//!   sockets poll the poison between short read slices and also
+//!   receive best-effort abort frames, so the whole group observes
+//!   [`CommError::RemoteAbort`] promptly rather than in rank order.
+//! * A leader failure (timeout, mismatched collective, wire error)
+//!   aborts the group the same way — one rank's failure is every
+//!   rank's typed error, never a hang.
+//! * An optional deadline bounds both the board waits and every tree
+//!   read/write; a peer that never arrives surfaces as
+//!   [`CommError::Timeout`] on the waiting ranks.
+//! * A panic in rank code poisons the group before propagating with
+//!   its original payload (same contract as the thread transport).
+//!
+//! Virtual time: the root computes `max_entry` over every rank's clock
+//! and ships it with the replies; all ranks then advance to
+//! `max_entry + cost`, where `cost` comes from the [`TwoLevelModel`]
+//! (intra α–β for the node hops, inter α–β for the leader tree). Each
+//! rank closes an `"intra"`-tagged tracer comm record per collective;
+//! leaders additionally record an `"inter"` hop when more than one
+//! node exists, so traces show where the wire time went.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::clock::{Category, Clock};
+use super::communicator::{Communicator, Op};
+use super::costmodel::TwoLevelModel;
+use super::error::{CommError, CommResult};
+use super::socket::{
+    hub_replies, io_error, op_to_byte, push_comm_error, read_comm_error, OpCode, FRAME_ABORT,
+    FRAME_COLLECTIVE,
+};
+use super::thread::Board;
+use crate::obs::{CommStart, Tracer};
+use crate::util::codec;
+use crate::util::panic::panic_text;
+
+/// Poll slice for leader tree sockets: reads and writes block at most
+/// this long before re-checking the group poison and the deadline.
+const POLL_SLICE: Duration = Duration::from_millis(25);
+
+/// What one rank entered a collective with; every contribution carries
+/// it so mismatched calls surface as [`CommError::ContractViolation`]
+/// instead of corrupt folds.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct Header {
+    code: OpCode,
+    op: u8,
+    root: usize,
+}
+
+/// One rank's posting for the collective in flight.
+struct Entry {
+    header: Header,
+    provided: bool,
+    time: f64,
+    payload: Vec<f64>,
+}
+
+/// A rank-tagged raw contribution travelling up the leader tree.
+struct Contribution {
+    rank: usize,
+    provided: bool,
+    time: f64,
+    payload: Vec<f64>,
+}
+
+/// A rank's reply parts travelling back down the leader tree.
+struct ReplyEntry {
+    rank: usize,
+    parts: Vec<Vec<f64>>,
+}
+
+struct NodeShared {
+    /// global rank of this node's leader (local index 0)
+    first: usize,
+    slots: Vec<Mutex<Option<Entry>>>,
+    replies: Vec<Mutex<Option<(f64, Vec<Vec<f64>>)>>>,
+    board: Board,
+}
+
+struct GroupShared {
+    size: usize,
+    nodes: Vec<NodeShared>,
+    /// group-wide first-wins abort; leaders poll it between socket
+    /// slices, boards are poisoned alongside it
+    poison: Mutex<Option<CommError>>,
+    model: TwoLevelModel,
+    timeout: Option<Duration>,
+    /// ranks-per-node figure used by the cost model (the largest node)
+    rpn: usize,
+}
+
+fn group_poisoned(shared: &GroupShared) -> Option<CommError> {
+    shared.poison.lock().unwrap().clone()
+}
+
+/// Install `err` as the group abort (first wins), poison every node
+/// board, and return the canonical error.
+fn group_abort(shared: &GroupShared, err: CommError) -> CommError {
+    let canonical = shared.poison.lock().unwrap().get_or_insert(err).clone();
+    for node in &shared.nodes {
+        node.board.poison(canonical.clone());
+    }
+    canonical
+}
+
+struct ChildLink {
+    node: usize,
+    stream: TcpStream,
+    /// global ranks in this child's subtree, recorded during the up
+    /// phase of the collective in flight (the reply routing table)
+    ranks: Vec<usize>,
+}
+
+/// The tree streams a node leader holds (`parent` is `None` at the
+/// root).
+struct LeaderLink {
+    parent: Option<TcpStream>,
+    children: Vec<ChildLink>,
+}
+
+// ------------------------------------------------------- polled stream I/O
+
+/// `Read`/`Write` over a tree stream that wakes every [`POLL_SLICE`]
+/// to check the group poison and the collective deadline, so a leader
+/// parked on the wire observes an abort promptly instead of at its
+/// full timeout. The stream's OS read/write timeouts are set to the
+/// poll slice at creation ([`loopback_pair`]).
+struct Polled<'a> {
+    stream: &'a TcpStream,
+    shared: &'a GroupShared,
+    rank: usize,
+    deadline: Option<Instant>,
+    waiting_for: &'static str,
+    /// typed failure behind the last `io::Error` this wrapper returned
+    failure: Option<CommError>,
+}
+
+impl<'a> Polled<'a> {
+    fn new(
+        stream: &'a TcpStream,
+        shared: &'a GroupShared,
+        rank: usize,
+        deadline: Option<Instant>,
+        waiting_for: &'static str,
+    ) -> Polled<'a> {
+        Polled { stream, shared, rank, deadline, waiting_for, failure: None }
+    }
+
+    /// Between slices: a group poison or an elapsed deadline turns
+    /// into an `io::Error` whose typed cause is stashed in `failure`.
+    fn interrupted(&mut self) -> Option<io::Error> {
+        if let Some(e) = group_poisoned(self.shared) {
+            self.failure = Some(e);
+            return Some(io::ErrorKind::ConnectionAborted.into());
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                self.failure = Some(CommError::Timeout {
+                    rank: self.rank,
+                    seconds: self.shared.timeout.map_or(0.0, |t| t.as_secs_f64()),
+                    waiting_for: self.waiting_for.to_string(),
+                });
+                return Some(io::ErrorKind::TimedOut.into());
+            }
+        }
+        None
+    }
+
+    /// Map an `io::Error` out of this wrapper back to its typed cause.
+    fn fail(mut self, e: io::Error) -> CommError {
+        self.failure
+            .take()
+            .unwrap_or_else(|| io_error(self.rank, self.shared.timeout, self.waiting_for, e))
+    }
+}
+
+impl Read for Polled<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            match (&mut &*self.stream).read(buf) {
+                Ok(n) => return Ok(n),
+                Err(e) if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+                {
+                    if let Some(err) = self.interrupted() {
+                        return Err(err);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Write for Polled<'_> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        loop {
+            match (&mut &*self.stream).write(buf) {
+                Ok(n) => return Ok(n),
+                Err(e) if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+                {
+                    if let Some(err) = self.interrupted() {
+                        return Err(err);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        (&mut &*self.stream).flush()
+    }
+}
+
+// ----------------------------------------------------------- tree framing
+
+/// A bundle frame travelling toward the root:
+/// `FRAME_COLLECTIVE | code u8 | op u8 | root u64 | n u64 |
+/// n × (rank u64 | provided bool | time f64 | payload f64s)` —
+/// or `FRAME_ABORT | comm_error`.
+enum UpFrame {
+    Abort(CommError),
+    Bundle { header: Header, contributions: Vec<Contribution> },
+}
+
+fn write_up_frame(
+    w: &mut impl Write,
+    header: Header,
+    contributions: &[Contribution],
+) -> io::Result<()> {
+    let mut buf = Vec::new();
+    buf.push(FRAME_COLLECTIVE);
+    buf.push(header.code.to_byte());
+    buf.push(header.op);
+    codec::write_u64(&mut buf, header.root as u64)?;
+    codec::write_u64(&mut buf, contributions.len() as u64)?;
+    for c in contributions {
+        codec::write_usize(&mut buf, c.rank)?;
+        codec::write_bool(&mut buf, c.provided)?;
+        codec::write_f64(&mut buf, c.time)?;
+        codec::write_f64s(&mut buf, &c.payload)?;
+    }
+    w.write_all(&buf)
+}
+
+fn read_up_frame(r: &mut impl Read) -> io::Result<UpFrame> {
+    match codec::read_u8(r)? {
+        FRAME_ABORT => Ok(UpFrame::Abort(read_comm_error(r)?)),
+        FRAME_COLLECTIVE => {
+            let code = OpCode::from_byte(codec::read_u8(r)?)?;
+            let op = codec::read_u8(r)?;
+            let root = codec::read_usize(r)?;
+            let n = codec::read_usize(r)?;
+            let mut contributions = Vec::with_capacity(n);
+            for _ in 0..n {
+                contributions.push(Contribution {
+                    rank: codec::read_usize(r)?,
+                    provided: codec::read_bool(r)?,
+                    time: codec::read_f64(r)?,
+                    payload: codec::read_f64s(r)?,
+                });
+            }
+            Ok(UpFrame::Bundle { header: Header { code, op, root }, contributions })
+        }
+        other => Err(codec::corrupt(format!("unknown bundle frame {other}"))),
+    }
+}
+
+/// A reply frame travelling away from the root:
+/// `FRAME_COLLECTIVE | max_entry f64 | n u64 |
+/// n × (rank u64 | n_parts u64 | n_parts × f64s)` —
+/// or `FRAME_ABORT | comm_error`.
+enum DownFrame {
+    Abort(CommError),
+    Replies { max_entry: f64, entries: Vec<ReplyEntry> },
+}
+
+fn write_down_frame(
+    w: &mut impl Write,
+    max_entry: f64,
+    entries: &[ReplyEntry],
+) -> io::Result<()> {
+    let mut buf = Vec::new();
+    buf.push(FRAME_COLLECTIVE);
+    codec::write_f64(&mut buf, max_entry)?;
+    codec::write_u64(&mut buf, entries.len() as u64)?;
+    for e in entries {
+        codec::write_usize(&mut buf, e.rank)?;
+        codec::write_u64(&mut buf, e.parts.len() as u64)?;
+        for part in &e.parts {
+            codec::write_f64s(&mut buf, part)?;
+        }
+    }
+    w.write_all(&buf)
+}
+
+fn read_down_frame(r: &mut impl Read) -> io::Result<DownFrame> {
+    match codec::read_u8(r)? {
+        FRAME_ABORT => Ok(DownFrame::Abort(read_comm_error(r)?)),
+        FRAME_COLLECTIVE => {
+            let max_entry = codec::read_f64(r)?;
+            let n = codec::read_usize(r)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = codec::read_usize(r)?;
+                let n_parts = codec::read_usize(r)?;
+                let mut parts = Vec::with_capacity(n_parts);
+                for _ in 0..n_parts {
+                    parts.push(codec::read_f64s(r)?);
+                }
+                entries.push(ReplyEntry { rank, parts });
+            }
+            Ok(DownFrame::Replies { max_entry, entries })
+        }
+        other => Err(codec::corrupt(format!("unknown reply frame {other}"))),
+    }
+}
+
+fn mismatch(leader: usize, mine: Header, peer: usize, theirs: Header) -> CommError {
+    CommError::ContractViolation {
+        rank: leader,
+        message: format!(
+            "collective mismatch — rank {leader} entered {:?}(root {}), \
+             rank {peer} entered {:?}(root {})",
+            mine.code, mine.root, theirs.code, theirs.root
+        ),
+    }
+}
+
+fn transport_err(rank: usize, message: String) -> CommError {
+    CommError::Transport { rank, message }
+}
+
+// ------------------------------------------------------------- the handle
+
+/// Telemetry identity of one collective: the full two-level `cost`
+/// charges the clock and prices the `"intra"` record; `inter_cost` is
+/// the leader-tree share, priced on the leader's `"inter"` record.
+struct Probe {
+    primitive: &'static str,
+    bytes: usize,
+    cost: f64,
+    inter_cost: f64,
+}
+
+/// Per-rank handle of the hierarchical transport.
+pub struct HierCtx<'a> {
+    rank: usize,
+    size: usize,
+    node: usize,
+    local: usize,
+    shared: &'a GroupShared,
+    /// tree streams — `Some` on node leaders only
+    link: Option<LeaderLink>,
+    clock: Clock,
+    /// first failure observed on this handle; subsequent collectives
+    /// fail fast with it instead of touching desynced boards/streams
+    failed: Option<CommError>,
+    tracer: Tracer,
+}
+
+impl HierCtx<'_> {
+    /// The node index this rank lives on (leaders are local index 0).
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Whether this rank is its node's leader (holds tree streams).
+    pub fn is_leader(&self) -> bool {
+        self.local == 0
+    }
+
+    fn exchange(
+        &mut self,
+        probe: Probe,
+        header: Header,
+        provided: bool,
+        payload: Vec<f64>,
+    ) -> CommResult<(f64, Vec<Vec<f64>>)> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        let cs = self.tracer.comm_start();
+        let mut wait_s = 0.0;
+        let result = self.exchange_inner(cs, &probe, header, provided, payload, &mut wait_s);
+        self.tracer.comm_record_link(
+            cs,
+            probe.primitive,
+            "intra",
+            probe.bytes,
+            probe.cost,
+            wait_s,
+        );
+        if let Err(e) = &result {
+            self.failed = Some(e.clone());
+        }
+        result
+    }
+
+    /// The three-phase collective body. `wait_s` receives the time this
+    /// rank spent parked: to the first rendezvous for leaders (waiting
+    /// for node peers — the tree exchange is accounted separately by
+    /// the `"inter"` record), to the release rendezvous for everyone
+    /// else.
+    fn exchange_inner(
+        &mut self,
+        cs: CommStart,
+        probe: &Probe,
+        header: Header,
+        provided: bool,
+        payload: Vec<f64>,
+        wait_s: &mut f64,
+    ) -> CommResult<(f64, Vec<Vec<f64>>)> {
+        let shared = self.shared;
+        let nshared = &shared.nodes[self.node];
+        *nshared.slots[self.local].lock().unwrap() =
+            Some(Entry { header, provided, time: self.clock.now(), payload });
+
+        if let Err(e) = nshared.board.wait(self.rank, shared.timeout) {
+            *wait_s = self.tracer.elapsed_since(cs);
+            return Err(e);
+        }
+        if self.local == 0 {
+            *wait_s = self.tracer.elapsed_since(cs);
+            if let Err(e) = self.leader_exchange(probe, header) {
+                let canonical = group_abort(shared, e);
+                self.best_effort_abort(&canonical);
+                return Err(canonical);
+            }
+        }
+        let released = nshared.board.wait(self.rank, shared.timeout);
+        if self.local != 0 {
+            *wait_s = self.tracer.elapsed_since(cs);
+        }
+        released?;
+        match nshared.replies[self.local].lock().unwrap().take() {
+            Some(reply) => Ok(reply),
+            None => Err(transport_err(
+                self.rank,
+                "reply slot empty after a completed exchange".to_string(),
+            )),
+        }
+    }
+
+    /// Leader phase: gather the node's raw contributions, exchange
+    /// bundles through the tree (the root folds once, in global rank
+    /// order), route replies back down, and fill the node reply slots.
+    fn leader_exchange(&mut self, probe: &Probe, header: Header) -> CommResult<()> {
+        let shared = self.shared;
+        let nshared = &shared.nodes[self.node];
+        let deadline = shared.timeout.map(|t| Instant::now() + t);
+        let inter_cs = self.tracer.comm_start();
+
+        // node-local gather, rank-tagged
+        let mut contributions: Vec<Contribution> = Vec::new();
+        for (local, slot) in nshared.slots.iter().enumerate() {
+            let peer = nshared.first + local;
+            let entry = slot.lock().unwrap().take().ok_or_else(|| {
+                transport_err(self.rank, format!("rank {peer} posted no contribution"))
+            })?;
+            if entry.header != header {
+                return Err(mismatch(self.rank, header, peer, entry.header));
+            }
+            contributions.push(Contribution {
+                rank: peer,
+                provided: entry.provided,
+                time: entry.time,
+                payload: entry.payload,
+            });
+        }
+
+        // up phase: fold in each child subtree's bundle
+        let link = self.link.as_mut().expect("leader rank holds the tree link");
+        for child in link.children.iter_mut() {
+            let mut pr = Polled::new(
+                &child.stream,
+                shared,
+                self.rank,
+                deadline,
+                "bundle from a child node leader",
+            );
+            let frame = match read_up_frame(&mut pr) {
+                Ok(f) => f,
+                Err(e) => return Err(pr.fail(e)),
+            };
+            match frame {
+                UpFrame::Abort(e) => return Err(e),
+                UpFrame::Bundle { header: theirs, contributions: subtree } => {
+                    if theirs != header {
+                        let child_leader = shared.nodes[child.node].first;
+                        return Err(mismatch(self.rank, header, child_leader, theirs));
+                    }
+                    child.ranks.clear();
+                    for c in subtree {
+                        if c.rank >= shared.size {
+                            return Err(transport_err(
+                                self.rank,
+                                format!("bundle names rank {} of {}", c.rank, shared.size),
+                            ));
+                        }
+                        child.ranks.push(c.rank);
+                        contributions.push(c);
+                    }
+                }
+            }
+        }
+
+        let (max_entry, mut reply_of) = match link.parent.as_ref() {
+            None => root_replies(shared, self.rank, header, contributions)?,
+            Some(parent) => {
+                let mut pw = Polled::new(
+                    parent,
+                    shared,
+                    self.rank,
+                    deadline,
+                    "sending the bundle to the parent node leader",
+                );
+                if let Err(e) = write_up_frame(&mut pw, header, &contributions) {
+                    return Err(pw.fail(e));
+                }
+                let mut pr = Polled::new(
+                    parent,
+                    shared,
+                    self.rank,
+                    deadline,
+                    "replies from the parent node leader",
+                );
+                let down = match read_down_frame(&mut pr) {
+                    Ok(d) => d,
+                    Err(e) => return Err(pr.fail(e)),
+                };
+                match down {
+                    DownFrame::Abort(e) => return Err(e),
+                    DownFrame::Replies { max_entry, entries } => {
+                        let mut reply_of: Vec<Option<Vec<Vec<f64>>>> = Vec::new();
+                        reply_of.resize_with(shared.size, || None);
+                        for e in entries {
+                            if e.rank >= shared.size {
+                                return Err(transport_err(
+                                    self.rank,
+                                    format!("reply names rank {} of {}", e.rank, shared.size),
+                                ));
+                            }
+                            reply_of[e.rank] = Some(e.parts);
+                        }
+                        (max_entry, reply_of)
+                    }
+                }
+            }
+        };
+
+        // down phase: children first (deeper nodes wake sooner), then
+        // this node's reply slots
+        for child in &link.children {
+            let mut entries = Vec::with_capacity(child.ranks.len());
+            for &r in &child.ranks {
+                let parts = reply_of[r].take().ok_or_else(|| {
+                    transport_err(self.rank, format!("no reply for subtree rank {r}"))
+                })?;
+                entries.push(ReplyEntry { rank: r, parts });
+            }
+            let mut pw = Polled::new(
+                &child.stream,
+                shared,
+                self.rank,
+                deadline,
+                "forwarding replies to a child node leader",
+            );
+            if let Err(e) = write_down_frame(&mut pw, max_entry, &entries) {
+                return Err(pw.fail(e));
+            }
+        }
+        for (local, slot) in nshared.replies.iter().enumerate() {
+            let r = nshared.first + local;
+            let parts = reply_of[r]
+                .take()
+                .ok_or_else(|| transport_err(self.rank, format!("no reply for rank {r}")))?;
+            *slot.lock().unwrap() = Some((max_entry, parts));
+        }
+
+        if shared.nodes.len() > 1 {
+            let inter_wait = self.tracer.elapsed_since(inter_cs);
+            self.tracer.comm_record_link(
+                inter_cs,
+                probe.primitive,
+                "inter",
+                probe.bytes,
+                probe.inter_cost,
+                inter_wait,
+            );
+        }
+        Ok(())
+    }
+
+    /// Wake leaders parked on tree sockets with explicit abort frames
+    /// (the poison poll would get them within a slice anyway; frames
+    /// make the fan-out immediate and are the carrier a cross-machine
+    /// deployment of this tree would rely on). Writes are fire-and-
+    /// forget under the streams' short OS write timeout.
+    fn best_effort_abort(&mut self, err: &CommError) {
+        let Some(link) = self.link.as_mut() else { return };
+        let mut buf = vec![FRAME_ABORT];
+        push_comm_error(&mut buf, err);
+        for child in &link.children {
+            let _ = (&mut &child.stream).write_all(&buf);
+        }
+        if let Some(parent) = link.parent.as_ref() {
+            let _ = (&mut &*parent).write_all(&buf);
+        }
+    }
+}
+
+/// Root assembly: order every rank's contribution by global rank, fold
+/// once through [`hub_replies`], and index the replies by rank.
+#[allow(clippy::type_complexity)]
+fn root_replies(
+    shared: &GroupShared,
+    leader: usize,
+    header: Header,
+    contributions: Vec<Contribution>,
+) -> CommResult<(f64, Vec<Option<Vec<Vec<f64>>>>)> {
+    if contributions.len() != shared.size {
+        return Err(transport_err(
+            leader,
+            format!(
+                "assembled {} contributions for {} ranks",
+                contributions.len(),
+                shared.size
+            ),
+        ));
+    }
+    let max_entry = contributions.iter().map(|c| c.time).fold(0.0f64, f64::max);
+    let mut provided = vec![false; shared.size];
+    let mut parts: Vec<Vec<f64>> = Vec::new();
+    parts.resize_with(shared.size, Vec::new);
+    let mut seen = vec![false; shared.size];
+    for c in contributions {
+        if seen[c.rank] {
+            return Err(transport_err(leader, format!("rank {} contributed twice", c.rank)));
+        }
+        seen[c.rank] = true;
+        provided[c.rank] = c.provided;
+        parts[c.rank] = c.payload;
+    }
+    let replies = hub_replies(header.code, header.op, header.root, &provided, &parts, shared.size)?;
+    Ok((max_entry, replies.into_iter().map(Some).collect()))
+}
+
+impl Communicator for HierCtx<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    fn charge(&mut self, category: Category, seconds: f64) {
+        self.clock.add(category, seconds);
+    }
+
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
+    fn allreduce_inplace(&mut self, data: &mut [f64], op: Op) -> CommResult<()> {
+        let bytes = data.len() * 8;
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.allreduce(nodes, rpn, bytes);
+        let inter_cost = self.shared.model.inter.allreduce(nodes, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "allreduce", bytes, cost, inter_cost },
+            Header { code: OpCode::Allreduce, op: op_to_byte(op), root: 0 },
+            true,
+            data.to_vec(),
+        )?;
+        let reduced = parts.pop().ok_or_else(|| {
+            transport_err(self.rank, "empty allreduce reply".to_string())
+        })?;
+        debug_assert_eq!(reduced.len(), data.len(), "root validated equal lengths");
+        data.copy_from_slice(&reduced);
+        self.clock.sync_to(max_entry + cost);
+        Ok(())
+    }
+
+    fn broadcast(&mut self, root: usize, data: Option<Vec<f64>>) -> CommResult<Vec<f64>> {
+        self.check_root("broadcast", root)?;
+        let provided = data.is_some();
+        let data_bytes = data.as_ref().map_or(0, |d| d.len() * 8);
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.broadcast(nodes, rpn, data_bytes);
+        let inter_cost = self.shared.model.inter.broadcast(nodes, data_bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "broadcast", bytes: data_bytes, cost, inter_cost },
+            Header { code: OpCode::Broadcast, op: 0, root },
+            provided,
+            data.unwrap_or_default(),
+        )?;
+        let out = parts.pop().ok_or_else(|| {
+            transport_err(self.rank, "empty broadcast reply".to_string())
+        })?;
+        self.clock.sync_to(max_entry + cost);
+        Ok(out)
+    }
+
+    fn allgather(&mut self, data: &[f64]) -> CommResult<Vec<Vec<f64>>> {
+        let bytes = data.len() * 8 * self.size;
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.allgather(nodes, rpn, bytes);
+        let inter_cost = self.shared.model.inter.allgather(nodes, bytes);
+        let (max_entry, parts) = self.exchange(
+            Probe { primitive: "allgather", bytes, cost, inter_cost },
+            Header { code: OpCode::Allgather, op: 0, root: 0 },
+            true,
+            data.to_vec(),
+        )?;
+        self.clock.sync_to(max_entry + cost);
+        Ok(parts)
+    }
+
+    fn gather(&mut self, root: usize, data: &[f64]) -> CommResult<Option<Vec<Vec<f64>>>> {
+        self.check_root("gather", root)?;
+        let bytes = data.len() * 8 * self.size;
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.gather(nodes, rpn, bytes);
+        let inter_cost = self.shared.model.inter.gather(nodes, bytes);
+        let (max_entry, parts) = self.exchange(
+            Probe { primitive: "gather", bytes, cost, inter_cost },
+            Header { code: OpCode::Gather, op: 0, root },
+            true,
+            data.to_vec(),
+        )?;
+        self.clock.sync_to(max_entry + cost);
+        Ok((self.rank == root).then_some(parts))
+    }
+
+    fn reduce(&mut self, root: usize, data: &[f64], op: Op) -> CommResult<Option<Vec<f64>>> {
+        self.check_root("reduce", root)?;
+        let bytes = data.len() * 8;
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.reduce(nodes, rpn, bytes);
+        let inter_cost = self.shared.model.inter.reduce(nodes, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "reduce", bytes, cost, inter_cost },
+            Header { code: OpCode::Reduce, op: op_to_byte(op), root },
+            true,
+            data.to_vec(),
+        )?;
+        self.clock.sync_to(max_entry + cost);
+        if self.rank == root {
+            match parts.pop() {
+                Some(reduced) => Ok(Some(reduced)),
+                None => Err(transport_err(
+                    self.rank,
+                    "empty reduce reply on root".to_string(),
+                )),
+            }
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn reduce_scatter_block(&mut self, data: &[f64], op: Op) -> CommResult<Vec<f64>> {
+        // divisibility is validated at the root over every rank's
+        // length, after the exchange (same rationale as the flat
+        // transports: a local pre-check would park compliant peers)
+        let bytes = data.len() * 8;
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.reduce_scatter(nodes, rpn, bytes);
+        let inter_cost = self.shared.model.inter.reduce_scatter(nodes, bytes);
+        let (max_entry, mut parts) = self.exchange(
+            Probe { primitive: "reduce_scatter", bytes, cost, inter_cost },
+            Header { code: OpCode::ReduceScatter, op: op_to_byte(op), root: 0 },
+            true,
+            data.to_vec(),
+        )?;
+        self.clock.sync_to(max_entry + cost);
+        parts.pop().ok_or_else(|| {
+            transport_err(self.rank, "empty reduce_scatter_block reply".to_string())
+        })
+    }
+
+    fn barrier(&mut self) -> CommResult<()> {
+        let (nodes, rpn) = (self.shared.nodes.len(), self.shared.rpn);
+        let cost = self.shared.model.barrier(nodes, rpn);
+        let inter_cost = self.shared.model.inter.barrier(nodes);
+        let (max_entry, _) = self.exchange(
+            Probe { primitive: "barrier", bytes: 0, cost, inter_cost },
+            Header { code: OpCode::Barrier, op: 0, root: 0 },
+            true,
+            Vec::new(),
+        )?;
+        self.clock.sync_to(max_entry + cost);
+        Ok(())
+    }
+
+    fn abort(&mut self, message: &str) -> CommError {
+        let canonical = group_abort(
+            self.shared,
+            CommError::RemoteAbort { origin_rank: self.rank, message: message.to_string() },
+        );
+        self.best_effort_abort(&canonical);
+        canonical
+    }
+}
+
+// -------------------------------------------------------------- the runner
+
+/// Contiguous node layout: `(first_rank, size)` per node, sizes
+/// differing by at most one (the first `p % nodes` nodes take the
+/// extra rank).
+fn node_layout(p: usize, nodes: usize) -> Vec<(usize, usize)> {
+    let base = p / nodes;
+    let extra = p % nodes;
+    let mut layout = Vec::with_capacity(nodes);
+    let mut first = 0;
+    for i in 0..nodes {
+        let size = base + usize::from(i < extra);
+        layout.push((first, size));
+        first += size;
+    }
+    layout
+}
+
+fn locate(layout: &[(usize, usize)], rank: usize) -> (usize, usize) {
+    for (node, &(first, size)) in layout.iter().enumerate() {
+        if rank >= first && rank < first + size {
+            return (node, rank - first);
+        }
+    }
+    unreachable!("rank {rank} outside the node layout");
+}
+
+/// A connected loopback stream pair for one tree edge, with nodelay on
+/// and OS read/write timeouts set to the poll slice (see [`Polled`]).
+fn loopback_pair() -> (TcpStream, TcpStream) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind a loopback leader-tree edge");
+    let addr = listener.local_addr().expect("leader-tree listener address");
+    let near = TcpStream::connect(addr).expect("connect a leader-tree edge");
+    let (far, _) = listener.accept().expect("accept a leader-tree edge");
+    for s in [&near, &far] {
+        s.set_nodelay(true).ok();
+        s.set_read_timeout(Some(POLL_SLICE)).expect("leader-tree read timeout");
+        s.set_write_timeout(Some(POLL_SLICE)).expect("leader-tree write timeout");
+    }
+    (far, near)
+}
+
+/// Spawn `p` rank threads over `nodes` node groups and return the
+/// per-rank results in rank order. Panics in rank code abort the group
+/// (siblings wake with [`CommError::RemoteAbort`]) and then propagate
+/// with their original payload.
+pub fn run<R: Send>(
+    p: usize,
+    nodes: usize,
+    model: TwoLevelModel,
+    f: impl Fn(&mut HierCtx) -> R + Send + Sync,
+) -> Vec<R> {
+    run_with_clocks_timeout(p, nodes, model, None, f).into_iter().map(|(out, _)| out).collect()
+}
+
+/// Like [`run`], but also returns each rank's final [`Clock`], with an
+/// optional deadline bounding every board wait and tree read/write.
+pub fn run_with_clocks_timeout<R: Send>(
+    p: usize,
+    nodes: usize,
+    model: TwoLevelModel,
+    timeout: Option<Duration>,
+    f: impl Fn(&mut HierCtx) -> R + Send + Sync,
+) -> Vec<(R, Clock)> {
+    assert!(p >= 1, "need at least one rank");
+    assert!((1..=p).contains(&nodes), "need 1 ≤ nodes ≤ ranks, got {nodes} nodes for {p} ranks");
+    let layout = node_layout(p, nodes);
+    let shared = GroupShared {
+        size: p,
+        nodes: layout
+            .iter()
+            .map(|&(first, size)| NodeShared {
+                first,
+                slots: (0..size).map(|_| Mutex::new(None)).collect(),
+                replies: (0..size).map(|_| Mutex::new(None)).collect(),
+                board: Board::new(size),
+            })
+            .collect(),
+        poison: Mutex::new(None),
+        model,
+        timeout,
+        rpn: p.div_ceil(nodes),
+    };
+    // the leader tree: one loopback stream pair per edge, created
+    // before any thread spawns so a rank function can never observe a
+    // half-built topology
+    let mut links: Vec<Option<LeaderLink>> =
+        (0..nodes).map(|_| Some(LeaderLink { parent: None, children: Vec::new() })).collect();
+    for child_node in 1..nodes {
+        let parent_node = (child_node - 1) / 2;
+        let (parent_end, child_end) = loopback_pair();
+        links[parent_node].as_mut().unwrap().children.push(ChildLink {
+            node: child_node,
+            stream: parent_end,
+            ranks: Vec::new(),
+        });
+        links[child_node].as_mut().unwrap().parent = Some(child_end);
+    }
+    let shared = &shared;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let f = &f;
+                let (node, local) = locate(&layout, rank);
+                let link = if local == 0 { links[node].take() } else { None };
+                scope.spawn(move || {
+                    let mut ctx = HierCtx {
+                        rank,
+                        size: p,
+                        node,
+                        local,
+                        shared,
+                        link,
+                        clock: Clock::new(),
+                        failed: None,
+                        tracer: Tracer::new(rank),
+                    };
+                    // a genuine panic must poison the group before
+                    // propagating: siblings parked at a collective
+                    // would otherwise never be joinable
+                    let out =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx)));
+                    match out {
+                        Ok(v) => (v, ctx.clock),
+                        Err(payload) => {
+                            ctx.abort(&format!(
+                                "rank {rank} panicked: {}",
+                                panic_text(&payload)
+                            ));
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::costmodel::CostModel;
+    use super::super::thread;
+    use super::*;
+
+    /// A digest touching every primitive with rank-skewed magnitudes;
+    /// any re-association of the folds changes the bits.
+    fn digest<C: Communicator>(ctx: &mut C) -> Vec<f64> {
+        let rank = ctx.rank() as f64;
+        let size = ctx.size();
+        let mut out = Vec::new();
+        let mine: Vec<f64> =
+            (0..6).map(|j| 1e12 * rank - j as f64 * 0.37 + 1.0 / (rank + 2.0)).collect();
+        out.extend(ctx.allreduce(&mine, Op::Sum).unwrap());
+        out.extend(ctx.allreduce(&mine, Op::Max).unwrap());
+        let payload = (ctx.rank() == size - 1).then(|| vec![2.5, -1e9, 0.125]);
+        out.extend(ctx.broadcast(size - 1, payload).unwrap());
+        for part in ctx.allgather(&[rank * 3.25, -rank]).unwrap() {
+            out.extend(part);
+        }
+        if let Some(parts) = ctx.gather(0, &vec![rank + 0.5; ctx.rank() + 1]).unwrap() {
+            for part in parts {
+                out.extend(part);
+            }
+        }
+        if let Some(reduced) = ctx.reduce(size - 1, &mine, Op::Min).unwrap() {
+            out.extend(reduced);
+        }
+        let long: Vec<f64> = (0..2 * size).map(|j| (j as f64 + 0.25) * (rank + 1.0)).collect();
+        out.extend(ctx.reduce_scatter_block(&long, Op::Sum).unwrap());
+        ctx.barrier().unwrap();
+        out
+    }
+
+    #[test]
+    fn matches_the_thread_backend_bitwise_across_node_shapes() {
+        for (p, nodes) in [(1, 1), (2, 2), (4, 1), (4, 2), (4, 3), (4, 4), (5, 2), (8, 4)] {
+            let flat = thread::run(p, CostModel::free(), |ctx| digest(ctx));
+            let hier = run(p, nodes, TwoLevelModel::free(), |ctx| digest(ctx));
+            for rank in 0..p {
+                assert_eq!(
+                    flat[rank].len(),
+                    hier[rank].len(),
+                    "digest length, p={p} nodes={nodes} rank={rank}"
+                );
+                for (i, (a, b)) in flat[rank].iter().zip(&hier[rank]).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "p={p} nodes={nodes} rank={rank} element {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn abort_wakes_every_rank_promptly() {
+        // rank 3 (node 1) aborts immediately; rank 1 dawdles before its
+        // collective. Ranks 0 and 2 — the leaders, one parked at a
+        // board, one on the tree — must wake with the typed abort long
+        // before any timeout, not in rank order behind the dawdler.
+        let results = run_with_clocks_timeout(
+            4,
+            2,
+            TwoLevelModel::free(),
+            Some(Duration::from_secs(10)),
+            |ctx| {
+                let begin = Instant::now();
+                let out = if ctx.rank() == 3 {
+                    Err(ctx.abort("injected failure on the last rank"))
+                } else {
+                    if ctx.rank() == 1 {
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                    ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+                };
+                (out, begin.elapsed())
+            },
+        );
+        for (rank, ((out, elapsed), _)) in results.iter().enumerate() {
+            match out {
+                Err(CommError::RemoteAbort { origin_rank: 3, message }) => {
+                    assert!(message.contains("injected failure"), "{message}");
+                }
+                other => panic!("rank {rank}: expected RemoteAbort from 3, got {other:?}"),
+            }
+            if rank == 0 || rank == 2 {
+                assert!(
+                    *elapsed < Duration::from_millis(1000),
+                    "rank {rank} woke after {elapsed:?}, not promptly"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_contract_violation_fails_the_whole_group() {
+        let results = run(4, 2, TwoLevelModel::free(), |ctx| {
+            let payload = (ctx.rank() == 2 || ctx.rank() == 0).then(|| vec![1.0]);
+            ctx.broadcast(0, payload)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("non-root rank 2 passed Some"), "{message}");
+                }
+                other => panic!("rank {rank}: expected ContractViolation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_collectives_are_a_typed_error_not_a_corrupt_fold() {
+        let results = run(4, 2, TwoLevelModel::free(), |ctx| {
+            if ctx.rank() == 3 {
+                ctx.barrier().map(|()| Vec::new())
+            } else {
+                ctx.allreduce(&[1.0], Op::Sum)
+            }
+        });
+        for (rank, r) in results.iter().enumerate() {
+            match r {
+                Err(CommError::ContractViolation { message, .. }) => {
+                    assert!(message.contains("collective mismatch"), "{message}");
+                }
+                other => panic!("rank {rank}: expected ContractViolation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn missing_peer_times_out_instead_of_hanging() {
+        // rank 3 never enters the collective; its node leader times out
+        // at the board and aborts the group, so every other rank gets a
+        // typed error bounded by the deadline
+        let results = run_with_clocks_timeout(
+            4,
+            2,
+            TwoLevelModel::free(),
+            Some(Duration::from_millis(250)),
+            |ctx| {
+                if ctx.rank() == 3 {
+                    Ok(0.0)
+                } else {
+                    ctx.allreduce_scalar(1.0, Op::Sum)
+                }
+            },
+        );
+        for (rank, (r, _)) in results.iter().enumerate().take(3) {
+            assert!(
+                matches!(r, Err(CommError::Timeout { .. }) | Err(CommError::RemoteAbort { .. })),
+                "rank {rank}: expected Timeout/RemoteAbort, got {r:?}"
+            );
+        }
+        assert!(results[3].0.is_ok());
+    }
+
+    #[test]
+    fn poisoned_group_fails_every_subsequent_collective() {
+        let results = run(4, 2, TwoLevelModel::free(), |ctx| {
+            if ctx.rank() == 1 {
+                ctx.abort("dead");
+            }
+            let a = ctx.allreduce_scalar(1.0, Op::Sum);
+            let b = ctx.barrier();
+            (a.is_err(), b.is_err())
+        });
+        for (a, b) in &results {
+            assert!(a && b);
+        }
+    }
+
+    #[test]
+    fn traces_tag_intra_and_inter_hops() {
+        let traces = run(4, 2, TwoLevelModel::hpc(), |ctx| {
+            ctx.tracer_mut().set_enabled(true);
+            ctx.allreduce_scalar(ctx.rank() as f64, Op::Sum).unwrap();
+            ctx.barrier().unwrap();
+            let leader = ctx.is_leader();
+            (leader, ctx.tracer_mut().take())
+        });
+        for (rank, (leader, trace)) in traces.iter().enumerate() {
+            assert_eq!(*leader, rank == 0 || rank == 2);
+            let intra: Vec<_> = trace.comm.iter().filter(|c| c.link == "intra").collect();
+            let inter: Vec<_> = trace.comm.iter().filter(|c| c.link == "inter").collect();
+            assert_eq!(intra.len(), 2, "rank {rank}: one intra record per collective");
+            assert_eq!(intra[0].primitive, "allreduce");
+            assert_eq!(intra[1].primitive, "barrier");
+            if *leader {
+                assert_eq!(inter.len(), 2, "leaders record the tree hop");
+                let expect = TwoLevelModel::hpc().inter.allreduce(2, 8);
+                assert!((inter[0].predicted_s - expect).abs() < 1e-18);
+            } else {
+                assert!(inter.is_empty(), "rank {rank} is not a leader");
+            }
+            // the intra record is priced at the full two-level cost the
+            // clock was charged with
+            let full = TwoLevelModel::hpc().allreduce(2, 2, 8);
+            assert!((intra[0].predicted_s - full).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn clocks_sync_to_the_two_level_cost() {
+        let model = TwoLevelModel::hpc();
+        let results = run_with_clocks_timeout(4, 2, model, None, |ctx| {
+            ctx.charge(Category::Compute, ctx.rank() as f64);
+            ctx.allreduce_scalar(1.0, Op::Sum).unwrap();
+            ctx.clock().now()
+        });
+        let expect = 3.0 + model.allreduce(2, 2, 8);
+        for (t, clock) in &results {
+            assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
+            assert!((clock.now() - expect).abs() < 1e-12);
+        }
+        // the laggard charged 3s of compute; everyone else waited
+        assert!(results[0].1.in_category(Category::Comm) >= 3.0 - 1e-9);
+    }
+
+    #[test]
+    fn single_rank_single_node_works() {
+        let results = run(1, 1, TwoLevelModel::hpc(), |ctx| {
+            ctx.barrier().unwrap();
+            assert_eq!(ctx.gather(0, &[3.0]).unwrap().unwrap(), vec![vec![3.0]]);
+            ctx.allreduce_scalar(5.0, Op::Sum).unwrap()
+        });
+        assert_eq!(results, vec![5.0]);
+    }
+
+    #[test]
+    fn node_layout_is_contiguous_and_balanced() {
+        assert_eq!(node_layout(4, 2), vec![(0, 2), (2, 2)]);
+        assert_eq!(node_layout(5, 2), vec![(0, 3), (3, 2)]);
+        assert_eq!(node_layout(4, 3), vec![(0, 2), (2, 1), (3, 1)]);
+        assert_eq!(node_layout(8, 1), vec![(0, 8)]);
+        for p in 1..=9 {
+            for nodes in 1..=p {
+                let layout = node_layout(p, nodes);
+                assert_eq!(layout.iter().map(|&(_, s)| s).sum::<usize>(), p);
+                assert!(layout.iter().all(|&(_, s)| s >= 1));
+                for rank in 0..p {
+                    let (node, local) = locate(&layout, rank);
+                    assert_eq!(layout[node].0 + local, rank);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_panic_poisons_the_group_then_propagates() {
+        let observed = Mutex::new(None);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(4, 2, TwoLevelModel::free(), |ctx| {
+                if ctx.rank() == 3 {
+                    panic!("boom in hier rank code");
+                }
+                let got = ctx.allreduce_scalar(1.0, Op::Sum);
+                if ctx.rank() == 0 {
+                    *observed.lock().unwrap() = Some(got);
+                }
+            })
+        }));
+        assert!(caught.is_err(), "the original panic must still propagate");
+        match observed.into_inner().unwrap() {
+            Some(Err(CommError::RemoteAbort { origin_rank: 3, message })) => {
+                assert!(message.contains("boom in hier rank code"));
+            }
+            other => panic!("rank 0 should observe the panic as RemoteAbort, got {other:?}"),
+        }
+    }
+}

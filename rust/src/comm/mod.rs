@@ -42,33 +42,52 @@
 //!
 //! ## Backends
 //!
-//! * [`thread`] — shared-board thread transport ([`RankCtx`], the
-//!   default): p rank threads in one process synchronizing through a
-//!   poisonable contribution board; exact collectives, reductions in
-//!   rank order.
-//! * [`selfcomm`] — [`SelfComm`], the zero-overhead p = 1 backend: no
-//!   threads, no barriers; every collective is the identity.
-//! * [`socket`] — localhost TCP transport ([`socket::SocketComm`]):
-//!   length-prefixed frames with rank 0 as rendezvous hub, abort/error
-//!   frames on the same channel, optional rendezvous + I/O deadlines.
-//!   Proves the trait boundary is transport-real and is the template
-//!   for a true multi-process / multi-node deployment.
+//! | module | handle | ranks are | reduction topology | reach |
+//! |--------|--------|-----------|--------------------|-------|
+//! | [`selfcomm`] | [`SelfComm`] | the calling thread (p = 1) | identity | in-process |
+//! | [`thread`] | [`RankCtx`] (default) | threads of one process | shared contribution board, single rank-ordered fold | in-process |
+//! | [`socket`] | [`socket::SocketComm`] | threads of one process over localhost TCP | rank-0 hub star, single rank-ordered fold at the hub | localhost wire |
+//! | [`proc`] | [`socket::SocketComm`] per OS process | **spawned worker processes** (`dopinf worker`) | rank-0 hub star over real process boundaries | localhost processes; multi-machine documented |
+//! | [`hier`] | [`hier::HierCtx`] | threads grouped into nodes | two-level: node boards + a binary leader tree; raw parts funnel to the root for one rank-ordered fold | models multi-node topology |
+//!
+//! * [`thread`] — p rank threads synchronizing through a poisonable
+//!   contribution board; exact collectives, reductions in rank order.
+//! * [`selfcomm`] — the zero-overhead p = 1 backend: no threads, no
+//!   barriers; every collective is the identity.
+//! * [`socket`] — length-prefixed frames with rank 0 as rendezvous
+//!   hub, abort/error frames on the same channel, optional rendezvous
+//!   + I/O deadlines; the hub collects requests with a readiness poll,
+//!   so aborts and dead peers fan out the moment they are observed.
+//! * [`proc`] — the socket wire protocol across real OS processes:
+//!   rank 0 spawns `p - 1` copies of the `dopinf` binary via the
+//!   hidden `worker` subcommand, ships each a job frame, runs the
+//!   collectives over the same hub, and collects join reports (clock,
+//!   trace, result) when the job ends. A SIGKILLed worker surfaces as
+//!   a typed error on every survivor, never a hang.
+//! * [`hier`] — hierarchical two-level collectives: thread boards
+//!   within each node, TCP streams between per-node leader ranks in a
+//!   binary tree (no rank-0 star). Costs come from the two-level
+//!   [`costmodel::TwoLevelModel`]; results stay bitwise identical to
+//!   the flat transports because leaders forward *unreduced* rank-
+//!   tagged parts and the root folds exactly once, in rank order.
 //!
 //! ## Telemetry
 //!
 //! Every backend carries a per-rank [`crate::obs::Tracer`]
 //! ([`Communicator::tracer`] / [`Communicator::tracer_mut`]), and every
-//! collective — in all three transports — closes exactly one
+//! collective — in all transports — closes exactly one
 //! [`crate::obs::CommRecord`] per call: primitive name, payload bytes
 //! (the same byte count handed to the cost model), measured wall time,
 //! the wait share (time parked at the rendezvous: the thread board
 //! wait, a socket leaf's `read_reply`, the hub's frame-read loop), and
-//! the α–β *predicted* time next to it. Failed collectives record too
-//! — an aborted run never leaves a collective span open — while the
-//! fail-fast path of an already-poisoned handle records nothing.
-//! Tracing is off by default (one branch per probe point) and wall
-//! readings never feed the virtual clocks, so numerics and the timing
-//! model are unaffected either way.
+//! the α–β *predicted* time next to it, plus a link tag (`"flat"` for
+//! the single-level transports; the hierarchical backend tags node-
+//! local hops `"intra"` and leader-tree hops `"inter"`). Failed
+//! collectives record too — an aborted run never leaves a collective
+//! span open — while the fail-fast path of an already-poisoned handle
+//! records nothing. Tracing is off by default (one branch per probe
+//! point) and wall readings never feed the virtual clocks, so numerics
+//! and the timing model are unaffected either way.
 //!
 //! **Timing model** (DESIGN.md §3): this testbed has one physical core,
 //! so wall-clock cannot exhibit strong scaling. Each rank instead
@@ -85,13 +104,15 @@ pub mod clock;
 pub mod communicator;
 pub mod costmodel;
 pub mod error;
+pub mod hier;
+pub mod proc;
 pub mod selfcomm;
 pub mod socket;
 pub mod thread;
 
 pub use clock::{Category, Clock};
 pub use communicator::{fold, Communicator, Op};
-pub use costmodel::{CoreModel, CostModel, DiskModel};
+pub use costmodel::{CoreModel, CostModel, DiskModel, TwoLevelModel};
 pub use error::{abort_on_local_failure, CommError, CommResult};
 pub use selfcomm::SelfComm;
 pub use thread::{run, run_with_clocks, run_with_clocks_timeout, RankCtx};

@@ -1,0 +1,712 @@
+//! Process-rank transport: real OS worker processes behind the socket
+//! wire protocol.
+//!
+//! The socket transport ([`super::socket`]) already speaks a fully
+//! transport-real protocol — length-prefixed frames over TCP with rank
+//! 0 as the hub — but runs every rank as a thread of one process. This
+//! module is the missing launch layer: the parent process *is* rank 0,
+//! and ranks 1..p are spawned `dopinf worker` processes that connect
+//! back to the parent's rendezvous listener. Because both sides reuse
+//! [`SocketComm`] unchanged, every collective is bitwise identical to
+//! the thread and socket backends by construction.
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//! parent (rank 0)                      worker i (rank i, i = 1..p)
+//! ─────────────────                    ───────────────────────────
+//! bind 127.0.0.1:0
+//! spawn p-1 workers  ────argv────────▶ dopinf worker --rank i --size p
+//!                                          --hub 127.0.0.1:PORT ...
+//! hub_rendezvous     ◀───hello(i)───── leaf_rendezvous
+//! send job frame     ────tag|bytes───▶ decode job (exercise/pipeline)
+//! run rank-0 fn      ◀──collectives──▶ run the same fn (SocketComm)
+//! read join frames   ◀───join(i)────── clock parts | trace | outcome
+//! reap children                        exit
+//! ```
+//!
+//! The join frame rides the same stream the collectives used, after
+//! the last collective: clock parts round-trip bitwise
+//! ([`Clock::from_parts`]), the worker's [`RankTrace`] crosses the
+//! boundary so `--trace` still shows one track per rank, and the
+//! worker's result (or typed failure) is rank-tagged for the runner's
+//! error aggregation.
+//!
+//! ## Failure semantics
+//!
+//! A worker that dies mid-collective (e.g. SIGKILL) closes its socket;
+//! the hub's readiness poll observes EOF and fans
+//! [`CommError::RemoteAbort`] out to every survivor immediately — the
+//! group never hangs past the configured timeout. A worker that dies
+//! *between* the last collective and the join frame surfaces the same
+//! way when the parent reads its join. Stuck children are killed at
+//! reap time (and on parent panic, via the reaper's `Drop`).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::clock::{Clock, ALL_CATEGORIES};
+use super::communicator::{Communicator, Op};
+use super::costmodel::CostModel;
+use super::error::{CommError, CommResult};
+use super::socket::{self, SocketComm};
+use crate::obs::{CommRecord, RankTrace, Span};
+use crate::util::codec;
+use crate::util::rng::Rng;
+
+/// Job-frame tags (hub → worker, right after the hello).
+pub(crate) const JOB_EXERCISE: u8 = 0;
+pub(crate) const JOB_PIPELINE: u8 = 1;
+/// First byte of a join frame (worker → hub, after the last
+/// collective); distinct from the collective/abort frame markers so a
+/// desynced stream is caught instead of misparsed.
+const JOIN_MARKER: u8 = 9;
+
+/// Resolve the binary worker ranks are spawned from: the
+/// `DOPINF_WORKER_BIN` override (tests and benches set it to the
+/// `dopinf` binary Cargo built, since their own executable has no
+/// `worker` subcommand), else this executable.
+pub fn worker_binary() -> Result<std::path::PathBuf, CommError> {
+    if let Ok(p) = std::env::var("DOPINF_WORKER_BIN") {
+        return Ok(std::path::PathBuf::from(p));
+    }
+    std::env::current_exe().map_err(|e| CommError::Transport {
+        rank: 0,
+        message: format!("resolving the worker binary: {e}"),
+    })
+}
+
+/// Per-worker runtime knobs forwarded on the worker command line.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerKnobs {
+    /// `--threads N` (compute threads per rank)
+    pub threads_per_rank: Option<usize>,
+    /// `--simd TIER` (kernel dispatch tier)
+    pub simd: Option<String>,
+}
+
+/// Everything [`launch`] needs to start a process group.
+pub(crate) struct LaunchSpec {
+    pub p: usize,
+    pub model: CostModel,
+    pub timeout: Option<Duration>,
+    /// job frame: `tag u8 | len u64 | bytes`, identical for every
+    /// worker (each worker already knows its rank from argv)
+    pub job_tag: u8,
+    pub job: Vec<u8>,
+    pub knobs: WorkerKnobs,
+}
+
+/// A launched process group: the parent's rank-0 hub handle plus the
+/// child processes. Run the rank-0 function against `hub`, then call
+/// [`Launched::join`].
+pub(crate) struct Launched {
+    pub hub: SocketComm,
+    reaper: Reaper,
+    timeout: Option<Duration>,
+}
+
+/// Child processes with kill-on-drop: if the parent unwinds before
+/// [`Launched::join`] reaps gracefully, the workers are not leaked.
+struct Reaper {
+    children: Vec<Child>,
+}
+
+impl Reaper {
+    /// Graceful reap: poll `try_wait` until `grace` elapses, then kill
+    /// whatever is left. Every child is waited on (no zombies).
+    fn reap(&mut self, grace: Duration) {
+        let deadline = Instant::now() + grace;
+        for c in &mut self.children {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Err(_) => break,
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Launched {
+    /// OS process ids of the workers, in rank order (rank i ↔ index
+    /// i - 1). Fault-injection tests SIGKILL one of these
+    /// mid-collective.
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.reaper.children.iter().map(Child::id).collect()
+    }
+
+    /// After the rank-0 function has returned: recover the hub's
+    /// clock/tracer, read every worker's join report (rank order, each
+    /// read under the stream timeout), and reap the children.
+    pub fn join(self) -> (Clock, crate::obs::Tracer, Vec<JoinReport>) {
+        let Launched { hub, mut reaper, timeout } = self;
+        let (clock, tracer, mut streams) = hub.into_parts();
+        let reports: Vec<JoinReport> = streams
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| read_join(s, i + 1, timeout))
+            .collect();
+        drop(streams);
+        reaper.reap(timeout.unwrap_or(Duration::from_secs(5)));
+        (clock, tracer, reports)
+    }
+}
+
+/// Spawn `p - 1` worker processes, rendezvous, and ship the job frame.
+/// The returned [`Launched::hub`] is rank 0 of the group; `p == 1`
+/// spawns nothing and degenerates to a lone hub.
+pub(crate) fn launch(spec: LaunchSpec) -> Result<Launched, CommError> {
+    assert!(spec.p >= 1, "need at least one rank");
+    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| CommError::Transport {
+        rank: 0,
+        message: format!("binding the rendezvous listener: {e}"),
+    })?;
+    let port = listener
+        .local_addr()
+        .map_err(|e| CommError::Transport {
+            rank: 0,
+            message: format!("reading the rendezvous listener address: {e}"),
+        })?
+        .port();
+    let bin = worker_binary()?;
+    let mut reaper = Reaper { children: Vec::with_capacity(spec.p.saturating_sub(1)) };
+    for rank in 1..spec.p {
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--size")
+            .arg(spec.p.to_string())
+            .arg("--hub")
+            .arg(format!("127.0.0.1:{port}"))
+            .stdin(Stdio::null());
+        if let Some(t) = spec.timeout {
+            cmd.arg("--comm-timeout").arg(format!("{}", t.as_secs_f64()));
+        }
+        if let Some(n) = spec.knobs.threads_per_rank {
+            cmd.arg("--threads").arg(n.to_string());
+        }
+        if let Some(tier) = &spec.knobs.simd {
+            cmd.arg("--simd").arg(tier);
+        }
+        let child = cmd.spawn().map_err(|e| CommError::Transport {
+            rank: 0,
+            message: format!("spawning worker rank {rank} from {}: {e}", bin.display()),
+        })?;
+        reaper.children.push(child);
+    }
+    let streams = socket::hub_rendezvous(&listener, spec.p, spec.timeout)?;
+    let mut streams = streams;
+    for (i, s) in streams.iter_mut().enumerate() {
+        write_job(s, spec.job_tag, &spec.job).map_err(|e| {
+            socket::io_error(0, spec.timeout, &format!("sending the job to rank {}", i + 1), e)
+        })?;
+    }
+    let hub = SocketComm::hub_from_streams(spec.p, streams, spec.model, spec.timeout);
+    Ok(Launched { hub, reaper, timeout: spec.timeout })
+}
+
+fn write_job(stream: &mut TcpStream, tag: u8, job: &[u8]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(9 + job.len());
+    codec::write_u8(&mut buf, tag).expect("vec write");
+    codec::write_bytes(&mut buf, job).expect("vec write");
+    stream.write_all(&buf)
+}
+
+// ---------------------------------------------------------------- worker side
+
+/// argv-shipped identity of a spawned worker (`dopinf worker ...`).
+#[derive(Clone, Debug)]
+pub struct WorkerBoot {
+    pub rank: usize,
+    pub size: usize,
+    /// hub rendezvous address, `host:port`
+    pub hub: String,
+    pub timeout: Option<Duration>,
+}
+
+/// Worker rendezvous: connect, send the hello, read the job frame.
+/// Returns the raw stream (the job may carry the cost model the
+/// [`SocketComm`] is then built with) plus the job tag and bytes.
+pub(crate) fn worker_connect(boot: &WorkerBoot) -> Result<(TcpStream, u8, Vec<u8>), CommError> {
+    let mut stream = socket::leaf_rendezvous(boot.rank, &boot.hub, boot.timeout)?;
+    let tag = codec::read_u8(&mut stream)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "job frame from the hub", e))?;
+    let job = codec::read_bytes(&mut stream)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "job frame from the hub", e))?;
+    Ok((stream, tag, job))
+}
+
+/// A worker's rank-tagged failure, as shipped in the join frame.
+#[derive(Clone, Debug)]
+pub enum WorkerFailure {
+    /// a typed collective failure — aggregated exactly like the thread
+    /// transport's per-rank comm errors
+    Comm(CommError),
+    /// any other rank-local failure (I/O, setup, …), carried as text
+    Other(String),
+}
+
+/// One worker's join report, read by the parent at group teardown.
+#[derive(Debug)]
+pub struct JoinReport {
+    pub rank: usize,
+    /// the worker's final virtual clock (bitwise-exact round-trip)
+    pub clock: Clock,
+    /// the worker's trace, when tracing was enabled on its rank
+    pub trace: Option<RankTrace>,
+    /// the job's f64 result payload, or the rank-tagged failure
+    pub outcome: Result<Vec<f64>, WorkerFailure>,
+}
+
+/// Worker epilogue: tear the comm handle down and ship the join frame
+/// (clock parts, trace if enabled, outcome) back to the parent on the
+/// collective stream.
+pub(crate) fn send_join(
+    comm: SocketComm,
+    timeout: Option<Duration>,
+    outcome: &Result<Vec<f64>, WorkerFailure>,
+) -> CommResult<()> {
+    let rank = comm.rank();
+    let (clock, mut tracer, mut streams) = comm.into_parts();
+    let trace = tracer.is_enabled().then(|| tracer.take());
+    let mut buf = Vec::new();
+    codec::write_u8(&mut buf, JOIN_MARKER).expect("vec write");
+    let (total, split) = clock.parts();
+    codec::write_f64(&mut buf, total).expect("vec write");
+    for s in split {
+        codec::write_f64(&mut buf, s).expect("vec write");
+    }
+    codec::write_bool(&mut buf, trace.is_some()).expect("vec write");
+    if let Some(t) = &trace {
+        push_trace(&mut buf, t);
+    }
+    match outcome {
+        Ok(v) => {
+            codec::write_u8(&mut buf, 0).expect("vec write");
+            codec::write_f64s(&mut buf, v).expect("vec write");
+        }
+        Err(WorkerFailure::Comm(e)) => {
+            codec::write_u8(&mut buf, 1).expect("vec write");
+            socket::push_comm_error(&mut buf, e);
+        }
+        Err(WorkerFailure::Other(msg)) => {
+            codec::write_u8(&mut buf, 2).expect("vec write");
+            codec::write_str(&mut buf, msg).expect("vec write");
+        }
+    }
+    streams[0]
+        .write_all(&buf)
+        .map_err(|e| socket::io_error(rank, timeout, "sending the join report", e))
+}
+
+fn read_join(stream: &mut TcpStream, rank: usize, timeout: Option<Duration>) -> JoinReport {
+    match try_read_join(stream, rank) {
+        Ok(report) => report,
+        Err(e) => {
+            let failure = if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                // in lockstep SPMD the worker never closes its stream
+                // before the join frame: its process died
+                CommError::RemoteAbort {
+                    origin_rank: rank,
+                    message: "worker exited without a join report (process died)".to_string(),
+                }
+            } else {
+                socket::io_error(rank, timeout, "join report", e)
+            };
+            JoinReport {
+                rank,
+                clock: Clock::new(),
+                trace: None,
+                outcome: Err(WorkerFailure::Comm(failure)),
+            }
+        }
+    }
+}
+
+fn try_read_join(stream: &mut TcpStream, rank: usize) -> std::io::Result<JoinReport> {
+    let marker = codec::read_u8(stream)?;
+    if marker != JOIN_MARKER {
+        return Err(codec::corrupt(format!("join marker {marker}")));
+    }
+    let total = codec::read_f64(stream)?;
+    let mut split = [0.0f64; 5];
+    for s in &mut split {
+        *s = codec::read_f64(stream)?;
+    }
+    let clock = Clock::from_parts(total, split);
+    let trace = if codec::read_bool(stream)? { Some(read_trace(stream)?) } else { None };
+    let outcome = match codec::read_u8(stream)? {
+        0 => Ok(codec::read_f64s(stream)?),
+        1 => Err(WorkerFailure::Comm(socket::read_comm_error(stream)?)),
+        2 => Err(WorkerFailure::Other(codec::read_str(stream)?)),
+        other => return Err(codec::corrupt(format!("join outcome tag {other}"))),
+    };
+    Ok(JoinReport { rank, clock, trace, outcome })
+}
+
+// ------------------------------------------------------------- trace transfer
+
+/// Intern a wire string into the `&'static str` the trace structs
+/// carry. Trace labels come from a small fixed vocabulary ("pass1",
+/// "allreduce", "intra", …), so the leak is bounded by that vocabulary,
+/// not by the number of joins.
+fn intern(s: String) -> &'static str {
+    static CACHE: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut cache = CACHE.lock().unwrap();
+    if let Some(hit) = cache.iter().find(|&&c| c == s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.into_boxed_str());
+    cache.push(leaked);
+    leaked
+}
+
+fn category_byte(c: crate::comm::Category) -> u8 {
+    ALL_CATEGORIES.iter().position(|&x| x == c).expect("category in ALL_CATEGORIES") as u8
+}
+
+fn push_trace(buf: &mut Vec<u8>, t: &RankTrace) {
+    codec::write_usize(buf, t.rank).expect("vec write");
+    codec::write_usize(buf, t.spans.len()).expect("vec write");
+    for s in &t.spans {
+        codec::write_str(buf, s.label).expect("vec write");
+        codec::write_u8(buf, category_byte(s.category)).expect("vec write");
+        codec::write_f64(buf, s.start_s).expect("vec write");
+        codec::write_f64(buf, s.dur_s).expect("vec write");
+    }
+    codec::write_usize(buf, t.comm.len()).expect("vec write");
+    for c in &t.comm {
+        codec::write_str(buf, c.primitive).expect("vec write");
+        codec::write_str(buf, c.link).expect("vec write");
+        codec::write_usize(buf, c.bytes).expect("vec write");
+        codec::write_f64(buf, c.predicted_s).expect("vec write");
+        codec::write_f64(buf, c.measured_s).expect("vec write");
+        codec::write_f64(buf, c.wait_s).expect("vec write");
+        codec::write_f64(buf, c.start_s).expect("vec write");
+    }
+    codec::write_usize(buf, t.gauges.len()).expect("vec write");
+    for (name, value) in &t.gauges {
+        codec::write_str(buf, name).expect("vec write");
+        codec::write_f64(buf, *value).expect("vec write");
+    }
+}
+
+fn read_trace(r: &mut impl std::io::Read) -> std::io::Result<RankTrace> {
+    let rank = codec::read_usize(r)?;
+    let n_spans = codec::read_usize(r)?;
+    let mut spans = Vec::with_capacity(n_spans);
+    for _ in 0..n_spans {
+        let label = intern(codec::read_str(r)?);
+        let cat = codec::read_u8(r)?;
+        let category = *ALL_CATEGORIES
+            .get(cat as usize)
+            .ok_or_else(|| codec::corrupt(format!("category byte {cat}")))?;
+        let start_s = codec::read_f64(r)?;
+        let dur_s = codec::read_f64(r)?;
+        spans.push(Span { label, category, start_s, dur_s });
+    }
+    let n_comm = codec::read_usize(r)?;
+    let mut comm = Vec::with_capacity(n_comm);
+    for _ in 0..n_comm {
+        comm.push(CommRecord {
+            primitive: intern(codec::read_str(r)?),
+            link: intern(codec::read_str(r)?),
+            bytes: codec::read_usize(r)?,
+            predicted_s: codec::read_f64(r)?,
+            measured_s: codec::read_f64(r)?,
+            wait_s: codec::read_f64(r)?,
+            start_s: codec::read_f64(r)?,
+        });
+    }
+    let n_gauges = codec::read_usize(r)?;
+    let mut gauges = std::collections::BTreeMap::new();
+    for _ in 0..n_gauges {
+        let name = intern(codec::read_str(r)?);
+        gauges.insert(name, codec::read_f64(r)?);
+    }
+    Ok(RankTrace { rank, enabled: true, spans, comm, gauges })
+}
+
+// ------------------------------------------------------------- the exercise
+
+/// A deterministic collective workload every transport can run — the
+/// cross-transport bitwise-identity probe for the process and
+/// hierarchical backends (and the payload generator for their bench
+/// rows). Same `(seed, rank, round)` always produces the same
+/// contributions, with magnitudes spread over ~2⁹⁶ so any deviation
+/// from the rank-ordered fold shows up in the bits.
+#[derive(Clone, Debug)]
+pub struct ExerciseSpec {
+    /// one primitive name, or `"mixed"` for all of them per round
+    pub prim: String,
+    /// payload length per rank per collective
+    pub len: usize,
+    pub rounds: usize,
+    pub seed: u64,
+    /// per-round sleep (milliseconds) — lets fault-injection tests
+    /// hold the group mid-exercise while a worker is killed; 0 in
+    /// every numeric test
+    pub pause_ms: u64,
+}
+
+impl ExerciseSpec {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        codec::write_str(&mut buf, &self.prim).expect("vec write");
+        codec::write_usize(&mut buf, self.len).expect("vec write");
+        codec::write_usize(&mut buf, self.rounds).expect("vec write");
+        codec::write_u64(&mut buf, self.seed).expect("vec write");
+        codec::write_u64(&mut buf, self.pause_ms).expect("vec write");
+        buf
+    }
+
+    pub(crate) fn decode(r: &mut impl std::io::Read) -> std::io::Result<ExerciseSpec> {
+        Ok(ExerciseSpec {
+            prim: codec::read_str(r)?,
+            len: codec::read_usize(r)?,
+            rounds: codec::read_usize(r)?,
+            seed: codec::read_u64(r)?,
+            pause_ms: codec::read_u64(r)?,
+        })
+    }
+}
+
+/// Run the exercise on one rank of any transport. The returned digest
+/// vector is what the bitwise-identity tests compare across backends.
+pub fn exercise_rank<C: Communicator>(ctx: &mut C, spec: &ExerciseSpec) -> CommResult<Vec<f64>> {
+    let (rank, size) = (ctx.rank(), ctx.size());
+    let mut out = Vec::new();
+    for round in 0..spec.rounds {
+        if spec.pause_ms > 0 {
+            std::thread::sleep(Duration::from_millis(spec.pause_ms));
+        }
+        let mut rng = Rng::new(spec.seed ^ ((rank as u64) << 32) ^ round as u64);
+        let data: Vec<f64> = (0..spec.len)
+            .map(|_| {
+                let mantissa = rng.range(-1.0, 1.0);
+                let exponent = rng.below(33) as i32 - 16;
+                mantissa * 2.0f64.powi(exponent * 3)
+            })
+            .collect();
+        let root = round % size;
+        let prims: &[&str] = if spec.prim == "mixed" {
+            &["allreduce", "broadcast", "allgather", "gather", "reduce", "reduce_scatter",
+              "barrier"]
+        } else {
+            &[]
+        };
+        let single = [spec.prim.as_str()];
+        let prims = if prims.is_empty() { &single[..] } else { prims };
+        for prim in prims {
+            match *prim {
+                "allreduce" => out.extend(ctx.allreduce(&data, Op::Sum)?),
+                "broadcast" => {
+                    let payload = (rank == root).then(|| data.clone());
+                    out.extend(ctx.broadcast(root, payload)?);
+                }
+                "allgather" => {
+                    for part in ctx.allgather(&data)? {
+                        out.extend(part);
+                    }
+                }
+                "gather" => match ctx.gather(root, &data)? {
+                    Some(parts) => {
+                        for part in parts {
+                            out.extend(part);
+                        }
+                    }
+                    None => out.push(-1.0),
+                },
+                "reduce" => match ctx.reduce(root, &data, Op::Max)? {
+                    Some(reduced) => out.extend(reduced),
+                    None => out.push(-2.0),
+                },
+                "reduce_scatter" => {
+                    let n = spec.len.div_ceil(size).max(1) * size;
+                    let block: Vec<f64> = data.iter().cycle().take(n).copied().collect();
+                    out.extend(ctx.reduce_scatter_block(&block, Op::Sum)?);
+                }
+                "barrier" => {
+                    ctx.barrier()?;
+                    out.push(round as f64);
+                }
+                other => {
+                    return Err(CommError::ContractViolation {
+                        rank,
+                        message: format!("unknown exercise primitive {other:?}"),
+                    })
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Launch a process group that runs [`exercise_rank`] on every rank
+/// and return `(outcome, clock)` per rank, rank 0 first. `on_spawn`
+/// sees the worker PIDs right after the spawn — fault-injection tests
+/// use it to SIGKILL a worker mid-exercise.
+pub fn run_exercise(
+    p: usize,
+    model: CostModel,
+    timeout: Option<Duration>,
+    spec: &ExerciseSpec,
+    on_spawn: impl FnOnce(&[u32]),
+) -> Result<Vec<(Result<Vec<f64>, WorkerFailure>, Clock)>, CommError> {
+    let mut launched = launch(LaunchSpec {
+        p,
+        model,
+        timeout,
+        job_tag: JOB_EXERCISE,
+        job: encode_exercise_job(spec, model),
+        knobs: WorkerKnobs::default(),
+    })?;
+    on_spawn(&launched.worker_pids());
+    let root = exercise_rank(&mut launched.hub, spec).map_err(WorkerFailure::Comm);
+    let (clock, _tracer, reports) = launched.join();
+    let mut results = vec![(root, clock)];
+    results.extend(reports.into_iter().map(|r| (r.outcome, r.clock)));
+    Ok(results)
+}
+
+/// The exercise job frame carries the spec plus the hub's cost model,
+/// so worker virtual clocks advance identically to the parent's.
+fn encode_exercise_job(spec: &ExerciseSpec, model: CostModel) -> Vec<u8> {
+    let mut buf = spec.encode();
+    let (alpha, beta, gamma) = model.parts();
+    codec::write_f64(&mut buf, alpha).expect("vec write");
+    codec::write_f64(&mut buf, beta).expect("vec write");
+    codec::write_f64(&mut buf, gamma).expect("vec write");
+    buf
+}
+
+/// Worker-side handler for [`JOB_EXERCISE`]: build the leaf comm, run
+/// the exercise, ship the join frame.
+pub(crate) fn run_exercise_worker(
+    boot: &WorkerBoot,
+    stream: TcpStream,
+    job: &[u8],
+) -> CommResult<()> {
+    let mut r = std::io::Cursor::new(job);
+    let spec = ExerciseSpec::decode(&mut r)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "decoding the exercise job", e))?;
+    let alpha = codec::read_f64(&mut r)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "decoding the exercise job", e))?;
+    let beta = codec::read_f64(&mut r)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "decoding the exercise job", e))?;
+    let gamma = codec::read_f64(&mut r)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "decoding the exercise job", e))?;
+    let model = CostModel::from_parts(alpha, beta, gamma);
+    let mut comm =
+        SocketComm::leaf_from_stream(boot.rank, boot.size, stream, model, boot.timeout);
+    let outcome = exercise_rank(&mut comm, &spec).map_err(WorkerFailure::Comm);
+    send_join(comm, boot.timeout, &outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Category;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn exercise_spec_roundtrips() {
+        let spec = ExerciseSpec {
+            prim: "mixed".into(),
+            len: 48,
+            rounds: 3,
+            seed: 0xDEAD_BEEF,
+            pause_ms: 0,
+        };
+        let buf = spec.encode();
+        let got = ExerciseSpec::decode(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(got.prim, spec.prim);
+        assert_eq!((got.len, got.rounds, got.seed, got.pause_ms), (48, 3, 0xDEAD_BEEF, 0));
+    }
+
+    #[test]
+    fn trace_wire_roundtrip_is_exact() {
+        let t = RankTrace {
+            rank: 3,
+            enabled: true,
+            spans: vec![Span {
+                label: "pass1",
+                category: Category::Load,
+                start_s: 0.25,
+                dur_s: 1.0 / 3.0,
+            }],
+            comm: vec![CommRecord {
+                primitive: "allreduce",
+                link: "intra",
+                bytes: 4096,
+                predicted_s: 1.5e-6,
+                measured_s: 2.5e-6,
+                wait_s: 1.0e-6,
+                start_s: 0.5,
+            }],
+            gauges: BTreeMap::from([("peak_bytes", 1.25e6)]),
+        };
+        let mut buf = Vec::new();
+        push_trace(&mut buf, &t);
+        let got = read_trace(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(got.rank, 3);
+        assert!(got.enabled);
+        assert_eq!(got.spans.len(), 1);
+        assert_eq!(got.spans[0].label, "pass1");
+        assert_eq!(got.spans[0].category, Category::Load);
+        assert_eq!(got.spans[0].dur_s.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(got.comm.len(), 1);
+        assert_eq!(got.comm[0].primitive, "allreduce");
+        assert_eq!(got.comm[0].link, "intra");
+        assert_eq!(got.comm[0].bytes, 4096);
+        assert_eq!(got.comm[0].predicted_s.to_bits(), 1.5e-6f64.to_bits());
+        assert_eq!(got.gauges.get("peak_bytes"), Some(&1.25e6));
+    }
+
+    #[test]
+    fn interning_reuses_known_labels() {
+        let a = intern("label-a".to_string());
+        let b = intern("label-a".to_string());
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(intern("label-b".to_string()), "label-b");
+    }
+
+    #[test]
+    fn exercise_is_deterministic_per_rank_and_transport_free() {
+        // same spec, same rank → same digest (SelfComm, p = 1)
+        let spec =
+            ExerciseSpec { prim: "mixed".into(), len: 16, rounds: 2, seed: 7, pause_ms: 0 };
+        let mut a = crate::comm::SelfComm::new();
+        let mut b = crate::comm::SelfComm::new();
+        let da = exercise_rank(&mut a, &spec).unwrap();
+        let db = exercise_rank(&mut b, &spec).unwrap();
+        assert!(!da.is_empty());
+        assert_eq!(
+            da.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            db.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

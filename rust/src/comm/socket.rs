@@ -35,12 +35,18 @@
 //! ## Failure semantics
 //!
 //! * **Abort broadcast** ([`Communicator::abort`]): a failing leaf
-//!   sends an abort frame in place of its next request; the hub relays
-//!   it to every leaf as an error reply, so ranks parked mid-collective
-//!   wake with [`CommError::RemoteAbort`]. A failing hub writes the
-//!   error reply to every leaf directly. After any failure the handle
-//!   is poisoned — subsequent collectives fail fast without touching
-//!   the (possibly desynced) wire.
+//!   sends an abort frame in place of its next request; the hub's
+//!   frame collection is a readiness *poll* over every pending leaf,
+//!   so the abort is observed and relayed to every leaf the moment it
+//!   arrives — not after lower-ranked requests trickle in — and ranks
+//!   parked mid-collective wake with [`CommError::RemoteAbort`]. A
+//!   failing hub writes the error reply to every leaf directly. After
+//!   any failure the handle is poisoned — subsequent collectives fail
+//!   fast without touching the (possibly desynced) wire.
+//! * **Dead peers**: a leaf connection at EOF while the hub collects
+//!   frames (its process died, or its thread returned early while the
+//!   group is mid-collective) surfaces as [`CommError::RemoteAbort`]
+//!   naming the dead rank, relayed to the survivors immediately.
 //! * **Deadlines** ([`run_with_clocks_timeout`]): rendezvous
 //!   (accept/connect/hello) and every frame read/write observe the
 //!   configured timeout, so a worker that never connects or a peer that
@@ -52,7 +58,7 @@
 //!   [`CommError::ContractViolation`] / [`CommError::Transport`].
 
 use std::io::{self, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use super::clock::{Category, Clock};
@@ -62,9 +68,10 @@ use super::error::{CommError, CommResult};
 use crate::obs::Tracer;
 use crate::util::panic::panic_text;
 
-/// Collective opcode on the wire.
+/// Collective opcode on the wire (shared with the leader tree of
+/// [`super::hier`], whose bundle frames carry the same opcode bytes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum OpCode {
+pub(crate) enum OpCode {
     Allreduce,
     Broadcast,
     Allgather,
@@ -75,7 +82,7 @@ enum OpCode {
 }
 
 impl OpCode {
-    fn to_byte(self) -> u8 {
+    pub(crate) fn to_byte(self) -> u8 {
         match self {
             OpCode::Allreduce => 0,
             OpCode::Broadcast => 1,
@@ -87,7 +94,7 @@ impl OpCode {
         }
     }
 
-    fn from_byte(b: u8) -> io::Result<OpCode> {
+    pub(crate) fn from_byte(b: u8) -> io::Result<OpCode> {
         Ok(match b {
             0 => OpCode::Allreduce,
             1 => OpCode::Broadcast,
@@ -101,7 +108,7 @@ impl OpCode {
     }
 }
 
-fn op_to_byte(op: Op) -> u8 {
+pub(crate) fn op_to_byte(op: Op) -> u8 {
     match op {
         Op::Sum => 0,
         Op::Max => 1,
@@ -109,7 +116,7 @@ fn op_to_byte(op: Op) -> u8 {
     }
 }
 
-fn op_from_byte(b: u8) -> io::Result<Op> {
+pub(crate) fn op_from_byte(b: u8) -> io::Result<Op> {
     Ok(match b {
         0 => Op::Sum,
         1 => Op::Max,
@@ -118,14 +125,19 @@ fn op_from_byte(b: u8) -> io::Result<Op> {
     })
 }
 
-fn corrupt(detail: String) -> io::Error {
+pub(crate) fn corrupt(detail: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("corrupt frame ({detail})"))
 }
 
 /// Map an I/O failure while `waiting_for` into the typed comm error:
 /// an elapsed deadline is [`CommError::Timeout`], anything else is
 /// [`CommError::Transport`].
-fn io_error(rank: usize, timeout: Option<Duration>, waiting_for: &str, e: io::Error) -> CommError {
+pub(crate) fn io_error(
+    rank: usize,
+    timeout: Option<Duration>,
+    waiting_for: &str,
+    e: io::Error,
+) -> CommError {
     if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
         CommError::Timeout {
             rank,
@@ -139,25 +151,25 @@ fn io_error(rank: usize, timeout: Option<Duration>, waiting_for: &str, e: io::Er
 
 // ---------------------------------------------------------------- frame I/O
 
-fn read_u64(stream: &mut TcpStream) -> io::Result<u64> {
+pub(crate) fn read_u64(stream: &mut impl Read) -> io::Result<u64> {
     let mut b = [0u8; 8];
     stream.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_f64(stream: &mut TcpStream) -> io::Result<f64> {
+pub(crate) fn read_f64(stream: &mut impl Read) -> io::Result<f64> {
     let mut b = [0u8; 8];
     stream.read_exact(&mut b)?;
     Ok(f64::from_le_bytes(b))
 }
 
-fn read_f64s(stream: &mut TcpStream, count: usize) -> io::Result<Vec<f64>> {
+pub(crate) fn read_f64s(stream: &mut impl Read, count: usize) -> io::Result<Vec<f64>> {
     let mut raw = vec![0u8; count * 8];
     stream.read_exact(&mut raw)?;
     Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
-fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
+pub(crate) fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
     for v in values {
         buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -165,7 +177,7 @@ fn push_f64s(buf: &mut Vec<u8>, values: &[f64]) {
 
 /// Encode a [`CommError`] onto the wire:
 /// `kind u8 | rank u64 | seconds f64 | len u64 | message bytes`.
-fn push_comm_error(buf: &mut Vec<u8>, e: &CommError) {
+pub(crate) fn push_comm_error(buf: &mut Vec<u8>, e: &CommError) {
     let (kind, rank, seconds, msg): (u8, usize, f64, &str) = match e {
         CommError::RemoteAbort { origin_rank, message } => (0, *origin_rank, 0.0, message),
         CommError::Timeout { rank, seconds, waiting_for } => (1, *rank, *seconds, waiting_for),
@@ -179,7 +191,7 @@ fn push_comm_error(buf: &mut Vec<u8>, e: &CommError) {
     buf.extend_from_slice(msg.as_bytes());
 }
 
-fn read_comm_error(stream: &mut TcpStream) -> io::Result<CommError> {
+pub(crate) fn read_comm_error(stream: &mut impl Read) -> io::Result<CommError> {
     let mut kind = [0u8; 1];
     stream.read_exact(&mut kind)?;
     let rank = read_u64(stream)? as usize;
@@ -197,27 +209,27 @@ fn read_comm_error(stream: &mut TcpStream) -> io::Result<CommError> {
     })
 }
 
-const FRAME_COLLECTIVE: u8 = 0;
-const FRAME_ABORT: u8 = 1;
+pub(crate) const FRAME_COLLECTIVE: u8 = 0;
+pub(crate) const FRAME_ABORT: u8 = 1;
 const STATUS_OK: u8 = 0;
 const STATUS_ERROR: u8 = 1;
 
-struct Request {
-    code: OpCode,
-    op: u8,
-    provided: bool,
-    root: usize,
-    time: f64,
-    payload: Vec<f64>,
+pub(crate) struct Request {
+    pub(crate) code: OpCode,
+    pub(crate) op: u8,
+    pub(crate) provided: bool,
+    pub(crate) root: usize,
+    pub(crate) time: f64,
+    pub(crate) payload: Vec<f64>,
 }
 
 /// A frame read by the hub from a leaf.
-enum Frame {
+pub(crate) enum Frame {
     Request(Request),
     Abort(CommError),
 }
 
-fn write_request(
+pub(crate) fn write_request(
     stream: &mut TcpStream,
     code: OpCode,
     op: u8,
@@ -238,13 +250,13 @@ fn write_request(
     stream.write_all(&buf)
 }
 
-fn write_abort(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
+pub(crate) fn write_abort(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
     let mut buf = vec![FRAME_ABORT];
     push_comm_error(&mut buf, e);
     stream.write_all(&buf)
 }
 
-fn read_frame(stream: &mut TcpStream) -> io::Result<Frame> {
+pub(crate) fn read_frame(stream: &mut TcpStream) -> io::Result<Frame> {
     let mut head = [0u8; 1];
     stream.read_exact(&mut head)?;
     match head[0] {
@@ -265,7 +277,11 @@ fn read_frame(stream: &mut TcpStream) -> io::Result<Frame> {
     }
 }
 
-fn write_reply(stream: &mut TcpStream, max_entry: f64, parts: &[Vec<f64>]) -> io::Result<()> {
+pub(crate) fn write_reply(
+    stream: &mut TcpStream,
+    max_entry: f64,
+    parts: &[Vec<f64>],
+) -> io::Result<()> {
     let total: usize = parts.iter().map(|p| 8 + p.len() * 8).sum();
     let mut buf = Vec::with_capacity(17 + total);
     buf.push(STATUS_OK);
@@ -278,7 +294,7 @@ fn write_reply(stream: &mut TcpStream, max_entry: f64, parts: &[Vec<f64>]) -> io
     stream.write_all(&buf)
 }
 
-fn write_error_reply(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
+pub(crate) fn write_error_reply(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
     let mut buf = vec![STATUS_ERROR];
     push_comm_error(&mut buf, e);
     stream.write_all(&buf)
@@ -287,18 +303,134 @@ fn write_error_reply(stream: &mut TcpStream, e: &CommError) -> io::Result<()> {
 /// Best-effort error broadcast to every leaf. Write failures are
 /// ignored: a leaf whose connection is already gone cannot be woken,
 /// and the group is failing regardless.
-fn send_error_to_all(streams: &mut [TcpStream], e: &CommError) {
+pub(crate) fn send_error_to_all(streams: &mut [TcpStream], e: &CommError) {
     for s in streams.iter_mut() {
         let _ = write_error_reply(s, e);
     }
 }
 
-enum Reply {
+/// Readiness state of one leaf stream during the hub's frame poll.
+enum Ready {
+    /// at least one byte is buffered — a frame read won't park long
+    Frame,
+    /// the peer closed the connection (process death / early return)
+    Eof,
+    /// nothing buffered yet
+    Idle,
+}
+
+/// Non-destructively probe a leaf stream for a buffered frame. The
+/// stream is flipped to non-blocking only around the `peek`, so the
+/// subsequent full-frame read stays a plain blocking read (with the
+/// configured read timeout still in force).
+fn frame_ready(stream: &TcpStream) -> io::Result<Ready> {
+    stream.set_nonblocking(true)?;
+    let mut probe = [0u8; 1];
+    let peeked = stream.peek(&mut probe);
+    let restored = stream.set_nonblocking(false);
+    let ready = match peeked {
+        Ok(0) => Ready::Eof,
+        Ok(_) => Ready::Frame,
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ready::Idle,
+        Err(e) => return Err(e),
+    };
+    restored?;
+    Ok(ready)
+}
+
+/// Collect one collective frame from every leaf — in *arrival* order,
+/// not rank order: each sweep probes every still-pending stream, reads
+/// whatever is ready, and sleeps briefly only when a full sweep made no
+/// progress. Contributions are slotted by rank, so arrival order never
+/// leaks into the (rank-ordered) reduction; the poll only changes when
+/// failures are observed — an abort frame, a dead peer (EOF), or a
+/// contract mismatch short-circuits the collection the moment it shows
+/// up, no matter which rank it came from, so the caller can fan the
+/// error out to every leaf immediately.
+pub(crate) fn collect_frames(
+    streams: &mut [TcpStream],
+    code: OpCode,
+    op: u8,
+    root: usize,
+    rank: usize,
+    timeout: Option<Duration>,
+) -> Result<Vec<Request>, CommError> {
+    let deadline = timeout.map(|t| Instant::now() + t);
+    let mut slots: Vec<Option<Request>> = streams.iter().map(|_| None).collect();
+    let mut remaining = streams.len();
+    while remaining > 0 {
+        let mut progressed = false;
+        for (i, s) in streams.iter_mut().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let peer = i + 1;
+            let ready = frame_ready(s).map_err(|e| {
+                io_error(rank, timeout, &format!("probing rank {peer} for a request"), e)
+            })?;
+            match ready {
+                Ready::Idle => {}
+                Ready::Eof => {
+                    // in lockstep SPMD a leaf never legitimately closes
+                    // its connection while the hub is inside a
+                    // collective: the peer returned early or its
+                    // process died — either way the group is over
+                    return Err(CommError::RemoteAbort {
+                        origin_rank: peer,
+                        message: "connection closed mid-collective (rank exited early or its \
+                                  process died)"
+                            .to_string(),
+                    });
+                }
+                Ready::Frame => {
+                    let frame = read_frame(s).map_err(|e| {
+                        io_error(rank, timeout, &format!("request from rank {peer}"), e)
+                    })?;
+                    match frame {
+                        Frame::Abort(e) => return Err(e),
+                        Frame::Request(req) => {
+                            if req.code != code || req.root != root || req.op != op {
+                                // detected on the hub (rank 0), like
+                                // every other hub-side contract check
+                                return Err(CommError::ContractViolation {
+                                    rank: 0,
+                                    message: format!(
+                                        "collective mismatch — rank 0 entered {code:?}(root \
+                                         {root}), rank {peer} entered {:?}(root {})",
+                                        req.code, req.root
+                                    ),
+                                });
+                            }
+                            slots[i] = Some(req);
+                            remaining -= 1;
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }
+        if remaining > 0 && !progressed {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(CommError::Timeout {
+                        rank,
+                        seconds: timeout.map_or(0.0, |t| t.as_secs_f64()),
+                        waiting_for: format!("requests from {remaining} rank(s)"),
+                    });
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+}
+
+pub(crate) enum Reply {
     Ok { max_entry: f64, parts: Vec<Vec<f64>> },
     Error(CommError),
 }
 
-fn read_reply(stream: &mut TcpStream) -> io::Result<Reply> {
+pub(crate) fn read_reply(stream: &mut TcpStream) -> io::Result<Reply> {
     let mut status = [0u8; 1];
     stream.read_exact(&mut status)?;
     match status[0] {
@@ -323,7 +455,7 @@ fn read_reply(stream: &mut TcpStream) -> io::Result<Reply> {
 /// usage contract over every rank's contribution. All reductions go
 /// through [`fold`] in rank order — bitwise identical to the thread
 /// backend by construction.
-fn hub_replies(
+pub(crate) fn hub_replies(
     code: OpCode,
     op: u8,
     root: usize,
@@ -409,14 +541,69 @@ pub struct SocketComm {
 }
 
 impl SocketComm {
+    /// The hub handle (rank 0) over already-rendezvoused leaf streams,
+    /// index i ↔ rank i + 1. Used by the in-process runner below and by
+    /// the process launcher ([`super::proc`]), whose parent rank holds
+    /// streams to spawned worker processes.
+    pub(crate) fn hub_from_streams(
+        size: usize,
+        streams: Vec<TcpStream>,
+        model: CostModel,
+        timeout: Option<Duration>,
+    ) -> SocketComm {
+        debug_assert_eq!(streams.len() + 1, size);
+        SocketComm {
+            rank: 0,
+            size,
+            clock: Clock::new(),
+            model,
+            conn: Conn::Hub { streams },
+            timeout,
+            failed: None,
+            tracer: Tracer::new(0),
+        }
+    }
+
+    /// A leaf handle over an already-rendezvoused stream to the hub.
+    pub(crate) fn leaf_from_stream(
+        rank: usize,
+        size: usize,
+        stream: TcpStream,
+        model: CostModel,
+        timeout: Option<Duration>,
+    ) -> SocketComm {
+        SocketComm {
+            rank,
+            size,
+            clock: Clock::new(),
+            model,
+            conn: Conn::Leaf { stream },
+            timeout,
+            failed: None,
+            tracer: Tracer::new(rank),
+        }
+    }
+
+    /// Tear the handle down into its final clock, tracer, and streams
+    /// (the hub's leaf streams in rank order, or a leaf's single hub
+    /// stream) — the process transport reuses the collective streams
+    /// for its join frames after the rank function returns.
+    pub(crate) fn into_parts(self) -> (Clock, Tracer, Vec<TcpStream>) {
+        let streams = match self.conn {
+            Conn::Hub { streams } => streams,
+            Conn::Leaf { stream } => vec![stream],
+        };
+        (self.clock, self.tracer, streams)
+    }
+
     /// One collective round: contribute `payload`, receive this rank's
     /// reply parts plus the max clock entry time over all ranks.
     ///
     /// Every exit below the fail-fast check closes exactly one tracer
     /// comm record (success or failure), so an aborted or timed-out run
     /// never leaves a collective span open. The wait split is the time
-    /// parked on the wire: `read_reply` for a leaf, the rank-ordered
-    /// frame-read loop for the hub.
+    /// parked on the wire: `read_reply` for a leaf, the frame-
+    /// collection poll ([`collect_frames`]) for the hub.
     fn exchange(
         &mut self,
         probe: Probe,
@@ -453,53 +640,21 @@ impl SocketComm {
                 }
             }
             Conn::Hub { streams } => {
-                let mut times = vec![now];
-                let mut provided_flags = vec![provided];
-                let mut parts: Vec<Vec<f64>> = vec![payload];
-                let mut failure: Option<CommError> = None;
                 let parked = self.tracer.comm_start();
-                for (i, s) in streams.iter_mut().enumerate() {
-                    match read_frame(s) {
-                        Ok(Frame::Request(req)) => {
-                            if req.code != code || req.root != root || req.op != op {
-                                // detected on the hub (rank 0), like
-                                // every other hub-side contract check
-                                failure = Some(CommError::ContractViolation {
-                                    rank: 0,
-                                    message: format!(
-                                        "collective mismatch — rank 0 entered {code:?}(root \
-                                         {root}), rank {} entered {:?}(root {})",
-                                        i + 1,
-                                        req.code,
-                                        req.root
-                                    ),
-                                });
-                                break;
-                            }
-                            times.push(req.time);
-                            provided_flags.push(req.provided);
-                            parts.push(req.payload);
-                        }
-                        Ok(Frame::Abort(e)) => {
-                            failure = Some(e);
-                            break;
-                        }
-                        Err(e) => {
-                            failure = Some(io_error(
-                                rank,
-                                timeout,
-                                &format!("request from rank {}", i + 1),
-                                e,
-                            ));
-                            break;
-                        }
-                    }
-                }
+                let collected = collect_frames(streams, code, op, root, rank, timeout);
                 wait_s = self.tracer.elapsed_since(parked);
-                let computed = match failure {
-                    Some(e) => Err(e),
-                    None => hub_replies(code, op, root, &provided_flags, &parts, size),
-                };
+                let computed = collected.and_then(|requests| {
+                    let mut times = vec![now];
+                    let mut provided_flags = vec![provided];
+                    let mut parts: Vec<Vec<f64>> = vec![payload];
+                    for req in requests {
+                        times.push(req.time);
+                        provided_flags.push(req.provided);
+                        parts.push(req.payload);
+                    }
+                    hub_replies(code, op, root, &provided_flags, &parts, size)
+                        .map(|replies| (times, replies))
+                });
                 match computed {
                     Err(e) => {
                         // relay the failure so ranks parked in
@@ -507,7 +662,7 @@ impl SocketComm {
                         send_error_to_all(streams, &e);
                         Err(e)
                     }
-                    Ok(mut replies) => {
+                    Ok((times, mut replies)) => {
                         let max_entry = times.iter().fold(0.0f64, |a, &b| a.max(b));
                         let mut write_err = None;
                         for (i, s) in streams.iter_mut().enumerate() {
@@ -723,7 +878,7 @@ impl Communicator for SocketComm {
 
 // ---------------------------------------------------------------- runners
 
-fn accept_with_deadline(
+pub(crate) fn accept_with_deadline(
     listener: &TcpListener,
     deadline: Option<Instant>,
 ) -> io::Result<TcpStream> {
@@ -753,13 +908,13 @@ fn accept_with_deadline(
     }
 }
 
-fn apply_stream_timeouts(stream: &TcpStream, timeout: Option<Duration>) {
+pub(crate) fn apply_stream_timeouts(stream: &TcpStream, timeout: Option<Duration>) {
     stream.set_read_timeout(timeout).ok();
     stream.set_write_timeout(timeout).ok();
 }
 
 /// Rank 0 rendezvous: accept every leaf, slotting streams by rank id.
-fn hub_rendezvous(
+pub(crate) fn hub_rendezvous(
     listener: &TcpListener,
     p: usize,
     timeout: Option<Duration>,
@@ -788,12 +943,26 @@ fn hub_rendezvous(
     Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
 }
 
-/// Leaf rendezvous: connect to the hub and send the hello.
-fn leaf_rendezvous(rank: usize, port: u16, timeout: Option<Duration>) -> CommResult<TcpStream> {
-    let addr = SocketAddr::from(([127, 0, 0, 1], port));
+/// Leaf rendezvous: connect to the hub at `addr` (a `host:port`
+/// string — `127.0.0.1:<port>` for the in-process runner, the hub
+/// address handed to a spawned worker for the process transport) and
+/// send the hello.
+pub(crate) fn leaf_rendezvous(
+    rank: usize,
+    addr: &str,
+    timeout: Option<Duration>,
+) -> CommResult<TcpStream> {
+    let resolved: SocketAddr = addr
+        .to_socket_addrs()
+        .map_err(|e| io_error(rank, timeout, "resolving the rendezvous address", e))?
+        .next()
+        .ok_or_else(|| CommError::Transport {
+            rank,
+            message: format!("rendezvous address {addr:?} resolved to nothing"),
+        })?;
     let mut stream = match timeout {
-        Some(t) => TcpStream::connect_timeout(&addr, t),
-        None => TcpStream::connect(addr),
+        Some(t) => TcpStream::connect_timeout(&resolved, t),
+        None => TcpStream::connect(resolved),
     }
     .map_err(|e| io_error(rank, timeout, "connecting to the rank 0 rendezvous", e))?;
     stream.set_nodelay(true).ok();
@@ -867,31 +1036,13 @@ pub fn run_with_clocks_timeout<R: Send>(
         let mut handles = Vec::with_capacity(p);
         handles.push(scope.spawn(move || {
             let streams = hub_rendezvous(&listener, p, timeout)?;
-            let ctx = SocketComm {
-                rank: 0,
-                size: p,
-                clock: Clock::new(),
-                model,
-                conn: Conn::Hub { streams },
-                timeout,
-                failed: None,
-                tracer: Tracer::new(0),
-            };
+            let ctx = SocketComm::hub_from_streams(p, streams, model, timeout);
             Ok(run_rank(ctx, f))
         }));
         for rank in 1..p {
             handles.push(scope.spawn(move || {
-                let stream = leaf_rendezvous(rank, port, timeout)?;
-                let ctx = SocketComm {
-                    rank,
-                    size: p,
-                    clock: Clock::new(),
-                    model,
-                    conn: Conn::Leaf { stream },
-                    timeout,
-                    failed: None,
-                    tracer: Tracer::new(rank),
-                };
+                let stream = leaf_rendezvous(rank, &format!("127.0.0.1:{port}"), timeout)?;
+                let ctx = SocketComm::leaf_from_stream(rank, p, stream, model, timeout);
                 Ok(run_rank(ctx, f))
             }));
         }
@@ -1017,10 +1168,11 @@ mod tests {
     }
 
     #[test]
-    fn silent_peer_death_yields_timeout_not_hang() {
+    fn silent_peer_death_yields_typed_error_not_hang() {
         // rank 1 returns without entering the collective; its stream
-        // closes, and the hub must observe the dead peer (EOF ⇒
-        // Transport) or the deadline (⇒ Timeout) — never a hang
+        // closes, and the hub's poll must observe the dead peer (EOF ⇒
+        // RemoteAbort naming rank 1) or the deadline (⇒ Timeout) —
+        // never a hang
         let results = run_with_clocks_timeout(
             3,
             CostModel::free(),
@@ -1037,9 +1189,46 @@ mod tests {
         assert!(results[1].0.is_ok());
         for rank in [0usize, 2] {
             match &results[rank].0 {
-                Err(CommError::Timeout { .. }) | Err(CommError::Transport { .. }) => {}
-                other => panic!("rank {rank}: expected Timeout/Transport, got {other:?}"),
+                Err(CommError::RemoteAbort { origin_rank: 1, .. })
+                | Err(CommError::Timeout { .. }) => {}
+                other => panic!("rank {rank}: expected RemoteAbort(1)/Timeout, got {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn abort_fan_out_is_prompt() {
+        // rank 3 aborts immediately while rank 1 dawdles before
+        // entering the collective: the readiness poll must relay the
+        // abort to the hub and rank 2 well before rank 1's request
+        // arrives (the old rank-ordered read loop sat on rank 1 first)
+        let results = run(4, CostModel::free(), |ctx| {
+            let begin = Instant::now();
+            let out = match ctx.rank() {
+                3 => Err(ctx.abort("early failure on the highest rank")),
+                1 => {
+                    std::thread::sleep(Duration::from_millis(1500));
+                    ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ())
+                }
+                _ => ctx.allreduce_scalar(1.0, Op::Sum).map(|_| ()),
+            };
+            (out, begin.elapsed())
+        })
+        .unwrap();
+        for rank in [0usize, 1, 2] {
+            match &results[rank].0 {
+                Err(CommError::RemoteAbort { origin_rank: 3, message }) => {
+                    assert!(message.contains("early failure"), "{message}");
+                }
+                other => panic!("rank {rank}: expected RemoteAbort from rank 3, got {other:?}"),
+            }
+        }
+        for rank in [0usize, 2] {
+            let took = results[rank].1;
+            assert!(
+                took < Duration::from_millis(1000),
+                "rank {rank} woke only after {took:?} — abort fan-out is not prompt"
+            );
         }
     }
 

@@ -48,14 +48,16 @@ struct BoardState {
 
 /// Poisonable all-rank rendezvous (a `std::sync::Barrier` cannot be
 /// woken early, which is exactly the hang this transport must avoid).
-struct Board {
+/// Also the node-local rendezvous of the hierarchical transport
+/// ([`super::hier`]), which runs one board per node.
+pub(crate) struct Board {
     state: Mutex<BoardState>,
     cv: Condvar,
     size: usize,
 }
 
 impl Board {
-    fn new(size: usize) -> Board {
+    pub(crate) fn new(size: usize) -> Board {
         Board {
             state: Mutex::new(BoardState { arrived: 0, generation: 0, poison: None }),
             cv: Condvar::new(),
@@ -65,7 +67,7 @@ impl Board {
 
     /// Rendezvous of all ranks. Fails fast if the board is (or becomes)
     /// poisoned, or when `timeout` elapses before every peer arrives.
-    fn wait(&self, rank: usize, timeout: Option<Duration>) -> CommResult<()> {
+    pub(crate) fn wait(&self, rank: usize, timeout: Option<Duration>) -> CommResult<()> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut s = self.state.lock().unwrap();
         if let Some(e) = &s.poison {
@@ -115,7 +117,7 @@ impl Board {
 
     /// Poison the board (first abort wins) and wake every waiter.
     /// Returns the canonical group abort.
-    fn poison(&self, err: CommError) -> CommError {
+    pub(crate) fn poison(&self, err: CommError) -> CommError {
         let mut s = self.state.lock().unwrap();
         let out = s.poison.get_or_insert(err).clone();
         self.cv.notify_all();

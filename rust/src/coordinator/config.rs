@@ -132,6 +132,18 @@ pub enum Transport {
     /// the network code path; results are bitwise identical to
     /// [`Transport::Threads`].
     Sockets,
+    /// Real OS worker processes: rank 0 spawns `p - 1` copies of the
+    /// `dopinf` binary (hidden `worker` subcommand) that join the
+    /// socket hub over localhost TCP and run the full rank pipeline.
+    /// Results are bitwise identical to [`Transport::Threads`]; a
+    /// killed worker surfaces as a typed error, never a hang.
+    Processes,
+    /// Hierarchical two-level collectives ([`crate::comm::hier`]):
+    /// ranks grouped into [`DOpInfConfig::nodes`] nodes, thread board
+    /// within a node, binary leader tree between nodes. Bitwise
+    /// identical to the flat transports; costs come from a
+    /// [`crate::comm::TwoLevelModel`].
+    Hier,
 }
 
 /// Full configuration of one distributed run.
@@ -145,6 +157,19 @@ pub struct DOpInfConfig {
     pub cost_model: CostModel,
     /// which communicator backend carries the collectives
     pub transport: Transport,
+    /// node count for [`Transport::Hier`] (`--nodes`): ranks are split
+    /// into this many contiguous, balanced groups; each group shares a
+    /// thread board and its first rank speaks for it on the leader
+    /// tree. Ignored by the flat transports. Must satisfy
+    /// `1 <= nodes <= p`.
+    pub nodes: usize,
+    /// worker host list for [`Transport::Processes`] (`--hosts`): one
+    /// entry per rank. All-localhost lists auto-spawn the workers; any
+    /// remote entry switches to print-the-worker-commands mode (the
+    /// operator launches them by hand — see
+    /// `examples/multinode_quickstart.md`). Empty means localhost
+    /// everywhere.
+    pub hosts: Vec<String>,
     /// storage read-path model for the per-chunk Step I charges
     pub disk: DiskModel,
     /// streamed-ingestion chunk size in local rows. `None` streams the
@@ -221,6 +246,8 @@ impl DOpInfConfig {
             opinf,
             cost_model: CostModel::shared_memory(),
             transport: Transport::default(),
+            nodes: 1,
+            hosts: Vec::new(),
             disk: DiskModel::nvme(),
             chunk_rows,
             artifacts_dir: None,
@@ -319,6 +346,8 @@ mod tests {
         });
         assert_eq!(cfg.p, 4);
         assert_eq!(cfg.transport, Transport::Threads);
+        assert_eq!(cfg.nodes, 1);
+        assert!(cfg.hosts.is_empty());
         assert!(cfg.artifacts_dir.is_none());
         assert!(cfg.probes.is_empty());
         assert!(cfg.comm_timeout.is_none());

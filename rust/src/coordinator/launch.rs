@@ -1,0 +1,460 @@
+//! Launch plumbing for [`Transport::Processes`]: the pipeline job
+//! frame a spawned worker receives, host-list validation for the
+//! documented multi-machine deployment, and the worker-side entry
+//! point behind the hidden `dopinf worker` subcommand.
+//!
+//! ## Job frame
+//!
+//! The parent serializes the *entire* run configuration — algorithm
+//! hyperparameters, cost/disk models, chunking, probes, the data
+//! source — through [`crate::util::codec`] and ships it right after
+//! the rendezvous ([`crate::comm::proc`]). Workers rebuild the exact
+//! [`DOpInfConfig`] and re-derive everything the parent derived
+//! (partition ranges, engine, regularization grid) from it, so both
+//! sides run the identical `rank_pipeline` and the process transport
+//! stays bitwise identical to the thread transport by construction.
+//!
+//! An in-memory data source cannot cross the process boundary; runs
+//! that need one keep the thread transports ([`encode_pipeline_job`]
+//! rejects it with a setup error, before any process is spawned).
+//!
+//! ## Hosts
+//!
+//! `--hosts` is validated here ([`plan_hosts`]): an empty or
+//! all-localhost list auto-spawns the workers on this machine; any
+//! remote entry switches to manual mode — the operator starts each
+//! `dopinf worker` by hand with the printed command line (see
+//! `examples/multinode_quickstart.md`). Multi-machine runs are
+//! documented but out of scope to test in this repository.
+
+use std::io::{self, Read};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+use super::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
+use super::pipeline::{prepare, rank_pipeline};
+use crate::comm::error::{CommError, CommResult};
+use crate::comm::proc::{self, WorkerBoot, WorkerFailure};
+use crate::comm::socket::{self, SocketComm};
+use crate::comm::{Communicator, CostModel, DiskModel};
+use crate::opinf::serial::OpInfConfig;
+use crate::rom::RegGrid;
+use crate::sim::synth::SynthSpec;
+use crate::util::codec;
+
+// ------------------------------------------------------------------ hosts
+
+/// How a `--transport processes` group comes up, from the `--hosts`
+/// list.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HostPlan {
+    /// every rank is local: the parent spawns the workers itself
+    Spawn,
+    /// at least one rank is remote: the operator launches the workers
+    /// manually (one host per rank, rank order)
+    Manual(Vec<String>),
+}
+
+/// Validate a `--hosts` list against the rank count. Empty means
+/// localhost everywhere. A non-empty list must name exactly one host
+/// per rank; entry 0 is the parent and must be local.
+pub fn plan_hosts(hosts: &[String], p: usize) -> anyhow::Result<HostPlan> {
+    if hosts.is_empty() {
+        return Ok(HostPlan::Spawn);
+    }
+    anyhow::ensure!(
+        hosts.len() == p,
+        "--hosts names {} host(s) for p = {p} rank(s); give exactly one per rank",
+        hosts.len()
+    );
+    for (rank, h) in hosts.iter().enumerate() {
+        anyhow::ensure!(
+            !h.is_empty() && !h.chars().any(char::is_whitespace),
+            "--hosts entry {rank} ({h:?}) is not a valid host name"
+        );
+    }
+    anyhow::ensure!(
+        is_local_host(&hosts[0]),
+        "--hosts entry 0 ({:?}) must be local — rank 0 is this process",
+        hosts[0]
+    );
+    if hosts.iter().all(|h| is_local_host(h)) {
+        Ok(HostPlan::Spawn)
+    } else {
+        Ok(HostPlan::Manual(hosts.to_vec()))
+    }
+}
+
+fn is_local_host(h: &str) -> bool {
+    matches!(h, "localhost" | "127.0.0.1" | "::1")
+}
+
+// -------------------------------------------------------------- job frame
+
+/// Serialize the pipeline job a worker runs: `traced | config |
+/// source`. Fails (before anything is spawned) on sources that cannot
+/// cross a process boundary.
+pub(crate) fn encode_pipeline_job(
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+    traced: bool,
+) -> anyhow::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    codec::write_bool(&mut buf, traced).expect("vec write");
+    encode_config(&mut buf, cfg)?;
+    encode_source(&mut buf, source)?;
+    Ok(buf)
+}
+
+pub(crate) fn decode_pipeline_job(
+    r: &mut impl Read,
+) -> io::Result<(DOpInfConfig, DataSource, bool)> {
+    let traced = codec::read_bool(r)?;
+    let cfg = decode_config(r)?;
+    let source = decode_source(r)?;
+    Ok((cfg, source, traced))
+}
+
+/// `present bool | payload if present` — byte-identical to
+/// [`codec::write_opt`], hand-rolled so every field line reads the
+/// same way.
+fn write_opt_usize(buf: &mut Vec<u8>, v: Option<usize>) {
+    codec::write_bool(buf, v.is_some()).expect("vec write");
+    if let Some(x) = v {
+        codec::write_usize(buf, x).expect("vec write");
+    }
+}
+
+fn read_opt_usize(r: &mut (impl Read + ?Sized)) -> io::Result<Option<usize>> {
+    Ok(if codec::read_bool(r)? { Some(codec::read_usize(r)?) } else { None })
+}
+
+fn encode_config(buf: &mut Vec<u8>, cfg: &DOpInfConfig) -> anyhow::Result<()> {
+    codec::write_usize(buf, cfg.p).expect("vec write");
+    codec::write_usize(buf, cfg.opinf.ns).expect("vec write");
+    codec::write_f64(buf, cfg.opinf.energy_target).expect("vec write");
+    write_opt_usize(buf, cfg.opinf.r_override);
+    codec::write_bool(buf, cfg.opinf.scaling).expect("vec write");
+    codec::write_f64s(buf, &cfg.opinf.grid.beta1).expect("vec write");
+    codec::write_f64s(buf, &cfg.opinf.grid.beta2).expect("vec write");
+    codec::write_f64(buf, cfg.opinf.max_growth).expect("vec write");
+    codec::write_usize(buf, cfg.opinf.nt_p).expect("vec write");
+    let (alpha, beta, gamma) = cfg.cost_model.parts();
+    codec::write_f64(buf, alpha).expect("vec write");
+    codec::write_f64(buf, beta).expect("vec write");
+    codec::write_f64(buf, gamma).expect("vec write");
+    codec::write_f64(buf, cfg.disk.bandwidth).expect("vec write");
+    codec::write_f64(buf, cfg.disk.seek_latency).expect("vec write");
+    write_opt_usize(buf, cfg.chunk_rows);
+    let artifacts = cfg
+        .artifacts_dir
+        .as_ref()
+        .map(|p| {
+            p.to_str().map(str::to_string).ok_or_else(|| {
+                anyhow::anyhow!("artifacts path {} is not UTF-8", p.display())
+            })
+        })
+        .transpose()?;
+    codec::write_bool(buf, artifacts.is_some()).expect("vec write");
+    if let Some(s) = &artifacts {
+        codec::write_str(buf, s).expect("vec write");
+    }
+    codec::write_usize(buf, cfg.probes.len()).expect("vec write");
+    for &(var, row) in &cfg.probes {
+        codec::write_usize(buf, var).expect("vec write");
+        codec::write_usize(buf, row).expect("vec write");
+    }
+    codec::write_bool(buf, cfg.comm_timeout.is_some()).expect("vec write");
+    if let Some(t) = cfg.comm_timeout {
+        codec::write_f64(buf, t).expect("vec write");
+    }
+    codec::write_usize(buf, cfg.threads_per_rank).expect("vec write");
+    codec::write_bool(buf, cfg.allow_oversubscribe).expect("vec write");
+    Ok(())
+}
+
+fn decode_config(r: &mut impl Read) -> io::Result<DOpInfConfig> {
+    let p = codec::read_usize(r)?;
+    let opinf = OpInfConfig {
+        ns: codec::read_usize(r)?,
+        energy_target: codec::read_f64(r)?,
+        r_override: read_opt_usize(r)?,
+        scaling: codec::read_bool(r)?,
+        grid: RegGrid { beta1: codec::read_f64s(r)?, beta2: codec::read_f64s(r)? },
+        max_growth: codec::read_f64(r)?,
+        nt_p: codec::read_usize(r)?,
+    };
+    let (alpha, beta, gamma) =
+        (codec::read_f64(r)?, codec::read_f64(r)?, codec::read_f64(r)?);
+    let disk = DiskModel { bandwidth: codec::read_f64(r)?, seek_latency: codec::read_f64(r)? };
+    let chunk_rows = read_opt_usize(r)?;
+    let artifacts_dir =
+        if codec::read_bool(r)? { Some(PathBuf::from(codec::read_str(r)?)) } else { None };
+    let n_probes = codec::read_usize(r)?;
+    let mut probes = Vec::with_capacity(n_probes);
+    for _ in 0..n_probes {
+        probes.push((codec::read_usize(r)?, codec::read_usize(r)?));
+    }
+    let comm_timeout = if codec::read_bool(r)? { Some(codec::read_f64(r)?) } else { None };
+    let threads_per_rank = codec::read_usize(r)?;
+    let allow_oversubscribe = codec::read_bool(r)?;
+    Ok(DOpInfConfig {
+        p,
+        opinf,
+        cost_model: CostModel::from_parts(alpha, beta, gamma),
+        transport: Transport::Processes,
+        nodes: 1,
+        hosts: Vec::new(),
+        disk,
+        chunk_rows,
+        artifacts_dir,
+        probes,
+        comm_timeout,
+        threads_per_rank,
+        allow_oversubscribe,
+        // exports are flushed by the parent from the shipped-back
+        // traces; a worker never writes trace/metrics files itself
+        trace: None,
+        metrics: None,
+        // the SIMD tier crossed on the worker command line and is
+        // already armed process-wide by the time the job is decoded
+        simd: None,
+    })
+}
+
+const SRC_FILE: u8 = 0;
+const SRC_SYNTHETIC: u8 = 1;
+const SRC_FAULTY: u8 = 2;
+
+fn encode_source(buf: &mut Vec<u8>, source: &DataSource) -> anyhow::Result<()> {
+    match source {
+        DataSource::File { path, variables, nt_train } => {
+            let path = path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("dataset path {} is not UTF-8", path.display()))?;
+            codec::write_u8(buf, SRC_FILE).expect("vec write");
+            codec::write_str(buf, path).expect("vec write");
+            codec::write_usize(buf, variables.len()).expect("vec write");
+            for v in variables {
+                codec::write_str(buf, v).expect("vec write");
+            }
+            write_opt_usize(buf, *nt_train);
+        }
+        DataSource::Synthetic(spec) => {
+            codec::write_u8(buf, SRC_SYNTHETIC).expect("vec write");
+            codec::write_usize(buf, spec.nx).expect("vec write");
+            codec::write_usize(buf, spec.ns).expect("vec write");
+            codec::write_usize(buf, spec.nt).expect("vec write");
+            codec::write_usize(buf, spec.modes).expect("vec write");
+            codec::write_f64(buf, spec.dt).expect("vec write");
+            codec::write_u64(buf, spec.seed).expect("vec write");
+            codec::write_f64(buf, spec.offset).expect("vec write");
+        }
+        DataSource::Faulty { inner, fault } => {
+            codec::write_u8(buf, SRC_FAULTY).expect("vec write");
+            encode_source(buf, inner)?;
+            codec::write_usize(buf, fault.rank).expect("vec write");
+            codec::write_usize(buf, fault.after_chunks).expect("vec write");
+        }
+        DataSource::InMemory(_) => anyhow::bail!(
+            "an in-memory data source cannot cross the process boundary of \
+             `--transport processes`; write it to a SNAPD file or use --synth"
+        ),
+    }
+    Ok(())
+}
+
+fn decode_source(r: &mut impl Read) -> io::Result<DataSource> {
+    match codec::read_u8(r)? {
+        SRC_FILE => {
+            let path = PathBuf::from(codec::read_str(r)?);
+            let n = codec::read_usize(r)?;
+            let mut variables = Vec::with_capacity(n);
+            for _ in 0..n {
+                variables.push(codec::read_str(r)?);
+            }
+            let nt_train = read_opt_usize(r)?;
+            Ok(DataSource::File { path, variables, nt_train })
+        }
+        SRC_SYNTHETIC => Ok(DataSource::Synthetic(SynthSpec {
+            nx: codec::read_usize(r)?,
+            ns: codec::read_usize(r)?,
+            nt: codec::read_usize(r)?,
+            modes: codec::read_usize(r)?,
+            dt: codec::read_f64(r)?,
+            seed: codec::read_u64(r)?,
+            offset: codec::read_f64(r)?,
+        })),
+        SRC_FAULTY => {
+            let inner = Box::new(decode_source(r)?);
+            let fault =
+                FaultSpec { rank: codec::read_usize(r)?, after_chunks: codec::read_usize(r)? };
+            Ok(DataSource::Faulty { inner, fault })
+        }
+        other => Err(codec::corrupt(format!("data source tag {other}"))),
+    }
+}
+
+// ------------------------------------------------------------- worker side
+
+/// Entry point of the hidden `dopinf worker` subcommand: rendezvous
+/// with the hub, read the job frame, dispatch on its tag. `Ok` means
+/// the join report was delivered — including reports that *carry* a
+/// rank-local failure; `Err` means this worker could not even reach
+/// the reporting step (the hub learns through the broken stream).
+pub fn worker_main(boot: &WorkerBoot) -> CommResult<()> {
+    let (stream, tag, job) = proc::worker_connect(boot)?;
+    match tag {
+        proc::JOB_EXERCISE => proc::run_exercise_worker(boot, stream, &job),
+        proc::JOB_PIPELINE => run_pipeline_worker(boot, stream, &job),
+        other => Err(CommError::Transport {
+            rank: boot.rank,
+            message: format!("unknown job tag {other} from the hub"),
+        }),
+    }
+}
+
+/// Worker-side handler for a pipeline job: rebuild the configuration,
+/// re-derive the launch-time setup, run this rank's pipeline over the
+/// leaf communicator, and ship the join report. A setup divergence
+/// (the parent validated the same config, so this is exceptional)
+/// aborts the group before reporting, so siblings never hang on it.
+fn run_pipeline_worker(boot: &WorkerBoot, stream: TcpStream, job: &[u8]) -> CommResult<()> {
+    let mut r = io::Cursor::new(job);
+    let (cfg, source, traced) = decode_pipeline_job(&mut r)
+        .map_err(|e| socket::io_error(boot.rank, boot.timeout, "decoding the pipeline job", e))?;
+    let mut comm =
+        SocketComm::leaf_from_stream(boot.rank, boot.size, stream, cfg.cost_model, boot.timeout);
+    comm.tracer_mut().set_enabled(traced);
+    crate::linalg::par::set_threads(cfg.threads_per_rank.max(1));
+    let outcome = match prepare(&cfg, &source) {
+        Ok((ranges, engine, pairs, nx, nt)) => {
+            rank_pipeline(&mut comm, &cfg, &source, &ranges, &engine, &pairs, nx, nt)
+                // the replicated result is recomputed by the parent;
+                // the report only needs success/failure
+                .map(|_| Vec::new())
+                .map_err(|e| match e.downcast::<CommError>() {
+                    Ok(ce) => WorkerFailure::Comm(ce),
+                    Err(e) => WorkerFailure::Other(format!("{e:#}")),
+                })
+        }
+        Err(e) => {
+            let msg = format!("worker setup failed: {e:#}");
+            let _ = comm.abort(&msg);
+            Err(WorkerFailure::Other(msg))
+        }
+    };
+    proc::send_join(comm, boot.timeout, &outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rom::RegGrid;
+
+    fn sample_cfg() -> DOpInfConfig {
+        let mut cfg = DOpInfConfig::new(3, OpInfConfig {
+            ns: 2,
+            energy_target: 0.999_9,
+            r_override: Some(5),
+            scaling: true,
+            grid: RegGrid::coarse(),
+            max_growth: 1.3,
+            nt_p: 77,
+        });
+        cfg.cost_model = CostModel::shared_memory();
+        cfg.chunk_rows = Some(9);
+        cfg.probes = vec![(0, 3), (1, 41)];
+        cfg.comm_timeout = Some(12.5);
+        cfg.threads_per_rank = 2;
+        cfg.allow_oversubscribe = true;
+        cfg
+    }
+
+    #[test]
+    fn pipeline_job_roundtrips_exactly() {
+        let cfg = sample_cfg();
+        let source = DataSource::Faulty {
+            inner: Box::new(DataSource::Synthetic(SynthSpec {
+                nx: 123,
+                nt: 45,
+                ..Default::default()
+            })),
+            fault: FaultSpec { rank: 1, after_chunks: 4 },
+        };
+        let buf = encode_pipeline_job(&cfg, &source, true).unwrap();
+        let (got, src, traced) = decode_pipeline_job(&mut io::Cursor::new(buf)).unwrap();
+        assert!(traced);
+        assert_eq!(got.p, 3);
+        assert_eq!(got.opinf.ns, 2);
+        assert_eq!(got.opinf.r_override, Some(5));
+        assert!(got.opinf.scaling);
+        // grid values round-trip bitwise — the worker's pair grid must
+        // be the parent's, or the winner vote diverges
+        assert_eq!(got.opinf.grid.beta1, cfg.opinf.grid.beta1);
+        assert_eq!(got.opinf.grid.beta2, cfg.opinf.grid.beta2);
+        assert_eq!(got.opinf.nt_p, 77);
+        assert_eq!(got.cost_model.parts(), cfg.cost_model.parts());
+        assert_eq!(got.disk.bandwidth, cfg.disk.bandwidth);
+        assert_eq!(got.chunk_rows, Some(9));
+        assert_eq!(got.probes, vec![(0, 3), (1, 41)]);
+        assert_eq!(got.comm_timeout, Some(12.5));
+        assert_eq!(got.threads_per_rank, 2);
+        assert!(got.allow_oversubscribe);
+        assert_eq!(got.transport, Transport::Processes);
+        match src {
+            DataSource::Faulty { inner, fault } => {
+                assert_eq!((fault.rank, fault.after_chunks), (1, 4));
+                match *inner {
+                    DataSource::Synthetic(s) => assert_eq!((s.nx, s.nt), (123, 45)),
+                    _ => panic!("inner source type lost"),
+                }
+            }
+            _ => panic!("source type lost"),
+        }
+    }
+
+    #[test]
+    fn file_source_roundtrips() {
+        let src = DataSource::File {
+            path: PathBuf::from("data/flow.snapd"),
+            variables: vec!["ux".into(), "uy".into()],
+            nt_train: Some(250),
+        };
+        let mut buf = Vec::new();
+        encode_source(&mut buf, &src).unwrap();
+        match decode_source(&mut io::Cursor::new(buf)).unwrap() {
+            DataSource::File { path, variables, nt_train } => {
+                assert_eq!(path, PathBuf::from("data/flow.snapd"));
+                assert_eq!(variables, vec!["ux".to_string(), "uy".to_string()]);
+                assert_eq!(nt_train, Some(250));
+            }
+            _ => panic!("source type lost"),
+        }
+    }
+
+    #[test]
+    fn in_memory_source_is_rejected_before_spawn() {
+        let cfg = sample_cfg();
+        let q = crate::linalg::Matrix::zeros(4, 4);
+        let source = DataSource::InMemory(std::sync::Arc::new(q));
+        let e = encode_pipeline_job(&cfg, &source, false).unwrap_err();
+        assert!(format!("{e}").contains("cannot cross the process boundary"), "{e}");
+    }
+
+    #[test]
+    fn host_plans() {
+        let local = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(plan_hosts(&[], 4).unwrap(), HostPlan::Spawn);
+        assert_eq!(
+            plan_hosts(&local(&["localhost", "127.0.0.1", "::1"]), 3).unwrap(),
+            HostPlan::Spawn
+        );
+        let remote = local(&["localhost", "node1", "node2", "node1"]);
+        assert_eq!(plan_hosts(&remote, 4).unwrap(), HostPlan::Manual(remote.clone()));
+        // wrong arity, whitespace, and a remote rank 0 are all refused
+        assert!(plan_hosts(&remote, 3).is_err());
+        assert!(plan_hosts(&local(&["localhost", "bad host"]), 2).is_err());
+        assert!(plan_hosts(&local(&["node1", "localhost"]), 2).is_err());
+    }
+}

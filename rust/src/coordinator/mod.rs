@@ -7,11 +7,13 @@
 //! virtual clocks recording the Fig. 4 breakdown.
 //!
 //! * [`config`]   — run configuration + data sources
+//! * [`launch`]   — process-transport job codec + worker entry point
 //! * [`pipeline`] — the five-step distributed pipeline
 //! * [`timing`]   — per-rank timing reports and speedup tables
 //! * [`scaling`]  — the strong-scaling study harness (Fig. 4)
 
 pub mod config;
+pub mod launch;
 pub mod pipeline;
 pub mod scaling;
 pub mod timing;

@@ -126,9 +126,12 @@ struct RankOut {
 }
 
 /// Everything `run_distributed` resolves before ranks launch; failures
-/// here are [`DOpInfError::Setup`] — no rank ever started.
+/// here are [`DOpInfError::Setup`] — no rank ever started. Spawned
+/// worker processes re-run this from the shipped config
+/// ([`super::launch`]), so it must be deterministic in the config +
+/// source alone.
 #[allow(clippy::type_complexity)]
-fn prepare(
+pub(crate) fn prepare(
     cfg: &DOpInfConfig,
     source: &DataSource,
 ) -> Result<(Vec<crate::io::RowRange>, Engine, Vec<(f64, f64)>, usize, usize)> {
@@ -148,6 +151,14 @@ fn prepare(
         cfg.allow_oversubscribe,
     ) {
         anyhow::bail!("{msg}; lower --procs/--threads or pass --oversubscribe to opt in");
+    }
+    if cfg.transport == Transport::Hier {
+        anyhow::ensure!(
+            cfg.nodes >= 1 && cfg.nodes <= cfg.p,
+            "--nodes must satisfy 1 <= nodes <= p (got nodes = {}, p = {})",
+            cfg.nodes,
+            cfg.p
+        );
     }
     let ranges = distribute_tutorial(nx, cfg.p);
     let engine = match &cfg.artifacts_dir {
@@ -189,21 +200,24 @@ pub fn run_distributed(
     // consume it; off, every probe point is a single branch
     let traced = cfg.trace.is_some() || cfg.metrics.is_some();
 
-    let outputs: Vec<((Result<RankOut>, RankTrace), Clock)> = if cfg.p == 1 {
+    // rank 0's RankOut is Some (the replicated result); worker ranks of
+    // the process transport report success as None — the parent holds
+    // the identical replicated result, so nothing crosses the wire
+    let outputs: Vec<((Result<Option<RankOut>>, RankTrace), Clock)> = if cfg.p == 1 {
         // p = 1: no rank threads, no barrier machinery — the
         // zero-overhead single-rank backend
         let mut ctx = SelfComm::new();
         ctx.tracer_mut().set_enabled(traced);
         let out = rank_pipeline(&mut ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
         let trace = ctx.tracer_mut().take();
-        vec![((out, trace), ctx.into_clock())]
+        vec![((out.map(Some), trace), ctx.into_clock())]
     } else {
         match cfg.transport {
             Transport::Threads => {
                 comm::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
                     ctx.tracer_mut().set_enabled(traced);
                     let out = rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
-                    (out, ctx.tracer_mut().take())
+                    (out.map(Some), ctx.tracer_mut().take())
                 })
             }
             // a socket rendezvous failure (worker never connected)
@@ -212,10 +226,30 @@ pub fn run_distributed(
                 comm::socket::run_with_clocks_timeout(cfg.p, cfg.cost_model, timeout, |ctx| {
                     ctx.tracer_mut().set_enabled(traced);
                     let out = rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
-                    (out, ctx.tracer_mut().take())
+                    (out.map(Some), ctx.tracer_mut().take())
                 })
                 .map_err(DOpInfError::from)?
             }
+            // two-level collectives: node boards + a leader tree;
+            // results are bitwise identical to the flat transports, so
+            // the pipeline only swaps the runner and the cost model
+            // shape (flat α–β applied through the two-level terms)
+            Transport::Hier => comm::hier::run_with_clocks_timeout(
+                cfg.p,
+                cfg.nodes,
+                comm::TwoLevelModel::flat(cfg.cost_model),
+                timeout,
+                |ctx| {
+                    ctx.tracer_mut().set_enabled(traced);
+                    let out = rank_pipeline(ctx, cfg, source, &ranges, &engine, &pairs, nx, nt);
+                    (out.map(Some), ctx.tracer_mut().take())
+                },
+            ),
+            // real OS worker processes over the socket hub: rank 0 is
+            // this process, ranks 1..p are spawned `dopinf worker`s
+            Transport::Processes => run_process_ranks(
+                cfg, source, &ranges, &engine, &pairs, nx, nt, timeout, traced,
+            )?,
         }
     };
 
@@ -229,11 +263,14 @@ pub fn run_distributed(
         timings.push(RankTiming::from_clock(i, &clock));
         traces.push(trace);
         match out {
-            Ok(o) => {
+            Ok(Some(o)) => {
                 if i == 0 {
                     first = Some(o);
                 }
             }
+            // a successful process-transport worker: the parent's
+            // replicated copy of the result stands in for it
+            Ok(None) => {}
             Err(e) => failures.push((i, e)),
         }
     }
@@ -275,13 +312,87 @@ fn flush_observability(
     Ok(())
 }
 
+/// The process-transport runner: validate the host plan, launch
+/// `p - 1` worker processes with the serialized pipeline job, run rank
+/// 0 in this process against the hub, then fold the shipped-back
+/// worker clocks/traces/outcomes into the same join shape the
+/// in-process transports produce — so the aggregation below never
+/// knows which transport ran.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn run_process_ranks(
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+    ranges: &[crate::io::RowRange],
+    engine: &Engine,
+    pairs: &[(f64, f64)],
+    nx: usize,
+    nt: usize,
+    timeout: Option<std::time::Duration>,
+    traced: bool,
+) -> Result<Vec<((Result<Option<RankOut>>, RankTrace), Clock)>, DOpInfError> {
+    match super::launch::plan_hosts(&cfg.hosts, cfg.p).map_err(DOpInfError::Setup)? {
+        super::launch::HostPlan::Spawn => {}
+        super::launch::HostPlan::Manual(hosts) => {
+            return Err(DOpInfError::Setup(anyhow::anyhow!(
+                "--hosts names remote machines ({hosts:?}): multi-machine groups are launched \
+                 manually — start `dopinf worker --rank R --size {p} --hub <rank0-host>:<port>` \
+                 on each remote host (see examples/multinode_quickstart.md); this process \
+                 auto-spawns only all-localhost host lists",
+                p = cfg.p
+            )));
+        }
+    }
+    let job =
+        super::launch::encode_pipeline_job(cfg, source, traced).map_err(DOpInfError::Setup)?;
+    let mut launched = comm::proc::launch(comm::proc::LaunchSpec {
+        p: cfg.p,
+        model: cfg.cost_model,
+        timeout,
+        job_tag: comm::proc::JOB_PIPELINE,
+        job,
+        knobs: comm::proc::WorkerKnobs {
+            threads_per_rank: Some(cfg.threads_per_rank.max(1)),
+            simd: cfg.simd.map(|t| t.name().to_string()),
+        },
+    })
+    .map_err(DOpInfError::from)?;
+    launched.hub.tracer_mut().set_enabled(traced);
+    let out = rank_pipeline(&mut launched.hub, cfg, source, ranges, engine, pairs, nx, nt);
+    let trace0 = launched.hub.tracer_mut().take();
+    let (clock0, _hub_tracer, reports) = launched.join();
+    let mut outputs: Vec<((Result<Option<RankOut>>, RankTrace), Clock)> =
+        vec![((out.map(Some), trace0), clock0)];
+    for report in reports {
+        let trace = report.trace.unwrap_or(RankTrace {
+            rank: report.rank,
+            enabled: false,
+            spans: Vec::new(),
+            comm: Vec::new(),
+            gauges: BTreeMap::new(),
+        });
+        let out = match report.outcome {
+            // the worker ran to completion; the parent's replicated
+            // result stands in for its (identical) copy
+            Ok(_) => Ok(None),
+            // typed comm failures downcast in the aggregation exactly
+            // like a thread rank's error would
+            Err(comm::proc::WorkerFailure::Comm(e)) => Err(anyhow::Error::from(e)),
+            Err(comm::proc::WorkerFailure::Other(msg)) => Err(anyhow::anyhow!("{msg}")),
+        };
+        outputs.push(((out, trace), report.clock));
+    }
+    Ok(outputs)
+}
+
 /// One rank's pipeline, wrapped in the abort protocol
 /// ([`comm::abort_on_local_failure`]): a rank-local failure broadcasts
 /// an abort before returning, so sibling ranks parked at a collective
 /// wake with [`crate::comm::CommError::RemoteAbort`] instead of
-/// hanging; comm-layer failures pass through typed.
+/// hanging; comm-layer failures pass through typed. Also the body a
+/// spawned worker process runs over its leaf communicator
+/// ([`super::launch`]).
 #[allow(clippy::too_many_arguments)]
-fn rank_pipeline<C: Communicator>(
+pub(crate) fn rank_pipeline<C: Communicator>(
     ctx: &mut C,
     cfg: &DOpInfConfig,
     source: &DataSource,
@@ -710,6 +821,76 @@ mod tests {
         assert_eq!(a.qtilde.data(), b.qtilde.data());
         for (pa, pb) in a.probes.iter().zip(&b.probes) {
             assert_eq!(pa.values, pb.values);
+        }
+    }
+
+    #[test]
+    fn hier_transport_matches_threads_bitwise_across_node_counts() {
+        let (source, ocfg, _) = test_setup(120);
+        let mut tcfg = DOpInfConfig::new(4, ocfg);
+        tcfg.cost_model = CostModel::free();
+        tcfg.probes = vec![(0, 5), (1, 100)];
+        let a = run_distributed(&tcfg, &source).unwrap();
+        for nodes in [1, 2, 4] {
+            let mut hcfg = tcfg.clone();
+            hcfg.transport = Transport::Hier;
+            hcfg.nodes = nodes;
+            let b = run_distributed(&hcfg, &source).unwrap();
+            assert_eq!(a.r, b.r, "nodes={nodes}");
+            assert_eq!(a.eigs, b.eigs, "nodes={nodes}");
+            assert_eq!(a.opt_pair, b.opt_pair, "nodes={nodes}");
+            assert_eq!(a.qtilde.data(), b.qtilde.data(), "nodes={nodes}");
+            for (pa, pb) in a.probes.iter().zip(&b.probes) {
+                assert_eq!(pa.values, pb.values, "nodes={nodes}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_rejects_bad_node_counts() {
+        let (source, ocfg, _) = test_setup(60);
+        for nodes in [0, 5] {
+            let mut cfg = DOpInfConfig::new(4, ocfg.clone());
+            cfg.cost_model = CostModel::free();
+            cfg.transport = Transport::Hier;
+            cfg.nodes = nodes;
+            match run_distributed(&cfg, &source) {
+                Err(DOpInfError::Setup(e)) => {
+                    assert!(format!("{e:#}").contains("--nodes"), "{e:#}")
+                }
+                other => panic!("expected a setup refusal, got {:?}", other.map(|r| r.r)),
+            }
+        }
+    }
+
+    #[test]
+    fn in_memory_source_cannot_cross_the_process_boundary() {
+        let (source, ocfg, _) = test_setup(60);
+        let mut cfg = DOpInfConfig::new(2, ocfg);
+        cfg.cost_model = CostModel::free();
+        cfg.transport = Transport::Processes;
+        match run_distributed(&cfg, &source) {
+            Err(DOpInfError::Setup(e)) => {
+                assert!(format!("{e:#}").contains("process boundary"), "{e:#}")
+            }
+            other => panic!("expected a setup refusal, got {:?}", other.map(|r| r.r)),
+        }
+    }
+
+    #[test]
+    fn remote_hosts_require_manual_launch() {
+        let (source, ocfg, _) = test_setup(60);
+        let mut cfg = DOpInfConfig::new(2, ocfg);
+        cfg.cost_model = CostModel::free();
+        cfg.transport = Transport::Processes;
+        cfg.hosts = vec!["localhost".into(), "node7".into()];
+        match run_distributed(&cfg, &source) {
+            Err(DOpInfError::Setup(e)) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("multinode_quickstart"), "{msg}");
+                assert!(msg.contains("dopinf worker"), "{msg}");
+            }
+            other => panic!("expected a setup refusal, got {:?}", other.map(|r| r.r)),
         }
     }
 

@@ -10,8 +10,12 @@
 //! Architecture (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator: the transport-abstracted
 //!   [`comm::Communicator`] collective vocabulary (thread shared-board,
-//!   zero-overhead single-rank, and localhost socket backends — all
-//!   bitwise-identical by construction, every collective fallible with
+//!   zero-overhead single-rank, localhost socket, real OS worker
+//!   *process* ([`comm::proc`] — rank 0 spawns `dopinf worker`
+//!   subprocesses over the socket hub), and hierarchical two-level
+//!   ([`comm::hier`] — thread boards intra-node, a leader tree
+//!   inter-node) backends — all bitwise-identical by construction,
+//!   every collective fallible with
 //!   **abort broadcast**: a rank that fails mid-pipeline wakes its
 //!   peers with a typed [`comm::CommError::RemoteAbort`] instead of
 //!   hanging them, and [`run_distributed`] aggregates the per-rank
@@ -65,7 +69,7 @@
 //!
 //! ```text
 //! dopinf simulate …            # write a SNAPD dataset
-//! dopinf train … --save-rom model.rom     # add --transport sockets for the TCP backend
+//! dopinf train … --save-rom model.rom     # --transport sockets|processes|hier for the other backends
 //! dopinf ensemble --model model.rom --members 256 --steps 1200
 //! dopinf ensemble --model model.rom --reg-ensemble   # reg-pair ensemble from the v2 blocks
 //! dopinf serve --model cyl=model.rom --port 8080     # HTTP tier: POST /v1/ensemble
@@ -73,7 +77,9 @@
 //!
 //! Quickstart: see `examples/quickstart.rs` (training),
 //! `examples/ensemble_uq.rs` (train → save → load → serve), and
-//! `examples/serve_quickstart.md` (the HTTP tier end to end), or run
+//! `examples/serve_quickstart.md` (the HTTP tier end to end), and
+//! `examples/multinode_quickstart.md` (manual multi-machine worker
+//! launch), or run
 //! `cargo run --release -- --help`.
 
 pub mod comm;

@@ -71,6 +71,11 @@ fn dispatch(args: &[String]) -> Result<()> {
         "artifacts" => cmd_artifacts(rest),
         "ensemble" => cmd_ensemble(rest),
         "serve" => cmd_serve(rest),
+        // hidden: a spawned rank of `--transport processes` (or one
+        // started by hand on a remote host — see
+        // examples/multinode_quickstart.md). Not in the help text: the
+        // launcher composes this command line, operators rarely do.
+        "worker" => cmd_worker(rest),
         "--help" | "-h" | "help" => {
             print_help();
             Ok(())
@@ -169,7 +174,9 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "procs-list", help: "(scaling) comma-separated p values", default: Some("1,2,4,8"), is_flag: false },
         OptSpec { name: "repeats", help: "(scaling) measurements per p", default: Some("10"), is_flag: false },
         OptSpec { name: "save-rom", help: "write the trained ROM artifact here (.rom)", default: None, is_flag: false },
-        OptSpec { name: "transport", help: "communicator backend: threads | sockets", default: Some("threads"), is_flag: false },
+        OptSpec { name: "transport", help: "communicator backend: threads | sockets | processes | hier", default: Some("threads"), is_flag: false },
+        OptSpec { name: "nodes", help: "(hier) node count: ranks split into `nodes` contiguous balanced groups; collectives run local fold -> leader tree -> local broadcast (results are bitwise identical to the flat transports)", default: None, is_flag: false },
+        OptSpec { name: "hosts", help: "(processes) comma-separated host per rank; all-localhost lists auto-spawn, any remote entry switches to manual worker launch (see examples/multinode_quickstart.md)", default: None, is_flag: false },
         OptSpec { name: "comm-timeout", help: "communication deadline in seconds (rendezvous + every collective); a dead rank fails the run instead of hanging it", default: None, is_flag: false },
         OptSpec { name: "chunk-rows", help: "stream ingestion in chunks of N local rows (default: whole block; native-engine results are bitwise identical)", default: None, is_flag: false },
         OptSpec { name: "memory-budget-mb", help: "derive the ingestion chunk size from a per-rank memory budget (MiB)", default: None, is_flag: false },
@@ -186,7 +193,9 @@ fn parse_transport(s: &str) -> Result<Transport> {
     Ok(match s {
         "threads" => Transport::Threads,
         "sockets" => Transport::Sockets,
-        other => bail!("unknown transport {other:?} (threads|sockets)"),
+        "processes" => Transport::Processes,
+        "hier" => Transport::Hier,
+        other => bail!("unknown transport {other:?} (threads|sockets|processes|hier)"),
     })
 }
 
@@ -260,6 +269,24 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
     };
     let mut cfg = DOpInfConfig::new(a.get_parse("procs", 4)?, opinf);
     cfg.transport = parse_transport(a.get_or("transport", "threads"))?;
+    // hier topology: --nodes groups the ranks; validated against p in
+    // the pipeline's setup step (1 <= nodes <= p)
+    if let Some(v) = a.get("nodes") {
+        anyhow::ensure!(
+            cfg.transport == Transport::Hier,
+            "--nodes only applies to --transport hier"
+        );
+        cfg.nodes = v.parse().context("--nodes")?;
+    }
+    // process placement: one host per rank; validated in the launcher
+    // (plan_hosts) against the rank count
+    if let Some(v) = a.get("hosts") {
+        anyhow::ensure!(
+            cfg.transport == Transport::Processes,
+            "--hosts only applies to --transport processes"
+        );
+        cfg.hosts = v.split(',').map(|h| h.trim().to_string()).collect();
+    }
     cfg.artifacts_dir = a.get("artifacts").map(PathBuf::from);
     // intra-rank compute plane: p ranks x T worker threads (bitwise
     // identical results at any T — only wall time changes)
@@ -805,4 +832,62 @@ fn cmd_serve(tokens: &[String]) -> Result<()> {
         .unwrap_or(0);
     println!("drained cleanly: {responses} response(s) over {connections} connection(s)");
     Ok(())
+}
+
+// ---------------------------------------------------------------- worker
+
+/// One spawned rank of `--transport processes`: rendezvous with the
+/// rank-0 hub, receive the job frame, run it, ship the join report.
+/// The command line is normally composed by the launcher
+/// (`comm::proc::launch`); on a remote host the operator runs it by
+/// hand (examples/multinode_quickstart.md).
+fn cmd_worker(tokens: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "rank", help: "this worker's rank (1..size-1 when spawned; any non-zero rank when launched by hand)", default: None, is_flag: false },
+        OptSpec { name: "size", help: "total rank count p of the group", default: None, is_flag: false },
+        OptSpec { name: "hub", help: "rank-0 rendezvous address, host:port", default: None, is_flag: false },
+        OptSpec { name: "comm-timeout", help: "communication deadline in seconds (must match the hub's)", default: None, is_flag: false },
+        OptSpec { name: "threads", help: "compute-plane worker threads for this rank", default: None, is_flag: false },
+        OptSpec { name: "simd", help: "kernel dispatch tier: off | scalar | native", default: None, is_flag: false },
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(tokens, &specs)?;
+    if a.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "worker",
+                "One rank of a multi-process group (spawned by `train --transport \
+                 processes`, or started by hand on a remote host)",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let rank: usize = a.get("rank").context("--rank is required")?.parse().context("--rank")?;
+    let size: usize = a.get("size").context("--size is required")?.parse().context("--size")?;
+    anyhow::ensure!(size >= 2, "--size must be >= 2 (a 1-rank group has no workers)");
+    anyhow::ensure!(rank >= 1 && rank < size, "--rank must be in 1..size (rank 0 is the hub)");
+    let hub = a.get("hub").context("--hub is required (host:port of rank 0)")?.to_string();
+    let timeout = match a.get("comm-timeout") {
+        None => None,
+        Some(v) => {
+            let secs: f64 = v.parse().context("--comm-timeout")?;
+            anyhow::ensure!(secs > 0.0, "--comm-timeout must be positive");
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+    };
+    // arm the per-process knobs from argv before any job runs; the job
+    // frame carries the rest of the configuration
+    if let Some(v) = a.get("threads") {
+        let t: usize = v.parse().context("--threads")?;
+        anyhow::ensure!(t >= 1, "--threads must be >= 1");
+        dopinf::linalg::par::set_threads(t);
+    }
+    if let Some(t) = parse_simd(&a)? {
+        dopinf::linalg::simd::set_tier(t);
+    }
+    let boot = dopinf::comm::proc::WorkerBoot { rank, size, hub, timeout };
+    dopinf::coordinator::launch::worker_main(&boot)
+        .map_err(|e| anyhow::Error::from(DOpInfError::from(e)))
 }

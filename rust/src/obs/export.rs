@@ -61,6 +61,7 @@ pub fn chrome_trace(traces: &[RankTrace]) -> Json {
                         ("bytes", Json::Num(c.bytes as f64)),
                         ("predicted_us", Json::Num(c.predicted_s * 1e6)),
                         ("wait_us", Json::Num(c.wait_s * 1e6)),
+                        ("link", Json::Str(c.link.to_string())),
                     ]),
                 ),
             ]));
@@ -122,6 +123,7 @@ pub fn metrics_summary(
         measured: f64,
         wait: f64,
         predicted: f64,
+        links: BTreeMap<&'static str, u64>,
     }
     let mut comm: BTreeMap<&'static str, CommAgg> = BTreeMap::new();
     for t in traces {
@@ -132,6 +134,7 @@ pub fn metrics_summary(
             a.measured += c.measured_s;
             a.wait += c.wait_s;
             a.predicted += c.predicted_s;
+            *a.links.entry(c.link).or_insert(0) += 1;
         }
     }
     let comm_json = Json::Obj(
@@ -142,6 +145,12 @@ pub fn metrics_summary(
                 } else {
                     Json::Null
                 };
+                let links = Json::Obj(
+                    a.links
+                        .iter()
+                        .map(|(l, n)| (l.to_string(), Json::Num(*n as f64)))
+                        .collect(),
+                );
                 (
                     k.to_string(),
                     Json::obj(vec![
@@ -151,6 +160,9 @@ pub fn metrics_summary(
                         ("wait_s", Json::Num(a.wait)),
                         ("predicted_s", Json::Num(a.predicted)),
                         ("ratio", ratio),
+                        // per-link call counts: how many of the calls
+                        // crossed flat / intra-node / inter-node hops
+                        ("links", links),
                     ]),
                 )
             })
@@ -244,6 +256,7 @@ mod tests {
             ],
             comm: vec![CommRecord {
                 primitive: "allreduce",
+                link: "flat",
                 bytes: 800,
                 predicted_s: 1e-5,
                 measured_s: 2e-5,
@@ -300,6 +313,7 @@ mod tests {
         assert_eq!(args.get("bytes").and_then(Json::as_usize), Some(800));
         assert!(args.get("predicted_us").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(args.get("wait_us").and_then(Json::as_f64).is_some());
+        assert_eq!(args.get("link").and_then(Json::as_str), Some("flat"));
     }
 
     #[test]
@@ -322,6 +336,11 @@ mod tests {
         assert_eq!(ar.get("bytes").and_then(Json::as_usize), Some(1600));
         // ratio = measured/predicted = 2.0 for the fake records
         assert!((ar.get("ratio").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-12);
+        // both fake records crossed the flat link
+        assert_eq!(
+            ar.get("links").unwrap().get("flat").and_then(Json::as_usize),
+            Some(2)
+        );
         // phases aggregated across ranks
         let p1 = parsed.get("phases").unwrap().get("pass1").unwrap();
         assert_eq!(p1.get("calls").and_then(Json::as_usize), Some(2));

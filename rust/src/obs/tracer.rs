@@ -41,6 +41,10 @@ pub struct Span {
 pub struct CommRecord {
     /// primitive name ("allreduce", "broadcast", ...)
     pub primitive: &'static str,
+    /// which hop of the topology the call crossed: `"flat"` for the
+    /// single-level transports, `"intra"` for a node-local board hop,
+    /// `"inter"` for a leader-tree hop of the hierarchical transport
+    pub link: &'static str,
     /// payload bytes, using the same convention the cost model is fed
     pub bytes: usize,
     /// `comm::costmodel` α–β prediction (seconds)
@@ -130,7 +134,8 @@ impl Tracer {
 
     /// Close a collective record opened with
     /// [`comm_start`](Self::comm_start); `measured_s` is taken here so
-    /// every exit path of a collective closes its record.
+    /// every exit path of a collective closes its record. Records the
+    /// `"flat"` link — the single-level transports' hop kind.
     pub fn comm_record(
         &mut self,
         start: CommStart,
@@ -139,9 +144,25 @@ impl Tracer {
         predicted_s: f64,
         wait_s: f64,
     ) {
+        self.comm_record_link(start, primitive, "flat", bytes, predicted_s, wait_s);
+    }
+
+    /// [`comm_record`](Self::comm_record) with an explicit link tag —
+    /// the hierarchical transport tags node-local hops `"intra"` and
+    /// leader-tree hops `"inter"`.
+    pub fn comm_record_link(
+        &mut self,
+        start: CommStart,
+        primitive: &'static str,
+        link: &'static str,
+        bytes: usize,
+        predicted_s: f64,
+        wait_s: f64,
+    ) {
         if let Some(t0) = start.0 {
             self.comm.push(CommRecord {
                 primitive,
+                link,
                 bytes,
                 predicted_s,
                 measured_s: t0.elapsed().as_secs_f64(),
@@ -231,11 +252,25 @@ mod tests {
         assert_eq!(trace.comm.len(), 1);
         let r = &trace.comm[0];
         assert_eq!(r.primitive, "broadcast");
+        assert_eq!(r.link, "flat");
         assert_eq!(r.bytes, 128);
         assert!((r.predicted_s - 2.5e-6).abs() < 1e-18);
         assert!(r.measured_s >= r.wait_s);
         // take() drains: a second take is empty
         assert!(t.take().spans.is_empty());
+    }
+
+    #[test]
+    fn link_tags_survive_into_the_trace() {
+        let mut t = Tracer::new(2);
+        t.set_enabled(true);
+        let c = t.comm_start();
+        t.comm_record_link(c, "allreduce", "intra", 64, 1e-6, 0.0);
+        let c = t.comm_start();
+        t.comm_record_link(c, "allreduce", "inter", 64, 2e-6, 0.0);
+        let trace = t.take();
+        assert_eq!(trace.comm[0].link, "intra");
+        assert_eq!(trace.comm[1].link, "inter");
     }
 
     #[test]

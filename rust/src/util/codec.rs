@@ -1,0 +1,193 @@
+//! Length-prefixed little-endian byte codec over any `Read`/`Write`.
+//!
+//! The socket transport frames its collective payloads inline
+//! (`comm::socket`); this module is the substrate for everything
+//! *around* those collectives that must also cross a process boundary:
+//! the job description a spawned worker receives (config, data source,
+//! trace flag — see `coordinator::launch`) and the join report it
+//! ships back (clock parts, trace, per-rank result — see
+//! `comm::proc`). Every scalar is little-endian; every variable-length
+//! field carries a `u64` byte/element count first, so a reader never
+//! guesses at boundaries.
+
+use std::io::{self, Read, Write};
+
+pub fn write_u8(w: &mut (impl Write + ?Sized), v: u8) -> io::Result<()> {
+    w.write_all(&[v])
+}
+
+pub fn read_u8(r: &mut (impl Read + ?Sized)) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn write_u64(w: &mut (impl Write + ?Sized), v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn read_u64(r: &mut (impl Read + ?Sized)) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// `usize` rides the wire as `u64` (ranks on different machines must
+/// agree on the width).
+pub fn write_usize(w: &mut (impl Write + ?Sized), v: usize) -> io::Result<()> {
+    write_u64(w, v as u64)
+}
+
+pub fn read_usize(r: &mut (impl Read + ?Sized)) -> io::Result<usize> {
+    Ok(read_u64(r)? as usize)
+}
+
+pub fn write_f64(w: &mut (impl Write + ?Sized), v: f64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn read_f64(r: &mut (impl Read + ?Sized)) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+pub fn write_bool(w: &mut (impl Write + ?Sized), v: bool) -> io::Result<()> {
+    write_u8(w, u8::from(v))
+}
+
+pub fn read_bool(r: &mut (impl Read + ?Sized)) -> io::Result<bool> {
+    match read_u8(r)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(corrupt(format!("bool byte {other}"))),
+    }
+}
+
+/// `len u64 | bytes`.
+pub fn write_bytes(w: &mut (impl Write + ?Sized), b: &[u8]) -> io::Result<()> {
+    write_u64(w, b.len() as u64)?;
+    w.write_all(b)
+}
+
+pub fn read_bytes(r: &mut (impl Read + ?Sized)) -> io::Result<Vec<u8>> {
+    let len = read_usize(r)?;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// A UTF-8 string as [`write_bytes`].
+pub fn write_str(w: &mut (impl Write + ?Sized), s: &str) -> io::Result<()> {
+    write_bytes(w, s.as_bytes())
+}
+
+pub fn read_str(r: &mut (impl Read + ?Sized)) -> io::Result<String> {
+    String::from_utf8(read_bytes(r)?).map_err(|e| corrupt(format!("non-UTF-8 string: {e}")))
+}
+
+/// `len u64 | f64 × len`.
+pub fn write_f64s(w: &mut (impl Write + ?Sized), v: &[f64]) -> io::Result<()> {
+    write_u64(w, v.len() as u64)?;
+    let mut raw = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&raw)
+}
+
+pub fn read_f64s(r: &mut (impl Read + ?Sized)) -> io::Result<Vec<f64>> {
+    let len = read_usize(r)?;
+    let mut raw = vec![0u8; len * 8];
+    r.read_exact(&mut raw)?;
+    Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// An `Option<T>` as `present u8 | payload if present`.
+pub fn write_opt<T>(
+    w: &mut (impl Write + ?Sized),
+    v: Option<&T>,
+    f: impl FnOnce(&mut dyn Write, &T) -> io::Result<()>,
+) -> io::Result<()> {
+    match v {
+        None => write_u8(w, 0),
+        Some(t) => {
+            write_u8(w, 1)?;
+            f(w, t)
+        }
+    }
+}
+
+pub fn read_opt<T>(
+    r: &mut (impl Read + ?Sized),
+    f: impl FnOnce(&mut dyn Read) -> io::Result<T>,
+) -> io::Result<Option<T>> {
+    match read_u8(r)? {
+        0 => Ok(None),
+        1 => Ok(Some(f(r)?)),
+        other => Err(corrupt(format!("option byte {other}"))),
+    }
+}
+
+pub fn corrupt(detail: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("corrupt frame ({detail})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut buf = Vec::new();
+        write_u8(&mut buf, 7).unwrap();
+        write_u64(&mut buf, u64::MAX - 3).unwrap();
+        write_usize(&mut buf, 123_456).unwrap();
+        write_f64(&mut buf, -0.1f64).unwrap();
+        write_bool(&mut buf, true).unwrap();
+        write_bool(&mut buf, false).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_u8(&mut r).unwrap(), 7);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 3);
+        assert_eq!(read_usize(&mut r).unwrap(), 123_456);
+        assert_eq!(read_f64(&mut r).unwrap().to_bits(), (-0.1f64).to_bits());
+        assert!(read_bool(&mut r).unwrap());
+        assert!(!read_bool(&mut r).unwrap());
+    }
+
+    #[test]
+    fn strings_and_vectors_roundtrip() {
+        let mut buf = Vec::new();
+        write_str(&mut buf, "hub 127.0.0.1:4242 — κ").unwrap();
+        write_f64s(&mut buf, &[1e16, -1.0, 3.5e-13]).unwrap();
+        write_bytes(&mut buf, &[]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_str(&mut r).unwrap(), "hub 127.0.0.1:4242 — κ");
+        let v = read_f64s(&mut r).unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].to_bits(), 1e16f64.to_bits());
+        assert_eq!(v[2].to_bits(), 3.5e-13f64.to_bits());
+        assert!(read_bytes(&mut r).unwrap().is_empty());
+    }
+
+    #[test]
+    fn options_roundtrip() {
+        let mut buf = Vec::new();
+        write_opt(&mut buf, Some(&2.5f64), |w, v| write_f64(w, *v)).unwrap();
+        write_opt::<f64>(&mut buf, None, |w, v| write_f64(w, *v)).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_opt(&mut r, read_f64).unwrap(), Some(2.5));
+        assert_eq!(read_opt(&mut r, read_f64).unwrap(), None);
+    }
+
+    #[test]
+    fn truncated_input_errors_cleanly() {
+        let mut buf = Vec::new();
+        write_f64s(&mut buf, &[1.0, 2.0, 3.0]).unwrap();
+        buf.truncate(buf.len() - 4);
+        let mut r = Cursor::new(buf);
+        assert!(read_f64s(&mut r).is_err());
+        assert!(read_bool(&mut Cursor::new(vec![9u8])).is_err());
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod codec;
 pub mod csvout;
 pub mod json;
 pub mod npy;

@@ -5,13 +5,17 @@
 //!
 //! * **Happy path** — every backend combines contributions in rank
 //!   order through the shared `fold` kernels, so collective results
-//!   must be **bitwise identical** — across the thread and socket
-//!   transports at every p, against the rank-ordered reference fold,
-//!   and (for partition-invariant collectives like gather) across
-//!   p ∈ {1, 2, 4, 7} as well. `run_distributed` at p = 4 must produce
-//!   a bitwise-identical `DOpInfResult` on threads vs sockets. These
-//!   suites predate the fallible API redesign and pass unchanged — the
-//!   redesign's byte-identity guarantee.
+//!   must be **bitwise identical** — across the thread, socket, and
+//!   hierarchical two-level transports (p ∈ {1, 2, 4, 8} × nodes ∈
+//!   {1, 2, 4}), against the rank-ordered reference fold, and (for
+//!   partition-invariant collectives like gather) across
+//!   p ∈ {1, 2, 4, 7} as well. `run_distributed` must produce a
+//!   bitwise-identical `DOpInfResult` on threads vs sockets (p = 4)
+//!   and on threads vs hier at every node shape (p = 8). These suites
+//!   predate the fallible API redesign and pass unchanged — the
+//!   redesign's byte-identity guarantee. (The process transport's
+//!   equivalence suite lives in `tests/integration_proc.rs`, which
+//!   needs the built `dopinf` binary.)
 //! * **Error path** — a mid-pass-2 read fault on any single rank must
 //!   resolve *every* rank promptly: siblings wake from their parked
 //!   collectives with a rank-tagged `CommError::RemoteAbort`, and
@@ -22,7 +26,7 @@
 
 use std::sync::Arc;
 
-use dopinf::comm::{self, fold, CommError, Communicator, CostModel, Op, SelfComm};
+use dopinf::comm::{self, fold, CommError, Communicator, CostModel, Op, SelfComm, TwoLevelModel};
 use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
 use dopinf::error::DOpInfError;
@@ -184,6 +188,64 @@ fn rooted_reduce_bitwise_equals_allreduce_on_root() {
     );
 }
 
+/// The node shapes a hier sweep visits for a given p: every node count
+/// in {1, 2, 4} that fits (nodes ≤ p).
+fn node_shapes(p: usize) -> impl Iterator<Item = usize> {
+    [1usize, 2, 4].into_iter().filter(move |&n| n <= p)
+}
+
+/// Hierarchical collectives must be bitwise identical to the flat
+/// rank-ordered reference fold — across p ∈ {1, 2, 4, 8} × nodes ∈
+/// {1, 2, 4}: the local-fold → leader-tree → local-broadcast schedule
+/// ships raw rank-tagged parts so the fold happens once, in rank
+/// order, exactly like the flat transports.
+#[test]
+fn hier_collectives_bitwise_identical_across_node_shapes() {
+    check(
+        Config { cases: 6, seed: 271 },
+        |rng| (1 + rng.below(40) as usize, rng.below(1 << 30)),
+        |&(len, seed)| {
+            for p in [1usize, 2, 4, 8] {
+                for nodes in node_shapes(p) {
+                    for op in [Op::Sum, Op::Max, Op::Min] {
+                        let parts: Vec<Vec<f64>> =
+                            (0..p).map(|r| rank_data(seed, r, len)).collect();
+                        let want = fold::reduce_parts(&parts, op);
+                        let got = comm::hier::run(p, nodes, TwoLevelModel::free(), |ctx| {
+                            ctx.allreduce(&rank_data(seed, ctx.rank(), len), op).unwrap()
+                        });
+                        for r in 0..p {
+                            if got[r] != want {
+                                return Err(format!(
+                                    "hier differs at p={p} nodes={nodes} rank {r} op={op:?}"
+                                ));
+                            }
+                        }
+                    }
+                    // reduce_scatter through the two levels: each rank's
+                    // block of the rank-ordered reduction
+                    let len_rs = len.div_ceil(p).max(1) * p;
+                    let parts: Vec<Vec<f64>> =
+                        (0..p).map(|r| rank_data(seed, r, len_rs)).collect();
+                    let reduced = fold::reduce_parts(&parts, Op::Sum);
+                    let got = comm::hier::run(p, nodes, TwoLevelModel::free(), |ctx| {
+                        ctx.reduce_scatter_block(&rank_data(seed, ctx.rank(), len_rs), Op::Sum)
+                            .unwrap()
+                    });
+                    for r in 0..p {
+                        if got[r] != fold::block(&reduced, r, p) {
+                            return Err(format!(
+                                "hier reduce_scatter differs at p={p} nodes={nodes} rank {r}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 fn tutorial_config(nx: usize) -> (DataSource, OpInfConfig) {
     let spec = SynthSpec { nx, ns: 2, nt: 60, modes: 3, ..Default::default() };
     let q = generate(&spec, 0);
@@ -236,6 +298,39 @@ fn run_distributed_bitwise_identical_thread_vs_socket_p4() {
     }
 }
 
+/// The hier acceptance gate: `run_distributed` over the two-level
+/// transport must produce a bitwise-identical `DOpInfResult` to the
+/// flat thread transport — at p = 8 across every node shape.
+#[test]
+fn run_distributed_bitwise_identical_thread_vs_hier_p8() {
+    let (source, ocfg) = tutorial_config(180);
+    let mut tcfg = DOpInfConfig::new(8, ocfg);
+    tcfg.cost_model = CostModel::free();
+    tcfg.allow_oversubscribe = true; // 8 rank threads on a small CI box
+    tcfg.probes = vec![(0, 17), (1, 95), (0, 179)];
+    let a = run_distributed(&tcfg, &source).unwrap();
+    for nodes in node_shapes(8) {
+        let mut hcfg = tcfg.clone();
+        hcfg.transport = Transport::Hier;
+        hcfg.nodes = nodes;
+        let b = run_distributed(&hcfg, &source).unwrap();
+        assert_eq!(a.r, b.r, "nodes={nodes}");
+        assert_eq!(a.eigs, b.eigs, "nodes={nodes}");
+        assert_eq!(a.retained_energy, b.retained_energy, "nodes={nodes}");
+        assert_eq!(a.opt_pair, b.opt_pair, "nodes={nodes}");
+        assert_eq!(a.winner_rank, b.winner_rank, "nodes={nodes}");
+        assert_eq!(a.train_err.to_bits(), b.train_err.to_bits(), "nodes={nodes}");
+        assert_eq!(a.qtilde.data(), b.qtilde.data(), "nodes={nodes}");
+        assert_eq!(a.qhat0, b.qhat0, "nodes={nodes}");
+        assert_eq!(a.ops.ahat, b.ops.ahat, "nodes={nodes}");
+        assert_eq!(a.ops.fhat, b.ops.fhat, "nodes={nodes}");
+        assert_eq!(a.ops.chat, b.ops.chat, "nodes={nodes}");
+        for (pa, pb) in a.probes.iter().zip(&b.probes) {
+            assert_eq!(pa.values, pb.values, "nodes={nodes}");
+        }
+    }
+}
+
 // ------------------------------------------------------ error paths
 
 /// Every rank of a group with one aborting member must return a
@@ -276,6 +371,18 @@ fn abort_reaches_every_rank_on_both_transports() {
             })
             .expect("socket rendezvous"),
         );
+        // two-level topology: the abort must cross node boundaries —
+        // out of the failing rank's node board, through the leader
+        // layer, into every other node's board
+        for nodes in node_shapes(p).filter(|&n| n > 1) {
+            check_all(comm::hier::run(p, nodes, TwoLevelModel::free(), |ctx| {
+                if ctx.rank() == fail_rank {
+                    Err(ctx.abort("simulated EIO"))
+                } else {
+                    ctx.allreduce_scalar(1.0, Op::Sum).and_then(|_| ctx.barrier())
+                }
+            }));
+        }
     }
 }
 
@@ -293,7 +400,7 @@ fn read_fault_resolves_run_distributed_on_both_transports() {
     // "sibling ranks park at the next collective" scenario
     ocfg.scaling = true;
     for p in [2usize, 4] {
-        for transport in [Transport::Threads, Transport::Sockets] {
+        for transport in [Transport::Threads, Transport::Sockets, Transport::Hier] {
             let fail_rank = p / 2;
             // land the fault mid-pass-2: past one full pass of chunks,
             // short of two
@@ -304,6 +411,9 @@ fn read_fault_resolves_run_distributed_on_both_transports() {
             let mut cfg = DOpInfConfig::new(p, ocfg.clone());
             cfg.cost_model = CostModel::free();
             cfg.transport = transport;
+            if transport == Transport::Hier {
+                cfg.nodes = 2;
+            }
             cfg.chunk_rows = Some(chunk_rows);
             // the suite's own hang-regression guard: every collective
             // wait is bounded, so a broken abort broadcast fails the

@@ -1,0 +1,271 @@
+//! Process-transport integration suite: real `dopinf worker` OS
+//! processes behind the same `Communicator` contract as the in-process
+//! backends.
+//!
+//! Three halves:
+//!
+//! * **Happy path** — the collective exercise and the full
+//!   `run_distributed` pipeline must be **bitwise identical** across
+//!   worker processes vs rank threads (the job frame ships the exact
+//!   config, every reduction funnels through the same rank-ordered
+//!   fold), and a traced process run must ship every worker's spans
+//!   back to the parent (one populated track per rank in the exported
+//!   Chrome trace).
+//! * **Fault injection** — SIGKILL a worker mid-collective at
+//!   p ∈ {2, 4}: every surviving rank resolves with
+//!   `CommError::Timeout` or `CommError::RemoteAbort` inside the
+//!   configured deadline — zero hangs, zero panics. (CI wraps this
+//!   binary in a hard `timeout` so a regression back to hanging fails
+//!   the job instead of stalling it.)
+//! * **Error plumbing** — a worker-rank read fault crosses the process
+//!   boundary as the same origin-tagged `DOpInfError::RemoteAbort` the
+//!   thread transport produces.
+//!
+//! Every test needs the built `dopinf` binary (this test executable
+//! has no `worker` subcommand), located via `CARGO_BIN_EXE_dopinf` and
+//! handed to the launcher through `DOPINF_WORKER_BIN`.
+
+use std::time::{Duration, Instant};
+
+use dopinf::comm::proc::{exercise_rank, run_exercise, ExerciseSpec, WorkerFailure};
+use dopinf::comm::{self, Category, CommError, CostModel};
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
+use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::error::DOpInfError;
+use dopinf::io::partition::distribute_tutorial;
+use dopinf::opinf::serial::OpInfConfig;
+use dopinf::rom::RegGrid;
+use dopinf::sim::synth::SynthSpec;
+use dopinf::util::json::{parse, Json};
+
+/// Point the launcher at the CLI binary Cargo built alongside this
+/// test executable. Called by every test; setting the same value twice
+/// is harmless (tests share the process environment).
+fn arm_worker_binary() {
+    std::env::set_var("DOPINF_WORKER_BIN", env!("CARGO_BIN_EXE_dopinf"));
+}
+
+fn exercise_spec(prim: &str, rounds: usize, pause_ms: u64) -> ExerciseSpec {
+    ExerciseSpec { prim: prim.to_string(), len: 257, rounds, seed: 0xD0F1, pause_ms }
+}
+
+// ------------------------------------------------------- happy path
+
+/// The mixed exercise (every primitive per round, rotating roots) over
+/// real worker processes must produce the same digest, bit for bit, as
+/// the thread transport at p ∈ {2, 4}.
+#[test]
+fn process_exercise_bitwise_matches_threads() {
+    arm_worker_binary();
+    for p in [2usize, 4] {
+        let spec = exercise_spec("mixed", 3, 0);
+        let want = comm::run(p, CostModel::free(), |ctx| exercise_rank(ctx, &spec).unwrap());
+        let got = run_exercise(
+            p,
+            CostModel::free(),
+            Some(Duration::from_secs(120)),
+            &spec,
+            |pids| assert_eq!(pids.len(), p - 1),
+        )
+        .expect("process launch");
+        assert_eq!(got.len(), p);
+        for (rank, ((outcome, _clock), reference)) in got.into_iter().zip(&want).enumerate() {
+            let digest = outcome.unwrap_or_else(|e| panic!("p={p} rank {rank}: {e:?}"));
+            assert_eq!(&digest, reference, "p={p} rank {rank} digest differs");
+        }
+    }
+}
+
+/// Worker virtual clocks cross the join frame: with a non-trivial cost
+/// model, every rank of a process group — including the spawned ones —
+/// reports a clock that actually advanced, with modeled comm charges.
+/// (Clock totals also include measured thread CPU time, so exact
+/// cross-run equality is deliberately not asserted.)
+#[test]
+fn process_clocks_cross_the_join_frame() {
+    arm_worker_binary();
+    let p = 3;
+    let spec = exercise_spec("allreduce", 4, 0);
+    let got = run_exercise(
+        p,
+        CostModel::shared_memory(),
+        Some(Duration::from_secs(120)),
+        &spec,
+        |_| {},
+    )
+    .expect("process launch");
+    assert_eq!(got.len(), p);
+    for (rank, (outcome, clock)) in got.iter().enumerate() {
+        assert!(outcome.is_ok(), "rank {rank}: {outcome:?}");
+        assert!(clock.now() > 0.0, "rank {rank} clock never advanced");
+        assert!(
+            clock.in_category(Category::Comm) > 0.0,
+            "rank {rank} clock is missing the modeled allreduce charges"
+        );
+    }
+}
+
+fn synth_setup(nx: usize, nt: usize) -> (DataSource, OpInfConfig) {
+    let spec = SynthSpec { nx, ns: 2, nt, modes: 3, ..Default::default() };
+    let ocfg = OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: None,
+        scaling: false,
+        grid: RegGrid::coarse(),
+        max_growth: 1.5,
+        nt_p: 2 * nt,
+    };
+    (DataSource::Synthetic(spec), ocfg)
+}
+
+/// The acceptance gate: `run_distributed` over spawned worker
+/// processes must produce a bitwise-identical `DOpInfResult` to the
+/// thread transport at p = 4 (the job frame ships the exact config;
+/// workers re-derive everything else deterministically).
+#[test]
+fn run_distributed_bitwise_identical_thread_vs_processes_p4() {
+    arm_worker_binary();
+    let (source, ocfg) = synth_setup(120, 60);
+    let mut tcfg = DOpInfConfig::new(4, ocfg);
+    tcfg.cost_model = CostModel::free();
+    tcfg.probes = vec![(0, 17), (1, 95)];
+    tcfg.comm_timeout = Some(120.0);
+    let mut pcfg = tcfg.clone();
+    pcfg.transport = Transport::Processes;
+
+    let a = run_distributed(&tcfg, &source).unwrap();
+    let b = run_distributed(&pcfg, &source).unwrap();
+
+    assert_eq!(a.r, b.r);
+    assert_eq!(a.eigs, b.eigs);
+    assert_eq!(a.opt_pair, b.opt_pair);
+    assert_eq!(a.winner_rank, b.winner_rank);
+    assert_eq!(a.train_err.to_bits(), b.train_err.to_bits());
+    assert_eq!(a.qtilde.data(), b.qtilde.data());
+    assert_eq!(a.qhat0, b.qhat0);
+    assert_eq!(a.ops.ahat, b.ops.ahat);
+    assert_eq!(a.ops.fhat, b.ops.fhat);
+    assert_eq!(a.ops.chat, b.ops.chat);
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!((pa.var, pa.row), (pb.var, pb.row));
+        assert_eq!(pa.values, pb.values);
+    }
+}
+
+/// A traced process run must ship every worker's spans back through
+/// the join frame: the exported Chrome trace contains a populated
+/// track (at least one duration event) for every rank, not just the
+/// parent's rank 0.
+#[test]
+fn traced_process_run_exports_every_worker_track() {
+    arm_worker_binary();
+    let dir = std::env::temp_dir().join(format!("dopinf_proc_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+
+    let (source, ocfg) = synth_setup(96, 50);
+    let mut cfg = DOpInfConfig::new(4, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.transport = Transport::Processes;
+    cfg.comm_timeout = Some(120.0);
+    cfg.trace = Some(trace_path.clone());
+    run_distributed(&cfg, &source).unwrap();
+
+    let doc = parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    for rank in 0..4usize {
+        let spans = events
+            .iter()
+            .filter(|e| {
+                e.get("tid").and_then(Json::as_usize) == Some(rank)
+                    && e.get("ph").and_then(Json::as_str) == Some("X")
+            })
+            .count();
+        assert!(spans > 0, "rank {rank} track is empty — worker trace never crossed the join");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------- fault injection
+
+/// SIGKILL one worker right after spawn, while the group is held
+/// mid-exercise by per-round pauses: every surviving rank must resolve
+/// with `Timeout` or `RemoteAbort` inside the deadline — never hang.
+#[test]
+fn sigkilled_worker_never_hangs_the_group() {
+    arm_worker_binary();
+    for p in [2usize, 4] {
+        let deadline = Duration::from_secs(10);
+        // pauses keep every rank mid-exercise while the kill lands, so
+        // no collective can complete before the failure is visible
+        let spec = exercise_spec("mixed", 20, 100);
+        let started = Instant::now();
+        let results = run_exercise(p, CostModel::free(), Some(deadline), &spec, |pids| {
+            assert_eq!(pids.len(), p - 1);
+            // drop the highest worker rank mid-collective
+            let victim = *pids.last().unwrap();
+            let rc = unsafe { libc::kill(victim as libc::pid_t, libc::SIGKILL) };
+            assert_eq!(rc, 0, "p={p}: SIGKILL of worker pid {victim} failed");
+        })
+        .expect("launch itself must succeed");
+        let elapsed = started.elapsed();
+
+        assert_eq!(results.len(), p);
+        for (rank, (outcome, _clock)) in results.into_iter().enumerate() {
+            match outcome {
+                Err(WorkerFailure::Comm(
+                    CommError::Timeout { .. } | CommError::RemoteAbort { .. },
+                )) => {}
+                other => panic!(
+                    "p={p} rank {rank}: expected Timeout/RemoteAbort after SIGKILL, got {other:?}"
+                ),
+            }
+        }
+        // promptness: the deadline plus the reaper grace, with slack
+        // for a loaded CI box — far below the exercise's unthrottled
+        // runtime had the group hung until the harness timeout
+        assert!(
+            elapsed < deadline * 3,
+            "p={p}: group took {elapsed:?} to resolve a SIGKILLed worker"
+        );
+    }
+}
+
+// ----------------------------------------------------- error plumbing
+
+/// A read fault on a *worker* rank must cross the process boundary and
+/// aggregate to the same origin-tagged `RemoteAbort` the thread
+/// transport produces.
+#[test]
+fn worker_read_fault_is_an_origin_tagged_abort() {
+    arm_worker_binary();
+    let nx = 120;
+    let chunk_rows = 7;
+    let (source, mut ocfg) = synth_setup(nx, 60);
+    // scaling on ⇒ pass 1 ends in an Allreduce(MAX): the failing worker
+    // participates in a collective before its fault fires, parking the
+    // parent rank in a collective when the abort lands
+    ocfg.scaling = true;
+    let fail_rank = 1;
+    // land the fault mid-pass-2: past one full pass of chunks, short of
+    // two (same arithmetic as the in-process read-fault suite)
+    let per = distribute_tutorial(nx, 2)[fail_rank].len();
+    let chunks_per_pass = (2 * per).div_ceil(chunk_rows);
+    let mut cfg = DOpInfConfig::new(2, ocfg);
+    cfg.cost_model = CostModel::free();
+    cfg.transport = Transport::Processes;
+    cfg.chunk_rows = Some(chunk_rows);
+    cfg.comm_timeout = Some(60.0);
+    let faulty = DataSource::Faulty {
+        inner: Box::new(source),
+        fault: FaultSpec { rank: fail_rank, after_chunks: chunks_per_pass + 1 },
+    };
+    match run_distributed(&cfg, &faulty) {
+        Err(DOpInfError::RemoteAbort { origin_rank, message }) => {
+            assert_eq!(origin_rank, fail_rank);
+            assert!(message.contains("injected read fault"), "{message}");
+        }
+        other => panic!("expected RemoteAbort from rank {fail_rank}, got {other:?}"),
+    }
+}

@@ -2,8 +2,9 @@
 //! dopinf needs on Linux (the only target this repo builds for) —
 //! `CLOCK_THREAD_CPUTIME_ID` reads for `dopinf::util::timer` (see
 //! DESIGN notes in `rust/src/comm/mod.rs` on the per-thread virtual
-//! clocks) and `signal(SIGINT, …)` for the `serve` subcommand's
-//! graceful drain.
+//! clocks), `signal(SIGINT, …)` for the `serve` subcommand's
+//! graceful drain, and `kill(pid, SIGKILL)` for the process-transport
+//! fault-injection tests (`tests/integration_proc.rs`).
 
 #![allow(non_camel_case_types)]
 
@@ -24,6 +25,13 @@ pub struct timespec {
 /// Interrupt signal (ctrl-C); number 2 on Linux, all architectures.
 pub const SIGINT: c_int = 2;
 
+/// Uncatchable kill; number 9 on Linux, all architectures. Used by the
+/// fault-injection tests to drop a worker rank mid-collective.
+pub const SIGKILL: c_int = 9;
+
+/// Process id, as `kill(2)` takes it (i32 on Linux, all architectures).
+pub type pid_t = i32;
+
 /// A signal handler address, as `signal(2)` takes it. Handlers must be
 /// `extern "C"` and async-signal-safe (the serve CLI's only stores to
 /// an `AtomicBool`).
@@ -32,6 +40,7 @@ pub type sighandler_t = usize;
 extern "C" {
     pub fn clock_gettime(clockid: c_int, tp: *mut timespec) -> c_int;
     pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+    pub fn kill(pid: pid_t, sig: c_int) -> c_int;
 }
 
 #[cfg(test)]
