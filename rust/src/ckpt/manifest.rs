@@ -1,0 +1,286 @@
+//! Epoch manifests: the commit records that make a checkpoint epoch
+//! *restorable*.
+//!
+//! Shards land independently per rank; an epoch only becomes a resume
+//! point when rank 0 commits `manifest-e{j}.ck` recording every
+//! member shard's filename and FNV-1a checksum. Validation at resume
+//! re-hashes each shard file against the recorded checksum, so:
+//!
+//! * a **partial epoch** (some rank died before writing) never
+//!   commits — no manifest, not a candidate;
+//! * a **stale overwrite** (a later attempt re-wrote a member shard)
+//!   invalidates the old manifest — the recorded checksum no longer
+//!   matches — and resume falls back to the next older valid one;
+//! * a **corrupt manifest or shard** (torn write, bit rot) fails its
+//!   own checksum and is skipped the same way.
+//!
+//! Fallback bottoms out at "no valid manifest", which the retry driver
+//! treats as restart-from-zero: progress lost, correctness never.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::shard::{shard_filename, shard_path};
+use crate::util::atomic::write_atomic;
+use crate::util::codec as c;
+
+pub const MAGIC: &[u8; 8] = b"DOPINFMF";
+pub const VERSION: u64 = 1;
+
+/// One committed epoch: every rank's shard file with its checksum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub epoch: u64,
+    pub p: usize,
+    pub fingerprint: u64,
+    /// `(shard filename, fnv1a of its full file bytes)`, rank order
+    pub shards: Vec<(String, u64)>,
+}
+
+pub fn manifest_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("manifest-e{epoch}.ck"))
+}
+
+pub fn encode(m: &Manifest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    c::write_u64(&mut buf, VERSION).unwrap();
+    c::write_u64(&mut buf, m.epoch).unwrap();
+    c::write_usize(&mut buf, m.p).unwrap();
+    c::write_u64(&mut buf, m.fingerprint).unwrap();
+    c::write_usize(&mut buf, m.shards.len()).unwrap();
+    for (name, sum) in &m.shards {
+        c::write_str(&mut buf, name).unwrap();
+        c::write_u64(&mut buf, *sum).unwrap();
+    }
+    let checksum = super::fnv1a(&buf);
+    c::write_u64(&mut buf, checksum).unwrap();
+    buf
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Manifest> {
+    anyhow::ensure!(bytes.len() >= MAGIC.len() + 16, "manifest truncated");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let actual = super::fnv1a(body);
+    anyhow::ensure!(stored == actual, "manifest checksum mismatch");
+    let (magic, mut r) = body.split_at(MAGIC.len());
+    anyhow::ensure!(magic == MAGIC, "not a checkpoint manifest (bad magic)");
+    let version = c::read_u64(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported manifest version {version}");
+    let epoch = c::read_u64(&mut r)?;
+    let p = c::read_usize(&mut r)?;
+    let fingerprint = c::read_u64(&mut r)?;
+    let n = c::read_usize(&mut r)?;
+    let mut shards = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let name = c::read_str(&mut r)?;
+        let sum = c::read_u64(&mut r)?;
+        shards.push((name, sum));
+    }
+    anyhow::ensure!(r.is_empty(), "trailing bytes after manifest payload");
+    Ok(Manifest { epoch, p, fingerprint, shards })
+}
+
+/// Is every shard the manifest recorded still on disk with exactly the
+/// recorded bytes?
+fn members_intact(dir: &Path, m: &Manifest) -> bool {
+    m.shards.len() == m.p
+        && m.shards.iter().all(|(name, sum)| {
+            std::fs::read(dir.join(name)).map(|b| super::fnv1a(&b) == *sum).unwrap_or(false)
+        })
+}
+
+/// Checksum-validate epoch `epoch`'s full shard set directly (used
+/// before a manifest exists). Returns the per-shard file checksums in
+/// rank order, or `None` if any shard is missing/corrupt/foreign.
+fn epoch_checksums(dir: &Path, epoch: u64, p: usize, fingerprint: u64) -> Option<Vec<u64>> {
+    let mut sums = Vec::with_capacity(p);
+    for rank in 0..p {
+        let bytes = std::fs::read(shard_path(dir, epoch, rank)).ok()?;
+        let s = super::shard::decode(&bytes).ok()?;
+        if s.epoch != epoch || s.rank != rank || s.p != p || s.fingerprint != fingerprint {
+            return None;
+        }
+        sums.push(super::fnv1a(&bytes));
+    }
+    Some(sums)
+}
+
+/// Rank 0's commit attempt: scan epochs `upto, upto-1, …, 0` and stop
+/// at the first that is restorable — either a still-valid existing
+/// manifest (nothing to do) or a complete, checksum-valid shard set
+/// (commit it, overwriting any stale manifest file at that epoch).
+/// Returns the committed/confirmed epoch and the bytes written by this
+/// call (0 when an existing manifest was confirmed).
+pub fn try_commit(
+    dir: &Path,
+    p: usize,
+    fingerprint: u64,
+    upto: u64,
+) -> Result<Option<(u64, usize)>> {
+    for epoch in (0..=upto).rev() {
+        if let Ok(bytes) = std::fs::read(manifest_path(dir, epoch)) {
+            if let Ok(m) = decode(&bytes) {
+                if m.epoch == epoch && m.fingerprint == fingerprint && members_intact(dir, &m) {
+                    return Ok(Some((epoch, 0)));
+                }
+            }
+        }
+        if let Some(sums) = epoch_checksums(dir, epoch, p, fingerprint) {
+            let m = Manifest {
+                epoch,
+                p,
+                fingerprint,
+                shards: (0..p).map(|r| (shard_filename(epoch, r), sums[r])).collect(),
+            };
+            let bytes = encode(&m);
+            let path = manifest_path(dir, epoch);
+            write_atomic(&path, &bytes)
+                .with_context(|| format!("committing manifest {}", path.display()))?;
+            return Ok(Some((epoch, bytes.len())));
+        }
+    }
+    Ok(None)
+}
+
+/// The newest restorable epoch: scan the directory's manifests in
+/// descending epoch order and return the first that decodes, matches
+/// `(p, fingerprint)`, and whose member shards are all intact. `None`
+/// means restart from zero.
+pub fn newest_valid_manifest(dir: &Path, p: usize, fingerprint: u64) -> Option<u64> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut epochs: Vec<u64> = entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy().into_owned();
+            name.strip_prefix("manifest-e")?.strip_suffix(".ck")?.parse().ok()
+        })
+        .collect();
+    epochs.sort_unstable();
+    for epoch in epochs.into_iter().rev() {
+        let Ok(bytes) = std::fs::read(manifest_path(dir, epoch)) else { continue };
+        let Ok(m) = decode(&bytes) else { continue };
+        if m.epoch == epoch && m.p == p && m.fingerprint == fingerprint && members_intact(dir, &m)
+        {
+            return Some(epoch);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::shard::{save, Phase, RankShard};
+
+    fn shard_at(epoch: u64, rank: usize, p: usize, fp: u64) -> RankShard {
+        RankShard {
+            epoch,
+            rank,
+            p,
+            fingerprint: fp,
+            phase: Phase::PassOne,
+            cursor: rank + 1,
+            means: vec![rank as f64; 3],
+            local_max: vec![1.0, 2.0],
+            nt: 0,
+            gram_d: Vec::new(),
+            gram_rows_seen: 0,
+            gram_carry: Vec::new(),
+            pjrt: false,
+            probes: Vec::new(),
+            clock_total: 0.25,
+            clock_split: [0.25, 0.0, 0.0, 0.0, 0.0],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dopinf_manifest_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_detects_corruption() {
+        let m = Manifest {
+            epoch: 7,
+            p: 2,
+            fingerprint: 99,
+            shards: vec![("shard-e7-r0.ck".into(), 1), ("shard-e7-r1.ck".into(), 2)],
+        };
+        let bytes = encode(&m);
+        assert_eq!(decode(&bytes).unwrap(), m);
+        let mut bad = bytes.clone();
+        bad[12] ^= 1;
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn commit_waits_for_the_full_shard_set() {
+        let dir = tmp_dir("partial");
+        let fp = 42u64;
+        save(&dir, &shard_at(0, 0, 2, fp)).unwrap();
+        // rank 1's shard hasn't landed: nothing commits
+        assert_eq!(try_commit(&dir, 2, fp, 0).unwrap(), None);
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), None);
+        save(&dir, &shard_at(0, 1, 2, fp)).unwrap();
+        let (epoch, bytes) = try_commit(&dir, 2, fp, 0).unwrap().unwrap();
+        assert_eq!(epoch, 0);
+        assert!(bytes > 0, "first commit writes the manifest");
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), Some(0));
+        // re-confirming writes nothing new
+        assert_eq!(try_commit(&dir, 2, fp, 0).unwrap(), Some((0, 0)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn newest_complete_epoch_wins_and_corruption_falls_back() {
+        let dir = tmp_dir("fallback");
+        let fp = 7u64;
+        for epoch in 0..3u64 {
+            for rank in 0..2 {
+                save(&dir, &shard_at(epoch, rank, 2, fp)).unwrap();
+            }
+            try_commit(&dir, 2, fp, epoch).unwrap();
+        }
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), Some(2));
+        // corrupt a member shard of epoch 2: resume must fall back to 1
+        let victim = shard_path(&dir, 2, 1);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), Some(1));
+        // delete a shard of epoch 1 as well: fall back to 0
+        std::fs::remove_file(shard_path(&dir, 1, 0)).unwrap();
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), Some(0));
+        // a foreign fingerprint sees nothing restorable at all
+        assert_eq!(newest_valid_manifest(&dir, 2, fp + 1), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_manifest_is_recommitted_after_overwrite() {
+        let dir = tmp_dir("stale");
+        let fp = 5u64;
+        for rank in 0..2 {
+            save(&dir, &shard_at(0, rank, 2, fp)).unwrap();
+        }
+        try_commit(&dir, 2, fp, 0).unwrap();
+        // a later attempt overwrites rank 0's shard with different
+        // content: the old manifest's recorded checksum goes stale
+        let mut s = shard_at(0, 0, 2, fp);
+        s.clock_total = 9.75;
+        save(&dir, &s).unwrap();
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), None, "stale manifest must not validate");
+        // the next commit attempt re-commits epoch 0 over the fresh set
+        let (epoch, bytes) = try_commit(&dir, 2, fp, 0).unwrap().unwrap();
+        assert_eq!((epoch, bytes > 0), (0, true));
+        assert_eq!(newest_valid_manifest(&dir, 2, fp), Some(0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

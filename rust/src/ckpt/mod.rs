@@ -1,0 +1,280 @@
+//! Checkpoint/resume: versioned, checksummed per-rank state shards and
+//! the epoch-manifest commit protocol behind
+//! [`crate::coordinator::resilient::run_resilient`].
+//!
+//! ## What a shard captures
+//!
+//! A [`RankShard`] is *all* of one rank's pipeline state at a chunk
+//! boundary: the pass-1 statistics (row means so far, per-variable
+//! centered max-abs), the pass-2 fold state
+//! ([`crate::opinf::streaming::GramAccumulator`] partial — `D` so far,
+//! `rows_seen`, and the ≤3-row carry buffer that keeps the rank-4 row
+//! groups aligned), the chunk cursor, the captured probe rows, and the
+//! virtual [`crate::comm::Clock`] parts. Shards are written through
+//! [`crate::util::atomic`] (temp-file + atomic rename) with a magic,
+//! a format version, and a trailing FNV-1a checksum, so a torn or
+//! bit-rotted shard is *detected and discarded* — never restored.
+//!
+//! ## The epoch-manifest commit protocol
+//!
+//! Epochs are **rank-local version counters**: each rank writes
+//! `shard-e{epoch}-r{rank}.ck` at its own trigger points (every
+//! `--checkpoint-every N` chunks within a pass, plus the mandatory
+//! pass boundaries) and increments its counter. Rank 0 additionally
+//! tries to **commit** `manifest-e{j}.ck` for the newest epoch `j` at
+//! which *every* rank's shard exists and passes checksum + fingerprint
+//! validation; the manifest records each shard file's checksum. A
+//! manifest therefore commits only when the whole epoch durably
+//! landed, and a later partial overwrite of any member shard
+//! invalidates it (the recorded checksum no longer matches), falling
+//! back to an older manifest — **a corrupt or partial checkpoint can
+//! cost progress, never correctness**.
+//!
+//! ## Why resume is bitwise identical
+//!
+//! Epochs need no cross-rank logical alignment because the streaming
+//! pass loops contain **no collectives**: the only cross-pass
+//! collective is the scales `Allreduce(MAX)`, every rank re-executes
+//! it on resume from its stored `local_max` (same inputs ⇒ bitwise
+//! same output), and each rank replays its remaining chunks from its
+//! own cursor — the exact operation sequence of an uninterrupted run
+//! (the carry-buffer alignment argument of `opinf::streaming`). So
+//! the core invariant extends: streamed ≡ monolithic ≡ any p ≡ any
+//! transport ≡ any T ≡ **resumed-after-kill**. Restored clocks carry
+//! the *measured* time of the interrupted attempt forward — results
+//! provably cannot depend on them (they never feed the numeric path).
+
+pub mod manifest;
+pub mod shard;
+
+pub use manifest::{newest_valid_manifest, try_commit, Manifest};
+pub use shard::{Phase, RankShard};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::config::DOpInfConfig;
+
+/// FNV-1a 64-bit — the integrity hash for shards, manifests, and the
+/// config fingerprint. Not cryptographic; it guards against torn
+/// writes and bit rot, not adversaries.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of everything a shard's validity depends on: the rank
+/// layout, the data dimensions, the chunking, and every algorithm knob
+/// that steers the per-rank operation sequence. A checkpoint taken
+/// under any other configuration must never be restored — the cursor
+/// arithmetic and the accumulated partials would silently disagree.
+pub fn config_fingerprint(cfg: &DOpInfConfig, dims: (usize, usize, usize)) -> u64 {
+    use crate::util::codec as c;
+    let mut buf = Vec::new();
+    let (nx, ns, nt) = dims;
+    c::write_usize(&mut buf, cfg.p).unwrap();
+    c::write_usize(&mut buf, nx).unwrap();
+    c::write_usize(&mut buf, ns).unwrap();
+    c::write_usize(&mut buf, nt).unwrap();
+    c::write_opt(&mut buf, cfg.chunk_rows.as_ref(), |w, v| c::write_usize(w, *v)).unwrap();
+    c::write_bool(&mut buf, cfg.opinf.scaling).unwrap();
+    c::write_f64(&mut buf, cfg.opinf.energy_target).unwrap();
+    c::write_opt(&mut buf, cfg.opinf.r_override.as_ref(), |w, v| c::write_usize(w, *v)).unwrap();
+    c::write_f64s(&mut buf, &cfg.opinf.grid.beta1).unwrap();
+    c::write_f64s(&mut buf, &cfg.opinf.grid.beta2).unwrap();
+    c::write_f64(&mut buf, cfg.opinf.max_growth).unwrap();
+    c::write_usize(&mut buf, cfg.opinf.nt_p).unwrap();
+    c::write_usize(&mut buf, cfg.probes.len()).unwrap();
+    for &(var, row) in &cfg.probes {
+        c::write_usize(&mut buf, var).unwrap();
+        c::write_usize(&mut buf, row).unwrap();
+    }
+    c::write_bool(&mut buf, cfg.artifacts_dir.is_some()).unwrap();
+    fnv1a(&buf)
+}
+
+/// The pass-1 → pass-2 transition marker (`pass2-r{rank}`): written
+/// when a rank enters pass 2 with checkpointing on. Purely a progress
+/// signal for harnesses (the CI resilience smoke polls for these to
+/// time its SIGKILL mid-pass-2); nothing is ever restored from it.
+pub fn mark_pass2(dir: &Path, rank: usize) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    crate::util::atomic::write_atomic(&dir.join(format!("pass2-r{rank}")), b"1")?;
+    Ok(())
+}
+
+/// Remove every checkpoint artifact (`shard-e*`, `manifest-e*`,
+/// `pass2-r*`, orphaned `*.tmp.*` siblings) from `dir`, leaving other
+/// files alone. Called by the retry driver after a successful run.
+pub fn clean(dir: &Path) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // nothing ever written
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("shard-e")
+            || name.starts_with("manifest-e")
+            || name.starts_with("pass2-r")
+            || name.contains(".tmp.")
+        {
+            std::fs::remove_file(entry.path()).ok();
+        }
+    }
+    Ok(())
+}
+
+/// Per-rank checkpoint writer: owns the rank-local epoch counter, the
+/// cadence rule, and (on rank 0) the manifest commit attempts.
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: usize,
+    fingerprint: u64,
+    rank: usize,
+    p: usize,
+    next_epoch: u64,
+    /// cumulative bytes persisted by this rank (shards + manifests) —
+    /// feeds the `checkpoint_bytes` gauge and the DiskModel charges
+    bytes_written: u64,
+}
+
+impl Checkpointer {
+    /// `resume_epoch` is the manifest this attempt restored from (the
+    /// rank's next shard gets the epoch after it), or `None` for a
+    /// fresh run.
+    pub fn new(
+        dir: &Path,
+        every: usize,
+        fingerprint: u64,
+        rank: usize,
+        p: usize,
+        resume_epoch: Option<u64>,
+    ) -> Result<Checkpointer> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Checkpointer {
+            dir: dir.to_path_buf(),
+            every,
+            fingerprint,
+            rank,
+            p,
+            next_epoch: resume_epoch.map_or(0, |e| e + 1),
+            bytes_written: 0,
+        })
+    }
+
+    /// Mid-pass cadence: save after `chunks_done` chunks of the current
+    /// pass (an **absolute** within-pass count, so a resumed attempt
+    /// triggers at the same positions as the uninterrupted run and
+    /// epoch ↔ position stays attempt-invariant).
+    pub fn due(&self, chunks_done: usize) -> bool {
+        self.every > 0 && chunks_done > 0 && chunks_done % self.every == 0
+    }
+
+    /// Persist this rank's shard at the next epoch (atomic rename), and
+    /// on rank 0 try to commit the newest complete manifest. Returns
+    /// the bytes written by this call.
+    pub fn save(&mut self, shard: &mut RankShard) -> Result<usize> {
+        shard.epoch = self.next_epoch;
+        shard.rank = self.rank;
+        shard.p = self.p;
+        shard.fingerprint = self.fingerprint;
+        let mut bytes = shard::save(&self.dir, shard)?;
+        self.next_epoch += 1;
+        if self.rank == 0 {
+            bytes += self.commit()?;
+        }
+        self.bytes_written += bytes as u64;
+        Ok(bytes)
+    }
+
+    /// Rank 0's manifest commit attempt (also called once after the
+    /// Gram allreduce, when every rank's pass-2 boundary shard is
+    /// guaranteed on disk). Returns manifest bytes written (0 when
+    /// nothing new committed).
+    pub fn commit(&mut self) -> Result<usize> {
+        if self.next_epoch == 0 {
+            return Ok(0);
+        }
+        let bytes = manifest::try_commit(&self.dir, self.p, self.fingerprint, self.next_epoch - 1)?
+            .map_or(0, |(_, b)| b);
+        self.bytes_written += bytes as u64;
+        Ok(bytes)
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // the canonical FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_knob() {
+        use crate::opinf::serial::OpInfConfig;
+        use crate::rom::RegGrid;
+        let ocfg = OpInfConfig {
+            ns: 2,
+            energy_target: 0.999,
+            r_override: None,
+            scaling: false,
+            grid: RegGrid::coarse(),
+            max_growth: 1.2,
+            nt_p: 100,
+        };
+        let cfg = DOpInfConfig::new(4, ocfg);
+        let base = config_fingerprint(&cfg, (100, 2, 50));
+        assert_eq!(base, config_fingerprint(&cfg, (100, 2, 50)), "deterministic");
+
+        let mut other = cfg.clone();
+        other.p = 2;
+        assert_ne!(base, config_fingerprint(&other, (100, 2, 50)), "p");
+        let mut other = cfg.clone();
+        other.chunk_rows = Some(7);
+        assert_ne!(base, config_fingerprint(&other, (100, 2, 50)), "chunk_rows");
+        let mut other = cfg.clone();
+        other.opinf.scaling = true;
+        assert_ne!(base, config_fingerprint(&other, (100, 2, 50)), "scaling");
+        let mut other = cfg.clone();
+        other.probes = vec![(0, 3)];
+        assert_ne!(base, config_fingerprint(&other, (100, 2, 50)), "probes");
+        assert_ne!(base, config_fingerprint(&cfg, (101, 2, 50)), "dims");
+        // knobs that never steer the rank-local operation sequence —
+        // transport, cost model, tracing — must NOT invalidate shards
+        let mut other = cfg.clone();
+        other.transport = crate::coordinator::config::Transport::Processes;
+        other.trace = Some(std::path::PathBuf::from("/tmp/t.json"));
+        assert_eq!(base, config_fingerprint(&other, (100, 2, 50)));
+    }
+
+    #[test]
+    fn clean_removes_only_checkpoint_artifacts() {
+        let dir = std::env::temp_dir().join(format!("dopinf_ckpt_clean_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["shard-e0-r1.ck", "manifest-e0.ck", "pass2-r3", "x.ck.tmp.99", "keep.rom"] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        clean(&dir).unwrap();
+        assert!(dir.join("keep.rom").exists(), "unrelated files must survive");
+        for name in ["shard-e0-r1.ck", "manifest-e0.ck", "pass2-r3", "x.ck.tmp.99"] {
+            assert!(!dir.join(name).exists(), "{name} must be removed");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        clean(&dir).unwrap(); // missing dir is a no-op, not an error
+    }
+}

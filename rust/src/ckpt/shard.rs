@@ -1,0 +1,297 @@
+//! One rank's checkpoint shard: the full pipeline state at a chunk
+//! boundary, serialized with a magic, a format version, and a trailing
+//! FNV-1a checksum over everything before it.
+//!
+//! File layout (all little-endian, via [`crate::util::codec`]):
+//!
+//! ```text
+//! "DOPINFCK" | version u64 | payload | fnv1a(prefix) u64
+//! ```
+//!
+//! Decoding validates the checksum *before* parsing a single payload
+//! field, so a torn write or flipped bit surfaces as a typed error and
+//! the shard is simply not restored — the resilience contract is that
+//! bad checkpoints cost progress, never correctness.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::atomic::write_atomic;
+use crate::util::codec as c;
+
+pub const MAGIC: &[u8; 8] = b"DOPINFCK";
+pub const VERSION: u64 = 1;
+
+/// Where the captured rank was in the two-pass streaming pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Mid-pass-1: `means` holds `cursor` entries, `local_max` is the
+    /// partial fold; the Gram state is untouched.
+    PassOne,
+    /// Pass 1 complete (means full, `local_max` final); `cursor` rows
+    /// of pass 2 are already folded into the Gram partial. `cursor ==
+    /// local_rows` is the pass-2 boundary shard, written just before
+    /// the Gram allreduce.
+    PassTwo,
+}
+
+/// One rank's complete checkpointable state. See the module docs of
+/// [`crate::ckpt`] for the resume-is-bitwise argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankShard {
+    pub epoch: u64,
+    pub rank: usize,
+    pub p: usize,
+    /// [`crate::ckpt::config_fingerprint`] of the run that wrote this
+    pub fingerprint: u64,
+    pub phase: Phase,
+    /// local rows consumed within the captured pass
+    pub cursor: usize,
+    /// pass-1 row means accumulated so far (one per consumed row)
+    pub means: Vec<f64>,
+    /// pass-1 per-variable centered max-abs partials
+    pub local_max: Vec<f64>,
+    /// Gram side length (snapshot count); 0 until pass 2 starts
+    pub nt: usize,
+    /// Gram partial: the accumulator's `D` (native path) or the summed
+    /// PJRT per-chunk partials (`pjrt == true`)
+    pub gram_d: Vec<f64>,
+    pub gram_rows_seen: usize,
+    /// the ≤3-row carry buffer (empty on the PJRT path)
+    pub gram_carry: Vec<f64>,
+    /// whether `gram_d` came from the PJRT gram-artifact path — a
+    /// restore under the other engine must discard the shard
+    pub pjrt: bool,
+    /// probe rows captured so far: (local cache key, row if captured)
+    pub probes: Vec<(usize, Option<Vec<f64>>)>,
+    /// virtual-clock parts at capture (total, per-category split)
+    pub clock_total: f64,
+    pub clock_split: [f64; 5],
+}
+
+impl RankShard {
+    /// An empty pass-1-start shard (the restore fallback when no valid
+    /// checkpoint exists for this rank).
+    pub fn fresh(nvars: usize) -> RankShard {
+        RankShard {
+            epoch: 0,
+            rank: 0,
+            p: 0,
+            fingerprint: 0,
+            phase: Phase::PassOne,
+            cursor: 0,
+            means: Vec::new(),
+            local_max: vec![0.0; nvars],
+            nt: 0,
+            gram_d: Vec::new(),
+            gram_rows_seen: 0,
+            gram_carry: Vec::new(),
+            pjrt: false,
+            probes: Vec::new(),
+            clock_total: 0.0,
+            clock_split: [0.0; 5],
+        }
+    }
+}
+
+pub fn shard_filename(epoch: u64, rank: usize) -> String {
+    format!("shard-e{epoch}-r{rank}.ck")
+}
+
+pub fn shard_path(dir: &Path, epoch: u64, rank: usize) -> PathBuf {
+    dir.join(shard_filename(epoch, rank))
+}
+
+/// Serialize to the checksummed on-disk format.
+pub fn encode(s: &RankShard) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    c::write_u64(&mut buf, VERSION).unwrap();
+    c::write_u64(&mut buf, s.epoch).unwrap();
+    c::write_usize(&mut buf, s.rank).unwrap();
+    c::write_usize(&mut buf, s.p).unwrap();
+    c::write_u64(&mut buf, s.fingerprint).unwrap();
+    c::write_u8(&mut buf, match s.phase {
+        Phase::PassOne => 1,
+        Phase::PassTwo => 2,
+    })
+    .unwrap();
+    c::write_usize(&mut buf, s.cursor).unwrap();
+    c::write_f64s(&mut buf, &s.means).unwrap();
+    c::write_f64s(&mut buf, &s.local_max).unwrap();
+    c::write_usize(&mut buf, s.nt).unwrap();
+    c::write_f64s(&mut buf, &s.gram_d).unwrap();
+    c::write_usize(&mut buf, s.gram_rows_seen).unwrap();
+    c::write_f64s(&mut buf, &s.gram_carry).unwrap();
+    c::write_bool(&mut buf, s.pjrt).unwrap();
+    c::write_usize(&mut buf, s.probes.len()).unwrap();
+    for (key, row) in &s.probes {
+        c::write_usize(&mut buf, *key).unwrap();
+        c::write_opt(&mut buf, row.as_ref(), |w, v| c::write_f64s(w, v)).unwrap();
+    }
+    c::write_f64(&mut buf, s.clock_total).unwrap();
+    for v in s.clock_split {
+        c::write_f64(&mut buf, v).unwrap();
+    }
+    let checksum = super::fnv1a(&buf);
+    c::write_u64(&mut buf, checksum).unwrap();
+    buf
+}
+
+/// Parse and validate a shard image: checksum first, then magic and
+/// version, then the payload.
+pub fn decode(bytes: &[u8]) -> Result<RankShard> {
+    anyhow::ensure!(bytes.len() >= MAGIC.len() + 16, "shard truncated ({} bytes)", bytes.len());
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let actual = super::fnv1a(body);
+    anyhow::ensure!(stored == actual, "shard checksum mismatch ({stored:#x} != {actual:#x})");
+    let (magic, mut r) = body.split_at(MAGIC.len());
+    anyhow::ensure!(magic == MAGIC, "not a checkpoint shard (bad magic)");
+    let version = c::read_u64(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported shard version {version}");
+    let epoch = c::read_u64(&mut r)?;
+    let rank = c::read_usize(&mut r)?;
+    let p = c::read_usize(&mut r)?;
+    let fingerprint = c::read_u64(&mut r)?;
+    let phase = match c::read_u8(&mut r)? {
+        1 => Phase::PassOne,
+        2 => Phase::PassTwo,
+        other => anyhow::bail!("bad phase byte {other}"),
+    };
+    let cursor = c::read_usize(&mut r)?;
+    let means = c::read_f64s(&mut r)?;
+    let local_max = c::read_f64s(&mut r)?;
+    let nt = c::read_usize(&mut r)?;
+    let gram_d = c::read_f64s(&mut r)?;
+    let gram_rows_seen = c::read_usize(&mut r)?;
+    let gram_carry = c::read_f64s(&mut r)?;
+    let pjrt = c::read_bool(&mut r)?;
+    let nprobes = c::read_usize(&mut r)?;
+    let mut probes = Vec::with_capacity(nprobes.min(1024));
+    for _ in 0..nprobes {
+        let key = c::read_usize(&mut r)?;
+        let row = c::read_opt(&mut r, |r| c::read_f64s(r))?;
+        probes.push((key, row));
+    }
+    let clock_total = c::read_f64(&mut r)?;
+    let mut clock_split = [0.0f64; 5];
+    for v in &mut clock_split {
+        *v = c::read_f64(&mut r)?;
+    }
+    anyhow::ensure!(r.is_empty(), "trailing bytes after shard payload");
+    Ok(RankShard {
+        epoch,
+        rank,
+        p,
+        fingerprint,
+        phase,
+        cursor,
+        means,
+        local_max,
+        nt,
+        gram_d,
+        gram_rows_seen,
+        gram_carry,
+        pjrt,
+        probes,
+        clock_total,
+        clock_split,
+    })
+}
+
+/// Atomically persist `s` as `dir/shard-e{epoch}-r{rank}.ck`. Returns
+/// the byte size written (for the `checkpoint_bytes` gauge and the
+/// DiskModel charge).
+pub fn save(dir: &Path, s: &RankShard) -> Result<usize> {
+    let bytes = encode(s);
+    let path = shard_path(dir, s.epoch, s.rank);
+    write_atomic(&path, &bytes).with_context(|| format!("writing shard {}", path.display()))?;
+    Ok(bytes.len())
+}
+
+/// Load + validate one shard, additionally checking it belongs to this
+/// (epoch, rank, fingerprint).
+pub fn load(dir: &Path, epoch: u64, rank: usize, fingerprint: u64) -> Result<RankShard> {
+    let path = shard_path(dir, epoch, rank);
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("reading shard {}", path.display()))?;
+    let s = decode(&bytes).with_context(|| format!("decoding shard {}", path.display()))?;
+    anyhow::ensure!(
+        s.epoch == epoch && s.rank == rank,
+        "shard identity mismatch (file says epoch {} rank {})",
+        s.epoch,
+        s.rank
+    );
+    anyhow::ensure!(
+        s.fingerprint == fingerprint,
+        "shard fingerprint mismatch — checkpoint from a different configuration"
+    );
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RankShard {
+        RankShard {
+            epoch: 3,
+            rank: 1,
+            p: 4,
+            fingerprint: 0xDEAD_BEEF,
+            phase: Phase::PassTwo,
+            cursor: 17,
+            means: vec![0.5, -1.25, 3.0],
+            local_max: vec![2.0, 4.5],
+            nt: 2,
+            gram_d: vec![1.0, 2.0, 3.0, 4.0],
+            gram_rows_seen: 16,
+            gram_carry: vec![9.0, 8.0],
+            pjrt: false,
+            probes: vec![(5, Some(vec![1.0, 2.0])), (11, None)],
+            clock_total: 1.5,
+            clock_split: [0.1, 0.2, 0.3, 0.4, 0.5],
+        }
+    }
+
+    #[test]
+    fn shard_roundtrips_bitwise() {
+        let s = sample();
+        let got = decode(&encode(&s)).unwrap();
+        assert_eq!(got, s);
+        // f64 payloads must be bit-exact, not just PartialEq
+        assert_eq!(got.means[1].to_bits(), s.means[1].to_bits());
+        assert_eq!(got.clock_total.to_bits(), s.clock_total.to_bits());
+    }
+
+    #[test]
+    fn every_flipped_bit_is_detected() {
+        let bytes = encode(&sample());
+        // flip one bit at a spread of offsets, including the header,
+        // the payload, and the checksum itself
+        for at in [0, 8, 20, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x10;
+            assert!(decode(&bad).is_err(), "flipped bit at {at} went undetected");
+        }
+        // truncation at any point is detected too
+        for cut in [0, 7, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "truncation to {cut} went undetected");
+        }
+    }
+
+    #[test]
+    fn save_load_validates_identity_and_fingerprint() {
+        let dir = std::env::temp_dir().join(format!("dopinf_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = sample();
+        save(&dir, &s).unwrap();
+        let got = load(&dir, 3, 1, 0xDEAD_BEEF).unwrap();
+        assert_eq!(got, s);
+        assert!(load(&dir, 3, 1, 0x1234).is_err(), "wrong fingerprint must be rejected");
+        assert!(load(&dir, 4, 1, 0xDEAD_BEEF).is_err(), "missing epoch must error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

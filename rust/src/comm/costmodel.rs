@@ -58,6 +58,15 @@ impl DiskModel {
     pub fn read_time(&self, reads: usize, bytes: usize) -> f64 {
         reads as f64 * self.seek_latency + bytes as f64 / self.bandwidth
     }
+
+    /// Modeled wall time of `writes` discrete write operations moving
+    /// `bytes` in total — the storage model is symmetric, so the
+    /// checkpoint shards the resilience plane persists (`crate::ckpt`)
+    /// bill `Load` with the same α–β shape as the ingestion reads and
+    /// `fig4_scaling` prices the checkpoint overhead honestly.
+    pub fn write_time(&self, writes: usize, bytes: usize) -> f64 {
+        writes as f64 * self.seek_latency + bytes as f64 / self.bandwidth
+    }
 }
 
 /// Intra-rank compute-plane model for the node-level scaling
@@ -349,6 +358,9 @@ mod tests {
         assert_eq!(DiskModel::free().read_time(1000, 1 << 30), 0.0);
         // bandwidth term scales linearly
         assert!(d.read_time(1, 2 << 20) > d.read_time(1, 1 << 20));
+        // the write path mirrors the read path exactly
+        assert_eq!(d.write_time(3, 1 << 20).to_bits(), d.read_time(3, 1 << 20).to_bits());
+        assert_eq!(DiskModel::free().write_time(10, 1 << 20), 0.0);
     }
 
     #[test]

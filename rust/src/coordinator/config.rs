@@ -32,20 +32,16 @@ pub enum DataSource {
     /// dimension bounded by patience, not RAM (ingest benches, scale
     /// studies).
     Synthetic(SynthSpec),
-    /// Fault-injection wrapper for the error-propagation suites:
-    /// delegates to `inner`, but rank `fault.rank`'s reader fails with
-    /// a simulated I/O error once `fault.after_chunks` chunks have been
-    /// yielded (cumulative across passes — see
-    /// [`crate::io::FaultyBlockReader`]).
+    /// Fault-injection wrapper for the error-propagation and resilience
+    /// suites: delegates to `inner`, but rank `fault.rank`'s reader
+    /// fails with a simulated I/O error once `fault.after_chunks`
+    /// chunks of the configured pass have been yielded, transiently or
+    /// persistently per `fault.kind` (see
+    /// [`crate::io::reader::FaultyBlockReader`]).
     Faulty { inner: Box<DataSource>, fault: FaultSpec },
 }
 
-/// Which rank fails, and after how many yielded chunks.
-#[derive(Clone, Copy, Debug)]
-pub struct FaultSpec {
-    pub rank: usize,
-    pub after_chunks: usize,
-}
+pub use crate::io::reader::{FaultKind, FaultPass, FaultSpec};
 
 impl DataSource {
     /// (spatial rows per variable, number of variables, snapshots).
@@ -111,7 +107,7 @@ impl DataSource {
             DataSource::Faulty { inner, fault } => {
                 let reader = inner.block_reader(rank, range, nx, ns, chunk_rows)?;
                 Ok(if rank == fault.rank {
-                    Box::new(FaultyBlockReader::new(reader, fault.after_chunks))
+                    Box::new(FaultyBlockReader::new(reader, *fault))
                 } else {
                     reader
                 })
@@ -223,6 +219,29 @@ pub struct DOpInfConfig {
     /// `tests/integration_pipeline.rs`); `Off` restores the legacy
     /// pre-lane-order arithmetic and differs in the last ulp.
     pub simd: Option<crate::linalg::SimdTier>,
+    /// checkpoint directory (`--checkpoint-dir`): when set, every rank
+    /// writes versioned, checksummed state shards here (see
+    /// [`crate::ckpt`]) and a run interrupted by rank death resumes
+    /// from the newest complete epoch manifest — bitwise identical to
+    /// an uninterrupted run. `None` disables checkpointing entirely.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// mid-pass checkpoint cadence in chunks (`--checkpoint-every N`):
+    /// shards are written after every N chunks folded *within* a pass,
+    /// in addition to the mandatory pass-boundary shards. `0` (the
+    /// default) writes boundary shards only.
+    pub checkpoint_every: usize,
+    /// retry budget for [`crate::coordinator::resilient::run_resilient`]
+    /// (`--max-retries N`): how many times a transiently-failed run is
+    /// relaunched from the newest complete checkpoint epoch before the
+    /// error is surfaced. `0` disables the retry driver.
+    pub max_retries: usize,
+    /// the epoch manifest every rank restores from on this attempt —
+    /// resolved by the retry driver (never set by hand) and shipped
+    /// through the job-frame codec so spawned workers agree on it.
+    pub resume_epoch: Option<u64>,
+    /// which retry attempt this launch is (0 = first try) — set by the
+    /// retry driver for the observability gauges.
+    pub attempt: usize,
 }
 
 impl DOpInfConfig {
@@ -258,6 +277,11 @@ impl DOpInfConfig {
             trace: None,
             metrics: None,
             simd: None,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            max_retries: 0,
+            resume_epoch: None,
+            attempt: 0,
         }
     }
 }
@@ -322,7 +346,12 @@ mod tests {
     fn faulty_source_fails_only_the_configured_rank() {
         let faulty = DataSource::Faulty {
             inner: Box::new(mem_source(12, 2, 5)),
-            fault: FaultSpec { rank: 1, after_chunks: 0 },
+            fault: FaultSpec {
+                rank: 1,
+                after_chunks: 0,
+                kind: FaultKind::Persistent,
+                pass: FaultPass::One,
+            },
         };
         assert_eq!(faulty.dims(2).unwrap(), (12, 2, 5));
         let ranges = distribute_tutorial(12, 2);
@@ -365,5 +394,12 @@ mod tests {
         if let Some(n) = cfg.chunk_rows {
             assert!(n >= 1);
         }
+        // resilience stays fully opt-in: no checkpoint dir, boundary
+        // cadence only, no retries, and a fresh (non-resumed) attempt
+        assert!(cfg.checkpoint_dir.is_none());
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert_eq!(cfg.max_retries, 0);
+        assert!(cfg.resume_epoch.is_none());
+        assert_eq!(cfg.attempt, 0);
     }
 }

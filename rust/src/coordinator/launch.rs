@@ -31,7 +31,7 @@ use std::io::{self, Read};
 use std::net::TcpStream;
 use std::path::PathBuf;
 
-use super::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
+use super::config::{DOpInfConfig, DataSource, FaultKind, FaultPass, FaultSpec, Transport};
 use super::pipeline::{prepare, rank_pipeline};
 use crate::comm::error::{CommError, CommResult};
 use crate::comm::proc::{self, WorkerBoot, WorkerFailure};
@@ -170,6 +170,29 @@ fn encode_config(buf: &mut Vec<u8>, cfg: &DOpInfConfig) -> anyhow::Result<()> {
     }
     codec::write_usize(buf, cfg.threads_per_rank).expect("vec write");
     codec::write_bool(buf, cfg.allow_oversubscribe).expect("vec write");
+    // resilience plane: workers must checkpoint into the same directory
+    // and restore from the same epoch the parent resolved, or resumed
+    // process runs diverge from thread runs
+    codec::write_usize(buf, cfg.checkpoint_every).expect("vec write");
+    let ckpt_dir = cfg
+        .checkpoint_dir
+        .as_ref()
+        .map(|p| {
+            p.to_str().map(str::to_string).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint path {} is not UTF-8", p.display())
+            })
+        })
+        .transpose()?;
+    codec::write_bool(buf, ckpt_dir.is_some()).expect("vec write");
+    if let Some(s) = &ckpt_dir {
+        codec::write_str(buf, s).expect("vec write");
+    }
+    codec::write_bool(buf, cfg.resume_epoch.is_some()).expect("vec write");
+    if let Some(e) = cfg.resume_epoch {
+        codec::write_u64(buf, e).expect("vec write");
+    }
+    codec::write_usize(buf, cfg.attempt).expect("vec write");
+    codec::write_usize(buf, cfg.max_retries).expect("vec write");
     Ok(())
 }
 
@@ -198,6 +221,12 @@ fn decode_config(r: &mut impl Read) -> io::Result<DOpInfConfig> {
     let comm_timeout = if codec::read_bool(r)? { Some(codec::read_f64(r)?) } else { None };
     let threads_per_rank = codec::read_usize(r)?;
     let allow_oversubscribe = codec::read_bool(r)?;
+    let checkpoint_every = codec::read_usize(r)?;
+    let checkpoint_dir =
+        if codec::read_bool(r)? { Some(PathBuf::from(codec::read_str(r)?)) } else { None };
+    let resume_epoch = if codec::read_bool(r)? { Some(codec::read_u64(r)?) } else { None };
+    let attempt = codec::read_usize(r)?;
+    let max_retries = codec::read_usize(r)?;
     Ok(DOpInfConfig {
         p,
         opinf,
@@ -219,6 +248,11 @@ fn decode_config(r: &mut impl Read) -> io::Result<DOpInfConfig> {
         // the SIMD tier crossed on the worker command line and is
         // already armed process-wide by the time the job is decoded
         simd: None,
+        checkpoint_dir,
+        checkpoint_every,
+        max_retries,
+        resume_epoch,
+        attempt,
     })
 }
 
@@ -255,6 +289,14 @@ fn encode_source(buf: &mut Vec<u8>, source: &DataSource) -> anyhow::Result<()> {
             encode_source(buf, inner)?;
             codec::write_usize(buf, fault.rank).expect("vec write");
             codec::write_usize(buf, fault.after_chunks).expect("vec write");
+            match fault.kind {
+                FaultKind::Persistent => codec::write_u8(buf, 0).expect("vec write"),
+                FaultKind::Transient { fail_count } => {
+                    codec::write_u8(buf, 1).expect("vec write");
+                    codec::write_usize(buf, fail_count).expect("vec write");
+                }
+            }
+            codec::write_u8(buf, matches!(fault.pass, FaultPass::Two) as u8).expect("vec write");
         }
         DataSource::InMemory(_) => anyhow::bail!(
             "an in-memory data source cannot cross the process boundary of \
@@ -287,9 +329,19 @@ fn decode_source(r: &mut impl Read) -> io::Result<DataSource> {
         })),
         SRC_FAULTY => {
             let inner = Box::new(decode_source(r)?);
-            let fault =
-                FaultSpec { rank: codec::read_usize(r)?, after_chunks: codec::read_usize(r)? };
-            Ok(DataSource::Faulty { inner, fault })
+            let rank = codec::read_usize(r)?;
+            let after_chunks = codec::read_usize(r)?;
+            let kind = match codec::read_u8(r)? {
+                0 => FaultKind::Persistent,
+                1 => FaultKind::Transient { fail_count: codec::read_usize(r)? },
+                other => return Err(codec::corrupt(format!("fault kind tag {other}"))),
+            };
+            let pass = match codec::read_u8(r)? {
+                0 => FaultPass::One,
+                1 => FaultPass::Two,
+                other => return Err(codec::corrupt(format!("fault pass tag {other}"))),
+            };
+            Ok(DataSource::Faulty { inner, fault: FaultSpec { rank, after_chunks, kind, pass } })
         }
         other => Err(codec::corrupt(format!("data source tag {other}"))),
     }
@@ -368,6 +420,11 @@ mod tests {
         cfg.comm_timeout = Some(12.5);
         cfg.threads_per_rank = 2;
         cfg.allow_oversubscribe = true;
+        cfg.checkpoint_dir = Some(PathBuf::from("results/ckpt"));
+        cfg.checkpoint_every = 3;
+        cfg.max_retries = 2;
+        cfg.resume_epoch = Some(6);
+        cfg.attempt = 1;
         cfg
     }
 
@@ -380,7 +437,12 @@ mod tests {
                 nt: 45,
                 ..Default::default()
             })),
-            fault: FaultSpec { rank: 1, after_chunks: 4 },
+            fault: FaultSpec {
+                rank: 1,
+                after_chunks: 4,
+                kind: FaultKind::Transient { fail_count: 2 },
+                pass: FaultPass::Two,
+            },
         };
         let buf = encode_pipeline_job(&cfg, &source, true).unwrap();
         let (got, src, traced) = decode_pipeline_job(&mut io::Cursor::new(buf)).unwrap();
@@ -402,9 +464,19 @@ mod tests {
         assert_eq!(got.threads_per_rank, 2);
         assert!(got.allow_oversubscribe);
         assert_eq!(got.transport, Transport::Processes);
+        // the resilience fields must cross the frame exactly — a worker
+        // restoring from a different epoch than the parent resolved
+        // would break the bitwise-resume contract
+        assert_eq!(got.checkpoint_dir, Some(PathBuf::from("results/ckpt")));
+        assert_eq!(got.checkpoint_every, 3);
+        assert_eq!(got.max_retries, 2);
+        assert_eq!(got.resume_epoch, Some(6));
+        assert_eq!(got.attempt, 1);
         match src {
             DataSource::Faulty { inner, fault } => {
                 assert_eq!((fault.rank, fault.after_chunks), (1, 4));
+                assert_eq!(fault.kind, FaultKind::Transient { fail_count: 2 });
+                assert_eq!(fault.pass, FaultPass::Two);
                 match *inner {
                     DataSource::Synthetic(s) => assert_eq!((s.nx, s.nt), (123, 45)),
                     _ => panic!("inner source type lost"),

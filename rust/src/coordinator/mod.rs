@@ -6,17 +6,20 @@
 //! partition, synchronizing through exact collectives, with per-rank
 //! virtual clocks recording the Fig. 4 breakdown.
 //!
-//! * [`config`]   — run configuration + data sources
-//! * [`launch`]   — process-transport job codec + worker entry point
-//! * [`pipeline`] — the five-step distributed pipeline
-//! * [`timing`]   — per-rank timing reports and speedup tables
-//! * [`scaling`]  — the strong-scaling study harness (Fig. 4)
+//! * [`config`]    — run configuration + data sources
+//! * [`launch`]    — process-transport job codec + worker entry point
+//! * [`pipeline`]  — the five-step distributed pipeline
+//! * [`resilient`] — the supervised retry driver (checkpoint/resume)
+//! * [`timing`]    — per-rank timing reports and speedup tables
+//! * [`scaling`]   — the strong-scaling study harness (Fig. 4)
 
 pub mod config;
 pub mod launch;
 pub mod pipeline;
+pub mod resilient;
 pub mod scaling;
 pub mod timing;
 
 pub use config::{DOpInfConfig, DataSource};
 pub use pipeline::{run_distributed, DOpInfResult};
+pub use resilient::{run_resilient, ResilientOutcome};

@@ -1,0 +1,231 @@
+//! The supervised retry driver: training that survives rank death.
+//!
+//! [`run_resilient`] wraps [`run_distributed`] in a classify-and-retry
+//! loop. Before each attempt it resolves the newest restorable
+//! checkpoint epoch ([`crate::ckpt::newest_valid_manifest`]) and ships
+//! it to every rank through the config (the process transport carries
+//! it across the job-frame codec, so respawned workers resume too);
+//! after a failed attempt it decides whether trying again can help:
+//!
+//! | error | verdict |
+//! |-------|---------|
+//! | `RemoteAbort` (a rank died / failed mid-pipeline) | retry |
+//! | `Timeout` (peer silently dead, worker never connected) | retry |
+//! | `Comm`/`Transport` (lost connection, SIGKILLed worker) | retry |
+//! | `Rank` (unclassified rank-local failure) | retry |
+//! | `Comm`/`ContractViolation` (a bug, deterministic) | fail fast |
+//! | `Setup` (bad config/dataset — pre-launch, deterministic) | fail fast |
+//! | same origin rank fails [`SAME_ORIGIN_LIMIT`]× consecutively | fail fast |
+//!
+//! The same-origin circuit breaker is what separates a *persistent*
+//! fault (a bad disk under one rank, a deterministic algorithmic
+//! failure surfacing as that rank's abort) from a transient one: the
+//! former reproduces at the same origin every attempt and burns the
+//! whole retry budget for nothing without it.
+//!
+//! Retries back off exponentially (50 ms base, doubling, 2 s cap) with
+//! deterministic jitter — co-scheduled drivers decorrelate without
+//! consulting the wall clock. A successful run removes its checkpoint
+//! artifacts ([`crate::ckpt::clean`]); progress is only kept while it
+//! is still needed.
+
+use std::time::Duration;
+
+use crate::ckpt;
+use crate::comm::CommError;
+use crate::error::DOpInfError;
+
+use super::config::{DOpInfConfig, DataSource};
+use super::pipeline::{run_distributed, DOpInfResult};
+
+/// Base retry delay; doubles per attempt up to [`MAX_DELAY_MS`].
+const BASE_DELAY_MS: u64 = 50;
+const MAX_DELAY_MS: u64 = 2_000;
+/// Consecutive failures attributed to the *same* origin rank before the
+/// driver declares the fault persistent and stops retrying.
+pub const SAME_ORIGIN_LIMIT: usize = 3;
+
+/// A successful resilient run: the (bitwise-exact) result plus the
+/// retry story for reporting.
+#[derive(Debug)]
+pub struct ResilientOutcome {
+    pub result: DOpInfResult,
+    /// attempts executed in total (1 = the first try succeeded)
+    pub attempts: usize,
+    /// per *retry*, the manifest epoch it resumed from (`None` =
+    /// restarted from zero); empty when no retry was needed
+    pub resumed_from: Vec<Option<u64>>,
+}
+
+impl ResilientOutcome {
+    /// Retries that were needed beyond the first attempt.
+    pub fn retries(&self) -> usize {
+        self.attempts - 1
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Verdict {
+    /// plausibly environmental — retrying from a checkpoint can help
+    Transient,
+    /// deterministic — retrying reproduces the failure
+    Fatal,
+}
+
+fn classify(e: &DOpInfError) -> Verdict {
+    match e {
+        // a rank failed mid-pipeline, a peer went silent, or the
+        // transport lost a member (the SIGKILLed-worker signature):
+        // the classic respawn-and-resume class
+        DOpInfError::RemoteAbort { .. }
+        | DOpInfError::Timeout { .. }
+        | DOpInfError::Rank { .. } => Verdict::Transient,
+        DOpInfError::Comm { source, .. } => match source {
+            // a broken collective contract is a bug, not weather
+            CommError::ContractViolation { .. } => Verdict::Fatal,
+            _ => Verdict::Transient,
+        },
+        // pre-launch failures (bad config, unreadable dataset) and
+        // post-join export failures are deterministic
+        DOpInfError::Setup(_) => Verdict::Fatal,
+    }
+}
+
+/// Exponential backoff with deterministic jitter: `seed` decorrelates
+/// co-scheduled drivers, `attempt` indexes the doubling.
+fn backoff_delay(attempt: usize, seed: u64) -> Duration {
+    let exp = BASE_DELAY_MS.saturating_mul(1u64 << attempt.min(16)).min(MAX_DELAY_MS);
+    let mut rng = crate::util::rng::Rng::new(seed ^ (attempt as u64).wrapping_mul(0x9e37_79b9));
+    let jitter = rng.below(exp / 4 + 1);
+    Duration::from_millis(exp + jitter)
+}
+
+/// Run the pipeline under supervision: on a transient failure, resolve
+/// the newest complete checkpoint manifest and relaunch with
+/// `cfg.resume_epoch` pointing at it (the process transport respawns
+/// its worker group per attempt), up to `cfg.max_retries` retries.
+///
+/// The resumed result is **bitwise identical** to an uninterrupted
+/// run's — see the argument in [`crate::ckpt`]. Without a
+/// `cfg.checkpoint_dir`, retries restart from zero (supervision still
+/// applies; progress doesn't survive).
+pub fn run_resilient(
+    cfg: &DOpInfConfig,
+    source: &DataSource,
+) -> Result<ResilientOutcome, DOpInfError> {
+    let mut cfg = cfg.clone();
+    // the fingerprint needs the data dimensions; a source that can't
+    // even report them is a Setup failure, same as in `prepare`
+    let fingerprint = match &cfg.checkpoint_dir {
+        Some(_) => {
+            let (nx, _, nt) = source.dims(cfg.opinf.ns).map_err(DOpInfError::Setup)?;
+            Some(ckpt::config_fingerprint(&cfg, (nx, cfg.opinf.ns, nt)))
+        }
+        None => None,
+    };
+    let mut resumed_from = Vec::new();
+    let mut last_origin: Option<usize> = None;
+    let mut same_origin_streak = 0usize;
+    let mut attempt = 0usize;
+    loop {
+        cfg.attempt = attempt;
+        cfg.resume_epoch = match (&cfg.checkpoint_dir, fingerprint) {
+            (Some(dir), Some(fp)) => ckpt::newest_valid_manifest(dir, cfg.p, fp),
+            _ => None,
+        };
+        if attempt > 0 {
+            resumed_from.push(cfg.resume_epoch);
+        }
+        match run_distributed(&cfg, source) {
+            Ok(result) => {
+                if let Some(dir) = &cfg.checkpoint_dir {
+                    // progress served its purpose; leave the dir clean
+                    // for the next run (best-effort — a leftover shard
+                    // would be fingerprint-rejected anyway)
+                    ckpt::clean(dir).ok();
+                }
+                return Ok(ResilientOutcome { result, attempts: attempt + 1, resumed_from });
+            }
+            Err(e) => {
+                let origin = e.rank();
+                if origin.is_some() && origin == last_origin {
+                    same_origin_streak += 1;
+                } else {
+                    same_origin_streak = 1;
+                    last_origin = origin;
+                }
+                if classify(&e) == Verdict::Fatal {
+                    return Err(e);
+                }
+                if same_origin_streak >= SAME_ORIGIN_LIMIT {
+                    eprintln!(
+                        "dopinf: rank {:?} failed {same_origin_streak} attempts in a row — \
+                         treating the fault as persistent",
+                        origin
+                    );
+                    return Err(e);
+                }
+                if attempt >= cfg.max_retries {
+                    return Err(e);
+                }
+                let delay = backoff_delay(attempt, u64::from(std::process::id()));
+                eprintln!(
+                    "dopinf: attempt {} failed ({e}); retrying in {:.0} ms (retry {}/{})",
+                    attempt + 1,
+                    delay.as_secs_f64() * 1e3,
+                    attempt + 1,
+                    cfg.max_retries
+                );
+                std::thread::sleep(delay);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_separates_weather_from_bugs() {
+        let transient: Vec<DOpInfError> = vec![
+            DOpInfError::RemoteAbort { origin_rank: 2, message: "EIO".into() },
+            DOpInfError::Timeout { rank: 1, seconds: 5.0, message: "hub reply".into() },
+            DOpInfError::Comm {
+                rank: 0,
+                source: CommError::Transport { rank: 0, message: "connection reset".into() },
+            },
+            DOpInfError::Rank { rank: 3, source: anyhow::anyhow!("worker killed by signal 9") },
+        ];
+        for e in &transient {
+            assert_eq!(classify(e), Verdict::Transient, "{e}");
+        }
+        let fatal: Vec<DOpInfError> = vec![
+            DOpInfError::Comm {
+                rank: 0,
+                source: CommError::ContractViolation { rank: 0, message: "size mismatch".into() },
+            },
+            DOpInfError::Setup(anyhow::anyhow!("no such dataset")),
+        ];
+        for e in &fatal {
+            assert_eq!(classify(e), Verdict::Fatal, "{e}");
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_jitters_and_caps() {
+        let d0 = backoff_delay(0, 7).as_millis() as u64;
+        let d1 = backoff_delay(1, 7).as_millis() as u64;
+        let d2 = backoff_delay(2, 7).as_millis() as u64;
+        // each delay sits in [base·2^k, base·2^k + 25%]
+        assert!((50..=62).contains(&d0), "{d0}");
+        assert!((100..=125).contains(&d1), "{d1}");
+        assert!((200..=250).contains(&d2), "{d2}");
+        // deterministic for a fixed (attempt, seed)
+        assert_eq!(backoff_delay(3, 9), backoff_delay(3, 9));
+        // the cap holds even for absurd attempt counts
+        let huge = backoff_delay(60, 1).as_millis() as u64;
+        assert!(huge <= MAX_DELAY_MS + MAX_DELAY_MS / 4, "{huge}");
+    }
+}

@@ -29,7 +29,7 @@ pub mod snapd;
 
 pub use partition::{distribute_balanced, distribute_tutorial, RowRange};
 pub use reader::{
-    BlockReader, Chunk, FaultyBlockReader, InMemoryBlockReader, SnapdBlockReader,
-    SyntheticBlockReader,
+    BlockReader, Chunk, FaultKind, FaultPass, FaultSpec, FaultyBlockReader, InMemoryBlockReader,
+    SnapdBlockReader, SyntheticBlockReader,
 };
 pub use snapd::{SnapReader, SnapWriter};

@@ -59,6 +59,13 @@ pub trait BlockReader {
 
     /// Rewind for another pass; the chunk sequence repeats exactly.
     fn reset(&mut self) -> Result<()>;
+
+    /// Position the cursor so the next chunk starts at local row `row`
+    /// (checkpoint resume skips the already-folded prefix this way).
+    /// Resume always seeks to a chunk boundary of the interrupted run,
+    /// so the remaining chunk sequence is identical to the
+    /// uninterrupted pass's tail.
+    fn seek_row(&mut self, row: usize) -> Result<()>;
 }
 
 /// Map a local row interval `[lo, hi)` to per-variable file segments.
@@ -205,6 +212,12 @@ impl BlockReader for SnapdBlockReader {
         self.cursor = 0;
         Ok(())
     }
+
+    fn seek_row(&mut self, row: usize) -> Result<()> {
+        anyhow::ensure!(row <= self.local_rows(), "seek past end of block");
+        self.cursor = row;
+        Ok(())
+    }
 }
 
 // --------------------------------------------------------- in-memory
@@ -278,6 +291,12 @@ impl BlockReader for InMemoryBlockReader {
         self.cursor = 0;
         Ok(())
     }
+
+    fn seek_row(&mut self, row: usize) -> Result<()> {
+        anyhow::ensure!(row <= self.local_rows(), "seek past end of block");
+        self.cursor = row;
+        Ok(())
+    }
 }
 
 // --------------------------------------------------------- synthetic
@@ -343,28 +362,132 @@ impl BlockReader for SyntheticBlockReader {
         self.cursor = 0;
         Ok(())
     }
+
+    fn seek_row(&mut self, row: usize) -> Result<()> {
+        anyhow::ensure!(row <= self.local_rows(), "seek past end of block");
+        self.cursor = row;
+        Ok(())
+    }
 }
 
 // --------------------------------------------------- fault injection
 
-/// Deterministic fault injection for the error-propagation suites:
-/// delegates to `inner`, but [`BlockReader::next_chunk`] fails with a
-/// simulated I/O error once `fail_after` chunks have been yielded.
+/// Whether an injected fault heals after firing a bounded number of
+/// times, or fires on every run that reaches its trigger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fire on the first `fail_count` readers (process-wide, keyed by
+    /// the spec) that reach the trigger, then heal — models a transient
+    /// storage hiccup that a retry survives. The trip registry lives in
+    /// this process, so transient healing is observable with the
+    /// in-process transports (threads/sockets/hier); spawned worker
+    /// processes start with a fresh registry and see the fault as
+    /// persistent.
+    Transient { fail_count: usize },
+    /// Fire every time — models dead storage; retries must exhaust.
+    Persistent,
+}
+
+/// Which data pass the fault lands in. Pass placement matters for the
+/// resilience suites: a pass-2 fault destroys accumulated Gram state
+/// after the rank already joined the pass-1 collectives — the exact
+/// scenario checkpoint/resume exists for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPass {
+    One,
+    Two,
+}
+
+/// A deterministic fault to inject into one rank's reader: after
+/// `after_chunks` chunks of the selected pass have been yielded, the
+/// next read fails with a simulated I/O error (subject to `kind`'s
+/// trip accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// the rank whose reader fails
+    pub rank: usize,
+    /// chunks of the selected pass yielded before the fault arms
+    pub after_chunks: usize,
+    pub kind: FaultKind,
+    pub pass: FaultPass,
+}
+
+type FaultKey = (usize, usize, usize, u8);
+
+fn fault_key(spec: &FaultSpec) -> FaultKey {
+    let fc = match spec.kind {
+        FaultKind::Transient { fail_count } => fail_count,
+        FaultKind::Persistent => usize::MAX,
+    };
+    (spec.rank, spec.after_chunks, fc, matches!(spec.pass, FaultPass::Two) as u8)
+}
+
+fn fault_trip_registry() -> &'static std::sync::Mutex<std::collections::BTreeMap<FaultKey, usize>> {
+    static TRIPS: std::sync::OnceLock<
+        std::sync::Mutex<std::collections::BTreeMap<FaultKey, usize>>,
+    > = std::sync::OnceLock::new();
+    TRIPS.get_or_init(|| std::sync::Mutex::new(std::collections::BTreeMap::new()))
+}
+
+/// How many times `spec` has fired in this process (transient trip
+/// accounting; persistent faults don't register).
+pub fn fault_trips(spec: &FaultSpec) -> usize {
+    fault_trip_registry().lock().unwrap().get(&fault_key(spec)).copied().unwrap_or(0)
+}
+
+/// Forget `spec`'s trip count — tests that reuse a spec call this
+/// first so earlier runs in the same process don't pre-heal the fault.
+pub fn clear_fault_trips(spec: &FaultSpec) {
+    fault_trip_registry().lock().unwrap().remove(&fault_key(spec));
+}
+
+/// Deterministic fault injection for the error-propagation and
+/// resilience suites: delegates to `inner`, but
+/// [`BlockReader::next_chunk`] fails with a simulated I/O error once
+/// `after_chunks` chunks of the spec's pass have been yielded.
 ///
-/// The counter is cumulative across [`BlockReader::reset`], so a value
-/// past one pass's chunk count lands the failure **mid-pass-2** — after
-/// the rank has already participated in the pass-1 collectives, which
-/// is exactly the "sibling ranks park at the next collective" hang the
-/// abort broadcast exists to prevent.
+/// Passes are counted by [`BlockReader::reset`] calls (the pipeline
+/// resets exactly once, between pass 1 and pass 2), so a
+/// [`FaultPass::Two`] fault lands **after** the rank has already
+/// participated in the pass-1 collectives — the "sibling ranks park at
+/// the next collective" hang the abort broadcast exists to prevent,
+/// and the state loss checkpoint/resume exists to repair.
 pub struct FaultyBlockReader {
     inner: Box<dyn BlockReader>,
-    fail_after: usize,
-    yielded: usize,
+    spec: FaultSpec,
+    yielded_in_pass: usize,
+    resets: usize,
 }
 
 impl FaultyBlockReader {
-    pub fn new(inner: Box<dyn BlockReader>, fail_after: usize) -> FaultyBlockReader {
-        FaultyBlockReader { inner, fail_after, yielded: 0 }
+    pub fn new(inner: Box<dyn BlockReader>, spec: FaultSpec) -> FaultyBlockReader {
+        FaultyBlockReader { inner, spec, yielded_in_pass: 0, resets: 0 }
+    }
+
+    fn in_fault_pass(&self) -> bool {
+        match self.spec.pass {
+            FaultPass::One => self.resets == 0,
+            FaultPass::Two => self.resets >= 1,
+        }
+    }
+
+    /// Trip accounting at the trigger point: persistent faults always
+    /// fire; transient ones fire only while the process-wide trip count
+    /// for this spec is below `fail_count`.
+    fn should_fire(&self) -> bool {
+        match self.spec.kind {
+            FaultKind::Persistent => true,
+            FaultKind::Transient { fail_count } => {
+                let mut reg = fault_trip_registry().lock().unwrap();
+                let trips = reg.entry(fault_key(&self.spec)).or_insert(0);
+                if *trips < fail_count {
+                    *trips += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
     }
 }
 
@@ -378,21 +501,32 @@ impl BlockReader for FaultyBlockReader {
     }
 
     fn next_chunk(&mut self) -> Result<Option<Chunk>> {
-        anyhow::ensure!(
-            self.yielded < self.fail_after,
-            "injected read fault after {} chunks (simulated EIO)",
-            self.yielded
-        );
+        if self.in_fault_pass() && self.yielded_in_pass >= self.spec.after_chunks && self.should_fire()
+        {
+            anyhow::bail!(
+                "injected read fault after {} chunks (simulated EIO)",
+                self.yielded_in_pass
+            );
+        }
         let chunk = self.inner.next_chunk()?;
         if chunk.is_some() {
-            self.yielded += 1;
+            self.yielded_in_pass += 1;
         }
         Ok(chunk)
     }
 
     fn reset(&mut self) -> Result<()> {
-        // the cumulative fault counter survives on purpose (see above)
+        self.resets += 1;
+        self.yielded_in_pass = 0;
         self.inner.reset()
+    }
+
+    fn seek_row(&mut self, row: usize) -> Result<()> {
+        // resume skips chunks without yielding them; the in-pass count
+        // deliberately stays at the post-reset value, so a healed
+        // transient fault's accounting is irrelevant and a persistent
+        // fault still fires `after_chunks` yields later
+        self.inner.seek_row(row)
     }
 }
 
@@ -420,23 +554,81 @@ mod tests {
     use crate::util::json::Json;
     use std::path::PathBuf;
 
-    #[test]
-    fn faulty_reader_fails_at_the_configured_cumulative_chunk() {
+    fn mem_reader(chunk_rows: usize) -> Box<dyn BlockReader> {
         let q = Arc::new(Matrix::randn(2 * 6, 5, 3));
-        let inner = Box::new(
-            InMemoryBlockReader::new(q, RowRange { start: 0, end: 6 }, 6, 2, 4).unwrap(),
-        ) as Box<dyn BlockReader>;
-        // 12 local rows / 4 = 3 chunks per pass; fail_after = 4 ⇒ the
-        // first pass completes, the second pass fails on its 2nd call
-        let mut r = FaultyBlockReader::new(inner, 4);
+        Box::new(InMemoryBlockReader::new(q, RowRange { start: 0, end: 6 }, 6, 2, chunk_rows).unwrap())
+    }
+
+    #[test]
+    fn faulty_reader_fails_in_the_configured_pass() {
+        // 12 local rows / 4 = 3 chunks per pass; pass Two, after 1 chunk
+        // ⇒ the first pass completes, the second fails on its 2nd call
+        let spec = FaultSpec {
+            rank: 0,
+            after_chunks: 1,
+            kind: FaultKind::Persistent,
+            pass: FaultPass::Two,
+        };
+        let mut r = FaultyBlockReader::new(mem_reader(4), spec);
         for _ in 0..3 {
             assert!(r.next_chunk().unwrap().is_some());
         }
         assert!(r.next_chunk().unwrap().is_none(), "pass 1 unaffected");
         r.reset().unwrap();
-        assert!(r.next_chunk().unwrap().is_some(), "4th chunk still yields");
+        assert!(r.next_chunk().unwrap().is_some(), "2nd-pass chunk 1 still yields");
         let e = r.next_chunk().unwrap_err();
         assert!(format!("{e}").contains("injected read fault"), "{e}");
+
+        // pass One placement fires before the reset ever happens
+        let spec1 = FaultSpec { pass: FaultPass::One, ..spec };
+        let mut r = FaultyBlockReader::new(mem_reader(4), spec1);
+        assert!(r.next_chunk().unwrap().is_some());
+        assert!(r.next_chunk().is_err(), "pass-1 fault must fire mid-pass-1");
+    }
+
+    #[test]
+    fn transient_fault_heals_after_its_trip_budget() {
+        let spec = FaultSpec {
+            rank: 3,
+            after_chunks: 2,
+            kind: FaultKind::Transient { fail_count: 1 },
+            pass: FaultPass::One,
+        };
+        clear_fault_trips(&spec);
+        let mut r = FaultyBlockReader::new(mem_reader(4), spec);
+        assert!(r.next_chunk().unwrap().is_some());
+        assert!(r.next_chunk().unwrap().is_some());
+        assert!(r.next_chunk().is_err(), "first run must trip");
+        assert_eq!(fault_trips(&spec), 1);
+        // a fresh reader over the same spec — the retry — sails through
+        let mut r = FaultyBlockReader::new(mem_reader(4), spec);
+        let block = read_all_chunks(&mut r).unwrap();
+        assert_eq!(block.rows(), 12, "healed fault must not fire again");
+        assert_eq!(fault_trips(&spec), 1, "healed fault never re-registers");
+        clear_fault_trips(&spec);
+    }
+
+    #[test]
+    fn seek_row_resumes_the_identical_chunk_tail() {
+        let q = Arc::new(Matrix::randn(2 * 6, 5, 3));
+        let mk = || {
+            InMemoryBlockReader::new(q.clone(), RowRange { start: 0, end: 6 }, 6, 2, 5).unwrap()
+        };
+        let mut full = mk();
+        let mut chunks = Vec::new();
+        while let Some(c) = full.next_chunk().unwrap() {
+            chunks.push(c);
+        }
+        // seek to the second chunk boundary; the tail must replay exactly
+        let mut r = mk();
+        r.seek_row(chunks[0].data.rows()).unwrap();
+        for want in &chunks[1..] {
+            let got = r.next_chunk().unwrap().unwrap();
+            assert_eq!(got.start_row, want.start_row);
+            assert_eq!(got.data.data(), want.data.data(), "seeked tail chunk differs");
+        }
+        assert!(r.next_chunk().unwrap().is_none());
+        assert!(mk().seek_row(13).is_err(), "seek past end must fail");
     }
 
     fn tmp(name: &str) -> PathBuf {

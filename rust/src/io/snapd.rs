@@ -30,8 +30,18 @@ const MAGIC: &[u8; 8] = b"SNAPD\x01\0\0";
 /// variable's row-major payload — either whole ([`Self::write_variable`])
 /// or in bounded row chunks ([`Self::write_rows`]), so fields far
 /// beyond RAM can be written without ever materializing them.
+///
+/// The payload is staged into a same-directory temp sibling
+/// ([`crate::util::atomic`]) and renamed onto the final path by
+/// [`Self::finish`], so a crash mid-simulation never leaves a torn
+/// dataset where a complete one is expected — only an orphaned
+/// `.tmp.*` file later writers overwrite.
 pub struct SnapWriter {
     out: BufWriter<File>,
+    /// the staged temp sibling being written
+    tmp: PathBuf,
+    /// the final path [`Self::finish`] promotes onto
+    path: PathBuf,
     vars: Vec<(String, usize, usize)>,
     written: usize,
     /// rows of the current (partially streamed) variable already written
@@ -67,12 +77,16 @@ impl SnapWriter {
             ("variables", Json::Arr(entries)),
             ("meta", meta),
         ]));
-        let mut out = BufWriter::new(File::create(&path)?);
+        let final_path = path.as_ref().to_path_buf();
+        let tmp = crate::util::atomic::temp_sibling(&final_path);
+        let mut out = BufWriter::new(File::create(&tmp)?);
         out.write_all(MAGIC)?;
         out.write_all(&(header.len() as u64).to_le_bytes())?;
         out.write_all(header.as_bytes())?;
         Ok(SnapWriter {
             out,
+            tmp,
+            path: final_path,
             vars: vars.iter().map(|(n, r, c)| (n.to_string(), *r, *c)).collect(),
             written: 0,
             rows_in_flight: 0,
@@ -129,17 +143,22 @@ impl SnapWriter {
         self.write_rows(name, data)
     }
 
-    /// Flush and close; errors if any declared variable was not written
-    /// (or only partially streamed).
+    /// Flush, fsync, and atomically promote the staged file onto the
+    /// final path; errors (removing the staged file) if any declared
+    /// variable was not written or was only partially streamed.
     pub fn finish(mut self) -> Result<()> {
         if self.rows_in_flight > 0 {
             let (name, rows, _) = &self.vars[self.written];
+            std::fs::remove_file(&self.tmp).ok();
             bail!("variable {name}: only {} of {rows} rows streamed", self.rows_in_flight);
         }
         if self.written != self.vars.len() {
+            std::fs::remove_file(&self.tmp).ok();
             bail!("{} of {} variables written", self.written, self.vars.len());
         }
         self.out.flush()?;
+        self.out.get_ref().sync_all()?;
+        crate::util::atomic::promote(&self.tmp, &self.path)?;
         Ok(())
     }
 }

@@ -64,6 +64,17 @@
 //!   Chrome trace-event timeline plus a structured summary whose
 //!   category totals reconcile with the virtual clocks. Tracing off is
 //!   a one-branch no-op; tracing on never perturbs results.
+//! * **Resilience** — [`ckpt`] + [`coordinator::resilient`] make
+//!   training survive rank death: every rank persists versioned,
+//!   checksummed state shards (temp-file + atomic rename) on a
+//!   `--checkpoint-every` chunk cadence and at pass boundaries, rank 0
+//!   commits an epoch manifest once the full shard set landed, and
+//!   [`run_resilient`] classifies failures (dead peer → retry with
+//!   backoff from the newest complete manifest; contract violation or
+//!   a repeatedly-failing rank → fail fast), respawning the worker
+//!   group per attempt. Resume replays each rank's remaining chunks
+//!   from its own cursor — the result is **bitwise identical** to an
+//!   uninterrupted run.
 //!
 //! The training → artifact → serving flow:
 //!
@@ -82,6 +93,7 @@
 //! launch), or run
 //! `cargo run --release -- --help`.
 
+pub mod ckpt;
 pub mod comm;
 pub mod coordinator;
 pub mod error;
@@ -97,5 +109,6 @@ pub mod util;
 
 pub use coordinator::config::DOpInfConfig;
 pub use coordinator::pipeline::{run_distributed, DOpInfResult};
+pub use coordinator::resilient::{run_resilient, ResilientOutcome};
 pub use error::DOpInfError;
 pub use serve::RomArtifact;

@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
+use dopinf::coordinator::resilient::run_resilient;
 use dopinf::coordinator::scaling::strong_scaling;
 use dopinf::error::DOpInfError;
 use dopinf::io::snapd::SnapReader;
@@ -185,6 +186,9 @@ fn train_specs() -> Vec<OptSpec> {
         OptSpec { name: "trace", help: "write a Chrome trace-event timeline here: one track per rank with phase, data-plane, and per-collective spans (open in Perfetto / chrome://tracing; under `scaling` the last run wins)", default: None, is_flag: false },
         OptSpec { name: "metrics", help: "write a structured metrics summary here: per-category clock totals, the per-primitive comm table with the predicted-vs-measured cost-model ratio, phase aggregates, and gauges", default: None, is_flag: false },
         OptSpec { name: "simd", help: "kernel dispatch tier: off | scalar | native (default: DOPINF_SIMD or native; native and scalar are bitwise identical, off restores the legacy lane order)", default: None, is_flag: false },
+        OptSpec { name: "checkpoint-every", help: "persist a checksummed per-rank state shard every N streamed chunks (plus the mandatory pass boundaries; 0 = boundaries only); resumed results are bitwise identical to an uninterrupted run", default: None, is_flag: false },
+        OptSpec { name: "checkpoint-dir", help: "checkpoint directory (default: <results>/ckpt once --checkpoint-every or --max-retries is set)", default: None, is_flag: false },
+        OptSpec { name: "max-retries", help: "supervised retries after a transient failure (dead rank, timeout, lost worker), resuming from the newest complete checkpoint manifest; contract violations and repeatedly-failing ranks fail fast", default: None, is_flag: false },
         OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
     ]
 }
@@ -326,6 +330,23 @@ fn build_train_setup(a: &Args) -> Result<(DOpInfConfig, DataSource, Vec<usize>, 
         }
         (None, None) => {}
     }
+    // resilience plane (see crate::ckpt): either knob arms
+    // checkpointing; the supervised driver engages in cmd_train when
+    // any of the three is set
+    if let Some(v) = a.get("checkpoint-every") {
+        cfg.checkpoint_every = v.parse().context("--checkpoint-every")?;
+    }
+    if let Some(v) = a.get("max-retries") {
+        cfg.max_retries = v.parse().context("--max-retries")?;
+    }
+    cfg.checkpoint_dir = match a.get("checkpoint-dir") {
+        Some(dir) => Some(PathBuf::from(dir)),
+        // keep the shards next to the other run outputs by default
+        None if a.get("checkpoint-every").is_some() || a.get("max-retries").is_some() => {
+            Some(PathBuf::from(a.get_or("results", "results")).join("ckpt"))
+        }
+        None => None,
+    };
     // observability exports (see crate::obs): span recording turns on
     // iff one of these is set — results are bitwise identical either way
     cfg.trace = a.get("trace").map(PathBuf::from);
@@ -355,7 +376,22 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
         cfg.chunk_rows.map_or("block".to_string(), |n| n.to_string()),
         cfg.artifacts_dir
     );
-    let result = run_distributed(&cfg, &source)?;
+    // any resilience knob routes through the supervised retry driver;
+    // the plain path stays byte-for-byte what it always was
+    let result = if cfg.checkpoint_dir.is_some() || cfg.max_retries > 0 {
+        let outcome = run_resilient(&cfg, &source)?;
+        if outcome.retries() > 0 {
+            println!(
+                "resilient run: {} attempts ({} retries, resumed from epochs {:?})",
+                outcome.attempts,
+                outcome.retries(),
+                outcome.resumed_from
+            );
+        }
+        outcome.result
+    } else {
+        run_distributed(&cfg, &source)?
+    };
 
     println!("reduced dimension r = {}", result.r);
     println!(

@@ -177,6 +177,31 @@ impl GramAccumulator {
         self.rows_seen
     }
 
+    /// Snapshot the full fold state for a checkpoint shard:
+    /// `(d_lower_triangle_so_far, rows_seen, carry)`. Together with the
+    /// chunk cursor this is *all* the pass-2 state — re-hydrating via
+    /// [`GramAccumulator::from_parts`] and replaying the remaining
+    /// chunks runs the exact same operation sequence as an
+    /// uninterrupted fold, so the resumed Gram is bitwise identical.
+    pub fn to_parts(&self) -> (Vec<f64>, usize, Vec<f64>) {
+        (self.d.data().to_vec(), self.rows_seen, self.carry.clone())
+    }
+
+    /// Re-hydrate an accumulator from [`GramAccumulator::to_parts`]
+    /// state. The compute-plane width is re-read from the process knob
+    /// (it never affects the bits).
+    pub fn from_parts(nt: usize, d: Vec<f64>, rows_seen: usize, carry: Vec<f64>) -> GramAccumulator {
+        assert_eq!(d.len(), nt * nt, "Gram checkpoint shape");
+        assert!(carry.len() % nt.max(1) == 0 && carry.len() < 4 * nt.max(1), "carry shape");
+        GramAccumulator {
+            nt,
+            threads: par::threads().max(1),
+            d: Matrix::from_vec(nt, nt, d),
+            rows_seen,
+            carry,
+        }
+    }
+
     /// The accumulated Gram matrix: flush the `rows mod 4` remainder
     /// through the single-row step and mirror the upper triangle —
     /// exactly `syrk`'s epilogue.
@@ -412,6 +437,49 @@ mod tests {
             }
             let d = acc.finish();
             assert_eq!(d.data(), want.data(), "case {case}: rows={rows} nt={nt}");
+        }
+    }
+
+    #[test]
+    fn gram_resumed_from_parts_is_bitwise_identical() {
+        // checkpoint/restore at every possible chunk boundary — the
+        // resumed fold must reproduce the uninterrupted fold exactly,
+        // carry buffer and all
+        let mut rng = Rng::new(91);
+        for case in 0..10 {
+            let rows = 8 + rng.below(40) as usize;
+            let nt = 3 + rng.below(9) as usize;
+            let q = Matrix::randn(rows, nt, 7000 + case);
+            let chunk = 1 + rng.below(6) as usize;
+            let mut boundaries = Vec::new();
+            let mut start = 0;
+            while start < rows {
+                boundaries.push(start);
+                start = (start + chunk).min(rows);
+            }
+            let mut unbroken = GramAccumulator::new(nt);
+            for &b in &boundaries {
+                unbroken.push(&q.slice_rows(b, (b + chunk).min(rows)));
+            }
+            let want = unbroken.finish();
+            for cut in 1..boundaries.len() {
+                let mut acc = GramAccumulator::new(nt);
+                for &b in &boundaries[..cut] {
+                    acc.push(&q.slice_rows(b, (b + chunk).min(rows)));
+                }
+                let (d, seen, carry) = acc.to_parts();
+                assert_eq!(seen, boundaries[cut]);
+                let mut resumed = GramAccumulator::from_parts(nt, d, seen, carry);
+                for &b in &boundaries[cut..] {
+                    resumed.push(&q.slice_rows(b, (b + chunk).min(rows)));
+                }
+                assert_eq!(resumed.rows_seen(), rows);
+                assert_eq!(
+                    resumed.finish().data(),
+                    want.data(),
+                    "case {case} cut {cut}: resumed Gram differs"
+                );
+            }
         }
     }
 

@@ -33,7 +33,7 @@
 //! (`reg = None`); [`RomArtifact::load`] accepts both.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -303,15 +303,17 @@ impl RomArtifact {
         Ok(RomArtifact { ops: RomOperators { r, ahat, fhat, chat }, qhat0, probes, reg, meta })
     }
 
-    /// Write the artifact to `path` (parent directories created).
+    /// Write the artifact to `path` (parent directories created) via
+    /// temp-file + atomic rename — the hot-reload watcher and any
+    /// concurrent loader see either the old complete artifact or the
+    /// new one, never a torn prefix.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-        f.write_all(&self.to_bytes())?;
-        f.flush()?;
+        crate::util::atomic::write_atomic(path, &self.to_bytes())
+            .with_context(|| format!("write ROM artifact {path:?}"))?;
         Ok(())
     }
 

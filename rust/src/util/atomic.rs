@@ -1,0 +1,91 @@
+//! Crash-safe file persistence: temp-file + atomic rename.
+//!
+//! Every durable artifact this crate writes — `.rom` model files,
+//! SNAPD datasets, checkpoint shards and manifests — goes through this
+//! module so a reader can never observe a torn file. The protocol is
+//! the classic one: write the full payload to a same-directory sibling
+//! (`<name>.tmp.<pid>`), fsync it, then `rename` onto the final path.
+//! On POSIX the rename is atomic within a filesystem, so concurrent
+//! readers see either the old complete file or the new complete file,
+//! never a prefix. A crash mid-write leaves only an orphaned `.tmp.*`
+//! sibling, which later writers ignore and overwrite.
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// The temp sibling a writer stages into before promoting: same
+/// directory (rename must not cross filesystems), suffixed with the
+/// writer's pid so concurrent processes never stage into each other.
+pub fn temp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Promote a fully-written temp file onto its final path. The caller
+/// must have flushed (and ideally synced) `tmp` first. On failure the
+/// temp file is removed so retries start clean.
+pub fn promote(tmp: &Path, path: &Path) -> io::Result<()> {
+    std::fs::rename(tmp, path).inspect_err(|_| {
+        std::fs::remove_file(tmp).ok();
+    })
+}
+
+/// Write `bytes` to `path` atomically: stage into [`temp_sibling`],
+/// fsync, rename. The final path either keeps its previous content or
+/// holds exactly `bytes` — never a truncated mix.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = temp_sibling(path);
+    let stage = (|| {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    })();
+    if let Err(e) = stage {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    promote(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dopinf_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_atomic_replaces_content_and_leaves_no_temp() {
+        let path = tmp_dir().join("a.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        assert!(!temp_sibling(&path).exists(), "temp sibling must not survive");
+    }
+
+    #[test]
+    fn temp_sibling_stays_in_the_same_directory() {
+        let path = Path::new("/some/dir/file.rom");
+        let t = temp_sibling(path);
+        assert_eq!(t.parent(), path.parent());
+        let name = t.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with("file.rom.tmp."), "{name}");
+    }
+
+    #[test]
+    fn failed_promote_cleans_the_temp_file() {
+        let dir = tmp_dir();
+        let tmp = dir.join("stage.tmp.x");
+        std::fs::write(&tmp, b"payload").unwrap();
+        // the destination's parent does not exist ⇒ rename must fail
+        let dest = dir.join("missing_subdir").join("out.bin");
+        assert!(promote(&tmp, &dest).is_err());
+        assert!(!tmp.exists(), "temp file must be removed on failed promote");
+    }
+}

@@ -6,6 +6,7 @@
 //! parser/emitter, a CLI argument parser, NPY/CSV writers, wall+thread
 //! CPU timers, a property-test mini-framework, and a bench harness.
 
+pub mod atomic;
 pub mod benchkit;
 pub mod cli;
 pub mod codec;

@@ -5,9 +5,14 @@
 
 use std::sync::Arc;
 
+use dopinf::ckpt;
 use dopinf::comm::CostModel;
-use dopinf::coordinator::config::{DOpInfConfig, DataSource, Transport};
+use dopinf::coordinator::config::{
+    DOpInfConfig, DataSource, FaultKind, FaultPass, FaultSpec, Transport,
+};
 use dopinf::coordinator::pipeline::{run_distributed, DOpInfResult};
+use dopinf::coordinator::resilient::{run_resilient, SAME_ORIGIN_LIMIT};
+use dopinf::io::reader::{clear_fault_trips, fault_trips};
 use dopinf::io::snapd::{SnapReader, SnapWriter};
 use dopinf::linalg::Matrix;
 use dopinf::opinf::serial::OpInfConfig;
@@ -486,4 +491,253 @@ fn large_row_count_stresses_partitioning() {
     assert_eq!(r1.opt_pair, r8.opt_pair);
     assert!(r1.qtilde.max_abs_diff(&r8.qtilde) < 1e-7);
     let _ = Matrix::zeros(1, 1);
+}
+
+// ------------------------------------------------- resilience suite
+
+/// Shared config for the checkpoint/resume property tests. Scaling on
+/// matters: pass 1 then ends in an `Allreduce(MAX)` barrier, so by the
+/// time any rank enters pass 2 every rank's pass-1 shards are on disk —
+/// a mid-pass-2 fault is guaranteed to leave a committable epoch behind.
+fn resilience_ocfg() -> OpInfConfig {
+    OpInfConfig {
+        ns: 2,
+        energy_target: 0.999_999,
+        r_override: Some(4),
+        scaling: true,
+        grid: RegGrid::coarse(),
+        max_growth: 2.0,
+        nt_p: 48,
+    }
+}
+
+/// A fresh, empty checkpoint directory under the system temp dir.
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dopinf_resil_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn resilient_retry_resumes_bitwise_threads() {
+    // the acceptance property, in-process: a rank's reader dies
+    // mid-pass-2 (its Gram partial is lost), the supervisor retries,
+    // every rank resumes from the newest committed manifest — and the
+    // final DOpInfResult is bitwise identical to an uninterrupted run,
+    // across checkpoint cadence × chunk size × rank count
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let clean_src = DataSource::InMemory(Arc::new(generate(&spec, 0)));
+    for p in [2usize, 4] {
+        for chunk in [1usize, 7] {
+            let mut base = DOpInfConfig::new(p, resilience_ocfg());
+            base.cost_model = CostModel::free();
+            base.probes = vec![(0, 3), (1, 60)];
+            base.chunk_rows = Some(chunk);
+            let reference = run_distributed(&base, &clean_src).unwrap();
+            for every in [1usize, 3] {
+                let tag = format!("p={p} chunk_rows={chunk} every={every}");
+                let fault = FaultSpec {
+                    rank: p - 1,
+                    after_chunks: 1,
+                    kind: FaultKind::Transient { fail_count: 1 },
+                    pass: FaultPass::Two,
+                };
+                clear_fault_trips(&fault);
+                let faulty =
+                    DataSource::Faulty { inner: Box::new(clean_src.clone()), fault };
+                let mut cfg = base.clone();
+                cfg.checkpoint_dir = Some(ckpt_dir(&format!("t_{p}_{chunk}_{every}")));
+                cfg.checkpoint_every = every;
+                cfg.max_retries = 2;
+                let outcome = run_resilient(&cfg, &faulty)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert_eq!(outcome.attempts, 2, "{tag}: one failure, one resumed retry");
+                assert_eq!(fault_trips(&fault), 1, "{tag}: the fault fired exactly once");
+                assert_bitwise_eq(&reference, &outcome.result, &tag);
+                // a successful run leaves the checkpoint dir clean
+                let dir = cfg.checkpoint_dir.unwrap();
+                let leftovers: Vec<_> = std::fs::read_dir(&dir)
+                    .unwrap()
+                    .flatten()
+                    .filter(|e| {
+                        let n = e.file_name().to_string_lossy().to_string();
+                        n.starts_with("shard-e") || n.starts_with("manifest-e")
+                    })
+                    .collect();
+                assert!(leftovers.is_empty(), "{tag}: checkpoint artifacts survived success");
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+#[test]
+fn resilient_retry_resumes_bitwise_processes() {
+    // the same property over real OS worker processes: rank 0 (the
+    // parent — the transient trip registry is process-local, so the
+    // healing fault must live there) dies mid-pass-2, the driver
+    // respawns the worker group, and the resumed result is bitwise
+    // identical to the thread transport's uninterrupted run
+    std::env::set_var("DOPINF_WORKER_BIN", env!("CARGO_BIN_EXE_dopinf"));
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let clean_src = DataSource::Synthetic(spec);
+    for p in [2usize, 4] {
+        let tag = format!("processes p={p}");
+        let mut base = DOpInfConfig::new(p, resilience_ocfg());
+        base.cost_model = CostModel::free();
+        base.probes = vec![(0, 3), (1, 60)];
+        base.chunk_rows = Some(7);
+        base.comm_timeout = Some(120.0);
+        let reference = run_distributed(&base, &clean_src).unwrap();
+
+        let fault = FaultSpec {
+            rank: 0,
+            after_chunks: 1,
+            kind: FaultKind::Transient { fail_count: 1 },
+            pass: FaultPass::Two,
+        };
+        clear_fault_trips(&fault);
+        let faulty = DataSource::Faulty { inner: Box::new(clean_src.clone()), fault };
+        let mut cfg = base.clone();
+        cfg.transport = Transport::Processes;
+        cfg.checkpoint_dir = Some(ckpt_dir(&format!("proc_{p}")));
+        cfg.checkpoint_every = 2;
+        cfg.max_retries = 2;
+        let outcome = run_resilient(&cfg, &faulty).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(outcome.attempts, 2, "{tag}");
+        assert_bitwise_eq(&reference, &outcome.result, &tag);
+        std::fs::remove_dir_all(cfg.checkpoint_dir.unwrap()).ok();
+    }
+}
+
+#[test]
+fn corrupt_checkpoints_degrade_without_corrupting_results() {
+    // a corrupt or partial checkpoint may cost progress, never
+    // correctness: stage a real interrupted run, then resume against
+    // (1) the intact manifest set, (2) a bit-flipped member shard, and
+    // (3) truncated manifests — every resume stays bitwise identical
+    // to the uninterrupted reference
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let clean_src = DataSource::InMemory(Arc::new(generate(&spec, 0)));
+    let p = 2;
+    let mut cfg = DOpInfConfig::new(p, resilience_ocfg());
+    cfg.cost_model = CostModel::free();
+    cfg.probes = vec![(0, 3), (1, 60)];
+    cfg.chunk_rows = Some(1);
+    cfg.checkpoint_dir = Some(ckpt_dir("corrupt"));
+    cfg.checkpoint_every = 1;
+    let dir = cfg.checkpoint_dir.clone().unwrap();
+    let reference = {
+        let mut plain = cfg.clone();
+        plain.checkpoint_dir = None;
+        run_distributed(&plain, &clean_src).unwrap()
+    };
+
+    // stage the wreckage: a persistent mid-pass-2 fault on rank 1
+    let faulty = DataSource::Faulty {
+        inner: Box::new(clean_src.clone()),
+        fault: FaultSpec {
+            rank: 1,
+            after_chunks: 1,
+            kind: FaultKind::Persistent,
+            pass: FaultPass::Two,
+        },
+    };
+    run_distributed(&cfg, &faulty).unwrap_err();
+    let fp = ckpt::config_fingerprint(&cfg, (61, 2, 24));
+    let newest = ckpt::newest_valid_manifest(&dir, p, fp)
+        .expect("a mid-pass-2 kill must leave at least one committed epoch");
+
+    // (1) intact resume from the newest manifest
+    let mut resumed = cfg.clone();
+    resumed.resume_epoch = Some(newest);
+    resumed.attempt = 1;
+    let got = run_distributed(&resumed, &clean_src).unwrap();
+    assert_bitwise_eq(&reference, &got, "intact resume");
+
+    // (2) flip one byte in the newest epoch's rank-0 shard: the
+    // manifest for that epoch is invalidated (recorded checksum no
+    // longer matches) and resolution falls back to an older one...
+    // (re-resolve first: the completed resume above committed newer
+    // epochs of its own)
+    let newest = ckpt::newest_valid_manifest(&dir, p, fp).unwrap();
+    let shard0 = dir.join(format!("shard-e{newest}-r0.ck"));
+    let mut bytes = std::fs::read(&shard0).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&shard0, &bytes).unwrap();
+    let fallback = ckpt::newest_valid_manifest(&dir, p, fp);
+    assert!(
+        fallback.map_or(true, |e| e < newest),
+        "corrupted member must invalidate the newest manifest ({fallback:?} vs {newest})"
+    );
+    if let Some(older) = fallback {
+        let mut r = cfg.clone();
+        r.resume_epoch = Some(older);
+        let got = run_distributed(&r, &clean_src).unwrap();
+        assert_bitwise_eq(&reference, &got, "fallback resume");
+    }
+    // ...and even forcing the poisoned epoch is safe: the shard loader
+    // rejects the corrupt file, that rank replays from zero, the rest
+    // restore — the blast radius is wasted work, not wrong numbers
+    let mut forced = cfg.clone();
+    forced.resume_epoch = Some(newest);
+    let got = run_distributed(&forced, &clean_src).unwrap();
+    assert_bitwise_eq(&reference, &got, "forced poisoned-epoch resume");
+
+    // (3) truncate every manifest: resolution finds nothing, the run
+    // restarts from zero, and the result is still exact
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("manifest-e") {
+            let b = std::fs::read(entry.path()).unwrap();
+            std::fs::write(entry.path(), &b[..b.len() / 2]).unwrap();
+        }
+    }
+    assert_eq!(ckpt::newest_valid_manifest(&dir, p, fp), None, "truncated manifests");
+    let mut fresh = cfg.clone();
+    fresh.resume_epoch = None;
+    let got = run_distributed(&fresh, &clean_src).unwrap();
+    assert_bitwise_eq(&reference, &got, "restart after manifest loss");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn persistent_faults_trip_the_circuit_breaker() {
+    // supervision must fail fast on faults retrying can't fix: with no
+    // retry budget the first failure is final, and with a lavish budget
+    // the same-origin circuit breaker cuts an effectively-persistent
+    // fault off after SAME_ORIGIN_LIMIT attempts — not max_retries + 1
+    let spec = SynthSpec { nx: 61, ns: 2, nt: 24, modes: 3, ..Default::default() };
+    let clean_src = DataSource::InMemory(Arc::new(generate(&spec, 0)));
+    let fault = FaultSpec {
+        rank: 1,
+        after_chunks: 1,
+        kind: FaultKind::Transient { fail_count: 100 },
+        pass: FaultPass::Two,
+    };
+    let faulty = DataSource::Faulty { inner: Box::new(clean_src), fault };
+    let mut cfg = DOpInfConfig::new(2, resilience_ocfg());
+    cfg.cost_model = CostModel::free();
+    cfg.chunk_rows = Some(7);
+    cfg.checkpoint_dir = Some(ckpt_dir("breaker"));
+    cfg.checkpoint_every = 2;
+
+    clear_fault_trips(&fault);
+    cfg.max_retries = 0;
+    let err = run_resilient(&cfg, &faulty).unwrap_err();
+    assert_eq!(err.rank(), Some(1), "origin must survive aggregation: {err}");
+    assert_eq!(fault_trips(&fault), 1, "no budget ⇒ exactly one attempt");
+
+    clear_fault_trips(&fault);
+    cfg.max_retries = 10;
+    let err = run_resilient(&cfg, &faulty).unwrap_err();
+    assert_eq!(err.rank(), Some(1), "{err}");
+    assert_eq!(
+        fault_trips(&fault),
+        SAME_ORIGIN_LIMIT,
+        "the breaker, not the retry budget, must end a same-origin streak"
+    );
+    std::fs::remove_dir_all(cfg.checkpoint_dir.unwrap()).ok();
 }

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use dopinf::comm::proc::{exercise_rank, run_exercise, ExerciseSpec, WorkerFailure};
 use dopinf::comm::{self, Category, CommError, CostModel};
-use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultSpec, Transport};
+use dopinf::coordinator::config::{DOpInfConfig, DataSource, FaultKind, FaultPass, FaultSpec, Transport};
 use dopinf::coordinator::pipeline::run_distributed;
 use dopinf::error::DOpInfError;
 use dopinf::io::partition::distribute_tutorial;
@@ -248,18 +248,20 @@ fn worker_read_fault_is_an_origin_tagged_abort() {
     // parent rank in a collective when the abort lands
     ocfg.scaling = true;
     let fail_rank = 1;
-    // land the fault mid-pass-2: past one full pass of chunks, short of
-    // two (same arithmetic as the in-process read-fault suite)
-    let per = distribute_tutorial(nx, 2)[fail_rank].len();
-    let chunks_per_pass = (2 * per).div_ceil(chunk_rows);
     let mut cfg = DOpInfConfig::new(2, ocfg);
     cfg.cost_model = CostModel::free();
     cfg.transport = Transport::Processes;
     cfg.chunk_rows = Some(chunk_rows);
     cfg.comm_timeout = Some(60.0);
+    // land the fault mid-pass-2, one chunk into the re-read
     let faulty = DataSource::Faulty {
         inner: Box::new(source),
-        fault: FaultSpec { rank: fail_rank, after_chunks: chunks_per_pass + 1 },
+        fault: FaultSpec {
+            rank: fail_rank,
+            after_chunks: 1,
+            kind: FaultKind::Persistent,
+            pass: FaultPass::Two,
+        },
     };
     match run_distributed(&cfg, &faulty) {
         Err(DOpInfError::RemoteAbort { origin_rank, message }) => {
